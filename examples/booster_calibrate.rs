@@ -1,0 +1,34 @@
+//! Rust-driven boosting distillation (Algorithm 1 lines 12–15): calibrate
+//! the edgenet_3dev members via the AOT train-step artifacts — Python is
+//! not involved.
+//!
+//! ```text
+//! cargo run --release --example booster_calibrate [steps]
+//! ```
+
+use coformer::booster::{BoostConfig, Booster};
+use coformer::runtime::Engine;
+use coformer::Result;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(40);
+    let engine = Engine::load("artifacts")?;
+    println!("== booster: progressive distillation over AOT train steps ==");
+    let booster = Booster::new(
+        &engine,
+        BoostConfig { steps, seed: 7, log_every: (steps / 4).max(1) },
+    );
+    let reports = booster.calibrate_deployment("edgenet_3dev")?;
+    for r in &reports {
+        println!(
+            "{}: loss {:.4} → {:.4} over {steps} steps (per-sample {:.4})",
+            r.model, r.first_loss, r.last_loss, r.mean_per_sample_loss
+        );
+        assert!(
+            r.last_loss.is_finite(),
+            "train step produced non-finite loss"
+        );
+    }
+    println!("booster OK: weights resumed from deployment, refined in rust");
+    Ok(())
+}

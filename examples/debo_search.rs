@@ -1,0 +1,80 @@
+//! DeBo decomposition search (Algorithm 1, lines 1–11) + the Fig. 11
+//! baselines: random search and uniform decomposition.
+//!
+//! ```text
+//! cargo run --release --example debo_search
+//! ```
+
+use coformer::debo::search::{random_search, uniform_policy};
+use coformer::debo::{DeBoConfig, DeBoSearch};
+use coformer::device::DeviceProfile;
+use coformer::evaluator::{AccuracyProxy, LatencyModel, Objective};
+use coformer::model::{policy::DeviceCaps, CostModel};
+use coformer::net::{Link, Topology};
+use coformer::runtime::Engine;
+use coformer::Result;
+
+fn main() -> Result<()> {
+    let engine = Engine::load("artifacts")?;
+    let teacher = engine.manifest().model("teacher_edgenet")?.arch.clone();
+    let devices = DeviceProfile::paper_fleet();
+    let topo = Topology::star(3, Link::mbps(100.0), 1);
+    // Fig-13-style compute cap: each device gets ≤ 50% of the teacher's FLOPs
+    let caps: Vec<DeviceCaps> = devices
+        .iter()
+        .map(|d| DeviceCaps {
+            max_flops: CostModel::flops_per_sample(&teacher) * 0.5,
+            max_memory: d.memory_bytes,
+        })
+        .collect();
+    // accuracy proxy calibrated from the build-time proxy points (Fig. 16b)
+    let proxy = AccuracyProxy::fit(&engine.manifest().proxy_points);
+    let obj = Objective {
+        latency: LatencyModel {
+            devices: &devices,
+            topology: &topo,
+            predictors: None,
+            d_i: engine.manifest().d_i,
+            agg_rows: teacher.groups,
+        },
+        accuracy: proxy,
+        teacher: &teacher,
+        caps: &caps,
+        delta: 20.0,
+        batch: 1,
+    };
+
+    let search = DeBoSearch::new(DeBoConfig {
+        init_policies: 8,
+        iterations: 32,
+        candidates: 256,
+        seed: 0,
+        ..Default::default()
+    });
+    let res = search.run(&obj, 3)?;
+    println!("DeBo: {} evaluations, best Ψ = {:.4}", res.evaluated, res.best_psi);
+    for (i, s) in res.best.subs.iter().enumerate() {
+        println!(
+            "  device {} ({}): l={} d={} h={} D={}",
+            i, devices[i].name, s.layers, s.dim, s.heads, s.mlp_dim
+        );
+    }
+    let b = obj.latency.breakdown(&res.best, &teacher);
+    println!(
+        "predicted: latency {:.2} ms (compute {:?} ms), loss proxy {:.3}",
+        b.total_s * 1e3,
+        b.compute_s.iter().map(|s| (s * 1e5).round() / 100.0).collect::<Vec<_>>(),
+        obj.accuracy.policy_loss(&res.best)
+    );
+
+    // baselines
+    let rand = random_search(&obj, 3, res.evaluated, 42)?;
+    let uni = uniform_policy(&teacher, 3);
+    println!("random search best Ψ = {:.4}", rand.best_psi);
+    println!(
+        "uniform decomposition Ψ = {:.4} (latency {:.2} ms)",
+        obj.evaluate(&uni).unwrap(),
+        obj.latency.breakdown(&uni, &teacher).total_s * 1e3
+    );
+    Ok(())
+}

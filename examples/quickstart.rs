@@ -1,0 +1,68 @@
+//! Quickstart: load the AOT artifacts, run one collaborative inference by
+//! hand (sub-models → feature aggregation), and print the prediction.
+//!
+//! Run after `make artifacts && cargo build --release`:
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use coformer::data::Dataset;
+use coformer::model::Arch;
+use coformer::runtime::engine::XBatch;
+use coformer::runtime::Engine;
+use coformer::Result;
+
+fn main() -> Result<()> {
+    // 1. Load the engine over the artifacts directory (PJRT CPU client +
+    //    manifest; executables compile lazily).
+    let engine = Engine::load("artifacts")?;
+    let m = engine.manifest().clone();
+    println!(
+        "manifest: {} models, {} deployments (fast_build={})",
+        m.models.len(),
+        m.deployments.len(),
+        m.fast_build
+    );
+
+    // 2. Pick the paper's primary deployment: 3 decomposed sub-models of
+    //    the edgenet teacher, plus the Eq. 2 MLP aggregator.
+    let dep = m.deployment("edgenet_3dev")?.clone();
+    let task = m.task(&dep.task)?.clone();
+    let ds = Dataset::load(std::path::Path::new("artifacts"), &task.splits["test"])?;
+    println!("deployment {:?}: members {:?}", "edgenet_3dev", dep.members);
+
+    // 3. Run a tiny batch through every sub-model (Phase 1), collect the
+    //    downsampled features each device would transmit (Phase 2)...
+    let n = 8usize;
+    let idx: Vec<usize> = (0..n).collect();
+    let mut shape = ds.x_shape.clone();
+    shape[0] = n;
+    let x = XBatch::F32 { data: ds.gather_x_f32(&idx), shape };
+    let mut feats = Vec::new();
+    for name in &dep.members {
+        let out = engine.run_model(name, &x)?;
+        let arch: &Arch = &m.model(name)?.arch;
+        println!(
+            "  {name}: features {:?} ({} bytes on the wire per sample)",
+            out.feats_shape,
+            arch.feature_bytes()
+        );
+        feats.push((out.feats, out.feats_shape));
+    }
+
+    // 4. ...and aggregate at the central node (Phase 3).
+    let (logits, logits_shape) = engine.run_aggregator("edgenet_3dev", "mlp", &feats)?;
+    let classes = logits_shape[1];
+    let mut correct = 0;
+    for i in 0..n {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let pred = coformer::metrics::argmax(row);
+        let label = ds.y[i];
+        if pred as i32 == label {
+            correct += 1;
+        }
+        println!("  sample {i}: predicted class {pred}, label {label}");
+    }
+    println!("quickstart: {correct}/{n} correct");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! End-to-end validation driver (DESIGN.md §7): serve batched requests from
+//! the synthetic test set through the full collaborative stack —
+//! ExecServer (PJRT) → per-device worker threads → dynamic batcher →
+//! Eq. 2 aggregation — and report accuracy, latency percentiles,
+//! throughput and energy, vs the single-device teacher.
+//!
+//! ```text
+//! cargo run --release --example serve_collaborative [n_requests]
+//! ```
+
+use coformer::config::SystemConfig;
+use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
+use coformer::data::Dataset;
+use coformer::device::DeviceProfile;
+use coformer::model::{Arch, CostModel};
+use coformer::runtime::ExecServer;
+use coformer::strategies;
+use coformer::Result;
+
+fn main() -> Result<()> {
+    let n_req: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(512);
+    let artifacts = std::path::PathBuf::from("artifacts");
+
+    // --- setup: engine thread, manifest, dataset -------------------------
+    let server = ExecServer::start(artifacts.clone())?;
+    let exec = server.handle();
+    // manifest only — exactly one PJRT client per process (the server's)
+    let m = coformer::runtime::Manifest::load(&artifacts)?;
+    let dep = m.deployment("edgenet_3dev")?.clone();
+    let task = m.task(&dep.task)?.clone();
+    let ds = Dataset::load(&artifacts, &task.splits["test"])?;
+    let n = n_req.min(ds.len());
+    let archs: Vec<Arch> = dep
+        .members
+        .iter()
+        .map(|name| m.model(name).map(|mm| mm.arch.clone()))
+        .collect::<Result<_>>()?;
+
+    // --- deploy: warm up executables + params (paper: deployed in advance)
+    for member in &dep.members {
+        exec.warmup(member)?;
+    }
+    let config = SystemConfig::paper_default();
+    let coord = Coordinator::start(config, exec, dep.clone(), archs, ds.x_stride())?;
+    let handle = coord.handle();
+
+    // --- serve the split --------------------------------------------------
+    let payloads: Vec<RequestPayload> =
+        (0..n).map(|i| RequestPayload::F32(ds.gather_x_f32(&[i]))).collect();
+    let t0 = std::time::Instant::now();
+    let responses = serve_all(&handle, payloads)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = coord.shutdown()?;
+
+    let correct = responses
+        .iter()
+        .enumerate()
+        .filter(|(i, r)| r.prediction as i32 == ds.y[*i])
+        .count();
+    println!("== CoFormer collaborative serving (edgenet_3dev, mlp aggregator) ==");
+    println!("requests: {n}   batches: {} (mean batch {:.1})", stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64);
+    println!("accuracy: {:.4} (build-time aggregated acc: {:.4})",
+        correct as f64 / n as f64, dep.aggregators["mlp"].accuracy);
+    println!(
+        "virtual edge latency: p50 {:.2} ms  p95 {:.2} ms  mean {:.2} ± {:.2} ms",
+        stats.virtual_latency.p50_ms(),
+        stats.virtual_latency.p95_ms(),
+        stats.virtual_latency.mean_ms(),
+        stats.virtual_latency.std_ms()
+    );
+    println!(
+        "energy: {:.2} mJ/request (fleet total {:.2} J)",
+        stats.total_energy_j / n as f64 * 1e3,
+        stats.total_energy_j
+    );
+    println!("host throughput: {:.1} req/s (wall {:.2} s)", n as f64 / wall, wall);
+
+    // --- baseline: the teacher on the strongest single device -------------
+    // batch-matched comparison (the coordinator served ~16-sample batches)
+    let teacher = m.model(&task.teacher)?;
+    let tx2 = DeviceProfile::jetson_tx2();
+    let mean_batch = (stats.requests as f64 / stats.batches.max(1) as f64).round() as usize;
+    let t_out = strategies::single_edge(
+        &tx2,
+        CostModel::flops_per_sample(&teacher.arch) * mean_batch as f64,
+        CostModel::memory_bytes(&teacher.arch, mean_batch),
+    )?;
+    println!("\n== vs single-edge teacher on TX2 (batch {mean_batch}) ==");
+    println!(
+        "teacher: accuracy {:.4}, latency {:.2} ms/batch, energy {:.2} mJ",
+        teacher.accuracy_solo,
+        t_out.total_s * 1e3,
+        t_out.total_energy_j() * 1e3
+    );
+    println!(
+        "accuracy delta {:+.2}% (paper: <2% sacrifice at 1.7–3.1x speedup)",
+        (correct as f64 / n as f64 - teacher.accuracy_solo) * 100.0
+    );
+    println!(
+        "note: at artifact scale (~10 MFLOP models) the LAN latency floor dominates;\n\
+         the paper-scale latency story (DeiT-B, 17.6 GFLOPs) is reproduced by\n\
+         `cargo run --release --bin paper -- fig12`:"
+    );
+    // paper-scale projection with the same fleet/topology
+    let mut deit = coformer::model::Arch::uniform(
+        coformer::model::Mode::Patch, 12, 768, 64, 12, 3072, 1000);
+    deit.img_size = 224;
+    deit.patch_size = 16;
+    let subs: Vec<coformer::model::Arch> = [(12usize, 192usize, 3usize, 768usize),
+        (12, 320, 5, 1280), (12, 256, 4, 1024)]
+        .iter()
+        .map(|&(l, d, h, dm)| {
+            coformer::model::policy::SubModelCfg { layers: l, dim: d, heads: h, mlp_dim: dm }
+                .to_arch(&deit)
+        })
+        .collect();
+    let devs = DeviceProfile::paper_fleet();
+    let topo = coformer::net::Topology::star(3, coformer::net::Link::mbps(100.0), 1);
+    let cof = strategies::coformer(&devs, &topo, &subs, 512, 1)?;
+    let single = strategies::single_edge(&tx2, CostModel::flops_per_sample(&deit), 3 << 30)?;
+    println!(
+        "paper-scale: DeiT-B on TX2 {:.1} ms vs CoFormer 3-dev {:.1} ms → {:.2}x speedup",
+        single.total_s * 1e3,
+        cof.total_s * 1e3,
+        single.total_s / cof.total_s
+    );
+    Ok(())
+}

@@ -1,0 +1,396 @@
+"""AOT build orchestrator — the offline stage of CoFormer (paper §III-A(i-ii)).
+
+Runs once at ``make artifacts`` and produces everything the rust runtime
+needs to serve requests with Python out of the loop:
+
+1. Synthetic datasets (ImageNet/GLUE/COCO analogs) as raw bins.
+2. Trained *teachers* (the "large transformers") per task.
+3. The *model pool* of decomposed sub-models, calibrated by the paper's
+   progressive boosting distillation (Alg. 1 lines 12–15).
+4. Trained aggregators per baked deployment (Eq. 2 MLP + Table IV baselines).
+5. HLO-text artifacts: every model forward (batch 1 + batch 16), the
+   head-masked teacher (Fig. 5), aggregators, and distillation *train steps*
+   (so the rust booster can calibrate sub-models itself).
+6. ``manifest.json`` indexing all of the above, including build-time measured
+   accuracies (rust integration tests cross-check them) and the accuracy-
+   proxy points behind Fig. 16(b).
+
+Set ``COFORMER_FAST=1`` for a smoke-scale build (CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import train as T
+from .hlo import write_hlo
+
+FAST = os.environ.get("COFORMER_FAST", "0") == "1"
+TEACHER_STEPS = 80 if FAST else 500
+DISTILL_STEPS = 60 if FAST else 250
+AGG_STEPS = 60 if FAST else 400
+TRAIN_BATCH = 32  # train-step artifact batch (rust booster)
+EVAL_BATCH = 16   # fwd artifact batch (rust evaluation path)
+D_I = 64          # aggregation fusion dim (paper's d_i)
+
+# ---------------------------------------------------------------------------
+# Architecture definitions: teachers ("large transformers") + model pool
+# ---------------------------------------------------------------------------
+
+def teacher_arch(task: str) -> M.Arch:
+    if task == "edgenet":
+        return M.Arch.uniform("patch", 4, 96, 24, 4, 192, D.EDGENET_CLASSES)
+    if task == "seqnet":
+        return M.Arch.uniform("token", 4, 96, 24, 4, 192, D.SEQNET_CLASSES,
+                              seq_len=D.SEQNET_LEN, vocab=D.SEQNET_VOCAB)
+    if task == "patchdet":
+        return M.Arch.uniform("patch", 4, 96, 24, 4, 192, D.PATCHDET_CLASSES,
+                              task="det")
+    raise ValueError(task)
+
+
+def sub_arch(task: str, layers: int, dim: int, heads: int, mlp: int) -> M.Arch:
+    base = teacher_arch(task)
+    return M.Arch.uniform(base.mode, layers, dim, base.head_dim, heads, mlp,
+                          base.num_classes, task=base.task,
+                          seq_len=base.seq_len, vocab=base.vocab)
+
+
+# (layers, dim, heads, mlp) — every tuple satisfies the paper's C1–C4
+# against the teacher (L=4, d=96, h=4, D=192) for its deployment:
+# e.g. edgenet_3dev sums d: 24+32+40=96 ≤ 96, h: 1+1+2=4 ≤ 4, D: 48+64+80=192.
+POOL: Dict[str, Dict[str, Tuple[int, int, int, int]]] = {
+    "edgenet": {
+        "nano16": (2, 16, 1, 32),
+        "tiny24": (2, 24, 1, 48),
+        "sm24": (3, 24, 1, 48),
+        "small32": (3, 32, 1, 64),
+        "med40": (3, 40, 2, 80),
+        "base48": (4, 48, 2, 96),
+    },
+    "seqnet": {
+        "tiny24": (2, 24, 1, 48),
+        "small32": (3, 32, 1, 64),
+        "med40": (3, 40, 2, 80),
+    },
+    "patchdet": {
+        "tiny24": (2, 24, 1, 48),
+        "small32": (3, 32, 1, 64),
+        "med40": (3, 40, 2, 80),
+    },
+}
+
+# deployment → (task, ordered member keys, aggregator kinds to train)
+DEPLOYMENTS: Dict[str, Tuple[str, List[str], List[str]]] = {
+    "edgenet_3dev": ("edgenet", ["tiny24", "small32", "med40"],
+                     ["mlp", "attn", "senet"]),
+    "edgenet_2dev": ("edgenet", ["base48", "med40"], ["mlp"]),
+    "edgenet_4dev": ("edgenet", ["nano16", "tiny24", "sm24", "small32"],
+                     ["mlp"]),
+    "seqnet_3dev": ("seqnet", ["tiny24", "small32", "med40"], ["mlp"]),
+    "patchdet_3dev": ("patchdet", ["tiny24", "small32", "med40"], ["det"]),
+}
+
+# members whose distillation train-step is exported for the rust booster
+TRAIN_STEP_MEMBERS = [("edgenet", "tiny24"), ("edgenet", "small32"),
+                      ("edgenet", "med40")]
+
+
+# ---------------------------------------------------------------------------
+# HLO export helpers
+# ---------------------------------------------------------------------------
+
+def _x_spec(arch: M.Arch, batch: int) -> jax.ShapeDtypeStruct:
+    shape = arch.input_shape(batch)
+    dtype = jnp.float32 if arch.mode == "patch" else jnp.int32
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_spec_structs(arch: M.Arch) -> List[jax.ShapeDtypeStruct]:
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_specs(arch)]
+
+
+def export_forward(arch: M.Arch, path: str, batch: int) -> None:
+    n_params = len(M.param_specs(arch))
+
+    def fn(*args):
+        params = M.unflatten_params(args[:n_params], arch)
+        feats, logits = M.forward(params, args[n_params], arch, use_pallas=True)
+        return feats, logits
+
+    write_hlo(fn, _param_spec_structs(arch) + [_x_spec(arch, batch)], path)
+
+
+def export_masked_forward(arch: M.Arch, path: str, batch: int) -> None:
+    n_params = len(M.param_specs(arch))
+    max_h = max(arch.heads)
+
+    def fn(*args):
+        params = M.unflatten_params(args[:n_params], arch)
+        x, mask = args[n_params], args[n_params + 1]
+        feats, logits = M.forward(params, x, arch, use_pallas=False,
+                                  head_mask=mask)
+        return feats, logits
+
+    specs = _param_spec_structs(arch) + [
+        _x_spec(arch, batch),
+        jax.ShapeDtypeStruct((arch.layers, max_h), jnp.float32),
+    ]
+    write_hlo(fn, specs, path)
+
+
+def export_aggregator(kind: str, archs: Sequence[M.Arch], d_i: int,
+                      num_classes: int, path: str, batch: int) -> None:
+    dims = [a.dim for a in archs]
+    specs_list = M.agg_param_specs(kind, dims, d_i, num_classes)
+    n_params = len(specs_list)
+    groups = archs[0].tokens if archs[0].task == "det" else archs[0].groups
+
+    def fn(*args):
+        params = {name: arr for (name, _), arr in zip(specs_list, args[:n_params])}
+        feats = args[n_params:]
+        return (M.agg_forward(params, feats, kind, use_pallas=True),)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs_list]
+    specs += [jax.ShapeDtypeStruct((batch, groups, d), jnp.float32)
+              for d in dims]
+    write_hlo(fn, specs, path)
+
+
+def export_train_step(arch: M.Arch, lr: float, path: str, batch: int) -> None:
+    """Distillation train step (Eq. 14 loss + Adam) for the rust booster.
+
+    Signature: (params×P, m×P, v×P, step, x, y, y_t, w) →
+               (params×P, m×P, v×P, loss).
+    """
+    n_params = len(M.param_specs(arch))
+
+    def fn(*args):
+        p = M.unflatten_params(args[:n_params], arch)
+        m = M.unflatten_params(args[n_params:2 * n_params], arch)
+        v = M.unflatten_params(args[2 * n_params:3 * n_params], arch)
+        step, x, y, yt, w = args[3 * n_params:]
+
+        def loss_fn(p):
+            _, logits = M.forward(p, x, arch, use_pallas=False)
+            return T.distill_loss(logits, y, yt, w)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        new_p, new_m, new_v = T._tree_adam(p, grads, m, v, step, lr)
+        flat = (M.flatten_params(new_p, arch) + M.flatten_params(new_m, arch)
+                + M.flatten_params(new_v, arch))
+        return tuple(flat) + (loss,)
+
+    pspecs = _param_spec_structs(arch)
+    y_dtype = jnp.int32
+    specs = pspecs * 3 + [
+        jax.ShapeDtypeStruct((), jnp.float32),        # step
+        _x_spec(arch, batch),                          # x
+        jax.ShapeDtypeStruct((batch,), y_dtype),       # y
+        jax.ShapeDtypeStruct((batch,), y_dtype),       # y_t
+        jax.ShapeDtypeStruct((batch,), jnp.float32),   # sample weights
+    ]
+    write_hlo(fn, specs, path)
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory (relative to python/)")
+    args = ap.parse_args()
+    root = pathlib.Path(args.out).resolve()
+    for sub in ("hlo", "params", "data"):
+        (root / sub).mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    manifest: Dict = {"version": 1, "fast_build": FAST, "tasks": {},
+                      "models": {}, "masked_models": {}, "deployments": {},
+                      "train_steps": {}, "head_importance": {},
+                      "proxy_points": [], "eval_batch": EVAL_BATCH,
+                      "train_batch": TRAIN_BATCH, "d_i": D_I}
+
+    # ------------------------------------------------- 1. datasets
+    print("[aot] generating datasets", flush=True)
+    datasets = {
+        "edgenet": D.make_edgenet(n_train=2048 if FAST else 8192),
+        "seqnet": D.make_seqnet(n_train=2048 if FAST else 8192),
+        "patchdet": D.make_patchdet(n_train=1536 if FAST else 6144),
+    }
+    n_classes = {"edgenet": D.EDGENET_CLASSES, "seqnet": D.SEQNET_CLASSES,
+                 "patchdet": D.PATCHDET_CLASSES}
+    for task, splits in datasets.items():
+        meta = {}
+        for split, data in splits.items():
+            meta[split] = D.save_split(data, str(root / "data" / f"{task}_{split}"))
+            # store paths relative to artifacts root
+            for k in ("x", "y"):
+                meta[split][k] = os.path.relpath(meta[split][k], root)
+        manifest["tasks"][task] = {
+            "num_classes": n_classes[task],
+            "mode": teacher_arch(task).mode,
+            "task_kind": teacher_arch(task).task,
+            "teacher": f"teacher_{task}",
+            "splits": meta,
+        }
+
+    def register_model(name: str, arch: M.Arch, params: M.Params, task: str,
+                       acc: float, val_loss: float) -> None:
+        pbin = root / "params" / f"{name}.bin"
+        M.save_params(params, arch, str(pbin))
+        hlo = {}
+        for b, tag in ((1, "b1"), (EVAL_BATCH, f"b{EVAL_BATCH}")):
+            p = root / "hlo" / f"{name}_{tag}.hlo.txt"
+            export_forward(arch, str(p), b)
+            hlo[tag] = os.path.relpath(p, root)
+        manifest["models"][name] = {
+            "arch": arch.to_json(),
+            "param_specs": [[n, list(s)] for n, s in M.param_specs(arch)],
+            "param_count": M.param_count(arch),
+            "params": os.path.relpath(pbin, root),
+            "hlo": hlo, "task": task,
+            "accuracy_solo": acc, "val_loss": val_loss,
+        }
+
+    def val_loss_of(params: M.Params, arch: M.Arch, x, y) -> float:
+        @jax.jit
+        def f(xb, yb):
+            _, logits = M.forward(params, xb, arch, use_pallas=False)
+            return T.ce_loss(logits, yb).mean()
+        losses = [float(f(jnp.asarray(x[i:i + 512]), jnp.asarray(y[i:i + 512])))
+                  for i in range(0, x.shape[0], 512)]
+        return float(np.mean(losses))
+
+    # ------------------------------------------------- 2. teachers
+    teachers: Dict[str, M.Params] = {}
+    teacher_hard: Dict[str, np.ndarray] = {}
+    for task, splits in datasets.items():
+        arch = teacher_arch(task)
+        print(f"[aot] training teacher_{task} ({M.param_count(arch)/1e3:.0f}k params)",
+              flush=True)
+        params = T.train_teacher(arch, splits["train"].x, splits["train"].y,
+                                 splits["val"].x, splits["val"].y,
+                                 steps=TEACHER_STEPS, seed=17)
+        acc = T.evaluate(params, arch, splits["test"].x, splits["test"].y)
+        vl = val_loss_of(params, arch, splits["val"].x, splits["val"].y)
+        print(f"[aot] teacher_{task}: test acc {acc:.4f}", flush=True)
+        register_model(f"teacher_{task}", arch, params, task, acc, vl)
+        teachers[task] = params
+        teacher_hard[task] = T.predict_hard(params, arch, splits["train"].x)
+
+    # masked teacher + head importance (Fig. 5)
+    for task in ("edgenet", "seqnet"):
+        arch = teacher_arch(task)
+        name = f"teacher_{task}_masked"
+        p = root / "hlo" / f"{name}_b{EVAL_BATCH}.hlo.txt"
+        export_masked_forward(arch, str(p), EVAL_BATCH)
+        manifest["masked_models"][name] = {
+            "base": f"teacher_{task}",
+            "hlo": {f"b{EVAL_BATCH}": os.path.relpath(p, root)},
+            "mask_shape": [arch.layers, max(arch.heads)],
+        }
+        imp = T.head_importance(teachers[task], arch, datasets[task]["val"].x)
+        manifest["head_importance"][f"teacher_{task}"] = imp.tolist()
+        print(f"[aot] exported masked teacher + head importance ({task})",
+              flush=True)
+
+    # ------------------------------------------------- 3. model pool (booster)
+    # Calibrate each task's primary deployment in boosting order; reuse
+    # trained members across secondary deployments of the same task.
+    trained: Dict[Tuple[str, str], M.Params] = {}
+    for dep_name, (task, members, _) in DEPLOYMENTS.items():
+        todo = [k for k in members if (task, k) not in trained]
+        if not todo:
+            continue
+        print(f"[aot] boosting distillation for {dep_name}: {todo}", flush=True)
+        archs = [sub_arch(task, *POOL[task][k]) for k in todo]
+        splits = datasets[task]
+        plist = T.boost_calibrate(archs, teacher_hard[task], splits["train"].x,
+                                  splits["train"].y, steps=DISTILL_STEPS,
+                                  seed=29)
+        for k, arch, params in zip(todo, archs, plist):
+            trained[(task, k)] = params
+            acc = T.evaluate(params, arch, splits["test"].x, splits["test"].y)
+            vl = val_loss_of(params, arch, splits["val"].x, splits["val"].y)
+            print(f"[aot]   {task}/{k}: solo test acc {acc:.4f}", flush=True)
+            register_model(f"{task}_{k}", arch, params, task, acc, vl)
+            # Fig. 16(b) proxy point: untrained val loss vs trained accuracy
+            init_p = M.init_params(jax.random.PRNGKey(99), arch)
+            manifest["proxy_points"].append({
+                "task": task,
+                "features": [arch.layers, arch.dim,
+                             float(np.mean(arch.heads)),
+                             float(np.mean(arch.mlp_dims))],
+                "init_val_loss": val_loss_of(init_p, arch, splits["val"].x,
+                                             splits["val"].y),
+                "trained_val_loss": vl,
+                "trained_acc": acc,
+            })
+
+    # ------------------------------------------------- 4. deployments + aggs
+    for dep_name, (task, members, kinds) in DEPLOYMENTS.items():
+        splits = datasets[task]
+        archs = [sub_arch(task, *POOL[task][k]) for k in members]
+        plist = [trained[(task, k)] for k in members]
+        f_train = T.extract_features(plist, archs, splits["train"].x)
+        f_test = T.extract_features(plist, archs, splits["test"].x)
+        dep_entry = {"task": task,
+                     "members": [f"{task}_{k}" for k in members],
+                     "aggregators": {}}
+        for kind in kinds:
+            print(f"[aot] training aggregator {dep_name}/{kind}", flush=True)
+            agg = T.train_aggregator(kind, f_train, splits["train"].y, D_I,
+                                     n_classes[task], steps=AGG_STEPS)
+            acc = T.eval_aggregated(agg, kind, f_test, splits["test"].y)
+            print(f"[aot]   {dep_name}/{kind}: aggregated test acc {acc:.4f}",
+                  flush=True)
+            specs_list = M.agg_param_specs(kind, [a.dim for a in archs], D_I,
+                                           n_classes[task])
+            pbin = root / "params" / f"agg_{dep_name}_{kind}.bin"
+            M.save_agg_params(agg, specs_list, str(pbin))
+            hlo = {}
+            for b, tag in ((1, "b1"), (EVAL_BATCH, f"b{EVAL_BATCH}")):
+                hp = root / "hlo" / f"agg_{dep_name}_{kind}_{tag}.hlo.txt"
+                export_aggregator(kind, archs, D_I, n_classes[task], str(hp), b)
+                hlo[tag] = os.path.relpath(hp, root)
+            dep_entry["aggregators"][kind] = {
+                "hlo": hlo, "params": os.path.relpath(pbin, root),
+                "param_specs": [[n, list(s)] for n, s in specs_list],
+                "d_i": D_I, "accuracy": acc,
+            }
+        manifest["deployments"][dep_name] = dep_entry
+
+    # ------------------------------------------------- 5. train-step exports
+    for task, key in TRAIN_STEP_MEMBERS:
+        arch = sub_arch(task, *POOL[task][key])
+        name = f"{task}_{key}"
+        p = root / "hlo" / f"trainstep_{name}_b{TRAIN_BATCH}.hlo.txt"
+        print(f"[aot] exporting train step {name}", flush=True)
+        export_train_step(arch, lr=1.5e-3, path=str(p), batch=TRAIN_BATCH)
+        manifest["train_steps"][name] = {
+            "hlo": os.path.relpath(p, root), "batch": TRAIN_BATCH,
+            "lr": 1.5e-3, "model": name,
+        }
+
+    # ------------------------------------------------- 6. manifest
+    with open(root / "manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.1f}s → {root}/manifest.json",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Synthetic datasets standing in for ImageNet/CIFAR/COCO/GLUE.
+
+The paper's accuracy claims are *relative* (degradation from decomposition,
+restoration by aggregation + distillation); these procedurally generated
+tasks expose the same relative structure at a scale a CPU testbed can train
+(see DESIGN.md §3 for the substitution argument).
+
+Three tasks, mirroring the paper's three applications:
+
+* ``edgenet``  — 20-class 16×16×3 image classification (ImageNet/CIFAR analog).
+  Each class has a smooth random prototype; samples are contrast-jittered,
+  translated copies plus pixel noise.  Hard enough that tiny models lose
+  accuracy and ensembles/aggregation visibly recover it.
+* ``seqnet``   — 10-class token-sequence classification (GLUE analog).
+  Each class is a 5-token motif embedded at a random position in a random
+  token stream over a 64-token vocabulary.
+* ``patchdet`` — per-patch object detection analog (COCO analog).  1–3
+  "objects" (4×4 class-prototype patches) are placed on a noise background;
+  the label is per-patch: 0 = background, c+1 = object of class c.
+
+All generation is seeded and deterministic.  Arrays are written as raw
+little-endian bins (f32 images / i32 tokens and labels) for the rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+IMG = 16
+PATCH = 4
+CHANS = 3
+N_PATCHES = (IMG // PATCH) ** 2  # 16
+
+EDGENET_CLASSES = 20
+SEQNET_CLASSES = 10
+SEQNET_VOCAB = 64
+SEQNET_LEN = 32
+SEQNET_MOTIF = 5
+PATCHDET_CLASSES = 6
+
+
+@dataclasses.dataclass
+class Split:
+    """One dataset split, already in model-input layout."""
+
+    x: np.ndarray  # f32 (N, tokens, patch_dim) or i32 (N, seq)
+    y: np.ndarray  # i32 (N,) or (N, tokens) for patchdet
+
+
+def _smooth_prototype(rng: np.random.Generator, size: int, chans: int) -> np.ndarray:
+    """A smooth random image: low-frequency Fourier-ish mixture."""
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float32) / size
+    img = np.zeros((size, size, chans), np.float32)
+    for c in range(chans):
+        for _ in range(4):
+            fx, fy = rng.uniform(0.5, 3.0, 2)
+            px, py = rng.uniform(0, 2 * np.pi, 2)
+            amp = rng.uniform(0.4, 1.0)
+            img[:, :, c] += amp * np.sin(2 * np.pi * (fx * xx + px)) * np.cos(
+                2 * np.pi * (fy * yy + py))
+    return img / np.abs(img).max()
+
+
+def _patchify(imgs: np.ndarray) -> np.ndarray:
+    """(N, H, W, C) → (N, n_patches, patch_dim), row-major patch order."""
+    n, h, w, c = imgs.shape
+    g = h // PATCH
+    x = imgs.reshape(n, g, PATCH, g, PATCH, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(n, g * g, PATCH * PATCH * c).astype(np.float32)
+
+
+def make_edgenet(n_train: int = 8192, n_val: int = 1024, n_test: int = 2048,
+                 seed: int = 7, noise: float = 0.40) -> Dict[str, Split]:
+    """EdgeNet-20 image classification."""
+    rng = np.random.default_rng(seed)
+    protos = np.stack([_smooth_prototype(rng, IMG, CHANS)
+                       for _ in range(EDGENET_CLASSES)])
+
+    def gen(n: int) -> Split:
+        y = rng.integers(0, EDGENET_CLASSES, n).astype(np.int32)
+        base = protos[y]
+        # contrast / brightness jitter
+        contrast = rng.uniform(0.8, 1.2, (n, 1, 1, 1)).astype(np.float32)
+        bright = rng.uniform(-0.1, 0.1, (n, 1, 1, 1)).astype(np.float32)
+        imgs = base * contrast + bright
+        # random circular shift up to ±1 px (cheap translation augmentation)
+        out = np.empty_like(imgs)
+        shifts = rng.integers(-1, 2, (n, 2))
+        for i in range(n):
+            out[i] = np.roll(imgs[i], tuple(shifts[i]), axis=(0, 1))
+        out += noise * rng.standard_normal(out.shape).astype(np.float32)
+        return Split(x=_patchify(out), y=y)
+
+    return {"train": gen(n_train), "val": gen(n_val), "test": gen(n_test)}
+
+
+def make_seqnet(n_train: int = 8192, n_val: int = 1024, n_test: int = 2048,
+                seed: int = 11, corrupt: float = 0.15) -> Dict[str, Split]:
+    """SeqNet-10 token-sequence classification."""
+    rng = np.random.default_rng(seed)
+    motifs = rng.integers(2, SEQNET_VOCAB, (SEQNET_CLASSES, SEQNET_MOTIF)).astype(np.int32)
+
+    def gen(n: int) -> Split:
+        y = rng.integers(0, SEQNET_CLASSES, n).astype(np.int32)
+        x = rng.integers(2, SEQNET_VOCAB, (n, SEQNET_LEN)).astype(np.int32)
+        pos = rng.integers(0, SEQNET_LEN - SEQNET_MOTIF + 1, n)
+        for i in range(n):
+            x[i, pos[i]:pos[i] + SEQNET_MOTIF] = motifs[y[i]]
+            # token corruption makes the task non-trivial
+            flips = rng.random(SEQNET_LEN) < corrupt
+            x[i, flips] = rng.integers(2, SEQNET_VOCAB, flips.sum())
+        return Split(x=x, y=y)
+
+    return {"train": gen(n_train), "val": gen(n_val), "test": gen(n_test)}
+
+
+def make_patchdet(n_train: int = 6144, n_val: int = 1024, n_test: int = 2048,
+                  seed: int = 13, noise: float = 0.45) -> Dict[str, Split]:
+    """PatchDet-6 detection analog: per-patch presence + class labels."""
+    rng = np.random.default_rng(seed)
+    protos = np.stack([_smooth_prototype(rng, PATCH, CHANS)
+                       for _ in range(PATCHDET_CLASSES)])
+    grid = IMG // PATCH  # 4x4 patch grid
+
+    def gen(n: int) -> Split:
+        imgs = noise * rng.standard_normal((n, IMG, IMG, CHANS)).astype(np.float32)
+        labels = np.zeros((n, N_PATCHES), np.int32)
+        for i in range(n):
+            for _ in range(rng.integers(1, 4)):
+                c = rng.integers(0, PATCHDET_CLASSES)
+                gy, gx = rng.integers(0, grid, 2)
+                scale = rng.uniform(0.8, 1.4)
+                imgs[i, gy * PATCH:(gy + 1) * PATCH,
+                     gx * PATCH:(gx + 1) * PATCH] += scale * protos[c]
+                labels[i, gy * grid + gx] = c + 1
+        return Split(x=_patchify(imgs), y=labels)
+
+    return {"train": gen(n_train), "val": gen(n_val), "test": gen(n_test)}
+
+
+def save_split(split: Split, prefix: str) -> Dict[str, object]:
+    """Write x/y bins, return manifest metadata."""
+    x = split.x
+    if x.dtype == np.float32:
+        x.astype("<f4").tofile(prefix + "_x.bin")
+        x_dtype = "f32"
+    else:
+        x.astype("<i4").tofile(prefix + "_x.bin")
+        x_dtype = "i32"
+    split.y.astype("<i4").tofile(prefix + "_y.bin")
+    return {
+        "x": prefix + "_x.bin", "y": prefix + "_y.bin",
+        "x_shape": list(x.shape), "y_shape": list(split.y.shape),
+        "x_dtype": x_dtype,
+    }

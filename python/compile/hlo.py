@@ -1,0 +1,35 @@
+"""HLO-text lowering helper (the AOT interchange with the rust runtime).
+
+HLO *text* — not ``HloModuleProto.serialize()`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowered with ``return_tuple=True``: the rust side unwraps with
+``Literal::to_tuple()``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn: Callable, specs: Sequence[jax.ShapeDtypeStruct]) -> str:
+    """Lower ``fn(*specs)`` to HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_hlo(fn: Callable, specs: Sequence[jax.ShapeDtypeStruct],
+              path: str) -> int:
+    text = lower_to_hlo_text(fn, specs)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)

@@ -1,0 +1,51 @@
+"""L1: fused CoFormer aggregation (paper Eq. 2) as a Pallas kernel.
+
+``X_agg = Pool(W · Concat(X_1..X_N) + b)`` — the central node's hot path
+(Phase 3).  Concat is free at the caller (the coordinator lays the per-device
+features out contiguously); the kernel fuses the linear transform, bias add
+and the average pool over the downsampled-token axis so the ``(groups, d_i)``
+intermediate never round-trips to HBM.
+
+Grid: one cell per batch element; each cell contracts a ``(groups, d_agg)``
+tile against the shared ``(d_agg, d_i)`` weight on the MXU and reduces over
+the group axis in-register.  Validated against ``ref.aggregate_ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]  # (1, groups, d_agg) tile for this batch element
+    w = w_ref[...]  # (d_agg, d_i), shared across the grid
+    b = b_ref[...]  # (d_i,)
+    fused = jnp.dot(x[0], w, preferred_element_type=jnp.float32) + b
+    o_ref[...] = jnp.mean(fused, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+def aggregate(x_concat: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fused aggregation module.
+
+    Args:
+      x_concat: ``(batch, groups, d_agg)`` concatenated device features.
+      w: ``(d_agg, d_i)``; b: ``(d_i,)``.
+    Returns:
+      ``(batch, d_i)`` pooled aggregated features.
+    """
+    batch, groups, d_agg = x_concat.shape
+    d_i = w.shape[1]
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, groups, d_agg), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d_agg, d_i), lambda i: (0, 0)),
+            pl.BlockSpec((d_i,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d_i), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_i), x_concat.dtype),
+        interpret=True,
+    )(x_concat, w, b)

@@ -1,0 +1,82 @@
+"""L1: fused multi-head attention as a Pallas kernel.
+
+This is the transformer hot-spot the paper's sub-models spend their time in.
+The kernel is expressed for the TPU memory hierarchy (see DESIGN.md
+§Hardware-Adaptation): one grid cell per ``(batch, head)`` pair — the TPU
+analog of the CUDA threadblock-per-head layout Jetson-class GPUs would use —
+with the Q/K/V tiles for that head staged into VMEM via ``BlockSpec`` and the
+two contractions (``q·kᵀ`` and ``p·v``) kept as single ``jnp.dot`` calls with
+``preferred_element_type=float32`` so they map onto the MXU systolic array.
+The softmax intermediate never leaves VMEM: only the ``(seq, head_dim)``
+output tile is written back to HBM.
+
+On this image Pallas must run with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls), which lowers the kernel body to plain
+HLO; numerics are identical to the TPU path and are validated against
+``ref.mha_ref`` in ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """Kernel body for one (batch, head) grid cell.
+
+    Refs are VMEM tiles of shape ``(seq, head_dim)``.  Numerically-stable
+    softmax is computed entirely in-register.
+    """
+    q = q_ref[0, 0]  # (seq, head_dim) — leading block dims are size 1
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    # (seq, seq) scores on the MXU; accumulate in f32 regardless of input dtype.
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = (p / denom).astype(v.dtype)
+    out = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Fused multi-head attention.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``.
+    Returns:
+      ``(batch, heads, seq, head_dim)``, same dtype as ``q``.
+    """
+    batch, heads, seq, head_dim = q.shape
+    scale = 1.0 / float(head_dim) ** 0.5
+    kernel = functools.partial(_mha_kernel, scale=scale)
+
+    # One grid cell per (batch, head): the index_map pins each cell to its
+    # (seq, head_dim) tile, so VMEM holds 3 input tiles + 1 output tile —
+    # 4 * seq * head_dim * itemsize bytes, far under the ~16 MiB VMEM budget
+    # for every configuration in the model pool.
+    spec = pl.BlockSpec((1, 1, seq, head_dim), lambda b, h: (b, h, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, heads),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_bytes(seq: int, head_dim: int, itemsize: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid cell (DESIGN.md §Perf).
+
+    3 input tiles + 1 output tile + the (seq, seq) score matrix held in
+    registers/VMEM during softmax.
+    """
+    tiles = 4 * seq * head_dim * itemsize
+    scores = seq * seq * 4  # f32 accumulator
+    return tiles + scores

@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only.  ``python/tests`` asserts
+``assert_allclose(kernel(...), ref(...))`` across shape/dtype sweeps; the
+reference is also what the L2 model uses on the *training* path (autodiff
+through ``pallas_call`` is not defined, and the offline booster path is
+allowed to use it since Python never serves requests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head attention reference.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)``.
+    Returns:
+      ``(batch, heads, seq, head_dim)`` attention output.
+    """
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def masked_mha_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, head_mask: jnp.ndarray
+) -> jnp.ndarray:
+    """MHA with per-head output gating (used for the Fig-5 head-importance sweep).
+
+    Args:
+      head_mask: ``(heads,)`` multiplier applied to each head's output.
+    """
+    out = mha_ref(q, k, v)
+    return out * head_mask[None, :, None, None]
+
+
+def aggregate_ref(
+    x_concat: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """CoFormer aggregation module reference (paper Eq. 2).
+
+    ``X_agg = Pool(W · Concat(X_1..X_N) + b)`` where Pool is an average over
+    the (downsampled) token axis.
+
+    Args:
+      x_concat: ``(batch, groups, d_agg)`` concatenated device features.
+      w: ``(d_agg, d_i)`` fusion weight.
+      b: ``(d_i,)`` bias.
+    Returns:
+      ``(batch, d_i)`` pooled aggregated features.
+    """
+    fused = jnp.einsum("bgd,de->bge", x_concat, w) + b
+    return jnp.mean(fused, axis=1)
+
+
+def layernorm_ref(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-6
+) -> jnp.ndarray:
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,345 @@
+"""L2: the CoFormer transformer family in JAX.
+
+A single configurable encoder covers the paper's backbones at reproduction
+scale: *patch* mode is the ViT/DeiT/Swin analog (image → patch tokens),
+*token* mode is the BERT/GPT2 analog (token ids → embeddings).  The paper's
+decomposition axes are all first-class here: number of layers ``l``,
+embedding dimension ``d``, per-layer head counts ``h^{1:l}`` and per-layer
+MLP dimensions ``D^{1:l}`` (paper §III-B1, ``C_n = {l_n, d_n, h_n, D_n}``).
+
+The attention hot-spot calls the L1 Pallas kernel (``kernels.attention``) on
+the inference/export path and the pure-jnp oracle on the training path
+(autodiff through ``pallas_call`` is undefined; training is offline anyway).
+
+Every sub-model's forward returns ``(features, logits)``:
+``features`` are the downsampled final-layer features the paper transmits
+once to the central node (Phase 2), ``logits`` the device-local prediction
+used by the ensemble baselines and standalone evaluation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as attn_kernel
+from .kernels import aggregate as agg_kernel
+from .kernels import ref as kref
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """Architecture configuration — the paper's ``C_n``.
+
+    Attributes:
+      mode: "patch" (vision) or "token" (language).
+      layers: number of transformer blocks ``l``.
+      dim: embedding dimension ``d``.
+      head_dim: per-head dimension (fixed across the family so head
+        decomposition removes whole heads, as in the paper's Fig. 14).
+      heads: per-layer head counts ``h^{1:l}`` (len == layers).
+      mlp_dims: per-layer MLP hidden dims ``D^{1:l}`` (len == layers).
+      num_classes: task classes.
+      task: "cls" (classification) or "det" (per-patch detection analog).
+      groups: downsample groups for the transmitted features (Phase 2).
+      img_size/patch_size/chans: patch mode geometry.
+      vocab/seq_len: token mode geometry.
+    """
+
+    mode: str
+    layers: int
+    dim: int
+    head_dim: int
+    heads: Tuple[int, ...]
+    mlp_dims: Tuple[int, ...]
+    num_classes: int
+    task: str = "cls"
+    groups: int = 4
+    img_size: int = 16
+    patch_size: int = 4
+    chans: int = 3
+    vocab: int = 64
+    seq_len: int = 32
+
+    def __post_init__(self):
+        assert self.mode in ("patch", "token"), self.mode
+        assert self.task in ("cls", "det"), self.task
+        assert len(self.heads) == self.layers, (self.heads, self.layers)
+        assert len(self.mlp_dims) == self.layers
+        assert all(h >= 1 for h in self.heads)
+
+    @property
+    def tokens(self) -> int:
+        """Content tokens (excluding the CLS token)."""
+        if self.mode == "patch":
+            return (self.img_size // self.patch_size) ** 2
+        return self.seq_len
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size * self.chans
+
+    def input_shape(self, batch: int) -> Tuple[int, ...]:
+        if self.mode == "patch":
+            return (batch, self.tokens, self.patch_dim)
+        return (batch, self.seq_len)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def uniform(mode: str, layers: int, dim: int, head_dim: int, heads: int,
+                mlp_dim: int, num_classes: int, **kw) -> "Arch":
+        """Arch with the same head count / MLP dim at every layer."""
+        return Arch(mode=mode, layers=layers, dim=dim, head_dim=head_dim,
+                    heads=(heads,) * layers, mlp_dims=(mlp_dim,) * layers,
+                    num_classes=num_classes, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def param_specs(arch: Arch) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the HLO argument order contract.
+
+    The rust runtime loads ``params.bin`` and slices it in exactly this
+    order; the manifest embeds these specs, so rust never re-derives them.
+    """
+    d = arch.dim
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    if arch.mode == "patch":
+        specs.append(("embed_w", (arch.patch_dim, d)))
+        specs.append(("embed_b", (d,)))
+    else:
+        specs.append(("embed_w", (arch.vocab, d)))
+    specs.append(("cls", (1, 1, d)))
+    specs.append(("pos", (1, arch.tokens + 1, d)))
+    for i in range(arch.layers):
+        h, dm = arch.heads[i], arch.mlp_dims[i]
+        inner = h * arch.head_dim
+        specs += [
+            (f"l{i}_ln1_g", (d,)), (f"l{i}_ln1_b", (d,)),
+            (f"l{i}_qkv_w", (d, 3 * inner)), (f"l{i}_qkv_b", (3 * inner,)),
+            (f"l{i}_proj_w", (inner, d)), (f"l{i}_proj_b", (d,)),
+            (f"l{i}_ln2_g", (d,)), (f"l{i}_ln2_b", (d,)),
+            (f"l{i}_fc1_w", (d, dm)), (f"l{i}_fc1_b", (dm,)),
+            (f"l{i}_fc2_w", (dm, d)), (f"l{i}_fc2_b", (d,)),
+        ]
+    specs.append(("ln_f_g", (d,)))
+    specs.append(("ln_f_b", (d,)))
+    out = arch.num_classes if arch.task == "cls" else arch.num_classes + 1
+    specs.append(("head_w", (d, out)))
+    specs.append(("head_b", (out,)))
+    return specs
+
+
+def init_params(rng: jax.Array, arch: Arch) -> Params:
+    """Truncated-normal / zero init in the param_specs order."""
+    params: Params = {}
+    for name, shape in param_specs(arch):
+        rng, sub = jax.random.split(rng)
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name in ("cls", "pos"):
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            std = 1.0 / math.sqrt(max(shape[0], 1))
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(params: Params, arch: Arch) -> List[jnp.ndarray]:
+    return [params[name] for name, _ in param_specs(arch)]
+
+
+def unflatten_params(flat: Sequence[jnp.ndarray], arch: Arch) -> Params:
+    return {name: arr for (name, _), arr in zip(param_specs(arch), flat)}
+
+
+def save_params(params: Params, arch: Arch, path: str) -> None:
+    """Raw little-endian f32, concatenated in param_specs order."""
+    chunks = [np.asarray(params[name], np.float32).ravel()
+              for name, _ in param_specs(arch)]
+    np.concatenate(chunks).astype("<f4").tofile(path)
+
+
+def load_params(path: str, arch: Arch) -> Params:
+    flat = np.fromfile(path, dtype="<f4")
+    params: Params = {}
+    off = 0
+    for name, shape in param_specs(arch):
+        n = int(np.prod(shape))
+        params[name] = jnp.asarray(flat[off:off + n].reshape(shape))
+        off += n
+    assert off == flat.size, f"params file size mismatch: {off} != {flat.size}"
+    return params
+
+
+def param_count(arch: Arch) -> int:
+    return sum(int(np.prod(s)) for _, s in param_specs(arch))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _embed(params: Params, x: jnp.ndarray, arch: Arch) -> jnp.ndarray:
+    if arch.mode == "patch":
+        tok = jnp.dot(x, params["embed_w"]) + params["embed_b"]
+    else:
+        tok = params["embed_w"][x]  # (B, S, d) gather
+    batch = tok.shape[0]
+    cls = jnp.broadcast_to(params["cls"], (batch, 1, arch.dim))
+    tok = jnp.concatenate([cls, tok], axis=1)
+    return tok + params["pos"]
+
+
+def _block(params: Params, x: jnp.ndarray, arch: Arch, i: int,
+           use_pallas: bool, head_mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    h, dh = arch.heads[i], arch.head_dim
+    batch, seq, d = x.shape
+    y = kref.layernorm_ref(x, params[f"l{i}_ln1_g"], params[f"l{i}_ln1_b"])
+    qkv = jnp.dot(y, params[f"l{i}_qkv_w"]) + params[f"l{i}_qkv_b"]
+    qkv = qkv.reshape(batch, seq, 3, h, dh).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    if head_mask is not None:
+        out = kref.masked_mha_ref(q, k, v, head_mask[i, :h])
+    elif use_pallas:
+        out = attn_kernel.mha(q, k, v)
+    else:
+        out = kref.mha_ref(q, k, v)
+    out = out.transpose(0, 2, 1, 3).reshape(batch, seq, h * dh)
+    x = x + jnp.dot(out, params[f"l{i}_proj_w"]) + params[f"l{i}_proj_b"]
+    y = kref.layernorm_ref(x, params[f"l{i}_ln2_g"], params[f"l{i}_ln2_b"])
+    y = jax.nn.gelu(jnp.dot(y, params[f"l{i}_fc1_w"]) + params[f"l{i}_fc1_b"])
+    x = x + jnp.dot(y, params[f"l{i}_fc2_w"]) + params[f"l{i}_fc2_b"]
+    return x
+
+
+def forward(params: Params, x: jnp.ndarray, arch: Arch, *,
+            use_pallas: bool = True,
+            head_mask: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward pass.
+
+    Returns:
+      cls task: ``(features (B, groups, d), logits (B, num_classes))``.
+      det task: ``(features (B, tokens, d), logits (B, tokens, classes+1))``.
+
+    ``features`` is what Phase 2 transmits to the central node; the
+    classification variant is group-averaged over patch tokens (the paper's
+    "downsampled features from the final layer"), which shrinks the payload
+    by ``tokens/groups``× versus shipping every token.
+    """
+    x = _embed(params, x, arch)
+    for i in range(arch.layers):
+        x = _block(params, x, arch, i, use_pallas, head_mask)
+    x = kref.layernorm_ref(x, params["ln_f_g"], params["ln_f_b"])
+    cls_tok, patch_tok = x[:, 0], x[:, 1:]
+    if arch.task == "det":
+        logits = jnp.dot(patch_tok, params["head_w"]) + params["head_b"]
+        return patch_tok, logits
+    batch, toks, d = patch_tok.shape
+    assert toks % arch.groups == 0, (toks, arch.groups)
+    feats = patch_tok.reshape(batch, arch.groups, toks // arch.groups, d).mean(axis=2)
+    logits = jnp.dot(cls_tok, params["head_w"]) + params["head_b"]
+    return feats, logits
+
+
+# ---------------------------------------------------------------------------
+# Aggregators (paper Eq. 2 + Table IV baselines)
+# ---------------------------------------------------------------------------
+
+def agg_param_specs(kind: str, dims: Sequence[int], d_i: int, num_classes: int
+                    ) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) contract for aggregator params, by aggregator kind."""
+    d_agg = sum(dims)
+    if kind == "mlp":  # CoFormer Eq. 2
+        return [("agg_w", (d_agg, d_i)), ("agg_b", (d_i,)),
+                ("head_w", (d_i, num_classes)), ("head_b", (num_classes,))]
+    if kind == "attn":  # attention-bottleneck style [41]
+        specs: List[Tuple[str, Tuple[int, ...]]] = []
+        for n, dn in enumerate(dims):
+            specs.append((f"proj{n}_w", (dn, d_i)))
+            specs.append((f"proj{n}_b", (d_i,)))
+        specs += [("query", (d_i,)),
+                  ("head_w", (d_i, num_classes)), ("head_b", (num_classes,))]
+        return specs
+    if kind == "senet":  # squeeze-and-excitation gating [42]
+        hidden = max(d_agg // 4, 8)
+        return [("fc1_w", (d_agg, hidden)), ("fc1_b", (hidden,)),
+                ("fc2_w", (hidden, d_agg)), ("fc2_b", (d_agg,)),
+                ("head_w", (d_agg, num_classes)), ("head_b", (num_classes,))]
+    if kind == "det":  # per-token fusion for the detection analog
+        return [("agg_w", (d_agg, d_i)), ("agg_b", (d_i,)),
+                ("head_w", (d_i, num_classes + 1)), ("head_b", (num_classes + 1,))]
+    raise ValueError(f"unknown aggregator kind {kind!r}")
+
+
+def init_agg_params(rng: jax.Array, kind: str, dims: Sequence[int], d_i: int,
+                    num_classes: int) -> Params:
+    params: Params = {}
+    for name, shape in agg_param_specs(kind, dims, d_i, num_classes):
+        rng, sub = jax.random.split(rng)
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "query":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            std = 1.0 / math.sqrt(max(shape[0], 1))
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def agg_forward(params: Params, feats: Sequence[jnp.ndarray], kind: str, *,
+                use_pallas: bool = True) -> jnp.ndarray:
+    """Aggregate per-device features into final logits.
+
+    Args:
+      feats: per-device features, each ``(B, groups, d_n)`` (cls) or
+        ``(B, tokens, d_n)`` (det).
+    """
+    x = jnp.concatenate(list(feats), axis=-1)  # (B, G, d_agg)
+    if kind == "mlp":
+        if use_pallas:
+            pooled = agg_kernel.aggregate(x, params["agg_w"], params["agg_b"])
+        else:
+            pooled = kref.aggregate_ref(x, params["agg_w"], params["agg_b"])
+        return jnp.dot(pooled, params["head_w"]) + params["head_b"]
+    if kind == "attn":
+        proj = []
+        for n, f in enumerate(feats):
+            p = jnp.dot(f.mean(axis=1), params[f"proj{n}_w"]) + params[f"proj{n}_b"]
+            proj.append(jnp.tanh(p))
+        stack = jnp.stack(proj, axis=1)  # (B, N, d_i)
+        scores = jnp.einsum("bnd,d->bn", stack, params["query"])
+        w = jax.nn.softmax(scores, axis=1)
+        fused = jnp.einsum("bn,bnd->bd", w, stack)
+        return jnp.dot(fused, params["head_w"]) + params["head_b"]
+    if kind == "senet":
+        pooled = x.mean(axis=1)  # (B, d_agg)
+        z = jax.nn.relu(jnp.dot(pooled, params["fc1_w"]) + params["fc1_b"])
+        s = jax.nn.sigmoid(jnp.dot(z, params["fc2_w"]) + params["fc2_b"])
+        gated = pooled * s
+        return jnp.dot(gated, params["head_w"]) + params["head_b"]
+    if kind == "det":
+        fused = jax.nn.gelu(
+            jnp.einsum("bsd,de->bse", x, params["agg_w"]) + params["agg_b"])
+        return jnp.dot(fused, params["head_w"]) + params["head_b"]
+    raise ValueError(f"unknown aggregator kind {kind!r}")
+
+
+def save_agg_params(params: Params, specs: List[Tuple[str, Tuple[int, ...]]],
+                    path: str) -> None:
+    chunks = [np.asarray(params[name], np.float32).ravel() for name, _ in specs]
+    np.concatenate(chunks).astype("<f4").tofile(path)

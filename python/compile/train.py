@@ -1,0 +1,317 @@
+"""Offline training: teacher fitting, boosting distillation, aggregator fit.
+
+Everything here runs once at ``make artifacts`` (the paper's *offline*
+preprocessing/decomposition stage, §III-A) — Python never serves requests.
+The distillation *train step* is additionally exported as an AOT HLO artifact
+so the rust ``booster`` can drive calibration itself (Alg. 1 lines 12–15).
+
+Losses follow the paper:
+* Eq. 14 — per-sub-model distillation objective: sample-weighted mean of
+  ``CE(softmax(Y_s), y) + CE(softmax(Y_s), y_t)`` halved, where ``y_t`` is
+  the teacher's hard decision (DeiT-style hard distillation).
+* Eq. 13 — AdaBoost-style sample re-weighting between sub-models:
+  ``w_i ← w_i · exp[(1/M − 1) · L_Bo]`` with per-sample losses.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def ce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample cross entropy; supports (B,C) + (B,) or (B,S,C) + (B,S)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if nll.ndim == 2:  # det task: mean over tokens → per-sample
+        nll = nll.mean(axis=-1)
+    return nll
+
+
+def distill_loss(logits: jnp.ndarray, y: jnp.ndarray, y_t: jnp.ndarray,
+                 sample_w: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 14 (scalar objective, weights normalized to sum 1)."""
+    per = 0.5 * (ce_loss(logits, y) + ce_loss(logits, y_t))
+    w = sample_w / jnp.sum(sample_w)
+    return jnp.sum(w * per)
+
+
+def boost_weight_update(w: np.ndarray, per_sample_loss: np.ndarray) -> np.ndarray:
+    """Paper Eq. 13: ``w_i ← w_i · exp[(1/M − 1) · L]``, renormalized.
+
+    ``(1/M − 1) < 0`` so *low-loss* (already well-handled) samples keep
+    weight and high-loss samples decay more slowly relative to them after the
+    renormalization — matching the paper's formulation verbatim.
+    """
+    m = w.shape[0]
+    new = w * np.exp((1.0 / m - 1.0) * per_sample_loss)
+    return (new / new.sum() * m).astype(np.float32)  # keep mean weight = 1
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled: keeps the AOT train-step self-contained, no optax)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray,
+                v: jnp.ndarray, step: jnp.ndarray, lr: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * jnp.square(g)
+    mh = m / (1 - ADAM_B1 ** step)
+    vh = v / (1 - ADAM_B2 ** step)
+    return p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS), m, v
+
+
+def _tree_adam(params: Params, grads: Params, m: Params, v: Params,
+               step: jnp.ndarray, lr: float) -> Tuple[Params, Params, Params]:
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_p[k], new_m[k], new_v[k] = adam_update(
+            params[k], grads[k], m[k], v[k], step, lr)
+    return new_p, new_m, new_v
+
+
+def zeros_like_params(params: Params) -> Params:
+    return {k: jnp.zeros_like(a) for k, a in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Teacher training (plain CE)
+# ---------------------------------------------------------------------------
+
+def train_teacher(arch: M.Arch, x_train: np.ndarray, y_train: np.ndarray,
+                  x_val: np.ndarray, y_val: np.ndarray, *,
+                  steps: int = 800, batch: int = 64, lr: float = 1.5e-3,
+                  seed: int = 0, log_every: int = 200) -> Params:
+    """Fit the 'large transformer' on a synthetic task (CE + Adam)."""
+    rng = np.random.default_rng(seed)
+    params = M.init_params(jax.random.PRNGKey(seed), arch)
+    m, v = zeros_like_params(params), zeros_like_params(params)
+
+    @jax.jit
+    def step_fn(params, m, v, step, xb, yb):
+        def loss_fn(p):
+            _, logits = M.forward(p, xb, arch, use_pallas=False)
+            return ce_loss(logits, yb).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, m, v = _tree_adam(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    n = x_train.shape[0]
+    for i in range(1, steps + 1):
+        idx = rng.integers(0, n, batch)
+        params, m, v, loss = step_fn(params, m, v, jnp.float32(i),
+                                     jnp.asarray(x_train[idx]),
+                                     jnp.asarray(y_train[idx]))
+        if log_every and i % log_every == 0:
+            acc = evaluate(params, arch, x_val, y_val)
+            print(f"  teacher[{arch.mode}/{arch.task}] step {i}: "
+                  f"loss={float(loss):.4f} val_acc={acc:.4f}", flush=True)
+    return params
+
+
+def evaluate(params: Params, arch: M.Arch, x: np.ndarray, y: np.ndarray,
+             batch: int = 256) -> float:
+    """Top-1 accuracy (cls) or per-patch accuracy (det)."""
+    @jax.jit
+    def fwd(xb):
+        _, logits = M.forward(params, xb, arch, use_pallas=False)
+        return jnp.argmax(logits, axis=-1)
+
+    correct = total = 0
+    for i in range(0, x.shape[0], batch):
+        pred = np.asarray(fwd(jnp.asarray(x[i:i + batch])))
+        yb = y[i:i + batch]
+        correct += (pred == yb).sum()
+        total += yb.size
+    return correct / total
+
+
+def predict_hard(params: Params, arch: M.Arch, x: np.ndarray,
+                 batch: int = 256) -> np.ndarray:
+    """Teacher hard decisions ``y_t`` for the whole set."""
+    @jax.jit
+    def fwd(xb):
+        _, logits = M.forward(params, xb, arch, use_pallas=False)
+        return jnp.argmax(logits, axis=-1)
+
+    outs = [np.asarray(fwd(jnp.asarray(x[i:i + batch])))
+            for i in range(0, x.shape[0], batch)]
+    return np.concatenate(outs).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Boosting distillation (Alg. 1 lines 12–15, python-side baked deployment)
+# ---------------------------------------------------------------------------
+
+def distill_submodel(arch: M.Arch, teacher_hard: np.ndarray,
+                     x_train: np.ndarray, y_train: np.ndarray,
+                     sample_w: np.ndarray, *, steps: int = 500,
+                     batch: int = 64, lr: float = 2e-3, seed: int = 1
+                     ) -> Tuple[Params, np.ndarray]:
+    """Calibrate one sub-model against the teacher (Eq. 14).
+
+    Returns the calibrated params and the per-sample distillation loss over
+    the train set (consumed by Eq. 13 for the next sub-model).
+    """
+    rng = np.random.default_rng(seed)
+    params = M.init_params(jax.random.PRNGKey(seed), arch)
+    m, v = zeros_like_params(params), zeros_like_params(params)
+
+    @jax.jit
+    def step_fn(params, m, v, step, xb, yb, ytb, wb):
+        def loss_fn(p):
+            _, logits = M.forward(p, xb, arch, use_pallas=False)
+            return distill_loss(logits, yb, ytb, wb)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, m, v = _tree_adam(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    n = x_train.shape[0]
+    for i in range(1, steps + 1):
+        idx = rng.integers(0, n, batch)
+        params, m, v, _ = step_fn(params, m, v, jnp.float32(i),
+                                  jnp.asarray(x_train[idx]),
+                                  jnp.asarray(y_train[idx]),
+                                  jnp.asarray(teacher_hard[idx]),
+                                  jnp.asarray(sample_w[idx]))
+
+    # per-sample loss over the whole train set, for the Eq. 13 update
+    @jax.jit
+    def per_sample(xb, yb, ytb):
+        _, logits = M.forward(params, xb, arch, use_pallas=False)
+        return 0.5 * (ce_loss(logits, yb) + ce_loss(logits, ytb))
+
+    losses = [np.asarray(per_sample(jnp.asarray(x_train[i:i + 512]),
+                                    jnp.asarray(y_train[i:i + 512]),
+                                    jnp.asarray(teacher_hard[i:i + 512])))
+              for i in range(0, n, 512)]
+    return params, np.concatenate(losses)
+
+
+def boost_calibrate(archs: Sequence[M.Arch], teacher_hard: np.ndarray,
+                    x_train: np.ndarray, y_train: np.ndarray, *,
+                    steps: int = 500, seed: int = 1
+                    ) -> List[Params]:
+    """Progressively calibrate all sub-models (Alg. 1 lines 12–15)."""
+    m = x_train.shape[0]
+    w = np.full(m, 1.0, np.float32)  # uniform init (scaled to mean 1)
+    out: List[Params] = []
+    for j, arch in enumerate(archs):
+        params, per_loss = distill_submodel(
+            arch, teacher_hard, x_train, y_train, w,
+            steps=steps, seed=seed + j)
+        out.append(params)
+        w = boost_weight_update(w, per_loss)
+        print(f"  booster: sub-model {j} calibrated "
+              f"(mean per-sample loss {per_loss.mean():.4f})", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Aggregator training (features precomputed once — sub-models frozen)
+# ---------------------------------------------------------------------------
+
+def extract_features(params_list: Sequence[Params], archs: Sequence[M.Arch],
+                     x: np.ndarray, batch: int = 256) -> List[np.ndarray]:
+    feats: List[np.ndarray] = []
+    for params, arch in zip(params_list, archs):
+        @jax.jit
+        def fwd(xb, params=params, arch=arch):
+            f, _ = M.forward(params, xb, arch, use_pallas=False)
+            return f
+        chunks = [np.asarray(fwd(jnp.asarray(x[i:i + batch])))
+                  for i in range(0, x.shape[0], batch)]
+        feats.append(np.concatenate(chunks))
+    return feats
+
+
+def train_aggregator(kind: str, feats: Sequence[np.ndarray], y: np.ndarray,
+                     d_i: int, num_classes: int, *, steps: int = 600,
+                     batch: int = 256, lr: float = 2e-3, seed: int = 3
+                     ) -> Params:
+    """Fit an aggregator head on frozen sub-model features (CE + Adam)."""
+    dims = [f.shape[-1] for f in feats]
+    params = M.init_agg_params(jax.random.PRNGKey(seed), kind, dims, d_i,
+                               num_classes)
+    m, v = zeros_like_params(params), zeros_like_params(params)
+
+    @jax.jit
+    def step_fn(params, m, v, step, fb, yb):
+        def loss_fn(p):
+            logits = M.agg_forward(p, fb, kind, use_pallas=False)
+            return ce_loss(logits, yb).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, m, v = _tree_adam(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    rng = np.random.default_rng(seed)
+    n = y.shape[0]
+    for i in range(1, steps + 1):
+        idx = rng.integers(0, n, batch)
+        fb = [jnp.asarray(f[idx]) for f in feats]
+        params, m, v, _ = step_fn(params, m, v, jnp.float32(i), fb,
+                                  jnp.asarray(y[idx]))
+    return params
+
+
+def eval_aggregated(agg_params: Params, kind: str,
+                    feats: Sequence[np.ndarray], y: np.ndarray,
+                    batch: int = 512) -> float:
+    @jax.jit
+    def fwd(fb):
+        logits = M.agg_forward(agg_params, fb, kind, use_pallas=False)
+        return jnp.argmax(logits, axis=-1)
+
+    correct = total = 0
+    for i in range(0, y.shape[0], batch):
+        pred = np.asarray(fwd([jnp.asarray(f[i:i + batch]) for f in feats]))
+        yb = y[i:i + batch]
+        correct += (pred == yb).sum()
+        total += yb.size
+    return correct / total
+
+
+# ---------------------------------------------------------------------------
+# Head importance (Fig. 5 analysis)
+# ---------------------------------------------------------------------------
+
+def head_importance(params: Params, arch: M.Arch, x: np.ndarray,
+                    batch: int = 256) -> np.ndarray:
+    """Importance of each attention head: mean L2 of the head's contribution
+    through the output projection, over a data batch.  (layers, max_heads)."""
+    xb = jnp.asarray(x[:batch])
+    max_h = max(arch.heads)
+    imp = np.zeros((arch.layers, max_h), np.float32)
+
+    # run embedding + blocks, capturing per-head output norms
+    h_state = M._embed(params, xb, arch)
+    from .kernels import ref as kref
+    for i in range(arch.layers):
+        h_cnt, dh = arch.heads[i], arch.head_dim
+        y = kref.layernorm_ref(h_state, params[f"l{i}_ln1_g"], params[f"l{i}_ln1_b"])
+        qkv = jnp.dot(y, params[f"l{i}_qkv_w"]) + params[f"l{i}_qkv_b"]
+        b, s, _ = y.shape
+        qkv = qkv.reshape(b, s, 3, h_cnt, dh).transpose(2, 0, 3, 1, 4)
+        out = kref.mha_ref(qkv[0], qkv[1], qkv[2])  # (B, H, S, dh)
+        proj_w = params[f"l{i}_proj_w"].reshape(h_cnt, dh, arch.dim)
+        for j in range(h_cnt):
+            contrib = jnp.einsum("bsd,de->bse", out[:, j], proj_w[j])
+            imp[i, j] = float(jnp.sqrt(jnp.mean(jnp.square(contrib))))
+        h_state = M._block(params, h_state, arch, i, False, None)
+    return imp

@@ -1,0 +1,123 @@
+"""Synthetic dataset tests: determinism, shapes, label validity, learnability."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+class TestEdgenet:
+    def test_shapes(self):
+        ds = D.make_edgenet(n_train=64, n_val=16, n_test=16)
+        assert ds["train"].x.shape == (64, D.N_PATCHES, D.PATCH ** 2 * D.CHANS)
+        assert ds["train"].y.shape == (64,)
+        assert ds["train"].x.dtype == np.float32
+        assert ds["train"].y.dtype == np.int32
+
+    def test_label_range(self):
+        ds = D.make_edgenet(n_train=256, n_val=16, n_test=16)
+        assert ds["train"].y.min() >= 0
+        assert ds["train"].y.max() < D.EDGENET_CLASSES
+
+    def test_deterministic(self):
+        a = D.make_edgenet(n_train=32, n_val=8, n_test=8, seed=5)
+        b = D.make_edgenet(n_train=32, n_val=8, n_test=8, seed=5)
+        np.testing.assert_array_equal(a["train"].x, b["train"].x)
+        np.testing.assert_array_equal(a["test"].y, b["test"].y)
+
+    def test_seed_changes_data(self):
+        a = D.make_edgenet(n_train=32, n_val=8, n_test=8, seed=5)
+        b = D.make_edgenet(n_train=32, n_val=8, n_test=8, seed=6)
+        assert np.abs(a["train"].x - b["train"].x).max() > 0
+
+    def test_class_signal_present(self):
+        """Same-class samples must be closer than cross-class on average."""
+        ds = D.make_edgenet(n_train=512, n_val=8, n_test=8, noise=0.3)
+        x, y = ds["train"].x.reshape(512, -1), ds["train"].y
+        c0 = x[y == y[0]]
+        c_other = x[y != y[0]]
+        d_in = np.linalg.norm(c0 - c0.mean(0), axis=1).mean()
+        d_out = np.linalg.norm(c_other - c0.mean(0), axis=1).mean()
+        assert d_out > d_in
+
+
+class TestSeqnet:
+    def test_shapes_and_dtypes(self):
+        ds = D.make_seqnet(n_train=64, n_val=8, n_test=8)
+        assert ds["train"].x.shape == (64, D.SEQNET_LEN)
+        assert ds["train"].x.dtype == np.int32
+        assert ds["train"].y.max() < D.SEQNET_CLASSES
+
+    def test_token_range(self):
+        ds = D.make_seqnet(n_train=128, n_val=8, n_test=8)
+        assert ds["train"].x.min() >= 0
+        assert ds["train"].x.max() < D.SEQNET_VOCAB
+
+    def test_motif_present_without_corruption(self):
+        ds = D.make_seqnet(n_train=64, n_val=8, n_test=8, corrupt=0.0)
+        # regenerate motifs with the same seed to verify embedding
+        rng = np.random.default_rng(11)
+        motifs = rng.integers(2, D.SEQNET_VOCAB,
+                              (D.SEQNET_CLASSES, D.SEQNET_MOTIF)).astype(np.int32)
+        x, y = ds["train"].x, ds["train"].y
+        found = 0
+        for i in range(x.shape[0]):
+            m = motifs[y[i]]
+            for p in range(D.SEQNET_LEN - D.SEQNET_MOTIF + 1):
+                if (x[i, p:p + D.SEQNET_MOTIF] == m).all():
+                    found += 1
+                    break
+        assert found == x.shape[0]
+
+
+class TestPatchdet:
+    def test_shapes(self):
+        ds = D.make_patchdet(n_train=64, n_val=8, n_test=8)
+        assert ds["train"].x.shape == (64, D.N_PATCHES, D.PATCH ** 2 * D.CHANS)
+        assert ds["train"].y.shape == (64, D.N_PATCHES)
+
+    def test_labels_valid(self):
+        ds = D.make_patchdet(n_train=128, n_val=8, n_test=8)
+        y = ds["train"].y
+        assert y.min() >= 0
+        assert y.max() <= D.PATCHDET_CLASSES
+        # every image has at least one object patch
+        assert ((y > 0).sum(axis=1) >= 1).all()
+        # and at most 3
+        assert ((y > 0).sum(axis=1) <= 3).all()
+
+    def test_object_patches_brighter(self):
+        """Object patches carry the prototype energy above background."""
+        ds = D.make_patchdet(n_train=256, n_val=8, n_test=8, noise=0.2)
+        x, y = ds["train"].x, ds["train"].y
+        obj = np.abs(x[y > 0]).mean()
+        bg = np.abs(x[y == 0]).mean()
+        assert obj > bg
+
+
+class TestSaveSplit:
+    def test_f32_roundtrip(self, tmp_path):
+        ds = D.make_edgenet(n_train=16, n_val=8, n_test=8)
+        meta = D.save_split(ds["train"], str(tmp_path / "t"))
+        x = np.fromfile(meta["x"], dtype="<f4").reshape(meta["x_shape"])
+        y = np.fromfile(meta["y"], dtype="<i4").reshape(meta["y_shape"])
+        np.testing.assert_array_equal(x, ds["train"].x)
+        np.testing.assert_array_equal(y, ds["train"].y)
+        assert meta["x_dtype"] == "f32"
+
+    def test_i32_roundtrip(self, tmp_path):
+        ds = D.make_seqnet(n_train=16, n_val=8, n_test=8)
+        meta = D.save_split(ds["train"], str(tmp_path / "s"))
+        x = np.fromfile(meta["x"], dtype="<i4").reshape(meta["x_shape"])
+        np.testing.assert_array_equal(x, ds["train"].x)
+        assert meta["x_dtype"] == "i32"
+
+
+class TestPatchify:
+    def test_patch_layout_row_major(self):
+        """Pixel (0..3, 0..3) lands in patch 0; (0..3, 4..7) in patch 1."""
+        img = np.zeros((1, D.IMG, D.IMG, D.CHANS), np.float32)
+        img[0, 0, 5, 0] = 7.0  # row 0, col 5 → patch grid (0, 1) → patch 1
+        x = D._patchify(img)
+        assert x[0, 1].max() == 7.0
+        assert x[0, 0].max() == 0.0

@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes per the repro contract; every kernel output
+must match ``ref.py`` to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import attention, aggregate, ref
+
+
+def _qkv(rng, batch, heads, seq, head_dim, dtype=np.float32, scale=1.0):
+    shape = (batch, heads, seq, head_dim)
+    q = (scale * rng.standard_normal(shape)).astype(dtype)
+    k = (scale * rng.standard_normal(shape)).astype(dtype)
+    v = (scale * rng.standard_normal(shape)).astype(dtype)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+class TestMhaKernel:
+    def test_basic_matches_ref(self):
+        rng = np.random.default_rng(0)
+        q, k, v = _qkv(rng, 2, 4, 17, 24)
+        assert_allclose(np.asarray(attention.mha(q, k, v)),
+                        np.asarray(ref.mha_ref(q, k, v)), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(batch=st.integers(1, 4), heads=st.integers(1, 6),
+           seq=st.sampled_from([1, 3, 8, 16, 17, 33]),
+           head_dim=st.sampled_from([8, 16, 24, 32]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_shape_sweep(self, batch, heads, seq, head_dim, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = _qkv(rng, batch, heads, seq, head_dim)
+        out = attention.mha(q, k, v)
+        expect = ref.mha_ref(q, k, v)
+        assert out.shape == (batch, heads, seq, head_dim)
+        assert_allclose(np.asarray(out), np.asarray(expect),
+                        rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(scale=st.sampled_from([1e-3, 1.0, 10.0, 50.0]),
+           seed=st.integers(0, 1000))
+    def test_softmax_stability_large_logits(self, scale, seed):
+        """Stable softmax: no overflow even with huge score magnitudes."""
+        rng = np.random.default_rng(seed)
+        q, k, v = _qkv(rng, 1, 2, 16, 16, scale=scale)
+        out = np.asarray(attention.mha(q, k, v))
+        assert np.isfinite(out).all()
+        assert_allclose(out, np.asarray(ref.mha_ref(q, k, v)),
+                        rtol=1e-4, atol=1e-5)
+
+    def test_bf16_inputs(self):
+        rng = np.random.default_rng(1)
+        q, k, v = _qkv(rng, 2, 2, 16, 16)
+        q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+        out = attention.mha(q, k, v)
+        assert out.dtype == jnp.bfloat16
+        expect = ref.mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32))
+        assert_allclose(np.asarray(out, np.float32), np.asarray(expect),
+                        rtol=5e-2, atol=5e-2)
+
+    def test_jit_composes(self):
+        """Kernel must lower inside jit (the path aot.py takes)."""
+        rng = np.random.default_rng(2)
+        q, k, v = _qkv(rng, 1, 2, 8, 8)
+        out = jax.jit(attention.mha)(q, k, v)
+        assert_allclose(np.asarray(out), np.asarray(ref.mha_ref(q, k, v)),
+                        rtol=1e-5, atol=1e-6)
+
+    def test_single_token(self):
+        """seq=1 attention is the identity over v."""
+        rng = np.random.default_rng(3)
+        q, k, v = _qkv(rng, 2, 3, 1, 8)
+        assert_allclose(np.asarray(attention.mha(q, k, v)), np.asarray(v),
+                        rtol=1e-5, atol=1e-6)
+
+    def test_uniform_keys_average_values(self):
+        """Identical keys → softmax uniform → output is mean of values."""
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.standard_normal((1, 1, 5, 8)).astype(np.float32))
+        k = jnp.zeros((1, 1, 5, 8), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 1, 5, 8)).astype(np.float32))
+        out = attention.mha(q, k, v)
+        expect = jnp.broadcast_to(v.mean(axis=2, keepdims=True), v.shape)
+        assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-5,
+                        atol=1e-6)
+
+    def test_vmem_estimate_monotone(self):
+        assert attention.vmem_bytes(32, 32) > attention.vmem_bytes(16, 32)
+        assert attention.vmem_bytes(16, 64) > attention.vmem_bytes(16, 32)
+        # Every pool config fits in a 16 MiB VMEM budget with slack
+        assert attention.vmem_bytes(33, 24) < 2 ** 20
+
+
+class TestMaskedMha:
+    def test_full_mask_is_identity(self):
+        rng = np.random.default_rng(5)
+        q, k, v = _qkv(rng, 2, 4, 8, 8)
+        mask = jnp.ones((4,), jnp.float32)
+        assert_allclose(np.asarray(ref.masked_mha_ref(q, k, v, mask)),
+                        np.asarray(ref.mha_ref(q, k, v)), rtol=1e-6)
+
+    def test_zero_mask_zeroes_head(self):
+        rng = np.random.default_rng(6)
+        q, k, v = _qkv(rng, 1, 3, 8, 8)
+        mask = jnp.asarray([1.0, 0.0, 1.0])
+        out = np.asarray(ref.masked_mha_ref(q, k, v, mask))
+        assert np.abs(out[:, 1]).max() == 0.0
+        assert np.abs(out[:, 0]).max() > 0.0
+
+
+class TestAggregateKernel:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal((8, 4, 96)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((96, 64)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((64,)).astype(np.float32))
+        assert_allclose(np.asarray(aggregate.aggregate(x, w, b)),
+                        np.asarray(ref.aggregate_ref(x, w, b)),
+                        rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(batch=st.integers(1, 9), groups=st.sampled_from([1, 2, 4, 8]),
+           d_agg=st.sampled_from([16, 56, 96]),
+           d_i=st.sampled_from([8, 32, 64]), seed=st.integers(0, 2**31 - 1))
+    def test_shape_sweep(self, batch, groups, d_agg, d_i, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((batch, groups, d_agg)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((d_agg, d_i)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((d_i,)).astype(np.float32))
+        out = aggregate.aggregate(x, w, b)
+        assert out.shape == (batch, d_i)
+        assert_allclose(np.asarray(out), np.asarray(ref.aggregate_ref(x, w, b)),
+                        rtol=1e-4, atol=1e-4)
+
+    def test_pool_is_group_mean(self):
+        """With W = I, b = 0, the kernel is exactly the group average."""
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.standard_normal((3, 4, 16)).astype(np.float32))
+        w = jnp.eye(16, dtype=jnp.float32)
+        b = jnp.zeros((16,), jnp.float32)
+        assert_allclose(np.asarray(aggregate.aggregate(x, w, b)),
+                        np.asarray(x.mean(axis=1)), rtol=1e-5, atol=1e-6)
+
+
+class TestLayerNormRef:
+    def test_zero_mean_unit_var(self):
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.standard_normal((4, 7, 32)).astype(np.float32) * 5)
+        g = jnp.ones((32,), jnp.float32)
+        b = jnp.zeros((32,), jnp.float32)
+        out = np.asarray(ref.layernorm_ref(x, g, b))
+        assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+        assert_allclose(out.var(-1), 1.0, atol=1e-3)

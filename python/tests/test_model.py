@@ -1,0 +1,204 @@
+"""L2 model tests: shapes, param contract, pallas/ref forward parity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+
+def small_arch(**kw):
+    base = dict(mode="patch", layers=2, dim=24, head_dim=8, heads=(1, 2),
+                mlp_dims=(48, 32), num_classes=5)
+    base.update(kw)
+    return M.Arch(**base)
+
+
+def _input(arch, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    if arch.mode == "patch":
+        return jnp.asarray(rng.standard_normal(arch.input_shape(batch)).astype(np.float32))
+    return jnp.asarray(rng.integers(0, arch.vocab, arch.input_shape(batch)).astype(np.int32))
+
+
+class TestArch:
+    def test_tokens_patch(self):
+        assert small_arch().tokens == 16
+
+    def test_tokens_token_mode(self):
+        a = small_arch(mode="token", seq_len=32)
+        assert a.tokens == 32
+
+    def test_heads_len_mismatch_rejected(self):
+        with pytest.raises(AssertionError):
+            small_arch(heads=(1,))
+
+    def test_uniform_builder(self):
+        a = M.Arch.uniform("patch", 3, 32, 8, 2, 64, 10)
+        assert a.heads == (2, 2, 2) and a.mlp_dims == (64, 64, 64)
+
+    def test_json_roundtrip(self):
+        a = small_arch()
+        j = a.to_json()
+        b = M.Arch(**{k: tuple(v) if isinstance(v, list) else v
+                      for k, v in j.items()})
+        assert a == b
+
+
+class TestParams:
+    def test_specs_deterministic(self):
+        a = small_arch()
+        assert M.param_specs(a) == M.param_specs(a)
+
+    def test_init_matches_specs(self):
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(0), a)
+        for name, shape in M.param_specs(a):
+            assert p[name].shape == shape, name
+
+    def test_flatten_unflatten_roundtrip(self):
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(0), a)
+        q = M.unflatten_params(M.flatten_params(p, a), a)
+        for k in p:
+            assert_allclose(np.asarray(p[k]), np.asarray(q[k]))
+
+    def test_save_load_roundtrip(self, tmp_path):
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(1), a)
+        path = str(tmp_path / "p.bin")
+        M.save_params(p, a, path)
+        q = M.load_params(path, a)
+        for k in p:
+            assert_allclose(np.asarray(p[k]), np.asarray(q[k]))
+
+    def test_param_count_matches_file(self, tmp_path):
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(1), a)
+        path = str(tmp_path / "p.bin")
+        M.save_params(p, a, path)
+        assert M.param_count(a) * 4 == (tmp_path / "p.bin").stat().st_size
+
+    def test_gamma_init_ones(self):
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(0), a)
+        assert_allclose(np.asarray(p["l0_ln1_g"]), 1.0)
+        assert_allclose(np.asarray(p["l0_ln1_b"]), 0.0)
+
+
+class TestForward:
+    def test_cls_shapes(self):
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(0), a)
+        feats, logits = M.forward(p, _input(a, 3), a, use_pallas=False)
+        assert feats.shape == (3, a.groups, a.dim)
+        assert logits.shape == (3, a.num_classes)
+
+    def test_det_shapes(self):
+        a = small_arch(task="det")
+        p = M.init_params(jax.random.PRNGKey(0), a)
+        feats, logits = M.forward(p, _input(a, 2), a, use_pallas=False)
+        assert feats.shape == (2, a.tokens, a.dim)
+        assert logits.shape == (2, a.tokens, a.num_classes + 1)
+
+    def test_token_mode_shapes(self):
+        a = small_arch(mode="token", seq_len=32)
+        p = M.init_params(jax.random.PRNGKey(0), a)
+        feats, logits = M.forward(p, _input(a, 2), a, use_pallas=False)
+        assert feats.shape == (2, a.groups, a.dim)
+        assert logits.shape == (2, a.num_classes)
+
+    def test_pallas_matches_ref_forward(self):
+        """The export path (pallas) must equal the training path (ref)."""
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(2), a)
+        x = _input(a, 4)
+        f1, l1 = M.forward(p, x, a, use_pallas=True)
+        f2, l2 = M.forward(p, x, a, use_pallas=False)
+        assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-4, atol=1e-4)
+        assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(layers=st.integers(1, 3), dim=st.sampled_from([16, 24, 40]),
+           heads=st.integers(1, 3), batch=st.integers(1, 4))
+    def test_arch_sweep(self, layers, dim, heads, batch):
+        a = M.Arch.uniform("patch", layers, dim, 8, heads, 2 * dim, 7)
+        p = M.init_params(jax.random.PRNGKey(3), a)
+        feats, logits = M.forward(p, _input(a, batch), a, use_pallas=False)
+        assert feats.shape == (batch, a.groups, dim)
+        assert logits.shape == (batch, 7)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_full_head_mask_is_identity(self):
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(4), a)
+        x = _input(a, 2)
+        mask = jnp.ones((a.layers, max(a.heads)), jnp.float32)
+        f1, l1 = M.forward(p, x, a, use_pallas=False)
+        f2, l2 = M.forward(p, x, a, head_mask=mask, use_pallas=False)
+        assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)
+
+    def test_head_mask_changes_output(self):
+        a = small_arch(heads=(2, 2))
+        p = M.init_params(jax.random.PRNGKey(5), a)
+        x = _input(a, 2)
+        mask = jnp.asarray([[1.0, 0.0], [1.0, 1.0]], jnp.float32)
+        _, l1 = M.forward(p, x, a, use_pallas=False)
+        _, l2 = M.forward(p, x, a, head_mask=mask, use_pallas=False)
+        assert np.abs(np.asarray(l1) - np.asarray(l2)).max() > 1e-6
+
+    def test_batch_invariance(self):
+        """Per-sample outputs must not depend on batch composition."""
+        a = small_arch()
+        p = M.init_params(jax.random.PRNGKey(6), a)
+        x = _input(a, 4)
+        _, l_all = M.forward(p, x, a, use_pallas=False)
+        _, l_one = M.forward(p, x[:1], a, use_pallas=False)
+        assert_allclose(np.asarray(l_all[:1]), np.asarray(l_one),
+                        rtol=1e-4, atol=1e-5)
+
+
+class TestAggregators:
+    def _feats(self, dims, batch=6, groups=4, seed=0):
+        rng = np.random.default_rng(seed)
+        return [jnp.asarray(rng.standard_normal((batch, groups, d)).astype(np.float32))
+                for d in dims]
+
+    @pytest.mark.parametrize("kind", ["mlp", "attn", "senet"])
+    def test_cls_aggregator_shapes(self, kind):
+        dims = [24, 32, 40]
+        p = M.init_agg_params(jax.random.PRNGKey(0), kind, dims, 64, 10)
+        out = M.agg_forward(p, self._feats(dims), kind, use_pallas=False)
+        assert out.shape == (6, 10)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_mlp_pallas_matches_ref(self):
+        dims = [24, 32]
+        p = M.init_agg_params(jax.random.PRNGKey(1), "mlp", dims, 32, 5)
+        feats = self._feats(dims)
+        o1 = M.agg_forward(p, feats, "mlp", use_pallas=True)
+        o2 = M.agg_forward(p, feats, "mlp", use_pallas=False)
+        assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-4)
+
+    def test_det_aggregator_shapes(self):
+        dims = [24, 32]
+        p = M.init_agg_params(jax.random.PRNGKey(2), "det", dims, 64, 6)
+        feats = self._feats(dims, groups=16)
+        out = M.agg_forward(p, feats, "det", use_pallas=False)
+        assert out.shape == (6, 16, 7)
+
+    def test_agg_param_specs_cover_params(self):
+        for kind in ("mlp", "attn", "senet", "det"):
+            dims = [24, 32]
+            specs = M.agg_param_specs(kind, dims, 64, 10)
+            p = M.init_agg_params(jax.random.PRNGKey(3), kind, dims, 64, 10)
+            assert set(p) == {n for n, _ in specs}
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            M.agg_param_specs("bogus", [8], 8, 2)

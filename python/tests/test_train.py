@@ -1,0 +1,184 @@
+"""Training-path tests: losses (Eq. 13/14), Adam, distillation sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile import train as T
+
+
+class TestCeLoss:
+    def test_matches_manual(self):
+        logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 0.0, 0.0]])
+        labels = jnp.asarray([0, 2])
+        got = np.asarray(T.ce_loss(logits, labels))
+        p = np.exp([2.0, 0.0, -1.0]); p /= p.sum()
+        assert_allclose(got[0], -np.log(p[0]), rtol=1e-6)
+        assert_allclose(got[1], np.log(3.0), rtol=1e-6)
+
+    def test_det_reduces_over_tokens(self):
+        logits = jnp.zeros((2, 4, 3))
+        labels = jnp.zeros((2, 4), jnp.int32)
+        got = np.asarray(T.ce_loss(logits, labels))
+        assert got.shape == (2,)
+        assert_allclose(got, np.log(3.0), rtol=1e-6)
+
+    def test_perfect_prediction_near_zero(self):
+        logits = jnp.asarray([[100.0, 0.0]])
+        labels = jnp.asarray([0])
+        assert float(T.ce_loss(logits, labels)[0]) < 1e-6
+
+
+class TestDistillLoss:
+    def test_agreement_equals_ce(self):
+        """When y == y_t, Eq. 14 reduces to plain weighted CE."""
+        rng = np.random.default_rng(0)
+        logits = jnp.asarray(rng.standard_normal((8, 5)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 5, 8).astype(np.int32))
+        w = jnp.ones((8,), jnp.float32)
+        got = float(T.distill_loss(logits, y, y, w))
+        expect = float(T.ce_loss(logits, y).mean())
+        assert_allclose(got, expect, rtol=1e-6)
+
+    def test_weights_select_samples(self):
+        """One-hot weights pick out a single sample's loss."""
+        rng = np.random.default_rng(1)
+        logits = jnp.asarray(rng.standard_normal((4, 3)).astype(np.float32))
+        y = jnp.asarray([0, 1, 2, 0])
+        w = jnp.asarray([0.0, 1.0, 0.0, 0.0])
+        got = float(T.distill_loss(logits, y, y, w))
+        expect = float(T.ce_loss(logits, y)[1])
+        assert_allclose(got, expect, rtol=1e-6)
+
+    def test_weight_normalization_invariance(self):
+        rng = np.random.default_rng(2)
+        logits = jnp.asarray(rng.standard_normal((6, 4)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 4, 6).astype(np.int32))
+        yt = jnp.asarray(rng.integers(0, 4, 6).astype(np.int32))
+        w = jnp.asarray(rng.uniform(0.1, 2.0, 6).astype(np.float32))
+        a = float(T.distill_loss(logits, y, yt, w))
+        b = float(T.distill_loss(logits, y, yt, 7.0 * w))
+        assert_allclose(a, b, rtol=1e-6)
+
+
+class TestBoostWeightUpdate:
+    def test_mean_stays_one(self):
+        rng = np.random.default_rng(0)
+        w = np.ones(100, np.float32)
+        loss = rng.uniform(0, 3, 100).astype(np.float32)
+        new = T.boost_weight_update(w, loss)
+        assert_allclose(new.mean(), 1.0, rtol=1e-5)
+
+    def test_low_loss_gains_relative_weight(self):
+        """Eq. 13: (1/M - 1) < 0 → smaller loss ⇒ larger post-update weight."""
+        w = np.ones(10, np.float32)
+        loss = np.linspace(0.0, 2.0, 10).astype(np.float32)
+        new = T.boost_weight_update(w, loss)
+        assert new[0] > new[-1]
+        assert (np.diff(new) < 0).all()
+
+    def test_uniform_loss_keeps_uniform(self):
+        w = np.ones(8, np.float32)
+        new = T.boost_weight_update(w, np.full(8, 1.7, np.float32))
+        assert_allclose(new, 1.0, rtol=1e-5)
+
+    def test_positive(self):
+        rng = np.random.default_rng(1)
+        w = rng.uniform(0.1, 2.0, 50).astype(np.float32)
+        new = T.boost_weight_update(w, rng.uniform(0, 10, 50).astype(np.float32))
+        assert (new > 0).all()
+
+
+class TestAdam:
+    def test_converges_on_quadratic(self):
+        p = jnp.asarray([5.0])
+        m = v = jnp.zeros(1)
+        for i in range(1, 400):
+            g = 2.0 * p  # d/dp p^2
+            p, m, v = T.adam_update(p, g, m, v, jnp.float32(i), 0.05)
+        assert abs(float(p[0])) < 0.05
+
+    def test_bias_correction_first_step(self):
+        """Step 1 update magnitude ≈ lr regardless of gradient scale."""
+        for scale in (1e-3, 1.0, 1e3):
+            p = jnp.asarray([0.0])
+            g = jnp.asarray([scale])
+            new_p, _, _ = T.adam_update(p, g, jnp.zeros(1), jnp.zeros(1),
+                                        jnp.float32(1), 0.1)
+            assert_allclose(abs(float(new_p[0])), 0.1, rtol=1e-3)
+
+
+def tiny_task(n=256, classes=4, seed=0):
+    """Linearly separable micro-task a 1-layer model learns in ~100 steps."""
+    rng = np.random.default_rng(seed)
+    arch = M.Arch.uniform("patch", 1, 16, 8, 1, 32, classes)
+    protos = rng.standard_normal((classes, arch.tokens, arch.patch_dim)).astype(np.float32)
+    y = rng.integers(0, classes, n).astype(np.int32)
+    x = protos[y] + 0.3 * rng.standard_normal((n, arch.tokens, arch.patch_dim)).astype(np.float32)
+    return arch, x, y
+
+
+class TestTrainingLoops:
+    def test_teacher_learns_tiny_task(self):
+        arch, x, y = tiny_task()
+        params = T.train_teacher(arch, x, y, x[:64], y[:64], steps=150,
+                                 batch=64, log_every=0)
+        acc = T.evaluate(params, arch, x, y)
+        assert acc > 0.9, f"teacher failed to learn: acc={acc}"
+
+    def test_distill_transfers_teacher_behavior(self):
+        arch, x, y = tiny_task()
+        teacher = T.train_teacher(arch, x, y, x[:64], y[:64], steps=150,
+                                  batch=64, log_every=0)
+        yt = T.predict_hard(teacher, arch, x)
+        w = np.ones(x.shape[0], np.float32)
+        student_arch = M.Arch.uniform("patch", 1, 12, 8, 1, 24, 4)
+        student, per_loss = T.distill_submodel(student_arch, yt, x, y, w,
+                                               steps=150, batch=64)
+        acc = T.evaluate(student, student_arch, x, y)
+        assert acc > 0.8, f"distillation failed: acc={acc}"
+        assert per_loss.shape == (x.shape[0],)
+        assert (per_loss >= 0).all()
+
+    def test_boost_calibrate_returns_all_members(self):
+        arch, x, y = tiny_task(n=128)
+        teacher = T.train_teacher(arch, x, y, x[:32], y[:32], steps=100,
+                                  batch=32, log_every=0)
+        yt = T.predict_hard(teacher, arch, x)
+        subs = [M.Arch.uniform("patch", 1, 12, 8, 1, 24, 4),
+                M.Arch.uniform("patch", 1, 16, 8, 1, 32, 4)]
+        plist = T.boost_calibrate(subs, yt, x, y, steps=60)
+        assert len(plist) == 2
+        for p, a in zip(plist, subs):
+            for name, shape in M.param_specs(a):
+                assert p[name].shape == shape
+
+
+class TestAggregatorTraining:
+    def test_aggregation_beats_members_on_complementary_features(self):
+        """Members see disjoint halves of the signal; fusion must win."""
+        rng = np.random.default_rng(3)
+        n, classes = 512, 4
+        y = rng.integers(0, classes, n).astype(np.int32)
+        protos_a = rng.standard_normal((classes, 4, 8)).astype(np.float32)
+        protos_b = rng.standard_normal((classes, 4, 8)).astype(np.float32)
+        # feature set A only separates classes {0,1} vs {2,3}; B the converse
+        fa = protos_a[y // 2 * 2] + 0.4 * rng.standard_normal((n, 4, 8)).astype(np.float32)
+        fb = protos_b[y % 2 + (y // 2) * 0] + 0.4 * rng.standard_normal((n, 4, 8)).astype(np.float32)
+        agg = T.train_aggregator("mlp", [fa, fb], y, 32, classes, steps=300)
+        acc = T.eval_aggregated(agg, "mlp", [fa, fb], y)
+        assert acc > 0.8, f"aggregator failed to fuse: acc={acc}"
+
+
+class TestHeadImportance:
+    def test_shape_and_nonnegative(self):
+        arch, x, y = tiny_task(n=64)
+        arch2 = M.Arch.uniform("patch", 2, 16, 8, 2, 32, 4)
+        params = M.init_params(jax.random.PRNGKey(0), arch2)
+        imp = T.head_importance(params, arch2, x, batch=32)
+        assert imp.shape == (2, 2)
+        assert (imp >= 0).all()
+        assert imp.max() > 0

@@ -1,0 +1,74 @@
+//! Coordinator benches: end-to-end collaborative serving throughput under
+//! the dynamic batcher, plus the aggregation combiners. Requires
+//! `make artifacts`.
+
+use coformer::aggregation;
+use coformer::config::SystemConfig;
+use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
+use coformer::data::Dataset;
+use coformer::metrics::bench::{bench, black_box};
+use coformer::model::Arch;
+use coformer::runtime::ExecServer;
+use coformer::util::Rng;
+
+fn main() {
+    // pure-rust combiners first (no artifacts needed)
+    println!("== bench: aggregation combiners ==");
+    let mut rng = Rng::seed_from_u64(3);
+    let members: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..16 * 20).map(|_| rng.gen_f64() as f32).collect())
+        .collect();
+    bench("average_16x20x3", 100, 5000, || {
+        black_box(aggregation::average(&members, 16, 20).len());
+    });
+    bench("majority_vote_16x20x3", 100, 5000, || {
+        black_box(aggregation::majority_vote(&members, 16, 20).len());
+    });
+
+    let artifacts = std::path::PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("bench coordinator: serving part SKIPPED (run `make artifacts`)");
+        return;
+    }
+    println!("== bench: end-to-end collaborative serving ==");
+    let server = ExecServer::start(artifacts.clone()).expect("server");
+    let exec = server.handle();
+    let m = coformer::runtime::Manifest::load(&artifacts).expect("manifest");
+    let dep = m.deployment("edgenet_3dev").unwrap().clone();
+    let task = m.task("edgenet").unwrap().clone();
+    let ds = Dataset::load(&artifacts, &task.splits["test"]).expect("ds");
+    let archs: Vec<Arch> = dep
+        .members
+        .iter()
+        .map(|n| m.model(n).unwrap().arch.clone())
+        .collect();
+    for member in &dep.members {
+        exec.warmup(member).unwrap();
+    }
+    let coord =
+        Coordinator::start(SystemConfig::paper_default(), exec, dep, archs, ds.x_stride())
+            .expect("coordinator");
+    let handle = coord.handle();
+
+    // single blocking request (unbatched path)
+    let one = RequestPayload::F32(ds.gather_x_f32(&[0]));
+    bench("serve_single_request", 5, 100, || {
+        black_box(handle.infer(one.clone()).unwrap().prediction);
+    });
+
+    // pipelined burst of 64 (batcher coalesces)
+    bench("serve_burst_64", 2, 20, || {
+        let payloads: Vec<RequestPayload> =
+            (0..64).map(|i| RequestPayload::F32(ds.gather_x_f32(&[i]))).collect();
+        black_box(serve_all(&handle, payloads).unwrap().len());
+    });
+
+    let stats = coord.shutdown().expect("stats");
+    println!(
+        "serving stats: {} requests in {} batches (mean batch {:.1}), host wall p50 {:.2} ms",
+        stats.requests,
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        stats.wall_latency.p50_ms()
+    );
+}

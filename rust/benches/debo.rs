@@ -1,0 +1,94 @@
+//! DeBo hot-path benches: GP posterior update + predict, EI candidate
+//! scan, full search iterations, and the policy/constraint layer.
+
+use coformer::debo::{expected_improvement, DeBoConfig, DeBoSearch, Gp, Matern32};
+use coformer::device::DeviceProfile;
+use coformer::evaluator::{AccuracyProxy, LatencyModel, Objective};
+use coformer::metrics::bench::{bench, black_box};
+use coformer::model::{policy::DeviceCaps, Arch, DecompositionPolicy, Mode, SubModelCfg};
+use coformer::net::{Link, Topology};
+use coformer::util::Rng;
+
+fn teacher() -> Arch {
+    Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20)
+}
+
+fn main() {
+    println!("== bench: DeBo (GP / EI / search) ==");
+
+    // GP observe+refit at history sizes the search actually reaches
+    for n in [16usize, 48, 96] {
+        let mut rng = Rng::seed_from_u64(1);
+        let pts: Vec<(Vec<f64>, f64)> = (0..n)
+            .map(|_| {
+                let x: Vec<f64> = (0..12).map(|_| rng.gen_f64()).collect();
+                let y = x.iter().sum::<f64>();
+                (x, y)
+            })
+            .collect();
+        bench(&format!("gp_refit_n{n}"), 2, 20, || {
+            let mut gp = Gp::new(Matern32::default(), 1e-4);
+            for (x, y) in &pts {
+                gp.observe(x.clone(), *y);
+            }
+            black_box(gp.len());
+        });
+    }
+
+    // posterior predict on a fitted GP
+    {
+        let mut gp = Gp::new(Matern32::default(), 1e-4);
+        let mut rng = Rng::seed_from_u64(2);
+        for _ in 0..64 {
+            let x: Vec<f64> = (0..12).map(|_| rng.gen_f64()).collect();
+            let y = x.iter().sum::<f64>();
+            gp.observe(x, y);
+        }
+        let q: Vec<f64> = (0..12).map(|_| rng.gen_f64()).collect();
+        bench("gp_predict_n64", 100, 2000, || {
+            black_box(gp.predict(&q));
+        });
+        bench("expected_improvement", 100, 5000, || {
+            black_box(expected_improvement(0.7, 0.3, 0.6));
+        });
+    }
+
+    // objective Ψ evaluation (latency model + accuracy proxy + constraints)
+    let devices = DeviceProfile::paper_fleet();
+    let topo = Topology::star(3, Link::mbps(100.0), 1);
+    let caps = vec![DeviceCaps { max_flops: 1e12, max_memory: 1 << 34 }; 3];
+    let t = teacher();
+    let obj = Objective {
+        latency: LatencyModel {
+            devices: &devices,
+            topology: &topo,
+            predictors: None,
+            d_i: 64,
+            agg_rows: 4,
+        },
+        accuracy: AccuracyProxy::default_uncalibrated(),
+        teacher: &t,
+        caps: &caps,
+        delta: 20.0,
+        batch: 1,
+    };
+    let policy = DecompositionPolicy::new(vec![
+        SubModelCfg { layers: 2, dim: 24, heads: 1, mlp_dim: 48 },
+        SubModelCfg { layers: 3, dim: 32, heads: 1, mlp_dim: 64 },
+        SubModelCfg { layers: 3, dim: 40, heads: 2, mlp_dim: 80 },
+    ]);
+    bench("objective_evaluate", 100, 5000, || {
+        black_box(obj.evaluate(&policy));
+    });
+
+    // full search at the CLI's default budget (the offline-stage cost)
+    bench("debo_search_8init_16iter", 0, 3, || {
+        let s = DeBoSearch::new(DeBoConfig {
+            init_policies: 8,
+            iterations: 16,
+            candidates: 128,
+            ..Default::default()
+        });
+        black_box(s.run(&obj, 3).unwrap().best_psi);
+    });
+}

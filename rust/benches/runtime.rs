@@ -1,0 +1,100 @@
+//! Runtime (PJRT) hot-path benches: sub-model forward at batch 1 and 16,
+//! aggregator execution, masked-teacher execution, and parameter upload.
+//! These are the numbers behind the end-to-end serving latency — requires
+//! `make artifacts`.
+
+use coformer::data::Dataset;
+use coformer::metrics::bench::{bench, black_box};
+use coformer::runtime::engine::XBatch;
+use coformer::runtime::Engine;
+
+fn main() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("bench runtime: SKIPPED (run `make artifacts` first)");
+        return;
+    }
+    println!("== bench: PJRT runtime ==");
+    let engine = Engine::load(artifacts).expect("engine");
+    let m = engine.manifest().clone();
+    let task = m.task("edgenet").expect("task").clone();
+    let ds = Dataset::load(artifacts, &task.splits["test"]).expect("dataset");
+
+    let members = ["edgenet_tiny24", "edgenet_small32", "edgenet_med40"];
+    // warm compile everything first (deployment-time cost, not serving cost)
+    let t0 = std::time::Instant::now();
+    for name in members.iter().chain(["teacher_edgenet"].iter()) {
+        let meta = m.model(name).unwrap().clone();
+        for hlo in meta.hlo.values() {
+            engine.executable(hlo).unwrap();
+        }
+        engine.model_param_literals(name).unwrap();
+    }
+    println!("one-time compile+upload: {:.2} s", t0.elapsed().as_secs_f64());
+
+    let batch_of = |n: usize| {
+        let idx: Vec<usize> = (0..n).collect();
+        let mut shape = ds.x_shape.clone();
+        shape[0] = n;
+        XBatch::F32 { data: ds.gather_x_f32(&idx), shape }
+    };
+
+    for name in members {
+        let x1 = batch_of(1);
+        bench(&format!("{name}_fwd_b1"), 20, 300, || {
+            black_box(engine.run_model(name, &x1).unwrap().logits.len());
+        });
+        let x16 = batch_of(16);
+        bench(&format!("{name}_fwd_b16"), 10, 150, || {
+            black_box(engine.run_model(name, &x16).unwrap().logits.len());
+        });
+    }
+    {
+        let x16 = batch_of(16);
+        bench("teacher_edgenet_fwd_b16", 10, 100, || {
+            black_box(engine.run_model("teacher_edgenet", &x16).unwrap().logits.len());
+        });
+    }
+
+    // aggregator (Phase 3)
+    let x16 = batch_of(16);
+    let feats: Vec<(Vec<f32>, Vec<usize>)> = members
+        .iter()
+        .map(|name| {
+            let o = engine.run_model(name, &x16).unwrap();
+            (o.feats, o.feats_shape)
+        })
+        .collect();
+    bench("aggregator_mlp_b16", 20, 300, || {
+        black_box(
+            engine
+                .run_aggregator("edgenet_3dev", "mlp", &feats)
+                .unwrap()
+                .0
+                .len(),
+        );
+    });
+
+    // masked teacher (Fig 5 path)
+    let mask = vec![1.0f32; 16];
+    bench("masked_teacher_b16", 5, 60, || {
+        black_box(
+            engine
+                .run_masked("teacher_edgenet_masked", &x16, &mask)
+                .unwrap()
+                .logits
+                .len(),
+        );
+    });
+
+    // parameter upload cost (deployment path)
+    let meta = m.model("edgenet_med40").unwrap().clone();
+    bench("param_load_med40", 3, 30, || {
+        black_box(
+            engine
+                .load_param_literals(&meta.params, &meta.param_specs)
+                .unwrap()
+                .len(),
+        );
+    });
+}

@@ -1,0 +1,118 @@
+//! Strategy-simulation benches: one per paper table/figure family. These
+//! are the generators behind Figs 3/4/10/12 and Tables III/V — each bench
+//! measures regenerating one full figure's data points.
+
+use coformer::device::DeviceProfile;
+use coformer::metrics::bench::{bench, black_box};
+use coformer::model::{Arch, CostModel, Mode, SubModelCfg};
+use coformer::net::{Link, Topology};
+use coformer::strategies::{self, Segment};
+
+fn deit_b() -> Arch {
+    let mut a = Arch::uniform(Mode::Patch, 12, 768, 64, 12, 3072, 1000);
+    a.img_size = 224;
+    a.patch_size = 16;
+    a
+}
+
+fn subs() -> Vec<Arch> {
+    let t = deit_b();
+    vec![
+        SubModelCfg { layers: 6, dim: 192, heads: 3, mlp_dim: 768 }.to_arch(&t),
+        SubModelCfg { layers: 8, dim: 256, heads: 4, mlp_dim: 1024 }.to_arch(&t),
+        SubModelCfg { layers: 10, dim: 320, heads: 5, mlp_dim: 1280 }.to_arch(&t),
+    ]
+}
+
+fn main() {
+    println!("== bench: strategies (figure generators) ==");
+    let fleet = DeviceProfile::paper_fleet();
+    let topo = Topology::star(3, Link::mbps(100.0), 1);
+    let s = subs();
+    let t_flops = CostModel::flops_per_sample(&deit_b());
+
+    bench("coformer_step (fig9/10/12 rows)", 10, 1000, || {
+        black_box(strategies::coformer(&fleet, &topo, &s, 512, 1).unwrap().total_s);
+    });
+
+    let seg = |l: f64| Segment {
+        flops: t_flops / 12.0 * l,
+        activation_bytes: 197 * 768 * 4,
+        memory_bytes: 1 << 28,
+    };
+    bench("pipe_edge (fig3 row)", 10, 1000, || {
+        black_box(
+            strategies::pipe_edge(&fleet, &topo, &[seg(3.0), seg(3.0), seg(6.0)])
+                .unwrap()
+                .idle_fraction(),
+        );
+    });
+
+    bench("tensor_parallel 12 layers (fig4/10)", 10, 500, || {
+        black_box(
+            strategies::tensor_parallel(
+                "galaxy",
+                &fleet,
+                &topo,
+                t_flops,
+                12,
+                197 * 768 * 4 / 3,
+                2.0,
+                1 << 28,
+            )
+            .unwrap()
+            .total_s,
+        );
+    });
+
+    bench("ensemble (fig6)", 10, 1000, || {
+        black_box(
+            strategies::ensemble(
+                "devit",
+                &fleet,
+                &topo,
+                &[t_flops / 3.0; 3],
+                &[1 << 28; 3],
+                4000,
+            )
+            .unwrap()
+            .total_s,
+        );
+    });
+
+    // full Fig-12 sweep (3 bandwidths × 4 methods)
+    bench("fig12_full_sweep", 2, 100, || {
+        for mbps in [100.0, 500.0, 1000.0] {
+            let topo = Topology::star(3, Link::mbps(mbps), 1);
+            black_box(strategies::coformer(&fleet, &topo, &s, 512, 1).unwrap().total_s);
+            black_box(
+                strategies::tensor_parallel(
+                    "g",
+                    &fleet,
+                    &topo,
+                    t_flops,
+                    12,
+                    197 * 768 * 4 / 3,
+                    2.0,
+                    1 << 28,
+                )
+                .unwrap()
+                .total_s,
+            );
+            black_box(
+                strategies::pipe_edge(&fleet, &topo, &[seg(3.0), seg(3.0), seg(6.0)])
+                    .unwrap()
+                    .total_s,
+            );
+        }
+    });
+
+    // cost-model analytics (called inside every policy evaluation)
+    let arch = subs()[2].clone();
+    bench("flops_per_sample", 100, 10000, || {
+        black_box(CostModel::flops_per_sample(&arch));
+    });
+    bench("memory_bytes", 100, 10000, || {
+        black_box(CostModel::memory_bytes(&arch, 16));
+    });
+}

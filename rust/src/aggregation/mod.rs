@@ -1,0 +1,148 @@
+//! Result aggregation at the central node.
+//!
+//! The CoFormer aggregator (Eq. 2 MLP) and the learned Table-IV baselines
+//! (attention, SENet) execute as AOT artifacts via [`crate::runtime`]; this
+//! module implements the *training-free* ensemble baselines — model
+//! averaging and majority voting [30] — which operate on member logits
+//! directly, plus the shared softmax helper.
+
+/// Softmax one logits row in place.
+pub fn softmax(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Model averaging [30]: mean of member class probabilities.
+/// `members[k]` is `(rows × classes)` logits; returns fused probabilities.
+pub fn average(members: &[Vec<f32>], rows: usize, classes: usize) -> Vec<f32> {
+    assert!(!members.is_empty());
+    for m in members {
+        assert_eq!(m.len(), rows * classes);
+    }
+    let mut out = vec![0.0f32; rows * classes];
+    for m in members {
+        for r in 0..rows {
+            let mut p = m[r * classes..(r + 1) * classes].to_vec();
+            softmax(&mut p);
+            for (o, v) in out[r * classes..(r + 1) * classes].iter_mut().zip(&p) {
+                *o += v / members.len() as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Weighted averaging (the paper's Fig. 6 "Ens" uses weighted averages).
+pub fn weighted_average(
+    members: &[Vec<f32>],
+    weights: &[f32],
+    rows: usize,
+    classes: usize,
+) -> Vec<f32> {
+    assert_eq!(members.len(), weights.len());
+    let wsum: f32 = weights.iter().sum();
+    let mut out = vec![0.0f32; rows * classes];
+    for (m, &w) in members.iter().zip(weights) {
+        for r in 0..rows {
+            let mut p = m[r * classes..(r + 1) * classes].to_vec();
+            softmax(&mut p);
+            for (o, v) in out[r * classes..(r + 1) * classes].iter_mut().zip(&p) {
+                *o += v * w / wsum;
+            }
+        }
+    }
+    out
+}
+
+/// Majority voting [30]: per row, the class most members predict.
+/// Ties break toward the lower class index (deterministic).
+pub fn majority_vote(members: &[Vec<f32>], rows: usize, classes: usize) -> Vec<usize> {
+    assert!(!members.is_empty());
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut votes = vec![0usize; classes];
+        for m in members {
+            let row = &m[r * classes..(r + 1) * classes];
+            votes[crate::metrics::argmax(row)] += 1;
+        }
+        out.push(crate::metrics::argmax(
+            &votes.iter().map(|&v| v as f32).collect::<Vec<_>>(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        softmax(&mut row);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut row = vec![1000.0f32, 0.0];
+        softmax(&mut row);
+        assert!(row.iter().all(|v| v.is_finite()));
+        assert!((row[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn average_of_identical_members_is_member() {
+        let m = vec![0.0f32, 2.0, 1.0, -1.0]; // 2 rows × 2 classes
+        let fused = average(&[m.clone(), m.clone()], 2, 2);
+        let mut expect = m.clone();
+        softmax(&mut expect[0..2]);
+        softmax(&mut expect[2..4]);
+        for (a, b) in fused.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn average_fuses_complementary_confidence() {
+        // member A confident class0 on row0, uniform row1; B the reverse
+        let a = vec![5.0f32, 0.0, 0.0, 0.0];
+        let b = vec![0.0f32, 0.0, 0.0, 5.0];
+        let fused = average(&[a, b], 2, 2);
+        assert!(fused[0] > fused[1]); // row0 → class0
+        assert!(fused[3] > fused[2]); // row1 → class1
+    }
+
+    #[test]
+    fn weighted_average_respects_weights() {
+        let a = vec![5.0f32, 0.0];
+        let b = vec![0.0f32, 5.0];
+        let fused = weighted_average(&[a, b], &[0.9, 0.1], 1, 2);
+        assert!(fused[0] > fused[1]);
+    }
+
+    #[test]
+    fn majority_vote_basic() {
+        // two members say class1, one says class0
+        let m1 = vec![0.0f32, 1.0];
+        let m2 = vec![0.1f32, 1.0];
+        let m3 = vec![1.0f32, 0.0];
+        assert_eq!(majority_vote(&[m1, m2, m3], 1, 2), vec![1]);
+    }
+
+    #[test]
+    fn majority_vote_tie_breaks_low() {
+        let m1 = vec![1.0f32, 0.0];
+        let m2 = vec![0.0f32, 1.0];
+        assert_eq!(majority_vote(&[m1, m2], 1, 2), vec![0]);
+    }
+}

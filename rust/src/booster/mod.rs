@@ -1,0 +1,304 @@
+//! The *booster* — Algorithm 1 lines 12–15: progressively boosting
+//! distillation, driven entirely from rust over AOT train-step artifacts.
+//!
+//! Each sub-model is calibrated in sequence against the teacher's hard
+//! decisions with the Eq. 14 objective; after each member, the training-set
+//! sample weights are updated per Eq. 13 from that member's per-sample
+//! distillation losses.  The train step itself (loss + grads + Adam) is a
+//! single HLO executable exported by `python/compile/aot.py`; rust owns the
+//! loop, the optimizer state and the boosting weights — Python is not
+//! involved at calibration time.
+
+use xla::Literal;
+
+use crate::data::Dataset;
+use crate::runtime::engine::{literal_to_f32, Engine, XBatch};
+use crate::util::Rng;
+use crate::Result;
+
+/// Calibration hyperparameters.
+#[derive(Clone, Debug)]
+pub struct BoostConfig {
+    /// Distillation steps per sub-model.
+    pub steps: usize,
+    pub seed: u64,
+    /// Report loss every `log_every` steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for BoostConfig {
+    fn default() -> Self {
+        BoostConfig { steps: 120, seed: 0, log_every: 0 }
+    }
+}
+
+/// Per-member calibration report.
+#[derive(Clone, Debug)]
+pub struct MemberReport {
+    pub model: String,
+    pub first_loss: f64,
+    pub last_loss: f64,
+    pub mean_per_sample_loss: f64,
+}
+
+/// Runs Alg. 1 lines 12–15 for one deployment.
+pub struct Booster<'e> {
+    pub engine: &'e Engine,
+    pub config: BoostConfig,
+}
+
+impl<'e> Booster<'e> {
+    pub fn new(engine: &'e Engine, config: BoostConfig) -> Self {
+        Booster { engine, config }
+    }
+
+    /// Teacher hard decisions `y_t` over the training set (batched).
+    pub fn teacher_hard(&self, teacher: &str, ds: &Dataset, is_patch: bool) -> Result<Vec<i32>> {
+        let classes = self
+            .engine
+            .manifest()
+            .model(teacher)?
+            .arch
+            .num_classes;
+        let mut out = Vec::with_capacity(ds.len());
+        let b = self.engine.manifest().eval_batch;
+        let mut i = 0;
+        while i < ds.len() {
+            let idx: Vec<usize> = (i..(i + b).min(ds.len())).collect();
+            let x = make_batch(ds, &idx, is_patch);
+            let o = self.engine.run_model(teacher, &x)?;
+            for r in 0..idx.len() {
+                let row = &o.logits[r * classes..(r + 1) * classes];
+                out.push(crate::metrics::argmax(row) as i32);
+            }
+            i += b;
+        }
+        Ok(out)
+    }
+
+    /// Per-sample Eq. 14 loss of `model` (current `params`) over the set.
+    fn per_sample_loss(
+        &self,
+        model: &str,
+        params: &[Literal],
+        ds: &Dataset,
+        y_t: &[i32],
+        is_patch: bool,
+    ) -> Result<Vec<f64>> {
+        let classes = self.engine.manifest().model(model)?.arch.num_classes;
+        let b = self.engine.manifest().eval_batch;
+        let mut out = Vec::with_capacity(ds.len());
+        let mut i = 0;
+        while i < ds.len() {
+            let idx: Vec<usize> = (i..(i + b).min(ds.len())).collect();
+            let x = make_batch(ds, &idx, is_patch);
+            let o = self.engine.run_model_with_params(model, params, &x)?;
+            for (r, &s) in idx.iter().enumerate() {
+                let row = &o.logits[r * classes..(r + 1) * classes];
+                let y = ds.y[s] as usize;
+                let yt = y_t[s] as usize;
+                out.push(0.5 * (ce(row, y) + ce(row, yt)));
+            }
+            i += b;
+        }
+        Ok(out)
+    }
+
+    /// Calibrate every member of `deployment` in order; returns reports.
+    pub fn calibrate_deployment(&self, deployment: &str) -> Result<Vec<MemberReport>> {
+        let dep = self.engine.manifest().deployment(deployment)?.clone();
+        let task = self.engine.manifest().task(&dep.task)?.clone();
+        let is_patch = task.mode == "patch";
+        let root = self.engine.artifacts_root().to_path_buf();
+        let train = Dataset::load(&root, &task.splits["train"])?;
+        let y_t = self.teacher_hard(&task.teacher, &train, is_patch)?;
+
+        // line 12: uniform sample weights (mean 1)
+        let mut weights = vec![1.0f64; train.len()];
+        let mut reports = Vec::new();
+        for member in &dep.members {
+            let rep = self.calibrate_member(member, &train, &y_t, &weights, is_patch)?;
+            // line 15 / Eq. 13: re-weight from this member's per-sample loss
+            let params = self.current_params(member)?;
+            let losses = self.per_sample_loss(member, &params, &train, &y_t, is_patch)?;
+            update_weights(&mut weights, &losses);
+            reports.push(rep);
+        }
+        Ok(reports)
+    }
+
+    fn current_params(&self, model: &str) -> Result<Vec<Literal>> {
+        let meta = self.engine.manifest().model(model)?.clone();
+        self.engine.load_param_literals(&meta.params, &meta.param_specs)
+    }
+
+    /// Calibrate one member (line 14): iterate the AOT train step.
+    pub fn calibrate_member(
+        &self,
+        model: &str,
+        train: &Dataset,
+        y_t: &[i32],
+        weights: &[f64],
+        is_patch: bool,
+    ) -> Result<MemberReport> {
+        let manifest = self.engine.manifest();
+        let ts = manifest
+            .train_steps
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("no train-step artifact for {model}"))?
+            .clone();
+        let meta = manifest.model(model)?.clone();
+        let exe = self.engine.executable(&ts.hlo)?;
+        let n_params = meta.param_specs.len();
+        let batch = ts.batch;
+
+        // state: params (resume from deployed weights), zeroed Adam moments
+        let mut params = self.current_params(model)?;
+        let mut m: Vec<Literal> = meta
+            .param_specs
+            .iter()
+            .map(|(_, s)| zeros_literal(s))
+            .collect::<Result<_>>()?;
+        let mut v: Vec<Literal> = meta
+            .param_specs
+            .iter()
+            .map(|(_, s)| zeros_literal(s))
+            .collect::<Result<_>>()?;
+
+        let mut rng = Rng::seed_from_u64(self.config.seed);
+        let mut first_loss = f64::NAN;
+        let mut last_loss = f64::NAN;
+        for step in 1..=self.config.steps {
+            let idx: Vec<usize> = rng.sample_indices(train.len(), batch);
+            let x = make_batch(train, &idx, is_patch).to_literal(batch)?;
+            let y = Literal::vec1(&train.gather_y(&idx));
+            let yt_b: Vec<i32> = idx.iter().map(|&i| y_t[i]).collect();
+            let yt = Literal::vec1(&yt_b);
+            let w_b: Vec<f32> = idx.iter().map(|&i| weights[i] as f32).collect();
+            let w = Literal::vec1(&w_b);
+            let step_lit = Literal::scalar(step as f32);
+
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n_params + 5);
+            inputs.extend(params.iter());
+            inputs.extend(m.iter());
+            inputs.extend(v.iter());
+            inputs.push(&step_lit);
+            inputs.push(&x);
+            inputs.push(&y);
+            inputs.push(&yt);
+            inputs.push(&w);
+            let result = exe.execute(&inputs)?;
+            let tuple = result[0][0].to_literal_sync()?;
+            let mut parts = tuple.to_tuple()?;
+            anyhow::ensure!(parts.len() == 3 * n_params + 1, "train step arity mismatch");
+            let loss_lit = parts.pop().unwrap();
+            let (loss_v, _) = literal_to_f32(&loss_lit)?;
+            let loss = loss_v[0] as f64;
+            if step == 1 {
+                first_loss = loss;
+            }
+            last_loss = loss;
+            if self.config.log_every > 0 && step % self.config.log_every == 0 {
+                println!("  [booster] {model} step {step}: loss {loss:.4}");
+            }
+            v = parts.split_off(2 * n_params);
+            m = parts.split_off(n_params);
+            params = parts;
+        }
+
+        let losses = self.per_sample_loss(model, &params, train, y_t, is_patch)?;
+        let mean = losses.iter().sum::<f64>() / losses.len() as f64;
+        Ok(MemberReport {
+            model: model.to_string(),
+            first_loss,
+            last_loss,
+            mean_per_sample_loss: mean,
+        })
+    }
+}
+
+/// Eq. 13: `w_i ← w_i · exp[(1/M − 1)·L_i]`, renormalized to mean 1 (mirrors
+/// `python/compile/train.py::boost_weight_update`).
+pub fn update_weights(weights: &mut [f64], per_sample_loss: &[f64]) {
+    let m = weights.len() as f64;
+    for (w, &l) in weights.iter_mut().zip(per_sample_loss) {
+        *w *= ((1.0 / m - 1.0) * l).exp();
+    }
+    let sum: f64 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w *= m / sum;
+    }
+}
+
+/// Cross entropy of one logits row against a label.
+fn ce(row: &[f32], label: usize) -> f64 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let denom: f64 = row.iter().map(|&v| ((v as f64) - m).exp()).sum();
+    -(((row[label] as f64) - m) - denom.ln())
+}
+
+fn make_batch(ds: &Dataset, idx: &[usize], is_patch: bool) -> XBatch {
+    let mut shape = ds.x_shape.clone();
+    shape[0] = idx.len();
+    if is_patch {
+        XBatch::F32 { data: ds.gather_x_f32(idx), shape }
+    } else {
+        XBatch::I32 { data: ds.gather_x_i32(idx), shape }
+    }
+}
+
+fn zeros_literal(shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(Literal::vec1(&vec![0.0f32; n]).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ce_matches_closed_form() {
+        // uniform logits over 4 classes → ln 4
+        let row = [0.0f32; 4];
+        assert!((ce(&row, 2) - 4f64.ln()).abs() < 1e-9);
+        // confident correct → ~0
+        let row = [100.0f32, 0.0, 0.0, 0.0];
+        assert!(ce(&row, 0) < 1e-6);
+    }
+
+    #[test]
+    fn weight_update_mean_stays_one() {
+        let mut w = vec![1.0; 50];
+        let losses: Vec<f64> = (0..50).map(|i| i as f64 / 10.0).collect();
+        update_weights(&mut w, &losses);
+        let mean = w.iter().sum::<f64>() / 50.0;
+        assert!((mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_update_prefers_low_loss() {
+        let mut w = vec![1.0; 10];
+        let losses: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        update_weights(&mut w, &losses);
+        for pair in w.windows(2) {
+            assert!(pair[0] > pair[1]);
+        }
+        assert!(w.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn uniform_losses_keep_uniform_weights() {
+        let mut w = vec![1.0; 8];
+        update_weights(&mut w, &vec![1.3; 8]);
+        for &x in &w {
+            assert!((x - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zeros_literal_shape() {
+        let l = zeros_literal(&[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![0.0; 6]);
+    }
+}

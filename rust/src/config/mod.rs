@@ -1,0 +1,188 @@
+//! System configuration: the fleet, network, deployment and serving knobs —
+//! loadable from JSON for the CLI/launcher.
+
+use std::path::Path;
+
+use crate::device::DeviceProfile;
+use crate::net::{Link, Topology};
+use crate::util::Json;
+use crate::Result;
+
+/// Named device presets or a fully custom profile.
+#[derive(Clone, Debug)]
+pub enum DeviceSpec {
+    /// "jetson-nano" | "jetson-tx2" | "jetson-orin-nano" | "rpi-4b"
+    Preset(String),
+    Custom(DeviceProfile),
+}
+
+impl DeviceSpec {
+    pub fn resolve(&self) -> Result<DeviceProfile> {
+        match self {
+            DeviceSpec::Custom(p) => Ok(p.clone()),
+            DeviceSpec::Preset(name) => preset(name),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        match v {
+            Json::Str(name) => Ok(DeviceSpec::Preset(name.clone())),
+            Json::Obj(_) => Ok(DeviceSpec::Custom(DeviceProfile::from_json(v)?)),
+            other => anyhow::bail!("device spec must be a preset string or object, got {other:?}"),
+        }
+    }
+}
+
+/// Resolve a preset device name.
+pub fn preset(name: &str) -> Result<DeviceProfile> {
+    match name {
+        "jetson-nano" => Ok(DeviceProfile::jetson_nano()),
+        "jetson-tx2" => Ok(DeviceProfile::jetson_tx2()),
+        "jetson-orin-nano" => Ok(DeviceProfile::jetson_orin_nano()),
+        "rpi-4b" => Ok(DeviceProfile::rpi4()),
+        other => anyhow::bail!("unknown device preset {other}"),
+    }
+}
+
+/// Full system configuration.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Artifacts directory (manifest + HLO + params + data).
+    pub artifacts: String,
+    /// Edge fleet; index order matches deployment member order.
+    pub devices: Vec<DeviceSpec>,
+    /// Link bandwidth, Mb/s (the `tc` knob).
+    pub bandwidth_mbps: f64,
+    /// One-way link latency, ms.
+    pub link_latency_ms: f64,
+    /// Index of the central node.
+    pub central: usize,
+    /// Deployment to serve (a manifest key, e.g. "edgenet_3dev").
+    pub deployment: String,
+    /// Aggregator kind ("mlp" | "attn" | "senet" | "det" | "average" | "vote").
+    pub aggregator: String,
+    /// Dynamic-batcher max batch.
+    pub max_batch: usize,
+    /// Dynamic-batcher max queueing delay, ms.
+    pub max_wait_ms: u64,
+    /// DeBo balance hyperparameter δ.
+    pub delta: f64,
+}
+
+impl SystemConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let devices = v
+            .req("devices")?
+            .as_arr()?
+            .iter()
+            .map(DeviceSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!devices.is_empty(), "config needs at least one device");
+        let opt_f64 = |key: &str, d: f64| -> Result<f64> {
+            v.get(key).map(|x| x.as_f64()).transpose().map(|o| o.unwrap_or(d))
+        };
+        let opt_usize = |key: &str, d: usize| -> Result<usize> {
+            v.get(key).map(|x| x.as_usize()).transpose().map(|o| o.unwrap_or(d))
+        };
+        let opt_str = |key: &str, d: &str| -> Result<String> {
+            Ok(v.get(key)
+                .map(|x| x.as_str())
+                .transpose()?
+                .unwrap_or(d)
+                .to_string())
+        };
+        let c = SystemConfig {
+            artifacts: opt_str("artifacts", "artifacts")?,
+            devices,
+            bandwidth_mbps: opt_f64("bandwidth_mbps", 100.0)?,
+            link_latency_ms: opt_f64("link_latency_ms", 1.0)?,
+            central: opt_usize("central", 0)?,
+            deployment: v.req("deployment")?.as_str()?.to_string(),
+            aggregator: opt_str("aggregator", "mlp")?,
+            max_batch: opt_usize("max_batch", 16)?,
+            max_wait_ms: opt_usize("max_wait_ms", 5)? as u64,
+            delta: opt_f64("delta", 20.0)?,
+        };
+        anyhow::ensure!(c.central < c.devices.len(), "central index out of range");
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// The paper's default 3-Jetson testbed serving edgenet_3dev.
+    pub fn paper_default() -> Self {
+        SystemConfig {
+            artifacts: "artifacts".into(),
+            devices: vec![
+                DeviceSpec::Preset("jetson-nano".into()),
+                DeviceSpec::Preset("jetson-tx2".into()),
+                DeviceSpec::Preset("jetson-orin-nano".into()),
+            ],
+            bandwidth_mbps: 100.0,
+            link_latency_ms: 1.0,
+            central: 1, // TX2, the strongest device
+            deployment: "edgenet_3dev".into(),
+            aggregator: "mlp".into(),
+            max_batch: 16,
+            max_wait_ms: 5,
+            delta: 20.0,
+        }
+    }
+
+    pub fn resolve_devices(&self) -> Result<Vec<DeviceProfile>> {
+        self.devices.iter().map(|d| d.resolve()).collect()
+    }
+
+    pub fn topology(&self) -> Topology {
+        Topology::star(
+            self.devices.len(),
+            Link::new(self.bandwidth_mbps * 1e6, self.link_latency_ms / 1e3),
+            self.central,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_resolves() {
+        let c = SystemConfig::paper_default();
+        let devs = c.resolve_devices().unwrap();
+        assert_eq!(devs.len(), 3);
+        assert_eq!(devs[1].name, "jetson-tx2");
+        assert_eq!(c.topology().central, 1);
+    }
+
+    #[test]
+    fn json_with_presets_and_custom() {
+        let json = r#"{
+          "devices": ["jetson-nano", {"name":"custom","memory_bytes":1073741824,
+            "peak_gflops":100.0,"efficiency":0.2,"active_power_w":5.0,
+            "idle_power_w":1.0,"cost_usd":10.0}],
+          "deployment": "edgenet_2dev"
+        }"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        let devs = c.resolve_devices().unwrap();
+        assert_eq!(devs[0].name, "jetson-nano");
+        assert_eq!(devs[1].name, "custom");
+        assert_eq!(c.bandwidth_mbps, 100.0); // default applied
+        assert_eq!(c.max_batch, 16);
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        let spec = DeviceSpec::Preset("quantum-board".into());
+        assert!(spec.resolve().is_err());
+    }
+
+    #[test]
+    fn central_out_of_range_rejected() {
+        let json = r#"{"devices":["jetson-nano"],"central":3,"deployment":"x"}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Dynamic batcher: greedily coalesces queued requests up to `max_batch`,
+//! waiting at most `max_wait` after the first arrival — the standard
+//! serving trade-off between batching efficiency and queueing latency.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::{InferenceRequest, LeaderMsg};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Pulls from the request channel and forms batches.
+pub struct Batcher {
+    rx: mpsc::Receiver<LeaderMsg>,
+    config: BatcherConfig,
+    closed: bool,
+}
+
+impl Batcher {
+    pub fn new(rx: mpsc::Receiver<LeaderMsg>, config: BatcherConfig) -> Self {
+        assert!(config.max_batch >= 1);
+        Batcher { rx, config, closed: false }
+    }
+
+    /// Next batch, or `None` once a shutdown message arrived (any batch in
+    /// flight at that moment is flushed first) or the channel closed.
+    pub fn next_batch(&mut self) -> Option<Vec<InferenceRequest>> {
+        if self.closed {
+            return None;
+        }
+        // block for the first request
+        let first = loop {
+            match self.rx.recv().ok()? {
+                LeaderMsg::Request(r) => break r,
+                LeaderMsg::Shutdown => {
+                    self.closed = true;
+                    return None;
+                }
+            }
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.config.max_wait;
+        while batch.len() < self.config.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(LeaderMsg::Request(req)) => batch.push(req),
+                Ok(LeaderMsg::Shutdown) => {
+                    self.closed = true; // flush this batch, then stop
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break, // ship partial
+                Err(mpsc::RecvTimeoutError::Disconnected) => break, // flush
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{InferenceResponse, RequestPayload};
+
+    type ReplyRx = mpsc::Receiver<crate::Result<InferenceResponse>>;
+
+    fn req() -> (LeaderMsg, ReplyRx) {
+        let (reply, rx) = mpsc::sync_channel(1);
+        (
+            LeaderMsg::Request(InferenceRequest { x: RequestPayload::F32(vec![0.0]), reply }),
+            rx,
+        )
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::sync_channel(64);
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(50) },
+        );
+        let mut keeps = Vec::new();
+        for _ in 0..6 {
+            let (r, keep) = req();
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        assert_eq!(b.next_batch().unwrap().len(), 4);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn flushes_partial_on_deadline() {
+        let (tx, rx) = mpsc::sync_channel(64);
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(10) },
+        );
+        let (r, _keep) = req();
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn returns_none_when_closed() {
+        let (tx, rx) = mpsc::sync_channel::<LeaderMsg>(4);
+        drop(tx);
+        let mut b = Batcher::new(rx, BatcherConfig::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn shutdown_message_flushes_then_stops() {
+        let (tx, rx) = mpsc::sync_channel(8);
+        let (r, _keep) = req();
+        tx.send(r).unwrap();
+        tx.send(LeaderMsg::Shutdown).unwrap();
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(200) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        // shutdown short-circuits the wait window
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let (tx, rx) = mpsc::sync_channel(4);
+        let (r, _keep) = req();
+        tx.send(r).unwrap();
+        drop(tx);
+        let mut b = Batcher::new(rx, BatcherConfig::default());
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn single_request_batch_when_max_is_one() {
+        let (tx, rx) = mpsc::sync_channel(4);
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(100) },
+        );
+        let (r, _keep) = req();
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        // must NOT wait for the deadline when max_batch already reached
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,432 @@
+//! The L3 serving coordinator — CoFormer's inference stage (§III-A(iii)).
+//!
+//! A leader thread owns request intake and the dynamic [`batcher`]; one
+//! persistent worker thread per edge device runs that device's sub-model
+//! (numerics via the PJRT [`ExecHandle`], timing via its device profile)
+//! and ships features to the central node exactly once per batch; the
+//! leader aggregates (Eq. 2 artifact or a training-free combiner) and
+//! resolves the per-request replies with the *virtual* edge-fleet latency
+//! (what the paper measures on Jetsons) alongside host wall time.
+
+pub mod batcher;
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::aggregation;
+use crate::config::SystemConfig;
+use crate::device::DeviceProfile;
+use crate::metrics::LatencyStats;
+use crate::model::{Arch, CostModel};
+use crate::net::Topology;
+use crate::runtime::engine::XBatch;
+use crate::runtime::manifest::DeploymentMeta;
+use crate::runtime::ExecHandle;
+use crate::Result;
+pub use batcher::{Batcher, BatcherConfig};
+
+/// One inference request: a single sample.
+pub struct InferenceRequest {
+    pub x: RequestPayload,
+    pub reply: mpsc::SyncSender<Result<InferenceResponse>>,
+}
+
+/// Message to the leader: a request, or an explicit shutdown (handles may
+/// outlive the coordinator, so channel closure alone cannot signal stop).
+pub enum LeaderMsg {
+    Request(InferenceRequest),
+    Shutdown,
+}
+
+/// One sample's input data.
+#[derive(Clone, Debug)]
+pub enum RequestPayload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Response to one request.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub logits: Vec<f32>,
+    /// Predicted class (argmax; for det tasks argmax per token is in logits).
+    pub prediction: usize,
+    /// Virtual end-to-end latency on the simulated edge fleet (Eq. 3).
+    pub virtual_latency_s: f64,
+    /// Fleet energy for this request (batch energy amortized per sample).
+    pub energy_j: f64,
+    /// Batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub virtual_latency: LatencyStats,
+    pub wall_latency: LatencyStats,
+    pub batches: usize,
+    pub requests: usize,
+    pub total_energy_j: f64,
+}
+
+/// Coordinator handle: submit requests, receive responses.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: mpsc::SyncSender<LeaderMsg>,
+}
+
+impl CoordinatorHandle {
+    /// Submit one request and block for its response.
+    pub fn infer(&self, x: RequestPayload) -> Result<InferenceResponse> {
+        let rx = self.submit(x)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped reply"))?
+    }
+
+    /// Submit without blocking; returns the reply channel (lets callers
+    /// pipeline many requests so the batcher can coalesce them).
+    pub fn submit(
+        &self,
+        x: RequestPayload,
+    ) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(LeaderMsg::Request(InferenceRequest { x, reply }))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(rx)
+    }
+}
+
+/// Per-device worker context.
+struct MemberCtx {
+    model: String,
+    arch: Arch,
+    device: DeviceProfile,
+    flops_per_sample: f64,
+}
+
+/// Work sent to a device worker for one batch.
+struct WorkerJob {
+    x: XBatch,
+    reply: mpsc::SyncSender<Result<WorkerResult>>,
+}
+
+struct WorkerResult {
+    feats: Vec<f32>,
+    feats_shape: Vec<usize>,
+    logits: Vec<f32>,
+    /// Virtual arrival time of this device's features at the central node.
+    arrive_s: f64,
+    energy_j: f64,
+}
+
+/// The leader. Construct with [`Coordinator::start`], submit via the handle,
+/// then [`Coordinator::shutdown`] to collect final stats.
+pub struct Coordinator {
+    handle: CoordinatorHandle,
+    join: JoinHandle<ServeStats>,
+    worker_joins: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the leader + per-device worker threads.
+    pub fn start(
+        config: SystemConfig,
+        exec: ExecHandle,
+        deployment: DeploymentMeta,
+        archs: Vec<Arch>,
+        x_stride: usize,
+    ) -> Result<Self> {
+        let devices = config.resolve_devices()?;
+        anyhow::ensure!(
+            devices.len() == deployment.members.len(),
+            "fleet size {} != deployment members {}",
+            devices.len(),
+            deployment.members.len()
+        );
+        let topo = config.topology();
+        let members: Vec<MemberCtx> = deployment
+            .members
+            .iter()
+            .zip(&archs)
+            .zip(&devices)
+            .map(|((m, a), d)| MemberCtx {
+                model: m.clone(),
+                arch: a.clone(),
+                device: d.clone(),
+                flops_per_sample: CostModel::flops_per_sample(a),
+            })
+            .collect();
+
+        // Spawn one worker thread per device. Each worker computes its own
+        // virtual Phase-1/Phase-2 timing and energy for the batch it runs.
+        let mut worker_txs = Vec::with_capacity(members.len());
+        let mut worker_joins = Vec::with_capacity(members.len());
+        for (i, m) in members.iter().enumerate() {
+            let (jtx, jrx) = mpsc::channel::<WorkerJob>();
+            let exec = exec.clone();
+            let model = m.model.clone();
+            let device = m.device.clone();
+            let flops = m.flops_per_sample;
+            let feat_bytes_per_sample = m.arch.feature_bytes();
+            let t2_of = topo.links[i];
+            let is_central = i == topo.central;
+            let join = std::thread::Builder::new()
+                .name(format!("coformer-dev{i}"))
+                .spawn(move || {
+                    while let Ok(job) = jrx.recv() {
+                        let n = job.x.rows();
+                        let result = (|| {
+                            let out = exec.run_model(&model, job.x)?;
+                            let t1 = device.compute_time_s(flops * n as f64);
+                            let t2 = if is_central {
+                                0.0
+                            } else {
+                                t2_of.transfer_time_s(feat_bytes_per_sample * n)
+                            };
+                            let energy = (device.active_power_w - device.idle_power_w)
+                                * (t1 + t2);
+                            Ok(WorkerResult {
+                                feats: out.feats,
+                                feats_shape: out.feats_shape,
+                                logits: out.logits,
+                                arrive_s: t1 + t2,
+                                energy_j: energy,
+                            })
+                        })();
+                        let _ = job.reply.send(result);
+                    }
+                })?;
+            worker_txs.push(jtx);
+            worker_joins.push(join);
+        }
+
+        let (tx, rx) = mpsc::sync_channel::<LeaderMsg>(1024);
+        let batcher_cfg = BatcherConfig {
+            max_batch: config.max_batch,
+            max_wait: std::time::Duration::from_millis(config.max_wait_ms),
+        };
+        let leader = Leader { exec, deployment, members, topo, config, x_stride, worker_txs };
+        let join = std::thread::Builder::new()
+            .name("coformer-leader".into())
+            .spawn(move || leader.run(rx, batcher_cfg))?;
+        Ok(Coordinator { handle: CoordinatorHandle { tx }, join, worker_joins })
+    }
+
+    pub fn handle(&self) -> CoordinatorHandle {
+        self.handle.clone()
+    }
+
+    /// Stop accepting work and return the final statistics. Outstanding
+    /// handle clones become inert (sends fail) once the leader exits.
+    pub fn shutdown(self) -> Result<ServeStats> {
+        let _ = self.handle.tx.send(LeaderMsg::Shutdown);
+        drop(self.handle);
+        let stats = self
+            .join
+            .join()
+            .map_err(|_| anyhow::anyhow!("leader thread panicked"))?;
+        for j in self.worker_joins {
+            let _ = j.join();
+        }
+        Ok(stats)
+    }
+}
+
+struct Leader {
+    exec: ExecHandle,
+    deployment: DeploymentMeta,
+    members: Vec<MemberCtx>,
+    topo: Topology,
+    config: SystemConfig,
+    x_stride: usize,
+    worker_txs: Vec<mpsc::Sender<WorkerJob>>,
+}
+
+impl Leader {
+    fn run(self, rx: mpsc::Receiver<LeaderMsg>, batcher_cfg: BatcherConfig) -> ServeStats {
+        let mut stats = ServeStats::default();
+        let mut batcher = Batcher::new(rx, batcher_cfg);
+        while let Some(batch) = batcher.next_batch() {
+            let wall_start = std::time::Instant::now();
+            let n = batch.len();
+            match self.serve_batch(&batch) {
+                Ok((responses, virtual_s, energy_j)) => {
+                    stats.batches += 1;
+                    stats.requests += n;
+                    stats.total_energy_j += energy_j;
+                    let wall = wall_start.elapsed().as_secs_f64();
+                    for _ in 0..n {
+                        stats.virtual_latency.record_s(virtual_s);
+                        stats.wall_latency.record_s(wall);
+                    }
+                    for (req, resp) in batch.into_iter().zip(responses) {
+                        let _ = req.reply.send(Ok(resp));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for req in batch {
+                        let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        stats
+    }
+
+    /// Serve one batch through the 3-phase CoFormer workflow.
+    fn serve_batch(
+        &self,
+        batch: &[InferenceRequest],
+    ) -> Result<(Vec<InferenceResponse>, f64, f64)> {
+        let n = batch.len();
+        let x = self.stack(batch)?;
+
+        // Phase 1+2: fan the batch out to every device worker.
+        let mut replies = Vec::with_capacity(self.members.len());
+        for wtx in &self.worker_txs {
+            let (rtx, rrx) = mpsc::sync_channel(1);
+            wtx.send(WorkerJob { x: x.clone(), reply: rtx })
+                .map_err(|_| anyhow::anyhow!("device worker gone"))?;
+            replies.push(rrx);
+        }
+        let mut feats = Vec::with_capacity(self.members.len());
+        let mut logits_members = Vec::with_capacity(self.members.len());
+        let mut slowest = 0.0f64;
+        let mut energy_j = 0.0f64;
+        for rrx in replies {
+            let r = rrx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("device worker dropped reply"))??;
+            slowest = slowest.max(r.arrive_s);
+            energy_j += r.energy_j;
+            feats.push((r.feats, r.feats_shape));
+            logits_members.push(r.logits);
+        }
+
+        // Phase 3: aggregate at the central node (Eq. 3's `+ t³`).
+        let classes = self.members[0].arch.num_classes;
+        let central = &self.members[self.topo.central];
+        let d_agg: usize = self.members.iter().map(|m| m.arch.dim).sum();
+        let agg_flops =
+            CostModel::aggregation_flops(d_agg, self.d_i(), central.arch.groups) * n as f64;
+        let agg_s = central.device.compute_time_s(agg_flops);
+        energy_j += (central.device.active_power_w - central.device.idle_power_w) * agg_s;
+        let virtual_s = slowest + agg_s;
+
+        let fused: Vec<f32> = match self.config.aggregator.as_str() {
+            "average" => aggregation::average(&logits_members, n, classes),
+            "vote" => {
+                let preds = aggregation::majority_vote(&logits_members, n, classes);
+                let mut out = vec![0.0f32; n * classes];
+                for (r, p) in preds.iter().enumerate() {
+                    out[r * classes + p] = 1.0;
+                }
+                out
+            }
+            kind => {
+                let (logits, _) =
+                    self.exec
+                        .run_aggregator(&self.config.deployment, kind, feats)?;
+                logits
+            }
+        };
+
+        let per_req_energy = energy_j / n as f64;
+        let out_classes = fused.len() / n;
+        let responses = (0..n)
+            .map(|r| {
+                let row = fused[r * out_classes..(r + 1) * out_classes].to_vec();
+                let prediction = crate::metrics::argmax(&row);
+                InferenceResponse {
+                    logits: row,
+                    prediction,
+                    virtual_latency_s: virtual_s,
+                    energy_j: per_req_energy,
+                    batch_size: n,
+                }
+            })
+            .collect();
+        Ok((responses, virtual_s, energy_j))
+    }
+
+    fn d_i(&self) -> usize {
+        self.deployment
+            .aggregators
+            .values()
+            .next()
+            .map(|a| a.d_i)
+            .unwrap_or(64)
+    }
+
+    /// Stack single-sample payloads into one [`XBatch`].
+    fn stack(&self, batch: &[InferenceRequest]) -> Result<XBatch> {
+        let n = batch.len();
+        anyhow::ensure!(n > 0, "empty batch");
+        let a = &self.members[0].arch;
+        match &batch[0].x {
+            RequestPayload::F32(first) => {
+                anyhow::ensure!(first.len() == self.x_stride, "payload stride mismatch");
+                let mut data = Vec::with_capacity(n * self.x_stride);
+                for req in batch {
+                    match &req.x {
+                        RequestPayload::F32(v) => data.extend_from_slice(v),
+                        _ => anyhow::bail!("mixed payload dtypes in one batch"),
+                    }
+                }
+                Ok(XBatch::F32 { data, shape: vec![n, a.tokens(), a.patch_dim()] })
+            }
+            RequestPayload::I32(first) => {
+                anyhow::ensure!(first.len() == self.x_stride, "payload stride mismatch");
+                let mut data = Vec::with_capacity(n * self.x_stride);
+                for req in batch {
+                    match &req.x {
+                        RequestPayload::I32(v) => data.extend_from_slice(v),
+                        _ => anyhow::bail!("mixed payload dtypes in one batch"),
+                    }
+                }
+                Ok(XBatch::I32 { data, shape: vec![n, a.seq_len] })
+            }
+        }
+    }
+}
+
+/// Submit a whole split, pipelined so the batcher can coalesce, and collect
+/// responses in order.
+pub fn serve_all(
+    handle: &CoordinatorHandle,
+    xs: Vec<RequestPayload>,
+) -> Result<Vec<InferenceResponse>> {
+    let mut rxs = Vec::with_capacity(xs.len());
+    for x in xs {
+        rxs.push(handle.submit(x)?);
+    }
+    rxs.into_iter()
+        .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))?)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_payload_variants() {
+        let f = RequestPayload::F32(vec![1.0, 2.0]);
+        let i = RequestPayload::I32(vec![1, 2]);
+        match (f, i) {
+            (RequestPayload::F32(a), RequestPayload::I32(b)) => {
+                assert_eq!(a.len(), 2);
+                assert_eq!(b.len(), 2);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn serve_stats_default_empty() {
+        let s = ServeStats::default();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.virtual_latency.count(), 0);
+    }
+}

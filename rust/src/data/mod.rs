@@ -1,0 +1,182 @@
+//! Dataset loading: reads the raw little-endian bins written by
+//! `python/compile/data.py` at artifact-build time.
+
+use std::path::Path;
+
+use crate::runtime::manifest::SplitMeta;
+use crate::Result;
+
+/// One loaded dataset split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// f32 inputs (patch mode), row-major per `x_shape`; empty in token mode.
+    pub x_f32: Vec<f32>,
+    /// i32 inputs (token mode); empty in patch mode.
+    pub x_i32: Vec<i32>,
+    pub x_shape: Vec<usize>,
+    /// Labels: `(n,)` for cls, `(n, tokens)` for det.
+    pub y: Vec<i32>,
+    pub y_shape: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn load(root: &Path, meta: &SplitMeta) -> Result<Self> {
+        let x_path = root.join(&meta.x);
+        let y_path = root.join(&meta.y);
+        let x_bytes = std::fs::read(&x_path)?;
+        let y_bytes = std::fs::read(&y_path)?;
+        let n_x: usize = meta.x_shape.iter().product();
+        let n_y: usize = meta.y_shape.iter().product();
+        anyhow::ensure!(
+            x_bytes.len() == n_x * 4,
+            "x size mismatch for {}: {} != {}",
+            x_path.display(),
+            x_bytes.len(),
+            n_x * 4
+        );
+        anyhow::ensure!(y_bytes.len() == n_y * 4, "y size mismatch");
+        let (x_f32, x_i32) = match meta.x_dtype.as_str() {
+            "f32" => (bytes_to_f32(&x_bytes), Vec::new()),
+            "i32" => (Vec::new(), bytes_to_i32(&x_bytes)),
+            other => anyhow::bail!("unknown x dtype {other}"),
+        };
+        Ok(Dataset {
+            x_f32,
+            x_i32,
+            x_shape: meta.x_shape.clone(),
+            y: bytes_to_i32(&y_bytes),
+            y_shape: meta.y_shape.clone(),
+        })
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.x_shape[0]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-sample element count of x.
+    pub fn x_stride(&self) -> usize {
+        self.x_shape[1..].iter().product()
+    }
+
+    /// Per-sample element count of y (1 for cls, tokens for det).
+    pub fn y_stride(&self) -> usize {
+        self.y_shape[1..].iter().product::<usize>().max(1)
+    }
+
+    /// Gather a batch of f32 inputs by sample indices.
+    pub fn gather_x_f32(&self, idx: &[usize]) -> Vec<f32> {
+        let s = self.x_stride();
+        let mut out = Vec::with_capacity(idx.len() * s);
+        for &i in idx {
+            out.extend_from_slice(&self.x_f32[i * s..(i + 1) * s]);
+        }
+        out
+    }
+
+    /// Gather a batch of i32 inputs by sample indices.
+    pub fn gather_x_i32(&self, idx: &[usize]) -> Vec<i32> {
+        let s = self.x_stride();
+        let mut out = Vec::with_capacity(idx.len() * s);
+        for &i in idx {
+            out.extend_from_slice(&self.x_i32[i * s..(i + 1) * s]);
+        }
+        out
+    }
+
+    /// Gather labels by sample indices.
+    pub fn gather_y(&self, idx: &[usize]) -> Vec<i32> {
+        let s = self.y_stride();
+        let mut out = Vec::with_capacity(idx.len() * s);
+        for &i in idx {
+            out.extend_from_slice(&self.y[i * s..(i + 1) * s]);
+        }
+        out
+    }
+}
+
+pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+pub fn bytes_to_i32(b: &[u8]) -> Vec<i32> {
+    b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(dir: &Path, name: &str, bytes: &[u8]) -> String {
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        name.to_string()
+    }
+
+    fn meta(dir: &Path) -> SplitMeta {
+        let x: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let y: Vec<i32> = vec![0, 1, 2];
+        let xb: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let yb: Vec<u8> = y.iter().flat_map(|v| v.to_le_bytes()).collect();
+        SplitMeta {
+            x: write_tmp(dir, "x.bin", &xb),
+            y: write_tmp(dir, "y.bin", &yb),
+            x_shape: vec![3, 2, 4],
+            y_shape: vec![3],
+            x_dtype: "f32".into(),
+        }
+    }
+
+    #[test]
+    fn load_and_gather() {
+        let dir = std::env::temp_dir().join(format!("coformer-data-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = meta(&dir);
+        let ds = Dataset::load(&dir, &m).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.x_stride(), 8);
+        let b = ds.gather_x_f32(&[2, 0]);
+        assert_eq!(b.len(), 16);
+        assert_eq!(b[0], 16.0); // sample 2 starts at element 16
+        assert_eq!(b[8], 0.0);
+        assert_eq!(ds.gather_y(&[1]), vec![1]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("coformer-data2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut m = meta(&dir);
+        m.x_shape = vec![4, 2, 4]; // wrong
+        assert!(Dataset::load(&dir, &m).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn det_labels_stride() {
+        let ds = Dataset {
+            x_f32: vec![0.0; 32],
+            x_i32: vec![],
+            x_shape: vec![2, 16],
+            y: (0..32).collect(),
+            y_shape: vec![2, 16],
+        };
+        assert_eq!(ds.y_stride(), 16);
+        assert_eq!(ds.gather_y(&[1])[0], 16);
+    }
+
+    #[test]
+    fn byte_conversions() {
+        assert_eq!(bytes_to_f32(&1.5f32.to_le_bytes()), vec![1.5]);
+        assert_eq!(bytes_to_i32(&(-7i32).to_le_bytes()), vec![-7]);
+    }
+}

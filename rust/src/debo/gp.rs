@@ -1,0 +1,269 @@
+//! Gaussian process with Matérn ν=3/2 kernel + Expected Improvement —
+//! paper Eq. 9–12.
+//!
+//! The paper specifies the general Matérn form with smoothness ν=1.5 and
+//! length scale ℓ=1 (Eq. 9/16); for ν=3/2 the modified-Bessel form reduces
+//! to the closed form `k(r) = (1 + √3·r/ℓ)·exp(−√3·r/ℓ)`, which is what we
+//! implement (identical kernel, no Bessel evaluation needed).
+//!
+//! EI note: the paper's Eq. 12 writes `u = (Ψ*−μ)·Z(z) + σ·H(z)` with Z the
+//! pdf and H the cdf, then *minimizes* u.  The standard minimization-EI is
+//! `EI = (Ψ*−μ)·Φ(z) + σ·φ(z)` (Φ cdf, φ pdf) *maximized*; the paper's
+//! pdf/cdf swap and argmin is a well-known typo in this family of papers.
+//! We implement the standard form and select `argmax EI`.
+
+use super::linalg::{cholesky, cholesky_solve, euclidean, solve_lower, Matrix};
+
+/// Matérn ν=3/2 kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct Matern32 {
+    /// Length scale ℓ (paper: 1.0).
+    pub length_scale: f64,
+    /// Signal variance σ_f² (paper implicitly 1.0).
+    pub variance: f64,
+}
+
+impl Default for Matern32 {
+    fn default() -> Self {
+        Matern32 { length_scale: 1.0, variance: 1.0 }
+    }
+}
+
+impl Matern32 {
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        let r = euclidean(a, b);
+        let t = 3f64.sqrt() * r / self.length_scale;
+        self.variance * (1.0 + t) * (-t).exp()
+    }
+}
+
+/// GP posterior over noisy observations (Eq. 10–11).
+pub struct Gp {
+    kernel: Matern32,
+    noise_var: f64,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    /// Cholesky factor of `K + σ²I`.
+    chol: Option<Matrix>,
+    /// `(K + σ²I)⁻¹ ŷ`.
+    alpha: Vec<f64>,
+    y_mean: f64,
+}
+
+impl Gp {
+    pub fn new(kernel: Matern32, noise_var: f64) -> Self {
+        Gp {
+            kernel,
+            noise_var,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            chol: None,
+            alpha: Vec::new(),
+            y_mean: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Add an observation and refresh the posterior (O(n³) refit; the BO
+    /// history is small so this is the offline-stage cost the paper accepts).
+    pub fn observe(&mut self, x: Vec<f64>, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+        self.refit();
+    }
+
+    fn refit(&mut self) {
+        let n = self.xs.len();
+        // center targets: GP prior mean 0 over residuals
+        self.y_mean = self.ys.iter().sum::<f64>() / n as f64;
+        let k = Matrix::from_fn(n, n, |i, j| {
+            let base = self.kernel.eval(&self.xs[i], &self.xs[j]);
+            if i == j {
+                base + self.noise_var
+            } else {
+                base
+            }
+        });
+        let chol = cholesky(&k).expect("K + σ²I must be SPD");
+        let resid: Vec<f64> = self.ys.iter().map(|y| y - self.y_mean).collect();
+        self.alpha = cholesky_solve(&chol, &resid);
+        self.chol = Some(chol);
+    }
+
+    /// Posterior mean and variance at `x` (Eq. 11).
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        if self.xs.is_empty() {
+            return (0.0, self.kernel.variance);
+        }
+        let k_star: Vec<f64> = self.xs.iter().map(|xi| self.kernel.eval(x, xi)).collect();
+        let mean = self.y_mean
+            + k_star
+                .iter()
+                .zip(&self.alpha)
+                .map(|(k, a)| k * a)
+                .sum::<f64>();
+        let chol = self.chol.as_ref().unwrap();
+        let v = solve_lower(chol, &k_star);
+        let var = self.kernel.eval(x, x) - v.iter().map(|x| x * x).sum::<f64>();
+        (mean, var.max(1e-12))
+    }
+
+    /// Best (minimum) observed objective value `Ψ*`.
+    pub fn best_observed(&self) -> Option<(usize, f64)> {
+        self.ys
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, &y)| (i, y))
+    }
+}
+
+/// Standard-normal pdf.
+fn phi(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard-normal cdf via `erf`-free Abramowitz–Stegun 7.1.26 approximation
+/// (max abs error 1.5e-7 — far below BO's needs).
+fn big_phi(z: f64) -> f64 {
+    if z < 0.0 {
+        return 1.0 - big_phi(-z);
+    }
+    let t = 1.0 / (1.0 + 0.3275911 * z / 2f64.sqrt());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    1.0 - 0.5 * poly * (-(z / 2f64.sqrt()).powi(2)).exp()
+}
+
+/// Expected Improvement for minimization (see module docs re paper Eq. 12).
+pub fn expected_improvement(mean: f64, var: f64, best: f64) -> f64 {
+    let sigma = var.sqrt();
+    if sigma < 1e-12 {
+        return (best - mean).max(0.0);
+    }
+    let z = (best - mean) / sigma;
+    // clamp: the Abramowitz–Stegun cdf approximation (±1.5e-7) can push the
+    // analytically-nonnegative EI a hair below zero for hopeless candidates
+    ((best - mean) * big_phi(z) + sigma * phi(z)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_is_one_at_zero_distance() {
+        let k = Matern32::default();
+        assert!((k.eval(&[0.5, 0.5], &[0.5, 0.5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernel_decays_with_distance() {
+        let k = Matern32::default();
+        let a = [0.0, 0.0];
+        let near = k.eval(&a, &[0.1, 0.0]);
+        let far = k.eval(&a, &[2.0, 0.0]);
+        assert!(near > far);
+        assert!(far > 0.0);
+    }
+
+    #[test]
+    fn kernel_closed_form_value() {
+        // r=1, ℓ=1: k = (1+√3)·e^{−√3} ≈ 0.48335772
+        let k = Matern32::default();
+        let v = k.eval(&[0.0], &[1.0]);
+        assert!((v - (1.0 + 3f64.sqrt()) * (-(3f64.sqrt())).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gp_interpolates_observations() {
+        let mut gp = Gp::new(Matern32::default(), 1e-6);
+        gp.observe(vec![0.0], 1.0);
+        gp.observe(vec![1.0], 2.0);
+        gp.observe(vec![2.0], 0.5);
+        for (x, y) in [(0.0, 1.0), (1.0, 2.0), (2.0, 0.5)] {
+            let (m, v) = gp.predict(&[x]);
+            assert!((m - y).abs() < 1e-2, "mean at {x}: {m} vs {y}");
+            assert!(v < 1e-3, "var at observed point should be tiny: {v}");
+        }
+    }
+
+    #[test]
+    fn gp_uncertainty_grows_away_from_data() {
+        let mut gp = Gp::new(Matern32::default(), 1e-6);
+        gp.observe(vec![0.0], 0.0);
+        let (_, v_near) = gp.predict(&[0.1]);
+        let (_, v_far) = gp.predict(&[3.0]);
+        assert!(v_far > v_near);
+    }
+
+    #[test]
+    fn gp_empty_predicts_prior() {
+        let gp = Gp::new(Matern32::default(), 1e-6);
+        let (m, v) = gp.predict(&[1.0]);
+        assert_eq!(m, 0.0);
+        assert!((v - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_observed_minimum() {
+        let mut gp = Gp::new(Matern32::default(), 1e-4);
+        gp.observe(vec![0.0], 3.0);
+        gp.observe(vec![1.0], 1.0);
+        gp.observe(vec![2.0], 2.0);
+        assert_eq!(gp.best_observed().unwrap(), (1, 1.0));
+    }
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((big_phi(0.0) - 0.5).abs() < 1e-7);
+        assert!(big_phi(3.0) > 0.998);
+        assert!(big_phi(-3.0) < 0.002);
+        assert!((big_phi(1.0) - 0.8413447).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ei_zero_when_certain_and_worse() {
+        // mean well above best, tiny variance → no improvement expected
+        assert!(expected_improvement(5.0, 1e-14, 1.0) == 0.0);
+    }
+
+    #[test]
+    fn ei_positive_when_uncertain() {
+        assert!(expected_improvement(1.5, 1.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn ei_prefers_lower_mean_at_equal_variance() {
+        let a = expected_improvement(0.5, 0.25, 1.0);
+        let b = expected_improvement(0.9, 0.25, 1.0);
+        assert!(a > b);
+    }
+
+    #[test]
+    fn ei_prefers_higher_variance_at_equal_mean() {
+        let a = expected_improvement(1.2, 1.0, 1.0);
+        let b = expected_improvement(1.2, 0.01, 1.0);
+        assert!(a > b);
+    }
+
+    #[test]
+    fn gp_fits_smooth_function() {
+        // y = sin(3x); check posterior mean tracks it between points
+        let mut gp = Gp::new(Matern32 { length_scale: 0.5, variance: 1.0 }, 1e-6);
+        for i in 0..15 {
+            let x = i as f64 / 7.0;
+            gp.observe(vec![x], (3.0 * x).sin());
+        }
+        let (m, _) = gp.predict(&[0.95]);
+        assert!((m - (3.0f64 * 0.95).sin()).abs() < 0.1, "mean {m}");
+    }
+}

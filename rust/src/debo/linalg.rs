@@ -1,0 +1,196 @@
+//! Dense linear algebra for the GP: symmetric matrices, Cholesky
+//! factorization and triangular solves.  f64 throughout; sizes are the BO
+//! history length (tens to low hundreds), so clarity beats BLAS.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Cholesky factorization `A = L·Lᵀ` of a symmetric positive-definite
+/// matrix; returns lower-triangular `L`, or `None` if not SPD.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, i)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L·x = b` (forward substitution, `L` lower-triangular).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve `Lᵀ·x = b` (back substitution).
+pub fn solve_upper_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve `A·x = b` given the Cholesky factor `L` of `A`.
+pub fn cholesky_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    solve_upper_t(l, &solve_lower(l, b))
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd3() -> Matrix {
+        // A = B·Bᵀ + I for B random-ish
+        Matrix::from_fn(3, 3, |i, j| {
+            let b = [[2.0, 0.1, 0.3], [0.1, 1.5, 0.2], [0.3, 0.2, 1.8]];
+            b[i][j]
+        })
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let a = spd3();
+        let l = cholesky(&a).unwrap();
+        // L·Lᵀ == A
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l[(i, k)] * l[(j, k)];
+                }
+                assert!((s - a[(i, j)]).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let m = Matrix::from_fn(2, 2, |i, j| if i == j { -1.0 } else { 0.0 });
+        assert!(cholesky(&m).is_none());
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        let a = spd3();
+        let l = cholesky(&a).unwrap();
+        let x_true = [1.0, -2.0, 0.5];
+        // b = A x
+        let b: Vec<f64> = (0..3)
+            .map(|i| (0..3).map(|j| a[(i, j)] * x_true[j]).sum())
+            .collect();
+        let x = cholesky_solve(&l, &b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn identity_solves_trivially() {
+        let l = cholesky(&Matrix::identity(4)).unwrap();
+        let b = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(cholesky_solve(&l, &b), b.to_vec());
+    }
+
+    #[test]
+    fn triangular_solves_consistent() {
+        let a = spd3();
+        let l = cholesky(&a).unwrap();
+        let b = [0.3, -1.0, 2.0];
+        let y = solve_lower(&l, &b);
+        // L y == b
+        for i in 0..3 {
+            let s: f64 = (0..=i).map(|k| l[(i, k)] * y[k]).sum();
+            assert!((s - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn euclidean_basic() {
+        assert!((euclidean(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

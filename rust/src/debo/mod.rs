@@ -1,0 +1,14 @@
+//! DeBo — the paper's Algorithm 1: Bayesian decomposition (lines 1–11).
+//!
+//! A Gaussian-process prior with a Matérn ν=1.5 kernel models the black-box
+//! objective `Ψ(C)`; Expected Improvement selects the next decomposition
+//! policy; candidates are sampled from the constrained discrete space of
+//! (P1).  The booster half of Algorithm 1 (lines 12–15) lives in
+//! [`crate::booster`].
+
+pub mod gp;
+pub mod linalg;
+pub mod search;
+
+pub use gp::{expected_improvement, Gp, Matern32};
+pub use search::{DeBoConfig, DeBoResult, DeBoSearch, SearchTracePoint};

@@ -1,0 +1,402 @@
+//! The DeBo search loop — Algorithm 1 lines 1–11.
+//!
+//! 1. Sample `r` random decomposition policies satisfying Ω/Φ (line 1).
+//! 2. Evaluate Ψ on each and initialize the GP prior (lines 2–4).
+//! 3. For `I_s` iterations: pick the next policy by EI over a sampled
+//!    candidate pool, evaluate, update the GP (lines 5–9).
+//! 4. Return the best policy seen (lines 10–11).
+
+use super::gp::{expected_improvement, Gp, Matern32};
+use crate::evaluator::Objective;
+use crate::model::{Arch, DecompositionPolicy, SubModelCfg};
+use crate::util::Rng;
+
+/// Search hyperparameters.
+#[derive(Clone, Debug)]
+pub struct DeBoConfig {
+    /// Initial random policies `r` (Alg. 1 input).
+    pub init_policies: usize,
+    /// BO iterations `I_s`.
+    pub iterations: usize,
+    /// EI candidate pool per iteration.
+    pub candidates: usize,
+    /// Observation noise variance σ² (Eq. 10).
+    pub noise_var: f64,
+    pub seed: u64,
+}
+
+impl Default for DeBoConfig {
+    fn default() -> Self {
+        DeBoConfig {
+            init_policies: 8,
+            iterations: 40,
+            candidates: 256,
+            noise_var: 1e-4,
+            seed: 0,
+        }
+    }
+}
+
+/// One point of the search trajectory (Fig. 11 data).
+#[derive(Clone, Debug)]
+pub struct SearchTracePoint {
+    pub iteration: usize,
+    pub psi: f64,
+    pub best_psi: f64,
+    pub latency_s: f64,
+    pub pred_loss: f64,
+}
+
+/// Search outcome.
+#[derive(Clone, Debug)]
+pub struct DeBoResult {
+    pub best: DecompositionPolicy,
+    pub best_psi: f64,
+    pub trace: Vec<SearchTracePoint>,
+    pub evaluated: usize,
+}
+
+/// The searcher. Owns only RNG + config; the objective is borrowed per run.
+pub struct DeBoSearch {
+    pub config: DeBoConfig,
+}
+
+impl DeBoSearch {
+    pub fn new(config: DeBoConfig) -> Self {
+        DeBoSearch { config }
+    }
+
+    /// Sample one random policy satisfying (C1)–(C6); rejection-samples the
+    /// discrete space (dims in multiples of 8, MLP dims multiples of 16 —
+    /// the same grid the model pool is drawn from).
+    pub fn sample_policy(
+        rng: &mut Rng,
+        obj: &Objective<'_>,
+        n_devices: usize,
+    ) -> Option<DecompositionPolicy> {
+        let teacher = obj.teacher;
+        for _ in 0..200 {
+            let mut subs = Vec::with_capacity(n_devices);
+            // budget-aware sampling: remaining budget shrinks per device
+            let mut dim_left = teacher.dim;
+            let mut head_left = teacher.heads[0];
+            let mut mlp_left = teacher.mlp_dims[0];
+            let mut ok = true;
+            for i in 0..n_devices {
+                let remaining = n_devices - i;
+                let dim_hi = (dim_left.saturating_sub(8 * (remaining - 1))) / 8;
+                let head_hi = head_left.saturating_sub(remaining - 1);
+                let mlp_hi = (mlp_left.saturating_sub(16 * (remaining - 1))) / 16;
+                if dim_hi == 0 || head_hi == 0 || mlp_hi == 0 {
+                    ok = false;
+                    break;
+                }
+                let cfg = SubModelCfg {
+                    layers: rng.gen_range(1, teacher.layers),
+                    dim: 8 * rng.gen_range(1, dim_hi),
+                    heads: rng.gen_range(1, head_hi),
+                    mlp_dim: 16 * rng.gen_range(1, mlp_hi),
+                };
+                dim_left -= cfg.dim;
+                head_left -= cfg.heads;
+                mlp_left -= cfg.mlp_dim;
+                subs.push(cfg);
+            }
+            if !ok {
+                continue;
+            }
+            let policy = DecompositionPolicy::new(subs);
+            if policy.check(teacher, obj.caps, obj.batch).is_ok() {
+                return Some(policy);
+            }
+        }
+        None
+    }
+
+    /// Run Algorithm 1 lines 1–11.
+    pub fn run(&self, obj: &Objective<'_>, n_devices: usize) -> crate::Result<DeBoResult> {
+        let mut rng = Rng::seed_from_u64(self.config.seed);
+        let teacher: &Arch = obj.teacher;
+        let mut gp = Gp::new(Matern32::default(), self.config.noise_var);
+        let mut best: Option<(DecompositionPolicy, f64)> = None;
+        let mut trace = Vec::new();
+        let mut evaluated = 0usize;
+
+        let record = |policy: &DecompositionPolicy,
+                          psi: f64,
+                          iter: usize,
+                          best: &mut Option<(DecompositionPolicy, f64)>,
+                          trace: &mut Vec<SearchTracePoint>,
+                          obj: &Objective<'_>| {
+            let lat = obj.latency.breakdown(policy, obj.teacher).total_s;
+            let loss = obj.accuracy.policy_loss(policy);
+            if best.as_ref().map(|(_, b)| psi < *b).unwrap_or(true) {
+                *best = Some((policy.clone(), psi));
+            }
+            trace.push(SearchTracePoint {
+                iteration: iter,
+                psi,
+                best_psi: best.as_ref().unwrap().1,
+                latency_s: lat,
+                pred_loss: loss,
+            });
+        };
+
+        // lines 1–4: initial design
+        for i in 0..self.config.init_policies {
+            let policy = Self::sample_policy(&mut rng, obj, n_devices)
+                .ok_or_else(|| anyhow::anyhow!("cannot sample a feasible policy: constraints too tight"))?;
+            let psi = obj
+                .evaluate(&policy)
+                .expect("sampled policy must be feasible");
+            evaluated += 1;
+            gp.observe(policy.encode(teacher), psi);
+            record(&policy, psi, i, &mut best, &mut trace, obj);
+        }
+
+        // lines 5–9: BO iterations
+        for it in 0..self.config.iterations {
+            let best_psi = gp.best_observed().map(|(_, y)| y).unwrap();
+            let mut cand_best: Option<(DecompositionPolicy, f64)> = None;
+            for _ in 0..self.config.candidates {
+                let Some(policy) = Self::sample_policy(&mut rng, obj, n_devices) else {
+                    continue;
+                };
+                let enc = policy.encode(teacher);
+                let (mu, var) = gp.predict(&enc);
+                let ei = expected_improvement(mu, var, best_psi);
+                if cand_best.as_ref().map(|(_, b)| ei > *b).unwrap_or(true) {
+                    cand_best = Some((policy, ei));
+                }
+            }
+            let Some((next, _)) = cand_best else { continue };
+            let psi = obj.evaluate(&next).expect("candidates are feasible");
+            evaluated += 1;
+            gp.observe(next.encode(teacher), psi);
+            record(
+                &next,
+                psi,
+                self.config.init_policies + it,
+                &mut best,
+                &mut trace,
+                obj,
+            );
+        }
+
+        let (best, best_psi) = best.ok_or_else(|| anyhow::anyhow!("search produced no policy"))?;
+        Ok(DeBoResult { best, best_psi, trace, evaluated })
+    }
+}
+
+/// Baseline searcher: pure random sampling (Fig. 11's "random decomposition").
+pub fn random_search(
+    obj: &Objective<'_>,
+    n_devices: usize,
+    evals: usize,
+    seed: u64,
+) -> crate::Result<DeBoResult> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut best: Option<(DecompositionPolicy, f64)> = None;
+    let mut trace = Vec::new();
+    for i in 0..evals {
+        let Some(policy) = DeBoSearch::sample_policy(&mut rng, obj, n_devices) else {
+            continue;
+        };
+        let psi = obj.evaluate(&policy).unwrap();
+        if best.as_ref().map(|(_, b)| psi < *b).unwrap_or(true) {
+            best = Some((policy.clone(), psi));
+        }
+        trace.push(SearchTracePoint {
+            iteration: i,
+            psi,
+            best_psi: best.as_ref().unwrap().1,
+            latency_s: obj.latency.breakdown(&policy, obj.teacher).total_s,
+            pred_loss: obj.accuracy.policy_loss(&policy),
+        });
+    }
+    let (best, best_psi) = best.ok_or_else(|| anyhow::anyhow!("no feasible policy found"))?;
+    Ok(DeBoResult { best, best_psi, trace, evaluated: evals })
+}
+
+/// Baseline: uniform decomposition — N identical sub-models splitting the
+/// teacher evenly (Fig. 11's "uniform decomposition").
+pub fn uniform_policy(teacher: &Arch, n_devices: usize) -> DecompositionPolicy {
+    let dim = (teacher.dim / n_devices) / 8 * 8;
+    let heads = (teacher.heads[0] / n_devices).max(1);
+    let mlp = (teacher.mlp_dims[0] / n_devices) / 16 * 16;
+    DecompositionPolicy::new(vec![
+        SubModelCfg {
+            layers: teacher.layers,
+            dim: dim.max(8),
+            heads,
+            mlp_dim: mlp.max(16),
+        };
+        n_devices
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceProfile;
+    use crate::evaluator::{AccuracyProxy, LatencyModel, Objective};
+    use crate::model::policy::DeviceCaps;
+    use crate::model::Mode;
+    use crate::net::{Link, Topology};
+
+    fn teacher() -> Arch {
+        Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20)
+    }
+
+    struct Ctx {
+        devices: Vec<DeviceProfile>,
+        topology: Topology,
+        caps: Vec<DeviceCaps>,
+        teacher: Arch,
+    }
+
+    fn ctx() -> Ctx {
+        Ctx {
+            devices: DeviceProfile::paper_fleet(),
+            topology: Topology::star(3, Link::mbps(100.0), 1),
+            caps: vec![DeviceCaps { max_flops: 1e12, max_memory: 1 << 34 }; 3],
+            teacher: teacher(),
+        }
+    }
+
+    fn objective(c: &Ctx) -> Objective<'_> {
+        Objective {
+            latency: LatencyModel {
+                devices: &c.devices,
+                topology: &c.topology,
+                predictors: None,
+                d_i: 64,
+                agg_rows: 4,
+            },
+            accuracy: AccuracyProxy::default_uncalibrated(),
+            teacher: &c.teacher,
+            caps: &c.caps,
+            delta: 20.0,
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn sampled_policies_always_feasible() {
+        let c = ctx();
+        let obj = objective(&c);
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..50 {
+            let p = DeBoSearch::sample_policy(&mut rng, &obj, 3).unwrap();
+            assert!(p.check(&c.teacher, &c.caps, 1).is_ok());
+        }
+    }
+
+    #[test]
+    fn debo_improves_over_iterations() {
+        let c = ctx();
+        let obj = objective(&c);
+        let search = DeBoSearch::new(DeBoConfig {
+            init_policies: 6,
+            iterations: 20,
+            candidates: 128,
+            ..Default::default()
+        });
+        let res = search.run(&obj, 3).unwrap();
+        let first_best = res.trace[res.trace.len().min(6) - 1].best_psi;
+        assert!(res.best_psi <= first_best);
+        assert_eq!(res.evaluated, 26);
+        // best_psi trace is monotone non-increasing
+        for w in res.trace.windows(2) {
+            assert!(w[1].best_psi <= w[0].best_psi + 1e-12);
+        }
+    }
+
+    #[test]
+    fn debo_beats_or_matches_random_at_equal_budget() {
+        let c = ctx();
+        let obj = objective(&c);
+        let budget = 30;
+        let search = DeBoSearch::new(DeBoConfig {
+            init_policies: 8,
+            iterations: budget - 8,
+            candidates: 256,
+            seed: 3,
+            ..Default::default()
+        });
+        let debo = search.run(&obj, 3).unwrap();
+        // average random over a few seeds for stability
+        let mut rnd_mean = 0.0;
+        for s in 0..4 {
+            rnd_mean += random_search(&obj, 3, budget, 100 + s).unwrap().best_psi;
+        }
+        rnd_mean /= 4.0;
+        assert!(
+            debo.best_psi <= rnd_mean * 1.02,
+            "debo {} vs random mean {}",
+            debo.best_psi,
+            rnd_mean
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = ctx();
+        let obj = objective(&c);
+        let mk = || {
+            DeBoSearch::new(DeBoConfig { seed: 42, iterations: 10, ..Default::default() })
+                .run(&obj, 3)
+                .unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.best_psi, b.best_psi);
+    }
+
+    #[test]
+    fn uniform_policy_feasible_and_equal() {
+        let c = ctx();
+        let p = uniform_policy(&c.teacher, 3);
+        assert_eq!(p.subs.len(), 3);
+        assert!(p.subs.iter().all(|s| *s == p.subs[0]));
+        p.check(&c.teacher, &c.caps, 1).unwrap();
+    }
+
+    #[test]
+    fn infeasible_constraints_error_cleanly() {
+        let mut c = ctx();
+        c.caps = vec![DeviceCaps { max_flops: 1.0, max_memory: 1 }; 3];
+        let obj = objective(&c);
+        let search = DeBoSearch::new(DeBoConfig::default());
+        assert!(search.run(&obj, 3).is_err());
+    }
+
+    #[test]
+    fn tighter_compute_caps_yield_smaller_submodels() {
+        let c = ctx();
+        let obj_loose = objective(&c);
+        let loose = DeBoSearch::new(DeBoConfig { seed: 7, iterations: 25, ..Default::default() })
+            .run(&obj_loose, 3)
+            .unwrap();
+        // 30%-of-teacher compute cap (Fig. 13's constraint sweep)
+        let teacher_flops =
+            crate::model::CostModel::flops_per_sample(&c.teacher);
+        let mut c2 = ctx();
+        c2.caps = vec![
+            DeviceCaps { max_flops: 0.15 * teacher_flops, max_memory: 1 << 34 };
+            3
+        ];
+        let obj_tight = objective(&c2);
+        let tight = DeBoSearch::new(DeBoConfig { seed: 7, iterations: 25, ..Default::default() })
+            .run(&obj_tight, 3)
+            .unwrap();
+        let flops_of = |p: &DecompositionPolicy, t: &Arch| -> f64 {
+            p.subs
+                .iter()
+                .map(|s| crate::model::CostModel::flops_per_sample(&s.to_arch(t)))
+                .sum()
+        };
+        assert!(flops_of(&tight.best, &c2.teacher) <= flops_of(&loose.best, &c.teacher) * 1.01);
+    }
+}

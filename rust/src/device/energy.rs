@@ -1,0 +1,134 @@
+//! Energy metering — the Monsoon-monitor analog.
+//!
+//! Follows the paper's measurement protocol ([38], §IV-A): background
+//! (idle) power is subtracted, energy is the integral of the *excess* power
+//! over each inference region, and per-inference statistics are averaged
+//! over runs.
+
+use super::profile::DeviceProfile;
+
+/// Integrates energy over busy/idle intervals of one device's timeline.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyMeter {
+    busy_s: f64,
+    idle_s: f64,
+    samples: Vec<f64>, // per-inference energy, joules (background-subtracted)
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a busy (compute/transmit) interval.
+    pub fn busy(&mut self, seconds: f64) {
+        assert!(seconds >= 0.0);
+        self.busy_s += seconds;
+    }
+
+    /// Record an idle (waiting) interval.
+    pub fn idle(&mut self, seconds: f64) {
+        assert!(seconds >= 0.0);
+        self.idle_s += seconds;
+    }
+
+    /// Close one inference region and log its background-subtracted energy.
+    ///
+    /// Active intervals draw `active_power_w`; idle intervals draw
+    /// `idle_power_w`, of which the background (idle) level is subtracted —
+    /// so pure idling contributes zero, exactly as the Monsoon protocol
+    /// reports it.
+    pub fn end_inference(&mut self, profile: &DeviceProfile) -> f64 {
+        let excess = (profile.active_power_w - profile.idle_power_w) * self.busy_s;
+        self.samples.push(excess);
+        self.busy_s = 0.0;
+        self.idle_s = 0.0;
+        excess
+    }
+
+    /// Mean per-inference energy, joules.
+    pub fn mean_j(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Std-dev of per-inference energy, joules.
+    pub fn std_j(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mu = self.mean_j();
+        (self.samples.iter().map(|e| (e - mu).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceProfile {
+        DeviceProfile {
+            active_power_w: 10.0,
+            idle_power_w: 2.0,
+            ..DeviceProfile::jetson_nano()
+        }
+    }
+
+    #[test]
+    fn busy_energy_is_excess_power_times_time() {
+        let mut m = EnergyMeter::new();
+        m.busy(0.5);
+        let e = m.end_inference(&dev());
+        assert!((e - 4.0).abs() < 1e-12); // (10-2) W × 0.5 s
+    }
+
+    #[test]
+    fn idle_contributes_zero() {
+        let mut m = EnergyMeter::new();
+        m.idle(10.0);
+        assert_eq!(m.end_inference(&dev()), 0.0);
+    }
+
+    #[test]
+    fn mean_over_runs() {
+        let mut m = EnergyMeter::new();
+        for t in [0.1, 0.2, 0.3] {
+            m.busy(t);
+            m.end_inference(&dev());
+        }
+        assert!((m.mean_j() - 8.0 * 0.2).abs() < 1e-9);
+        assert_eq!(m.count(), 3);
+    }
+
+    #[test]
+    fn std_zero_for_identical_runs() {
+        let mut m = EnergyMeter::new();
+        for _ in 0..5 {
+            m.busy(0.1);
+            m.end_inference(&dev());
+        }
+        assert!(m.std_j() < 1e-12);
+    }
+
+    #[test]
+    fn region_state_resets() {
+        let mut m = EnergyMeter::new();
+        m.busy(1.0);
+        m.end_inference(&dev());
+        // second region with no busy time must be zero
+        assert_eq!(m.end_inference(&dev()), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_time_rejected() {
+        EnergyMeter::new().busy(-1.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Heterogeneous edge-device simulator.
+//!
+//! The paper's testbed is three NVIDIA Jetson boards behind a switch with a
+//! Monsoon power monitor.  This module reproduces exactly the quantities
+//! the paper measures from that hardware: per-device compute time as a
+//! function of workload FLOPs, memory-capacity admission (the GPT2-XL OOM
+//! case), and energy as the integral of power over the busy/idle timeline
+//! (following [38], background power subtracted).
+
+pub mod energy;
+pub mod profile;
+pub mod simulator;
+
+pub use energy::EnergyMeter;
+pub use profile::DeviceProfile;
+pub use simulator::{SimDevice, SimError};

@@ -1,0 +1,208 @@
+//! Virtual-clock device simulation.
+//!
+//! Each [`SimDevice`] tracks its own timeline: compute and transmit
+//! intervals advance the clock and accrue busy time; waiting (for slower
+//! peers, or for pipeline predecessors) accrues idle time.  Strategies
+//! compose device timelines to produce exactly the latency breakdowns of
+//! the paper's Figures 3, 4 and 10, and memory admission reproduces the
+//! OOM cases of Figure 9.
+
+use super::energy::EnergyMeter;
+use super::profile::DeviceProfile;
+
+/// Simulation failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SimError {
+    /// Workload needs more memory than the device has (paper's "OOM" marks).
+    OutOfMemory { device: String, need: usize, have: usize },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::OutOfMemory { device, need, have } => write!(
+                f,
+                "OOM on {device}: need {:.2} GB > {:.2} GB",
+                *need as f64 / (1 << 30) as f64,
+                *have as f64 / (1 << 30) as f64
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// A simulated edge device with a virtual clock.
+#[derive(Clone, Debug)]
+pub struct SimDevice {
+    pub profile: DeviceProfile,
+    clock_s: f64,
+    busy_s: f64,
+    idle_s: f64,
+    pub meter: EnergyMeter,
+    resident_bytes: usize,
+}
+
+impl SimDevice {
+    pub fn new(profile: DeviceProfile) -> Self {
+        SimDevice {
+            profile,
+            clock_s: 0.0,
+            busy_s: 0.0,
+            idle_s: 0.0,
+            meter: EnergyMeter::new(),
+            resident_bytes: 0,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.clock_s
+    }
+    pub fn busy_time(&self) -> f64 {
+        self.busy_s
+    }
+    pub fn idle_time(&self) -> f64 {
+        self.idle_s
+    }
+
+    /// Admit a resident workload (model weights + activations); errors with
+    /// the paper's OOM condition when capacity is exceeded.
+    pub fn load_model(&mut self, bytes: usize) -> Result<(), SimError> {
+        if self.resident_bytes + bytes > self.profile.memory_bytes {
+            return Err(SimError::OutOfMemory {
+                device: self.profile.name.clone(),
+                need: self.resident_bytes + bytes,
+                have: self.profile.memory_bytes,
+            });
+        }
+        self.resident_bytes += bytes;
+        Ok(())
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    pub fn unload_all(&mut self) {
+        self.resident_bytes = 0;
+    }
+
+    /// Execute `flops` of compute; returns the interval duration.
+    pub fn compute(&mut self, flops: f64) -> f64 {
+        let t = self.profile.compute_time_s(flops);
+        self.clock_s += t;
+        self.busy_s += t;
+        self.meter.busy(t);
+        t
+    }
+
+    /// Busy-transmit for `seconds` (radio/NIC active counts as busy power).
+    pub fn transmit(&mut self, seconds: f64) {
+        self.clock_s += seconds;
+        self.busy_s += seconds;
+        self.meter.busy(seconds);
+    }
+
+    /// Idle until the global time reaches `t_s` (waiting on peers).
+    pub fn wait_until(&mut self, t_s: f64) {
+        if t_s > self.clock_s {
+            let dt = t_s - self.clock_s;
+            self.idle_s += dt;
+            self.meter.idle(dt);
+            self.clock_s = t_s;
+        }
+    }
+
+    /// Close one inference region: log energy and reset the clock so the
+    /// next request starts at t=0 (per-request timelines, as measured).
+    pub fn end_inference(&mut self) -> f64 {
+        let e = self.meter.end_inference(&self.profile);
+        self.clock_s = 0.0;
+        self.busy_s = 0.0;
+        self.idle_s = 0.0;
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> SimDevice {
+        SimDevice::new(DeviceProfile::jetson_tx2())
+    }
+
+    #[test]
+    fn compute_advances_clock() {
+        let mut d = dev();
+        let t = d.compute(1e9);
+        assert!(t > 0.0);
+        assert!((d.now() - t).abs() < 1e-15);
+        assert!((d.busy_time() - t).abs() < 1e-15);
+        assert_eq!(d.idle_time(), 0.0);
+    }
+
+    #[test]
+    fn wait_accrues_idle_only_forward() {
+        let mut d = dev();
+        d.compute(1e9);
+        let now = d.now();
+        d.wait_until(now - 1.0); // no-op: cannot wait into the past
+        assert_eq!(d.idle_time(), 0.0);
+        d.wait_until(now + 0.5);
+        assert!((d.idle_time() - 0.5).abs() < 1e-12);
+        assert!((d.now() - (now + 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn oom_on_oversized_model() {
+        let mut d = SimDevice::new(DeviceProfile::jetson_nano()); // 4 GB
+        let err = d.load_model(8 << 30).unwrap_err();
+        match err {
+            SimError::OutOfMemory { need, have, .. } => {
+                assert!(need > have);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_loads_accumulate() {
+        let mut d = SimDevice::new(DeviceProfile::jetson_nano());
+        d.load_model(2 << 30).unwrap();
+        d.load_model(1 << 30).unwrap();
+        assert!(d.load_model(2 << 30).is_err()); // 5 GB > 4 GB
+        d.unload_all();
+        d.load_model(3 << 30).unwrap();
+    }
+
+    #[test]
+    fn end_inference_resets_timeline() {
+        let mut d = dev();
+        d.compute(1e9);
+        d.wait_until(d.now() + 1.0);
+        let e = d.end_inference();
+        assert!(e > 0.0);
+        assert_eq!(d.now(), 0.0);
+        assert_eq!(d.busy_time(), 0.0);
+        assert_eq!(d.idle_time(), 0.0);
+    }
+
+    #[test]
+    fn transmit_counts_busy() {
+        let mut d = dev();
+        d.transmit(0.25);
+        assert!((d.busy_time() - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn heterogeneity_visible_in_timelines() {
+        // same workload, Nano should take ~2.8x TX2's time
+        let mut nano = SimDevice::new(DeviceProfile::jetson_nano());
+        let mut tx2 = SimDevice::new(DeviceProfile::jetson_tx2());
+        let f = 5e9;
+        let tn = nano.compute(f);
+        let tt = tx2.compute(f);
+        let r = tn / tt;
+        assert!((2.5..3.2).contains(&r), "nano/tx2 {r}");
+    }
+}

@@ -1,0 +1,315 @@
+//! The *evaluator* — paper §III-B: the latency model (Eq. 3–6), the
+//! accuracy-degradation proxy (Eq. 7), and the black-box objective
+//! `Ψ(C) = L_val(C) + δ·T(C)` that DeBo optimizes.
+
+use crate::device::DeviceProfile;
+use crate::model::{policy::DeviceCaps, Arch, CostModel, DecompositionPolicy};
+use crate::net::Topology;
+use crate::predictor::{arch_features, LatencyPredictor};
+use crate::runtime::manifest::ProxyPoint;
+
+/// Per-phase latency breakdown of one collaborative inference (Eq. 3).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    /// Per device: Phase-1 backbone time, seconds.
+    pub compute_s: Vec<f64>,
+    /// Per device: Phase-2 transmission time, seconds.
+    pub transmit_s: Vec<f64>,
+    /// Phase-3 aggregation time at the central node, seconds.
+    pub aggregate_s: f64,
+    /// End-to-end `T = max_n(t¹+t²) + t³`.
+    pub total_s: f64,
+}
+
+/// Latency model: predicts Eq. 3 for a policy without executing anything.
+pub struct LatencyModel<'a> {
+    pub devices: &'a [DeviceProfile],
+    pub topology: &'a Topology,
+    /// Optional learned per-device predictors; analytic fallback otherwise.
+    pub predictors: Option<&'a [LatencyPredictor]>,
+    /// Aggregation fusion dim `d_i` and pooled row count `M`.
+    pub d_i: usize,
+    pub agg_rows: usize,
+}
+
+impl<'a> LatencyModel<'a> {
+    /// Phase-1 latency for sub-model `n` (Eq. 4): learned predictor when
+    /// trained, analytic FLOPs/throughput otherwise.
+    pub fn phase1_s(&self, n: usize, arch: &Arch) -> f64 {
+        match self.predictors {
+            Some(ps) => ps[n].predict_ms(&arch_features(arch)) / 1e3,
+            None => self.devices[n].compute_time_s(CostModel::flops_per_sample(arch)),
+        }
+    }
+
+    /// Phase-2 latency (Eq. 5): one-shot feature transfer to the central node.
+    pub fn phase2_s(&self, n: usize, arch: &Arch) -> f64 {
+        self.topology.to_central_s(n, arch.feature_bytes())
+    }
+
+    /// Phase-3 latency (Eq. 6): `2·M·d_i·d_agg / g` at the central node.
+    pub fn phase3_s(&self, d_agg: usize) -> f64 {
+        let g = self.devices[self.topology.central].effective_gflops() * 1e9;
+        CostModel::aggregation_flops(d_agg, self.d_i, self.agg_rows) / g
+    }
+
+    /// Full Eq. 3 for a policy.
+    pub fn breakdown(&self, policy: &DecompositionPolicy, teacher: &Arch) -> LatencyBreakdown {
+        let archs: Vec<Arch> = policy.subs.iter().map(|s| s.to_arch(teacher)).collect();
+        let compute_s: Vec<f64> = archs
+            .iter()
+            .enumerate()
+            .map(|(n, a)| self.phase1_s(n, a))
+            .collect();
+        let transmit_s: Vec<f64> = archs
+            .iter()
+            .enumerate()
+            .map(|(n, a)| self.phase2_s(n, a))
+            .collect();
+        let d_agg: usize = archs.iter().map(|a| a.dim).sum();
+        let aggregate_s = self.phase3_s(d_agg);
+        let slowest = compute_s
+            .iter()
+            .zip(&transmit_s)
+            .map(|(c, t)| c + t)
+            .fold(0.0, f64::max);
+        LatencyBreakdown {
+            compute_s,
+            transmit_s,
+            aggregate_s,
+            total_s: slowest + aggregate_s,
+        }
+    }
+}
+
+/// Accuracy-degradation proxy (Eq. 7): predicted average validation loss of
+/// the sub-models.  Fitted from the manifest's build-time proxy points
+/// (Fig. 16b): a linear model over log-capacity, `L ≈ a − b·log(capacity)`.
+#[derive(Clone, Debug)]
+pub struct AccuracyProxy {
+    a: f64,
+    b: f64,
+    floor: f64,
+}
+
+impl AccuracyProxy {
+    /// Capacity surrogate for a sub-model: parameters scaled by depth.
+    fn capacity(features: &[f64]) -> f64 {
+        // features = [layers, dim, h̄, D̄] (unnormalized, as stored in the
+        // manifest's proxy points)
+        let (l, d, h, dm) = (features[0], features[1], features[2], features[3]);
+        l * d * (h * 24.0 + dm) // ∝ per-layer weight volume
+    }
+
+    /// Least-squares fit of `loss = a − b·log(capacity)` on proxy points.
+    pub fn fit(points: &[ProxyPoint]) -> Self {
+        if points.len() < 2 {
+            return AccuracyProxy { a: 3.0, b: 0.25, floor: 0.05 };
+        }
+        let xs: Vec<f64> = points
+            .iter()
+            .map(|p| Self::capacity(&p.features).ln())
+            .collect();
+        let ys: Vec<f64> = points.iter().map(|p| p.trained_val_loss).collect();
+        let n = xs.len() as f64;
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+        let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+        let floor = ys.iter().cloned().fold(f64::MAX, f64::min) * 0.5;
+        AccuracyProxy { a: my - slope * mx, b: -slope, floor: floor.max(0.0) }
+    }
+
+    /// Uncalibrated default (before artifacts exist).
+    pub fn default_uncalibrated() -> Self {
+        AccuracyProxy { a: 3.2, b: 0.28, floor: 0.05 }
+    }
+
+    /// Predicted validation loss for one sub-model config.
+    pub fn loss_for(&self, features: &[f64; 4]) -> f64 {
+        (self.a - self.b * Self::capacity(features).ln()).max(self.floor)
+    }
+
+    /// Eq. 7: mean predicted loss across the policy's sub-models.
+    pub fn policy_loss(&self, policy: &DecompositionPolicy) -> f64 {
+        let total: f64 = policy
+            .subs
+            .iter()
+            .map(|s| self.loss_for(&s.features()))
+            .sum();
+        total / policy.subs.len() as f64
+    }
+}
+
+/// The black-box objective `Ψ(C) = L_val(C) + δ·T(C)` (P1) plus constraints.
+pub struct Objective<'a> {
+    pub latency: LatencyModel<'a>,
+    pub accuracy: AccuracyProxy,
+    pub teacher: &'a Arch,
+    pub caps: &'a [DeviceCaps],
+    /// Balance hyperparameter δ (per second of latency).
+    pub delta: f64,
+    pub batch: usize,
+}
+
+impl<'a> Objective<'a> {
+    /// Evaluate Ψ; `None` if the policy violates (C1)–(C6).
+    pub fn evaluate(&self, policy: &DecompositionPolicy) -> Option<f64> {
+        policy.check(self.teacher, self.caps, self.batch).ok()?;
+        let t = self.latency.breakdown(policy, self.teacher).total_s;
+        let l = self.accuracy.policy_loss(policy);
+        Some(l + self.delta * t)
+    }
+
+    /// Evaluate without the constraint check (for diagnostics).
+    pub fn evaluate_unchecked(&self, policy: &DecompositionPolicy) -> f64 {
+        let t = self.latency.breakdown(policy, self.teacher).total_s;
+        self.accuracy.policy_loss(policy) + self.delta * t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Mode, SubModelCfg};
+    use crate::net::Link;
+
+    fn teacher() -> Arch {
+        Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20)
+    }
+
+    fn policy() -> DecompositionPolicy {
+        DecompositionPolicy::new(vec![
+            SubModelCfg { layers: 2, dim: 24, heads: 1, mlp_dim: 48 },
+            SubModelCfg { layers: 3, dim: 32, heads: 1, mlp_dim: 64 },
+            SubModelCfg { layers: 3, dim: 40, heads: 2, mlp_dim: 80 },
+        ])
+    }
+
+    fn devices() -> Vec<DeviceProfile> {
+        DeviceProfile::paper_fleet()
+    }
+
+    #[test]
+    fn breakdown_shape_and_total() {
+        let devs = devices();
+        let topo = Topology::star(3, Link::mbps(100.0), 1);
+        let lm = LatencyModel { devices: &devs, topology: &topo, predictors: None, d_i: 64, agg_rows: 4 };
+        let b = lm.breakdown(&policy(), &teacher());
+        assert_eq!(b.compute_s.len(), 3);
+        assert_eq!(b.transmit_s.len(), 3);
+        assert!(b.total_s > 0.0);
+        // eq 3: total = max(c+t) + agg
+        let slowest = b
+            .compute_s
+            .iter()
+            .zip(&b.transmit_s)
+            .map(|(c, t)| c + t)
+            .fold(0.0, f64::max);
+        assert!((b.total_s - (slowest + b.aggregate_s)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn central_device_has_zero_transmit() {
+        let devs = devices();
+        let topo = Topology::star(3, Link::mbps(100.0), 1);
+        let lm = LatencyModel { devices: &devs, topology: &topo, predictors: None, d_i: 64, agg_rows: 4 };
+        let b = lm.breakdown(&policy(), &teacher());
+        assert_eq!(b.transmit_s[1], 0.0);
+        assert!(b.transmit_s[0] > 0.0);
+    }
+
+    #[test]
+    fn lower_bandwidth_increases_total() {
+        let devs = devices();
+        let fast = Topology::star(3, Link::mbps(1000.0), 1);
+        let slow = Topology::star(3, Link::mbps(2.0), 1);
+        let mk = |t: &Topology| LatencyModel {
+            devices: &devs,
+            topology: t,
+            predictors: None,
+            d_i: 64,
+            agg_rows: 4,
+        }
+        .breakdown(&policy(), &teacher())
+        .total_s;
+        let (tf, ts) = (mk(&fast), mk(&slow));
+        assert!(ts > tf);
+    }
+
+    #[test]
+    fn proxy_fit_monotone_decreasing_in_capacity() {
+        let points = vec![
+            ProxyPoint { task: "t".into(), features: vec![2.0, 24.0, 1.0, 48.0], init_val_loss: 3.0, trained_val_loss: 1.8, trained_acc: 0.5 },
+            ProxyPoint { task: "t".into(), features: vec![3.0, 32.0, 1.0, 64.0], init_val_loss: 3.0, trained_val_loss: 1.4, trained_acc: 0.6 },
+            ProxyPoint { task: "t".into(), features: vec![3.0, 40.0, 2.0, 80.0], init_val_loss: 3.0, trained_val_loss: 1.1, trained_acc: 0.7 },
+            ProxyPoint { task: "t".into(), features: vec![4.0, 48.0, 2.0, 96.0], init_val_loss: 3.0, trained_val_loss: 0.9, trained_acc: 0.8 },
+        ];
+        let proxy = AccuracyProxy::fit(&points);
+        let small = proxy.loss_for(&[2.0, 24.0, 1.0, 48.0]);
+        let big = proxy.loss_for(&[4.0, 48.0, 2.0, 96.0]);
+        assert!(small > big, "small {small} vs big {big}");
+    }
+
+    #[test]
+    fn proxy_policy_loss_is_mean(){
+        let proxy = AccuracyProxy::default_uncalibrated();
+        let p = policy();
+        let mean = p.subs.iter().map(|s| proxy.loss_for(&s.features())).sum::<f64>() / 3.0;
+        assert!((proxy.policy_loss(&p) - mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_rejects_invalid() {
+        let devs = devices();
+        let topo = Topology::star(3, Link::mbps(100.0), 1);
+        let caps = vec![
+            DeviceCaps { max_flops: 1e12, max_memory: 1 << 34 };
+            3
+        ];
+        let t = teacher();
+        let obj = Objective {
+            latency: LatencyModel { devices: &devs, topology: &topo, predictors: None, d_i: 64, agg_rows: 4 },
+            accuracy: AccuracyProxy::default_uncalibrated(),
+            teacher: &t,
+            caps: &caps,
+            delta: 1.0,
+            batch: 1,
+        };
+        assert!(obj.evaluate(&policy()).is_some());
+        let mut bad = policy();
+        bad.subs[0].dim = 96; // C2 violated
+        assert!(obj.evaluate(&bad).is_none());
+    }
+
+    #[test]
+    fn delta_trades_latency_for_loss() {
+        // a policy with bigger submodels has lower predicted loss but more
+        // latency; large δ must flip the preference
+        let devs = devices();
+        let topo = Topology::star(3, Link::mbps(100.0), 1);
+        let caps = vec![DeviceCaps { max_flops: 1e12, max_memory: 1 << 34 }; 3];
+        let t = teacher();
+        let small = DecompositionPolicy::new(vec![
+            SubModelCfg { layers: 1, dim: 16, heads: 1, mlp_dim: 32 };
+            3
+        ]);
+        let big = policy();
+        for (delta, expect_small_better) in [(0.0, false), (1_000_000.0, true)] {
+            let obj = Objective {
+                latency: LatencyModel { devices: &devs, topology: &topo, predictors: None, d_i: 64, agg_rows: 4 },
+                accuracy: AccuracyProxy::default_uncalibrated(),
+                teacher: &t,
+                caps: &caps,
+                delta,
+                batch: 1,
+            };
+            let (ps, pb) = (
+                obj.evaluate_unchecked(&small),
+                obj.evaluate_unchecked(&big),
+            );
+            assert_eq!(ps < pb, expect_small_better, "delta={delta} ps={ps} pb={pb}");
+        }
+    }
+}

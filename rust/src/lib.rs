@@ -1,0 +1,38 @@
+//! # CoFormer — collaborative transformer inference on heterogeneous edge devices
+//!
+//! Rust reproduction of *CoFormer: Collaborating with Heterogeneous Edge
+//! Devices for Scalable Transformer Inference* (CS.DC 2025), built as a
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: the DeBo
+//!   decomposition search ([`debo`]), the evaluator's latency/accuracy models
+//!   ([`evaluator`], [`predictor`]), the booster distillation driver
+//!   ([`booster`]), the collaborative-inference coordinator ([`coordinator`])
+//!   and every baseline strategy the paper compares against ([`strategies`]),
+//!   all running over a heterogeneous edge-device simulator ([`device`]) and
+//!   network simulator ([`net`]).
+//! * **L2/L1 (build-time Python)** — JAX transformer + Pallas attention
+//!   kernel, AOT-lowered to HLO text and executed from rust via PJRT
+//!   ([`runtime`]). Python is never on the request path.
+//!
+//! Entry points: the `coformer` CLI (`rust/src/main.rs`), the `paper` binary
+//! that regenerates every table/figure of the paper's evaluation, and the
+//! `examples/` drivers.
+
+pub mod aggregation;
+pub mod booster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod debo;
+pub mod device;
+pub mod evaluator;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod predictor;
+pub mod runtime;
+pub mod strategies;
+pub mod util;
+
+pub use anyhow::{Error, Result};

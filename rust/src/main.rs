@@ -1,0 +1,374 @@
+//! `coformer` — CLI launcher for the collaborative-inference system.
+//!
+//! Subcommands mirror the paper's stages: `search` (DeBo decomposition),
+//! `calibrate` (booster distillation via AOT train steps), `eval`
+//! (collaborative serving of a dataset split), plus `info` and `predict`
+//! utilities.  Argument parsing is hand-rolled (the vendored crate set has
+//! no clap): `--key value` flags after the subcommand.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use coformer::booster::{BoostConfig, Booster};
+use coformer::config::SystemConfig;
+use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
+use coformer::data::Dataset;
+use coformer::debo::{DeBoConfig, DeBoSearch};
+use coformer::device::DeviceProfile;
+use coformer::evaluator::{AccuracyProxy, LatencyModel, Objective};
+use coformer::metrics::render_table;
+use coformer::model::{policy::DeviceCaps, CostModel};
+use coformer::predictor::{collect_dataset, LatencyPredictor};
+use coformer::runtime::{Engine, ExecServer};
+use coformer::Result;
+
+const USAGE: &str = "\
+coformer — CoFormer collaborative transformer inference
+
+USAGE: coformer [--artifacts DIR] <command> [--key value ...]
+
+COMMANDS:
+  info                              show manifest: models, deployments, accuracies
+  search    [--teacher teacher_edgenet] [--devices 3] [--iterations 40]
+            [--delta 20] [--seed 0] [--compute-frac 0.5]
+  calibrate [--deployment edgenet_3dev] [--steps 60]
+  eval      [--deployment edgenet_3dev] [--aggregator mlp] [--split test]
+            [--limit 512] [--bandwidth-mbps 100]
+  predict   [--device jetson-tx2] [--samples 1500]
+";
+
+/// `--key value` flag map for everything after the subcommand.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {:?}", args[i]))?;
+            let v = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("--{k} needs a value"))?;
+            map.insert(k.replace('-', "_"), v.clone());
+            i += 2;
+        }
+        Ok(Flags(map))
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.0.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.0.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.0.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let mut artifacts = PathBuf::from("artifacts");
+    if args.first().map(|a| a == "--artifacts").unwrap_or(false) {
+        anyhow::ensure!(args.len() >= 2, "--artifacts needs a value");
+        artifacts = PathBuf::from(args.remove(1));
+        args.remove(0);
+    }
+    let Some(cmd) = args.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "info" => info(&artifacts),
+        "search" => search(
+            &artifacts,
+            &flags.str("teacher", "teacher_edgenet"),
+            flags.usize("devices", 3)?,
+            flags.usize("iterations", 40)?,
+            flags.f64("delta", 20.0)?,
+            flags.u64("seed", 0)?,
+            flags.f64("compute_frac", 0.5)?,
+        ),
+        "calibrate" => calibrate(
+            &artifacts,
+            &flags.str("deployment", "edgenet_3dev"),
+            flags.usize("steps", 60)?,
+        ),
+        "eval" => eval(
+            &artifacts,
+            &flags.str("deployment", "edgenet_3dev"),
+            &flags.str("aggregator", "mlp"),
+            &flags.str("split", "test"),
+            flags.usize("limit", 512)?,
+            flags.f64("bandwidth_mbps", 100.0)?,
+        ),
+        "predict" => predict(&flags.str("device", "jetson-tx2"), flags.usize("samples", 1500)?),
+        other => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown command {other:?}");
+        }
+    }
+}
+
+fn info(artifacts: &PathBuf) -> Result<()> {
+    let engine = Engine::load(artifacts)?;
+    let m = engine.manifest();
+    let mut rows = Vec::new();
+    let mut names: Vec<&String> = m.models.keys().collect();
+    names.sort();
+    for name in names {
+        let meta = &m.models[name];
+        rows.push(vec![
+            name.clone(),
+            meta.task.clone(),
+            format!("{}", meta.param_count),
+            format!("{:.2}M", CostModel::flops_per_sample(&meta.arch) / 1e6),
+            format!("{:.4}", meta.accuracy_solo),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(&["model", "task", "params", "MFLOPs", "solo acc"], &rows)
+    );
+    let mut rows = Vec::new();
+    for (name, dep) in &m.deployments {
+        for (kind, agg) in &dep.aggregators {
+            rows.push(vec![
+                name.clone(),
+                kind.clone(),
+                dep.members.join("+"),
+                format!("{:.4}", agg.accuracy),
+            ]);
+        }
+    }
+    rows.sort();
+    println!(
+        "{}",
+        render_table(&["deployment", "aggregator", "members", "acc"], &rows)
+    );
+    Ok(())
+}
+
+fn search(
+    artifacts: &PathBuf,
+    teacher_name: &str,
+    n_devices: usize,
+    iterations: usize,
+    delta: f64,
+    seed: u64,
+    compute_frac: f64,
+) -> Result<()> {
+    let engine = Engine::load(artifacts)?;
+    let teacher = engine.manifest().model(teacher_name)?.arch.clone();
+    let devices: Vec<DeviceProfile> = DeviceProfile::extended_fleet()
+        .into_iter()
+        .take(n_devices)
+        .collect();
+    anyhow::ensure!(devices.len() == n_devices, "at most 4 device presets");
+    let topo = coformer::net::Topology::star(
+        n_devices,
+        coformer::net::Link::mbps(100.0),
+        1.min(n_devices - 1),
+    );
+    let teacher_flops = CostModel::flops_per_sample(&teacher);
+    let caps: Vec<DeviceCaps> = devices
+        .iter()
+        .map(|d| DeviceCaps {
+            max_flops: teacher_flops * compute_frac,
+            max_memory: d.memory_bytes,
+        })
+        .collect();
+    let proxy = AccuracyProxy::fit(&engine.manifest().proxy_points);
+    let obj = Objective {
+        latency: LatencyModel {
+            devices: &devices,
+            topology: &topo,
+            predictors: None,
+            d_i: engine.manifest().d_i,
+            agg_rows: teacher.groups,
+        },
+        accuracy: proxy,
+        teacher: &teacher,
+        caps: &caps,
+        delta,
+        batch: 1,
+    };
+    let search = DeBoSearch::new(DeBoConfig { iterations, seed, ..Default::default() });
+    let res = search.run(&obj, n_devices)?;
+    println!(
+        "DeBo search: {} evaluations, best Ψ = {:.4}",
+        res.evaluated, res.best_psi
+    );
+    let mut rows = Vec::new();
+    for (i, s) in res.best.subs.iter().enumerate() {
+        rows.push(vec![
+            devices[i].name.clone(),
+            format!("{}", s.layers),
+            format!("{}", s.dim),
+            format!("{}", s.heads),
+            format!("{}", s.mlp_dim),
+        ]);
+    }
+    println!("{}", render_table(&["device", "l", "d", "h", "D"], &rows));
+    let b = obj.latency.breakdown(&res.best, &teacher);
+    println!("predicted latency: {:.2} ms", b.total_s * 1e3);
+    Ok(())
+}
+
+fn calibrate(artifacts: &PathBuf, deployment: &str, steps: usize) -> Result<()> {
+    let engine = Engine::load(artifacts)?;
+    let booster = Booster::new(
+        &engine,
+        BoostConfig { steps, seed: 0, log_every: (steps / 4).max(1) },
+    );
+    let reports = booster.calibrate_deployment(deployment)?;
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                format!("{:.4}", r.first_loss),
+                format!("{:.4}", r.last_loss),
+                format!("{:.4}", r.mean_per_sample_loss),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(&["member", "first loss", "last loss", "per-sample"], &rows)
+    );
+    Ok(())
+}
+
+fn eval(
+    artifacts: &PathBuf,
+    deployment: &str,
+    aggregator: &str,
+    split: &str,
+    limit: usize,
+    bandwidth_mbps: f64,
+) -> Result<()> {
+    let server = ExecServer::start(artifacts.clone())?;
+    let exec = server.handle();
+    // manifest only — never create a second PJRT client in one process
+    let m = coformer::runtime::Manifest::load(artifacts)?;
+    let dep = m.deployment(deployment)?.clone();
+    let task = m.task(&dep.task)?.clone();
+    let archs: Vec<_> = dep
+        .members
+        .iter()
+        .map(|n| m.model(n).map(|mm| mm.arch.clone()))
+        .collect::<Result<_>>()?;
+    let ds = Dataset::load(artifacts, &task.splits[split])?;
+    let n = if limit == 0 { ds.len() } else { limit.min(ds.len()) };
+    let is_patch = task.mode == "patch";
+    let stride = ds.x_stride();
+
+    let mut config = SystemConfig::paper_default();
+    config.deployment = deployment.into();
+    config.aggregator = aggregator.into();
+    config.bandwidth_mbps = bandwidth_mbps;
+    while config.devices.len() < dep.members.len() {
+        config
+            .devices
+            .push(coformer::config::DeviceSpec::Preset("rpi-4b".into()));
+    }
+    config.devices.truncate(dep.members.len());
+    config.central = config.central.min(dep.members.len() - 1);
+
+    for member in &dep.members {
+        exec.warmup(member)?;
+    }
+    let coord = Coordinator::start(config, exec, dep.clone(), archs, stride)?;
+    let handle = coord.handle();
+    let payloads: Vec<RequestPayload> = (0..n)
+        .map(|i| {
+            if is_patch {
+                RequestPayload::F32(ds.gather_x_f32(&[i]))
+            } else {
+                RequestPayload::I32(ds.gather_x_i32(&[i]))
+            }
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = serve_all(&handle, payloads)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = coord.shutdown()?;
+
+    let correct = responses
+        .iter()
+        .enumerate()
+        .filter(|(i, r)| {
+            if task.task_kind == "det" {
+                let classes = task.num_classes + 1;
+                let toks = r.logits.len() / classes;
+                let y = ds.gather_y(&[*i]);
+                (0..toks)
+                    .filter(|&t| {
+                        coformer::metrics::argmax(&r.logits[t * classes..(t + 1) * classes])
+                            as i32
+                            == y[t]
+                    })
+                    .count()
+                    > toks / 2
+            } else {
+                r.prediction as i32 == ds.y[*i]
+            }
+        })
+        .count();
+    println!("deployment={deployment} aggregator={aggregator} split={split} n={n}");
+    println!(
+        "accuracy={:.4}  virtual p50={:.2} ms p95={:.2} ms  energy/req={:.1} mJ",
+        correct as f64 / n as f64,
+        stats.virtual_latency.p50_ms(),
+        stats.virtual_latency.p95_ms(),
+        stats.total_energy_j / n as f64 * 1e3,
+    );
+    println!(
+        "host throughput={:.1} req/s (wall {:.2}s, {} batches, mean batch {:.1})",
+        n as f64 / wall,
+        wall,
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64
+    );
+    Ok(())
+}
+
+fn predict(device: &str, samples: usize) -> Result<()> {
+    let profile = coformer::config::preset(device)?;
+    let teacher =
+        coformer::model::Arch::uniform(coformer::model::Mode::Patch, 4, 96, 24, 4, 192, 20);
+    let train = collect_dataset(&profile, &teacher, samples, 0.03, 7);
+    let test = collect_dataset(&profile, &teacher, samples / 5, 0.0, 11);
+    let p = LatencyPredictor::fit(&train, 60, 3);
+    let rmse = p.rmse_ms(&test);
+    let mean: f64 = test.iter().map(|s| s.latency_ms).sum::<f64>() / test.len() as f64;
+    println!(
+        "device={} train={} test={} rmse={:.3} ms (mean latency {:.3} ms, rel {:.1}%)",
+        profile.name,
+        train.len(),
+        test.len(),
+        rmse,
+        mean,
+        rmse / mean * 100.0
+    );
+    Ok(())
+}

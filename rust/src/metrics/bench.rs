@@ -1,0 +1,94 @@
+//! Self-timed micro-benchmark harness (criterion is not in the vendored
+//! crate set).  Warmup + timed iterations, reports mean / p50 / p95 in a
+//! criterion-like line so `cargo bench` output stays scannable.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let fmt = |ns: f64| -> String {
+            if ns < 1e3 {
+                format!("{ns:.0} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.2} s", ns / 1e9)
+            }
+        };
+        println!(
+            "{:<44} time: [{} {} {}]  ({} iters)",
+            self.name,
+            fmt(self.p50_ns),
+            fmt(self.mean_ns),
+            fmt(self.p95_ns),
+            self.iters
+        );
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((q * samples.len() as f64) as usize).min(samples.len() - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: p(0.50),
+        p95_ns: p(0.95),
+    };
+    r.report();
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_percentiles() {
+        let r = bench("noop", 2, 50, || {
+            black_box(1 + 1);
+        });
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 50);
+    }
+
+    #[test]
+    fn bench_measures_sleeps() {
+        let r = bench("sleep", 0, 3, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        assert!(r.mean_ns >= 2e6);
+    }
+}

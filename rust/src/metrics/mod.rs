@@ -1,0 +1,320 @@
+//! Measurement utilities: latency statistics (mean ± std, percentiles, as
+//! the paper reports "50 runs without break"), accuracy / mAP computation,
+//! and table rendering for the paper-reproduction harness.
+
+pub mod bench;
+
+/// Latency sample collector (the PyTorch-Profiler analog).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        assert!(ms.is_finite() && ms >= 0.0, "bad latency sample {ms}");
+        self.samples_ms.push(ms);
+    }
+
+    pub fn record_s(&mut self, s: f64) {
+        self.record_ms(s * 1e3);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn std_ms(&self) -> f64 {
+        let n = self.samples_ms.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mu = self.mean_ms();
+        (self.samples_ms.iter().map(|x| (x - mu).powi(2)).sum::<f64>() / (n - 1) as f64)
+            .sqrt()
+    }
+
+    /// Percentile by nearest-rank (p in [0, 100]).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
+        v[rank.min(v.len()) - 1]
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(50.0)
+    }
+    pub fn p95_ms(&self) -> f64 {
+        self.percentile_ms(95.0)
+    }
+
+    /// Throughput in requests/s given the recorded per-request latencies
+    /// were produced back-to-back.
+    pub fn throughput_rps(&self) -> f64 {
+        let total_s = self.samples_ms.iter().sum::<f64>() / 1e3;
+        if total_s == 0.0 {
+            return 0.0;
+        }
+        self.count() as f64 / total_s
+    }
+}
+
+/// Top-1 accuracy from logits rows.
+pub fn top1_accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut correct = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let pred = argmax(row);
+        if pred as i32 == y {
+            correct += 1;
+        }
+    }
+    correct as f64 / labels.len() as f64
+}
+
+/// Per-token accuracy for the detection analog `(B, S, C+1)` logits.
+pub fn per_token_accuracy(
+    logits: &[f32],
+    labels: &[i32],
+    tokens: usize,
+    classes: usize,
+) -> f64 {
+    assert_eq!(labels.len() % tokens, 0);
+    top1_accuracy(logits, labels, classes)
+}
+
+/// Mean average precision (area under precision-recall, 11-point) for the
+/// detection analog: each non-background class scored one-vs-rest over
+/// patches.
+pub fn mean_average_precision(
+    logits: &[f32],
+    labels: &[i32],
+    classes_incl_bg: usize,
+) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * classes_incl_bg);
+    let mut aps = Vec::new();
+    for c in 1..classes_incl_bg {
+        let mut scored: Vec<(f32, bool)> = (0..n)
+            .map(|i| {
+                let row = &logits[i * classes_incl_bg..(i + 1) * classes_incl_bg];
+                (softmax_prob(row, c), labels[i] == c as i32)
+            })
+            .collect();
+        let positives = scored.iter().filter(|(_, p)| *p).count();
+        if positives == 0 {
+            continue;
+        }
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut tp = 0usize;
+        let mut pr: Vec<(f64, f64)> = Vec::with_capacity(n); // (recall, precision)
+        for (k, (_, is_pos)) in scored.iter().enumerate() {
+            if *is_pos {
+                tp += 1;
+            }
+            pr.push((tp as f64 / positives as f64, tp as f64 / (k + 1) as f64));
+        }
+        // 11-point interpolation
+        let mut ap = 0.0;
+        for r in 0..=10 {
+            let r = r as f64 / 10.0;
+            let p = pr
+                .iter()
+                .filter(|(rec, _)| *rec >= r)
+                .map(|(_, p)| *p)
+                .fold(0.0, f64::max);
+            ap += p / 11.0;
+        }
+        aps.push(ap);
+    }
+    if aps.is_empty() {
+        0.0
+    } else {
+        aps.iter().sum::<f64>() / aps.len() as f64
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn softmax_prob(row: &[f32], idx: usize) -> f32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = row.iter().map(|&v| (v - m).exp()).sum();
+    (row[idx] - m).exp() / denom
+}
+
+/// Render an aligned text table (the harness's paper-row output).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{:w$}", c, w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(
+        headers.iter().map(|s| s.to_string()).collect(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_mean_std() {
+        let mut s = LatencyStats::new();
+        for x in [10.0, 20.0, 30.0] {
+            s.record_ms(x);
+        }
+        assert!((s.mean_ms() - 20.0).abs() < 1e-12);
+        assert!((s.std_ms() - 10.0).abs() < 1e-12);
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut s = LatencyStats::new();
+        for x in 1..=100 {
+            s.record_ms(x as f64);
+        }
+        assert_eq!(s.p50_ms(), 50.0);
+        assert_eq!(s.p95_ms(), 95.0);
+        assert_eq!(s.percentile_ms(100.0), 100.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.p95_ms(), 0.0);
+        assert_eq!(s.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn throughput_inverse_of_latency() {
+        let mut s = LatencyStats::new();
+        for _ in 0..10 {
+            s.record_ms(100.0); // 10 rps
+        }
+        assert!((s.throughput_rps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nan_sample_rejected() {
+        LatencyStats::new().record_ms(f64::NAN);
+    }
+
+    #[test]
+    fn top1_basic() {
+        // logits: sample0 → class1, sample1 → class0
+        let logits = [0.1, 0.9, 0.8, 0.2];
+        assert_eq!(top1_accuracy(&logits, &[1, 0], 2), 1.0);
+        assert_eq!(top1_accuracy(&logits, &[0, 0], 2), 0.5);
+    }
+
+    #[test]
+    fn map_perfect_detector() {
+        // 4 patches, 3 classes incl bg; logits cleanly separate
+        let logits = [
+            9.0, 0.0, 0.0, // bg
+            0.0, 9.0, 0.0, // class 1
+            0.0, 0.0, 9.0, // class 2
+            9.0, 0.0, 0.0, // bg
+        ];
+        let labels = [0, 1, 2, 0];
+        let map = mean_average_precision(&logits, &labels, 3);
+        assert!((map - 1.0).abs() < 1e-9, "map {map}");
+    }
+
+    #[test]
+    fn map_random_detector_low() {
+        let n = 400;
+        let mut logits = Vec::new();
+        let mut labels = Vec::new();
+        let mut state = 12345u64;
+        let mut rnd = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 33) as f32) / (u32::MAX as f32)
+        };
+        for i in 0..n {
+            for _ in 0..3 {
+                logits.push(rnd());
+            }
+            labels.push((i % 3) as i32);
+        }
+        let map = mean_average_precision(&logits, &labels, 3);
+        assert!(map < 0.6, "random map should be low, got {map}");
+    }
+
+    #[test]
+    fn map_ignores_absent_classes() {
+        let logits = [9.0, 0.0, 0.0, 0.0, 9.0, 0.0];
+        let labels = [0, 1]; // class 2 absent
+        let map = mean_average_precision(&logits, &labels, 3);
+        assert!((map - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_rendering_aligns() {
+        let t = render_table(
+            &["model", "ms"],
+            &[
+                vec!["a".into(), "1.0".into()],
+                vec!["longer-name".into(), "2.0".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("model"));
+        assert!(lines[3].starts_with("longer-name"));
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+    }
+}

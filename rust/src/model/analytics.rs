@@ -1,0 +1,187 @@
+//! Cost analytics: FLOPs, parameter counts and memory footprints derived
+//! from an [`Arch`] — the `ω(C_n)` / `φ(C_n)` functions of the paper's
+//! constraints (C5)/(C6) and the inputs to the latency predictor's
+//! synthetic measurement campaign.
+
+use super::arch::{Arch, Mode, TaskKind};
+
+/// Analytic cost model over architectures.
+pub struct CostModel;
+
+impl CostModel {
+    /// Exact parameter count; mirrors `python/compile/model.py::param_specs`.
+    pub fn param_count(arch: &Arch) -> usize {
+        let d = arch.dim;
+        let mut n = 0usize;
+        n += match arch.mode {
+            Mode::Patch => arch.patch_dim() * d + d, // embed_w + embed_b
+            Mode::Token => arch.vocab * d,           // embed_w lookup
+        };
+        n += d; // cls
+        n += (arch.tokens() + 1) * d; // pos
+        for i in 0..arch.layers {
+            let inner = arch.heads[i] * arch.head_dim;
+            let dm = arch.mlp_dims[i];
+            n += 2 * d; // ln1
+            n += d * 3 * inner + 3 * inner; // qkv
+            n += inner * d + d; // proj
+            n += 2 * d; // ln2
+            n += d * dm + dm; // fc1
+            n += dm * d + d; // fc2
+        }
+        n += 2 * d; // ln_f
+        n += d * arch.head_out() + arch.head_out(); // head
+        n
+    }
+
+    /// Forward FLOPs for one sample, in the *published* MAC-counting
+    /// convention (one multiply-accumulate = one FLOP), so catalog numbers
+    /// line up: DeiT-B (l=12, d=768, h=12, D=3072 @224²) ≈ 17.6 G.
+    pub fn flops_per_sample(arch: &Arch) -> f64 {
+        let s = arch.seq() as f64;
+        let d = arch.dim as f64;
+        let dh = arch.head_dim as f64;
+        let mut fl = 0.0;
+        if arch.mode == Mode::Patch {
+            fl += s * arch.patch_dim() as f64 * d;
+        }
+        for i in 0..arch.layers {
+            let h = arch.heads[i] as f64;
+            let dm = arch.mlp_dims[i] as f64;
+            let inner = h * dh;
+            fl += s * d * 3.0 * inner; // qkv projection
+            fl += h * s * s * dh; // q·kᵀ
+            fl += h * s * s * dh; // p·v
+            fl += s * inner * d; // output projection
+            fl += 2.0 * s * d * dm; // fc1 + fc2
+        }
+        let head_rows = match arch.task {
+            TaskKind::Cls => 1.0,
+            TaskKind::Det => arch.tokens() as f64,
+        };
+        fl += head_rows * d * arch.head_out() as f64;
+        fl
+    }
+
+    /// Peak inference memory in bytes: parameters + activations + a fixed
+    /// runtime overhead (allocator/arena), matching how the paper reports
+    /// per-device memory usage.
+    pub fn memory_bytes(arch: &Arch, batch: usize) -> usize {
+        let params = Self::param_count(arch) * 4;
+        let s = arch.seq();
+        // residual stream + widest intermediate (qkv or mlp hidden)
+        let widest = arch
+            .heads
+            .iter()
+            .zip(&arch.mlp_dims)
+            .map(|(&h, &dm)| (3 * h * arch.head_dim).max(dm))
+            .max()
+            .unwrap_or(arch.dim);
+        let acts = batch * s * (2 * arch.dim + widest) * 4;
+        const RUNTIME_OVERHEAD: usize = 8 << 20; // 8 MiB arena
+        params + acts + RUNTIME_OVERHEAD
+    }
+
+    /// FLOPs of the aggregation module (paper Eq. 6 numerator `2·M·d_i·d_agg`)
+    /// for one sample, where `M` is the pooled row count.
+    pub fn aggregation_flops(d_agg: usize, d_i: usize, rows: usize) -> f64 {
+        2.0 * rows as f64 * d_agg as f64 * d_i as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::Mode;
+
+    fn teacher() -> Arch {
+        Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20)
+    }
+
+    #[test]
+    fn param_count_matches_python_formula() {
+        // hand-computed for the edgenet teacher:
+        // embed 48*96+96, cls 96, pos 17*96,
+        // per layer: 2*96 + 96*288+288 + 96*96+96 + 2*96 + 96*192+192 + 192*96+96
+        let a = teacher();
+        let per_layer = 2 * 96 + 96 * 288 + 288 + 96 * 96 + 96 + 2 * 96 + 96 * 192 + 192 + 192 * 96 + 96;
+        let expect = (48 * 96 + 96) + 96 + 17 * 96 + 4 * per_layer + 2 * 96 + 96 * 20 + 20;
+        assert_eq!(CostModel::param_count(&a), expect);
+    }
+
+    #[test]
+    fn param_count_token_mode() {
+        let mut a = teacher();
+        a.mode = Mode::Token;
+        // token mode swaps patch embed for a vocab lookup, no embed bias
+        let delta_patch = 48 * 96 + 96;
+        let delta_token = 64 * 96;
+        // token mode also has 33 pos entries vs 17
+        let pos_delta = (33 - 17) * 96;
+        assert_eq!(
+            CostModel::param_count(&a),
+            CostModel::param_count(&teacher()) - delta_patch + delta_token + pos_delta
+        );
+    }
+
+    #[test]
+    fn flops_scale_superlinearly_with_dim() {
+        let small = Arch::uniform(Mode::Patch, 2, 24, 8, 1, 48, 20);
+        let big = Arch::uniform(Mode::Patch, 2, 48, 8, 1, 96, 20);
+        let r = CostModel::flops_per_sample(&big) / CostModel::flops_per_sample(&small);
+        assert!(r > 2.0, "doubling d should >2x flops, got {r}");
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_layers() {
+        let l2 = Arch::uniform(Mode::Patch, 2, 48, 8, 2, 96, 20);
+        let l4 = Arch::uniform(Mode::Patch, 4, 48, 8, 2, 96, 20);
+        let f2 = CostModel::flops_per_sample(&l2);
+        let f4 = CostModel::flops_per_sample(&l4);
+        // block flops double; embed/head are shared
+        assert!(f4 / f2 > 1.8 && f4 / f2 < 2.05, "got {}", f4 / f2);
+    }
+
+    #[test]
+    fn teacher_flops_order_of_magnitude() {
+        // ~0.3M params × 17 tokens ≈ 5 MFLOPs (MAC convention); wide band
+        let fl = CostModel::flops_per_sample(&teacher());
+        assert!(fl > 2e6 && fl < 3e7, "teacher flops {fl}");
+    }
+
+    #[test]
+    fn memory_grows_with_batch() {
+        let a = teacher();
+        assert!(CostModel::memory_bytes(&a, 16) > CostModel::memory_bytes(&a, 1));
+    }
+
+    #[test]
+    fn memory_dominated_by_params_at_batch1() {
+        let a = teacher();
+        let m = CostModel::memory_bytes(&a, 1);
+        assert!(m >= CostModel::param_count(&a) * 4);
+    }
+
+    #[test]
+    fn decomposed_submodels_fit_smaller() {
+        let t = teacher();
+        let sub = Arch::uniform(Mode::Patch, 2, 24, 24, 1, 48, 20);
+        assert!(CostModel::flops_per_sample(&sub) < CostModel::flops_per_sample(&t) / 4.0);
+        assert!(CostModel::memory_bytes(&sub, 1) < CostModel::memory_bytes(&t, 1));
+    }
+
+    #[test]
+    fn deit_b_matches_published_gflops() {
+        // the calibration anchor: DeiT-B ≈ 17.6 G published
+        let mut a = Arch::uniform(Mode::Patch, 12, 768, 64, 12, 3072, 1000);
+        a.img_size = 224;
+        a.patch_size = 16;
+        let g = CostModel::flops_per_sample(&a) / 1e9;
+        assert!((16.0..19.5).contains(&g), "DeiT-B gflops {g}");
+    }
+
+    #[test]
+    fn aggregation_flops_eq6() {
+        assert_eq!(CostModel::aggregation_flops(96, 64, 4), 2.0 * 4.0 * 96.0 * 64.0);
+    }
+}

@@ -1,0 +1,324 @@
+//! Architecture configuration — the paper's `C_n = {l_n, d_n, h_n, D_n}`.
+//!
+//! Mirrors `python/compile/model.py::Arch`; the manifest embeds the JSON form
+//! so the two sides never drift.
+
+use crate::util::Json;
+
+/// Input modality: ViT-style patches or BERT/GPT-style tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Patch,
+    Token,
+}
+
+/// Task head kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Single-label classification (CLS-token head).
+    Cls,
+    /// Per-patch detection analog (per-token head, class 0 = background).
+    Det,
+}
+
+/// A transformer architecture (teacher or decomposed sub-model).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arch {
+    pub mode: Mode,
+    /// Number of transformer blocks `l`.
+    pub layers: usize,
+    /// Embedding dimension `d`.
+    pub dim: usize,
+    /// Per-head dimension (fixed across the family).
+    pub head_dim: usize,
+    /// Per-layer head counts `h^{1:l}`.
+    pub heads: Vec<usize>,
+    /// Per-layer MLP hidden dims `D^{1:l}`.
+    pub mlp_dims: Vec<usize>,
+    pub num_classes: usize,
+    pub task: TaskKind,
+    pub groups: usize,
+    pub img_size: usize,
+    pub patch_size: usize,
+    pub chans: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+#[allow(dead_code)]
+fn default_task() -> TaskKind {
+    TaskKind::Cls
+}
+fn default_groups() -> usize {
+    4
+}
+fn default_img() -> usize {
+    16
+}
+fn default_patch() -> usize {
+    4
+}
+fn default_chans() -> usize {
+    3
+}
+fn default_vocab() -> usize {
+    64
+}
+fn default_seq() -> usize {
+    32
+}
+
+impl Arch {
+    /// Uniform-per-layer constructor (mirrors `Arch.uniform` in python).
+    pub fn uniform(
+        mode: Mode,
+        layers: usize,
+        dim: usize,
+        head_dim: usize,
+        heads: usize,
+        mlp_dim: usize,
+        num_classes: usize,
+    ) -> Self {
+        Arch {
+            mode,
+            layers,
+            dim,
+            head_dim,
+            heads: vec![heads; layers],
+            mlp_dims: vec![mlp_dim; layers],
+            num_classes,
+            task: TaskKind::Cls,
+            groups: default_groups(),
+            img_size: default_img(),
+            patch_size: default_patch(),
+            chans: default_chans(),
+            vocab: default_vocab(),
+            seq_len: default_seq(),
+        }
+    }
+
+    /// Content tokens (excluding the CLS token).
+    pub fn tokens(&self) -> usize {
+        match self.mode {
+            Mode::Patch => (self.img_size / self.patch_size).pow(2),
+            Mode::Token => self.seq_len,
+        }
+    }
+
+    /// Sequence length seen by the blocks (content + CLS).
+    pub fn seq(&self) -> usize {
+        self.tokens() + 1
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch_size * self.patch_size * self.chans
+    }
+
+    /// Output head width.
+    pub fn head_out(&self) -> usize {
+        match self.task {
+            TaskKind::Cls => self.num_classes,
+            TaskKind::Det => self.num_classes + 1,
+        }
+    }
+
+    /// Parse from the manifest's JSON form (`Arch.to_json()` in python).
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let mode = match v.req("mode")?.as_str()? {
+            "patch" => Mode::Patch,
+            "token" => Mode::Token,
+            other => anyhow::bail!("unknown mode {other}"),
+        };
+        let task = match v.get("task").map(|t| t.as_str()).transpose()? {
+            Some("det") => TaskKind::Det,
+            _ => TaskKind::Cls,
+        };
+        let opt = |key: &str, default: usize| -> crate::Result<usize> {
+            v.get(key).map(|x| x.as_usize()).transpose().map(|o| o.unwrap_or(default))
+        };
+        let a = Arch {
+            mode,
+            layers: v.req("layers")?.as_usize()?,
+            dim: v.req("dim")?.as_usize()?,
+            head_dim: v.req("head_dim")?.as_usize()?,
+            heads: v.req("heads")?.usize_arr()?,
+            mlp_dims: v.req("mlp_dims")?.usize_arr()?,
+            num_classes: v.req("num_classes")?.as_usize()?,
+            task,
+            groups: opt("groups", default_groups())?,
+            img_size: opt("img_size", default_img())?,
+            patch_size: opt("patch_size", default_patch())?,
+            chans: opt("chans", default_chans())?,
+            vocab: opt("vocab", default_vocab())?,
+            seq_len: opt("seq_len", default_seq())?,
+        };
+        a.validate()?;
+        Ok(a)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(match self.mode { Mode::Patch => "patch", Mode::Token => "token" })),
+            ("layers", Json::num(self.layers as f64)),
+            ("dim", Json::num(self.dim as f64)),
+            ("head_dim", Json::num(self.head_dim as f64)),
+            ("heads", Json::Arr(self.heads.iter().map(|&h| Json::num(h as f64)).collect())),
+            ("mlp_dims", Json::Arr(self.mlp_dims.iter().map(|&d| Json::num(d as f64)).collect())),
+            ("num_classes", Json::num(self.num_classes as f64)),
+            ("task", Json::str(match self.task { TaskKind::Cls => "cls", TaskKind::Det => "det" })),
+            ("groups", Json::num(self.groups as f64)),
+            ("img_size", Json::num(self.img_size as f64)),
+            ("patch_size", Json::num(self.patch_size as f64)),
+            ("chans", Json::num(self.chans as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+        ])
+    }
+
+    /// Structural validity (shapes line up, per-layer vectors sized).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.layers >= 1, "layers must be >= 1");
+        anyhow::ensure!(self.heads.len() == self.layers, "heads len mismatch");
+        anyhow::ensure!(
+            self.mlp_dims.len() == self.layers,
+            "mlp_dims len mismatch"
+        );
+        anyhow::ensure!(self.heads.iter().all(|&h| h >= 1), "zero heads");
+        anyhow::ensure!(self.mlp_dims.iter().all(|&d| d >= 1), "zero mlp dim");
+        anyhow::ensure!(self.dim >= 1 && self.head_dim >= 1, "zero dims");
+        if self.task == TaskKind::Cls {
+            anyhow::ensure!(
+                self.tokens() % self.groups == 0,
+                "tokens {} not divisible by groups {}",
+                self.tokens(),
+                self.groups
+            );
+        }
+        Ok(())
+    }
+
+    /// Mean head count across layers (the latency-predictor feature `h̄`).
+    pub fn mean_heads(&self) -> f64 {
+        self.heads.iter().sum::<usize>() as f64 / self.layers as f64
+    }
+
+    /// Mean MLP dim across layers (the latency-predictor feature `D̄`).
+    pub fn mean_mlp(&self) -> f64 {
+        self.mlp_dims.iter().sum::<usize>() as f64 / self.layers as f64
+    }
+
+    /// Bytes of the Phase-2 feature payload for one sample.
+    ///
+    /// Cls: `groups × d` downsampled features; Det: `tokens × d`.
+    pub fn feature_bytes(&self) -> usize {
+        let rows = match self.task {
+            TaskKind::Cls => self.groups,
+            TaskKind::Det => self.tokens(),
+        };
+        rows * self.dim * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Arch {
+        Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20)
+    }
+
+    #[test]
+    fn tokens_patch_mode() {
+        assert_eq!(base().tokens(), 16);
+        assert_eq!(base().seq(), 17);
+    }
+
+    #[test]
+    fn tokens_token_mode() {
+        let mut a = base();
+        a.mode = Mode::Token;
+        a.seq_len = 32;
+        assert_eq!(a.tokens(), 32);
+    }
+
+    #[test]
+    fn patch_dim() {
+        assert_eq!(base().patch_dim(), 48);
+    }
+
+    #[test]
+    fn head_out_by_task() {
+        let mut a = base();
+        assert_eq!(a.head_out(), 20);
+        a.task = TaskKind::Det;
+        assert_eq!(a.head_out(), 21);
+    }
+
+    #[test]
+    fn validate_accepts_good() {
+        base().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_head_len_mismatch() {
+        let mut a = base();
+        a.heads.pop();
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_heads() {
+        let mut a = base();
+        a.heads[0] = 0;
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_groups() {
+        let mut a = base();
+        a.groups = 3; // 16 % 3 != 0
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn mean_features() {
+        let mut a = base();
+        a.heads = vec![1, 2, 3, 4];
+        a.mlp_dims = vec![48, 48, 96, 96];
+        assert!((a.mean_heads() - 2.5).abs() < 1e-12);
+        assert!((a.mean_mlp() - 72.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feature_bytes_cls_vs_det() {
+        let mut a = base();
+        assert_eq!(a.feature_bytes(), 4 * 96 * 4);
+        a.task = TaskKind::Det;
+        assert_eq!(a.feature_bytes(), 16 * 96 * 4);
+    }
+
+    #[test]
+    fn json_roundtrip_matches_python_manifest_form() {
+        let json = r#"{
+            "mode": "patch", "layers": 2, "dim": 24, "head_dim": 8,
+            "heads": [1, 2], "mlp_dims": [48, 32], "num_classes": 5,
+            "task": "cls", "groups": 4, "img_size": 16, "patch_size": 4,
+            "chans": 3, "vocab": 64, "seq_len": 32
+        }"#;
+        let a = Arch::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(a.heads, vec![1, 2]);
+        assert_eq!(a.mode, Mode::Patch);
+        let b = Arch::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn json_defaults_applied() {
+        let json = r#"{"mode":"patch","layers":1,"dim":16,"head_dim":8,
+                       "heads":[1],"mlp_dims":[32],"num_classes":4}"#;
+        let a = Arch::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(a.groups, 4);
+        assert_eq!(a.task, TaskKind::Cls);
+        assert_eq!(a.img_size, 16);
+    }
+}

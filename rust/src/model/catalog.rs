@@ -1,0 +1,103 @@
+//! Catalog of the paper's comparison models (Tables I, II, VII).
+//!
+//! These baselines (EfficientFormer, MobileViTv2, …) were run via timm on
+//! Jetson hardware in the paper; we cannot retrain them, so their FLOPs /
+//! memory / params / ImageNet accuracy are catalogued from the paper's own
+//! tables and their latency/energy is *derived* from our device simulator —
+//! exactly the quantity Table II compares at matched FLOPs.  Accuracy
+//! columns are paper-quoted and flagged as such (`acc_source`).
+
+/// Where a catalog accuracy number comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccSource {
+    /// Quoted from the paper's tables (ImageNet-1K).
+    PaperQuoted,
+    /// Measured by this reproduction on the synthetic task.
+    Measured,
+}
+
+/// One catalogued model.
+#[derive(Clone, Debug)]
+pub struct CatalogModel {
+    pub name: &'static str,
+    /// Inference GFLOPs (batch 1).
+    pub gflops: f64,
+    /// Peak inference memory, GB.
+    pub memory_gb: f64,
+    /// Parameters, millions.
+    pub params_m: f64,
+    /// Top-1 accuracy (%), per `acc_source`.
+    pub accuracy: f64,
+    pub acc_source: AccSource,
+    /// Which paper table the numbers come from.
+    pub source: &'static str,
+}
+
+/// Efficient single-edge baselines (paper Table II).
+pub fn efficient_models() -> Vec<CatalogModel> {
+    use AccSource::PaperQuoted;
+    vec![
+        CatalogModel { name: "PoolFormer-M48", gflops: 23.2, memory_gb: 4.39, params_m: 56.0, accuracy: 82.50, acc_source: PaperQuoted, source: "Table II" },
+        CatalogModel { name: "EfficientFormer-L7", gflops: 20.4, memory_gb: 4.31, params_m: 82.1, accuracy: 83.30, acc_source: PaperQuoted, source: "Table II" },
+        CatalogModel { name: "T2T-ViT_t-19", gflops: 19.6, memory_gb: 2.13, params_m: 39.2, accuracy: 81.90, acc_source: PaperQuoted, source: "Table II" },
+        CatalogModel { name: "PoolFormer-M36", gflops: 17.6, memory_gb: 4.31, params_m: 56.0, accuracy: 82.10, acc_source: PaperQuoted, source: "Table II" },
+        CatalogModel { name: "T2T-ViT-19", gflops: 17.0, memory_gb: 2.12, params_m: 39.2, accuracy: 81.90, acc_source: PaperQuoted, source: "Table II" },
+        CatalogModel { name: "MobileViTv2-200", gflops: 15.0, memory_gb: 3.87, params_m: 18.5, accuracy: 81.17, acc_source: PaperQuoted, source: "Table II" },
+    ]
+}
+
+/// The paper's large transformers (Table VII right half).
+pub fn large_transformers() -> Vec<CatalogModel> {
+    use AccSource::PaperQuoted;
+    vec![
+        CatalogModel { name: "Swin-L", gflops: 103.9, memory_gb: 3.3, params_m: 197.0, accuracy: 86.3, acc_source: PaperQuoted, source: "Table VII" },
+        CatalogModel { name: "ViT-L/16", gflops: 123.1, memory_gb: 5.3, params_m: 304.0, accuracy: 85.3, acc_source: PaperQuoted, source: "Table VII" },
+        CatalogModel { name: "DeiT-B", gflops: 17.6, memory_gb: 2.4, params_m: 86.0, accuracy: 83.4, acc_source: PaperQuoted, source: "Table II/IV" },
+        CatalogModel { name: "Flan-T5-Large", gflops: 1780.0, memory_gb: 4.2, params_m: 751.0, accuracy: 0.0, acc_source: PaperQuoted, source: "Table VII" },
+        CatalogModel { name: "GPT2-XL", gflops: 3340.0, memory_gb: 7.8, params_m: 1560.0, accuracy: 0.0, acc_source: PaperQuoted, source: "Table VII" },
+        CatalogModel { name: "BERT-Large", gflops: 79.1, memory_gb: 2.6, params_m: 340.0, accuracy: 0.0, acc_source: PaperQuoted, source: "§IV-B" },
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<CatalogModel> {
+    efficient_models()
+        .into_iter()
+        .chain(large_transformers())
+        .find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_nonempty_and_positive() {
+        for m in efficient_models().iter().chain(large_transformers().iter()) {
+            assert!(m.gflops > 0.0, "{}", m.name);
+            assert!(m.memory_gb > 0.0, "{}", m.name);
+            assert!(m.params_m > 0.0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("GPT2-XL").is_some());
+        assert!(by_name("MobileViTv2-200").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn gpt2xl_exceeds_nano_memory() {
+        // the paper's headline OOM case: 7.8 GB > 4 GB Jetson Nano
+        let m = by_name("GPT2-XL").unwrap();
+        assert!(m.memory_gb > 4.0);
+    }
+
+    #[test]
+    fn table2_grouping_by_flops() {
+        // Table II groups ~20G and ~15-17G models; check both bands exist
+        let models = efficient_models();
+        assert!(models.iter().any(|m| m.gflops > 19.0));
+        assert!(models.iter().any(|m| m.gflops < 18.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Transformer architecture descriptions, cost analytics and decomposition
+//! policies — the vocabulary the rest of the system speaks.
+
+pub mod analytics;
+pub mod arch;
+pub mod catalog;
+pub mod policy;
+
+pub use analytics::CostModel;
+pub use arch::{Arch, Mode, TaskKind};
+pub use policy::{DecompositionPolicy, SubModelCfg};

@@ -1,0 +1,278 @@
+//! Decomposition policies — the paper's `C = {C_1, ..., C_N}` — and the
+//! constraint set (C1)–(C6) of problem (P1).
+
+use super::analytics::CostModel;
+use super::arch::Arch;
+
+/// One sub-model's decomposition decision (uniform per-layer form used by
+/// the search; per-layer vectors are materialized via [`SubModelCfg::to_arch`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SubModelCfg {
+    pub layers: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub mlp_dim: usize,
+}
+
+impl SubModelCfg {
+    pub fn to_arch(&self, teacher: &Arch) -> Arch {
+        let mut a = Arch::uniform(
+            teacher.mode,
+            self.layers,
+            self.dim,
+            teacher.head_dim,
+            self.heads,
+            self.mlp_dim,
+            teacher.num_classes,
+        );
+        a.task = teacher.task;
+        a.groups = teacher.groups;
+        a.img_size = teacher.img_size;
+        a.patch_size = teacher.patch_size;
+        a.chans = teacher.chans;
+        a.vocab = teacher.vocab;
+        a.seq_len = teacher.seq_len;
+        a
+    }
+
+    /// Latency-predictor feature vector `(l, d, h̄, D̄)`.
+    pub fn features(&self) -> [f64; 4] {
+        [
+            self.layers as f64,
+            self.dim as f64,
+            self.heads as f64,
+            self.mlp_dim as f64,
+        ]
+    }
+}
+
+/// The full decomposition decision `C`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecompositionPolicy {
+    pub subs: Vec<SubModelCfg>,
+}
+
+/// Per-device resource caps: `Ω_n` (FLOPs/sample compute budget) and
+/// `Φ_n` (memory bytes).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceCaps {
+    pub max_flops: f64,
+    pub max_memory: usize,
+}
+
+/// Why a policy was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConstraintViolation {
+    /// (C1) a sub-model is deeper than the teacher.
+    Layers { device: usize },
+    /// (C2) Σ d_n exceeds the teacher's d.
+    DimSum,
+    /// (C3) per-layer Σ h exceeds the teacher's h.
+    HeadSum { layer: usize },
+    /// (C4) per-layer Σ D exceeds the teacher's D.
+    MlpSum { layer: usize },
+    /// (C5) compute budget `ω(C_n) > Ω_n`.
+    Compute { device: usize },
+    /// (C6) memory budget `φ(C_n) > Φ_n`.
+    Memory { device: usize },
+}
+
+impl DecompositionPolicy {
+    pub fn new(subs: Vec<SubModelCfg>) -> Self {
+        Self { subs }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Check (C1)–(C6) of problem (P1) against the teacher + device caps.
+    pub fn check(
+        &self,
+        teacher: &Arch,
+        caps: &[DeviceCaps],
+        batch: usize,
+    ) -> Result<(), ConstraintViolation> {
+        assert_eq!(caps.len(), self.subs.len(), "caps/subs length mismatch");
+        // (C1)
+        for (n, s) in self.subs.iter().enumerate() {
+            if s.layers > teacher.layers {
+                return Err(ConstraintViolation::Layers { device: n });
+            }
+        }
+        // (C2)
+        if self.subs.iter().map(|s| s.dim).sum::<usize>() > teacher.dim {
+            return Err(ConstraintViolation::DimSum);
+        }
+        // (C3)/(C4): per teacher layer, over sub-models deep enough to have it
+        for k in 0..teacher.layers {
+            let h_sum: usize = self
+                .subs
+                .iter()
+                .filter(|s| k < s.layers)
+                .map(|s| s.heads)
+                .sum();
+            if h_sum > teacher.heads[k] {
+                return Err(ConstraintViolation::HeadSum { layer: k });
+            }
+            let d_sum: usize = self
+                .subs
+                .iter()
+                .filter(|s| k < s.layers)
+                .map(|s| s.mlp_dim)
+                .sum();
+            if d_sum > teacher.mlp_dims[k] {
+                return Err(ConstraintViolation::MlpSum { layer: k });
+            }
+        }
+        // (C5)/(C6)
+        for (n, (s, cap)) in self.subs.iter().zip(caps).enumerate() {
+            let arch = s.to_arch(teacher);
+            if CostModel::flops_per_sample(&arch) > cap.max_flops {
+                return Err(ConstraintViolation::Compute { device: n });
+            }
+            if CostModel::memory_bytes(&arch, batch) > cap.max_memory {
+                return Err(ConstraintViolation::Memory { device: n });
+            }
+        }
+        Ok(())
+    }
+
+    /// Flat feature encoding for the GP: per device `(l, d, h̄, D̄)`
+    /// normalized by the teacher's corresponding dimension so distances are
+    /// scale-comparable across axes.
+    pub fn encode(&self, teacher: &Arch) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.subs.len() * 4);
+        for s in &self.subs {
+            v.push(s.layers as f64 / teacher.layers as f64);
+            v.push(s.dim as f64 / teacher.dim as f64);
+            v.push(s.heads as f64 / teacher.heads[0] as f64);
+            v.push(s.mlp_dim as f64 / teacher.mlp_dims[0] as f64);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::Mode;
+
+    fn teacher() -> Arch {
+        Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20)
+    }
+
+    fn caps(n: usize) -> Vec<DeviceCaps> {
+        vec![
+            DeviceCaps {
+                max_flops: 1e12,
+                max_memory: 1 << 34,
+            };
+            n
+        ]
+    }
+
+    fn good() -> DecompositionPolicy {
+        DecompositionPolicy::new(vec![
+            SubModelCfg { layers: 2, dim: 24, heads: 1, mlp_dim: 48 },
+            SubModelCfg { layers: 3, dim: 32, heads: 1, mlp_dim: 64 },
+            SubModelCfg { layers: 3, dim: 40, heads: 2, mlp_dim: 80 },
+        ])
+    }
+
+    #[test]
+    fn valid_policy_passes() {
+        good().check(&teacher(), &caps(3), 1).unwrap();
+    }
+
+    #[test]
+    fn c1_layers() {
+        let mut p = good();
+        p.subs[0].layers = 5;
+        assert_eq!(
+            p.check(&teacher(), &caps(3), 1),
+            Err(ConstraintViolation::Layers { device: 0 })
+        );
+    }
+
+    #[test]
+    fn c2_dim_sum() {
+        let mut p = good();
+        p.subs[2].dim = 48; // 24+32+48 = 104 > 96
+        assert_eq!(p.check(&teacher(), &caps(3), 1), Err(ConstraintViolation::DimSum));
+    }
+
+    #[test]
+    fn c3_head_sum_per_layer() {
+        let mut p = good();
+        p.subs[0].heads = 2; // layer 0: 2+1+2 = 5 > 4
+        assert_eq!(
+            p.check(&teacher(), &caps(3), 1),
+            Err(ConstraintViolation::HeadSum { layer: 0 })
+        );
+    }
+
+    #[test]
+    fn c3_respects_depth_differences() {
+        // layer 3 only exists in a 4-deep sub-model; shallow heads don't count
+        let p = DecompositionPolicy::new(vec![
+            SubModelCfg { layers: 4, dim: 48, heads: 4, mlp_dim: 96 },
+            SubModelCfg { layers: 2, dim: 48, heads: 4, mlp_dim: 96 },
+        ]);
+        // layer 0/1: 4+4 = 8 > 4 → violation at layer 0
+        assert_eq!(
+            p.check(&teacher(), &caps(2), 1),
+            Err(ConstraintViolation::HeadSum { layer: 0 })
+        );
+    }
+
+    #[test]
+    fn c4_mlp_sum() {
+        let mut p = good();
+        p.subs[1].mlp_dim = 128; // 48+128+80 = 256 > 192
+        assert_eq!(
+            p.check(&teacher(), &caps(3), 1),
+            Err(ConstraintViolation::MlpSum { layer: 0 })
+        );
+    }
+
+    #[test]
+    fn c5_compute_budget() {
+        let mut c = caps(3);
+        c[2].max_flops = 1.0; // nothing fits
+        assert_eq!(
+            good().check(&teacher(), &c, 1),
+            Err(ConstraintViolation::Compute { device: 2 })
+        );
+    }
+
+    #[test]
+    fn c6_memory_budget() {
+        let mut c = caps(3);
+        c[0].max_memory = 1024;
+        assert_eq!(
+            good().check(&teacher(), &c, 1),
+            Err(ConstraintViolation::Memory { device: 0 })
+        );
+    }
+
+    #[test]
+    fn encode_normalized() {
+        let t = teacher();
+        let v = good().encode(&t);
+        assert_eq!(v.len(), 12);
+        assert!(v.iter().all(|&x| x > 0.0 && x <= 1.0));
+        // first sub: 2/4 layers
+        assert!((v[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_arch_inherits_teacher_geometry() {
+        let t = teacher();
+        let a = good().subs[0].to_arch(&t);
+        assert_eq!(a.head_dim, t.head_dim);
+        assert_eq!(a.num_classes, t.num_classes);
+        assert_eq!(a.img_size, t.img_size);
+        assert_eq!(a.heads, vec![1, 1]);
+    }
+}

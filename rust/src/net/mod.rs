@@ -1,0 +1,145 @@
+//! Network simulator — the `tc`-shaped switch fabric of the paper's testbed.
+//!
+//! The paper connects the Jetsons through a gigabit switch and uses `tc` to
+//! cap bandwidth (2 Mb/s for the motivation study, 100 Mb/s–1 Gb/s for the
+//! Figure-12 sweep).  The transfer-cost model is the paper's own Eq. 5:
+//! `t = |X| / r` plus a per-transfer latency floor.
+
+/// A point-to-point link (device → central node through the switch).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    /// Bandwidth, bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way latency floor, seconds (switch + stack).
+    pub latency_s: f64,
+}
+
+impl Link {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0);
+        assert!(latency_s >= 0.0);
+        Link { bandwidth_bps, latency_s }
+    }
+
+    /// Mb/s convenience constructor (the unit the paper quotes).
+    pub fn mbps(mb: f64) -> Self {
+        Link::new(mb * 1e6, 1e-3)
+    }
+
+    /// Paper Eq. 5: transfer time for `bytes`.
+    pub fn transfer_time_s(&self, bytes: usize) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// Star topology: N edge devices, one of which is the central node.
+/// Transfers to self are free (paper: the central device's own features
+/// never cross the network).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub links: Vec<Link>,
+    pub central: usize,
+}
+
+impl Topology {
+    /// Homogeneous star with `n` devices at `bandwidth` each.
+    pub fn star(n: usize, link: Link, central: usize) -> Self {
+        assert!(central < n);
+        Topology { links: vec![link; n], central }
+    }
+
+    /// Transfer time from device `from` to the central node.
+    pub fn to_central_s(&self, from: usize, bytes: usize) -> f64 {
+        if from == self.central {
+            0.0
+        } else {
+            self.links[from].transfer_time_s(bytes)
+        }
+    }
+
+    /// Device-to-device time (through the switch: both hops share the
+    /// slower link's bandwidth; we model it as the max of the two).
+    pub fn between_s(&self, a: usize, b: usize, bytes: usize) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        self.links[a]
+            .transfer_time_s(bytes)
+            .max(self.links[b].transfer_time_s(bytes))
+    }
+
+    /// `tc`-style reshaping of every link (the Figure-12 sweep).
+    pub fn set_bandwidth_mbps(&mut self, mb: f64) {
+        for l in &mut self.links {
+            l.bandwidth_bps = mb * 1e6;
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.links.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_eq5() {
+        let l = Link::new(2e6, 0.0); // the motivation study's 2 Mb/s
+        // 1 KB = 8192 bits → 4.096 ms
+        assert!((l.transfer_time_s(1024) - 8192.0 / 2e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_floor_added() {
+        let l = Link::new(1e9, 1e-3);
+        assert!(l.transfer_time_s(0) >= 1e-3);
+    }
+
+    #[test]
+    fn mbps_constructor() {
+        let l = Link::mbps(100.0);
+        assert!((l.bandwidth_bps - 1e8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn central_transfer_free() {
+        let t = Topology::star(3, Link::mbps(100.0), 1);
+        assert_eq!(t.to_central_s(1, 1 << 20), 0.0);
+        assert!(t.to_central_s(0, 1 << 20) > 0.0);
+    }
+
+    #[test]
+    fn bandwidth_sweep_monotone() {
+        // Fig 12: higher bandwidth → lower transfer time
+        let mut t = Topology::star(3, Link::mbps(100.0), 0);
+        let t100 = t.to_central_s(1, 1 << 20);
+        t.set_bandwidth_mbps(500.0);
+        let t500 = t.to_central_s(1, 1 << 20);
+        t.set_bandwidth_mbps(1000.0);
+        let t1g = t.to_central_s(1, 1 << 20);
+        assert!(t100 > t500 && t500 > t1g);
+    }
+
+    #[test]
+    fn between_is_symmetric_for_homogeneous_links() {
+        let t = Topology::star(3, Link::mbps(10.0), 0);
+        assert_eq!(t.between_s(1, 2, 4096), t.between_s(2, 1, 4096));
+        assert_eq!(t.between_s(1, 1, 4096), 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_links_use_slower() {
+        let mut t = Topology::star(2, Link::mbps(100.0), 0);
+        t.links[1] = Link::mbps(1.0);
+        let slow = t.links[1].transfer_time_s(1 << 20);
+        assert_eq!(t.between_s(0, 1, 1 << 20), slow);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_rejected() {
+        Link::new(0.0, 0.0);
+    }
+}

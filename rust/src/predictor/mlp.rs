@@ -1,0 +1,275 @@
+//! Minimal dense MLP with Adam — the latency predictor's substrate.
+//!
+//! Deliberately dependency-free (f64, row-major `Vec`s): the predictor is
+//! a 4→600→600→1 network trained once offline; numerical clarity beats
+//! BLAS here.
+
+use crate::util::Rng;
+
+/// Fully-connected network with ReLU hidden activations, linear output.
+pub struct Mlp {
+    /// Per layer: weights `(in, out)` row-major and biases `(out,)`.
+    weights: Vec<Vec<f64>>,
+    biases: Vec<Vec<f64>>,
+    dims: Vec<usize>,
+    // Adam state
+    m_w: Vec<Vec<f64>>,
+    v_w: Vec<Vec<f64>>,
+    m_b: Vec<Vec<f64>>,
+    v_b: Vec<Vec<f64>>,
+    step: u64,
+}
+
+const B1: f64 = 0.9;
+const B2: f64 = 0.999;
+const EPS: f64 = 1e-8;
+
+impl Mlp {
+    /// He-initialized network with the given layer dims, e.g. `[4,600,600,1]`.
+    pub fn new(dims: &[usize], seed: u64) -> Self {
+        assert!(dims.len() >= 2);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for w in dims.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let std = (2.0 / fan_in as f64).sqrt();
+            weights.push(
+                (0..fan_in * fan_out)
+                    .map(|_| std * gauss(&mut rng))
+                    .collect::<Vec<f64>>(),
+            );
+            biases.push(vec![0.0; fan_out]);
+        }
+        let m_w = weights.iter().map(|w| vec![0.0; w.len()]).collect();
+        let v_w = weights.iter().map(|w| vec![0.0; w.len()]).collect();
+        let m_b = biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        let v_b = biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        Mlp { weights, biases, dims: dims.to_vec(), m_w, v_w, m_b, v_b, step: 0 }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Forward pass for a single input.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.dims[0]);
+        let mut act = x.to_vec();
+        for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let (fan_in, fan_out) = (self.dims[li], self.dims[li + 1]);
+            let mut next = b.clone();
+            for i in 0..fan_in {
+                let xi = act[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &w[i * fan_out..(i + 1) * fan_out];
+                for (o, &wv) in row.iter().enumerate() {
+                    next[o] += xi * wv;
+                }
+            }
+            if li + 1 < self.weights.len() {
+                for v in &mut next {
+                    *v = v.max(0.0); // ReLU
+                }
+            }
+            act = next;
+        }
+        act
+    }
+
+    /// One SGD/Adam minibatch step on squared error; returns the batch loss.
+    fn train_batch(&mut self, xs: &[&[f64]], ys: &[f64], lr: f64) -> f64 {
+        let n_layers = self.n_layers();
+        let mut gw: Vec<Vec<f64>> = self.weights.iter().map(|w| vec![0.0; w.len()]).collect();
+        let mut gb: Vec<Vec<f64>> = self.biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        let mut loss = 0.0;
+        for (x, &y) in xs.iter().zip(ys) {
+            // forward with cached activations
+            let mut acts: Vec<Vec<f64>> = vec![x.to_vec()];
+            for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+                let (fan_in, fan_out) = (self.dims[li], self.dims[li + 1]);
+                let prev = &acts[li];
+                let mut next = b.clone();
+                for i in 0..fan_in {
+                    let xi = prev[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let row = &w[i * fan_out..(i + 1) * fan_out];
+                    for (o, &wv) in row.iter().enumerate() {
+                        next[o] += xi * wv;
+                    }
+                }
+                if li + 1 < n_layers {
+                    for v in &mut next {
+                        *v = v.max(0.0);
+                    }
+                }
+                acts.push(next);
+            }
+            let pred = acts[n_layers][0];
+            let err = pred - y;
+            loss += err * err;
+            // backward
+            let mut delta = vec![2.0 * err];
+            for li in (0..n_layers).rev() {
+                let (fan_in, fan_out) = (self.dims[li], self.dims[li + 1]);
+                let prev = &acts[li];
+                let w = &self.weights[li];
+                for o in 0..fan_out {
+                    gb[li][o] += delta[o];
+                }
+                for i in 0..fan_in {
+                    let xi = prev[i];
+                    if xi != 0.0 {
+                        let grow = &mut gw[li][i * fan_out..(i + 1) * fan_out];
+                        for (o, g) in grow.iter_mut().enumerate() {
+                            *g += xi * delta[o];
+                        }
+                    }
+                }
+                if li > 0 {
+                    let mut next_delta = vec![0.0; fan_in];
+                    for i in 0..fan_in {
+                        if prev[i] > 0.0 {
+                            // ReLU gate
+                            let row = &w[i * fan_out..(i + 1) * fan_out];
+                            let mut acc = 0.0;
+                            for (o, &wv) in row.iter().enumerate() {
+                                acc += wv * delta[o];
+                            }
+                            next_delta[i] = acc;
+                        }
+                    }
+                    delta = next_delta;
+                }
+            }
+        }
+        // Adam update with batch-mean gradients
+        let scale = 1.0 / xs.len() as f64;
+        self.step += 1;
+        let t = self.step as f64;
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        for li in 0..n_layers {
+            for (i, g) in gw[li].iter().enumerate() {
+                let g = g * scale;
+                let m = &mut self.m_w[li][i];
+                let v = &mut self.v_w[li][i];
+                *m = B1 * *m + (1.0 - B1) * g;
+                *v = B2 * *v + (1.0 - B2) * g * g;
+                self.weights[li][i] -= lr * (*m / bc1) / ((*v / bc2).sqrt() + EPS);
+            }
+            for (i, g) in gb[li].iter().enumerate() {
+                let g = g * scale;
+                let m = &mut self.m_b[li][i];
+                let v = &mut self.v_b[li][i];
+                *m = B1 * *m + (1.0 - B1) * g;
+                *v = B2 * *v + (1.0 - B2) * g * g;
+                self.biases[li][i] -= lr * (*m / bc1) / ((*v / bc2).sqrt() + EPS);
+            }
+        }
+        loss * scale
+    }
+
+    /// Train for `epochs` over the dataset with the given minibatch size.
+    pub fn train(
+        &mut self,
+        xs: &[[f64; 4]],
+        ys: &[f64],
+        epochs: usize,
+        batch: usize,
+        lr: f64,
+        seed: u64,
+    ) -> f64 {
+        assert_eq!(xs.len(), ys.len());
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut last = f64::NAN;
+        for _ in 0..epochs {
+            // Fisher-Yates shuffle
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(batch) {
+                let bx: Vec<&[f64]> = chunk.iter().map(|&i| xs[i].as_slice()).collect();
+                let by: Vec<f64> = chunk.iter().map(|&i| ys[i]).collect();
+                last = self.train_batch(&bx, &by, lr);
+            }
+        }
+        last
+    }
+}
+
+fn gauss(rng: &mut Rng) -> f64 {
+    rng.gauss()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let net = Mlp::new(&[4, 8, 1], 0);
+        assert_eq!(net.forward(&[0.1, 0.2, 0.3, 0.4]).len(), 1);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = Mlp::new(&[4, 8, 1], 42);
+        let b = Mlp::new(&[4, 8, 1], 42);
+        assert_eq!(a.forward(&[1.0, 2.0, 3.0, 4.0]), b.forward(&[1.0, 2.0, 3.0, 4.0]));
+    }
+
+    #[test]
+    fn learns_linear_function() {
+        let mut net = Mlp::new(&[4, 32, 1], 1);
+        let mut rng = Rng::seed_from_u64(2);
+        let xs: Vec<[f64; 4]> = (0..256)
+            .map(|_| [rng.gen_f64(), rng.gen_f64(), rng.gen_f64(), rng.gen_f64()])
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 0.5 * x[0] + 0.2 * x[1] - 0.3 * x[2] + 0.1)
+            .collect();
+        net.train(&xs, &ys, 120, 32, 3e-3, 3);
+        let mse: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, &y)| (net.forward(x)[0] - y).powi(2))
+            .sum::<f64>()
+            / xs.len() as f64;
+        assert!(mse < 1e-3, "mse {mse}");
+    }
+
+    #[test]
+    fn learns_nonlinear_function() {
+        let mut net = Mlp::new(&[4, 48, 1], 4);
+        let mut rng = Rng::seed_from_u64(5);
+        let xs: Vec<[f64; 4]> = (0..512)
+            .map(|_| [rng.gen_f64(), rng.gen_f64(), rng.gen_f64(), rng.gen_f64()])
+            .collect();
+        // multiplicative interaction — what latency (~ l·d·D) actually is
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] * x[1] + x[2] * x[3]).collect();
+        net.train(&xs, &ys, 120, 32, 5e-3, 6);
+        let mse: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, &y)| (net.forward(x)[0] - y).powi(2))
+            .sum::<f64>()
+            / xs.len() as f64;
+        assert!(mse < 5e-3, "mse {mse}");
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut net = Mlp::new(&[4, 16, 1], 7);
+        let xs: Vec<[f64; 4]> = vec![[0.1, 0.2, 0.3, 0.4]; 8];
+        let ys = vec![1.0; 8];
+        let before = (net.forward(&xs[0])[0] - 1.0).powi(2);
+        net.train(&xs, &ys, 50, 8, 1e-2, 8);
+        let after = (net.forward(&xs[0])[0] - 1.0).powi(2);
+        assert!(after < before * 0.01, "before {before}, after {after}");
+    }
+}

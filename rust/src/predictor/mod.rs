@@ -1,0 +1,207 @@
+//! The latency predictor — supplementary §A of the paper.
+//!
+//! A three-layer MLP (input → 600 ReLU hidden → output) maps the architecture feature
+//! vector `(l, d, h̄, D̄)` to predicted on-device latency.  The paper trains
+//! one predictor per device from thousands of measured
+//! (architecture, latency) pairs; we reproduce that pipeline end-to-end:
+//! [`collect_dataset`] runs a measurement campaign on the device simulator
+//! (with multiplicative measurement noise, as real profiling exhibits), and
+//! [`LatencyPredictor::fit`] trains the MLP with Adam in rust.
+
+pub mod mlp;
+
+use crate::device::DeviceProfile;
+use crate::model::{Arch, CostModel};
+use crate::util::Rng;
+pub use mlp::Mlp;
+
+/// Feature normalization constants (teacher-scale denominators keep inputs
+/// O(1) for the MLP).
+const F_NORM: [f64; 4] = [8.0, 128.0, 8.0, 256.0];
+
+/// Encode `(l, d, h̄, D̄)` into the normalized MLP input.
+pub fn encode_features(layers: f64, dim: f64, mean_heads: f64, mean_mlp: f64) -> [f64; 4] {
+    [
+        layers / F_NORM[0],
+        dim / F_NORM[1],
+        mean_heads / F_NORM[2],
+        mean_mlp / F_NORM[3],
+    ]
+}
+
+pub fn arch_features(arch: &Arch) -> [f64; 4] {
+    encode_features(
+        arch.layers as f64,
+        arch.dim as f64,
+        arch.mean_heads(),
+        arch.mean_mlp(),
+    )
+}
+
+/// One measured sample of the profiling campaign.
+#[derive(Clone, Debug)]
+pub struct LatencySample {
+    pub features: [f64; 4],
+    /// Measured latency, milliseconds.
+    pub latency_ms: f64,
+}
+
+/// Run the offline measurement campaign on a device: sample `n` random
+/// architectures, "measure" each (device-sim compute time × multiplicative
+/// noise), return the dataset.
+pub fn collect_dataset(
+    device: &DeviceProfile,
+    teacher: &Arch,
+    n: usize,
+    noise_frac: f64,
+    seed: u64,
+) -> Vec<LatencySample> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let layers = rng.gen_range(1, teacher.layers);
+        let dim = 8 * rng.gen_range(1, teacher.dim / 8);
+        let heads = rng.gen_range(1, teacher.heads[0]);
+        let mlp = 16 * rng.gen_range(1, teacher.mlp_dims[0] / 16);
+        let mut arch = Arch::uniform(
+            teacher.mode,
+            layers,
+            dim,
+            teacher.head_dim,
+            heads,
+            mlp,
+            teacher.num_classes,
+        );
+        arch.task = teacher.task;
+        arch.img_size = teacher.img_size;
+        arch.seq_len = teacher.seq_len;
+        let true_ms = device.compute_time_s(CostModel::flops_per_sample(&arch)) * 1e3;
+        let noise = 1.0 + noise_frac * (rng.gen_f64() * 2.0 - 1.0);
+        out.push(LatencySample {
+            features: arch_features(&arch),
+            latency_ms: true_ms * noise,
+        });
+    }
+    out
+}
+
+/// Trained per-device latency predictor `f(l, d, h̄, D̄) → ms`.
+///
+/// Targets are regressed in log space: on-device latency spans ~3 orders
+/// of magnitude across the architecture grid, and a linear-space MSE fit
+/// lets the few largest configurations dominate (which is exactly the
+/// relative-error profile real deployments care least about).
+pub struct LatencyPredictor {
+    net: Mlp,
+}
+
+impl LatencyPredictor {
+    /// Fit on a dataset (the paper's "thousands of real latency points").
+    pub fn fit(data: &[LatencySample], epochs: usize, seed: u64) -> Self {
+        assert!(!data.is_empty());
+        let mut net = Mlp::new(&[4, 600, 1], seed);
+        let xs: Vec<[f64; 4]> = data.iter().map(|s| s.features).collect();
+        let ys: Vec<f64> = data.iter().map(|s| s.latency_ms.max(1e-9).ln()).collect();
+        net.train(&xs, &ys, epochs, 32, 2e-3, seed ^ 0x9e37);
+        LatencyPredictor { net }
+    }
+
+    /// Predict latency in milliseconds.
+    pub fn predict_ms(&self, features: &[f64; 4]) -> f64 {
+        self.net.forward(features)[0].exp()
+    }
+
+    pub fn predict_arch_ms(&self, arch: &Arch) -> f64 {
+        self.predict_ms(&arch_features(arch))
+    }
+
+    /// RMSE over a held-out set (the paper reports 8.1 ms on the TX2).
+    pub fn rmse_ms(&self, data: &[LatencySample]) -> f64 {
+        let se: f64 = data
+            .iter()
+            .map(|s| (self.predict_ms(&s.features) - s.latency_ms).powi(2))
+            .sum();
+        (se / data.len() as f64).sqrt()
+    }
+}
+
+/// Analytic fallback predictor (used before a campaign has run): pure
+/// FLOPs/throughput model, zero noise.
+pub fn analytic_latency_ms(device: &DeviceProfile, arch: &Arch) -> f64 {
+    device.compute_time_s(CostModel::flops_per_sample(arch)) * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Mode;
+
+    fn teacher() -> Arch {
+        Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20)
+    }
+
+    #[test]
+    fn features_normalized_o1() {
+        let f = arch_features(&teacher());
+        assert!(f.iter().all(|&x| x > 0.0 && x < 2.0), "{f:?}");
+    }
+
+    #[test]
+    fn dataset_deterministic_by_seed() {
+        let d = DeviceProfile::jetson_tx2();
+        let a = collect_dataset(&d, &teacher(), 10, 0.05, 7);
+        let b = collect_dataset(&d, &teacher(), 10, 0.05, 7);
+        assert_eq!(a.len(), 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.latency_ms, y.latency_ms);
+        }
+    }
+
+    #[test]
+    fn dataset_latencies_positive_and_scaled() {
+        let d = DeviceProfile::jetson_nano();
+        let data = collect_dataset(&d, &teacher(), 100, 0.05, 3);
+        assert!(data.iter().all(|s| s.latency_ms > 0.0));
+        // nano should be slower than tx2 on the same seed's archs
+        let tx2 = collect_dataset(&DeviceProfile::jetson_tx2(), &teacher(), 100, 0.0, 3);
+        let nano = collect_dataset(&d, &teacher(), 100, 0.0, 3);
+        let mean = |v: &[LatencySample]| {
+            v.iter().map(|s| s.latency_ms).sum::<f64>() / v.len() as f64
+        };
+        assert!(mean(&nano) > 2.0 * mean(&tx2));
+    }
+
+    #[test]
+    fn predictor_fits_device_sim() {
+        // train/test split; relative RMSE must be small (paper Fig 16a)
+        let d = DeviceProfile::jetson_tx2();
+        let train = collect_dataset(&d, &teacher(), 600, 0.03, 11);
+        let test = collect_dataset(&d, &teacher(), 100, 0.0, 13);
+        let p = LatencyPredictor::fit(&train, 60, 5);
+        let rmse = p.rmse_ms(&test);
+        let mean: f64 =
+            test.iter().map(|s| s.latency_ms).sum::<f64>() / test.len() as f64;
+        assert!(
+            rmse < 0.25 * mean,
+            "relative RMSE too high: {rmse:.4} vs mean {mean:.4}"
+        );
+    }
+
+    #[test]
+    fn predictor_monotone_in_scale() {
+        let d = DeviceProfile::jetson_tx2();
+        let train = collect_dataset(&d, &teacher(), 600, 0.03, 17);
+        let p = LatencyPredictor::fit(&train, 60, 5);
+        let small = Arch::uniform(Mode::Patch, 1, 16, 24, 1, 32, 20);
+        let big = Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20);
+        assert!(p.predict_arch_ms(&big) > p.predict_arch_ms(&small));
+    }
+
+    #[test]
+    fn analytic_matches_device_model() {
+        let d = DeviceProfile::jetson_tx2();
+        let a = teacher();
+        let ms = analytic_latency_ms(&d, &a);
+        assert!((ms - d.compute_time_s(CostModel::flops_per_sample(&a)) * 1e3).abs() < 1e-12);
+    }
+}

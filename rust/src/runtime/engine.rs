@@ -1,0 +1,458 @@
+//! The PJRT execution engine: compiled-executable cache + device-resident
+//! parameter buffers + typed entry points for every artifact kind.
+//!
+//! Not `Send` (the `xla` crate's `PjRtClient` is `Rc`-based); the
+//! [`super::server`] wraps an `Engine` in a dedicated thread for the async
+//! coordinator, while offline paths (booster, evaluation) use it directly.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use crate::data::bytes_to_f32;
+use crate::Result;
+
+/// A batch of model inputs (patch mode carries f32 patches, token mode i32 ids).
+#[derive(Clone, Debug)]
+pub enum XBatch {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl XBatch {
+    pub fn rows(&self) -> usize {
+        match self {
+            XBatch::F32 { shape, .. } | XBatch::I32 { shape, .. } => shape[0],
+        }
+    }
+
+    fn stride(&self) -> usize {
+        match self {
+            XBatch::F32 { shape, .. } | XBatch::I32 { shape, .. } => {
+                shape[1..].iter().product()
+            }
+        }
+    }
+
+    /// Pad with zeros to exactly `batch` rows (artifacts have static shapes).
+    pub fn to_literal(&self, batch: usize) -> Result<Literal> {
+        let stride = self.stride();
+        let dims: Vec<i64> = match self {
+            XBatch::F32 { shape, .. } | XBatch::I32 { shape, .. } => {
+                let mut d: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                d[0] = batch as i64;
+                d
+            }
+        };
+        match self {
+            XBatch::F32 { data, .. } => {
+                let mut padded = data.clone();
+                padded.resize(batch * stride, 0.0);
+                Ok(Literal::vec1(&padded).reshape(&dims)?)
+            }
+            XBatch::I32 { data, .. } => {
+                let mut padded = data.clone();
+                padded.resize(batch * stride, 0);
+                Ok(Literal::vec1(&padded).reshape(&dims)?)
+            }
+        }
+    }
+}
+
+/// Output of one model forward: Phase-2 features + device-local logits,
+/// truncated back to the caller's row count.
+#[derive(Clone, Debug)]
+pub struct ModelOutput {
+    pub feats: Vec<f32>,
+    pub feats_shape: Vec<usize>,
+    pub logits: Vec<f32>,
+    pub logits_shape: Vec<usize>,
+}
+
+/// The engine. Construction compiles nothing; executables are compiled on
+/// first use and cached for the lifetime of the engine.
+pub struct Engine {
+    client: PjRtClient,
+    root: PathBuf,
+    manifest: Manifest,
+    executables: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// model/aggregator name → device-resident parameter buffers.
+    params: RefCell<HashMap<String, Rc<Vec<PjRtBuffer>>>>,
+    /// model/aggregator name → host parameter literals (execute() path).
+    param_lits: RefCell<HashMap<String, Rc<Vec<Literal>>>>,
+}
+
+impl Engine {
+    pub fn load(artifacts_root: impl AsRef<Path>) -> Result<Self> {
+        let root = artifacts_root.as_ref().to_path_buf();
+        let manifest = Manifest::load(&root)?;
+        Ok(Engine {
+            client: PjRtClient::cpu()?,
+            root,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            params: RefCell::new(HashMap::new()),
+            param_lits: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifacts_root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Compile (or fetch cached) an HLO-text artifact.
+    pub fn executable(&self, hlo_rel: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(hlo_rel) {
+            return Ok(e.clone());
+        }
+        let path = self.root.join(hlo_rel);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.executables
+            .borrow_mut()
+            .insert(hlo_rel.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Read a params bin and split it into literals per the manifest specs.
+    pub fn load_param_literals(
+        &self,
+        bin_rel: &str,
+        specs: &[(String, Vec<usize>)],
+    ) -> Result<Vec<Literal>> {
+        let bytes = std::fs::read(self.root.join(bin_rel))?;
+        let flat = bytes_to_f32(&bytes);
+        let total: usize = specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        anyhow::ensure!(
+            flat.len() == total,
+            "params {bin_rel}: {} floats != {total} expected",
+            flat.len()
+        );
+        let mut out = Vec::with_capacity(specs.len());
+        let mut off = 0usize;
+        for (_, shape) in specs {
+            let n: usize = shape.iter().product();
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            out.push(Literal::vec1(&flat[off..off + n]).reshape(&dims)?);
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// Device-resident parameter buffers for a model (cached): the hot path
+    /// never re-uploads weights, matching "models deployed in advance".
+    pub fn model_param_buffers(&self, name: &str) -> Result<Rc<Vec<PjRtBuffer>>> {
+        if let Some(b) = self.params.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let meta = self.manifest.model(name)?.clone();
+        let lits = self.load_param_literals(&meta.params, &meta.param_specs)?;
+        let bufs = self.to_buffers(&lits)?;
+        let rc = Rc::new(bufs);
+        self.params.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Cached host parameter literals for a model.
+    pub fn model_param_literals(&self, name: &str) -> Result<Rc<Vec<Literal>>> {
+        if let Some(l) = self.param_lits.borrow().get(name) {
+            return Ok(l.clone());
+        }
+        let meta = self.manifest.model(name)?.clone();
+        let lits = Rc::new(self.load_param_literals(&meta.params, &meta.param_specs)?);
+        self.param_lits.borrow_mut().insert(name.to_string(), lits.clone());
+        Ok(lits)
+    }
+
+    /// Cached host aggregator parameter literals.
+    pub fn agg_param_literals(&self, deployment: &str, kind: &str) -> Result<Rc<Vec<Literal>>> {
+        let key = Self::agg_cache_key(deployment, kind);
+        if let Some(l) = self.param_lits.borrow().get(&key) {
+            return Ok(l.clone());
+        }
+        let dep = self.manifest.deployment(deployment)?;
+        let agg = dep
+            .aggregators
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("aggregator {kind} not in {deployment}"))?
+            .clone();
+        let lits = Rc::new(self.load_param_literals(&agg.params, &agg.param_specs)?);
+        self.param_lits.borrow_mut().insert(key, lits.clone());
+        Ok(lits)
+    }
+
+    fn agg_cache_key(deployment: &str, kind: &str) -> String {
+        format!("agg::{deployment}::{kind}")
+    }
+
+    /// Device-resident aggregator parameters (cached).
+    pub fn agg_param_buffers(&self, deployment: &str, kind: &str) -> Result<Rc<Vec<PjRtBuffer>>> {
+        let key = Self::agg_cache_key(deployment, kind);
+        if let Some(b) = self.params.borrow().get(&key) {
+            return Ok(b.clone());
+        }
+        let dep = self.manifest.deployment(deployment)?;
+        let agg = dep
+            .aggregators
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("aggregator {kind} not in {deployment}"))?
+            .clone();
+        let lits = self.load_param_literals(&agg.params, &agg.param_specs)?;
+        let bufs = self.to_buffers(&lits)?;
+        let rc = Rc::new(bufs);
+        self.params.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    fn to_buffers(&self, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        lits.iter()
+            .map(|l| Ok(self.client.buffer_from_host_literal(None, l)?))
+            .collect()
+    }
+
+    fn batch_of_tag(tag: &str) -> usize {
+        tag.trim_start_matches('b').parse().unwrap_or(1)
+    }
+
+    /// Pick the smallest exported batch tag that fits `rows`.
+    pub fn pick_tag<'a>(
+        &self,
+        hlo: &'a HashMap<String, String>,
+        rows: usize,
+    ) -> Result<(&'a str, usize)> {
+        let mut tags: Vec<(&str, usize)> = hlo
+            .keys()
+            .map(|t| (t.as_str(), Self::batch_of_tag(t)))
+            .collect();
+        tags.sort_by_key(|&(_, b)| b);
+        for (t, b) in &tags {
+            if *b >= rows {
+                return Ok((t, *b));
+            }
+        }
+        tags.last()
+            .map(|&(t, b)| (t, b))
+            .ok_or_else(|| anyhow::anyhow!("no hlo variants"))
+    }
+
+    /// Run one sub-model forward on a batch (pads/truncates to the artifact
+    /// batch size). Returns features + logits for exactly `x.rows()` rows.
+    pub fn run_model(&self, name: &str, x: &XBatch) -> Result<ModelOutput> {
+        let meta = self.manifest.model(name)?.clone();
+        let rows = x.rows();
+        let (tag, batch) = self.pick_tag(&meta.hlo, rows)?;
+        anyhow::ensure!(rows <= batch, "batch {rows} exceeds largest artifact {batch}");
+        let exe = self.executable(&meta.hlo[tag])?;
+        let params = self.model_param_literals(name)?;
+        let x_lit = x.to_literal(batch)?;
+        let mut inputs: Vec<&Literal> = params.iter().collect();
+        inputs.push(&x_lit);
+        let result = exe.execute(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(parts.len() == 2, "expected (feats, logits) tuple");
+        let (feats_full, feats_dims) = literal_to_f32(&parts[0])?;
+        let (logits_full, logits_dims) = literal_to_f32(&parts[1])?;
+        Ok(ModelOutput {
+            feats: truncate_rows(feats_full, &feats_dims, rows),
+            feats_shape: with_rows(&feats_dims, rows),
+            logits: truncate_rows(logits_full, &logits_dims, rows),
+            logits_shape: with_rows(&logits_dims, rows),
+        })
+    }
+
+    /// Run a model forward with explicit parameter literals (the booster's
+    /// in-training weights) instead of the cached deployed parameters.
+    pub fn run_model_with_params(
+        &self,
+        name: &str,
+        params: &[Literal],
+        x: &XBatch,
+    ) -> Result<ModelOutput> {
+        let meta = self.manifest.model(name)?.clone();
+        let rows = x.rows();
+        let (tag, batch) = self.pick_tag(&meta.hlo, rows)?;
+        let exe = self.executable(&meta.hlo[tag])?;
+        let x_lit = x.to_literal(batch)?;
+        let mut inputs: Vec<&Literal> = params.iter().collect();
+        inputs.push(&x_lit);
+        let result = exe.execute(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(parts.len() == 2, "expected (feats, logits) tuple");
+        let (feats_full, feats_dims) = literal_to_f32(&parts[0])?;
+        let (logits_full, logits_dims) = literal_to_f32(&parts[1])?;
+        Ok(ModelOutput {
+            feats: truncate_rows(feats_full, &feats_dims, rows),
+            feats_shape: with_rows(&feats_dims, rows),
+            logits: truncate_rows(logits_full, &logits_dims, rows),
+            logits_shape: with_rows(&logits_dims, rows),
+        })
+    }
+
+    /// Run the head-masked teacher (Fig. 5 sweep).
+    pub fn run_masked(&self, name: &str, x: &XBatch, mask: &[f32]) -> Result<ModelOutput> {
+        let meta = self
+            .manifest
+            .masked_models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("masked model {name} not in manifest"))?
+            .clone();
+        let base = self.manifest.model(&meta.base)?.clone();
+        let rows = x.rows();
+        let (tag, batch) = self.pick_tag(&meta.hlo, rows)?;
+        let exe = self.executable(&meta.hlo[tag])?;
+        let params = self.model_param_literals(&meta.base)?;
+        let x_lit = x.to_literal(batch)?;
+        let expect: usize = meta.mask_shape.iter().product();
+        anyhow::ensure!(mask.len() == expect, "mask size {} != {expect}", mask.len());
+        let dims: Vec<i64> = meta.mask_shape.iter().map(|&x| x as i64).collect();
+        let m_lit = Literal::vec1(mask).reshape(&dims)?;
+        let mut inputs: Vec<&Literal> = params.iter().collect();
+        inputs.push(&x_lit);
+        inputs.push(&m_lit);
+        let result = exe.execute(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let (feats_full, feats_dims) = literal_to_f32(&parts[0])?;
+        let (logits_full, logits_dims) = literal_to_f32(&parts[1])?;
+        let _ = base;
+        Ok(ModelOutput {
+            feats: truncate_rows(feats_full, &feats_dims, rows),
+            feats_shape: with_rows(&feats_dims, rows),
+            logits: truncate_rows(logits_full, &logits_dims, rows),
+            logits_shape: with_rows(&logits_dims, rows),
+        })
+    }
+
+    /// Run an aggregator over per-member features (Phase 3). `feats[i]` must
+    /// be the i-th member's `(rows, groups, d_i)` features.
+    pub fn run_aggregator(
+        &self,
+        deployment: &str,
+        kind: &str,
+        feats: &[(Vec<f32>, Vec<usize>)],
+    ) -> Result<(Vec<f32>, Vec<usize>)> {
+        let dep = self.manifest.deployment(deployment)?.clone();
+        let agg = dep
+            .aggregators
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("aggregator {kind} not in {deployment}"))?
+            .clone();
+        anyhow::ensure!(
+            feats.len() == dep.members.len(),
+            "expected {} member features, got {}",
+            dep.members.len(),
+            feats.len()
+        );
+        let rows = feats[0].1[0];
+        let (tag, batch) = self.pick_tag(&agg.hlo, rows)?;
+        let exe = self.executable(&agg.hlo[tag])?;
+        let params = self.agg_param_literals(deployment, kind)?;
+        let mut feat_lits = Vec::with_capacity(feats.len());
+        for (data, shape) in feats {
+            let x = XBatch::F32 { data: data.clone(), shape: shape.clone() };
+            feat_lits.push(x.to_literal(batch)?);
+        }
+        let mut inputs: Vec<&Literal> = params.iter().collect();
+        inputs.extend(feat_lits.iter());
+        let result = exe.execute(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let (logits_full, dims) = literal_to_f32(&parts[0])?;
+        Ok((
+            truncate_rows(logits_full, &dims, rows),
+            with_rows(&dims, rows),
+        ))
+    }
+
+    /// Raw executable access for the booster (train-step artifacts).
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+}
+
+/// Extract f32 data + dims from a literal.
+pub fn literal_to_f32(lit: &Literal) -> Result<(Vec<f32>, Vec<usize>)> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    Ok((lit.to_vec::<f32>()?, dims))
+}
+
+fn row_stride(dims: &[usize]) -> usize {
+    dims[1..].iter().product()
+}
+
+fn truncate_rows(mut data: Vec<f32>, dims: &[usize], rows: usize) -> Vec<f32> {
+    data.truncate(rows * row_stride(dims));
+    data
+}
+
+fn with_rows(dims: &[usize], rows: usize) -> Vec<usize> {
+    let mut d = dims.to_vec();
+    d[0] = rows;
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xbatch_pads_to_batch() {
+        let x = XBatch::F32 { data: vec![1.0; 6], shape: vec![2, 3] };
+        let lit = x.to_literal(4).unwrap();
+        let v = lit.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), 12);
+        assert_eq!(&v[..6], &[1.0; 6]);
+        assert_eq!(&v[6..], &[0.0; 6]);
+    }
+
+    #[test]
+    fn xbatch_i32_pads() {
+        let x = XBatch::I32 { data: vec![5; 4], shape: vec![2, 2] };
+        let lit = x.to_literal(3).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn truncate_and_with_rows() {
+        let d = truncate_rows(vec![0.0; 12], &[4, 3], 2);
+        assert_eq!(d.len(), 6);
+        assert_eq!(with_rows(&[4, 3], 2), vec![2, 3]);
+    }
+
+    #[test]
+    fn tag_batch_parse() {
+        assert_eq!(Engine::batch_of_tag("b16"), 16);
+        assert_eq!(Engine::batch_of_tag("b1"), 1);
+    }
+
+    #[test]
+    fn pick_tag_prefers_smallest_fitting() {
+        // needs no engine state beyond the static helper semantics
+        let mut hlo = HashMap::new();
+        hlo.insert("b1".to_string(), "a".to_string());
+        hlo.insert("b16".to_string(), "b".to_string());
+        // emulate pick via sorted logic (engine method needs &self; test the
+        // underlying ordering contract here)
+        let mut tags: Vec<(&str, usize)> = hlo
+            .keys()
+            .map(|t| (t.as_str(), Engine::batch_of_tag(t)))
+            .collect();
+        tags.sort_by_key(|&(_, b)| b);
+        assert_eq!(tags[0].1, 1);
+        assert_eq!(tags[1].1, 16);
+    }
+}

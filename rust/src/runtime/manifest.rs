@@ -1,0 +1,375 @@
+//! `artifacts/manifest.json` schema — the contract with `python/compile/aot.py`.
+//!
+//! Parsed with the in-crate JSON module (no serde in the vendored crate set).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::model::Arch;
+use crate::util::Json;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u32,
+    pub fast_build: bool,
+    pub tasks: HashMap<String, TaskMeta>,
+    pub models: HashMap<String, ModelMeta>,
+    pub masked_models: HashMap<String, MaskedMeta>,
+    pub deployments: HashMap<String, DeploymentMeta>,
+    pub train_steps: HashMap<String, TrainStepMeta>,
+    /// teacher name → (layers × heads) importance matrix (Fig. 5 data).
+    pub head_importance: HashMap<String, Vec<Vec<f64>>>,
+    pub proxy_points: Vec<ProxyPoint>,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub d_i: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskMeta {
+    pub num_classes: usize,
+    pub mode: String,
+    pub task_kind: String,
+    pub teacher: String,
+    pub splits: HashMap<String, SplitMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SplitMeta {
+    pub x: String,
+    pub y: String,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub x_dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub arch: Arch,
+    /// `(name, shape)` pairs in HLO argument order.
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub param_count: usize,
+    pub params: String,
+    /// batch tag ("b1", "b16") → HLO path.
+    pub hlo: HashMap<String, String>,
+    pub task: String,
+    /// Build-time measured standalone accuracy (cross-checked by rust tests).
+    pub accuracy_solo: f64,
+    pub val_loss: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct MaskedMeta {
+    pub base: String,
+    pub hlo: HashMap<String, String>,
+    pub mask_shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeploymentMeta {
+    pub task: String,
+    pub members: Vec<String>,
+    pub aggregators: HashMap<String, AggregatorMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct AggregatorMeta {
+    pub hlo: HashMap<String, String>,
+    pub params: String,
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub d_i: usize,
+    /// Build-time measured aggregated accuracy.
+    pub accuracy: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainStepMeta {
+    pub hlo: String,
+    pub batch: usize,
+    pub lr: f64,
+    pub model: String,
+}
+
+/// Fig. 16(b) proxy data: arch features ↔ loss/accuracy pairs.
+#[derive(Clone, Debug)]
+pub struct ProxyPoint {
+    pub task: String,
+    pub features: Vec<f64>,
+    pub init_val_loss: f64,
+    pub trained_val_loss: f64,
+    pub trained_acc: f64,
+}
+
+fn str_map(v: &Json) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    for (k, val) in v.as_obj()? {
+        out.insert(k.clone(), val.as_str()?.to_string());
+    }
+    Ok(out)
+}
+
+fn param_specs(v: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    v.as_arr()?
+        .iter()
+        .map(|pair| {
+            let items = pair.as_arr()?;
+            anyhow::ensure!(items.len() == 2, "param spec must be [name, shape]");
+            Ok((items[0].as_str()?.to_string(), items[1].usize_arr()?))
+        })
+        .collect()
+}
+
+impl SplitMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(SplitMeta {
+            x: v.req("x")?.as_str()?.to_string(),
+            y: v.req("y")?.as_str()?.to_string(),
+            x_shape: v.req("x_shape")?.usize_arr()?,
+            y_shape: v.req("y_shape")?.usize_arr()?,
+            x_dtype: v.req("x_dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+impl Manifest {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let version = v.req("version")?.as_usize()? as u32;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+
+        let mut tasks = HashMap::new();
+        for (name, t) in v.req("tasks")?.as_obj()? {
+            let mut splits = HashMap::new();
+            for (split, s) in t.req("splits")?.as_obj()? {
+                splits.insert(split.clone(), SplitMeta::from_json(s)?);
+            }
+            tasks.insert(
+                name.clone(),
+                TaskMeta {
+                    num_classes: t.req("num_classes")?.as_usize()?,
+                    mode: t.req("mode")?.as_str()?.to_string(),
+                    task_kind: t.req("task_kind")?.as_str()?.to_string(),
+                    teacher: t.req("teacher")?.as_str()?.to_string(),
+                    splits,
+                },
+            );
+        }
+
+        let mut models = HashMap::new();
+        for (name, m) in v.req("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    arch: Arch::from_json(m.req("arch")?)?,
+                    param_specs: param_specs(m.req("param_specs")?)?,
+                    param_count: m.req("param_count")?.as_usize()?,
+                    params: m.req("params")?.as_str()?.to_string(),
+                    hlo: str_map(m.req("hlo")?)?,
+                    task: m.req("task")?.as_str()?.to_string(),
+                    accuracy_solo: m.req("accuracy_solo")?.as_f64()?,
+                    val_loss: m.req("val_loss")?.as_f64()?,
+                },
+            );
+        }
+
+        let mut masked_models = HashMap::new();
+        if let Some(mm) = v.get("masked_models") {
+            for (name, m) in mm.as_obj()? {
+                masked_models.insert(
+                    name.clone(),
+                    MaskedMeta {
+                        base: m.req("base")?.as_str()?.to_string(),
+                        hlo: str_map(m.req("hlo")?)?,
+                        mask_shape: m.req("mask_shape")?.usize_arr()?,
+                    },
+                );
+            }
+        }
+
+        let mut deployments = HashMap::new();
+        for (name, d) in v.req("deployments")?.as_obj()? {
+            let mut aggregators = HashMap::new();
+            for (kind, a) in d.req("aggregators")?.as_obj()? {
+                aggregators.insert(
+                    kind.clone(),
+                    AggregatorMeta {
+                        hlo: str_map(a.req("hlo")?)?,
+                        params: a.req("params")?.as_str()?.to_string(),
+                        param_specs: param_specs(a.req("param_specs")?)?,
+                        d_i: a.req("d_i")?.as_usize()?,
+                        accuracy: a.req("accuracy")?.as_f64()?,
+                    },
+                );
+            }
+            deployments.insert(
+                name.clone(),
+                DeploymentMeta {
+                    task: d.req("task")?.as_str()?.to_string(),
+                    members: d
+                        .req("members")?
+                        .as_arr()?
+                        .iter()
+                        .map(|m| Ok(m.as_str()?.to_string()))
+                        .collect::<Result<_>>()?,
+                    aggregators,
+                },
+            );
+        }
+
+        let mut train_steps = HashMap::new();
+        if let Some(ts) = v.get("train_steps") {
+            for (name, t) in ts.as_obj()? {
+                train_steps.insert(
+                    name.clone(),
+                    TrainStepMeta {
+                        hlo: t.req("hlo")?.as_str()?.to_string(),
+                        batch: t.req("batch")?.as_usize()?,
+                        lr: t.req("lr")?.as_f64()?,
+                        model: t.req("model")?.as_str()?.to_string(),
+                    },
+                );
+            }
+        }
+
+        let mut head_importance = HashMap::new();
+        if let Some(hi) = v.get("head_importance") {
+            for (name, mat) in hi.as_obj()? {
+                let rows: Vec<Vec<f64>> = mat
+                    .as_arr()?
+                    .iter()
+                    .map(|r| r.f64_arr())
+                    .collect::<Result<_>>()?;
+                head_importance.insert(name.clone(), rows);
+            }
+        }
+
+        let mut proxy_points = Vec::new();
+        if let Some(pp) = v.get("proxy_points") {
+            for p in pp.as_arr()? {
+                proxy_points.push(ProxyPoint {
+                    task: p.req("task")?.as_str()?.to_string(),
+                    features: p.req("features")?.f64_arr()?,
+                    init_val_loss: p.req("init_val_loss")?.as_f64()?,
+                    trained_val_loss: p.req("trained_val_loss")?.as_f64()?,
+                    trained_acc: p.req("trained_acc")?.as_f64()?,
+                });
+            }
+        }
+
+        Ok(Manifest {
+            version,
+            fast_build: v
+                .get("fast_build")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+            tasks,
+            models,
+            masked_models,
+            deployments,
+            train_steps,
+            head_importance,
+            proxy_points,
+            eval_batch: v.req("eval_batch")?.as_usize()?,
+            train_batch: v.req("train_batch")?.as_usize()?,
+            d_i: v.req("d_i")?.as_usize()?,
+        })
+    }
+
+    pub fn load(root: &Path) -> Result<Self> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("cannot read {} (run `make artifacts`): {e}", path.display())
+        })?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name} not in manifest"))
+    }
+
+    pub fn deployment(&self, name: &str) -> Result<&DeploymentMeta> {
+        self.deployments
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("deployment {name} not in manifest"))
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskMeta> {
+        self.tasks
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("task {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let json = r#"{
+          "version": 1, "tasks": {}, "models": {}, "deployments": {},
+          "eval_batch": 16, "train_batch": 32, "d_i": 64
+        }"#;
+        let m = Manifest::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(m.eval_batch, 16);
+        assert!(m.models.is_empty());
+        assert!(!m.fast_build);
+    }
+
+    #[test]
+    fn parses_model_with_specs() {
+        let json = r#"{
+          "version": 1, "tasks": {}, "deployments": {},
+          "models": {"m": {
+            "arch": {"mode":"patch","layers":1,"dim":16,"head_dim":8,
+                     "heads":[1],"mlp_dims":[32],"num_classes":4},
+            "param_specs": [["embed_w", [48, 16]], ["embed_b", [16]]],
+            "param_count": 100, "params": "params/x.bin",
+            "hlo": {"b1": "hlo/x_b1.hlo.txt"}, "task": "edgenet",
+            "accuracy_solo": 0.5, "val_loss": 1.0
+          }},
+          "eval_batch": 16, "train_batch": 32, "d_i": 64
+        }"#;
+        let m = Manifest::from_json(&Json::parse(json).unwrap()).unwrap();
+        let meta = m.model("m").unwrap();
+        assert_eq!(meta.param_specs[0].0, "embed_w");
+        assert_eq!(meta.param_specs[0].1, vec![48, 16]);
+        assert_eq!(meta.arch.layers, 1);
+        assert_eq!(meta.hlo["b1"], "hlo/x_b1.hlo.txt");
+    }
+
+    #[test]
+    fn missing_model_error_mentions_name() {
+        let m = Manifest::from_json(
+            &Json::parse(
+                r#"{"version":1,"tasks":{},"models":{},"deployments":{},
+                    "eval_batch":16,"train_batch":32,"d_i":64}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let err = m.model("ghost").unwrap_err().to_string();
+        assert!(err.contains("ghost"));
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let json = r#"{"version":2,"tasks":{},"models":{},"deployments":{},
+                       "eval_batch":16,"train_batch":32,"d_i":64}"#;
+        assert!(Manifest::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let root = std::path::Path::new("artifacts");
+        if root.join("manifest.json").exists() {
+            let m = Manifest::load(root).unwrap();
+            assert!(m.models.contains_key("teacher_edgenet"));
+            assert!(m.deployments.contains_key("edgenet_3dev"));
+            assert!(!m.proxy_points.is_empty());
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `python/compile`
+//! and executes them on the CPU PJRT client — the only place model compute
+//! happens at serve time (Python is never on the request path).
+//!
+//! [`manifest`] mirrors `artifacts/manifest.json`; [`engine`] owns the PJRT
+//! client, compiled-executable cache and device-resident parameter buffers;
+//! [`server`] wraps an [`engine::Engine`] in a dedicated OS thread (the PJRT
+//! client is not `Send`) behind an async-friendly handle used by the
+//! coordinator.
+
+pub mod engine;
+pub mod manifest;
+pub mod server;
+
+pub use engine::{Engine, ModelOutput, XBatch};
+pub use manifest::Manifest;
+pub use server::{ExecHandle, ExecServer};

@@ -1,0 +1,175 @@
+//! Execution server: owns an [`Engine`] on a dedicated OS thread and serves
+//! execute requests from coordinator threads.
+//!
+//! The `xla` crate's PJRT client is `Rc`-based (not `Send`), so all PJRT
+//! work is pinned to this thread — the single "accelerator" every simulated
+//! edge device's numerics run through.  Device-specific *timing* comes from
+//! the virtual-clock simulator, not from this thread's wall clock.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::engine::{Engine, ModelOutput, XBatch};
+use crate::Result;
+
+enum Request {
+    RunModel {
+        model: String,
+        x: XBatch,
+        reply: mpsc::SyncSender<Result<ModelOutput>>,
+    },
+    RunMasked {
+        model: String,
+        x: XBatch,
+        mask: Vec<f32>,
+        reply: mpsc::SyncSender<Result<ModelOutput>>,
+    },
+    RunAggregator {
+        deployment: String,
+        kind: String,
+        feats: Vec<(Vec<f32>, Vec<usize>)>,
+        reply: mpsc::SyncSender<Result<(Vec<f32>, Vec<usize>)>>,
+    },
+    /// Pre-compile a model's executables + params so first-request latency
+    /// stays flat (deployment-time warmup; the paper deploys in advance).
+    Warmup {
+        model: String,
+        reply: mpsc::SyncSender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Handle used by coordinator threads; cheap to clone. All methods block on
+/// the engine thread's reply.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ExecHandle {
+    pub fn run_model(&self, model: &str, x: XBatch) -> Result<ModelOutput> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::RunModel { model: model.to_string(), x, reply })
+            .map_err(|_| anyhow::anyhow!("exec server gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("exec server dropped reply"))?
+    }
+
+    pub fn run_masked(&self, model: &str, x: XBatch, mask: Vec<f32>) -> Result<ModelOutput> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::RunMasked { model: model.to_string(), x, mask, reply })
+            .map_err(|_| anyhow::anyhow!("exec server gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("exec server dropped reply"))?
+    }
+
+    pub fn run_aggregator(
+        &self,
+        deployment: &str,
+        kind: &str,
+        feats: Vec<(Vec<f32>, Vec<usize>)>,
+    ) -> Result<(Vec<f32>, Vec<usize>)> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::RunAggregator {
+                deployment: deployment.to_string(),
+                kind: kind.to_string(),
+                feats,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("exec server gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("exec server dropped reply"))?
+    }
+
+    pub fn warmup(&self, model: &str) -> Result<()> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Warmup { model: model.to_string(), reply })
+            .map_err(|_| anyhow::anyhow!("exec server gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("exec server dropped reply"))?
+    }
+}
+
+/// The server: spawns the engine thread on construction.
+pub struct ExecServer {
+    tx: mpsc::Sender<Request>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ExecServer {
+    /// Start the engine thread over the given artifacts root.
+    pub fn start(artifacts_root: std::path::PathBuf) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let thread = std::thread::Builder::new()
+            .name("coformer-exec".into())
+            .spawn(move || {
+                let engine = match Engine::load(&artifacts_root) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::RunModel { model, x, reply } => {
+                            let _ = reply.send(engine.run_model(&model, &x));
+                        }
+                        Request::RunMasked { model, x, mask, reply } => {
+                            let _ = reply.send(engine.run_masked(&model, &x, &mask));
+                        }
+                        Request::RunAggregator { deployment, kind, feats, reply } => {
+                            let _ =
+                                reply.send(engine.run_aggregator(&deployment, &kind, &feats));
+                        }
+                        Request::Warmup { model, reply } => {
+                            let r = (|| {
+                                let meta = engine.manifest().model(&model)?.clone();
+                                for hlo in meta.hlo.values() {
+                                    engine.executable(hlo)?;
+                                }
+                                engine.model_param_literals(&model)?;
+                                Ok(())
+                            })();
+                            let _ = reply.send(r);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(ExecServer { tx, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        ExecHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for ExecServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_fails_cleanly_without_artifacts() {
+        let err = ExecServer::start(std::path::PathBuf::from("/nonexistent-dir"));
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("manifest") || msg.contains("artifacts"), "{msg}");
+    }
+}

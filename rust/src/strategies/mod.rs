@@ -1,0 +1,483 @@
+//! Collaborative-inference execution strategies — CoFormer's aggregate-edge
+//! scheme plus every baseline family the paper compares against (Fig. 2):
+//!
+//! * [`coformer`] — aggregate-edge: parallel backbones, one-shot feature
+//!   transfer, central aggregation (this paper).
+//! * [`pipe_edge`] — layer-wise sequential pipeline (EdgeShard [37] and the
+//!   Fig. 3 motivation study).
+//! * [`tensor_parallel`] — distri-edge with per-layer synchronization
+//!   (Galaxy [15]: 2 syncs/layer; DeTransformer [36]: block-parallel with
+//!   ~1 sync per block).
+//! * [`single_edge`] — one compressed model on one device (Table I/II).
+//! * [`ensemble`] — N full models in parallel, logits fused at the central
+//!   node (DeViT [35] / Fig. 6 ensembles).
+//!
+//! Each strategy composes [`SimDevice`] timelines and returns a
+//! [`StrategyOutcome`] whose per-device busy/idle/transmit breakdown is
+//! exactly what the paper's latency-breakdown figures plot.
+
+use crate::device::{DeviceProfile, SimDevice, SimError};
+use crate::model::{Arch, CostModel};
+use crate::net::Topology;
+
+/// Per-device timeline of one collaborative inference.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceTimeline {
+    pub compute_s: f64,
+    pub transmit_s: f64,
+    pub idle_s: f64,
+    pub energy_j: f64,
+    pub memory_bytes: usize,
+}
+
+/// Result of simulating one strategy on one request.
+#[derive(Clone, Debug)]
+pub struct StrategyOutcome {
+    pub name: String,
+    /// End-to-end latency, seconds.
+    pub total_s: f64,
+    pub devices: Vec<DeviceTimeline>,
+    /// Number of inter-device communication rounds.
+    pub comm_rounds: usize,
+}
+
+impl StrategyOutcome {
+    pub fn total_energy_j(&self) -> f64 {
+        self.devices.iter().map(|d| d.energy_j).sum()
+    }
+
+    /// Fraction of aggregate device-time spent idle (Fig. 3's headline).
+    pub fn idle_fraction(&self) -> f64 {
+        let idle: f64 = self.devices.iter().map(|d| d.idle_s).sum();
+        let busy: f64 = self
+            .devices
+            .iter()
+            .map(|d| d.compute_s + d.transmit_s)
+            .sum();
+        if idle + busy == 0.0 {
+            0.0
+        } else {
+            idle / (idle + busy)
+        }
+    }
+
+    /// Fraction of end-to-end latency attributable to transmission
+    /// (Fig. 4's headline: >40% for distri-edge at 2 Mb/s).
+    pub fn transmit_fraction(&self) -> f64 {
+        let t: f64 = self
+            .devices
+            .iter()
+            .map(|d| d.transmit_s)
+            .fold(0.0, f64::max);
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            t / self.total_s
+        }
+    }
+
+    pub fn peak_memory_bytes(&self) -> usize {
+        self.devices.iter().map(|d| d.memory_bytes).max().unwrap_or(0)
+    }
+}
+
+fn finish(devs: Vec<SimDevice>, name: &str, total_s: f64, mems: &[usize], comm_rounds: usize) -> StrategyOutcome {
+    let devices = devs
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut d)| {
+            let compute_s = d.busy_time(); // busy = compute+transmit; split below
+            let idle_s = d.idle_time();
+            let energy_j = d.end_inference();
+            DeviceTimeline {
+                compute_s,
+                transmit_s: 0.0,
+                idle_s,
+                energy_j,
+                memory_bytes: mems.get(i).copied().unwrap_or(0),
+            }
+        })
+        .collect();
+    StrategyOutcome { name: name.into(), total_s, devices, comm_rounds }
+}
+
+/// CoFormer aggregate-edge (paper §III-A): all devices run their sub-model
+/// concurrently, transmit features once, central node aggregates.
+pub fn coformer(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    archs: &[Arch],
+    d_i: usize,
+    batch: usize,
+) -> Result<StrategyOutcome, SimError> {
+    assert_eq!(profiles.len(), archs.len());
+    let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
+    let mut mems = Vec::with_capacity(devs.len());
+    for (d, a) in devs.iter_mut().zip(archs) {
+        let mem = CostModel::memory_bytes(a, batch);
+        d.load_model(mem)?;
+        mems.push(mem);
+    }
+    let mut transmit = vec![0.0f64; devs.len()];
+    let mut arrive = vec![0.0f64; devs.len()];
+    for (n, (d, a)) in devs.iter_mut().zip(archs).enumerate() {
+        // Phase 1: backbone forward
+        d.compute(CostModel::flops_per_sample(a) * batch as f64);
+        // Phase 2: one-shot feature transfer to the central node
+        let t2 = topo.to_central_s(n, a.feature_bytes() * batch);
+        d.transmit(t2);
+        transmit[n] = t2;
+        arrive[n] = d.now();
+    }
+    // Phase 3: central node waits for the slowest, then aggregates (Eq. 3)
+    let slowest = arrive.iter().cloned().fold(0.0, f64::max);
+    let central = topo.central;
+    let d_agg: usize = archs.iter().map(|a| a.dim).sum();
+    let rows = archs[central].groups;
+    for (n, d) in devs.iter_mut().enumerate() {
+        if n == central {
+            d.wait_until(slowest);
+        }
+    }
+    let agg_t = {
+        let d = &mut devs[central];
+        d.compute(CostModel::aggregation_flops(d_agg, d_i, rows) * batch as f64)
+    };
+    let total = slowest + agg_t;
+    // non-central devices idle until the result exists (paper counts their
+    // idleness in resource-utilization terms, not energy)
+    for (n, d) in devs.iter_mut().enumerate() {
+        if n != central {
+            d.wait_until(total);
+        }
+    }
+    let mut out = finish(devs, "coformer", total, &mems, 1);
+    for (n, t) in transmit.iter().enumerate() {
+        out.devices[n].transmit_s = *t;
+        out.devices[n].compute_s -= *t;
+    }
+    Ok(out)
+}
+
+/// One pipeline segment: compute + activation payload to the next stage.
+#[derive(Clone, Copy, Debug)]
+pub struct Segment {
+    pub flops: f64,
+    pub activation_bytes: usize,
+    pub memory_bytes: usize,
+}
+
+/// Pipe-edge (Fig. 2a / EdgeShard): segments execute sequentially, each
+/// device idle before its turn and after finishing.
+pub fn pipe_edge(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    segments: &[Segment],
+) -> Result<StrategyOutcome, SimError> {
+    assert_eq!(profiles.len(), segments.len());
+    let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
+    let mut mems = Vec::with_capacity(devs.len());
+    for (d, s) in devs.iter_mut().zip(segments) {
+        d.load_model(s.memory_bytes)?;
+        mems.push(s.memory_bytes);
+    }
+    let mut t = 0.0f64;
+    let mut transmit = vec![0.0f64; devs.len()];
+    for (i, seg) in segments.iter().enumerate() {
+        devs[i].wait_until(t); // idle until predecessors finish
+        devs[i].compute(seg.flops);
+        if i + 1 < segments.len() {
+            let tt = topo.between_s(i, i + 1, seg.activation_bytes);
+            devs[i].transmit(tt);
+            transmit[i] = tt;
+        }
+        t = devs[i].now();
+    }
+    let total = t;
+    for d in devs.iter_mut() {
+        d.wait_until(total); // tail idle (devices that finished early)
+    }
+    let mut out = finish(devs, "pipe-edge", total, &mems, segments.len() - 1);
+    for (n, tt) in transmit.iter().enumerate() {
+        out.devices[n].transmit_s = *tt;
+        out.devices[n].compute_s -= *tt;
+    }
+    Ok(out)
+}
+
+/// Distri-edge tensor parallel (Fig. 2b): each layer's work is sharded
+/// across all devices; every layer ends with `syncs_per_layer` all-gather
+/// rounds of `shard_bytes` activations. Galaxy ⇒ 2 syncs/layer,
+/// DeTransformer ⇒ ~0.5 (one sync per 2-layer block).
+pub fn tensor_parallel(
+    name: &str,
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    total_flops: f64,
+    layers: usize,
+    shard_bytes: usize,
+    syncs_per_layer: f64,
+    memory_per_device: usize,
+) -> Result<StrategyOutcome, SimError> {
+    let n = profiles.len();
+    let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
+    let mems = vec![memory_per_device; n];
+    for d in devs.iter_mut() {
+        d.load_model(memory_per_device)?;
+    }
+    let per_layer = total_flops / layers as f64;
+    let total_syncs = (layers as f64 * syncs_per_layer).round() as usize;
+    let mut transmit = vec![0.0f64; n];
+    let mut t = 0.0f64;
+    for layer in 0..layers {
+        // sharded compute: all devices work concurrently on 1/N of the layer
+        let mut finish_t = t;
+        for d in devs.iter_mut() {
+            d.wait_until(t);
+            d.compute(per_layer / n as f64);
+            finish_t = finish_t.max(d.now());
+        }
+        // sync barrier(s): all-gather, everyone sends its shard to peers
+        let n_sync = ((layer + 1) as f64 * syncs_per_layer).round() as usize
+            - (layer as f64 * syncs_per_layer).round() as usize;
+        for _ in 0..n_sync {
+            let mut slowest = 0.0f64;
+            for (i, d) in devs.iter_mut().enumerate() {
+                d.wait_until(finish_t);
+                let tt = topo.to_central_s(i, shard_bytes).max(
+                    topo.between_s(i, (i + 1) % n, shard_bytes),
+                );
+                d.transmit(tt);
+                transmit[i] += tt;
+                slowest = slowest.max(d.now());
+            }
+            finish_t = slowest;
+        }
+        t = finish_t;
+    }
+    let total = t;
+    for d in devs.iter_mut() {
+        d.wait_until(total);
+    }
+    let mut out = finish(devs, name, total, &mems, total_syncs);
+    for (n, tt) in transmit.iter().enumerate() {
+        out.devices[n].transmit_s = *tt;
+        out.devices[n].compute_s -= *tt;
+    }
+    Ok(out)
+}
+
+/// Single-edge (Fig. 2c): the whole model on one device.
+pub fn single_edge(
+    profile: &DeviceProfile,
+    flops: f64,
+    memory_bytes: usize,
+) -> Result<StrategyOutcome, SimError> {
+    let mut d = SimDevice::new(profile.clone());
+    d.load_model(memory_bytes)?;
+    d.compute(flops);
+    let total = d.now();
+    Ok(finish(vec![d], "single-edge", total, &[memory_bytes], 0))
+}
+
+/// Ensemble (DeViT / Fig. 6): N full models run concurrently; per-device
+/// logits (tiny) are sent to the central node and fused. Latency is gated
+/// by the slowest member — the paper's ">200% latency" ensemble downside.
+pub fn ensemble(
+    name: &str,
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    member_flops: &[f64],
+    member_memory: &[usize],
+    logit_bytes: usize,
+) -> Result<StrategyOutcome, SimError> {
+    assert_eq!(profiles.len(), member_flops.len());
+    let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
+    let mut transmit = vec![0.0f64; devs.len()];
+    for (d, &m) in devs.iter_mut().zip(member_memory) {
+        d.load_model(m)?;
+    }
+    let mut slowest = 0.0f64;
+    for (i, (d, &f)) in devs.iter_mut().zip(member_flops).enumerate() {
+        d.compute(f);
+        let tt = topo.to_central_s(i, logit_bytes);
+        d.transmit(tt);
+        transmit[i] = tt;
+        slowest = slowest.max(d.now());
+    }
+    for d in devs.iter_mut() {
+        d.wait_until(slowest);
+    }
+    let mut out = finish(devs, name, slowest, member_memory, 1);
+    for (n, tt) in transmit.iter().enumerate() {
+        out.devices[n].transmit_s = *tt;
+        out.devices[n].compute_s -= *tt;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Mode;
+    use crate::net::Link;
+
+    fn fleet() -> Vec<DeviceProfile> {
+        DeviceProfile::paper_fleet()
+    }
+
+    fn topo(mbps: f64) -> Topology {
+        Topology::star(3, Link::mbps(mbps), 1)
+    }
+
+    fn sub_archs() -> Vec<Arch> {
+        vec![
+            Arch::uniform(Mode::Patch, 2, 24, 24, 1, 48, 20),
+            Arch::uniform(Mode::Patch, 3, 32, 24, 1, 64, 20),
+            Arch::uniform(Mode::Patch, 3, 40, 24, 2, 80, 20),
+        ]
+    }
+
+    #[test]
+    fn coformer_single_comm_round() {
+        let out = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        assert_eq!(out.comm_rounds, 1);
+        assert!(out.total_s > 0.0);
+        assert_eq!(out.devices.len(), 3);
+    }
+
+    #[test]
+    fn coformer_total_is_eq3() {
+        let out = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        // total >= every device's compute+transmit
+        for d in &out.devices {
+            assert!(out.total_s >= d.compute_s + d.transmit_s - 1e-12);
+        }
+    }
+
+    #[test]
+    fn pipe_edge_high_idle_fraction() {
+        // Fig. 3: sequential pipeline idles devices >50% even in 3 stages
+        let seg = |f: f64| Segment { flops: f, activation_bytes: 64 << 10, memory_bytes: 1 << 20 };
+        let out = pipe_edge(&fleet(), &topo(100.0), &[seg(3e9), seg(3e9), seg(6e9)]).unwrap();
+        assert!(
+            out.idle_fraction() > 0.5,
+            "pipe idle fraction {}",
+            out.idle_fraction()
+        );
+    }
+
+    #[test]
+    fn coformer_lower_idle_than_pipe() {
+        let cof = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        let seg = |f: f64| Segment { flops: f, activation_bytes: 64 << 10, memory_bytes: 1 << 20 };
+        let pipe = pipe_edge(&fleet(), &topo(100.0), &[seg(3e9), seg(3e9), seg(6e9)]).unwrap();
+        assert!(cof.idle_fraction() < pipe.idle_fraction());
+    }
+
+    #[test]
+    fn tensor_parallel_transmission_dominates_at_2mbps() {
+        // Fig. 4: distri-edge at 2 Mb/s spends >40% of latency transmitting
+        let out = tensor_parallel(
+            "galaxy",
+            &fleet(),
+            &topo(2.0),
+            17.6e9,
+            12,
+            17 * 768 * 4, // DeiT-B-ish activation shard
+            2.0,
+            1 << 30,
+        )
+        .unwrap();
+        assert!(
+            out.transmit_fraction() > 0.4,
+            "transmit fraction {}",
+            out.transmit_fraction()
+        );
+    }
+
+    #[test]
+    fn detransformer_fewer_syncs_than_galaxy() {
+        let mk = |syncs: f64, name: &str| {
+            tensor_parallel(name, &fleet(), &topo(100.0), 17.6e9, 12, 17 * 768 * 4, syncs, 1 << 30)
+                .unwrap()
+        };
+        let galaxy = mk(2.0, "galaxy");
+        let detr = mk(0.5, "detransformer");
+        assert!(detr.comm_rounds < galaxy.comm_rounds);
+        assert!(detr.total_s < galaxy.total_s);
+    }
+
+    #[test]
+    fn coformer_faster_than_galaxy_at_low_bandwidth() {
+        // Fig. 10/12's headline ordering
+        let cof = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        let galaxy = tensor_parallel(
+            "galaxy",
+            &fleet(),
+            &topo(100.0),
+            9e9,
+            4,
+            17 * 96 * 4,
+            2.0,
+            1 << 30,
+        )
+        .unwrap();
+        assert!(cof.total_s < galaxy.total_s);
+    }
+
+    #[test]
+    fn single_edge_oom_for_large_model() {
+        // GPT2-XL (7.8 GB) on a 4 GB Nano → OOM (Fig. 9's "OOM" marks)
+        let nano = DeviceProfile::jetson_nano();
+        let r = single_edge(&nano, 3340e9, (78 << 30) / 10);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn single_edge_fits_small_model() {
+        let tx2 = DeviceProfile::jetson_tx2();
+        let out = single_edge(&tx2, 17.6e9, 2 << 30).unwrap();
+        assert!((0.1..0.2).contains(&out.total_s), "DeiT-B on TX2: {}", out.total_s);
+    }
+
+    #[test]
+    fn ensemble_gated_by_slowest() {
+        let out = ensemble(
+            "devit",
+            &fleet(),
+            &topo(100.0),
+            &[5e9, 5e9, 5e9],
+            &[1 << 28, 1 << 28, 1 << 28],
+            20 * 4,
+        )
+        .unwrap();
+        // nano (device 0) is slowest → total ≈ nano's time
+        let nano_busy = out.devices[0].compute_s + out.devices[0].transmit_s;
+        assert!((out.total_s - nano_busy).abs() / out.total_s < 0.05);
+    }
+
+    #[test]
+    fn energy_scales_with_busy_time() {
+        let out = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        for d in &out.devices {
+            assert!(d.energy_j > 0.0);
+        }
+        // more flops → more energy
+        let big = vec![
+            Arch::uniform(Mode::Patch, 4, 48, 24, 2, 96, 20),
+            Arch::uniform(Mode::Patch, 4, 40, 24, 1, 80, 20),
+            Arch::uniform(Mode::Patch, 4, 8, 24, 1, 16, 20),
+        ];
+        let out2 = coformer(&fleet(), &topo(100.0), &big, 64, 1).unwrap();
+        assert!(out2.devices[0].energy_j > out.devices[0].energy_j);
+    }
+
+    #[test]
+    fn bandwidth_sweep_coformer_improves() {
+        // Fig. 12: coformer gains with bandwidth but is robust at 100 Mb/s
+        let t100 = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap().total_s;
+        let t1g = coformer(&fleet(), &topo(1000.0), &sub_archs(), 64, 1).unwrap().total_s;
+        assert!(t1g <= t100);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dependency-free substrates: JSON (this environment vendors only the
+//! `xla` crate's closure, so serde is unavailable — we implement the
+//! manifest/config interchange ourselves) and a seeded PRNG.
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

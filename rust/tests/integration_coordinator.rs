@@ -1,0 +1,135 @@
+//! Integration tests for the serving coordinator over real artifacts.
+//!
+//! One #[test] entrypoint sharing a single [`ExecServer`]: the xla crate's
+//! PJRT teardown is not re-entrant (a second client created after the first
+//! is destroyed segfaults), so exactly one client may exist per process.
+//! Multiple [`Coordinator`]s sequentially sharing one [`ExecHandle`] is the
+//! supported pattern.
+
+use std::path::PathBuf;
+
+use coformer::config::SystemConfig;
+use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
+use coformer::data::Dataset;
+use coformer::model::Arch;
+use coformer::runtime::{ExecHandle, ExecServer, Manifest};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts not built");
+        None
+    }
+}
+
+struct Ctx {
+    exec: ExecHandle,
+    m: Manifest,
+    ds: Dataset,
+    archs: Vec<Arch>,
+}
+
+impl Ctx {
+    fn coordinator(&self, aggregator: &str) -> Coordinator {
+        let dep = self.m.deployment("edgenet_3dev").unwrap().clone();
+        let mut config = SystemConfig::paper_default();
+        config.aggregator = aggregator.into();
+        Coordinator::start(config, self.exec.clone(), dep, self.archs.clone(), self.ds.x_stride())
+            .unwrap()
+    }
+}
+
+#[test]
+fn coordinator_integration_suite() {
+    let Some(root) = artifacts() else { return };
+    let server = ExecServer::start(root.clone()).unwrap();
+    let m = Manifest::load(&root).unwrap();
+    let dep = m.deployment("edgenet_3dev").unwrap().clone();
+    let task = m.task("edgenet").unwrap().clone();
+    let ds = Dataset::load(&root, &task.splits["test"]).unwrap();
+    let archs: Vec<Arch> = dep
+        .members
+        .iter()
+        .map(|n| m.models[n].arch.clone())
+        .collect();
+    for member in &dep.members {
+        server.handle().warmup(member).unwrap();
+    }
+    let ctx = Ctx { exec: server.handle(), m, ds, archs };
+
+    check_serves_with_mlp(&ctx);
+    check_training_free_combiners(&ctx);
+    check_batching_coalesces(&ctx);
+    check_virtual_latency_fields(&ctx);
+    eprintln!("coordinator integration suite: all checks passed");
+}
+
+fn check_serves_with_mlp(ctx: &Ctx) {
+    let coord = ctx.coordinator("mlp");
+    let handle = coord.handle();
+    let n = 64;
+    let payloads: Vec<RequestPayload> =
+        (0..n).map(|i| RequestPayload::F32(ctx.ds.gather_x_f32(&[i]))).collect();
+    let responses = serve_all(&handle, payloads).unwrap();
+    assert_eq!(responses.len(), n);
+    let correct = responses
+        .iter()
+        .enumerate()
+        .filter(|(i, r)| r.prediction as i32 == ctx.ds.y[*i])
+        .count();
+    let acc = correct as f64 / n as f64;
+    eprintln!("coordinator mlp accuracy over {n}: {acc:.3}");
+    assert!(acc > 0.6, "served accuracy too low: {acc}");
+    let stats = coord.shutdown().unwrap();
+    assert_eq!(stats.requests, n);
+    assert!(stats.batches >= 1 && stats.batches <= n);
+    assert!(stats.virtual_latency.p50_ms() > 0.0);
+    assert!(stats.total_energy_j > 0.0);
+}
+
+fn check_training_free_combiners(ctx: &Ctx) {
+    for agg in ["average", "vote"] {
+        let coord = ctx.coordinator(agg);
+        let handle = coord.handle();
+        let n = 48;
+        let payloads: Vec<RequestPayload> =
+            (0..n).map(|i| RequestPayload::F32(ctx.ds.gather_x_f32(&[i]))).collect();
+        let responses = serve_all(&handle, payloads).unwrap();
+        let correct = responses
+            .iter()
+            .enumerate()
+            .filter(|(i, r)| r.prediction as i32 == ctx.ds.y[*i])
+            .count();
+        let acc = correct as f64 / n as f64;
+        eprintln!("coordinator {agg} accuracy over {n}: {acc:.3}");
+        assert!(acc > 0.5, "{agg} accuracy too low: {acc}");
+        coord.shutdown().unwrap();
+    }
+}
+
+fn check_batching_coalesces(ctx: &Ctx) {
+    let coord = ctx.coordinator("mlp");
+    let handle = coord.handle();
+    let payloads: Vec<RequestPayload> =
+        (0..32).map(|i| RequestPayload::F32(ctx.ds.gather_x_f32(&[i]))).collect();
+    serve_all(&handle, payloads).unwrap();
+    let stats = coord.shutdown().unwrap();
+    assert!(
+        stats.batches < 32,
+        "batcher failed to coalesce: {} batches for 32 requests",
+        stats.batches
+    );
+}
+
+fn check_virtual_latency_fields(ctx: &Ctx) {
+    let coord = ctx.coordinator("mlp");
+    let handle = coord.handle();
+    let r = handle.infer(RequestPayload::F32(ctx.ds.gather_x_f32(&[0]))).unwrap();
+    assert!(r.virtual_latency_s > 0.0);
+    assert!(r.batch_size >= 1);
+    assert!(r.energy_j > 0.0);
+    assert_eq!(r.logits.len(), ctx.m.tasks["edgenet"].num_classes);
+    coord.shutdown().unwrap();
+}

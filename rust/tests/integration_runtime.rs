@@ -1,0 +1,282 @@
+//! Integration tests over the real AOT artifacts: the HLO → PJRT → rust
+//! path must reproduce the accuracies Python measured at build time.
+//!
+//! All tests skip gracefully when `artifacts/` hasn't been built.
+
+use std::path::PathBuf;
+
+use coformer::data::Dataset;
+use coformer::metrics::top1_accuracy;
+use coformer::runtime::engine::XBatch;
+use coformer::runtime::Engine;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts not built");
+        None
+    }
+}
+
+fn eval_model(engine: &Engine, name: &str, ds: &Dataset, n: usize, is_patch: bool) -> f64 {
+    let m = engine.manifest();
+    let classes = m.models[name].arch.num_classes;
+    let b = m.eval_batch;
+    let mut logits = Vec::with_capacity(n * classes);
+    let mut i = 0;
+    while i < n {
+        let idx: Vec<usize> = (i..(i + b).min(n)).collect();
+        let mut shape = ds.x_shape.clone();
+        shape[0] = idx.len();
+        let x = if is_patch {
+            XBatch::F32 { data: ds.gather_x_f32(&idx), shape }
+        } else {
+            XBatch::I32 { data: ds.gather_x_i32(&idx), shape }
+        };
+        let out = engine.run_model(name, &x).expect("run_model");
+        logits.extend_from_slice(&out.logits);
+        i += b;
+    }
+    top1_accuracy(&logits, &ds.y[..n], classes)
+}
+
+fn check_manifest(engine: &Engine) {
+    let root = engine.artifacts_root().to_path_buf();
+    let _ = &root;
+    let m = engine.manifest();
+    for task in ["edgenet", "seqnet", "patchdet"] {
+        assert!(m.tasks.contains_key(task), "missing task {task}");
+        assert!(m.models.contains_key(&m.tasks[task].teacher));
+    }
+    assert!(m.deployments.contains_key("edgenet_3dev"));
+    assert!(!m.train_steps.is_empty());
+    assert!(!m.proxy_points.is_empty());
+    assert!(m.head_importance.contains_key("teacher_edgenet"));
+}
+
+fn check_teacher_accuracy_matches_build_time(engine: &Engine) {
+    let root = engine.artifacts_root().to_path_buf();
+    let m = engine.manifest().clone();
+    let task = m.task("edgenet").unwrap().clone();
+    let ds = Dataset::load(&root, &task.splits["test"]).unwrap();
+    let n = 512.min(ds.len());
+    let acc = eval_model(engine, "teacher_edgenet", &ds, n, true);
+    let expect = m.models["teacher_edgenet"].accuracy_solo;
+    // same params + same data; subset sampling gives a small tolerance
+    assert!(
+        (acc - expect).abs() < 0.05,
+        "rust-measured {acc:.4} vs build-time {expect:.4}"
+    );
+}
+
+fn check_submodel_accuracies_match_build_time(engine: &Engine) {
+    let root = engine.artifacts_root().to_path_buf();
+    let m = engine.manifest().clone();
+    let task = m.task("edgenet").unwrap().clone();
+    let ds = Dataset::load(&root, &task.splits["test"]).unwrap();
+    let n = 512.min(ds.len());
+    for name in &m.deployment("edgenet_3dev").unwrap().members.clone() {
+        let acc = eval_model(engine, name, &ds, n, true);
+        let expect = m.models[name].accuracy_solo;
+        assert!(
+            (acc - expect).abs() < 0.06,
+            "{name}: rust {acc:.4} vs python {expect:.4}"
+        );
+    }
+}
+
+fn check_token_mode_model_runs(engine: &Engine) {
+    let root = engine.artifacts_root().to_path_buf();
+    let m = engine.manifest().clone();
+    let task = m.task("seqnet").unwrap().clone();
+    let ds = Dataset::load(&root, &task.splits["test"]).unwrap();
+    let n = 256.min(ds.len());
+    let acc = eval_model(engine, "teacher_seqnet", &ds, n, false);
+    let expect = m.models["teacher_seqnet"].accuracy_solo;
+    assert!((acc - expect).abs() < 0.07, "rust {acc:.4} vs python {expect:.4}");
+}
+
+fn check_aggregation_beats_members(engine: &Engine) {
+    // the paper's core claim, measured through the full rust path
+    let root = engine.artifacts_root().to_path_buf();
+    let m = engine.manifest().clone();
+    let task = m.task("edgenet").unwrap().clone();
+    let dep = m.deployment("edgenet_3dev").unwrap().clone();
+    let ds = Dataset::load(&root, &task.splits["test"]).unwrap();
+    let n = 512.min(ds.len());
+    let classes = task.num_classes;
+    let b = m.eval_batch;
+    let mut member_accs = Vec::new();
+    let mut agg_logits = Vec::with_capacity(n * classes);
+    let mut i = 0;
+    let mut member_logits: Vec<Vec<f32>> = vec![Vec::new(); dep.members.len()];
+    while i < n {
+        let idx: Vec<usize> = (i..(i + b).min(n)).collect();
+        let mut shape = ds.x_shape.clone();
+        shape[0] = idx.len();
+        let x = XBatch::F32 { data: ds.gather_x_f32(&idx), shape };
+        let mut feats = Vec::new();
+        for (k, name) in dep.members.iter().enumerate() {
+            let out = engine.run_model(name, &x).unwrap();
+            member_logits[k].extend_from_slice(&out.logits);
+            feats.push((out.feats, out.feats_shape));
+        }
+        let (logits, _) = engine.run_aggregator("edgenet_3dev", "mlp", &feats).unwrap();
+        agg_logits.extend_from_slice(&logits);
+        i += b;
+    }
+    for (k, logits) in member_logits.iter().enumerate() {
+        member_accs.push(top1_accuracy(logits, &ds.y[..n], classes));
+        eprintln!("member {k}: {:.4}", member_accs[k]);
+    }
+    let agg_acc = top1_accuracy(&agg_logits, &ds.y[..n], classes);
+    eprintln!("aggregated: {agg_acc:.4}");
+    let best_member = member_accs.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        agg_acc > best_member,
+        "aggregation {agg_acc:.4} must beat best member {best_member:.4}"
+    );
+    let expect = dep.aggregators["mlp"].accuracy;
+    assert!((agg_acc - expect).abs() < 0.05, "rust {agg_acc:.4} vs python {expect:.4}");
+}
+
+fn check_masked_teacher_full_mask_matches_unmasked(engine: &Engine) {
+    let root = engine.artifacts_root().to_path_buf();
+    let m = engine.manifest().clone();
+    let task = m.task("edgenet").unwrap().clone();
+    let ds = Dataset::load(&root, &task.splits["test"]).unwrap();
+    let idx: Vec<usize> = (0..16).collect();
+    let mut shape = ds.x_shape.clone();
+    shape[0] = 16;
+    let x = XBatch::F32 { data: ds.gather_x_f32(&idx), shape };
+    let masked_meta = &m.masked_models["teacher_edgenet_masked"];
+    let mask_len: usize = masked_meta.mask_shape.iter().product();
+    let out_full = engine
+        .run_masked("teacher_edgenet_masked", &x, &vec![1.0; mask_len])
+        .unwrap();
+    let out_plain = engine.run_model("teacher_edgenet", &x).unwrap();
+    for (a, b) in out_full.logits.iter().zip(&out_plain.logits) {
+        assert!((a - b).abs() < 1e-3, "masked(1.0) must equal unmasked");
+    }
+    // zero mask must change predictions substantially
+    let out_zero = engine
+        .run_masked("teacher_edgenet_masked", &x, &vec![0.0; mask_len])
+        .unwrap();
+    let diff: f32 = out_zero
+        .logits
+        .iter()
+        .zip(&out_plain.logits)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1.0, "fully-masked heads should change outputs");
+}
+
+fn check_batch_padding_is_consistent(engine: &Engine) {
+    // running 3 samples through the b16 artifact must equal running them
+    // through the b1 artifact one at a time
+    let root = engine.artifacts_root().to_path_buf();
+    let m = engine.manifest().clone();
+    let task = m.task("edgenet").unwrap().clone();
+    let ds = Dataset::load(&root, &task.splits["test"]).unwrap();
+    let mut shape3 = ds.x_shape.clone();
+    shape3[0] = 3;
+    let x3 = XBatch::F32 { data: ds.gather_x_f32(&[0, 1, 2]), shape: shape3 };
+    let out3 = engine.run_model("edgenet_tiny24", &x3).unwrap();
+    let classes = m.models["edgenet_tiny24"].arch.num_classes;
+    assert_eq!(out3.logits.len(), 3 * classes);
+    for i in 0..3 {
+        let mut shape1 = ds.x_shape.clone();
+        shape1[0] = 1;
+        let x1 = XBatch::F32 { data: ds.gather_x_f32(&[i]), shape: shape1 };
+        let out1 = engine.run_model("edgenet_tiny24", &x1).unwrap();
+        for (a, b) in out1.logits.iter().zip(&out3.logits[i * classes..(i + 1) * classes]) {
+            assert!((a - b).abs() < 1e-3, "sample {i}: b1 vs b16-padded mismatch");
+        }
+    }
+}
+
+fn check_det_task_runs_and_scores(engine: &Engine) {
+    let root = engine.artifacts_root().to_path_buf();
+    let m = engine.manifest().clone();
+    let task = m.task("patchdet").unwrap().clone();
+    let ds = Dataset::load(&root, &task.splits["test"]).unwrap();
+    let n = 128.min(ds.len());
+    let b = m.eval_batch;
+    let classes = task.num_classes + 1;
+    let dep = m.deployment("patchdet_3dev").unwrap().clone();
+    let mut agg_logits: Vec<f32> = Vec::new();
+    let mut labels: Vec<i32> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let idx: Vec<usize> = (i..(i + b).min(n)).collect();
+        let mut shape = ds.x_shape.clone();
+        shape[0] = idx.len();
+        let x = XBatch::F32 { data: ds.gather_x_f32(&idx), shape };
+        let mut feats = Vec::new();
+        for name in &dep.members {
+            let out = engine.run_model(name, &x).unwrap();
+            feats.push((out.feats, out.feats_shape));
+        }
+        let (logits, shape_out) = engine.run_aggregator("patchdet_3dev", "det", &feats).unwrap();
+        assert_eq!(shape_out[2], classes);
+        agg_logits.extend_from_slice(&logits);
+        labels.extend(ds.gather_y(&idx));
+        i += b;
+    }
+    let acc = top1_accuracy(&agg_logits, &labels, classes);
+    let map = coformer::metrics::mean_average_precision(&agg_logits, &labels, classes);
+    eprintln!("patchdet aggregated: per-patch acc {acc:.4}, mAP {map:.4}");
+    assert!(acc > 0.9, "det accuracy {acc}");
+    assert!(map > 0.7, "det mAP {map}");
+}
+
+
+// -------------------------------------------------------------------------
+// Single entrypoint: the xla crate's PJRT teardown is not re-entrant (a
+// second client created after the first is destroyed segfaults), so the
+// whole suite shares ONE Engine, created once per process.
+// -------------------------------------------------------------------------
+
+#[test]
+fn runtime_integration_suite() {
+    let Some(root) = artifacts() else { return };
+    let engine = Engine::load(&root).unwrap();
+    check_manifest(&engine);
+    check_teacher_accuracy_matches_build_time(&engine);
+    check_submodel_accuracies_match_build_time(&engine);
+    check_token_mode_model_runs(&engine);
+    check_aggregation_beats_members(&engine);
+    check_masked_teacher_full_mask_matches_unmasked(&engine);
+    check_batch_padding_is_consistent(&engine);
+    check_det_task_runs_and_scores(&engine);
+    check_booster(&engine);
+    eprintln!("runtime integration suite: all checks passed");
+}
+
+/// Booster checks (Alg. 1 lines 12-15 driven from rust).
+fn check_booster(engine: &Engine) {
+    use coformer::booster::{BoostConfig, Booster};
+    let booster = Booster::new(engine, BoostConfig { steps: 6, seed: 3, log_every: 0 });
+    let reports = booster.calibrate_deployment("edgenet_3dev").unwrap();
+    assert_eq!(reports.len(), 3);
+    for r in &reports {
+        assert!(r.first_loss.is_finite());
+        assert!(r.last_loss.is_finite());
+        assert!(r.mean_per_sample_loss > 0.0);
+        assert!(r.first_loss < 3.0, "{}: expected warm-start loss, got {}", r.model, r.first_loss);
+    }
+    // longer single-member run must not diverge
+    let m = engine.manifest().clone();
+    let task = m.task("edgenet").unwrap().clone();
+    let root = engine.artifacts_root().to_path_buf();
+    let train = Dataset::load(&root, &task.splits["train"]).unwrap();
+    let booster = Booster::new(engine, BoostConfig { steps: 25, seed: 5, log_every: 0 });
+    let y_t = booster.teacher_hard("teacher_edgenet", &train, true).unwrap();
+    let w = vec![1.0; train.len()];
+    let rep = booster.calibrate_member("edgenet_tiny24", &train, &y_t, &w, true).unwrap();
+    eprintln!("booster tiny24: first {:.4} last {:.4} per-sample {:.4}",
+        rep.first_loss, rep.last_loss, rep.mean_per_sample_loss);
+    assert!(rep.last_loss < rep.first_loss * 1.5, "loss diverged");
+}

@@ -1,0 +1,358 @@
+//! Property-based tests (hand-rolled harness — the vendored crate set has
+//! no proptest): seeded random sweeps asserting invariants of the policy /
+//! constraint layer, the JSON codec, the GP, the aggregators, the batcher
+//! and the strategy simulations. Each property runs hundreds of random
+//! cases; failures print the offending seed.
+
+use coformer::aggregation;
+use coformer::debo::{expected_improvement, Gp, Matern32};
+use coformer::device::{DeviceProfile, SimDevice};
+use coformer::model::{policy::DeviceCaps, Arch, CostModel, DecompositionPolicy, Mode, SubModelCfg};
+use coformer::net::{Link, Topology};
+use coformer::strategies;
+use coformer::util::{Json, Rng};
+
+/// Run `f` over `n` seeded cases; panic with the seed on failure.
+fn forall(n: usize, base_seed: u64, f: impl Fn(&mut Rng)) {
+    for i in 0..n {
+        let seed = base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_policy(rng: &mut Rng, teacher: &Arch, n_dev: usize) -> DecompositionPolicy {
+    let subs = (0..n_dev)
+        .map(|_| SubModelCfg {
+            layers: rng.gen_range(1, teacher.layers),
+            dim: 8 * rng.gen_range(1, teacher.dim / 8),
+            heads: rng.gen_range(1, teacher.heads[0]),
+            mlp_dim: 16 * rng.gen_range(1, teacher.mlp_dims[0] / 16),
+        })
+        .collect();
+    DecompositionPolicy::new(subs)
+}
+
+fn teacher() -> Arch {
+    Arch::uniform(Mode::Patch, 4, 96, 24, 4, 192, 20)
+}
+
+// ---------------------------------------------------------------- policy
+
+#[test]
+fn prop_constraint_check_iff_manual_sums() {
+    // check() == Ok exactly when the manually-computed C1–C4 sums hold
+    let t = teacher();
+    let caps = vec![DeviceCaps { max_flops: f64::MAX, max_memory: usize::MAX }; 3];
+    forall(500, 100, |rng| {
+        let p = random_policy(rng, &t, 3);
+        let manual_ok = p.subs.iter().all(|s| s.layers <= t.layers)
+            && p.subs.iter().map(|s| s.dim).sum::<usize>() <= t.dim
+            && (0..t.layers).all(|k| {
+                p.subs.iter().filter(|s| k < s.layers).map(|s| s.heads).sum::<usize>()
+                    <= t.heads[k]
+                    && p.subs
+                        .iter()
+                        .filter(|s| k < s.layers)
+                        .map(|s| s.mlp_dim)
+                        .sum::<usize>()
+                        <= t.mlp_dims[k]
+            });
+        assert_eq!(p.check(&t, &caps, 1).is_ok(), manual_ok, "{p:?}");
+    });
+}
+
+#[test]
+fn prop_encode_is_injective_on_distinct_policies() {
+    let t = teacher();
+    forall(200, 200, |rng| {
+        let a = random_policy(rng, &t, 3);
+        let b = random_policy(rng, &t, 3);
+        if a != b {
+            assert_ne!(a.encode(&t), b.encode(&t));
+        } else {
+            assert_eq!(a.encode(&t), b.encode(&t));
+        }
+    });
+}
+
+#[test]
+fn prop_flops_monotone_in_every_axis() {
+    let t = teacher();
+    forall(300, 300, |rng| {
+        let s = SubModelCfg {
+            layers: rng.gen_range(1, 3),
+            dim: 8 * rng.gen_range(1, 10),
+            heads: rng.gen_range(1, 3),
+            mlp_dim: 16 * rng.gen_range(1, 10),
+        };
+        let base = CostModel::flops_per_sample(&s.to_arch(&t));
+        for grown in [
+            SubModelCfg { layers: s.layers + 1, ..s },
+            SubModelCfg { dim: s.dim + 8, ..s },
+            SubModelCfg { heads: s.heads + 1, ..s },
+            SubModelCfg { mlp_dim: s.mlp_dim + 16, ..s },
+        ] {
+            let f = CostModel::flops_per_sample(&grown.to_arch(&t));
+            assert!(f > base, "{grown:?} not > {s:?}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(0, 3) } else { rng.gen_range(0, 5) } {
+            0 => Json::Num((rng.gen_f64() * 2000.0 - 1000.0).round() / 8.0),
+            1 => Json::Bool(rng.gen_f64() < 0.5),
+            2 => {
+                let n = rng.gen_range(0, 8);
+                Json::Str((0..n).map(|_| (b'a' + rng.gen_range(0, 25) as u8) as char).collect())
+            }
+            3 => Json::Arr((0..rng.gen_range(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(500, 400, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back, "roundtrip failed for {text}");
+    });
+}
+
+// ---------------------------------------------------------------- GP
+
+#[test]
+fn prop_gp_posterior_variance_nonnegative_and_shrinks_at_data() {
+    forall(100, 500, |rng| {
+        let mut gp = Gp::new(Matern32::default(), 1e-5);
+        let mut xs = Vec::new();
+        for _ in 0..rng.gen_range(2, 12) {
+            let x: Vec<f64> = (0..3).map(|_| rng.gen_f64() * 2.0).collect();
+            let y = rng.gen_f64();
+            gp.observe(x.clone(), y);
+            xs.push(x);
+        }
+        // at observed points variance is near the noise floor
+        for x in &xs {
+            let (_, var) = gp.predict(x);
+            assert!(var >= 0.0);
+            assert!(var < 0.01, "var at data point: {var}");
+        }
+        // anywhere else variance is bounded by the prior
+        let q: Vec<f64> = (0..3).map(|_| rng.gen_f64() * 4.0).collect();
+        let (_, var) = gp.predict(&q);
+        assert!(var <= 1.0 + 1e-9);
+    });
+}
+
+#[test]
+fn prop_ei_nonnegative_and_zero_when_hopeless() {
+    forall(1000, 600, |rng| {
+        let mean = rng.gen_f64() * 10.0 - 5.0;
+        let var = rng.gen_f64() * 4.0;
+        let best = rng.gen_f64() * 10.0 - 5.0;
+        let ei = expected_improvement(mean, var, best);
+        assert!(ei >= 0.0, "EI must be nonneg: {ei}");
+        if var < 1e-14 && mean > best {
+            assert_eq!(ei, 0.0);
+        }
+    });
+}
+
+// ------------------------------------------------------------- combiners
+
+#[test]
+fn prop_average_probs_sum_to_one() {
+    forall(200, 700, |rng| {
+        let rows = rng.gen_range(1, 8);
+        let classes = rng.gen_range(2, 10);
+        let k = rng.gen_range(1, 4);
+        let members: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                (0..rows * classes)
+                    .map(|_| (rng.gen_f64() * 10.0 - 5.0) as f32)
+                    .collect()
+            })
+            .collect();
+        let fused = aggregation::average(&members, rows, classes);
+        for r in 0..rows {
+            let s: f32 = fused[r * classes..(r + 1) * classes].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        }
+    });
+}
+
+#[test]
+fn prop_unanimous_vote_wins() {
+    forall(200, 800, |rng| {
+        let classes = rng.gen_range(2, 10);
+        let winner = rng.gen_range(0, classes - 1);
+        let k = rng.gen_range(1, 5);
+        let members: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                let mut row = vec![0.0f32; classes];
+                row[winner] = 1.0 + rng.gen_f64() as f32;
+                row
+            })
+            .collect();
+        assert_eq!(aggregation::majority_vote(&members, 1, classes), vec![winner]);
+    });
+}
+
+// ------------------------------------------------------------- strategies
+
+#[test]
+fn prop_coformer_total_bounds() {
+    // Eq. 3 invariants: total ≥ max member (compute+transmit); total ≤
+    // sum of everything (no time creation)
+    let fleet = DeviceProfile::paper_fleet();
+    let t = teacher();
+    forall(200, 900, |rng| {
+        let topo = Topology::star(3, Link::mbps(1.0 + rng.gen_f64() * 999.0), rng.gen_range(0, 2));
+        let archs: Vec<Arch> = (0..3)
+            .map(|_| {
+                SubModelCfg {
+                    layers: rng.gen_range(1, 4),
+                    dim: 8 * rng.gen_range(1, 5),
+                    heads: 1,
+                    mlp_dim: 16 * rng.gen_range(1, 4),
+                }
+                .to_arch(&t)
+            })
+            .collect();
+        let out = strategies::coformer(&fleet, &topo, &archs, 64, 1).unwrap();
+        let max_member = out
+            .devices
+            .iter()
+            .map(|d| d.compute_s + d.transmit_s)
+            .fold(0.0, f64::max);
+        let sum_all: f64 = out.devices.iter().map(|d| d.compute_s + d.transmit_s).sum();
+        assert!(out.total_s >= max_member - 1e-12);
+        assert!(out.total_s <= sum_all + out.total_s); // total includes agg
+        assert!(out.total_energy_j() > 0.0);
+        assert!(out.idle_fraction() >= 0.0 && out.idle_fraction() < 1.0);
+    });
+}
+
+#[test]
+fn prop_pipe_edge_total_is_sum_of_stage_times() {
+    let fleet = DeviceProfile::paper_fleet();
+    forall(200, 1000, |rng| {
+        let topo = Topology::star(3, Link::mbps(1.0 + rng.gen_f64() * 99.0), 0);
+        let segs: Vec<strategies::Segment> = (0..3)
+            .map(|_| strategies::Segment {
+                flops: 1e8 + rng.gen_f64() * 1e10,
+                activation_bytes: rng.gen_range(1024, 1 << 20),
+                memory_bytes: 1 << 20,
+            })
+            .collect();
+        let out = strategies::pipe_edge(&fleet, &topo, &segs).unwrap();
+        let manual: f64 = segs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                fleet[i].compute_time_s(s.flops)
+                    + if i + 1 < segs.len() {
+                        topo.between_s(i, i + 1, s.activation_bytes)
+                    } else {
+                        0.0
+                    }
+            })
+            .sum();
+        assert!((out.total_s - manual).abs() < 1e-9, "{} vs {manual}", out.total_s);
+    });
+}
+
+#[test]
+fn prop_bandwidth_monotonicity_all_strategies() {
+    // more bandwidth never hurts, for every strategy
+    let fleet = DeviceProfile::paper_fleet();
+    let t = teacher();
+    forall(100, 1100, |rng| {
+        let bw_lo = 1.0 + rng.gen_f64() * 50.0;
+        let bw_hi = bw_lo * (1.5 + rng.gen_f64() * 4.0);
+        let archs: Vec<Arch> = (0..3)
+            .map(|_| {
+                SubModelCfg { layers: 2, dim: 8 * rng.gen_range(2, 5), heads: 1, mlp_dim: 48 }
+                    .to_arch(&t)
+            })
+            .collect();
+        let run_cof = |bw: f64| {
+            strategies::coformer(&fleet, &Topology::star(3, Link::mbps(bw), 1), &archs, 64, 1)
+                .unwrap()
+                .total_s
+        };
+        assert!(run_cof(bw_hi) <= run_cof(bw_lo) + 1e-12);
+        let run_tp = |bw: f64| {
+            strategies::tensor_parallel(
+                "g",
+                &fleet,
+                &Topology::star(3, Link::mbps(bw), 1),
+                1e10,
+                4,
+                4096,
+                2.0,
+                1 << 20,
+            )
+            .unwrap()
+            .total_s
+        };
+        assert!(run_tp(bw_hi) <= run_tp(bw_lo) + 1e-12);
+    });
+}
+
+// --------------------------------------------------------------- devices
+
+#[test]
+fn prop_device_energy_equals_busy_excess_power() {
+    forall(300, 1200, |rng| {
+        let profile = DeviceProfile::paper_fleet()[rng.gen_range(0, 2)].clone();
+        let mut d = SimDevice::new(profile.clone());
+        let mut busy = 0.0;
+        for _ in 0..rng.gen_range(1, 6) {
+            let f = rng.gen_f64() * 1e9;
+            d.compute(f);
+            busy += profile.compute_time_s(f);
+            if rng.gen_f64() < 0.5 {
+                let tt = rng.gen_f64() * 0.01;
+                d.transmit(tt);
+                busy += tt;
+            }
+            if rng.gen_f64() < 0.5 {
+                d.wait_until(d.now() + rng.gen_f64() * 0.01);
+            }
+        }
+        let e = d.end_inference();
+        let expect = (profile.active_power_w - profile.idle_power_w) * busy;
+        assert!((e - expect).abs() < 1e-9, "{e} vs {expect}");
+    });
+}
+
+#[test]
+fn prop_memory_admission_never_overcommits() {
+    forall(300, 1300, |rng| {
+        let profile = DeviceProfile::jetson_nano(); // 4 GB
+        let mut d = SimDevice::new(profile.clone());
+        let mut total = 0usize;
+        for _ in 0..20 {
+            let req = rng.gen_range(1 << 20, 1 << 31);
+            match d.load_model(req) {
+                Ok(()) => total += req,
+                Err(_) => {}
+            }
+            assert!(total <= profile.memory_bytes);
+            assert_eq!(d.resident_bytes(), total);
+        }
+    });
+}
