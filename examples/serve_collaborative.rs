@@ -8,7 +8,7 @@
 //! cargo run --release --example serve_collaborative [n_requests]
 //! ```
 
-use coformer::config::SystemConfig;
+use coformer::config::{FaultPolicy, SystemConfig};
 use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
 use coformer::data::Dataset;
 use coformer::device::DeviceProfile;
@@ -40,7 +40,10 @@ fn main() -> Result<()> {
     for member in &dep.members {
         exec.warmup(member)?;
     }
-    let config = SystemConfig::paper_default();
+    let mut config = SystemConfig::paper_default();
+    // Fault policy: tolerate one straggler/death (2-of-3 quorum), 3× virtual
+    // deadlines, hot re-dispatch of a dead device's sub-model.
+    config.fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
     let coord = Coordinator::start(config, exec, dep.clone(), archs, ds.x_stride())?;
     let handle = coord.handle();
 
@@ -75,6 +78,16 @@ fn main() -> Result<()> {
         stats.total_energy_j
     );
     println!("host throughput: {:.1} req/s (wall {:.2} s)", n as f64 / wall, wall);
+    println!(
+        "fault counters: timeouts {}  crashes {}  re-dispatches {}  late harvests {}  \
+         quorum failures {}  quorum histogram {:?}",
+        stats.fault.timeouts,
+        stats.fault.crashes,
+        stats.fault.redispatches,
+        stats.fault.harvested_late,
+        stats.fault.quorum_failures,
+        stats.fault.quorum_histogram()
+    );
 
     // --- baseline: the teacher on the strongest single device -------------
     // batch-matched comparison (the coordinator served ~16-sample batches)

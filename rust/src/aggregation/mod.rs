@@ -79,6 +79,44 @@ pub fn majority_vote(members: &[Vec<f32>], rows: usize, classes: usize) -> Vec<u
     out
 }
 
+/// k-of-n renormalization for the learned (Eq. 2) aggregators.
+///
+/// The artifact combiners consume a fixed-arity tuple of member features;
+/// when only `k < n` members arrive, the arrived features are scaled by
+/// `n/k` and the missing slots are zero-filled, so the combiner's expected
+/// input magnitude (a sum over members) is preserved — the feature-space
+/// analog of renormalizing ensemble weights over the surviving members.
+///
+/// `missing_shape(i)` supplies the feature shape of absent member `i`.
+/// Returns the full-arity feature list plus the quorum size `k`.
+pub fn renormalize_subset(
+    members: Vec<Option<(Vec<f32>, Vec<usize>)>>,
+    missing_shape: impl Fn(usize) -> Vec<usize>,
+) -> (Vec<(Vec<f32>, Vec<usize>)>, usize) {
+    let total = members.len();
+    let k = members.iter().filter(|m| m.is_some()).count();
+    let scale = if k == 0 { 0.0 } else { total as f32 / k as f32 };
+    let mut out = Vec::with_capacity(total);
+    for (i, m) in members.into_iter().enumerate() {
+        match m {
+            Some((mut data, shape)) => {
+                if k < total {
+                    for v in &mut data {
+                        *v *= scale;
+                    }
+                }
+                out.push((data, shape));
+            }
+            None => {
+                let shape = missing_shape(i);
+                let len: usize = shape.iter().product();
+                out.push((vec![0.0f32; len], shape));
+            }
+        }
+    }
+    (out, k)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +182,45 @@ mod tests {
         let m1 = vec![1.0f32, 0.0];
         let m2 = vec![0.0f32, 1.0];
         assert_eq!(majority_vote(&[m1, m2], 1, 2), vec![0]);
+    }
+
+    #[test]
+    fn renormalize_subset_full_quorum_is_identity() {
+        let a = (vec![1.0f32, 2.0], vec![1, 2]);
+        let b = (vec![3.0f32, 4.0], vec![1, 2]);
+        let (out, k) =
+            renormalize_subset(vec![Some(a.clone()), Some(b.clone())], |_| vec![1, 2]);
+        assert_eq!(k, 2);
+        assert_eq!(out, vec![a, b]);
+    }
+
+    #[test]
+    fn renormalize_subset_scales_and_zero_fills() {
+        let a = (vec![1.0f32, 2.0], vec![1, 2]);
+        let (out, k) = renormalize_subset(
+            vec![Some(a), None, Some((vec![6.0f32, 0.0], vec![1, 2]))],
+            |i| {
+                assert_eq!(i, 1);
+                vec![1, 2]
+            },
+        );
+        assert_eq!(k, 2);
+        // present members scaled by n/k = 3/2
+        assert_eq!(out[0].0, vec![1.5, 3.0]);
+        assert_eq!(out[2].0, vec![9.0, 0.0]);
+        // missing member zero-filled at the requested shape
+        assert_eq!(out[1].0, vec![0.0, 0.0]);
+        assert_eq!(out[1].1, vec![1, 2]);
+        // sum over members is preserved in expectation: 1.5+0+9 vs (1+6)*3/2
+        assert!((out.iter().map(|(d, _)| d[0]).sum::<f32>() - 10.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn renormalize_subset_all_missing() {
+        let (out, k) =
+            renormalize_subset(vec![None, None], |_| vec![2]);
+        assert_eq!(k, 0);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|(d, _)| d.iter().all(|&v| v == 0.0)));
     }
 }

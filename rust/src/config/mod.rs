@@ -44,6 +44,80 @@ pub fn preset(name: &str) -> Result<DeviceProfile> {
     }
 }
 
+/// Fault-tolerance policy for the serving coordinator: per-device virtual
+/// deadlines, the k-of-n quorum, the health state machine thresholds and
+/// sub-model re-dispatch (ISSUE 1 / DeViT-style degraded ensembles).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPolicy {
+    /// Minimum member feature sets required to aggregate a batch (k of n).
+    pub min_quorum: usize,
+    /// Per-batch deadline = `deadline_factor` × predicted virtual arrival.
+    pub deadline_factor: f64,
+    /// Additive deadline floor, seconds (absorbs model error near zero).
+    pub deadline_floor_s: f64,
+    /// Extra deadline multiplier granted to Degraded devices.
+    pub degraded_slack: f64,
+    /// Consecutive deadline misses before a device is marked Degraded.
+    pub degraded_after: usize,
+    /// Consecutive deadline misses before a device is declared Dead.
+    pub dead_after: usize,
+    /// Consecutive on-time batches before a Degraded device recovers.
+    pub recover_after: usize,
+    /// Re-dispatch a dead device's sub-model to the least-loaded survivor.
+    pub redispatch: bool,
+    /// Wall-clock harvest timeout per worker reply (crash containment for
+    /// genuinely hung backends; virtual-time faults never rely on this).
+    pub wall_timeout_ms: u64,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            min_quorum: 1,
+            deadline_factor: 3.0,
+            deadline_floor_s: 0.0,
+            degraded_slack: 1.5,
+            degraded_after: 1,
+            dead_after: 3,
+            recover_after: 2,
+            redispatch: true,
+            wall_timeout_ms: 30_000,
+        }
+    }
+}
+
+impl FaultPolicy {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = FaultPolicy::default();
+        let opt_f64 = |key: &str, dv: f64| -> Result<f64> {
+            v.get(key).map(|x| x.as_f64()).transpose().map(|o| o.unwrap_or(dv))
+        };
+        let opt_usize = |key: &str, dv: usize| -> Result<usize> {
+            v.get(key).map(|x| x.as_usize()).transpose().map(|o| o.unwrap_or(dv))
+        };
+        let p = FaultPolicy {
+            min_quorum: opt_usize("min_quorum", d.min_quorum)?,
+            deadline_factor: opt_f64("deadline_factor", d.deadline_factor)?,
+            deadline_floor_s: opt_f64("deadline_floor_s", d.deadline_floor_s)?,
+            degraded_slack: opt_f64("degraded_slack", d.degraded_slack)?,
+            degraded_after: opt_usize("degraded_after", d.degraded_after)?,
+            dead_after: opt_usize("dead_after", d.dead_after)?,
+            recover_after: opt_usize("recover_after", d.recover_after)?,
+            redispatch: v
+                .get("redispatch")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(d.redispatch),
+            wall_timeout_ms: opt_usize("wall_timeout_ms", d.wall_timeout_ms as usize)?
+                as u64,
+        };
+        anyhow::ensure!(p.deadline_factor >= 1.0, "deadline_factor must be >= 1");
+        anyhow::ensure!(p.degraded_slack >= 1.0, "degraded_slack must be >= 1");
+        anyhow::ensure!(p.dead_after >= 1, "dead_after must be >= 1");
+        Ok(p)
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -67,6 +141,8 @@ pub struct SystemConfig {
     pub max_wait_ms: u64,
     /// DeBo balance hyperparameter δ.
     pub delta: f64,
+    /// Serving fault-tolerance policy (deadlines, quorum, re-dispatch).
+    pub fault: FaultPolicy,
 }
 
 impl SystemConfig {
@@ -102,8 +178,19 @@ impl SystemConfig {
             max_batch: opt_usize("max_batch", 16)?,
             max_wait_ms: opt_usize("max_wait_ms", 5)? as u64,
             delta: opt_f64("delta", 20.0)?,
+            fault: v
+                .get("fault")
+                .map(FaultPolicy::from_json)
+                .transpose()?
+                .unwrap_or_default(),
         };
         anyhow::ensure!(c.central < c.devices.len(), "central index out of range");
+        anyhow::ensure!(
+            c.fault.min_quorum <= c.devices.len(),
+            "min_quorum {} is unsatisfiable with {} devices",
+            c.fault.min_quorum,
+            c.devices.len()
+        );
         Ok(c)
     }
 
@@ -129,6 +216,7 @@ impl SystemConfig {
             max_batch: 16,
             max_wait_ms: 5,
             delta: 20.0,
+            fault: FaultPolicy::default(),
         }
     }
 
@@ -178,6 +266,41 @@ mod tests {
     fn unknown_preset_rejected() {
         let spec = DeviceSpec::Preset("quantum-board".into());
         assert!(spec.resolve().is_err());
+    }
+
+    #[test]
+    fn fault_policy_defaults_when_absent() {
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x"}"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(c.fault, FaultPolicy::default());
+    }
+
+    #[test]
+    fn fault_policy_parses_overrides() {
+        let json = r#"{
+          "devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+          "fault":{"min_quorum":2,"deadline_factor":2.5,"redispatch":false}
+        }"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(c.fault.min_quorum, 2);
+        assert!((c.fault.deadline_factor - 2.5).abs() < 1e-12);
+        assert!(!c.fault.redispatch);
+        // untouched knobs keep their defaults
+        assert_eq!(c.fault.dead_after, FaultPolicy::default().dead_after);
+    }
+
+    #[test]
+    fn unsatisfiable_min_quorum_rejected_at_load() {
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "fault":{"min_quorum":3}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fault_policy_rejects_sub_one_factor() {
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "fault":{"deadline_factor":0.5}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
     }
 
     #[test]

@@ -153,6 +153,95 @@ mod tests {
         assert!(b.next_batch().is_none());
     }
 
+    fn tagged(v: f32) -> (LeaderMsg, ReplyRx) {
+        let (reply, rx) = mpsc::sync_channel(1);
+        (
+            LeaderMsg::Request(InferenceRequest { x: RequestPayload::F32(vec![v]), reply }),
+            rx,
+        )
+    }
+
+    #[test]
+    fn never_emits_empty_batch() {
+        // a batch always contains at least the request that opened it; a
+        // shutdown or closed channel yields None, not Some(vec![])
+        let (tx, rx) = mpsc::sync_channel::<LeaderMsg>(4);
+        tx.send(LeaderMsg::Shutdown).unwrap();
+        let mut b = Batcher::new(rx, BatcherConfig::default());
+        assert!(b.next_batch().is_none());
+
+        let (tx, rx) = mpsc::sync_channel(4);
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+        );
+        let mut keeps = Vec::new();
+        for _ in 0..3 {
+            let (r, keep) = req();
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let mut total = 0;
+        while let Some(batch) = b.next_batch() {
+            assert!(!batch.is_empty(), "batcher emitted an empty batch");
+            total += batch.len();
+        }
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn deadline_flush_preserves_partial_batch_order() {
+        // batch closes on the deadline with whatever queued, in FIFO order
+        let (tx, rx) = mpsc::sync_channel(64);
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(15) },
+        );
+        let mut keeps = Vec::new();
+        for i in 0..5 {
+            let (r, keep) = tagged(i as f32);
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(14), "must wait out the deadline");
+        assert_eq!(batch.len(), 5, "partial batch shipped at the deadline");
+        for (i, req) in batch.iter().enumerate() {
+            match &req.x {
+                RequestPayload::F32(v) => assert_eq!(v[0], i as f32, "order broken"),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn order_preserved_across_consecutive_batches() {
+        let (tx, rx) = mpsc::sync_channel(64);
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(50) },
+        );
+        let mut keeps = Vec::new();
+        for i in 0..7 {
+            let (r, keep) = tagged(i as f32);
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            for req in &batch {
+                match &req.x {
+                    RequestPayload::F32(v) => seen.push(v[0] as usize),
+                    _ => unreachable!(),
+                }
+            }
+        }
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+    }
+
     #[test]
     fn single_request_batch_when_max_is_one() {
         let (tx, rx) = mpsc::sync_channel(4);

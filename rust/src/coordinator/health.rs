@@ -1,0 +1,210 @@
+//! Per-device health tracking for the fault-tolerant coordinator.
+//!
+//! Every batch completion acts as a heartbeat: a device that delivers its
+//! features within its virtual deadline is on time; one that delivers late
+//! misses (but its result is still *harvested* — the arrival informs the
+//! next batch's health score instead of being discarded); one that never
+//! delivers has crashed. Consecutive misses walk the device through
+//! Healthy → Degraded → Dead per the [`FaultPolicy`] thresholds, and
+//! consecutive on-time batches walk a Degraded device back.
+
+use crate::config::FaultPolicy;
+
+/// Coordinator-visible device condition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Meeting deadlines; full trust.
+    Healthy,
+    /// Missing deadlines; still dispatched, with extra deadline slack.
+    Degraded,
+    /// Crashed or persistently late; no longer dispatched. Terminal.
+    Dead,
+}
+
+/// Heartbeat-driven health record for one device.
+#[derive(Clone, Debug)]
+pub struct DeviceHealth {
+    state: HealthState,
+    consecutive_misses: usize,
+    consecutive_ok: usize,
+    total_batches: usize,
+    total_misses: usize,
+    /// EWMA of the on-time indicator in [0, 1]. Load-bearing: the leader
+    /// divides a device's load by this when picking re-dispatch targets,
+    /// so late (even harvested-late) history steers work elsewhere.
+    score: f64,
+    /// Most recent observed virtual arrival (on-time or harvested).
+    last_arrive_s: f64,
+}
+
+impl Default for DeviceHealth {
+    fn default() -> Self {
+        DeviceHealth {
+            state: HealthState::Healthy,
+            consecutive_misses: 0,
+            consecutive_ok: 0,
+            total_batches: 0,
+            total_misses: 0,
+            score: 1.0,
+            last_arrive_s: 0.0,
+        }
+    }
+}
+
+impl DeviceHealth {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.state != HealthState::Dead
+    }
+
+    pub fn score(&self) -> f64 {
+        self.score
+    }
+
+    pub fn total_misses(&self) -> usize {
+        self.total_misses
+    }
+
+    pub fn last_arrive_s(&self) -> f64 {
+        self.last_arrive_s
+    }
+
+    /// Features arrived within the deadline.
+    pub fn on_time(&mut self, policy: &FaultPolicy, arrive_s: f64) {
+        if self.state == HealthState::Dead {
+            return;
+        }
+        self.total_batches += 1;
+        self.consecutive_ok += 1;
+        self.consecutive_misses = 0;
+        self.score = 0.9 * self.score + 0.1;
+        self.last_arrive_s = arrive_s;
+        if self.state == HealthState::Degraded && self.consecutive_ok >= policy.recover_after
+        {
+            self.state = HealthState::Healthy;
+        }
+    }
+
+    /// Deadline missed (straggler or execution failure).
+    pub fn miss(&mut self, policy: &FaultPolicy) {
+        if self.state == HealthState::Dead {
+            return;
+        }
+        self.total_batches += 1;
+        self.total_misses += 1;
+        self.consecutive_ok = 0;
+        self.consecutive_misses += 1;
+        self.score *= 0.9;
+        if self.consecutive_misses >= policy.dead_after {
+            self.state = HealthState::Dead;
+        } else if self.consecutive_misses >= policy.degraded_after {
+            self.state = HealthState::Degraded;
+        }
+    }
+
+    /// A late result was harvested after its deadline: the miss already
+    /// counted against the device, but the observed arrival still feeds the
+    /// next batch's score (the device is slow, not gone).
+    pub fn harvest_late(&mut self, arrive_s: f64) {
+        self.last_arrive_s = arrive_s;
+        if self.state != HealthState::Dead {
+            self.score = (self.score + 0.05).min(1.0);
+        }
+    }
+
+    /// The device is gone (crash observed). Terminal.
+    pub fn set_dead(&mut self) {
+        self.state = HealthState::Dead;
+        self.consecutive_ok = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> FaultPolicy {
+        FaultPolicy {
+            degraded_after: 1,
+            dead_after: 3,
+            recover_after: 2,
+            ..FaultPolicy::default()
+        }
+    }
+
+    #[test]
+    fn healthy_until_first_miss_then_degraded() {
+        let p = policy();
+        let mut h = DeviceHealth::new();
+        h.on_time(&p, 0.01);
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.miss(&p);
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert_eq!(h.total_misses(), 1);
+    }
+
+    #[test]
+    fn consecutive_misses_kill() {
+        let p = policy();
+        let mut h = DeviceHealth::new();
+        h.miss(&p);
+        h.miss(&p);
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.miss(&p);
+        assert_eq!(h.state(), HealthState::Dead);
+        assert!(!h.is_alive());
+        // dead is terminal: an on-time arrival cannot resurrect
+        h.on_time(&p, 0.01);
+        assert_eq!(h.state(), HealthState::Dead);
+    }
+
+    #[test]
+    fn recovery_needs_consecutive_on_time() {
+        let p = policy();
+        let mut h = DeviceHealth::new();
+        h.miss(&p);
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.on_time(&p, 0.01);
+        assert_eq!(h.state(), HealthState::Degraded); // 1 of 2
+        h.on_time(&p, 0.01);
+        assert_eq!(h.state(), HealthState::Healthy); // 2 of 2
+    }
+
+    #[test]
+    fn interleaved_miss_resets_recovery() {
+        let p = policy();
+        let mut h = DeviceHealth::new();
+        h.miss(&p);
+        h.on_time(&p, 0.01);
+        h.miss(&p); // resets consecutive_ok
+        h.on_time(&p, 0.01);
+        assert_eq!(h.state(), HealthState::Degraded);
+    }
+
+    #[test]
+    fn score_moves_with_outcomes_and_harvest_credits() {
+        let p = policy();
+        let mut h = DeviceHealth::new();
+        let s0 = h.score();
+        h.miss(&p);
+        assert!(h.score() < s0);
+        let s1 = h.score();
+        h.harvest_late(7.5);
+        assert!(h.score() > s1, "harvested stragglers earn partial credit");
+        assert!((h.last_arrive_s() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crash_is_immediate_death() {
+        let mut h = DeviceHealth::new();
+        h.set_dead();
+        assert_eq!(h.state(), HealthState::Dead);
+    }
+}

@@ -1,29 +1,43 @@
-//! The L3 serving coordinator — CoFormer's inference stage (§III-A(iii)).
+//! The L3 serving coordinator — CoFormer's inference stage (§III-A(iii)),
+//! rebuilt as a fault-tolerant, straggler-aware scheduler (ISSUE 1).
 //!
 //! A leader thread owns request intake and the dynamic [`batcher`]; one
-//! persistent worker thread per edge device runs that device's sub-model
-//! (numerics via the PJRT [`ExecHandle`], timing via its device profile)
-//! and ships features to the central node exactly once per batch; the
-//! leader aggregates (Eq. 2 artifact or a training-free combiner) and
-//! resolves the per-request replies with the *virtual* edge-fleet latency
-//! (what the paper measures on Jetsons) alongside host wall time.
+//! persistent worker thread per edge device runs that device's sub-model(s)
+//! (numerics via the PJRT [`ExecHandle`], timing via a virtual-clock
+//! [`FaultyDevice`]) and ships features to the central node once per batch.
+//!
+//! Fault model: the paper's Eq. 2 makes the transformer *divisible and
+//! integrable* — n decomposed backbones aggregate centrally — so the
+//! central node can aggregate whatever `k ≥ min_quorum` feature sets arrive
+//! instead of blocking on the slowest device. Per-batch virtual deadlines
+//! are derived from each device profile's predicted compute + transfer
+//! time; a device that misses its deadline is a straggler whose late result
+//! is *harvested* (it informs the next batch's health score) but excluded
+//! from this batch's aggregation; a device that crashes is marked Dead and
+//! its sub-model is hot re-dispatched to the least-loaded survivor through
+//! the shared [`ExecHandle`] executable cache. All fault decisions run on
+//! the deterministic virtual clock — wall time is only a last-resort
+//! containment for genuinely hung backends.
 
 pub mod batcher;
+pub mod health;
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::aggregation;
 use crate::config::SystemConfig;
-use crate::device::DeviceProfile;
-use crate::metrics::LatencyStats;
-use crate::model::{Arch, CostModel};
-use crate::net::Topology;
+use crate::device::{DeviceProfile, FaultScript, FaultyDevice};
+use crate::metrics::{FaultMetrics, LatencyStats};
+use crate::model::{Arch, CostModel, TaskKind};
+use crate::net::{Link, Topology};
 use crate::runtime::engine::XBatch;
 use crate::runtime::manifest::DeploymentMeta;
 use crate::runtime::ExecHandle;
 use crate::Result;
 pub use batcher::{Batcher, BatcherConfig};
+pub use health::{DeviceHealth, HealthState};
 
 /// One inference request: a single sample.
 pub struct InferenceRequest {
@@ -57,6 +71,8 @@ pub struct InferenceResponse {
     pub energy_j: f64,
     /// Batch this request was served in.
     pub batch_size: usize,
+    /// Member feature sets aggregated for this batch (k of n).
+    pub quorum: usize,
 }
 
 /// Aggregate serving statistics.
@@ -67,6 +83,8 @@ pub struct ServeStats {
     pub batches: usize,
     pub requests: usize,
     pub total_energy_j: f64,
+    /// Fault-tolerance counters (timeouts, crashes, quorum histogram, …).
+    pub fault: FaultMetrics,
 }
 
 /// Coordinator handle: submit requests, receive responses.
@@ -96,27 +114,64 @@ impl CoordinatorHandle {
     }
 }
 
-/// Per-device worker context.
+/// Per-member (sub-model) context. Member `i` natively lives on device `i`;
+/// re-dispatch may move it to a surviving device.
 struct MemberCtx {
     model: String,
     arch: Arch,
-    device: DeviceProfile,
     flops_per_sample: f64,
+    feat_bytes_per_sample: usize,
+}
+
+/// One sub-model a worker must run for the current batch.
+struct MemberTask {
+    member: usize,
+    model: String,
+    flops_per_sample: f64,
+    feat_bytes_per_sample: usize,
 }
 
 /// Work sent to a device worker for one batch.
 struct WorkerJob {
+    batch_idx: usize,
+    /// Whether this device is currently the central node (its feature
+    /// transfer is free — they never cross the network).
+    is_central: bool,
+    tasks: Vec<MemberTask>,
     x: XBatch,
-    reply: mpsc::SyncSender<Result<WorkerResult>>,
+    reply: mpsc::SyncSender<WorkerReply>,
 }
 
-struct WorkerResult {
+struct MemberOutput {
+    member: usize,
     feats: Vec<f32>,
     feats_shape: Vec<usize>,
     logits: Vec<f32>,
+}
+
+struct WorkerResult {
+    outputs: Vec<MemberOutput>,
     /// Virtual arrival time of this device's features at the central node.
     arrive_s: f64,
     energy_j: f64,
+    /// Engine-side failures of individual member runs: those members are
+    /// simply absent from `outputs` (the quorum shrinks by exactly the
+    /// failed members, never by the whole worker).
+    exec_errors: Vec<String>,
+}
+
+enum WorkerReply {
+    Done(WorkerResult),
+    /// Scripted/fatal device failure; the worker thread exits after this.
+    Crashed,
+}
+
+/// An in-flight worker dispatch awaiting its reply.
+struct Pending {
+    worker: usize,
+    rx: mpsc::Receiver<WorkerReply>,
+    /// Virtual deadline for this worker's features (predicted × factor).
+    deadline_s: f64,
 }
 
 /// The leader. Construct with [`Coordinator::start`], submit via the handle,
@@ -128,13 +183,26 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the leader + per-device worker threads.
+    /// Start the leader + per-device worker threads (no injected faults).
     pub fn start(
         config: SystemConfig,
         exec: ExecHandle,
         deployment: DeploymentMeta,
         archs: Vec<Arch>,
         x_stride: usize,
+    ) -> Result<Self> {
+        Self::start_with_faults(config, exec, deployment, archs, x_stride, Vec::new())
+    }
+
+    /// Start with a per-device [`FaultScript`] (the deterministic
+    /// fault-injection harness; pass an empty vec for no faults).
+    pub fn start_with_faults(
+        config: SystemConfig,
+        exec: ExecHandle,
+        deployment: DeploymentMeta,
+        archs: Vec<Arch>,
+        x_stride: usize,
+        mut scripts: Vec<FaultScript>,
     ) -> Result<Self> {
         let devices = config.resolve_devices()?;
         anyhow::ensure!(
@@ -143,69 +211,134 @@ impl Coordinator {
             devices.len(),
             deployment.members.len()
         );
+        if scripts.is_empty() {
+            scripts = vec![FaultScript::none(); devices.len()];
+        }
+        anyhow::ensure!(
+            scripts.len() == devices.len(),
+            "fault scripts {} != fleet size {}",
+            scripts.len(),
+            devices.len()
+        );
+        anyhow::ensure!(
+            archs.len() == deployment.members.len(),
+            "arch count {} != deployment members {}",
+            archs.len(),
+            deployment.members.len()
+        );
+        anyhow::ensure!(
+            config.fault.min_quorum <= deployment.members.len(),
+            "min_quorum {} is unsatisfiable with {} members",
+            config.fault.min_quorum,
+            deployment.members.len()
+        );
         let topo = config.topology();
         let members: Vec<MemberCtx> = deployment
             .members
             .iter()
             .zip(&archs)
-            .zip(&devices)
-            .map(|((m, a), d)| MemberCtx {
+            .map(|(m, a)| MemberCtx {
                 model: m.clone(),
                 arch: a.clone(),
-                device: d.clone(),
                 flops_per_sample: CostModel::flops_per_sample(a),
+                feat_bytes_per_sample: a.feature_bytes(),
             })
             .collect();
 
         // Spawn one worker thread per device. Each worker computes its own
-        // virtual Phase-1/Phase-2 timing and energy for the batch it runs.
-        let mut worker_txs = Vec::with_capacity(members.len());
-        let mut worker_joins = Vec::with_capacity(members.len());
-        for (i, m) in members.iter().enumerate() {
+        // virtual timing and energy through a FaultyDevice simulator.
+        let mut worker_txs = Vec::with_capacity(devices.len());
+        let mut worker_joins = Vec::with_capacity(devices.len());
+        for (i, (profile, script)) in devices.iter().zip(scripts).enumerate() {
             let (jtx, jrx) = mpsc::channel::<WorkerJob>();
             let exec = exec.clone();
-            let model = m.model.clone();
-            let device = m.device.clone();
-            let flops = m.flops_per_sample;
-            let feat_bytes_per_sample = m.arch.feature_bytes();
-            let t2_of = topo.links[i];
-            let is_central = i == topo.central;
+            let link = topo.links[i];
+            let profile = profile.clone();
             let join = std::thread::Builder::new()
                 .name(format!("coformer-dev{i}"))
                 .spawn(move || {
+                    let mut device = FaultyDevice::new(profile, script);
                     while let Ok(job) = jrx.recv() {
+                        if device.should_crash(job.batch_idx) {
+                            let _ = job.reply.send(WorkerReply::Crashed);
+                            break;
+                        }
                         let n = job.x.rows();
-                        let result = (|| {
-                            let out = exec.run_model(&model, job.x)?;
-                            let t1 = device.compute_time_s(flops * n as f64);
-                            let t2 = if is_central {
-                                0.0
+                        let n_tasks = job.tasks.len();
+                        // the batch tensor is cloned per extra task only; the
+                        // last (usually only) task consumes it for free
+                        let mut x_holder = Some(job.x);
+                        let mut outputs = Vec::with_capacity(n_tasks);
+                        let mut exec_errors = Vec::new();
+                        for (ti, t) in job.tasks.iter().enumerate() {
+                            let xb = if ti + 1 == n_tasks {
+                                x_holder.take().expect("batch tensor consumed once")
                             } else {
-                                t2_of.transfer_time_s(feat_bytes_per_sample * n)
+                                x_holder.as_ref().expect("batch tensor present").clone()
                             };
-                            let energy = (device.active_power_w - device.idle_power_w)
-                                * (t1 + t2);
-                            Ok(WorkerResult {
-                                feats: out.feats,
-                                feats_shape: out.feats_shape,
-                                logits: out.logits,
-                                arrive_s: t1 + t2,
-                                energy_j: energy,
-                            })
-                        })();
-                        let _ = job.reply.send(result);
+                            match exec.run_model(&t.model, xb) {
+                                Ok(out) => {
+                                    let (t1, t2) = member_task_times_s(
+                                        device.profile(),
+                                        &link,
+                                        job.is_central,
+                                        t.flops_per_sample,
+                                        t.feat_bytes_per_sample,
+                                        n,
+                                    );
+                                    device.busy(t1);
+                                    device.busy(t2);
+                                    outputs.push(MemberOutput {
+                                        member: t.member,
+                                        feats: out.feats,
+                                        feats_shape: out.feats_shape,
+                                        logits: out.logits,
+                                    });
+                                }
+                                // a failed member costs only itself: completed
+                                // members on this worker still count
+                                Err(e) => {
+                                    exec_errors.push(format!("{}: {e:#}", t.model))
+                                }
+                            }
+                        }
+                        device.apply_stall(job.batch_idx);
+                        let timing = device.end_batch();
+                        let _ = job.reply.send(WorkerReply::Done(WorkerResult {
+                            outputs,
+                            arrive_s: timing.arrive_s,
+                            energy_j: timing.energy_j,
+                            exec_errors,
+                        }));
                     }
                 })?;
-            worker_txs.push(jtx);
+            worker_txs.push(Some(jtx));
             worker_joins.push(join);
         }
 
         let (tx, rx) = mpsc::sync_channel::<LeaderMsg>(1024);
         let batcher_cfg = BatcherConfig {
             max_batch: config.max_batch,
-            max_wait: std::time::Duration::from_millis(config.max_wait_ms),
+            max_wait: Duration::from_millis(config.max_wait_ms),
         };
-        let leader = Leader { exec, deployment, members, topo, config, x_stride, worker_txs };
+        let n_devices = devices.len();
+        let n_members = members.len();
+        let central = topo.central;
+        let leader = Leader {
+            exec,
+            deployment,
+            members,
+            devices,
+            topo,
+            config,
+            x_stride,
+            worker_txs,
+            health: (0..n_devices).map(|_| DeviceHealth::new()).collect(),
+            assigned_to: (0..n_members).collect(),
+            central,
+            batch_idx: 0,
+            fault: FaultMetrics::default(),
+        };
         let join = std::thread::Builder::new()
             .name("coformer-leader".into())
             .spawn(move || leader.run(rx, batcher_cfg))?;
@@ -236,14 +369,23 @@ struct Leader {
     exec: ExecHandle,
     deployment: DeploymentMeta,
     members: Vec<MemberCtx>,
+    devices: Vec<DeviceProfile>,
     topo: Topology,
     config: SystemConfig,
     x_stride: usize,
-    worker_txs: Vec<mpsc::Sender<WorkerJob>>,
+    /// Per-device job channel; `None` once the device is Dead.
+    worker_txs: Vec<Option<mpsc::Sender<WorkerJob>>>,
+    health: Vec<DeviceHealth>,
+    /// member index → device index currently running that sub-model.
+    assigned_to: Vec<usize>,
+    /// Device currently acting as the central (aggregation) node.
+    central: usize,
+    batch_idx: usize,
+    fault: FaultMetrics,
 }
 
 impl Leader {
-    fn run(self, rx: mpsc::Receiver<LeaderMsg>, batcher_cfg: BatcherConfig) -> ServeStats {
+    fn run(mut self, rx: mpsc::Receiver<LeaderMsg>, batcher_cfg: BatcherConfig) -> ServeStats {
         let mut stats = ServeStats::default();
         let mut batcher = Batcher::new(rx, batcher_cfg);
         while let Some(batch) = batcher.next_batch() {
@@ -271,53 +413,180 @@ impl Leader {
                 }
             }
         }
+        stats.fault = self.fault.clone();
         stats
     }
 
-    /// Serve one batch through the 3-phase CoFormer workflow.
+    /// Serve one batch through the fault-tolerant 3-phase workflow.
     fn serve_batch(
-        &self,
+        &mut self,
         batch: &[InferenceRequest],
     ) -> Result<(Vec<InferenceResponse>, f64, f64)> {
         let n = batch.len();
         let x = self.stack(batch)?;
+        let bidx = self.batch_idx;
+        self.batch_idx += 1;
+        self.ensure_central_alive();
 
-        // Phase 1+2: fan the batch out to every device worker.
-        let mut replies = Vec::with_capacity(self.members.len());
-        for wtx in &self.worker_txs {
+        // Build per-device task lists from the current assignment (Dead
+        // devices hold no assignments once re-dispatch has run).
+        let mut task_lists: Vec<Vec<MemberTask>> =
+            (0..self.devices.len()).map(|_| Vec::new()).collect();
+        for (m, ctx) in self.members.iter().enumerate() {
+            let w = self.assigned_to[m];
+            if self.worker_txs[w].is_some() {
+                task_lists[w].push(MemberTask {
+                    member: m,
+                    model: ctx.model.clone(),
+                    flops_per_sample: ctx.flops_per_sample,
+                    feat_bytes_per_sample: ctx.feat_bytes_per_sample,
+                });
+            }
+        }
+
+        // Phase 1+2: fan the batch out to every live device that has work.
+        let mut pending: Vec<Pending> = Vec::new();
+        let mut send_failures: Vec<usize> = Vec::new();
+        for (w, tasks) in task_lists.into_iter().enumerate() {
+            if tasks.is_empty() {
+                continue;
+            }
+            let deadline_s = self.deadline_s(w, &tasks, n);
             let (rtx, rrx) = mpsc::sync_channel(1);
-            wtx.send(WorkerJob { x: x.clone(), reply: rtx })
-                .map_err(|_| anyhow::anyhow!("device worker gone"))?;
-            replies.push(rrx);
+            let job = WorkerJob {
+                batch_idx: bidx,
+                is_central: w == self.central,
+                tasks,
+                x: x.clone(),
+                reply: rtx,
+            };
+            let sent = match &self.worker_txs[w] {
+                Some(wtx) => wtx.send(job).is_ok(),
+                None => false,
+            };
+            if sent {
+                pending.push(Pending { worker: w, rx: rrx, deadline_s });
+            } else {
+                send_failures.push(w);
+            }
         }
-        let mut feats = Vec::with_capacity(self.members.len());
-        let mut logits_members = Vec::with_capacity(self.members.len());
-        let mut slowest = 0.0f64;
-        let mut energy_j = 0.0f64;
-        for rrx in replies {
-            let r = rrx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("device worker dropped reply"))??;
-            slowest = slowest.max(r.arrive_s);
-            energy_j += r.energy_j;
-            feats.push((r.feats, r.feats_shape));
-            logits_members.push(r.logits);
+        for w in send_failures {
+            // worker thread already exited: treat as a crash observed now
+            self.fault.crashes += 1;
+            self.mark_dead(w);
         }
 
-        // Phase 3: aggregate at the central node (Eq. 3's `+ t³`).
+        // Phase 2.5: collect arrivals and classify against virtual deadlines.
+        let wall_timeout =
+            Duration::from_millis(self.config.fault.wall_timeout_ms.max(1));
+        let mut member_feats: Vec<Option<(Vec<f32>, Vec<usize>)>> =
+            (0..self.members.len()).map(|_| None).collect();
+        let mut member_logits: Vec<Option<Vec<f32>>> =
+            (0..self.members.len()).map(|_| None).collect();
+        let mut gate_s = 0.0f64; // how long the central node waited
+        let mut energy_j = 0.0f64;
+        for p in pending {
+            match p.rx.recv_timeout(wall_timeout) {
+                Ok(WorkerReply::Done(r)) => {
+                    energy_j += r.energy_j;
+                    self.fault.exec_failures += r.exec_errors.len();
+                    for e in &r.exec_errors {
+                        eprintln!(
+                            "[coordinator] device {} exec failure on batch {bidx}: {e}",
+                            p.worker
+                        );
+                    }
+                    if r.arrive_s <= p.deadline_s {
+                        if r.outputs.is_empty() && !r.exec_errors.is_empty() {
+                            // on time but every member run failed: the device
+                            // contributed nothing, so repeated total failures
+                            // walk it to Dead and its members re-dispatch. A
+                            // partial failure (some members fine) stays a
+                            // metrics-only event and can never cascade a
+                            // broken model across the fleet.
+                            gate_s = gate_s.max(r.arrive_s);
+                            self.health[p.worker].miss(&self.config.fault);
+                            if !self.health[p.worker].is_alive() {
+                                self.mark_dead(p.worker);
+                            }
+                        } else {
+                            // on time: features count for this batch
+                            gate_s = gate_s.max(r.arrive_s);
+                            self.health[p.worker]
+                                .on_time(&self.config.fault, r.arrive_s);
+                            for out in r.outputs {
+                                member_feats[out.member] =
+                                    Some((out.feats, out.feats_shape));
+                                member_logits[out.member] = Some(out.logits);
+                            }
+                        }
+                    } else {
+                        // straggler: the central node stopped waiting at the
+                        // deadline; the late features are excluded from this
+                        // batch but harvested into the device's health record
+                        gate_s = gate_s.max(p.deadline_s);
+                        self.fault.timeouts += 1;
+                        if !r.outputs.is_empty() {
+                            self.fault.harvested_late += 1;
+                            self.health[p.worker].harvest_late(r.arrive_s);
+                        }
+                        self.health[p.worker].miss(&self.config.fault);
+                        if !self.health[p.worker].is_alive() {
+                            self.mark_dead(p.worker);
+                        }
+                    }
+                }
+                Ok(WorkerReply::Crashed) | Err(_) => {
+                    gate_s = gate_s.max(p.deadline_s);
+                    self.fault.crashes += 1;
+                    self.mark_dead(p.worker);
+                }
+            }
+        }
+
+        // Quorum check over arrived member feature sets (k of n).
+        let n_members = self.members.len();
+        let k = member_feats.iter().filter(|f| f.is_some()).count();
+        let min_q = self.config.fault.min_quorum.max(1);
+        if k < min_q {
+            self.fault.quorum_failures += 1;
+            anyhow::bail!(
+                "quorum not met: {k} of {n_members} member feature sets arrived \
+                 (min_quorum {min_q})"
+            );
+        }
+        self.fault.record_quorum(k);
+
+        // A central node that died *during* this batch must not host Phase 3
+        // (its transfers already happened, but aggregation cost has to land
+        // on a live device): re-elect before computing the agg step.
+        self.ensure_central_alive();
+
+        // Phase 3: aggregate at the central node (Eq. 3's `+ t³`), with the
+        // combiner renormalized over the k arrived members.
         let classes = self.members[0].arch.num_classes;
-        let central = &self.members[self.topo.central];
-        let d_agg: usize = self.members.iter().map(|m| m.arch.dim).sum();
-        let agg_flops =
-            CostModel::aggregation_flops(d_agg, self.d_i(), central.arch.groups) * n as f64;
-        let agg_s = central.device.compute_time_s(agg_flops);
-        energy_j += (central.device.active_power_w - central.device.idle_power_w) * agg_s;
-        let virtual_s = slowest + agg_s;
+        let central_dev = &self.devices[self.central];
+        let d_agg: usize = self
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(m, _)| member_feats[*m].is_some())
+            .map(|(_, c)| c.arch.dim)
+            .sum();
+        let groups = self.members[self.central].arch.groups;
+        let agg_flops = CostModel::aggregation_flops(d_agg, self.d_i(), groups) * n as f64;
+        let agg_s = central_dev.compute_time_s(agg_flops);
+        energy_j += (central_dev.active_power_w - central_dev.idle_power_w) * agg_s;
+        let virtual_s = gate_s + agg_s;
 
         let fused: Vec<f32> = match self.config.aggregator.as_str() {
-            "average" => aggregation::average(&logits_members, n, classes),
+            "average" => {
+                let subset: Vec<Vec<f32>> = member_logits.into_iter().flatten().collect();
+                aggregation::average(&subset, n, classes)
+            }
             "vote" => {
-                let preds = aggregation::majority_vote(&logits_members, n, classes);
+                let subset: Vec<Vec<f32>> = member_logits.into_iter().flatten().collect();
+                let preds = aggregation::majority_vote(&subset, n, classes);
                 let mut out = vec![0.0f32; n * classes];
                 for (r, p) in preds.iter().enumerate() {
                     out[r * classes + p] = 1.0;
@@ -325,6 +594,10 @@ impl Leader {
                 out
             }
             kind => {
+                let members = &self.members;
+                let (feats, _) = aggregation::renormalize_subset(member_feats, |i| {
+                    feat_shape(&members[i].arch, n)
+                });
                 let (logits, _) =
                     self.exec
                         .run_aggregator(&self.config.deployment, kind, feats)?;
@@ -344,10 +617,104 @@ impl Leader {
                     virtual_latency_s: virtual_s,
                     energy_j: per_req_energy,
                     batch_size: n,
+                    quorum: k,
                 }
             })
             .collect();
         Ok((responses, virtual_s, energy_j))
+    }
+
+    /// Predicted virtual arrival of device `w`'s features for this batch.
+    /// Built from [`member_task_times_s`] — the identical model, in the
+    /// identical accumulation order, as the worker's simulated clock — so a
+    /// healthy device lands exactly on its prediction.
+    fn predicted_arrive_s(&self, w: usize, tasks: &[MemberTask], rows: usize) -> f64 {
+        let dev = &self.devices[w];
+        let link = &self.topo.links[w];
+        let is_central = w == self.central;
+        let mut t = 0.0f64;
+        for task in tasks {
+            let (t1, t2) = member_task_times_s(
+                dev,
+                link,
+                is_central,
+                task.flops_per_sample,
+                task.feat_bytes_per_sample,
+                rows,
+            );
+            t += t1;
+            t += t2;
+        }
+        t
+    }
+
+    /// Per-batch deadline for device `w` (Degraded devices get extra slack).
+    fn deadline_s(&self, w: usize, tasks: &[MemberTask], rows: usize) -> f64 {
+        let f = &self.config.fault;
+        let slack = if self.health[w].state() == HealthState::Degraded {
+            f.degraded_slack
+        } else {
+            1.0
+        };
+        self.predicted_arrive_s(w, tasks, rows) * f.deadline_factor * slack
+            + f.deadline_floor_s
+    }
+
+    /// If the central device died, promote the strongest survivor: the
+    /// aggregation step (and free local feature transfer) moves with it.
+    /// Shares the election rule with `strategies::coformer_degraded`.
+    fn ensure_central_alive(&mut self) {
+        if self.worker_txs[self.central].is_some() {
+            return;
+        }
+        let best =
+            crate::device::fastest_device(&self.devices, |w| self.worker_txs[w].is_some());
+        if let Some(w) = best {
+            self.central = w;
+        }
+    }
+
+    /// Retire a dead device and hot re-dispatch its sub-models to the
+    /// least-loaded survivors (idempotent).
+    fn mark_dead(&mut self, w: usize) {
+        if self.worker_txs[w].take().is_none() {
+            return; // already retired
+        }
+        self.health[w].set_dead();
+        if !self.config.fault.redispatch {
+            return;
+        }
+        let orphans: Vec<usize> = (0..self.members.len())
+            .filter(|&m| self.assigned_to[m] == w)
+            .collect();
+        for m in orphans {
+            if let Some(target) = self.least_loaded_alive() {
+                self.assigned_to[m] = target;
+                self.fault.redispatches += 1;
+            }
+        }
+    }
+
+    /// The live device with the smallest predicted per-sample compute load
+    /// under its current assignments, discounted by its health score — a
+    /// device with a poor on-time record (including harvested-straggler
+    /// history) looks "heavier" and attracts less re-dispatched work.
+    fn least_loaded_alive(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for w in 0..self.devices.len() {
+            if self.worker_txs[w].is_none() {
+                continue;
+            }
+            let load: f64 = (0..self.members.len())
+                .filter(|&m| self.assigned_to[m] == w)
+                .map(|m| self.devices[w].compute_time_s(self.members[m].flops_per_sample))
+                .sum();
+            let effective = load / self.health[w].score().max(0.1);
+            if best.map_or(true, |(_, b)| effective < b) {
+                best = Some((w, effective));
+            }
+        }
+        best.map(|(w, _)| w)
     }
 
     fn d_i(&self) -> usize {
@@ -391,6 +758,37 @@ impl Leader {
     }
 }
 
+/// One member task's (compute, transfer) virtual durations — the single
+/// timing model shared by the worker simulation and the leader's deadline
+/// prediction; both accumulate `t1` then `t2` per task so they can never
+/// drift apart (straggler detection relies on exact agreement).
+fn member_task_times_s(
+    profile: &DeviceProfile,
+    link: &Link,
+    is_central: bool,
+    flops_per_sample: f64,
+    feat_bytes_per_sample: usize,
+    rows: usize,
+) -> (f64, f64) {
+    let t1 = profile.compute_time_s(flops_per_sample * rows as f64);
+    let t2 = if is_central {
+        0.0
+    } else {
+        link.transfer_time_s(feat_bytes_per_sample * rows)
+    };
+    (t1, t2)
+}
+
+/// Expected feature shape of a member's Phase-2 payload (used to zero-fill
+/// a missing member for the learned aggregators): `(rows, groups|tokens, d)`.
+fn feat_shape(arch: &Arch, rows: usize) -> Vec<usize> {
+    let per_sample = match arch.task {
+        TaskKind::Cls => arch.groups,
+        TaskKind::Det => arch.tokens(),
+    };
+    vec![rows, per_sample, arch.dim]
+}
+
 /// Submit a whole split, pipelined so the batcher can coalesce, and collect
 /// responses in order.
 pub fn serve_all(
@@ -409,6 +807,7 @@ pub fn serve_all(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::Mode;
 
     #[test]
     fn request_payload_variants() {
@@ -428,5 +827,15 @@ mod tests {
         let s = ServeStats::default();
         assert_eq!(s.requests, 0);
         assert_eq!(s.virtual_latency.count(), 0);
+        assert_eq!(s.fault.timeouts, 0);
+        assert!(s.fault.quorum_histogram().is_empty());
+    }
+
+    #[test]
+    fn feat_shape_by_task_kind() {
+        let mut a = Arch::uniform(Mode::Patch, 2, 24, 8, 1, 48, 5);
+        assert_eq!(feat_shape(&a, 3), vec![3, a.groups, 24]);
+        a.task = TaskKind::Det;
+        assert_eq!(feat_shape(&a, 2), vec![2, a.tokens(), 24]);
     }
 }

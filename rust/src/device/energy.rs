@@ -46,6 +46,16 @@ impl EnergyMeter {
         excess
     }
 
+    /// Like [`Self::end_inference`] but without recording a per-inference
+    /// sample — for long-lived serving loops that aggregate energy
+    /// themselves (an unbounded sample log would grow forever there).
+    pub fn end_inference_unsampled(&mut self, profile: &DeviceProfile) -> f64 {
+        let excess = (profile.active_power_w - profile.idle_power_w) * self.busy_s;
+        self.busy_s = 0.0;
+        self.idle_s = 0.0;
+        excess
+    }
+
     /// Mean per-inference energy, joules.
     pub fn mean_j(&self) -> f64 {
         if self.samples.is_empty() {

@@ -1,0 +1,225 @@
+//! Deterministic fault injection over the virtual-clock simulator.
+//!
+//! A [`FaultyDevice`] wraps a [`SimDevice`] and consults a [`FaultScript`]
+//! keyed by *batch index* — never wall-clock time — so every fault fires at
+//! exactly the same point in every run. Scripts are either hand-written
+//! (integration tests) or drawn from a seeded [`crate::util::Rng`]
+//! (randomized sweeps), keeping both paths reproducible.
+
+use std::collections::BTreeMap;
+
+use super::profile::DeviceProfile;
+use super::simulator::SimDevice;
+use crate::util::Rng;
+
+/// What a scripted fault does when its batch index comes up.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Add `extra_s` of virtual stall before the features "arrive" at the
+    /// central node (straggler; the device still completes the work).
+    Stall { extra_s: f64 },
+    /// The device dies before running the batch; its worker thread exits.
+    Crash,
+}
+
+/// Batch-indexed fault schedule for one device.
+#[derive(Clone, Debug, Default)]
+pub struct FaultScript {
+    faults: BTreeMap<usize, FaultKind>,
+}
+
+impl FaultScript {
+    /// A device that never misbehaves.
+    pub fn none() -> Self {
+        FaultScript::default()
+    }
+
+    /// Crash at `batch_idx` (and stay dead).
+    pub fn crash_at(batch_idx: usize) -> Self {
+        FaultScript::none().and_crash_at(batch_idx)
+    }
+
+    /// Stall by `extra_s` virtual seconds at `batch_idx`.
+    pub fn stall_at(batch_idx: usize, extra_s: f64) -> Self {
+        FaultScript::none().and_stall_at(batch_idx, extra_s)
+    }
+
+    pub fn and_crash_at(mut self, batch_idx: usize) -> Self {
+        self.faults.insert(batch_idx, FaultKind::Crash);
+        self
+    }
+
+    pub fn and_stall_at(mut self, batch_idx: usize, extra_s: f64) -> Self {
+        assert!(extra_s >= 0.0, "stall must be non-negative");
+        self.faults.insert(batch_idx, FaultKind::Stall { extra_s });
+        self
+    }
+
+    /// Seeded random stalls: each of the first `n_batches` batches stalls
+    /// with probability `p`, for a uniform duration in `[lo_s, hi_s)`.
+    /// Deterministic per seed — the harness's randomized soak mode.
+    pub fn random_stalls(seed: u64, n_batches: usize, p: f64, lo_s: f64, hi_s: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        assert!(hi_s >= lo_s && lo_s >= 0.0);
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut script = FaultScript::none();
+        for b in 0..n_batches {
+            if rng.gen_f64() < p {
+                script = script.and_stall_at(b, rng.gen_range_f64(lo_s, hi_s));
+            }
+        }
+        script
+    }
+
+    pub fn fault_at(&self, batch_idx: usize) -> Option<FaultKind> {
+        self.faults.get(&batch_idx).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+/// Per-batch virtual timing of one (possibly faulty) device.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchTiming {
+    /// Virtual arrival time of the device's features at the central node.
+    pub arrive_s: f64,
+    /// Background-subtracted energy for the batch, joules.
+    pub energy_j: f64,
+}
+
+/// A simulated edge device that can stall or crash on schedule.
+#[derive(Clone, Debug)]
+pub struct FaultyDevice {
+    sim: SimDevice,
+    script: FaultScript,
+}
+
+impl FaultyDevice {
+    pub fn new(profile: DeviceProfile, script: FaultScript) -> Self {
+        FaultyDevice { sim: SimDevice::new(profile), script }
+    }
+
+    /// True when the script kills the device at this batch. The caller is
+    /// expected to stop using the device afterwards.
+    pub fn should_crash(&self, batch_idx: usize) -> bool {
+        matches!(self.script.fault_at(batch_idx), Some(FaultKind::Crash))
+    }
+
+    /// Execute `flops` of model compute on the virtual clock.
+    pub fn compute(&mut self, flops: f64) {
+        self.sim.compute(flops);
+    }
+
+    /// Busy-transmit for `seconds` on the virtual clock.
+    pub fn transmit(&mut self, seconds: f64) {
+        self.sim.transmit(seconds);
+    }
+
+    /// Apply any scripted stall for this batch (idle time: the device hangs
+    /// rather than burns, matching a wedged runtime or saturated link).
+    pub fn apply_stall(&mut self, batch_idx: usize) {
+        if let Some(FaultKind::Stall { extra_s }) = self.script.fault_at(batch_idx) {
+            let t = self.sim.now();
+            self.sim.wait_until(t + extra_s);
+        }
+    }
+
+    /// Current virtual clock (the batch's arrival time so far).
+    pub fn now(&self) -> f64 {
+        self.sim.now()
+    }
+
+    /// Advance the virtual clock through a busy interval of `seconds`
+    /// (compute or transmit — both draw active power).
+    pub fn busy(&mut self, seconds: f64) {
+        self.sim.transmit(seconds);
+    }
+
+    /// Close the batch: returns timing and resets the clock to t=0. Energy
+    /// is not appended to the meter's per-inference sample log — a
+    /// coordinator worker lives for millions of batches.
+    pub fn end_batch(&mut self) -> BatchTiming {
+        let arrive_s = self.sim.now();
+        let energy_j = self.sim.end_inference_unsampled();
+        BatchTiming { arrive_s, energy_j }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.sim.profile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(script: FaultScript) -> FaultyDevice {
+        FaultyDevice::new(DeviceProfile::jetson_tx2(), script)
+    }
+
+    #[test]
+    fn healthy_device_matches_plain_simulator() {
+        let mut faulty = dev(FaultScript::none());
+        let mut plain = SimDevice::new(DeviceProfile::jetson_tx2());
+        faulty.compute(1e9);
+        faulty.transmit(0.01);
+        faulty.apply_stall(0);
+        plain.compute(1e9);
+        plain.transmit(0.01);
+        let t = faulty.end_batch();
+        assert!((t.arrive_s - plain.now()).abs() < 1e-15);
+        assert!((t.energy_j - plain.end_inference()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stall_fires_only_at_scripted_batch() {
+        let mut d = dev(FaultScript::stall_at(1, 2.0));
+        d.compute(1e9);
+        let t0 = d.end_batch().arrive_s; // batch 0: clean
+
+        d.compute(1e9);
+        d.apply_stall(1);
+        let t1 = d.end_batch().arrive_s; // batch 1: stalled
+        assert!((t1 - (t0 + 2.0)).abs() < 1e-12, "{t1} vs {t0}+2");
+
+        d.compute(1e9);
+        d.apply_stall(2);
+        let t2 = d.end_batch().arrive_s; // batch 2: clean again
+        assert!((t2 - t0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stall_is_idle_not_busy_energy() {
+        let mut clean = dev(FaultScript::none());
+        clean.compute(1e9);
+        let e_clean = clean.end_batch().energy_j;
+
+        let mut stalled = dev(FaultScript::stall_at(0, 5.0));
+        stalled.compute(1e9);
+        stalled.apply_stall(0);
+        let e_stalled = stalled.end_batch().energy_j;
+        assert!((e_clean - e_stalled).abs() < 1e-12, "stall must not burn energy");
+    }
+
+    #[test]
+    fn crash_schedule() {
+        let d = dev(FaultScript::crash_at(3));
+        assert!(!d.should_crash(0));
+        assert!(!d.should_crash(2));
+        assert!(d.should_crash(3));
+    }
+
+    #[test]
+    fn random_stalls_deterministic_per_seed() {
+        let a = FaultScript::random_stalls(9, 50, 0.3, 0.1, 1.0);
+        let b = FaultScript::random_stalls(9, 50, 0.3, 0.1, 1.0);
+        let c = FaultScript::random_stalls(10, 50, 0.3, 0.1, 1.0);
+        for i in 0..50 {
+            assert_eq!(a.fault_at(i), b.fault_at(i));
+        }
+        assert!((0..50).any(|i| a.fault_at(i) != c.fault_at(i)));
+        assert!(!a.is_empty());
+    }
+}

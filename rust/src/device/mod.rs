@@ -8,9 +8,11 @@
 //! (following [38], background power subtracted).
 
 pub mod energy;
+pub mod faulty;
 pub mod profile;
 pub mod simulator;
 
 pub use energy::EnergyMeter;
-pub use profile::DeviceProfile;
+pub use faulty::{BatchTiming, FaultKind, FaultScript, FaultyDevice};
+pub use profile::{fastest_device, DeviceProfile};
 pub use simulator::{SimDevice, SimError};

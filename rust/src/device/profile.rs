@@ -129,6 +129,33 @@ impl DeviceProfile {
     }
 }
 
+/// Index of the fastest device (by effective GFLOPS) satisfying `alive` —
+/// the shared central-election rule of the coordinator's failover and the
+/// degraded-fleet simulator, so the two can never drift apart.
+pub fn fastest_device(
+    profiles: &[DeviceProfile],
+    alive: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    (0..profiles.len()).filter(|&i| alive(i)).max_by(|&a, &b| {
+        profiles[a]
+            .effective_gflops()
+            .total_cmp(&profiles[b].effective_gflops())
+    })
+}
+
+#[cfg(test)]
+mod election_tests {
+    use super::*;
+
+    #[test]
+    fn fastest_device_respects_alive_mask() {
+        let fleet = DeviceProfile::paper_fleet(); // nano, tx2, orin
+        assert_eq!(fastest_device(&fleet, |_| true), Some(1)); // TX2 fastest
+        assert_eq!(fastest_device(&fleet, |i| i != 1), Some(2)); // then Orin
+        assert_eq!(fastest_device(&fleet, |_| false), None);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

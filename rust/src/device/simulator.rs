@@ -15,6 +15,8 @@ use super::profile::DeviceProfile;
 pub enum SimError {
     /// Workload needs more memory than the device has (paper's "OOM" marks).
     OutOfMemory { device: String, need: usize, have: usize },
+    /// Too few devices survived to aggregate (k-of-n serving, ISSUE 1).
+    QuorumNotMet { have: usize, need: usize },
 }
 
 impl std::fmt::Display for SimError {
@@ -26,6 +28,9 @@ impl std::fmt::Display for SimError {
                 *need as f64 / (1 << 30) as f64,
                 *have as f64 / (1 << 30) as f64
             ),
+            SimError::QuorumNotMet { have, need } => {
+                write!(f, "quorum not met: {have} devices alive, need {need}")
+            }
         }
     }
 }
@@ -122,6 +127,16 @@ impl SimDevice {
         self.idle_s = 0.0;
         e
     }
+
+    /// [`Self::end_inference`] without appending to the meter's sample log —
+    /// for unbounded serving loops (one sample per batch forever is a leak).
+    pub fn end_inference_unsampled(&mut self) -> f64 {
+        let e = self.meter.end_inference_unsampled(&self.profile);
+        self.clock_s = 0.0;
+        self.busy_s = 0.0;
+        self.idle_s = 0.0;
+        e
+    }
 }
 
 #[cfg(test)]
@@ -162,6 +177,7 @@ mod tests {
             SimError::OutOfMemory { need, have, .. } => {
                 assert!(need > have);
             }
+            other => panic!("expected OOM, got {other:?}"),
         }
     }
 

@@ -74,6 +74,55 @@ impl LatencyStats {
     }
 }
 
+/// Fault-tolerance counters for the serving coordinator: deadline misses,
+/// crashes, sub-model re-dispatches and the k-of-n quorum-size histogram.
+#[derive(Clone, Debug, Default)]
+pub struct FaultMetrics {
+    /// Virtual-deadline misses, counted per straggling device per batch
+    /// (two devices stalling in one batch record two timeouts).
+    pub timeouts: usize,
+    /// Device deaths observed (scripted crash, worker exit, wall timeout).
+    pub crashes: usize,
+    /// Engine-side execution failures on an otherwise-live device.
+    pub exec_failures: usize,
+    /// Sub-models re-dispatched from a dead device to a survivor.
+    pub redispatches: usize,
+    /// Late results that still carried member features: excluded from their
+    /// batch but credited to the device's next-batch health score rather
+    /// than discarded silently. A timeout whose execution also failed
+    /// outright counts in `timeouts` but not here.
+    pub harvested_late: usize,
+    /// Batches rejected because fewer than `min_quorum` members arrived.
+    pub quorum_failures: usize,
+    /// `quorum_hist[k]` = batches aggregated from exactly `k` members.
+    quorum_hist: Vec<usize>,
+}
+
+impl FaultMetrics {
+    /// Record that a batch aggregated `k` member feature sets.
+    pub fn record_quorum(&mut self, k: usize) {
+        if self.quorum_hist.len() <= k {
+            self.quorum_hist.resize(k + 1, 0);
+        }
+        self.quorum_hist[k] += 1;
+    }
+
+    /// Histogram over quorum sizes (index = member count).
+    pub fn quorum_histogram(&self) -> &[usize] {
+        &self.quorum_hist
+    }
+
+    /// Batches served with exactly `k` members.
+    pub fn batches_at_quorum(&self, k: usize) -> usize {
+        self.quorum_hist.get(k).copied().unwrap_or(0)
+    }
+
+    /// Batches served below full strength (`k < fleet`).
+    pub fn degraded_batches(&self, fleet: usize) -> usize {
+        self.quorum_hist.iter().take(fleet.min(self.quorum_hist.len())).sum()
+    }
+}
+
 /// Top-1 accuracy from logits rows.
 pub fn top1_accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
     assert_eq!(logits.len(), labels.len() * classes);
@@ -316,5 +365,19 @@ mod tests {
     #[test]
     fn argmax_first_on_ties() {
         assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+    }
+
+    #[test]
+    fn fault_metrics_quorum_histogram() {
+        let mut f = FaultMetrics::default();
+        f.record_quorum(3);
+        f.record_quorum(3);
+        f.record_quorum(4);
+        assert_eq!(f.batches_at_quorum(3), 2);
+        assert_eq!(f.batches_at_quorum(4), 1);
+        assert_eq!(f.batches_at_quorum(7), 0);
+        assert_eq!(f.quorum_histogram(), &[0, 0, 0, 2, 1]);
+        // with a 4-device fleet, the two k=3 batches were degraded
+        assert_eq!(f.degraded_batches(4), 2);
     }
 }

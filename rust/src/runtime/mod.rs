@@ -11,7 +11,9 @@
 pub mod engine;
 pub mod manifest;
 pub mod server;
+pub mod stub;
 
 pub use engine::{Engine, ModelOutput, XBatch};
 pub use manifest::Manifest;
 pub use server::{ExecHandle, ExecServer};
+pub use stub::StubSpec;

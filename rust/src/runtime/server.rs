@@ -147,6 +147,40 @@ impl ExecServer {
         Ok(ExecServer { tx, thread: Some(thread) })
     }
 
+    /// Start a deterministic pure-rust stub backend (no artifacts, no PJRT):
+    /// same [`ExecHandle`] protocol, closed-form numerics — see
+    /// [`super::stub`]. This is what the fault-injection integration
+    /// harness serves through.
+    pub fn start_stub(spec: super::stub::StubSpec) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread = std::thread::Builder::new()
+            .name("coformer-exec-stub".into())
+            .spawn(move || {
+                let engine = super::stub::StubEngine::new(spec);
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::RunModel { model, x, reply } => {
+                            let _ = reply.send(engine.run_model(&model, &x));
+                        }
+                        Request::RunMasked { reply, .. } => {
+                            let _ = reply.send(Err(anyhow::anyhow!(
+                                "stub exec: masked models unsupported"
+                            )));
+                        }
+                        Request::RunAggregator { deployment, kind, feats, reply } => {
+                            let _ =
+                                reply.send(engine.run_aggregator(&deployment, &kind, &feats));
+                        }
+                        Request::Warmup { reply, .. } => {
+                            let _ = reply.send(Ok(()));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        Ok(ExecServer { tx, thread: Some(thread) })
+    }
+
     pub fn handle(&self) -> ExecHandle {
         ExecHandle { tx: self.tx.clone() }
     }
@@ -171,5 +205,23 @@ mod tests {
         assert!(err.is_err());
         let msg = format!("{:#}", err.err().unwrap());
         assert!(msg.contains("manifest") || msg.contains("artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn stub_server_round_trip() {
+        use crate::model::{Arch, Mode};
+        use crate::runtime::stub::StubSpec;
+        let spec = StubSpec {
+            models: vec![("m".into(), Arch::uniform(Mode::Patch, 1, 8, 8, 1, 16, 3))],
+            classes: 3,
+        };
+        let server = ExecServer::start_stub(spec).unwrap();
+        let h = server.handle();
+        h.warmup("m").unwrap();
+        let x = XBatch::F32 { data: vec![2.0; 16 * 48], shape: vec![1, 16, 48] };
+        let out = h.run_model("m", x).unwrap();
+        assert_eq!(out.logits.len(), 3);
+        assert_eq!(crate::metrics::argmax(&out.logits), 2);
+        assert!(h.run_masked("m", XBatch::F32 { data: vec![0.0; 768], shape: vec![1, 16, 48] }, vec![]).is_err());
     }
 }

@@ -1,0 +1,185 @@
+//! Deterministic pure-rust execution backend for tests and fault drills.
+//!
+//! [`super::ExecServer::start_stub`] serves the same [`super::ExecHandle`]
+//! protocol as the PJRT engine, but computes member features/logits with a
+//! closed-form rule instead of compiled HLO: every input row encodes a
+//! "label" as its mean value, each member emits a one-hot logits row for
+//! that label and stamps the label into feature slot `[r, 0, 0]`, and the
+//! stub aggregator recovers the label as `round(Σ_members feats[r,0,0] / n)`
+//! — which is exactly invariant under the coordinator's k-of-n feature
+//! renormalization (present members scaled by `n/k`, missing zero-filled).
+//! That makes end-to-end quorum/degraded-mode behavior observable without
+//! artifacts or a PJRT toolchain.
+
+use std::collections::HashMap;
+
+use super::engine::{ModelOutput, XBatch};
+use crate::model::{Arch, TaskKind};
+use crate::Result;
+
+/// Model table for the stub backend.
+#[derive(Clone, Debug)]
+pub struct StubSpec {
+    /// model name → architecture (shapes of its features/logits).
+    pub models: Vec<(String, Arch)>,
+    /// Output classes for every model and the aggregator.
+    pub classes: usize,
+}
+
+pub(crate) struct StubEngine {
+    models: HashMap<String, Arch>,
+    classes: usize,
+}
+
+impl StubEngine {
+    pub fn new(spec: StubSpec) -> Self {
+        StubEngine { models: spec.models.into_iter().collect(), classes: spec.classes }
+    }
+
+    /// The label a row encodes: its mean value, rounded and clamped.
+    fn row_key(&self, x: &XBatch, r: usize) -> usize {
+        let mean = match x {
+            XBatch::F32 { data, shape } => {
+                let stride: usize = shape[1..].iter().product();
+                let row = &data[r * stride..(r + 1) * stride];
+                row.iter().map(|&v| v as f64).sum::<f64>() / stride.max(1) as f64
+            }
+            XBatch::I32 { data, shape } => {
+                let stride: usize = shape[1..].iter().product();
+                let row = &data[r * stride..(r + 1) * stride];
+                row.iter().map(|&v| v as f64).sum::<f64>() / stride.max(1) as f64
+            }
+        };
+        (mean.round().abs() as usize) % self.classes.max(1)
+    }
+
+    pub fn run_model(&self, name: &str, x: &XBatch) -> Result<ModelOutput> {
+        let arch = self
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("stub exec: unknown model {name}"))?;
+        let n = x.rows();
+        let per_sample = match arch.task {
+            TaskKind::Cls => arch.groups,
+            TaskKind::Det => arch.tokens(),
+        };
+        let dim = arch.dim;
+        let classes = self.classes;
+        let mut feats = vec![0.0f32; n * per_sample * dim];
+        let mut logits = vec![0.0f32; n * classes];
+        for r in 0..n {
+            let key = self.row_key(x, r);
+            // deterministic low-amplitude texture so features are not all-zero
+            for j in 0..per_sample * dim {
+                feats[r * per_sample * dim + j] =
+                    ((key * 31 + j * 7) % 97) as f32 / 970.0;
+            }
+            // the label rides in feature slot [r, 0, 0] …
+            feats[r * per_sample * dim] = key as f32;
+            // … and as a one-hot logits row with a clear margin
+            logits[r * classes + key] = 4.0;
+        }
+        Ok(ModelOutput {
+            feats,
+            feats_shape: vec![n, per_sample, dim],
+            logits,
+            logits_shape: vec![n, classes],
+        })
+    }
+
+    pub fn run_aggregator(
+        &self,
+        _deployment: &str,
+        _kind: &str,
+        feats: &[(Vec<f32>, Vec<usize>)],
+    ) -> Result<(Vec<f32>, Vec<usize>)> {
+        anyhow::ensure!(!feats.is_empty(), "stub aggregator: no member features");
+        let rows = feats[0].1[0];
+        let n_members = feats.len() as f64;
+        let classes = self.classes;
+        let mut logits = vec![0.0f32; rows * classes];
+        for r in 0..rows {
+            let mut acc = 0.0f64;
+            for (data, shape) in feats {
+                let stride: usize = shape[1..].iter().product();
+                anyhow::ensure!(
+                    data.len() >= (r + 1) * stride,
+                    "stub aggregator: member features too short"
+                );
+                acc += data[r * stride] as f64;
+            }
+            let key = ((acc / n_members).round().abs() as usize) % classes.max(1);
+            logits[r * classes + key] = 4.0;
+        }
+        Ok((logits, vec![rows, classes]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Mode;
+
+    fn spec() -> StubSpec {
+        StubSpec {
+            models: vec![
+                ("m0".into(), Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, 4)),
+                ("m1".into(), Arch::uniform(Mode::Patch, 2, 24, 8, 1, 48, 4)),
+            ],
+            classes: 4,
+        }
+    }
+
+    fn batch(labels: &[usize]) -> XBatch {
+        // arch above: tokens 16 × patch_dim 48 = 768 stride
+        let stride = 16 * 48;
+        let mut data = Vec::new();
+        for &l in labels {
+            data.extend(std::iter::repeat(l as f32).take(stride));
+        }
+        XBatch::F32 { data, shape: vec![labels.len(), 16, 48] }
+    }
+
+    #[test]
+    fn model_outputs_encode_row_label() {
+        let e = StubEngine::new(spec());
+        let out = e.run_model("m0", &batch(&[2, 0, 3])).unwrap();
+        assert_eq!(out.feats_shape, vec![3, 4, 16]); // groups=4, dim=16
+        assert_eq!(out.logits_shape, vec![3, 4]);
+        for (r, &l) in [2usize, 0, 3].iter().enumerate() {
+            assert_eq!(crate::metrics::argmax(&out.logits[r * 4..(r + 1) * 4]), l);
+            assert_eq!(out.feats[r * 4 * 16], l as f32);
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let e = StubEngine::new(spec());
+        assert!(e.run_model("ghost", &batch(&[0])).is_err());
+    }
+
+    #[test]
+    fn aggregator_recovers_label_under_renormalized_dropout() {
+        let e = StubEngine::new(spec());
+        let m0 = e.run_model("m0", &batch(&[1, 3])).unwrap();
+        let m1 = e.run_model("m1", &batch(&[1, 3])).unwrap();
+        // full quorum
+        let full = vec![
+            (m0.feats.clone(), m0.feats_shape.clone()),
+            (m1.feats.clone(), m1.feats_shape.clone()),
+        ];
+        let (logits, shape) = e.run_aggregator("d", "mlp", &full).unwrap();
+        assert_eq!(shape, vec![2, 4]);
+        assert_eq!(crate::metrics::argmax(&logits[0..4]), 1);
+        assert_eq!(crate::metrics::argmax(&logits[4..8]), 3);
+        // member 1 missing, member 0 renormalized by n/k = 2
+        let (renorm, k) = crate::aggregation::renormalize_subset(
+            vec![Some((m0.feats, m0.feats_shape)), None],
+            |_| vec![2, 4, 24],
+        );
+        assert_eq!(k, 1);
+        let (logits, _) = e.run_aggregator("d", "mlp", &renorm).unwrap();
+        assert_eq!(crate::metrics::argmax(&logits[0..4]), 1);
+        assert_eq!(crate::metrics::argmax(&logits[4..8]), 3);
+    }
+}

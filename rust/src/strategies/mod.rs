@@ -110,53 +110,97 @@ pub fn coformer(
     d_i: usize,
     batch: usize,
 ) -> Result<StrategyOutcome, SimError> {
+    // the healthy fleet is the degraded simulation with everyone alive
+    let alive = vec![true; profiles.len()];
+    let mut deg = coformer_degraded(profiles, topo, archs, d_i, batch, &alive, 1)?;
+    deg.outcome.name = "coformer".into();
+    Ok(deg.outcome)
+}
+
+/// Outcome of a degraded (n−f)-device CoFormer simulation (ISSUE 1).
+#[derive(Clone, Debug)]
+pub struct DegradedOutcome {
+    pub outcome: StrategyOutcome,
+    /// Devices that contributed features (k of n).
+    pub quorum: usize,
+    /// Device that hosted aggregation (falls back off a dead central node).
+    pub central: usize,
+}
+
+/// CoFormer aggregate-edge under partial failure: only the `alive` devices
+/// run; the Eq. 2 combiner renormalizes over the k arrived feature sets
+/// (its input width shrinks to the surviving dims), and a dead central node
+/// hands aggregation to the fastest survivor. This is how the simulator
+/// scores the coordinator's k-of-n degraded serving mode.
+pub fn coformer_degraded(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    archs: &[Arch],
+    d_i: usize,
+    batch: usize,
+    alive: &[bool],
+    min_quorum: usize,
+) -> Result<DegradedOutcome, SimError> {
     assert_eq!(profiles.len(), archs.len());
+    assert_eq!(profiles.len(), alive.len());
+    let quorum = alive.iter().filter(|&&a| a).count();
+    let need = min_quorum.max(1);
+    if quorum < need {
+        return Err(SimError::QuorumNotMet { have: quorum, need });
+    }
+    let central = if alive[topo.central] {
+        topo.central
+    } else {
+        crate::device::fastest_device(profiles, |i| alive[i])
+            .expect("quorum >= 1 device alive")
+    };
     let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
-    let mut mems = Vec::with_capacity(devs.len());
-    for (d, a) in devs.iter_mut().zip(archs) {
-        let mem = CostModel::memory_bytes(a, batch);
-        d.load_model(mem)?;
-        mems.push(mem);
-    }
-    let mut transmit = vec![0.0f64; devs.len()];
-    let mut arrive = vec![0.0f64; devs.len()];
-    for (n, (d, a)) in devs.iter_mut().zip(archs).enumerate() {
-        // Phase 1: backbone forward
-        d.compute(CostModel::flops_per_sample(a) * batch as f64);
-        // Phase 2: one-shot feature transfer to the central node
-        let t2 = topo.to_central_s(n, a.feature_bytes() * batch);
-        d.transmit(t2);
-        transmit[n] = t2;
-        arrive[n] = d.now();
-    }
-    // Phase 3: central node waits for the slowest, then aggregates (Eq. 3)
-    let slowest = arrive.iter().cloned().fold(0.0, f64::max);
-    let central = topo.central;
-    let d_agg: usize = archs.iter().map(|a| a.dim).sum();
-    let rows = archs[central].groups;
-    for (n, d) in devs.iter_mut().enumerate() {
-        if n == central {
-            d.wait_until(slowest);
+    let mut mems = vec![0usize; devs.len()];
+    for (i, (d, a)) in devs.iter_mut().zip(archs).enumerate() {
+        if alive[i] {
+            let mem = CostModel::memory_bytes(a, batch);
+            d.load_model(mem)?;
+            mems[i] = mem;
         }
     }
-    let agg_t = {
-        let d = &mut devs[central];
-        d.compute(CostModel::aggregation_flops(d_agg, d_i, rows) * batch as f64)
-    };
+    let mut transmit = vec![0.0f64; devs.len()];
+    let mut slowest = 0.0f64;
+    for (i, (d, a)) in devs.iter_mut().zip(archs).enumerate() {
+        if !alive[i] {
+            continue; // dead devices contribute nothing (zeroed timeline)
+        }
+        d.compute(CostModel::flops_per_sample(a) * batch as f64);
+        let t2 = if i == central {
+            0.0
+        } else {
+            topo.links[i].transfer_time_s(a.feature_bytes() * batch)
+        };
+        d.transmit(t2);
+        transmit[i] = t2;
+        slowest = slowest.max(d.now());
+    }
+    devs[central].wait_until(slowest);
+    let d_agg: usize = archs
+        .iter()
+        .zip(alive)
+        .filter(|(_, &al)| al)
+        .map(|(a, _)| a.dim)
+        .sum();
+    let rows = archs[central].groups;
+    let agg_t =
+        devs[central].compute(CostModel::aggregation_flops(d_agg, d_i, rows) * batch as f64);
     let total = slowest + agg_t;
-    // non-central devices idle until the result exists (paper counts their
-    // idleness in resource-utilization terms, not energy)
-    for (n, d) in devs.iter_mut().enumerate() {
-        if n != central {
+    for (i, d) in devs.iter_mut().enumerate() {
+        if alive[i] && i != central {
             d.wait_until(total);
         }
     }
-    let mut out = finish(devs, "coformer", total, &mems, 1);
-    for (n, t) in transmit.iter().enumerate() {
-        out.devices[n].transmit_s = *t;
-        out.devices[n].compute_s -= *t;
+    let mut out = finish(devs, "coformer-degraded", total, &mems, 1);
+    for (i, t) in transmit.iter().enumerate() {
+        out.devices[i].transmit_s = *t;
+        out.devices[i].compute_s -= *t;
     }
-    Ok(out)
+    Ok(DegradedOutcome { outcome: out, quorum, central })
 }
 
 /// One pipeline segment: compute + activation payload to the next stage.
@@ -353,6 +397,79 @@ mod tests {
         for d in &out.devices {
             assert!(out.total_s >= d.compute_s + d.transmit_s - 1e-12);
         }
+    }
+
+    #[test]
+    fn degraded_with_all_alive_matches_coformer() {
+        let full = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        let deg = coformer_degraded(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &[true, true, true],
+            1,
+        )
+        .unwrap();
+        assert_eq!(deg.quorum, 3);
+        assert_eq!(deg.central, 1);
+        assert!((deg.outcome.total_s - full.total_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn degraded_killing_slowest_member_never_hurts() {
+        // device 0 (nano) is the latency gate; dropping it can only help
+        let full = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        let deg = coformer_degraded(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &[false, true, true],
+            1,
+        )
+        .unwrap();
+        assert_eq!(deg.quorum, 2);
+        assert!(deg.outcome.total_s <= full.total_s + 1e-12);
+        // the dead device's timeline stays zeroed
+        assert_eq!(deg.outcome.devices[0].compute_s, 0.0);
+        assert_eq!(deg.outcome.devices[0].energy_j, 0.0);
+    }
+
+    #[test]
+    fn degraded_central_death_moves_aggregation() {
+        // kill the TX2 central (idx 1): the Orin (idx 2) is the fastest
+        // survivor and should host aggregation with free local transfer
+        let deg = coformer_degraded(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &[true, false, true],
+            2,
+        )
+        .unwrap();
+        assert_eq!(deg.central, 2);
+        assert_eq!(deg.outcome.devices[2].transmit_s, 0.0);
+        assert!(deg.outcome.devices[0].transmit_s > 0.0);
+    }
+
+    #[test]
+    fn degraded_below_quorum_errors() {
+        let err = coformer_degraded(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &[false, false, true],
+            2,
+        )
+        .unwrap_err();
+        assert_eq!(err, SimError::QuorumNotMet { have: 1, need: 2 });
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Deterministic fault-injection integration tests for the fault-tolerant
+//! serving coordinator (ISSUE 1).
+//!
+//! The harness serves through the pure-rust stub execution backend
+//! ([`ExecServer::start_stub`]) over a 4-device simulated fleet, with
+//! faults scripted per batch index on the virtual clock ([`FaultScript`]) —
+//! no artifacts, no PJRT, no wall-clock dependence. Each input row encodes
+//! its label as the row mean, so end-to-end correctness under degraded
+//! quorums is directly checkable.
+
+use std::collections::HashMap;
+
+use coformer::config::{DeviceSpec, FaultPolicy, SystemConfig};
+use coformer::coordinator::{
+    serve_all, Coordinator, CoordinatorHandle, InferenceResponse, RequestPayload,
+};
+use coformer::device::{DeviceProfile, FaultScript};
+use coformer::model::{Arch, CostModel, Mode};
+use coformer::net::Link;
+use coformer::runtime::manifest::DeploymentMeta;
+use coformer::runtime::{ExecServer, StubSpec};
+
+const FLEET: usize = 4;
+const CLASSES: usize = 4;
+
+fn arch() -> Arch {
+    Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, CLASSES)
+}
+
+fn x_stride() -> usize {
+    let a = arch();
+    a.tokens() * a.patch_dim() // 16 × 48
+}
+
+/// Start a 4-device coordinator (nano, tx2, orin-nano, rpi; central = tx2)
+/// over the stub backend with the given fault scripts and policy.
+fn start(scripts: Vec<FaultScript>, fault: FaultPolicy) -> (ExecServer, Coordinator) {
+    let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), arch())).collect(),
+        classes: CLASSES,
+    };
+    let server = ExecServer::start_stub(spec).unwrap();
+    let dep = DeploymentMeta {
+        task: "stub".into(),
+        members,
+        aggregators: HashMap::new(),
+    };
+    let mut config = SystemConfig::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device
+    config.deployment = "stub_4dev".into();
+    config.aggregator = "average".into();
+    config.max_batch = 4;
+    config.max_wait_ms = 2;
+    config.fault = fault;
+    let archs = vec![arch(); FLEET];
+    let coord = Coordinator::start_with_faults(
+        config,
+        server.handle(),
+        dep,
+        archs,
+        x_stride(),
+        scripts,
+    )
+    .unwrap();
+    (server, coord)
+}
+
+/// Serve one pipelined round of labeled requests; row mean encodes the label.
+fn round(
+    handle: &CoordinatorHandle,
+    labels: &[usize],
+) -> coformer::Result<Vec<InferenceResponse>> {
+    serve_all(
+        handle,
+        labels
+            .iter()
+            .map(|&l| RequestPayload::F32(vec![l as f32; x_stride()]))
+            .collect(),
+    )
+}
+
+fn no_fault_scripts() -> Vec<FaultScript> {
+    (0..FLEET).map(|_| FaultScript::none()).collect()
+}
+
+#[test]
+fn healthy_fleet_serves_at_full_quorum() {
+    let (server, coord) = start(no_fault_scripts(), FaultPolicy::default());
+    let handle = coord.handle();
+    let labels = [0usize, 1, 2, 3];
+    for _ in 0..3 {
+        let resp = round(&handle, &labels).unwrap();
+        for (r, &l) in resp.iter().zip(&labels) {
+            assert_eq!(r.prediction, l);
+            assert_eq!(r.quorum, FLEET);
+            assert!(r.virtual_latency_s > 0.0);
+        }
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.fault.timeouts, 0);
+    assert_eq!(stats.fault.crashes, 0);
+    assert_eq!(stats.fault.degraded_batches(FLEET), 0);
+    assert_eq!(stats.fault.batches_at_quorum(FLEET), stats.batches);
+}
+
+#[test]
+fn crash_then_quorum_keeps_serving() {
+    // Acceptance: kill 1 of 4 devices mid-stream; the coordinator keeps
+    // serving with k-of-n aggregation (no hang, no panic) and the quorum
+    // size + re-dispatch are visible in metrics.
+    let mut scripts = no_fault_scripts();
+    scripts[2] = FaultScript::crash_at(0);
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let (server, coord) = start(scripts, fault);
+    let handle = coord.handle();
+    let labels = [3usize, 1, 0, 2];
+    for _ in 0..4 {
+        let resp = round(&handle, &labels).unwrap();
+        for (r, &l) in resp.iter().zip(&labels) {
+            assert_eq!(r.prediction, l, "degraded aggregation must stay correct");
+        }
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.requests, 16);
+    assert_eq!(stats.fault.crashes, 1);
+    assert_eq!(stats.fault.redispatches, 1, "dead member hot re-dispatched");
+    assert_eq!(stats.fault.quorum_failures, 0);
+    // the crash batch aggregated 3 of 4; re-dispatch restores full quorum
+    assert_eq!(stats.fault.batches_at_quorum(3), 1);
+    assert!(stats.fault.batches_at_quorum(4) >= 1);
+    assert_eq!(stats.fault.degraded_batches(FLEET), 1);
+    let total: usize = stats.fault.quorum_histogram().iter().sum();
+    assert_eq!(total, stats.batches);
+}
+
+#[test]
+fn straggler_past_deadline_is_harvested_not_waited_for() {
+    // Acceptance: a straggler exceeding its per-batch deadline must not
+    // inflate the batch's virtual latency beyond deadline + aggregation
+    // cost — verified deterministically on the virtual clock.
+    let stall_s = 5.0;
+    let mut scripts = no_fault_scripts();
+    scripts[3] = FaultScript::stall_at(1, stall_s); // rpi, the slowest device
+    let fault = FaultPolicy {
+        min_quorum: 1,
+        deadline_factor: 2.0,
+        degraded_after: 1,
+        dead_after: 10,
+        recover_after: 1,
+        ..FaultPolicy::default()
+    };
+    let (server, coord) = start(scripts, fault);
+    let handle = coord.handle();
+    let labels = [2usize, 0, 3, 1];
+    let mut all: Vec<InferenceResponse> = Vec::new();
+    for _ in 0..4 {
+        let resp = round(&handle, &labels).unwrap();
+        for (r, &l) in resp.iter().zip(&labels) {
+            assert_eq!(r.prediction, l);
+        }
+        all.extend(resp);
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.fault.timeouts, 1, "exactly one deadline miss");
+    assert_eq!(stats.fault.harvested_late, 1, "the late result was harvested");
+    assert_eq!(stats.fault.crashes, 0);
+    assert_eq!(stats.fault.redispatches, 0, "stragglers are not re-dispatched");
+    assert_eq!(stats.fault.batches_at_quorum(3), 1);
+    assert!(stats.fault.batches_at_quorum(4) >= 1);
+
+    // The stalled batch ran at quorum 3: its virtual latency equals the
+    // straggler's deadline (2 × its predicted arrival) + aggregation cost.
+    let stalled: Vec<&InferenceResponse> =
+        all.iter().filter(|r| r.quorum == 3).collect();
+    assert!(!stalled.is_empty());
+    let n = stalled[0].batch_size;
+    let rpi = DeviceProfile::rpi4();
+    let link = Link::new(100.0 * 1e6, 1e-3); // paper_default topology link
+    let a = arch();
+    let predicted = rpi.compute_time_s(CostModel::flops_per_sample(&a) * n as f64)
+        + link.transfer_time_s(a.feature_bytes() * n);
+    let deadline = predicted * 2.0;
+    let v = stalled[0].virtual_latency_s;
+    assert!(v >= deadline - 1e-12, "central waits out the deadline: {v} vs {deadline}");
+    assert!(v <= deadline + 1e-3, "latency capped at deadline + agg cost: {v}");
+    assert!(v < stall_s, "the 5 s stall must never gate the batch");
+    // healthy batches are strictly faster than the deadline-gated one
+    let healthy_min = all
+        .iter()
+        .filter(|r| r.quorum == 4)
+        .map(|r| r.virtual_latency_s)
+        .fold(f64::INFINITY, f64::min);
+    assert!(healthy_min < v);
+}
+
+#[test]
+fn quorum_not_met_is_a_clean_error_path() {
+    let mut scripts = no_fault_scripts();
+    scripts[0] = FaultScript::crash_at(0);
+    let fault = FaultPolicy {
+        min_quorum: FLEET, // demand all 4 members
+        redispatch: false, // and forbid recovery by re-dispatch
+        ..FaultPolicy::default()
+    };
+    let (server, coord) = start(scripts, fault);
+    let handle = coord.handle();
+    for _ in 0..3 {
+        let err = round(&handle, &[1, 2, 0, 3]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("quorum not met"), "unexpected error: {msg}");
+        assert!(msg.contains("3 of 4"), "quorum arithmetic visible: {msg}");
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.fault.crashes, 1);
+    assert!(stats.fault.quorum_failures >= 3);
+    assert_eq!(stats.fault.redispatches, 0);
+    assert_eq!(stats.batches, 0, "no batch ever met quorum");
+}
+
+#[test]
+fn redispatch_restores_full_quorum_after_crash() {
+    let mut scripts = no_fault_scripts();
+    scripts[0] = FaultScript::crash_at(0);
+    let fault = FaultPolicy { min_quorum: FLEET, ..FaultPolicy::default() };
+    let (server, coord) = start(scripts, fault);
+    let handle = coord.handle();
+    // the crash batch itself cannot meet a 4-of-4 quorum …
+    let err = round(&handle, &[0, 1, 2, 3]).unwrap_err();
+    assert!(err.to_string().contains("quorum not met"));
+    // … but m0 is re-dispatched to a survivor, restoring 4-of-4 service
+    for _ in 0..2 {
+        let resp = round(&handle, &[3, 2, 1, 0]).unwrap();
+        for (r, &l) in resp.iter().zip(&[3usize, 2, 1, 0]) {
+            assert_eq!(r.prediction, l);
+            assert_eq!(r.quorum, FLEET);
+        }
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.fault.crashes, 1);
+    assert_eq!(stats.fault.redispatches, 1);
+    assert!(stats.fault.quorum_failures >= 1);
+    assert!(stats.fault.batches_at_quorum(4) >= 1);
+}
+
+#[test]
+fn central_node_crash_fails_over_aggregation() {
+    // device 1 (TX2) is the configured central node; killing it must move
+    // aggregation to a survivor without losing service
+    let mut scripts = no_fault_scripts();
+    scripts[1] = FaultScript::crash_at(0);
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let (server, coord) = start(scripts, fault);
+    let handle = coord.handle();
+    let labels = [1usize, 3, 2, 0];
+    for _ in 0..3 {
+        let resp = round(&handle, &labels).unwrap();
+        for (r, &l) in resp.iter().zip(&labels) {
+            assert_eq!(r.prediction, l);
+        }
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.fault.crashes, 1);
+    assert_eq!(stats.fault.redispatches, 1);
+    assert!(stats.fault.batches_at_quorum(4) >= 1, "failover restores full quorum");
+}

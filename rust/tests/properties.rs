@@ -5,6 +5,7 @@
 //! cases; failures print the offending seed.
 
 use coformer::aggregation;
+use coformer::debo::linalg::{cholesky, cholesky_solve, Matrix};
 use coformer::debo::{expected_improvement, Gp, Matern32};
 use coformer::device::{DeviceProfile, SimDevice};
 use coformer::model::{policy::DeviceCaps, Arch, CostModel, DecompositionPolicy, Mode, SubModelCfg};
@@ -127,6 +128,96 @@ fn prop_json_roundtrip_random_values() {
         let text = v.to_string();
         let back = Json::parse(&text).unwrap();
         assert_eq!(v, back, "roundtrip failed for {text}");
+    });
+}
+
+// ---------------------------------------------------------------- linalg
+
+/// Random SPD matrix `A = B·Bᵀ + n·I` of size n (diagonally dominated so
+/// the factorization is well-conditioned at every seed).
+fn random_spd(rng: &mut Rng, n: usize) -> Matrix {
+    let b = Matrix::from_fn(n, n, |_, _| rng.gen_f64() * 2.0 - 1.0);
+    Matrix::from_fn(n, n, |i, j| {
+        let mut s = if i == j { n as f64 } else { 0.0 };
+        for k in 0..n {
+            s += b[(i, k)] * b[(j, k)];
+        }
+        s
+    })
+}
+
+#[test]
+fn prop_cholesky_roundtrip_on_random_spd() {
+    // L·Lᵀ must reconstruct A to tight absolute tolerance
+    forall(200, 2000, |rng| {
+        let n = rng.gen_range(2, 8);
+        let a = random_spd(rng, n);
+        let l = cholesky(&a).expect("SPD must factor");
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[(i, k)] * l[(j, k)];
+                }
+                assert!((s - a[(i, j)]).abs() < 1e-9, "({i},{j}): {s} vs {}", a[(i, j)]);
+            }
+        }
+        // L is lower-triangular with positive diagonal
+        for i in 0..n {
+            assert!(l[(i, i)] > 0.0);
+            for j in i + 1..n {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_residual_bounded() {
+    // ‖A·x̂ − b‖ must be tiny relative to ‖b‖ on random SPD systems
+    forall(200, 2100, |rng| {
+        let n = rng.gen_range(2, 8);
+        let a = random_spd(rng, n);
+        let x_true: Vec<f64> = (0..n).map(|_| rng.gen_f64() * 4.0 - 2.0).collect();
+        let b: Vec<f64> = (0..n)
+            .map(|i| (0..n).map(|j| a[(i, j)] * x_true[j]).sum())
+            .collect();
+        let l = cholesky(&a).unwrap();
+        let x = cholesky_solve(&l, &b);
+        let mut res = 0.0f64;
+        let mut bn = 0.0f64;
+        for i in 0..n {
+            let ax: f64 = (0..n).map(|j| a[(i, j)] * x[j]).sum();
+            res += (ax - b[i]).powi(2);
+            bn += b[i].powi(2);
+        }
+        let rel = (res.sqrt()) / bn.sqrt().max(1e-12);
+        assert!(rel < 1e-9, "relative residual {rel}");
+    });
+}
+
+// ---------------------------------------------------------------- network
+
+#[test]
+fn prop_link_transfer_time_monotone_and_floored() {
+    forall(500, 2200, |rng| {
+        let bw = 1e5 + rng.gen_f64() * 1e9;
+        let lat = rng.gen_f64() * 0.01;
+        let l = Link::new(bw, lat);
+        // zero bytes cost exactly the latency floor
+        assert_eq!(l.transfer_time_s(0), lat);
+        // monotone in payload size
+        let a = rng.gen_range(0, 1 << 20);
+        let b = a + rng.gen_range(1, 1 << 20);
+        assert!(l.transfer_time_s(a) < l.transfer_time_s(b));
+        // never below the floor, and linear beyond it (Eq. 5)
+        let t = l.transfer_time_s(b);
+        assert!(t >= lat);
+        let payload = t - lat;
+        assert!((payload - (b as f64 * 8.0) / bw).abs() < 1e-12);
+        // more bandwidth never hurts
+        let l2 = Link::new(bw * 2.0, lat);
+        assert!(l2.transfer_time_s(b) <= l.transfer_time_s(b));
     });
 }
 

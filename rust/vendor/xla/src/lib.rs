@@ -1,0 +1,238 @@
+//! API-compatible stub of the `xla` PJRT bindings used by the coformer
+//! runtime. Host-side literal plumbing ([`Literal`], shapes, tuples) is
+//! fully functional pure rust; device execution ([`PjRtLoadedExecutable::
+//! execute`]) returns a clean error, so every artifact-driven path fails
+//! gracefully when the real backend is absent (integration suites already
+//! skip when `artifacts/` is not built). Swap this path dependency for the
+//! real bindings to run compiled HLO.
+
+use std::fmt;
+
+/// Stub error type (mirrors `xla::Error` as far as callers care).
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the workspace moves across the boundary.
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Sealed-ish marker for supported native element types.
+pub trait NativeType: Copy {
+    fn into_data(v: Vec<Self>) -> Data;
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side literal: flat data + dims (or a tuple of literals).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::into_data(v.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { dims: vec![], data: T::into_data(vec![x]) }
+    }
+
+    /// Tuple literal (what executables return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: Data::Tuple(parts) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret the flat data under new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Array shape (errors on tuple literals).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("tuple literal has no array shape".into()));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Dims of an array-shaped literal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module handle. The stub validates the file exists and is
+/// readable but does not interpret it.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("cannot read HLO text {path}: {e}")))?;
+        Ok(HloModuleProto)
+    }
+}
+
+/// Computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer (stub: holds the host literal).
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// Compiled executable handle. Execution is unavailable in the stub.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(
+            "stub backend: HLO execution requires the real xla/PJRT bindings \
+             (see rust/vendor/xla)"
+                .into(),
+        ))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_destructures() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::vec1(&[2i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn execution_is_a_clean_error() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation::from_proto(&HloModuleProto)).unwrap();
+        let err = exe.execute(&[]).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
