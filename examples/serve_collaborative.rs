@@ -8,7 +8,7 @@
 //! cargo run --release --example serve_collaborative [n_requests]
 //! ```
 
-use coformer::config::{FaultPolicy, SystemConfig};
+use coformer::config::{FaultPolicy, ReplicationPolicy, SystemConfig};
 use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
 use coformer::data::Dataset;
 use coformer::device::DeviceProfile;
@@ -44,6 +44,11 @@ fn main() -> Result<()> {
     // Fault policy: tolerate one straggler/death (2-of-3 quorum), 3× virtual
     // deadlines, hot re-dispatch of a dead device's sub-model.
     config.fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    // Replication + admission control: one warm standby per member (a
+    // primary death costs no aggregation arity while the replacement
+    // warms), shedding past 1024 queued requests with a typed Overloaded
+    // error as the surviving fleet's capacity shrinks.
+    config.replication = ReplicationPolicy { replicas: 2, ..ReplicationPolicy::default() };
     let coord = Coordinator::start(config, exec, dep.clone(), archs, ds.x_stride())?;
     let handle = coord.handle();
 
@@ -87,6 +92,14 @@ fn main() -> Result<()> {
         stats.fault.harvested_late,
         stats.fault.quorum_failures,
         stats.fault.quorum_histogram()
+    );
+    println!(
+        "replication counters: replica hits {}  promotions {}  standbys placed {}  \
+         shed {}",
+        stats.fault.replica_hits,
+        stats.fault.promotions,
+        stats.fault.replicas_placed,
+        stats.fault.shed
     );
 
     // --- baseline: the teacher on the strongest single device -------------

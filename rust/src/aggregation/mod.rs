@@ -7,13 +7,42 @@
 //! directly, plus the shared softmax helper.
 
 /// Softmax one logits row in place.
+///
+/// Total over all inputs (ISSUE 2): an empty row is a no-op; `+inf` logits
+/// split the mass uniformly among themselves; a row with no finite entry
+/// (all `-inf` and/or NaN) falls back to the uniform distribution instead
+/// of emitting `0/0 = NaN`; a NaN entry in an otherwise-finite row gets
+/// zero mass. A non-empty output is always finite and sums to 1.
 pub fn softmax(row: &mut [f32]) {
-    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if row.is_empty() {
+        return;
+    }
+    let n_posinf = row.iter().filter(|v| **v == f32::INFINITY).count();
+    if n_posinf > 0 {
+        let share = 1.0 / n_posinf as f32;
+        for v in row.iter_mut() {
+            *v = if *v == f32::INFINITY { share } else { 0.0 };
+        }
+        return;
+    }
+    let m = row
+        .iter()
+        .cloned()
+        .filter(|v| v.is_finite())
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        let share = 1.0 / row.len() as f32;
+        for v in row.iter_mut() {
+            *v = share;
+        }
+        return;
+    }
     let mut sum = 0.0f32;
     for v in row.iter_mut() {
-        *v = (*v - m).exp();
+        *v = if v.is_finite() { (*v - m).exp() } else { 0.0 };
         sum += *v;
     }
+    // the max finite element contributed exp(0) = 1, so sum >= 1
     for v in row.iter_mut() {
         *v /= sum;
     }
@@ -40,25 +69,52 @@ pub fn average(members: &[Vec<f32>], rows: usize, classes: usize) -> Vec<f32> {
 }
 
 /// Weighted averaging (the paper's Fig. 6 "Ens" uses weighted averages).
+///
+/// Weights must be finite and non-negative — a negative or NaN weight could
+/// cancel the normalizer to 0 and silently turn every fused probability
+/// into NaN (ISSUE 2). An all-zero weight vector carries no preference, so
+/// it degrades to uniform weights (= [`average`]) rather than dividing by
+/// zero.
 pub fn weighted_average(
     members: &[Vec<f32>],
     weights: &[f32],
     rows: usize,
     classes: usize,
-) -> Vec<f32> {
-    assert_eq!(members.len(), weights.len());
+) -> crate::Result<Vec<f32>> {
+    anyhow::ensure!(!members.is_empty(), "weighted_average: no members");
+    anyhow::ensure!(
+        members.len() == weights.len(),
+        "weighted_average: {} members vs {} weights",
+        members.len(),
+        weights.len()
+    );
+    for m in members {
+        anyhow::ensure!(
+            m.len() == rows * classes,
+            "weighted_average: member logits len {} != rows*classes {}",
+            m.len(),
+            rows * classes
+        );
+    }
+    anyhow::ensure!(
+        weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+        "weighted_average: weights must be finite and non-negative, got {weights:?}"
+    );
     let wsum: f32 = weights.iter().sum();
+    anyhow::ensure!(wsum.is_finite(), "weighted_average: weight sum overflowed");
+    let uniform = 1.0 / members.len() as f32;
     let mut out = vec![0.0f32; rows * classes];
     for (m, &w) in members.iter().zip(weights) {
+        let w = if wsum > 0.0 { w / wsum } else { uniform };
         for r in 0..rows {
             let mut p = m[r * classes..(r + 1) * classes].to_vec();
             softmax(&mut p);
             for (o, v) in out[r * classes..(r + 1) * classes].iter_mut().zip(&p) {
-                *o += v * w / wsum;
+                *o += v * w;
             }
         }
     }
-    out
+    Ok(out)
 }
 
 /// Majority voting [30]: per row, the class most members predict.
@@ -164,8 +220,67 @@ mod tests {
     fn weighted_average_respects_weights() {
         let a = vec![5.0f32, 0.0];
         let b = vec![0.0f32, 5.0];
-        let fused = weighted_average(&[a, b], &[0.9, 0.1], 1, 2);
+        let fused = weighted_average(&[a, b], &[0.9, 0.1], 1, 2).unwrap();
         assert!(fused[0] > fused[1]);
+    }
+
+    #[test]
+    fn weighted_average_zero_weights_fall_back_to_uniform() {
+        // ISSUE 2 regression: all-zero weights previously divided by
+        // wsum = 0 and fused NaN probabilities
+        let a = vec![5.0f32, 0.0];
+        let b = vec![0.0f32, 5.0];
+        let fused = weighted_average(&[a.clone(), b.clone()], &[0.0, 0.0], 1, 2).unwrap();
+        assert!(fused.iter().all(|v| v.is_finite()), "fused {fused:?}");
+        let sum: f32 = fused.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        let uniform = average(&[a, b], 1, 2);
+        for (x, y) in fused.iter().zip(&uniform) {
+            assert!((x - y).abs() < 1e-6, "zero weights must equal average");
+        }
+    }
+
+    #[test]
+    fn weighted_average_rejects_cancelling_and_nonfinite_weights() {
+        let a = vec![5.0f32, 0.0];
+        let b = vec![0.0f32, 5.0];
+        // +1 and -1 cancel: wsum = 0 with non-zero weights — must error,
+        // not emit NaN
+        assert!(weighted_average(&[a.clone(), b.clone()], &[1.0, -1.0], 1, 2).is_err());
+        assert!(weighted_average(&[a.clone(), b.clone()], &[f32::NAN, 1.0], 1, 2).is_err());
+        assert!(weighted_average(&[a.clone(), b.clone()], &[f32::INFINITY, 1.0], 1, 2).is_err());
+        assert!(weighted_average(&[a, b], &[0.5], 1, 2).is_err(), "arity mismatch");
+    }
+
+    #[test]
+    fn softmax_total_on_degenerate_rows() {
+        // empty row: no-op, no NaN
+        let mut empty: Vec<f32> = vec![];
+        softmax(&mut empty);
+        assert!(empty.is_empty());
+
+        // all -inf (a fully-masked row) previously produced 0/0 = NaN
+        let mut row = vec![f32::NEG_INFINITY; 3];
+        softmax(&mut row);
+        for v in &row {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6, "uniform fallback, got {row:?}");
+        }
+
+        // +inf logits take all the mass, split evenly among themselves
+        let mut row = vec![f32::INFINITY, 0.0, f32::INFINITY];
+        softmax(&mut row);
+        assert_eq!(row, vec![0.5, 0.0, 0.5]);
+
+        // NaN in an otherwise-finite row gets zero mass
+        let mut row = vec![f32::NAN, 0.0, 0.0];
+        softmax(&mut row);
+        assert_eq!(row[0], 0.0);
+        assert!((row[1] - 0.5).abs() < 1e-6 && (row[2] - 0.5).abs() < 1e-6);
+
+        // NaN alongside -inf only: still uniform, still finite
+        let mut row = vec![f32::NAN, f32::NEG_INFINITY];
+        softmax(&mut row);
+        assert!(row.iter().all(|v| (v - 0.5).abs() < 1e-6), "{row:?}");
     }
 
     #[test]

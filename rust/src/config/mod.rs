@@ -111,9 +111,69 @@ impl FaultPolicy {
             wall_timeout_ms: opt_usize("wall_timeout_ms", d.wall_timeout_ms as usize)?
                 as u64,
         };
+        anyhow::ensure!(
+            p.min_quorum >= 1,
+            "min_quorum must be >= 1 (0 would let a batch with zero arrivals \
+             aggregate all-zero features into garbage predictions)"
+        );
         anyhow::ensure!(p.deadline_factor >= 1.0, "deadline_factor must be >= 1");
         anyhow::ensure!(p.degraded_slack >= 1.0, "degraded_slack must be >= 1");
         anyhow::ensure!(p.dead_after >= 1, "dead_after must be >= 1");
+        Ok(p)
+    }
+}
+
+/// Replication + admission-control policy for the serving coordinator
+/// (ISSUE 2): warm standby copies of each sub-model on distinct devices so
+/// a primary's death costs no aggregation arity while its replacement
+/// warms, and a bounded intake queue whose live depth tracks the surviving
+/// fleet's capacity — excess load is shed with the typed
+/// [`crate::coordinator::Overloaded`] error instead of blocking the caller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicationPolicy {
+    /// Copies of each member kept warm on distinct devices (1 = primary
+    /// only, no replication; 2 = primary + one warm standby). Standbys are
+    /// placed by DeBo-style headroom: enough free device memory for the
+    /// sub-model at max batch, then the smallest added compute latency.
+    pub replicas: usize,
+    /// Full-fleet bound on queued-but-unserved requests, at most
+    /// [`ReplicationPolicy::MAX_QUEUE_DEPTH_CAP`]. The live admission limit
+    /// is this scaled by the surviving fleet's share of total effective
+    /// GFLOPS, so device deaths shrink the queue with the capacity that
+    /// died. 0 disables shedding (submits block as before).
+    pub max_queue_depth: usize,
+}
+
+impl ReplicationPolicy {
+    /// Upper bound on `max_queue_depth`: the leader's intake channel is
+    /// sized to cover the admission limit (so shedding, never the channel,
+    /// is what bounds intake), and the channel preallocates its buffer.
+    pub const MAX_QUEUE_DEPTH_CAP: usize = 1 << 20;
+}
+
+impl Default for ReplicationPolicy {
+    fn default() -> Self {
+        ReplicationPolicy { replicas: 1, max_queue_depth: 1024 }
+    }
+}
+
+impl ReplicationPolicy {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = ReplicationPolicy::default();
+        let opt_usize = |key: &str, dv: usize| -> Result<usize> {
+            v.get(key).map(|x| x.as_usize()).transpose().map(|o| o.unwrap_or(dv))
+        };
+        let p = ReplicationPolicy {
+            replicas: opt_usize("replicas", d.replicas)?,
+            max_queue_depth: opt_usize("max_queue_depth", d.max_queue_depth)?,
+        };
+        anyhow::ensure!(p.replicas >= 1, "replicas must be >= 1 (1 = no replication)");
+        anyhow::ensure!(
+            p.max_queue_depth <= Self::MAX_QUEUE_DEPTH_CAP,
+            "max_queue_depth {} exceeds the intake-channel cap {}",
+            p.max_queue_depth,
+            Self::MAX_QUEUE_DEPTH_CAP
+        );
         Ok(p)
     }
 }
@@ -143,6 +203,8 @@ pub struct SystemConfig {
     pub delta: f64,
     /// Serving fault-tolerance policy (deadlines, quorum, re-dispatch).
     pub fault: FaultPolicy,
+    /// Replication + admission-control policy (standbys, load shedding).
+    pub replication: ReplicationPolicy,
 }
 
 impl SystemConfig {
@@ -183,12 +245,24 @@ impl SystemConfig {
                 .map(FaultPolicy::from_json)
                 .transpose()?
                 .unwrap_or_default(),
+            replication: v
+                .get("replication")
+                .map(ReplicationPolicy::from_json)
+                .transpose()?
+                .unwrap_or_default(),
         };
         anyhow::ensure!(c.central < c.devices.len(), "central index out of range");
         anyhow::ensure!(
             c.fault.min_quorum <= c.devices.len(),
             "min_quorum {} is unsatisfiable with {} devices",
             c.fault.min_quorum,
+            c.devices.len()
+        );
+        anyhow::ensure!(
+            c.replication.replicas <= c.devices.len(),
+            "replicas {} is unsatisfiable with {} devices (each copy needs a \
+             distinct device)",
+            c.replication.replicas,
             c.devices.len()
         );
         Ok(c)
@@ -217,6 +291,7 @@ impl SystemConfig {
             max_wait_ms: 5,
             delta: 20.0,
             fault: FaultPolicy::default(),
+            replication: ReplicationPolicy::default(),
         }
     }
 
@@ -293,6 +368,51 @@ mod tests {
     fn unsatisfiable_min_quorum_rejected_at_load() {
         let json = r#"{"devices":["jetson-nano"],"deployment":"x",
                        "fault":{"min_quorum":3}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn zero_min_quorum_rejected_at_load() {
+        // ISSUE 2 regression: min_quorum = 0 would let a zero-arrival batch
+        // "aggregate" all-zero renormalized features into garbage
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "fault":{"min_quorum":0}}"#;
+        let err = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("min_quorum"), "{err}");
+    }
+
+    #[test]
+    fn replication_defaults_when_absent() {
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x"}"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(c.replication, ReplicationPolicy::default());
+        assert_eq!(c.replication.replicas, 1);
+    }
+
+    #[test]
+    fn replication_parses_overrides() {
+        let json = r#"{
+          "devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+          "replication":{"replicas":2,"max_queue_depth":64}
+        }"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(c.replication.replicas, 2);
+        assert_eq!(c.replication.max_queue_depth, 64);
+    }
+
+    #[test]
+    fn replication_bounds_enforced() {
+        // zero copies is meaningless
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "replication":{"replicas":0}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+        // more copies than devices cannot be placed on distinct hardware
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "replication":{"replicas":2}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+        // a queue deeper than the intake channel could cover is rejected
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "replication":{"max_queue_depth":2000000}}"#;
         assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
     }
 

@@ -18,11 +18,24 @@
 //! the shared [`ExecHandle`] executable cache. All fault decisions run on
 //! the deterministic virtual clock — wall time is only a last-resort
 //! containment for genuinely hung backends.
+//!
+//! Replication + admission control (ISSUE 2): with
+//! [`crate::config::ReplicationPolicy::replicas`] > 1 each member also runs
+//! on warm standby devices (placed by memory/latency headroom) every batch;
+//! member outputs are deduplicated first-arrival-wins, so a dead primary's
+//! standby keeps the quorum at full arity in the very batch of the crash,
+//! and the standby is *promoted* to primary (no cold re-dispatch warmup).
+//! Intake is bounded by an admission gate whose live queue depth scales
+//! with the surviving fleet's capacity; past it, [`CoordinatorHandle::submit`]
+//! sheds with the typed [`Overloaded`] error instead of blocking, while
+//! admitted requests always run to completion.
 
 pub mod batcher;
 pub mod health;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -87,10 +100,69 @@ pub struct ServeStats {
     pub fault: FaultMetrics,
 }
 
+/// Typed admission-control error: the request was shed because the queue
+/// bound derived from surviving-fleet capacity is full. In-flight requests
+/// are unaffected — shedding rejects new work, it never cancels admitted
+/// work. Callers detect it via `err.downcast_ref::<Overloaded>()` and
+/// should back off / retry elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Requests queued at the moment of the rejection.
+    pub queued: usize,
+    /// The live admission limit (shrinks as devices die).
+    pub limit: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "overloaded: {} queued at admission limit {}", self.queued, self.limit)
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Shared admission gate between handle clones (producers) and the leader
+/// (consumer): a queued-request counter against a live limit the leader
+/// re-derives from surviving-fleet capacity whenever a device dies.
+struct Admission {
+    queued: AtomicUsize,
+    /// Live queue bound; `usize::MAX` = shedding disabled.
+    limit: AtomicUsize,
+    /// Requests rejected with [`Overloaded`] (folded into stats at shutdown).
+    shed: AtomicUsize,
+}
+
+impl Admission {
+    fn new(limit: usize) -> Self {
+        Admission {
+            queued: AtomicUsize::new(0),
+            limit: AtomicUsize::new(limit),
+            shed: AtomicUsize::new(0),
+        }
+    }
+
+    /// Reserve one queue slot, or shed with the typed [`Overloaded`] error.
+    fn try_admit(&self) -> Result<()> {
+        let limit = self.limit.load(Ordering::SeqCst);
+        let prev = self.queued.fetch_add(1, Ordering::SeqCst);
+        if prev >= limit {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            self.shed.fetch_add(1, Ordering::SeqCst);
+            return Err(anyhow::Error::new(Overloaded { queued: prev, limit }));
+        }
+        Ok(())
+    }
+
+    fn release(&self, n: usize) {
+        self.queued.fetch_sub(n, Ordering::SeqCst);
+    }
+}
+
 /// Coordinator handle: submit requests, receive responses.
 #[derive(Clone)]
 pub struct CoordinatorHandle {
     tx: mpsc::SyncSender<LeaderMsg>,
+    admission: Arc<Admission>,
 }
 
 impl CoordinatorHandle {
@@ -101,16 +173,28 @@ impl CoordinatorHandle {
     }
 
     /// Submit without blocking; returns the reply channel (lets callers
-    /// pipeline many requests so the batcher can coalesce them).
+    /// pipeline many requests so the batcher can coalesce them). Sheds with
+    /// the typed [`Overloaded`] error once the capacity-derived queue bound
+    /// is reached, instead of blocking the caller.
     pub fn submit(
         &self,
         x: RequestPayload,
     ) -> Result<mpsc::Receiver<Result<InferenceResponse>>> {
+        self.admission.try_admit()?;
         let (reply, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(LeaderMsg::Request(InferenceRequest { x, reply }))
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        if self.tx.send(LeaderMsg::Request(InferenceRequest { x, reply })).is_err() {
+            self.admission.release(1);
+            anyhow::bail!("coordinator stopped");
+        }
         Ok(rx)
+    }
+
+    /// Current admission state `(queued, live limit)`. A limit of
+    /// `usize::MAX` means shedding is disabled (`max_queue_depth = 0`).
+    pub fn admission_state(&self) -> (usize, usize) {
+        let queued = self.admission.queued.load(Ordering::SeqCst);
+        let limit = self.admission.limit.load(Ordering::SeqCst);
+        (queued, limit)
     }
 }
 
@@ -227,10 +311,30 @@ impl Coordinator {
             deployment.members.len()
         );
         anyhow::ensure!(
+            config.fault.min_quorum >= 1,
+            "min_quorum must be >= 1 (0 would let a batch with zero arrivals \
+             aggregate all-zero renormalized features into garbage predictions)"
+        );
+        anyhow::ensure!(
             config.fault.min_quorum <= deployment.members.len(),
             "min_quorum {} is unsatisfiable with {} members",
             config.fault.min_quorum,
             deployment.members.len()
+        );
+        anyhow::ensure!(
+            config.replication.replicas >= 1
+                && config.replication.replicas <= devices.len(),
+            "replicas {} is unsatisfiable with {} devices (each copy needs a \
+             distinct device)",
+            config.replication.replicas,
+            devices.len()
+        );
+        anyhow::ensure!(
+            config.replication.max_queue_depth
+                <= crate::config::ReplicationPolicy::MAX_QUEUE_DEPTH_CAP,
+            "max_queue_depth {} exceeds the intake-channel cap {}",
+            config.replication.max_queue_depth,
+            crate::config::ReplicationPolicy::MAX_QUEUE_DEPTH_CAP
         );
         let topo = config.topology();
         let members: Vec<MemberCtx> = deployment
@@ -316,33 +420,64 @@ impl Coordinator {
             worker_joins.push(join);
         }
 
-        let (tx, rx) = mpsc::sync_channel::<LeaderMsg>(1024);
+        // Replica placement (ISSUE 2): each member's primary is its native
+        // device; standbys go to the devices with memory headroom for the
+        // sub-model at max batch and the least added compute latency.
+        let member_mem: Vec<usize> = members
+            .iter()
+            .map(|c| CostModel::memory_bytes(&c.arch, config.max_batch.max(1)))
+            .collect();
+        let member_flops: Vec<f64> = members.iter().map(|c| c.flops_per_sample).collect();
+        let mut assignments: Vec<Vec<usize>> = (0..members.len()).map(|m| vec![m]).collect();
+        for _ in 1..config.replication.replicas {
+            for m in 0..members.len() {
+                if let Some(w) = place_standby(
+                    m,
+                    &assignments,
+                    &member_mem,
+                    &member_flops,
+                    &devices,
+                    |_| true,
+                ) {
+                    assignments[m].push(w);
+                }
+            }
+        }
+
+        let base_queue = config.replication.max_queue_depth;
+        let initial_limit = if base_queue == 0 { usize::MAX } else { base_queue };
+        let admission = Arc::new(Admission::new(initial_limit));
+        // the channel must never bound intake tighter than admission does
+        // (base_queue <= MAX_QUEUE_DEPTH_CAP was validated above)
+        let chan_cap = 1024usize.max(base_queue);
+        let (tx, rx) = mpsc::sync_channel::<LeaderMsg>(chan_cap);
         let batcher_cfg = BatcherConfig {
             max_batch: config.max_batch,
             max_wait: Duration::from_millis(config.max_wait_ms),
         };
         let n_devices = devices.len();
-        let n_members = members.len();
         let central = topo.central;
         let leader = Leader {
             exec,
             deployment,
             members,
+            member_mem,
             devices,
             topo,
             config,
             x_stride,
             worker_txs,
             health: (0..n_devices).map(|_| DeviceHealth::new()).collect(),
-            assigned_to: (0..n_members).collect(),
+            assignments,
             central,
             batch_idx: 0,
             fault: FaultMetrics::default(),
+            admission: admission.clone(),
         };
         let join = std::thread::Builder::new()
             .name("coformer-leader".into())
             .spawn(move || leader.run(rx, batcher_cfg))?;
-        Ok(Coordinator { handle: CoordinatorHandle { tx }, join, worker_joins })
+        Ok(Coordinator { handle: CoordinatorHandle { tx, admission }, join, worker_joins })
     }
 
     pub fn handle(&self) -> CoordinatorHandle {
@@ -369,6 +504,8 @@ struct Leader {
     exec: ExecHandle,
     deployment: DeploymentMeta,
     members: Vec<MemberCtx>,
+    /// Per-member resident memory at max batch (standby placement input).
+    member_mem: Vec<usize>,
     devices: Vec<DeviceProfile>,
     topo: Topology,
     config: SystemConfig,
@@ -376,12 +513,15 @@ struct Leader {
     /// Per-device job channel; `None` once the device is Dead.
     worker_txs: Vec<Option<mpsc::Sender<WorkerJob>>>,
     health: Vec<DeviceHealth>,
-    /// member index → device index currently running that sub-model.
-    assigned_to: Vec<usize>,
+    /// member index → devices currently running that sub-model, primary
+    /// first; standbys (if any) run it too, every batch, as warm replicas.
+    assignments: Vec<Vec<usize>>,
     /// Device currently acting as the central (aggregation) node.
     central: usize,
     batch_idx: usize,
     fault: FaultMetrics,
+    /// Shared admission gate (limit refreshed on device death).
+    admission: Arc<Admission>,
 }
 
 impl Leader {
@@ -391,7 +531,13 @@ impl Leader {
         while let Some(batch) = batcher.next_batch() {
             let wall_start = std::time::Instant::now();
             let n = batch.len();
-            match self.serve_batch(&batch) {
+            let served = self.serve_batch(&batch);
+            // Release the batch's queue slots BEFORE its replies go out: a
+            // caller that has seen a reply must never still be counted
+            // against the admission gate, or a bulk driver pipelining on
+            // replies races this release and sheds itself.
+            self.admission.release(n);
+            match served {
                 Ok((responses, virtual_s, energy_j)) => {
                     stats.batches += 1;
                     stats.requests += n;
@@ -413,6 +559,7 @@ impl Leader {
                 }
             }
         }
+        self.fault.shed = self.admission.shed.load(Ordering::SeqCst);
         stats.fault = self.fault.clone();
         stats
     }
@@ -428,19 +575,26 @@ impl Leader {
         self.batch_idx += 1;
         self.ensure_central_alive();
 
-        // Build per-device task lists from the current assignment (Dead
-        // devices hold no assignments once re-dispatch has run).
+        // Build per-device task lists from the current assignments: every
+        // live host of a member — primary and warm standbys alike — runs it
+        // this batch (Dead devices hold no assignments once promotion /
+        // re-dispatch has run).
         let mut task_lists: Vec<Vec<MemberTask>> =
             (0..self.devices.len()).map(|_| Vec::new()).collect();
+        // primary snapshot for this batch: replica-hit accounting must not
+        // shift when a mid-batch death promotes a standby
+        let primary: Vec<Option<usize>> =
+            self.assignments.iter().map(|hosts| hosts.first().copied()).collect();
         for (m, ctx) in self.members.iter().enumerate() {
-            let w = self.assigned_to[m];
-            if self.worker_txs[w].is_some() {
-                task_lists[w].push(MemberTask {
-                    member: m,
-                    model: ctx.model.clone(),
-                    flops_per_sample: ctx.flops_per_sample,
-                    feat_bytes_per_sample: ctx.feat_bytes_per_sample,
-                });
+            for &w in &self.assignments[m] {
+                if self.worker_txs[w].is_some() {
+                    task_lists[w].push(MemberTask {
+                        member: m,
+                        model: ctx.model.clone(),
+                        flops_per_sample: ctx.flops_per_sample,
+                        feat_bytes_per_sample: ctx.feat_bytes_per_sample,
+                    });
+                }
             }
         }
 
@@ -483,6 +637,8 @@ impl Leader {
             (0..self.members.len()).map(|_| None).collect();
         let mut member_logits: Vec<Option<Vec<f32>>> =
             (0..self.members.len()).map(|_| None).collect();
+        // on-time member outputs, dedup-resolved after all arrivals are in
+        let mut arrivals: Vec<(f64, usize, MemberOutput)> = Vec::new();
         let mut gate_s = 0.0f64; // how long the central node waited
         let mut energy_j = 0.0f64;
         for p in pending {
@@ -515,9 +671,7 @@ impl Leader {
                             self.health[p.worker]
                                 .on_time(&self.config.fault, r.arrive_s);
                             for out in r.outputs {
-                                member_feats[out.member] =
-                                    Some((out.feats, out.feats_shape));
-                                member_logits[out.member] = Some(out.logits);
+                                arrivals.push((r.arrive_s, p.worker, out));
                             }
                         }
                     } else {
@@ -542,6 +696,36 @@ impl Leader {
                     self.mark_dead(p.worker);
                 }
             }
+        }
+
+        // First-arrival-wins dedup across replicas: accept member outputs
+        // in virtual-arrival order (the batch-start primary wins exact
+        // ties), so a dead or straggling primary's warm standby fills the
+        // member's slot transparently and the quorum stays full-arity.
+        // `replica_hits` counts only genuine fault masking — slots whose
+        // primary delivered nothing on time — not a healthy primary merely
+        // losing the arrival race to a standby on a faster device.
+        let mut primary_delivered = vec![false; self.members.len()];
+        for (_, w, out) in &arrivals {
+            if primary[out.member] == Some(*w) {
+                primary_delivered[out.member] = true;
+            }
+        }
+        arrivals.sort_by(|a, b| {
+            let ap = primary[a.2.member] == Some(a.1);
+            let bp = primary[b.2.member] == Some(b.1);
+            a.0.total_cmp(&b.0).then(bp.cmp(&ap))
+        });
+        for (_, w, out) in arrivals {
+            let m = out.member;
+            if member_feats[m].is_some() {
+                continue; // a faster copy of this member already won
+            }
+            if primary[m] != Some(w) && !primary_delivered[m] {
+                self.fault.replica_hits += 1;
+            }
+            member_feats[m] = Some((out.feats, out.feats_shape));
+            member_logits[m] = Some(out.logits);
         }
 
         // Quorum check over arrived member feature sets (k of n).
@@ -674,31 +858,84 @@ impl Leader {
         }
     }
 
-    /// Retire a dead device and hot re-dispatch its sub-models to the
-    /// least-loaded survivors (idempotent).
+    /// Retire a dead device (idempotent). For every member it hosted:
+    /// promote a surviving warm standby to primary when one exists (it has
+    /// computed every batch, so the member keeps serving at full speed
+    /// immediately), else fall back to PR 1's cold re-dispatch to the
+    /// least-loaded survivor. Afterwards, top standby slots back up and
+    /// shrink the admission limit with the capacity that died.
     fn mark_dead(&mut self, w: usize) {
         if self.worker_txs[w].take().is_none() {
             return; // already retired
         }
         self.health[w].set_dead();
-        if !self.config.fault.redispatch {
-            return;
-        }
-        let orphans: Vec<usize> = (0..self.members.len())
-            .filter(|&m| self.assigned_to[m] == w)
-            .collect();
-        for m in orphans {
-            if let Some(target) = self.least_loaded_alive() {
-                self.assigned_to[m] = target;
-                self.fault.redispatches += 1;
+        self.refresh_admission();
+        let member_flops: Vec<f64> = self.members.iter().map(|c| c.flops_per_sample).collect();
+        for m in 0..self.members.len() {
+            if !self.assignments[m].contains(&w) {
+                continue;
+            }
+            let was_primary = self.assignments[m].first() == Some(&w);
+            self.assignments[m].retain(|&d| d != w);
+            if self.assignments[m].is_empty() {
+                // no warm standby survives: cold re-dispatch (the replacement
+                // misses this batch and warms on the next one)
+                if self.config.fault.redispatch {
+                    if let Some(target) = self.least_loaded_alive() {
+                        self.assignments[m].push(target);
+                        self.fault.redispatches += 1;
+                    }
+                }
+            } else if was_primary {
+                // warm-standby promotion: the surviving replica is already
+                // serving this member — no re-dispatch, no warmup gap
+                self.fault.promotions += 1;
+            }
+            // restore the replication factor if a standby slot opened up
+            // and a survivor has headroom for another copy
+            if !self.assignments[m].is_empty()
+                && self.assignments[m].len() < self.config.replication.replicas
+            {
+                if let Some(t) = place_standby(
+                    m,
+                    &self.assignments,
+                    &self.member_mem,
+                    &member_flops,
+                    &self.devices,
+                    |d| self.worker_txs[d].is_some(),
+                ) {
+                    self.assignments[m].push(t);
+                    self.fault.replicas_placed += 1;
+                }
             }
         }
     }
 
+    /// Re-derive the live admission limit from surviving-fleet capacity:
+    /// the configured full-fleet queue depth scaled by the alive share of
+    /// total effective GFLOPS — a dead device takes its queue budget with
+    /// it, so an oversubscribed survivor fleet sheds instead of queueing
+    /// unboundedly.
+    fn refresh_admission(&self) {
+        let base = self.config.replication.max_queue_depth;
+        if base == 0 {
+            return; // shedding disabled
+        }
+        let total: f64 = self.devices.iter().map(|d| d.effective_gflops()).sum();
+        let alive: f64 = (0..self.devices.len())
+            .filter(|&w| self.worker_txs[w].is_some())
+            .map(|w| self.devices[w].effective_gflops())
+            .sum();
+        let share = if total > 0.0 { alive / total } else { 0.0 };
+        let limit = (base as f64 * share).ceil() as usize;
+        self.admission.limit.store(limit, Ordering::SeqCst);
+    }
+
     /// The live device with the smallest predicted per-sample compute load
-    /// under its current assignments, discounted by its health score — a
-    /// device with a poor on-time record (including harvested-straggler
-    /// history) looks "heavier" and attracts less re-dispatched work.
+    /// under its current assignments (primaries and standbys), discounted
+    /// by its health score — a device with a poor on-time record (including
+    /// harvested-straggler history) looks "heavier" and attracts less
+    /// re-dispatched work.
     fn least_loaded_alive(&self) -> Option<usize> {
         let mut best: Option<(usize, f64)> = None;
         for w in 0..self.devices.len() {
@@ -706,7 +943,7 @@ impl Leader {
                 continue;
             }
             let load: f64 = (0..self.members.len())
-                .filter(|&m| self.assigned_to[m] == w)
+                .filter(|&m| self.assignments[m].contains(&w))
                 .map(|m| self.devices[w].compute_time_s(self.members[m].flops_per_sample))
                 .sum();
             let effective = load / self.health[w].score().max(0.1);
@@ -779,6 +1016,44 @@ fn member_task_times_s(
     (t1, t2)
 }
 
+/// Choose a standby host for `member` among devices not already hosting
+/// it: the DeBo-style headroom rule — first enough free device memory for
+/// the sub-model at max batch (counting every copy already placed there),
+/// then the smallest resulting compute load, so standbys land on devices
+/// with spare speed rather than just spare RAM. Returns `None` when no
+/// eligible device fits (the member simply runs unreplicated).
+fn place_standby(
+    member: usize,
+    assignments: &[Vec<usize>],
+    member_mem: &[usize],
+    member_flops: &[f64],
+    devices: &[DeviceProfile],
+    alive: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    let mut used = vec![0usize; devices.len()];
+    let mut load = vec![0.0f64; devices.len()];
+    for (m, hosts) in assignments.iter().enumerate() {
+        for &w in hosts {
+            used[w] += member_mem[m];
+            load[w] += devices[w].compute_time_s(member_flops[m]);
+        }
+    }
+    let mut best: Option<(usize, f64)> = None;
+    for w in 0..devices.len() {
+        if !alive(w) || assignments[member].contains(&w) {
+            continue;
+        }
+        if used[w] + member_mem[member] > devices[w].memory_bytes {
+            continue; // no memory headroom for another resident copy
+        }
+        let t = load[w] + devices[w].compute_time_s(member_flops[member]);
+        if best.map_or(true, |(_, b)| t < b) {
+            best = Some((w, t));
+        }
+    }
+    best.map(|(w, _)| w)
+}
+
 /// Expected feature shape of a member's Phase-2 payload (used to zero-fill
 /// a missing member for the learned aggregators): `(rows, groups|tokens, d)`.
 fn feat_shape(arch: &Arch, rows: usize) -> Vec<usize> {
@@ -791,17 +1066,32 @@ fn feat_shape(arch: &Arch, rows: usize) -> Vec<usize> {
 
 /// Submit a whole split, pipelined so the batcher can coalesce, and collect
 /// responses in order.
+///
+/// Admission-aware: the in-flight window stays below the live admission
+/// limit by draining the oldest replies first, so a bulk driver applies
+/// backpressure to itself instead of being shed by its own load. (A
+/// concurrent producer can still exhaust the gate; that [`Overloaded`]
+/// error propagates.)
 pub fn serve_all(
     handle: &CoordinatorHandle,
     xs: Vec<RequestPayload>,
 ) -> Result<Vec<InferenceResponse>> {
-    let mut rxs = Vec::with_capacity(xs.len());
+    let mut rxs = std::collections::VecDeque::with_capacity(xs.len().min(1024));
+    let mut out = Vec::with_capacity(xs.len());
     for x in xs {
-        rxs.push(handle.submit(x)?);
+        // re-read each iteration: the limit shrinks when devices die
+        let (_, limit) = handle.admission_state();
+        while rxs.len() >= limit.max(1) {
+            let rx: mpsc::Receiver<Result<InferenceResponse>> =
+                rxs.pop_front().expect("window is non-empty");
+            out.push(rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))??);
+        }
+        rxs.push_back(handle.submit(x)?);
     }
-    rxs.into_iter()
-        .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))?)
-        .collect()
+    for rx in rxs {
+        out.push(rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))??);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -837,5 +1127,55 @@ mod tests {
         assert_eq!(feat_shape(&a, 3), vec![3, a.groups, 24]);
         a.task = TaskKind::Det;
         assert_eq!(feat_shape(&a, 2), vec![2, a.tokens(), 24]);
+    }
+
+    #[test]
+    fn admission_sheds_above_limit_with_typed_error() {
+        let a = Admission::new(2);
+        assert!(a.try_admit().is_ok());
+        assert!(a.try_admit().is_ok());
+        let err = a.try_admit().unwrap_err();
+        let o = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
+        assert_eq!(*o, Overloaded { queued: 2, limit: 2 });
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        // releasing a slot re-opens admission; the shed was counted
+        a.release(1);
+        assert!(a.try_admit().is_ok());
+        assert_eq!(a.shed.load(Ordering::SeqCst), 1);
+        assert_eq!(a.queued.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn admission_unbounded_when_disabled() {
+        let a = Admission::new(usize::MAX);
+        for _ in 0..10_000 {
+            assert!(a.try_admit().is_ok());
+        }
+        assert_eq!(a.shed.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn place_standby_prefers_fast_devices_with_headroom() {
+        let devices = DeviceProfile::paper_fleet(); // nano, tx2, orin
+        let member_mem = vec![1usize << 20; 3];
+        let member_flops = vec![1e9f64; 3];
+        let assignments: Vec<Vec<usize>> = (0..3).map(|m| vec![m]).collect();
+        // member 0's standby lands on the TX2: lowest resulting latency
+        assert_eq!(
+            place_standby(0, &assignments, &member_mem, &member_flops, &devices, |_| true),
+            Some(1)
+        );
+        // with the TX2 dead, the Orin is the next-best host
+        assert_eq!(
+            place_standby(0, &assignments, &member_mem, &member_flops, &devices, |d| d != 1),
+            Some(2)
+        );
+        // never co-locates a copy with an existing host of the same member
+        let doubled = vec![vec![0, 1], vec![1], vec![2]];
+        let w = place_standby(0, &doubled, &member_mem, &member_flops, &devices, |_| true);
+        assert_eq!(w, Some(2));
+        // a member too big for every device's headroom finds no host
+        let huge = vec![usize::MAX / 8; 3];
+        assert_eq!(place_standby(0, &assignments, &huge, &member_flops, &devices, |_| true), None);
     }
 }

@@ -94,6 +94,19 @@ pub struct FaultMetrics {
     pub harvested_late: usize,
     /// Batches rejected because fewer than `min_quorum` members arrived.
     pub quorum_failures: usize,
+    /// Member slots whose primary delivered nothing on time and a warm
+    /// replica filled them — genuine fault masking, not a healthy primary
+    /// merely losing the first-arrival race to a faster standby.
+    pub replica_hits: usize,
+    /// Warm standbys promoted to primary after their primary died (the
+    /// replacement for a cold re-dispatch when a replica exists).
+    pub promotions: usize,
+    /// Standby replicas placed after a death to restore the replication
+    /// factor (initial config-time placement is not counted).
+    pub replicas_placed: usize,
+    /// Requests shed at admission with the typed `Overloaded` error
+    /// (folded in from the admission gate at shutdown).
+    pub shed: usize,
     /// `quorum_hist[k]` = batches aggregated from exactly `k` members.
     quorum_hist: Vec<usize>,
 }
@@ -379,5 +392,14 @@ mod tests {
         assert_eq!(f.quorum_histogram(), &[0, 0, 0, 2, 1]);
         // with a 4-device fleet, the two k=3 batches were degraded
         assert_eq!(f.degraded_batches(4), 2);
+    }
+
+    #[test]
+    fn fault_metrics_replication_counters_default_zero() {
+        let f = FaultMetrics::default();
+        assert_eq!(f.replica_hits, 0);
+        assert_eq!(f.promotions, 0);
+        assert_eq!(f.replicas_placed, 0);
+        assert_eq!(f.shed, 0);
     }
 }

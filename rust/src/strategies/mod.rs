@@ -132,6 +132,10 @@ pub struct DegradedOutcome {
 /// (its input width shrinks to the surviving dims), and a dead central node
 /// hands aggregation to the fastest survivor. This is how the simulator
 /// scores the coordinator's k-of-n degraded serving mode.
+///
+/// Exactly [`coformer_replicated`] with a replication factor of 1 (no
+/// standby to adopt a dead member) — delegated so the two scoring paths
+/// share one timeline model and can never drift apart.
 pub fn coformer_degraded(
     profiles: &[DeviceProfile],
     topo: &Topology,
@@ -141,9 +145,40 @@ pub fn coformer_degraded(
     alive: &[bool],
     min_quorum: usize,
 ) -> Result<DegradedOutcome, SimError> {
+    let mut deg =
+        coformer_replicated(profiles, topo, archs, d_i, batch, alive, 1, min_quorum)?;
+    deg.outcome.name = "coformer-degraded".into();
+    Ok(deg)
+}
+
+/// CoFormer aggregate-edge with warm-standby replication (ISSUE 2): member
+/// `i`'s primary host is device `i`; when the primary is dead the member
+/// runs on its standby — the next alive device in ring order within
+/// `replicas − 1` hops — so a death costs no aggregation arity, at the
+/// price of extra compute and energy on the adopting survivor. This is how
+/// the simulator scores the coordinator's replicated serving mode against
+/// [`coformer_degraded`]'s accuracy-losing k-of-n fallback: same fleet,
+/// same faults, full-width Eq. 2 input instead of a renormalized subset.
+#[allow(clippy::too_many_arguments)]
+pub fn coformer_replicated(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    archs: &[Arch],
+    d_i: usize,
+    batch: usize,
+    alive: &[bool],
+    replicas: usize,
+    min_quorum: usize,
+) -> Result<DegradedOutcome, SimError> {
     assert_eq!(profiles.len(), archs.len());
     assert_eq!(profiles.len(), alive.len());
-    let quorum = alive.iter().filter(|&&a| a).count();
+    assert!(replicas >= 1, "replicas must be >= 1");
+    let n = profiles.len();
+    // member → host device: the primary, else the ring standby
+    let host: Vec<Option<usize>> = (0..n)
+        .map(|m| (0..replicas).map(|h| (m + h) % n).find(|&w| alive[w]))
+        .collect();
+    let quorum = host.iter().filter(|h| h.is_some()).count();
     let need = min_quorum.max(1);
     if quorum < need {
         return Err(SimError::QuorumNotMet { have: quorum, need });
@@ -155,50 +190,52 @@ pub fn coformer_degraded(
             .expect("quorum >= 1 device alive")
     };
     let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
-    let mut mems = vec![0usize; devs.len()];
-    for (i, (d, a)) in devs.iter_mut().zip(archs).enumerate() {
-        if alive[i] {
-            let mem = CostModel::memory_bytes(a, batch);
-            d.load_model(mem)?;
-            mems[i] = mem;
+    let mut mems = vec![0usize; n];
+    // memory admission: a host loads every member it covers (replication's
+    // memory tax — an adopting device can OOM exactly like Fig. 9)
+    for (m, h) in host.iter().enumerate() {
+        if let Some(w) = *h {
+            let bytes = CostModel::memory_bytes(&archs[m], batch);
+            devs[w].load_model(bytes)?;
+            mems[w] += bytes;
         }
     }
-    let mut transmit = vec![0.0f64; devs.len()];
+    let mut transmit = vec![0.0f64; n];
     let mut slowest = 0.0f64;
-    for (i, (d, a)) in devs.iter_mut().zip(archs).enumerate() {
-        if !alive[i] {
+    for w in 0..n {
+        if !alive[w] {
             continue; // dead devices contribute nothing (zeroed timeline)
         }
-        d.compute(CostModel::flops_per_sample(a) * batch as f64);
-        let t2 = if i == central {
-            0.0
-        } else {
-            topo.links[i].transfer_time_s(a.feature_bytes() * batch)
-        };
-        d.transmit(t2);
-        transmit[i] = t2;
-        slowest = slowest.max(d.now());
+        for m in 0..n {
+            if host[m] != Some(w) {
+                continue;
+            }
+            devs[w].compute(CostModel::flops_per_sample(&archs[m]) * batch as f64);
+            let t2 = if w == central {
+                0.0
+            } else {
+                topo.links[w].transfer_time_s(archs[m].feature_bytes() * batch)
+            };
+            devs[w].transmit(t2);
+            transmit[w] += t2;
+        }
+        slowest = slowest.max(devs[w].now());
     }
     devs[central].wait_until(slowest);
-    let d_agg: usize = archs
-        .iter()
-        .zip(alive)
-        .filter(|(_, &al)| al)
-        .map(|(a, _)| a.dim)
-        .sum();
+    let d_agg: usize = (0..n).filter(|&m| host[m].is_some()).map(|m| archs[m].dim).sum();
     let rows = archs[central].groups;
     let agg_t =
         devs[central].compute(CostModel::aggregation_flops(d_agg, d_i, rows) * batch as f64);
     let total = slowest + agg_t;
-    for (i, d) in devs.iter_mut().enumerate() {
-        if alive[i] && i != central {
+    for (w, d) in devs.iter_mut().enumerate() {
+        if alive[w] && w != central {
             d.wait_until(total);
         }
     }
-    let mut out = finish(devs, "coformer-degraded", total, &mems, 1);
-    for (i, t) in transmit.iter().enumerate() {
-        out.devices[i].transmit_s = *t;
-        out.devices[i].compute_s -= *t;
+    let mut out = finish(devs, "coformer-replicated", total, &mems, 1);
+    for (w, t) in transmit.iter().enumerate() {
+        out.devices[w].transmit_s = *t;
+        out.devices[w].compute_s -= *t;
     }
     Ok(DegradedOutcome { outcome: out, quorum, central })
 }
@@ -470,6 +507,93 @@ mod tests {
         )
         .unwrap_err();
         assert_eq!(err, SimError::QuorumNotMet { have: 1, need: 2 });
+    }
+
+    #[test]
+    fn replicated_all_alive_matches_coformer() {
+        // with nobody dead every member runs on its primary: the replicated
+        // timeline is exactly the healthy aggregate-edge timeline
+        let full = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        let rep = coformer_replicated(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &[true, true, true],
+            2,
+            1,
+        )
+        .unwrap();
+        assert_eq!(rep.quorum, 3);
+        assert!((rep.outcome.total_s - full.total_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn replicated_death_keeps_full_arity_degraded_loses_it() {
+        // kill device 0: degraded drops member 0 (quorum 2); with a
+        // replication factor of 2 the ring standby (device 1) adopts member
+        // 0 and the Eq. 2 input stays full width (quorum 3)
+        let alive = [false, true, true];
+        let deg = coformer_degraded(&fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 1)
+            .unwrap();
+        let rep = coformer_replicated(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &alive,
+            2,
+            1,
+        )
+        .unwrap();
+        assert_eq!(deg.quorum, 2);
+        assert_eq!(rep.quorum, 3, "replica keeps the dead member in the quorum");
+        // availability is paid for in latency and energy on the survivor
+        assert!(rep.outcome.total_s >= deg.outcome.total_s - 1e-15);
+        assert!(rep.outcome.total_energy_j() > deg.outcome.total_energy_j());
+        // the adopting device (1) runs two members' compute
+        assert!(rep.outcome.devices[1].compute_s > deg.outcome.devices[1].compute_s);
+        assert_eq!(rep.outcome.devices[0].compute_s, 0.0, "dead stays zeroed");
+    }
+
+    #[test]
+    fn replicated_factor_one_degrades_like_unreplicated() {
+        // replicas = 1 means no standby: a death shrinks the quorum exactly
+        // as in coformer_degraded
+        let alive = [false, true, true];
+        let rep = coformer_replicated(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &alive,
+            1,
+            1,
+        )
+        .unwrap();
+        assert_eq!(rep.quorum, 2);
+    }
+
+    #[test]
+    fn replicated_below_quorum_errors() {
+        // two deaths with factor 2: member 0's primary (0) and standby (1)
+        // are both gone, so only members 1 and 2 are covered — and a
+        // min_quorum of 3 must fail
+        let err = coformer_replicated(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &[false, false, true],
+            2,
+            3,
+        )
+        .unwrap_err();
+        assert_eq!(err, SimError::QuorumNotMet { have: 2, need: 3 });
     }
 
     #[test]

@@ -133,3 +133,86 @@ fn check_virtual_latency_fields(ctx: &Ctx) {
     assert_eq!(r.logits.len(), ctx.m.tasks["edgenet"].num_classes);
     coord.shutdown().unwrap();
 }
+
+/// ISSUE 2: shutting the leader down while requests are still queued must
+/// resolve every outstanding reply channel — `Ok` for batches flushed on
+/// the way out, an error or sender-drop for the rest — and never leave a
+/// caller hanging. Stub-backed (no artifacts, no PJRT client), so it runs
+/// alongside the artifact suite without violating the one-client rule.
+#[test]
+fn shutdown_with_queued_requests_resolves_every_reply() {
+    use std::sync::mpsc::RecvTimeoutError;
+    use std::time::Duration;
+
+    use coformer::config::{DeviceSpec, SystemConfig as SC};
+    use coformer::model::Mode;
+    use coformer::runtime::StubSpec;
+
+    let classes = 4usize;
+    let arch = Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, classes);
+    let stride = {
+        let a = &arch;
+        a.tokens() * a.patch_dim()
+    };
+    let members: Vec<String> = (0..4).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), arch.clone())).collect(),
+        classes,
+    };
+    let server = coformer::runtime::ExecServer::start_stub(spec).unwrap();
+    let dep = coformer::runtime::manifest::DeploymentMeta {
+        task: "stub".into(),
+        members,
+        aggregators: std::collections::HashMap::new(),
+    };
+    let mut config = SC::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into()));
+    config.deployment = "stub_4dev".into();
+    config.aggregator = "average".into();
+    config.max_batch = 4;
+    config.max_wait_ms = 1;
+    let coord = Coordinator::start_with_faults(
+        config,
+        server.handle(),
+        dep,
+        vec![arch; 4],
+        stride,
+        Vec::new(),
+    )
+    .unwrap();
+    let handle = coord.handle();
+
+    // a producer thread keeps submitting while the main thread shuts down,
+    // so some requests land before the Shutdown message (flushed → Ok) and
+    // some race it (dropped with the leader → sender-drop, still resolved)
+    let producer = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for i in 0..200usize {
+            match handle.submit(RequestPayload::F32(vec![(i % 4) as f32; stride])) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => break, // leader gone: submit refused, nothing queued
+            }
+        }
+        rxs
+    });
+    std::thread::sleep(Duration::from_millis(5));
+    let stats = coord.shutdown().unwrap();
+    let rxs = producer.join().unwrap();
+    drop(server);
+
+    assert!(!rxs.is_empty(), "producer must have queued at least one request");
+    let mut ok = 0usize;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(_)) | Err(RecvTimeoutError::Disconnected) => {} // resolved as error
+            Err(RecvTimeoutError::Timeout) => {
+                panic!("a queued request's reply channel hung across shutdown")
+            }
+        }
+    }
+    assert_eq!(
+        ok, stats.requests,
+        "every served request's reply arrived; the rest resolved as errors"
+    );
+}

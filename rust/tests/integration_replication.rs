@@ -1,0 +1,273 @@
+//! Deterministic integration tests for replicated sub-models + admission
+//! control (ISSUE 2), driven by the same stub backend + `FaultScript`
+//! harness as `integration_faults.rs`.
+//!
+//! Acceptance criteria exercised here:
+//! * with replication factor 2, a scripted primary crash mid-stream
+//!   sustains full-arity (n-of-n) aggregation with zero quorum-size drop
+//!   across the crash batch (the warm standby's output fills the slot in
+//!   the very batch the primary dies), and the standby is *promoted* —
+//!   not cold re-dispatched;
+//! * an oversubscribed fleet sheds excess load with the typed
+//!   [`Overloaded`] error while every admitted in-flight request still
+//!   completes.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use coformer::config::{DeviceSpec, FaultPolicy, ReplicationPolicy, SystemConfig};
+use coformer::coordinator::{
+    serve_all, Coordinator, CoordinatorHandle, InferenceResponse, Overloaded,
+    RequestPayload,
+};
+use coformer::device::FaultScript;
+use coformer::model::{Arch, Mode};
+use coformer::runtime::manifest::DeploymentMeta;
+use coformer::runtime::{ExecServer, StubSpec};
+
+const FLEET: usize = 4;
+const CLASSES: usize = 4;
+
+fn arch() -> Arch {
+    Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, CLASSES)
+}
+
+fn x_stride() -> usize {
+    let a = arch();
+    a.tokens() * a.patch_dim() // 16 × 48
+}
+
+/// Start a 4-device coordinator (nano, tx2, orin-nano, rpi; central = tx2)
+/// over the stub backend with the given scripts and policies.
+fn start(
+    scripts: Vec<FaultScript>,
+    fault: FaultPolicy,
+    replication: ReplicationPolicy,
+    max_batch: usize,
+    max_wait_ms: u64,
+) -> (ExecServer, Coordinator) {
+    let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), arch())).collect(),
+        classes: CLASSES,
+    };
+    let server = ExecServer::start_stub(spec).unwrap();
+    let dep = DeploymentMeta {
+        task: "stub".into(),
+        members,
+        aggregators: HashMap::new(),
+    };
+    let mut config = SystemConfig::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device
+    config.deployment = "stub_4dev".into();
+    config.aggregator = "average".into();
+    config.max_batch = max_batch;
+    config.max_wait_ms = max_wait_ms;
+    config.fault = fault;
+    config.replication = replication;
+    let archs = vec![arch(); FLEET];
+    let coord = Coordinator::start_with_faults(
+        config,
+        server.handle(),
+        dep,
+        archs,
+        x_stride(),
+        scripts,
+    )
+    .unwrap();
+    (server, coord)
+}
+
+/// Serve one pipelined round of labeled requests; row mean encodes the label.
+fn round(
+    handle: &CoordinatorHandle,
+    labels: &[usize],
+) -> coformer::Result<Vec<InferenceResponse>> {
+    serve_all(
+        handle,
+        labels
+            .iter()
+            .map(|&l| RequestPayload::F32(vec![l as f32; x_stride()]))
+            .collect(),
+    )
+}
+
+fn no_fault_scripts() -> Vec<FaultScript> {
+    (0..FLEET).map(|_| FaultScript::none()).collect()
+}
+
+#[test]
+fn primary_crash_sustains_full_arity_with_warm_standby() {
+    // Device 2's crash at batch 1 (mid-stream) kills member 2's primary;
+    // with replication factor 2 the member's warm standby fills its slot in
+    // the crash batch itself — the quorum histogram must show n-of-n for
+    // EVERY batch, including the crash batch.
+    let mut scripts = no_fault_scripts();
+    scripts[2] = FaultScript::crash_at(1);
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let replication = ReplicationPolicy { replicas: 2, ..ReplicationPolicy::default() };
+    let (server, coord) = start(scripts, fault, replication, 4, 2);
+    let handle = coord.handle();
+    let labels = [3usize, 1, 0, 2];
+    for _ in 0..4 {
+        let resp = round(&handle, &labels).unwrap();
+        for (r, &l) in resp.iter().zip(&labels) {
+            assert_eq!(r.prediction, l, "replicated aggregation must stay correct");
+            assert_eq!(
+                r.quorum, FLEET,
+                "zero quorum-size drop: every batch aggregates n of n members"
+            );
+        }
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.requests, 16);
+    assert_eq!(stats.fault.crashes, 1);
+    assert_eq!(stats.fault.quorum_failures, 0);
+    assert_eq!(stats.fault.promotions, 1, "the warm standby was promoted");
+    assert_eq!(
+        stats.fault.redispatches, 0,
+        "a member with a live replica must never cold re-dispatch"
+    );
+    assert!(
+        stats.fault.replicas_placed >= 1,
+        "the replication factor is restored on survivors"
+    );
+    assert!(
+        stats.fault.replica_hits >= 1,
+        "the crash batch's member-2 slot was filled by its replica"
+    );
+    // the headline: not a single degraded batch across the crash
+    assert_eq!(stats.fault.degraded_batches(FLEET), 0);
+    assert_eq!(stats.fault.batches_at_quorum(FLEET), stats.batches);
+}
+
+#[test]
+fn unreplicated_crash_still_degrades_one_batch() {
+    // Control: the identical crash with replicas = 1 drops the crash batch
+    // to k = 3 (PR 1 behavior) — proving the zero-drop above comes from the
+    // replica, not from the harness.
+    let mut scripts = no_fault_scripts();
+    scripts[2] = FaultScript::crash_at(1);
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let (server, coord) = start(scripts, fault, ReplicationPolicy::default(), 4, 2);
+    let handle = coord.handle();
+    let labels = [3usize, 1, 0, 2];
+    for _ in 0..4 {
+        let resp = round(&handle, &labels).unwrap();
+        for (r, &l) in resp.iter().zip(&labels) {
+            assert_eq!(r.prediction, l);
+        }
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.fault.crashes, 1);
+    assert_eq!(stats.fault.promotions, 0);
+    assert_eq!(stats.fault.redispatches, 1, "no replica → cold re-dispatch");
+    assert_eq!(stats.fault.degraded_batches(FLEET), 1, "the crash batch ran at k=3");
+    assert_eq!(stats.fault.batches_at_quorum(3), 1);
+}
+
+#[test]
+fn oversubscribed_fleet_sheds_typed_overloaded_and_completes_in_flight() {
+    // Admission limit 4 (full fleet). The batcher waits 400 ms before
+    // shipping, so a burst of 8 submits admits the first 4 and must shed
+    // the rest with a typed, downcastable Overloaded error — while the 4
+    // admitted requests still complete correctly.
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let replication = ReplicationPolicy { replicas: 1, max_queue_depth: 4 };
+    let (server, coord) = start(no_fault_scripts(), fault, replication, 64, 400);
+    let handle = coord.handle();
+    let (_, limit) = handle.admission_state();
+    assert_eq!(limit, 4, "full fleet alive: limit = configured depth");
+
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..8usize {
+        match handle.submit(RequestPayload::F32(vec![(i % CLASSES) as f32; x_stride()])) {
+            Ok(rx) => admitted.push((i % CLASSES, rx)),
+            Err(e) => {
+                let o = e
+                    .downcast_ref::<Overloaded>()
+                    .expect("shed must carry the typed Overloaded error");
+                assert_eq!(o.limit, 4);
+                assert!(o.queued >= 4);
+                assert!(e.to_string().contains("overloaded"), "{e}");
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(admitted.len(), 4, "exactly the admission limit was admitted");
+    assert_eq!(shed, 4, "the rest was shed");
+
+    // every admitted request completes (shedding never cancels in-flight work)
+    for (label, rx) in admitted {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("admitted request must resolve")
+            .expect("admitted request must succeed");
+        assert_eq!(resp.prediction, label);
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.requests, 4);
+    assert_eq!(stats.fault.shed, 4, "sheds are visible in the serve stats");
+
+    // every admitted slot was released back to the gate when its reply went out
+    let (queued, _) = handle.admission_state();
+    assert_eq!(queued, 0);
+}
+
+#[test]
+fn admission_limit_shrinks_with_surviving_capacity() {
+    // Killing the Orin Nano (~41% of fleet effective GFLOPS) must shrink
+    // the live admission limit proportionally: dead capacity takes its
+    // queue budget with it.
+    let mut scripts = no_fault_scripts();
+    scripts[2] = FaultScript::crash_at(0);
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let replication = ReplicationPolicy { replicas: 1, max_queue_depth: 100 };
+    let (server, coord) = start(scripts, fault, replication, 4, 2);
+    let handle = coord.handle();
+    assert_eq!(handle.admission_state().1, 100);
+    round(&handle, &[0, 1, 2, 3]).unwrap(); // crash observed in this round
+    let (_, limit) = handle.admission_state();
+    assert!(
+        limit < 100 && limit >= 1,
+        "limit must shrink with the dead device's capacity share, got {limit}"
+    );
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.fault.crashes, 1);
+}
+
+#[test]
+fn zero_min_quorum_rejected_at_start() {
+    // ISSUE 2 regression: min_quorum = 0 must be rejected up front — at
+    // k = 0 `renormalize_subset` produces all-zero features and the batch
+    // would "aggregate" them into garbage predictions.
+    let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), arch())).collect(),
+        classes: CLASSES,
+    };
+    let server = ExecServer::start_stub(spec).unwrap();
+    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: HashMap::new() };
+    let mut config = SystemConfig::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into()));
+    config.deployment = "stub_4dev".into();
+    // bypass config-load validation: construct the policy directly
+    config.fault = FaultPolicy { min_quorum: 0, ..FaultPolicy::default() };
+    let err = Coordinator::start_with_faults(
+        config,
+        server.handle(),
+        dep,
+        vec![arch(); FLEET],
+        x_stride(),
+        Vec::new(),
+    )
+    .err()
+    .expect("min_quorum = 0 must be rejected");
+    assert!(err.to_string().contains("min_quorum"), "{err}");
+    drop(server);
+}

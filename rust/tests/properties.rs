@@ -285,6 +285,57 @@ fn prop_average_probs_sum_to_one() {
 }
 
 #[test]
+fn prop_fused_probs_finite_and_normalized_under_adversarial_logits() {
+    // ISSUE 2: average / weighted_average must be total — finite outputs
+    // that row-sum to 1 — even when member logits contain ±inf, NaN and
+    // magnitude extremes (a crashed/garbage member must never poison the
+    // fused distribution with NaN).
+    forall(300, 4200, |rng| {
+        let rows = rng.gen_range(1, 5);
+        let classes = rng.gen_range(2, 8);
+        let k = rng.gen_range(1, 4);
+        let members: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                (0..rows * classes)
+                    .map(|_| match rng.gen_range(0, 10) {
+                        0 => f32::NEG_INFINITY,
+                        1 => f32::INFINITY,
+                        2 => f32::NAN,
+                        3 => 1e38,
+                        4 => -1e38,
+                        _ => (rng.gen_f64() * 20.0 - 10.0) as f32,
+                    })
+                    .collect()
+            })
+            .collect();
+        let check = |fused: &[f32], what: &str| {
+            assert_eq!(fused.len(), rows * classes);
+            for r in 0..rows {
+                let row = &fused[r * classes..(r + 1) * classes];
+                assert!(
+                    row.iter().all(|v| v.is_finite() && *v >= 0.0),
+                    "{what}: non-finite fused row {row:?}"
+                );
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "{what}: row {r} sums to {s}");
+            }
+        };
+        check(&aggregation::average(&members, rows, classes), "average");
+        let weights: Vec<f32> = (0..k).map(|_| rng.gen_f64() as f32).collect();
+        check(
+            &aggregation::weighted_average(&members, &weights, rows, classes).unwrap(),
+            "weighted",
+        );
+        // all-zero weights carry no preference: uniform fallback, not 0/0
+        let zeros = vec![0.0f32; k];
+        check(
+            &aggregation::weighted_average(&members, &zeros, rows, classes).unwrap(),
+            "zero-weights",
+        );
+    });
+}
+
+#[test]
 fn prop_unanimous_vote_wins() {
     forall(200, 800, |rng| {
         let classes = rng.gen_range(2, 10);

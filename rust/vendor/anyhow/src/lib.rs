@@ -1,19 +1,49 @@
 //! Minimal vendored implementation of the `anyhow` API surface this
-//! workspace uses: `Error`, `Result`, and the `anyhow!` / `bail!` /
-//! `ensure!` macros. Error sources are flattened into the message at
-//! conversion time, so `{}`, `{:#}` and `{:?}` all render the full text.
+//! workspace uses: `Error`, `Result`, the `anyhow!` / `bail!` / `ensure!`
+//! macros, and typed-error recovery via [`Error::new`] + `downcast_ref`
+//! (the serving stack's `Overloaded` admission error depends on it).
+//! Error sources are flattened into the message at conversion time, so
+//! `{}`, `{:#}` and `{:?}` all render the full text; errors converted from
+//! a concrete `std::error::Error` additionally keep the original value for
+//! `downcast_ref`, matching the real anyhow's contract.
 
+use std::any::Any;
 use std::fmt;
 
-/// A string-backed error value, convertible from any `std::error::Error`.
+/// A string-backed error value, convertible from any `std::error::Error`,
+/// optionally carrying the original typed error for `downcast_ref`.
 pub struct Error {
     msg: String,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from anything displayable (what `anyhow!` expands to).
     pub fn msg(m: impl fmt::Display) -> Self {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), payload: None }
+    }
+
+    /// Construct from a concrete error value, keeping it for
+    /// [`Error::downcast_ref`].
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Self {
+        // Flatten the source chain into one message.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            let text = s.to_string();
+            if !msg.contains(&text) {
+                msg.push_str(": ");
+                msg.push_str(&text);
+            }
+            src = s.source();
+        }
+        Error { msg, payload: Some(Box::new(e)) }
+    }
+
+    /// Borrow the original typed error, if this `Error` was built from one
+    /// via [`Error::new`] or the blanket `From` conversion.
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
     }
 }
 
@@ -33,18 +63,7 @@ impl fmt::Debug for Error {
 // `std::error::Error` — that is what makes this blanket conversion legal.
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Self {
-        // Flatten the source chain into one message.
-        let mut msg = e.to_string();
-        let mut src = e.source();
-        while let Some(s) = src {
-            let text = s.to_string();
-            if !msg.contains(&text) {
-                msg.push_str(": ");
-                msg.push_str(&text);
-            }
-            src = s.source();
-        }
-        Error { msg }
+        Error::new(e)
     }
 }
 
@@ -108,5 +127,33 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(e.to_string().contains("gone"));
+    }
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct Typed {
+        code: u32,
+    }
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.code)
+        }
+    }
+
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn downcast_recovers_typed_errors() {
+        let e = Error::new(Typed { code: 7 });
+        assert_eq!(e.to_string(), "typed error 7");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed { code: 7 }));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+
+        // the blanket `?` conversion keeps the payload too
+        let via_from: Error = Typed { code: 9 }.into();
+        assert_eq!(via_from.downcast_ref::<Typed>().unwrap().code, 9);
+
+        // message-built errors have no payload
+        assert!(anyhow!("plain").downcast_ref::<Typed>().is_none());
     }
 }
