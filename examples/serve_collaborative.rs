@@ -8,7 +8,7 @@
 //! cargo run --release --example serve_collaborative [n_requests]
 //! ```
 
-use coformer::config::{FaultPolicy, ReplicationPolicy, SystemConfig};
+use coformer::config::{ElisionPolicy, FaultPolicy, ReplicationPolicy, SystemConfig};
 use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
 use coformer::data::Dataset;
 use coformer::device::DeviceProfile;
@@ -47,8 +47,16 @@ fn main() -> Result<()> {
     // Replication + admission control: one warm standby per member (a
     // primary death costs no aggregation arity while the replacement
     // warms), shedding past 1024 queued requests with a typed Overloaded
-    // error as the surviving fleet's capacity shrinks.
-    config.replication = ReplicationPolicy { replicas: 2, ..ReplicationPolicy::default() };
+    // error as the surviving fleet's capacity shrinks. Elision makes the
+    // standby dispatch load-adaptive: under sustained queue pressure the
+    // fleet drops to primaries-only and re-banks the saved standby compute
+    // as admission budget, restoring full replication when headroom
+    // returns (unhealthy-primary members always keep their standbys).
+    config.replication = ReplicationPolicy {
+        replicas: 2,
+        elision: ElisionPolicy { enabled: true, ..ElisionPolicy::default() },
+        ..ReplicationPolicy::default()
+    };
     let coord = Coordinator::start(config, exec, dep.clone(), archs, ds.x_stride())?;
     let handle = coord.handle();
 
@@ -101,6 +109,16 @@ fn main() -> Result<()> {
         stats.fault.replicas_placed,
         stats.fault.shed
     );
+    println!(
+        "elastic replication: batches full/partial/elided {}/{}/{}  mode transitions {}  \
+         standby GFLOPs saved {:.2}  fallbacks {}",
+        stats.fault.batches_full,
+        stats.fault.batches_partial,
+        stats.fault.batches_elided,
+        stats.fault.mode_transitions,
+        stats.fault.standby_gflops_saved,
+        stats.fault.standby_fallbacks
+    );
 
     // --- baseline: the teacher on the strongest single device -------------
     // batch-matched comparison (the coordinator served ~16-sample batches)
@@ -150,6 +168,21 @@ fn main() -> Result<()> {
         single.total_s * 1e3,
         cof.total_s * 1e3,
         single.total_s / cof.total_s
+    );
+    // the elastic availability/throughput trade at the same paper scale:
+    // what the coordinator's per-batch mode decision is choosing between
+    let alive = [true, true, true];
+    let rep = strategies::coformer_elastic(&devs, &topo, &subs, 512, 1, &alive, 2, 2, false)?;
+    let eli = strategies::coformer_elastic(&devs, &topo, &subs, 512, 1, &alive, 2, 2, true)?;
+    println!(
+        "elastic trade (healthy fleet): always-replicate {:.1} ms / {:.1} mJ vs \
+         primaries-only {:.1} ms / {:.1} mJ ({:.1} standby GFLOPs saved per inference; \
+         run `cargo run --release --bin paper -- elastic` for the fault scenarios)",
+        rep.outcome.total_s * 1e3,
+        rep.outcome.total_energy_j() * 1e3,
+        eli.outcome.total_s * 1e3,
+        eli.outcome.total_energy_j() * 1e3,
+        eli.standby_gflops_saved
     );
     Ok(())
 }

@@ -123,6 +123,108 @@ impl FaultPolicy {
     }
 }
 
+/// Load-adaptive standby elision (ISSUE 3): per-batch, per-member control
+/// over whether warm standbys actually execute. Under fleet pressure
+/// (admission-queue fill and/or recent p95 virtual latency) the
+/// [`crate::coordinator::ReplicaScheduler`] walks the dispatch mode
+/// Full → Partial → Elided (primaries only) and back as headroom returns,
+/// with a consecutive-reading hold so the mode cannot flap. A member whose
+/// primary is Degraded or Dead always keeps its standbys running,
+/// whatever the mode — availability falls back instantly, throughput is
+/// only traded away for members that don't currently need masking.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElisionPolicy {
+    /// Master switch. Off (default) reproduces the always-replicate
+    /// dispatch of ISSUE 2 exactly.
+    pub enabled: bool,
+    /// Queue fill (queued / capacity-derived limit) at or above which a
+    /// batch reads as high pressure.
+    pub high_watermark: f64,
+    /// Queue fill at or below which a batch reads as low pressure. Must
+    /// not exceed `high_watermark`; the gap between the two is the
+    /// hysteresis band where the mode holds.
+    pub low_watermark: f64,
+    /// Recent p95 virtual latency (ms) at or above which a batch reads as
+    /// high pressure regardless of queue fill. 0 disables the latency
+    /// signal (queue-only control, fully deterministic under test).
+    pub p95_high_ms: f64,
+    /// Consecutive same-direction pressure readings required before the
+    /// mode moves one step. Higher values damp flapping harder.
+    pub hold_batches: usize,
+    /// Batches a freshly promoted member keeps its (re-placed) standby
+    /// shadowing under Partial mode, so a member that just lost its
+    /// primary re-warms cover before shadowing is withdrawn again.
+    pub shadow_promoted_batches: usize,
+}
+
+impl Default for ElisionPolicy {
+    fn default() -> Self {
+        ElisionPolicy {
+            enabled: false,
+            high_watermark: 0.75,
+            low_watermark: 0.35,
+            p95_high_ms: 0.0,
+            hold_batches: 2,
+            shadow_promoted_batches: 4,
+        }
+    }
+}
+
+impl ElisionPolicy {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = ElisionPolicy::default();
+        let opt_f64 = |key: &str, dv: f64| -> Result<f64> {
+            v.get(key).map(|x| x.as_f64()).transpose().map(|o| o.unwrap_or(dv))
+        };
+        let opt_usize = |key: &str, dv: usize| -> Result<usize> {
+            v.get(key).map(|x| x.as_usize()).transpose().map(|o| o.unwrap_or(dv))
+        };
+        let p = ElisionPolicy {
+            enabled: v
+                .get("enabled")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(d.enabled),
+            high_watermark: opt_f64("high_watermark", d.high_watermark)?,
+            low_watermark: opt_f64("low_watermark", d.low_watermark)?,
+            p95_high_ms: opt_f64("p95_high_ms", d.p95_high_ms)?,
+            hold_batches: opt_usize("hold_batches", d.hold_batches)?,
+            shadow_promoted_batches: opt_usize(
+                "shadow_promoted_batches",
+                d.shadow_promoted_batches,
+            )?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Shared by JSON parsing and direct construction (the coordinator
+    /// re-validates at start so a hand-built policy can't bypass this).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.high_watermark.is_finite() && self.high_watermark > 0.0,
+            "elision high_watermark must be finite and > 0"
+        );
+        anyhow::ensure!(
+            self.low_watermark.is_finite() && self.low_watermark >= 0.0,
+            "elision low_watermark must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.low_watermark <= self.high_watermark,
+            "elision low_watermark {} must not exceed high_watermark {} \
+             (an inverted band would oscillate every batch)",
+            self.low_watermark,
+            self.high_watermark
+        );
+        anyhow::ensure!(
+            self.p95_high_ms.is_finite() && self.p95_high_ms >= 0.0,
+            "elision p95_high_ms must be finite and >= 0 (0 disables)"
+        );
+        anyhow::ensure!(self.hold_batches >= 1, "elision hold_batches must be >= 1");
+        Ok(())
+    }
+}
+
 /// Replication + admission-control policy for the serving coordinator
 /// (ISSUE 2): warm standby copies of each sub-model on distinct devices so
 /// a primary's death costs no aggregation arity while its replacement
@@ -140,8 +242,13 @@ pub struct ReplicationPolicy {
     /// [`ReplicationPolicy::MAX_QUEUE_DEPTH_CAP`]. The live admission limit
     /// is this scaled by the surviving fleet's share of total effective
     /// GFLOPS, so device deaths shrink the queue with the capacity that
-    /// died. 0 disables shedding (submits block as before).
+    /// died. 0 disables shedding (submits block as before). With elision
+    /// enabled and the fleet in primaries-only mode, the limit is scaled
+    /// *up* by the standby compute not being spent — saved GFLOPS are
+    /// re-banked as queue budget.
     pub max_queue_depth: usize,
+    /// Load-adaptive standby elision (ISSUE 3).
+    pub elision: ElisionPolicy,
 }
 
 impl ReplicationPolicy {
@@ -153,7 +260,11 @@ impl ReplicationPolicy {
 
 impl Default for ReplicationPolicy {
     fn default() -> Self {
-        ReplicationPolicy { replicas: 1, max_queue_depth: 1024 }
+        ReplicationPolicy {
+            replicas: 1,
+            max_queue_depth: 1024,
+            elision: ElisionPolicy::default(),
+        }
     }
 }
 
@@ -166,6 +277,11 @@ impl ReplicationPolicy {
         let p = ReplicationPolicy {
             replicas: opt_usize("replicas", d.replicas)?,
             max_queue_depth: opt_usize("max_queue_depth", d.max_queue_depth)?,
+            elision: v
+                .get("elision")
+                .map(ElisionPolicy::from_json)
+                .transpose()?
+                .unwrap_or(d.elision),
         };
         anyhow::ensure!(p.replicas >= 1, "replicas must be >= 1 (1 = no replication)");
         anyhow::ensure!(
@@ -174,7 +290,24 @@ impl ReplicationPolicy {
             p.max_queue_depth,
             Self::MAX_QUEUE_DEPTH_CAP
         );
+        p.validate_elision_signals()?;
         Ok(p)
+    }
+
+    /// Enabled elision needs at least one live pressure signal: queue fill
+    /// (requires shedding, i.e. `max_queue_depth > 0`) or the p95 latency
+    /// gate. With neither, every reading is Low and the scheduler would be
+    /// silently pinned to Full — reject instead of quietly doing nothing.
+    pub fn validate_elision_signals(&self) -> Result<()> {
+        anyhow::ensure!(
+            !self.elision.enabled
+                || self.max_queue_depth > 0
+                || self.elision.p95_high_ms > 0.0,
+            "elision is enabled but has no pressure signal: shedding is \
+             disabled (max_queue_depth = 0) and the p95 latency gate is off \
+             (p95_high_ms = 0) — the fleet would stay in Full mode forever"
+        );
+        Ok(())
     }
 }
 
@@ -414,6 +547,74 @@ mod tests {
         let json = r#"{"devices":["jetson-nano"],"deployment":"x",
                        "replication":{"max_queue_depth":2000000}}"#;
         assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn elision_defaults_disabled_when_absent() {
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "replication":{"replicas":1}}"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(c.replication.elision, ElisionPolicy::default());
+        assert!(!c.replication.elision.enabled);
+    }
+
+    #[test]
+    fn elision_parses_overrides() {
+        let json = r#"{
+          "devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+          "replication":{"replicas":2,"elision":{
+            "enabled":true,"high_watermark":0.5,"low_watermark":0.2,
+            "p95_high_ms":40.0,"hold_batches":3,"shadow_promoted_batches":6}}
+        }"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        let e = c.replication.elision;
+        assert!(e.enabled);
+        assert!((e.high_watermark - 0.5).abs() < 1e-12);
+        assert!((e.low_watermark - 0.2).abs() < 1e-12);
+        assert!((e.p95_high_ms - 40.0).abs() < 1e-12);
+        assert_eq!(e.hold_batches, 3);
+        assert_eq!(e.shadow_promoted_batches, 6);
+        // untouched knobs keep their defaults
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "replication":{"elision":{"enabled":true}}}"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert!(c.replication.elision.enabled);
+        assert_eq!(c.replication.elision.hold_batches, ElisionPolicy::default().hold_batches);
+    }
+
+    #[test]
+    fn elision_bounds_enforced() {
+        // an inverted hysteresis band would oscillate every batch
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "replication":{"elision":{"low_watermark":0.9,"high_watermark":0.5}}}"#;
+        let err = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("low_watermark"), "{err}");
+        // zero hold would transition on every reading (no hysteresis at all)
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "replication":{"elision":{"hold_batches":0}}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+        // a non-positive high watermark can never be crossed meaningfully
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+                       "replication":{"elision":{"high_watermark":0.0,"low_watermark":0.0}}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn enabled_elision_without_any_pressure_signal_rejected() {
+        // shedding off + p95 gate off = every reading Low = elision that
+        // silently never engages; reject instead of quietly doing nothing
+        let json = r#"{"devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+                       "replication":{"max_queue_depth":0,"elision":{"enabled":true}}}"#;
+        let err = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("no pressure signal"), "{err}");
+        // either signal alone makes the config meaningful again
+        let json = r#"{"devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+                       "replication":{"max_queue_depth":0,
+                                      "elision":{"enabled":true,"p95_high_ms":40.0}}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_ok());
+        let json = r#"{"devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+                       "replication":{"max_queue_depth":8,"elision":{"enabled":true}}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_ok());
     }
 
     #[test]

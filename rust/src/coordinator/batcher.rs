@@ -1,11 +1,18 @@
 //! Dynamic batcher: greedily coalesces queued requests up to `max_batch`,
 //! waiting at most `max_wait` after the first arrival — the standard
 //! serving trade-off between batching efficiency and queueing latency.
+//!
+//! Since ISSUE 3 each shipped batch also carries an [`IntakePressure`]
+//! snapshot taken at batch-close time (admitted-but-unreleased requests vs
+//! the capacity-derived queue limit). That is the fleet-pressure signal the
+//! leader feeds the [`super::ReplicaScheduler`], measured exactly where
+//! load is visible first: the intake queue.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::{InferenceRequest, LeaderMsg};
+use super::{Admission, InferenceRequest, LeaderMsg};
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
@@ -19,22 +26,90 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Intake-queue snapshot at batch-close time. `queued` still counts the
+/// shipped batch's own requests (their slots release only after their
+/// replies go out), so a full batch on an otherwise idle system reads as
+/// `max_batch / capacity_limit`, not zero.
+#[derive(Clone, Copy, Debug)]
+pub struct IntakePressure {
+    /// Requests admitted and not yet released.
+    pub queued: usize,
+    /// Capacity-derived queue limit (base depth × surviving-capacity
+    /// share), *before* any elision scaling — the control signal must not
+    /// depend on its own actuator. `usize::MAX` when shedding is disabled.
+    pub capacity_limit: usize,
+    /// Live admission limit actually enforced on `submit` (capacity limit
+    /// × elision headroom factor). `usize::MAX` when shedding is disabled.
+    pub live_limit: usize,
+}
+
+impl IntakePressure {
+    /// Snapshot with shedding disabled (also what a gate-less batcher
+    /// reports): zero pressure.
+    pub fn unbounded() -> Self {
+        IntakePressure { queued: 0, capacity_limit: usize::MAX, live_limit: usize::MAX }
+    }
+
+    /// Queue fill in [0, ∞): `queued / capacity_limit`. 0 when shedding is
+    /// disabled. Can exceed 1.0 transiently when elision has raised the
+    /// live limit above the capacity limit.
+    pub fn fill(&self) -> f64 {
+        if self.capacity_limit == 0 || self.capacity_limit == usize::MAX {
+            return 0.0;
+        }
+        self.queued as f64 / self.capacity_limit as f64
+    }
+}
+
+impl Default for IntakePressure {
+    fn default() -> Self {
+        IntakePressure::unbounded()
+    }
+}
+
+/// One shipped batch: the coalesced requests plus the intake pressure
+/// observed the moment the batch closed.
+pub struct Batch {
+    pub requests: Vec<InferenceRequest>,
+    pub pressure: IntakePressure,
+}
+
 /// Pulls from the request channel and forms batches.
 pub struct Batcher {
     rx: mpsc::Receiver<LeaderMsg>,
     config: BatcherConfig,
     closed: bool,
+    /// Admission gate to snapshot pressure from; `None` reports unbounded.
+    gate: Option<Arc<Admission>>,
 }
 
 impl Batcher {
     pub fn new(rx: mpsc::Receiver<LeaderMsg>, config: BatcherConfig) -> Self {
         assert!(config.max_batch >= 1);
-        Batcher { rx, config, closed: false }
+        Batcher { rx, config, closed: false, gate: None }
+    }
+
+    /// Batcher wired to the coordinator's admission gate (leader-internal;
+    /// the gate type is private to the coordinator).
+    pub(crate) fn with_gate(
+        rx: mpsc::Receiver<LeaderMsg>,
+        config: BatcherConfig,
+        gate: Arc<Admission>,
+    ) -> Self {
+        assert!(config.max_batch >= 1);
+        Batcher { rx, config, closed: false, gate: Some(gate) }
+    }
+
+    fn pressure(&self) -> IntakePressure {
+        match &self.gate {
+            Some(g) => g.snapshot(),
+            None => IntakePressure::unbounded(),
+        }
     }
 
     /// Next batch, or `None` once a shutdown message arrived (any batch in
     /// flight at that moment is flushed first) or the channel closed.
-    pub fn next_batch(&mut self) -> Option<Vec<InferenceRequest>> {
+    pub fn next_batch(&mut self) -> Option<Batch> {
         if self.closed {
             return None;
         }
@@ -65,7 +140,7 @@ impl Batcher {
                 Err(mpsc::RecvTimeoutError::Disconnected) => break, // flush
             }
         }
-        Some(batch)
+        Some(Batch { requests: batch, pressure: self.pressure() })
     }
 }
 
@@ -97,8 +172,8 @@ mod tests {
             keeps.push(keep);
             tx.send(r).unwrap();
         }
-        assert_eq!(b.next_batch().unwrap().len(), 4);
-        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert_eq!(b.next_batch().unwrap().requests.len(), 4);
+        assert_eq!(b.next_batch().unwrap().requests.len(), 2);
     }
 
     #[test]
@@ -112,7 +187,7 @@ mod tests {
         tx.send(r).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
-        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.requests.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(9));
     }
 
@@ -136,7 +211,7 @@ mod tests {
         );
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
-        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.requests.len(), 1);
         // shutdown short-circuits the wait window
         assert!(t0.elapsed() < Duration::from_millis(100));
         assert!(b.next_batch().is_none());
@@ -149,7 +224,7 @@ mod tests {
         tx.send(r).unwrap();
         drop(tx);
         let mut b = Batcher::new(rx, BatcherConfig::default());
-        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert_eq!(b.next_batch().unwrap().requests.len(), 1);
         assert!(b.next_batch().is_none());
     }
 
@@ -184,8 +259,8 @@ mod tests {
         drop(tx);
         let mut total = 0;
         while let Some(batch) = b.next_batch() {
-            assert!(!batch.is_empty(), "batcher emitted an empty batch");
-            total += batch.len();
+            assert!(!batch.requests.is_empty(), "batcher emitted an empty batch");
+            total += batch.requests.len();
         }
         assert_eq!(total, 3);
     }
@@ -207,8 +282,8 @@ mod tests {
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(14), "must wait out the deadline");
-        assert_eq!(batch.len(), 5, "partial batch shipped at the deadline");
-        for (i, req) in batch.iter().enumerate() {
+        assert_eq!(batch.requests.len(), 5, "partial batch shipped at the deadline");
+        for (i, req) in batch.requests.iter().enumerate() {
             match &req.x {
                 RequestPayload::F32(v) => assert_eq!(v[0], i as f32, "order broken"),
                 _ => unreachable!(),
@@ -232,7 +307,7 @@ mod tests {
         drop(tx);
         let mut seen = Vec::new();
         while let Some(batch) = b.next_batch() {
-            for req in &batch {
+            for req in &batch.requests {
                 match &req.x {
                     RequestPayload::F32(v) => seen.push(v[0] as usize),
                     _ => unreachable!(),
@@ -252,8 +327,87 @@ mod tests {
         let (r, _keep) = req();
         tx.send(r).unwrap();
         let t0 = Instant::now();
-        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert_eq!(b.next_batch().unwrap().requests.len(), 1);
         // must NOT wait for the deadline when max_batch already reached
         assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn zero_wait_ships_exactly_the_opening_request() {
+        // ISSUE 3 backfill: the flush-deadline boundary. With max_wait = 0
+        // the deadline is the batch-open instant itself, so the `now >=
+        // deadline` check fires before any further recv — a second request
+        // already sitting in the channel at the deadline tick is NOT pulled
+        // into this batch; it opens the next one.
+        let (tx, rx) = mpsc::sync_channel(8);
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(0) },
+        );
+        let (r0, _k0) = tagged(0.0);
+        let (r1, _k1) = tagged(1.0);
+        tx.send(r0).unwrap();
+        tx.send(r1).unwrap();
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.requests.len(), 1, "deadline tick closes the batch");
+        match &first.requests[0].x {
+            RequestPayload::F32(v) => assert_eq!(v[0], 0.0),
+            _ => unreachable!(),
+        }
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.requests.len(), 1, "the boundary request opens the next batch");
+        match &second.requests[0].x {
+            RequestPayload::F32(v) => assert_eq!(v[0], 1.0),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn gateless_batcher_reports_unbounded_pressure() {
+        let (tx, rx) = mpsc::sync_channel(4);
+        let (r, _keep) = req();
+        tx.send(r).unwrap();
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(5) },
+        );
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.pressure.queued, 0);
+        assert_eq!(batch.pressure.capacity_limit, usize::MAX);
+        assert_eq!(batch.pressure.fill(), 0.0);
+    }
+
+    #[test]
+    fn gated_batcher_snapshots_queue_fill_at_close() {
+        let gate = Arc::new(Admission::new(8));
+        for _ in 0..4 {
+            gate.try_admit().unwrap();
+        }
+        let (tx, rx) = mpsc::sync_channel(8);
+        let mut keeps = Vec::new();
+        for _ in 0..4 {
+            let (r, keep) = req();
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        let mut b = Batcher::with_gate(
+            rx,
+            BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(50) },
+            gate.clone(),
+        );
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.pressure.queued, 4, "the batch's own slots still count");
+        assert_eq!(batch.pressure.capacity_limit, 8);
+        assert!((batch.pressure.fill() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intake_pressure_fill_edge_cases() {
+        assert_eq!(IntakePressure::unbounded().fill(), 0.0);
+        let p = IntakePressure { queued: 5, capacity_limit: 0, live_limit: 0 };
+        assert_eq!(p.fill(), 0.0, "zero capacity must not divide");
+        let over = IntakePressure { queued: 12, capacity_limit: 8, live_limit: 16 };
+        assert!((over.fill() - 1.5).abs() < 1e-12, "fill may exceed 1 under elision");
     }
 }

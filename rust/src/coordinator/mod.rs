@@ -29,10 +29,24 @@
 //! with the surviving fleet's capacity; past it, [`CoordinatorHandle::submit`]
 //! sheds with the typed [`Overloaded`] error instead of blocking, while
 //! admitted requests always run to completion.
+//!
+//! Load-adaptive replica elision (ISSUE 3): every batch the [`Batcher`]
+//! ships carries an [`IntakePressure`] snapshot; the leader folds it with
+//! the rolling p95 virtual latency into a
+//! [`FleetPressure`] reading for the [`ReplicaScheduler`], which walks the
+//! dispatch mode Full → Partial → Elided (primaries only) under sustained
+//! pressure and back as headroom returns — with hysteresis so the mode
+//! can't flap, and an instant per-member fallback that keeps standbys
+//! running for any member whose primary is Degraded or Dead. In Elided
+//! mode the standby compute not being spent is re-banked as admission
+//! budget (the live queue limit scales up by the saved GFLOPS share), so
+//! primaries-only serving admits strictly more load at equal capacity.
 
 pub mod batcher;
 pub mod health;
+pub mod scheduler;
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -49,8 +63,9 @@ use crate::runtime::engine::XBatch;
 use crate::runtime::manifest::DeploymentMeta;
 use crate::runtime::ExecHandle;
 use crate::Result;
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batch, Batcher, BatcherConfig, IntakePressure};
 pub use health::{DeviceHealth, HealthState};
+pub use scheduler::{FleetPressure, ReplicaMode, ReplicaScheduler};
 
 /// One inference request: a single sample.
 pub struct InferenceRequest {
@@ -124,10 +139,15 @@ impl std::error::Error for Overloaded {}
 /// Shared admission gate between handle clones (producers) and the leader
 /// (consumer): a queued-request counter against a live limit the leader
 /// re-derives from surviving-fleet capacity whenever a device dies.
-struct Admission {
+pub(crate) struct Admission {
     queued: AtomicUsize,
-    /// Live queue bound; `usize::MAX` = shedding disabled.
+    /// Live queue bound enforced on `try_admit` (capacity × elision
+    /// headroom); `usize::MAX` = shedding disabled.
     limit: AtomicUsize,
+    /// Capacity-derived bound (base depth × surviving-capacity share),
+    /// *before* elision scaling — the pressure signal's denominator, kept
+    /// separate so the control loop doesn't read its own actuator.
+    capacity: AtomicUsize,
     /// Requests rejected with [`Overloaded`] (folded into stats at shutdown).
     shed: AtomicUsize,
 }
@@ -137,7 +157,17 @@ impl Admission {
         Admission {
             queued: AtomicUsize::new(0),
             limit: AtomicUsize::new(limit),
+            capacity: AtomicUsize::new(limit),
             shed: AtomicUsize::new(0),
+        }
+    }
+
+    /// Point-in-time intake pressure (read by the batcher at batch close).
+    fn snapshot(&self) -> IntakePressure {
+        IntakePressure {
+            queued: self.queued.load(Ordering::SeqCst),
+            capacity_limit: self.capacity.load(Ordering::SeqCst),
+            live_limit: self.limit.load(Ordering::SeqCst),
         }
     }
 
@@ -336,6 +366,11 @@ impl Coordinator {
             config.replication.max_queue_depth,
             crate::config::ReplicationPolicy::MAX_QUEUE_DEPTH_CAP
         );
+        // a hand-built ElisionPolicy must satisfy the same invariants as a
+        // JSON-parsed one (inverted watermarks would flap the mode; enabled
+        // elision with no pressure signal would silently never engage)
+        config.replication.elision.validate()?;
+        config.replication.validate_elision_signals()?;
         let topo = config.topology();
         let members: Vec<MemberCtx> = deployment
             .members
@@ -448,8 +483,11 @@ impl Coordinator {
         let initial_limit = if base_queue == 0 { usize::MAX } else { base_queue };
         let admission = Arc::new(Admission::new(initial_limit));
         // the channel must never bound intake tighter than admission does
-        // (base_queue <= MAX_QUEUE_DEPTH_CAP was validated above)
-        let chan_cap = 1024usize.max(base_queue);
+        // (base_queue <= MAX_QUEUE_DEPTH_CAP was validated above); with
+        // elision enabled the live limit can scale up to base × replicas in
+        // primaries-only mode, so size the channel for that ceiling too
+        let chan_cap = 1024usize
+            .max(base_queue.saturating_mul(config.replication.replicas.max(1)));
         let (tx, rx) = mpsc::sync_channel::<LeaderMsg>(chan_cap);
         let batcher_cfg = BatcherConfig {
             max_batch: config.max_batch,
@@ -457,6 +495,8 @@ impl Coordinator {
         };
         let n_devices = devices.len();
         let central = topo.central;
+        let n_members = members.len();
+        let scheduler = ReplicaScheduler::new(config.replication.elision);
         let leader = Leader {
             exec,
             deployment,
@@ -473,6 +513,10 @@ impl Coordinator {
             batch_idx: 0,
             fault: FaultMetrics::default(),
             admission: admission.clone(),
+            scheduler,
+            promoted_at: vec![None; n_members],
+            recent_virtual_ms: VecDeque::new(),
+            intake_cap: chan_cap,
         };
         let join = std::thread::Builder::new()
             .name("coformer-leader".into())
@@ -520,17 +564,37 @@ struct Leader {
     central: usize,
     batch_idx: usize,
     fault: FaultMetrics,
-    /// Shared admission gate (limit refreshed on device death).
+    /// Shared admission gate (limit refreshed on device death and on
+    /// replica-mode transitions).
     admission: Arc<Admission>,
+    /// Load-adaptive standby gating (ISSUE 3).
+    scheduler: ReplicaScheduler,
+    /// member → batch index of its last warm-standby promotion (Partial
+    /// mode shadows recently promoted members while their re-placed
+    /// standby warms).
+    promoted_at: Vec<Option<usize>>,
+    /// Rolling window of per-batch virtual latencies (ms) feeding the
+    /// scheduler's p95 pressure signal.
+    recent_virtual_ms: VecDeque<f64>,
+    /// Intake-channel capacity: ceiling for any elision-scaled limit (the
+    /// channel must never block a caller admission has already accepted).
+    intake_cap: usize,
 }
+
+/// Batches of virtual latency kept for the p95 pressure signal.
+const RECENT_LATENCY_WINDOW: usize = 32;
 
 impl Leader {
     fn run(mut self, rx: mpsc::Receiver<LeaderMsg>, batcher_cfg: BatcherConfig) -> ServeStats {
         let mut stats = ServeStats::default();
-        let mut batcher = Batcher::new(rx, batcher_cfg);
-        while let Some(batch) = batcher.next_batch() {
+        let mut batcher = Batcher::with_gate(rx, batcher_cfg, self.admission.clone());
+        while let Some(Batch { requests: batch, pressure }) = batcher.next_batch() {
             let wall_start = std::time::Instant::now();
             let n = batch.len();
+            // the pressure observed at batch close picks this batch's
+            // replica mode (and re-derives the admission limit on a mode
+            // transition) before any work is dispatched
+            self.observe_pressure(pressure);
             let served = self.serve_batch(&batch);
             // Release the batch's queue slots BEFORE its replies go out: a
             // caller that has seen a reply must never still be counted
@@ -542,6 +606,7 @@ impl Leader {
                     stats.batches += 1;
                     stats.requests += n;
                     stats.total_energy_j += energy_j;
+                    self.note_virtual_latency(virtual_s);
                     let wall = wall_start.elapsed().as_secs_f64();
                     for _ in 0..n {
                         stats.virtual_latency.record_s(virtual_s);
@@ -564,6 +629,42 @@ impl Leader {
         stats
     }
 
+    /// Fold one batch's intake snapshot with the rolling latency window,
+    /// step the scheduler, and account the mode. (Device health acts per
+    /// member through the scheduler's fallback, not through this
+    /// fleet-wide signal.)
+    fn observe_pressure(&mut self, intake: IntakePressure) {
+        let pressure = FleetPressure {
+            queue_fill: intake.fill(),
+            p95_virtual_ms: self.recent_p95_ms(),
+        };
+        let mode = self.scheduler.observe(&pressure);
+        self.fault.mode_transitions = self.scheduler.transitions();
+        // re-derived every batch: the elision headroom depends on the mode
+        // AND on which primaries are currently unhealthy (their standbys
+        // keep running via the fallback, so their budget is not bankable)
+        self.refresh_admission();
+        match mode {
+            ReplicaMode::Full => self.fault.batches_full += 1,
+            ReplicaMode::Partial => self.fault.batches_partial += 1,
+            ReplicaMode::Elided => self.fault.batches_elided += 1,
+        }
+    }
+
+    fn note_virtual_latency(&mut self, virtual_s: f64) {
+        if self.recent_virtual_ms.len() == RECENT_LATENCY_WINDOW {
+            self.recent_virtual_ms.pop_front();
+        }
+        self.recent_virtual_ms.push_back(virtual_s * 1e3);
+    }
+
+    /// Nearest-rank p95 over the rolling latency window (0 until measured).
+    fn recent_p95_ms(&self) -> f64 {
+        let mut v: Vec<f64> = self.recent_virtual_ms.iter().copied().collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        crate::metrics::percentile_nearest_rank(&v, 95.0)
+    }
+
     /// Serve one batch through the fault-tolerant 3-phase workflow.
     fn serve_batch(
         &mut self,
@@ -575,9 +676,41 @@ impl Leader {
         self.batch_idx += 1;
         self.ensure_central_alive();
 
-        // Build per-device task lists from the current assignments: every
-        // live host of a member — primary and warm standbys alike — runs it
-        // this batch (Dead devices hold no assignments once promotion /
+        // Per-member standby gating (ISSUE 3): this batch's replica mode
+        // was set by `observe_pressure`; under Partial/Elided a member's
+        // standbys execute only when the scheduler says so — and always
+        // when its primary is Degraded or Dead (instant fallback). Elided
+        // standby compute is accounted as saved GFLOPS.
+        let shadow = self.config.replication.elision.shadow_promoted_batches;
+        let mut standbys_run = vec![true; self.members.len()];
+        let mut saved_gflops = 0.0f64;
+        let mut fallbacks = 0usize;
+        for m in 0..self.members.len() {
+            let hosts = &self.assignments[m];
+            if hosts.len() < 2 {
+                continue; // no standby to gate
+            }
+            let pstate = self.health[hosts[0]].state();
+            let recently_promoted =
+                self.promoted_at[m].is_some_and(|b| bidx.saturating_sub(b) < shadow);
+            let run = self.scheduler.standby_executes(pstate, recently_promoted);
+            standbys_run[m] = run;
+            if !run {
+                let live_standbys =
+                    hosts[1..].iter().filter(|&&w| self.worker_txs[w].is_some()).count();
+                saved_gflops += self.members[m].flops_per_sample * n as f64
+                    * live_standbys as f64
+                    / 1e9;
+            } else if self.scheduler.is_fallback(pstate) {
+                fallbacks += 1;
+            }
+        }
+        self.fault.standby_fallbacks += fallbacks;
+        self.fault.standby_gflops_saved += saved_gflops;
+
+        // Build per-device task lists from the current assignments: the
+        // primary always runs; standbys run when this batch's mode keeps
+        // them (Dead devices hold no assignments once promotion /
         // re-dispatch has run).
         let mut task_lists: Vec<Vec<MemberTask>> =
             (0..self.devices.len()).map(|_| Vec::new()).collect();
@@ -586,7 +719,10 @@ impl Leader {
         let primary: Vec<Option<usize>> =
             self.assignments.iter().map(|hosts| hosts.first().copied()).collect();
         for (m, ctx) in self.members.iter().enumerate() {
-            for &w in &self.assignments[m] {
+            for (hi, &w) in self.assignments[m].iter().enumerate() {
+                if hi > 0 && !standbys_run[m] {
+                    continue; // elided this batch
+                }
                 if self.worker_txs[w].is_some() {
                     task_lists[w].push(MemberTask {
                         member: m,
@@ -869,7 +1005,6 @@ impl Leader {
             return; // already retired
         }
         self.health[w].set_dead();
-        self.refresh_admission();
         let member_flops: Vec<f64> = self.members.iter().map(|c| c.flops_per_sample).collect();
         for m in 0..self.members.len() {
             if !self.assignments[m].contains(&w) {
@@ -888,8 +1023,11 @@ impl Leader {
                 }
             } else if was_primary {
                 // warm-standby promotion: the surviving replica is already
-                // serving this member — no re-dispatch, no warmup gap
+                // serving this member — no re-dispatch, no warmup gap. Under
+                // Partial mode the member stays shadowed for
+                // `shadow_promoted_batches` while its re-placed standby warms.
                 self.fault.promotions += 1;
+                self.promoted_at[m] = Some(self.batch_idx);
             }
             // restore the replication factor if a standby slot opened up
             // and a survivor has headroom for another copy
@@ -909,13 +1047,20 @@ impl Leader {
                 }
             }
         }
+        // after the assignment shuffle: the dead capacity shrinks the queue
+        // budget, and the post-promotion assignments refresh the elision
+        // headroom factor
+        self.refresh_admission();
     }
 
-    /// Re-derive the live admission limit from surviving-fleet capacity:
-    /// the configured full-fleet queue depth scaled by the alive share of
+    /// Re-derive the admission bounds. The *capacity* limit is the
+    /// configured full-fleet queue depth scaled by the alive share of
     /// total effective GFLOPS — a dead device takes its queue budget with
     /// it, so an oversubscribed survivor fleet sheds instead of queueing
-    /// unboundedly.
+    /// unboundedly. The *live* limit multiplies that by the elision
+    /// headroom: in primaries-only mode the standby compute not being
+    /// spent is re-banked as queue budget (capped by the intake channel),
+    /// which is exactly the availability → throughput trade of ISSUE 3.
     fn refresh_admission(&self) {
         let base = self.config.replication.max_queue_depth;
         if base == 0 {
@@ -927,8 +1072,43 @@ impl Leader {
             .map(|w| self.devices[w].effective_gflops())
             .sum();
         let share = if total > 0.0 { alive / total } else { 0.0 };
-        let limit = (base as f64 * share).ceil() as usize;
-        self.admission.limit.store(limit, Ordering::SeqCst);
+        let capacity = (base as f64 * share).ceil() as usize;
+        let live =
+            ((capacity as f64 * self.elision_headroom()).round() as usize).min(self.intake_cap);
+        self.admission.capacity.store(capacity, Ordering::SeqCst);
+        self.admission.limit.store(live, Ordering::SeqCst);
+    }
+
+    /// Dispatch-compute headroom factor in [1, replicas]: full replicated
+    /// FLOPS over the FLOPS actually planned under elision. A member whose
+    /// primary is not Healthy contributes no savings — its standbys keep
+    /// running via the fallback — so a degrading fleet's admission credit
+    /// shrinks with the compute it is really still spending. 1 outside
+    /// Elided mode (Partial still shadows on demand, so its savings are
+    /// not bankable ahead of time).
+    fn elision_headroom(&self) -> f64 {
+        if !self.config.replication.elision.enabled
+            || self.scheduler.mode() != ReplicaMode::Elided
+        {
+            return 1.0;
+        }
+        let mut full = 0.0f64;
+        let mut planned = 0.0f64;
+        for (m, hosts) in self.assignments.iter().enumerate() {
+            let live = hosts.iter().filter(|&&w| self.worker_txs[w].is_some()).count();
+            if live == 0 {
+                continue;
+            }
+            let f = self.members[m].flops_per_sample;
+            let fallback = self.health[hosts[0]].state() != HealthState::Healthy;
+            full += f * live as f64;
+            planned += if fallback { f * live as f64 } else { f };
+        }
+        if planned > 0.0 {
+            (full / planned).max(1.0)
+        } else {
+            1.0
+        }
     }
 
     /// The live device with the smallest predicted per-sample compute load
@@ -1143,6 +1323,20 @@ mod tests {
         assert!(a.try_admit().is_ok());
         assert_eq!(a.shed.load(Ordering::SeqCst), 1);
         assert_eq!(a.queued.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn admission_snapshot_tracks_capacity_and_live_limit() {
+        let a = Admission::new(8);
+        let s0 = a.snapshot();
+        assert_eq!((s0.queued, s0.capacity_limit, s0.live_limit), (0, 8, 8));
+        a.try_admit().unwrap();
+        // elision scales only the live limit; the fill denominator stays
+        // the capacity limit so the control signal ignores its actuator
+        a.limit.store(16, Ordering::SeqCst);
+        let s = a.snapshot();
+        assert_eq!((s.queued, s.capacity_limit, s.live_limit), (1, 8, 16));
+        assert!((s.fill() - 0.125).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Load-adaptive replica elision (ISSUE 3): per-batch, per-member decisions
+//! about whether warm standbys actually execute.
+//!
+//! PR 2's replication layer runs every standby on every batch — full
+//! redundant compute even when the fleet is saturated and every primary is
+//! healthy. Galaxy (arXiv 2405.17245) shows edge collaborative serving wins
+//! come from workload-aware scheduling of the parallel units, and DeViT
+//! (arXiv 2309.05015) shows decomposed-model ensembles tolerate members
+//! being dropped; together they justify spending standby compute only when
+//! it buys availability. The [`ReplicaScheduler`] consumes one
+//! [`FleetPressure`] reading per batch (admission-queue fill from the
+//! batcher, recent p95 virtual latency) and walks a three-mode ladder:
+//!
+//! * **Full** — every standby runs every batch (ISSUE 2 dispatch).
+//! * **Partial** — standbys shadow only members that need cover: a primary
+//!   that is Degraded, or a member promoted so recently its re-placed
+//!   standby is still warming.
+//! * **Elided** — primaries only; the whole standby budget is banked as
+//!   throughput (the admission limit scales up by the saved compute).
+//!
+//! Transitions move one step at a time and only after
+//! [`ElisionPolicy::hold_batches`] consecutive same-direction pressure
+//! readings, so a fill level oscillating around a watermark cannot flap the
+//! mode. One rule overrides every mode: a member whose primary is Degraded
+//! or Dead keeps its standbys running — availability falls back instantly,
+//! elision never costs a masking opportunity that is already needed.
+
+use crate::config::ElisionPolicy;
+
+use super::health::HealthState;
+
+/// Per-batch replica dispatch mode (ordered by aggressiveness).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ReplicaMode {
+    /// Every standby executes (full redundancy, ISSUE 2 behavior).
+    Full,
+    /// Standbys execute only for members needing cover (degraded primary
+    /// or recent promotion).
+    Partial,
+    /// Primaries only; standbys are elided unless a member's primary is
+    /// unhealthy (instant per-member fallback).
+    Elided,
+}
+
+/// One batch's fleet-pressure reading, assembled by the leader from the
+/// batcher's intake snapshot and the rolling latency window. Device health
+/// deliberately does NOT enter this fleet-wide signal: it acts per member,
+/// through [`ReplicaScheduler::standby_executes`]'s instant fallback —
+/// which is both more precise (only the affected member pays for cover)
+/// and immune to the mode's hysteresis delay.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetPressure {
+    /// Admitted-but-unreleased requests over the capacity-derived queue
+    /// limit (the pre-elision-scaling denominator, so the control signal
+    /// is independent of its own actuator). 0 when shedding is disabled.
+    pub queue_fill: f64,
+    /// p95 of recent per-batch virtual latencies, ms (0 until measured).
+    pub p95_virtual_ms: f64,
+}
+
+/// Direction a pressure reading pushes the mode ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Reading {
+    High,
+    Low,
+    Hold,
+}
+
+/// Hysteretic mode controller + per-member standby gate.
+#[derive(Clone, Debug)]
+pub struct ReplicaScheduler {
+    policy: ElisionPolicy,
+    mode: ReplicaMode,
+    high_streak: usize,
+    low_streak: usize,
+    transitions: usize,
+}
+
+impl ReplicaScheduler {
+    /// Starts in [`ReplicaMode::Full`] — the safe mode — and only sheds
+    /// standby work once pressure is actually observed.
+    pub fn new(policy: ElisionPolicy) -> Self {
+        ReplicaScheduler {
+            policy,
+            mode: ReplicaMode::Full,
+            high_streak: 0,
+            low_streak: 0,
+            transitions: 0,
+        }
+    }
+
+    pub fn mode(&self) -> ReplicaMode {
+        self.mode
+    }
+
+    /// Mode changes since start (flap metric; surfaced in `FaultMetrics`).
+    pub fn transitions(&self) -> usize {
+        self.transitions
+    }
+
+    fn classify(&self, p: &FleetPressure) -> Reading {
+        let lat_gate = self.policy.p95_high_ms > 0.0;
+        let lat_high = lat_gate && p.p95_virtual_ms >= self.policy.p95_high_ms;
+        if p.queue_fill >= self.policy.high_watermark || lat_high {
+            Reading::High
+        } else if p.queue_fill <= self.policy.low_watermark
+            && (!lat_gate || p.p95_virtual_ms < self.policy.p95_high_ms)
+        {
+            Reading::Low
+        } else {
+            Reading::Hold
+        }
+    }
+
+    /// Consume one batch's pressure reading and return the mode the batch
+    /// should dispatch with. High readings step Full → Partial → Elided,
+    /// low readings step back; each step requires `hold_batches`
+    /// consecutive same-direction readings and resets both streaks, so the
+    /// mode moves at most once per `hold_batches` batches and a reading
+    /// sequence oscillating inside the watermark band never moves it.
+    pub fn observe(&mut self, p: &FleetPressure) -> ReplicaMode {
+        if !self.policy.enabled {
+            return self.mode; // Full forever; observe() is a no-op
+        }
+        match self.classify(p) {
+            Reading::High => {
+                self.high_streak += 1;
+                self.low_streak = 0;
+                if self.high_streak >= self.policy.hold_batches {
+                    let next = match self.mode {
+                        ReplicaMode::Full => ReplicaMode::Partial,
+                        ReplicaMode::Partial | ReplicaMode::Elided => ReplicaMode::Elided,
+                    };
+                    self.step_to(next);
+                }
+            }
+            Reading::Low => {
+                self.low_streak += 1;
+                self.high_streak = 0;
+                if self.low_streak >= self.policy.hold_batches {
+                    let next = match self.mode {
+                        ReplicaMode::Elided => ReplicaMode::Partial,
+                        ReplicaMode::Partial | ReplicaMode::Full => ReplicaMode::Full,
+                    };
+                    self.step_to(next);
+                }
+            }
+            Reading::Hold => {
+                self.high_streak = 0;
+                self.low_streak = 0;
+            }
+        }
+        self.mode
+    }
+
+    fn step_to(&mut self, next: ReplicaMode) {
+        self.high_streak = 0;
+        self.low_streak = 0;
+        if next != self.mode {
+            self.mode = next;
+            self.transitions += 1;
+        }
+    }
+
+    /// Whether a member's standbys execute this batch. The unhealthy-primary
+    /// fallback overrides every mode: elision never withholds a standby
+    /// that is currently needed for masking.
+    pub fn standby_executes(&self, primary: HealthState, recently_promoted: bool) -> bool {
+        if !self.policy.enabled {
+            return true;
+        }
+        match self.mode {
+            ReplicaMode::Full => true,
+            _ if primary != HealthState::Healthy => true, // instant fallback
+            ReplicaMode::Partial => recently_promoted,
+            ReplicaMode::Elided => false,
+        }
+    }
+
+    /// True when `standby_executes` would return true *only* because of the
+    /// unhealthy-primary fallback (metrics: these are the saves elision
+    /// explicitly refused to trade away).
+    pub fn is_fallback(&self, primary: HealthState) -> bool {
+        self.policy.enabled
+            && self.mode != ReplicaMode::Full
+            && primary != HealthState::Healthy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(hold: usize) -> ElisionPolicy {
+        ElisionPolicy {
+            enabled: true,
+            high_watermark: 0.75,
+            low_watermark: 0.25,
+            p95_high_ms: 0.0,
+            hold_batches: hold,
+            shadow_promoted_batches: 2,
+        }
+    }
+
+    fn high() -> FleetPressure {
+        FleetPressure { queue_fill: 0.9, ..FleetPressure::default() }
+    }
+
+    fn low() -> FleetPressure {
+        FleetPressure { queue_fill: 0.1, ..FleetPressure::default() }
+    }
+
+    fn mid() -> FleetPressure {
+        FleetPressure { queue_fill: 0.5, ..FleetPressure::default() }
+    }
+
+    #[test]
+    fn disabled_policy_never_leaves_full_and_never_elides() {
+        let mut s = ReplicaScheduler::new(ElisionPolicy::default());
+        for _ in 0..10 {
+            assert_eq!(s.observe(&high()), ReplicaMode::Full);
+        }
+        assert_eq!(s.transitions(), 0);
+        assert!(s.standby_executes(HealthState::Healthy, false));
+    }
+
+    #[test]
+    fn ladder_steps_one_mode_per_hold_window() {
+        let mut s = ReplicaScheduler::new(policy(2));
+        assert_eq!(s.observe(&high()), ReplicaMode::Full); // 1 of 2
+        assert_eq!(s.observe(&high()), ReplicaMode::Partial); // step
+        assert_eq!(s.observe(&high()), ReplicaMode::Partial); // 1 of 2
+        assert_eq!(s.observe(&high()), ReplicaMode::Elided); // step
+        assert_eq!(s.observe(&high()), ReplicaMode::Elided); // saturated
+        assert_eq!(s.observe(&low()), ReplicaMode::Elided); // 1 of 2
+        assert_eq!(s.observe(&low()), ReplicaMode::Partial);
+        assert_eq!(s.observe(&low()), ReplicaMode::Partial);
+        assert_eq!(s.observe(&low()), ReplicaMode::Full);
+        assert_eq!(s.transitions(), 4);
+    }
+
+    #[test]
+    fn alternating_readings_never_flap_the_mode() {
+        // oscillation around the band with hold = 2: every direction switch
+        // resets the opposing streak, so the mode never moves
+        let mut s = ReplicaScheduler::new(policy(2));
+        for _ in 0..20 {
+            assert_eq!(s.observe(&high()), ReplicaMode::Full);
+            assert_eq!(s.observe(&low()), ReplicaMode::Full);
+        }
+        assert_eq!(s.transitions(), 0);
+    }
+
+    #[test]
+    fn in_band_readings_hold_the_mode_and_reset_streaks() {
+        let mut s = ReplicaScheduler::new(policy(2));
+        s.observe(&high());
+        s.observe(&high()); // → Partial
+        assert_eq!(s.mode(), ReplicaMode::Partial);
+        for _ in 0..10 {
+            assert_eq!(s.observe(&mid()), ReplicaMode::Partial);
+        }
+        // a single high after the quiet spell is not enough to step again
+        assert_eq!(s.observe(&high()), ReplicaMode::Partial);
+        assert_eq!(s.observe(&high()), ReplicaMode::Elided);
+    }
+
+    #[test]
+    fn latency_signal_alone_reads_high() {
+        let mut p = policy(1);
+        p.p95_high_ms = 50.0;
+        let mut s = ReplicaScheduler::new(p);
+        let slow = FleetPressure { queue_fill: 0.0, p95_virtual_ms: 60.0 };
+        assert_eq!(s.observe(&slow), ReplicaMode::Partial);
+        // low fill but still-slow p95 is NOT a low reading (no step back)
+        let drained = FleetPressure { queue_fill: 0.0, p95_virtual_ms: 55.0 };
+        s.observe(&slow); // → Elided
+        assert_eq!(s.observe(&drained), ReplicaMode::Elided);
+        let recovered = FleetPressure { queue_fill: 0.0, p95_virtual_ms: 10.0 };
+        assert_eq!(s.observe(&recovered), ReplicaMode::Partial);
+    }
+
+    #[test]
+    fn unhealthy_primary_always_keeps_standbys() {
+        let mut s = ReplicaScheduler::new(policy(1));
+        s.observe(&high());
+        s.observe(&high());
+        assert_eq!(s.mode(), ReplicaMode::Elided);
+        assert!(!s.standby_executes(HealthState::Healthy, false));
+        assert!(s.standby_executes(HealthState::Degraded, false));
+        assert!(s.standby_executes(HealthState::Dead, false));
+        assert!(s.is_fallback(HealthState::Degraded));
+        assert!(!s.is_fallback(HealthState::Healthy));
+    }
+
+    #[test]
+    fn partial_mode_shadows_only_promoted_or_unhealthy_members() {
+        let mut s = ReplicaScheduler::new(policy(1));
+        s.observe(&high());
+        assert_eq!(s.mode(), ReplicaMode::Partial);
+        assert!(!s.standby_executes(HealthState::Healthy, false));
+        assert!(s.standby_executes(HealthState::Healthy, true));
+        assert!(s.standby_executes(HealthState::Degraded, false));
+    }
+}

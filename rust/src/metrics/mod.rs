@@ -47,13 +47,9 @@ impl LatencyStats {
 
     /// Percentile by nearest-rank (p in [0, 100]).
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.samples_ms.is_empty() {
-            return 0.0;
-        }
         let mut v = self.samples_ms.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
-        v[rank.min(v.len()) - 1]
+        percentile_nearest_rank(&v, p)
     }
 
     pub fn p50_ms(&self) -> f64 {
@@ -72,6 +68,18 @@ impl LatencyStats {
         }
         self.count() as f64 / total_s
     }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (p in [0, 100];
+/// empty input reports 0.0, never NaN). The single rank formula shared by
+/// [`LatencyStats::percentile_ms`] and the coordinator's rolling p95
+/// pressure signal, so the two can never disagree on rank arithmetic.
+pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
 }
 
 /// Fault-tolerance counters for the serving coordinator: deadline misses,
@@ -107,6 +115,26 @@ pub struct FaultMetrics {
     /// Requests shed at admission with the typed `Overloaded` error
     /// (folded in from the admission gate at shutdown).
     pub shed: usize,
+    /// Replica-mode changes made by the elision scheduler (Full ↔ Partial
+    /// ↔ Elided). With hysteresis working this stays small; a large count
+    /// relative to batches means the watermark band is too narrow.
+    pub mode_transitions: usize,
+    /// Batches dispatched with every standby running (Full mode — also
+    /// every batch when elision is disabled).
+    pub batches_full: usize,
+    /// Batches dispatched in Partial mode (standbys shadow only degraded /
+    /// recently promoted members).
+    pub batches_partial: usize,
+    /// Batches dispatched primaries-only (Elided mode; per-member
+    /// unhealthy-primary fallbacks may still run individual standbys).
+    pub batches_elided: usize,
+    /// Standby compute skipped by elision, in GFLOPs (flops-per-sample ×
+    /// batch rows, summed over every standby copy not dispatched).
+    pub standby_gflops_saved: f64,
+    /// Members whose standbys ran under Partial/Elided *only* because the
+    /// unhealthy-primary fallback overrode the mode (one count per member
+    /// per batch) — the masking capacity elision refused to trade away.
+    pub standby_fallbacks: usize,
     /// `quorum_hist[k]` = batches aggregated from exactly `k` members.
     quorum_hist: Vec<usize>,
 }
@@ -401,5 +429,60 @@ mod tests {
         assert_eq!(f.promotions, 0);
         assert_eq!(f.replicas_placed, 0);
         assert_eq!(f.shed, 0);
+        assert_eq!(f.mode_transitions, 0);
+        assert_eq!(f.batches_full, 0);
+        assert_eq!(f.batches_partial, 0);
+        assert_eq!(f.batches_elided, 0);
+        assert_eq!(f.standby_gflops_saved, 0.0);
+        assert_eq!(f.standby_fallbacks, 0);
+    }
+
+    #[test]
+    fn degraded_batches_boundary_at_k_equals_fleet() {
+        // ISSUE 3 backfill: `degraded_batches(fleet)` counts strictly
+        // k < fleet — a full-arity batch is NOT degraded, a k = fleet − 1
+        // batch is, and a super-quorum entry (k > fleet after a host adopts
+        // extra members) never leaks into the degraded count.
+        let fleet = 4;
+        let mut f = FaultMetrics::default();
+        f.record_quorum(fleet);
+        assert_eq!(f.degraded_batches(fleet), 0, "k == fleet is full strength");
+        assert_eq!(f.batches_at_quorum(fleet), 1);
+        f.record_quorum(fleet - 1);
+        assert_eq!(f.degraded_batches(fleet), 1);
+        f.record_quorum(0);
+        assert_eq!(f.degraded_batches(fleet), 2, "k = 0 still counts as degraded");
+        // a fleet larger than any recorded quorum must not panic or
+        // overcount (the take() is clamped to the histogram length)
+        assert_eq!(f.degraded_batches(100), 3);
+        assert_eq!(f.batches_at_quorum(100), 0);
+    }
+
+    #[test]
+    fn batches_at_quorum_off_by_one_neighbors() {
+        let mut f = FaultMetrics::default();
+        f.record_quorum(3);
+        f.record_quorum(3);
+        assert_eq!(f.batches_at_quorum(2), 0);
+        assert_eq!(f.batches_at_quorum(3), 2);
+        assert_eq!(f.batches_at_quorum(4), 0);
+        // fleet == recorded k: both neighbors of the boundary agree
+        assert_eq!(f.degraded_batches(3), 0);
+        assert_eq!(f.degraded_batches(4), 2);
+    }
+
+    #[test]
+    fn percentile_edge_cases_never_panic_or_nan() {
+        let empty = LatencyStats::new();
+        for p in [0.0, 50.0, 100.0] {
+            let v = empty.percentile_ms(p);
+            assert!(v.is_finite());
+            assert_eq!(v, 0.0);
+        }
+        let mut one = LatencyStats::new();
+        one.record_ms(7.0);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(one.percentile_ms(p), 7.0, "single sample at p={p}");
+        }
     }
 }

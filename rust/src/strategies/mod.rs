@@ -159,6 +159,9 @@ pub fn coformer_degraded(
 /// the simulator scores the coordinator's replicated serving mode against
 /// [`coformer_degraded`]'s accuracy-losing k-of-n fallback: same fleet,
 /// same faults, full-width Eq. 2 input instead of a renormalized subset.
+///
+/// Exactly [`coformer_elastic`] with standbys elided (one live copy per
+/// member) — delegated so every scoring path shares one timeline model.
 #[allow(clippy::too_many_arguments)]
 pub fn coformer_replicated(
     profiles: &[DeviceProfile],
@@ -170,15 +173,71 @@ pub fn coformer_replicated(
     replicas: usize,
     min_quorum: usize,
 ) -> Result<DegradedOutcome, SimError> {
+    let el = coformer_elastic(
+        profiles, topo, archs, d_i, batch, alive, replicas, min_quorum, true,
+    )?;
+    let mut outcome = el.outcome;
+    outcome.name = "coformer-replicated".into();
+    Ok(DegradedOutcome { outcome, quorum: el.quorum, central: el.central })
+}
+
+/// Outcome of an elastic-replication CoFormer simulation (ISSUE 3).
+#[derive(Clone, Debug)]
+pub struct ElasticOutcome {
+    pub outcome: StrategyOutcome,
+    /// Distinct members that contributed features (k of n).
+    pub quorum: usize,
+    /// Device that hosted aggregation (falls back off a dead central node).
+    pub central: usize,
+    /// Member copies executed this inference (n when elided on a healthy
+    /// fleet; up to n × replicas when fully replicated).
+    pub copies_run: usize,
+    /// Standby compute skipped vs always-replicate, GFLOPs (0 when not
+    /// eliding).
+    pub standby_gflops_saved: f64,
+}
+
+/// CoFormer aggregate-edge under the elastic replication policy (ISSUE 3):
+/// member `i`'s hosts are the alive devices in its ring window of
+/// `replicas` hops. With `elide_standbys = false` (always-replicate, the
+/// coordinator's Full mode) **every** live copy runs — redundant compute
+/// and feature transfers on every host, latency gated by the slowest
+/// device's full task list, which is exactly how the real leader waits on
+/// worker replies. With `elide_standbys = true` (primaries-only, Elided
+/// mode) only the first live copy runs — the primary, or the promoted
+/// standby when the primary is dead — saving the standby GFLOPS reported
+/// in [`ElasticOutcome::standby_gflops_saved`]. Scoring the two against
+/// [`coformer_degraded`] (no replicas at all) quantifies the
+/// availability/throughput trade the serving coordinator makes per batch.
+#[allow(clippy::too_many_arguments)]
+pub fn coformer_elastic(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    archs: &[Arch],
+    d_i: usize,
+    batch: usize,
+    alive: &[bool],
+    replicas: usize,
+    min_quorum: usize,
+    elide_standbys: bool,
+) -> Result<ElasticOutcome, SimError> {
     assert_eq!(profiles.len(), archs.len());
     assert_eq!(profiles.len(), alive.len());
     assert!(replicas >= 1, "replicas must be >= 1");
     let n = profiles.len();
-    // member → host device: the primary, else the ring standby
-    let host: Vec<Option<usize>> = (0..n)
-        .map(|m| (0..replicas).map(|h| (m + h) % n).find(|&w| alive[w]))
+    // member → live hosts in ring order (primary first); elided keeps only
+    // the first — the same first-arrival slot the coordinator promotes into
+    let hosts: Vec<Vec<usize>> = (0..n)
+        .map(|m| {
+            let ring = (0..replicas).map(|h| (m + h) % n).filter(|&w| alive[w]);
+            if elide_standbys {
+                ring.take(1).collect()
+            } else {
+                ring.collect()
+            }
+        })
         .collect();
-    let quorum = host.iter().filter(|h| h.is_some()).count();
+    let quorum = hosts.iter().filter(|h| !h.is_empty()).count();
     let need = min_quorum.max(1);
     if quorum < need {
         return Err(SimError::QuorumNotMet { have: quorum, need });
@@ -191,10 +250,10 @@ pub fn coformer_replicated(
     };
     let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
     let mut mems = vec![0usize; n];
-    // memory admission: a host loads every member it covers (replication's
+    // memory admission: a host loads every copy it runs (replication's
     // memory tax — an adopting device can OOM exactly like Fig. 9)
-    for (m, h) in host.iter().enumerate() {
-        if let Some(w) = *h {
+    for (m, hs) in hosts.iter().enumerate() {
+        for &w in hs {
             let bytes = CostModel::memory_bytes(&archs[m], batch);
             devs[w].load_model(bytes)?;
             mems[w] += bytes;
@@ -207,7 +266,7 @@ pub fn coformer_replicated(
             continue; // dead devices contribute nothing (zeroed timeline)
         }
         for m in 0..n {
-            if host[m] != Some(w) {
+            if !hosts[m].contains(&w) {
                 continue;
             }
             devs[w].compute(CostModel::flops_per_sample(&archs[m]) * batch as f64);
@@ -222,7 +281,8 @@ pub fn coformer_replicated(
         slowest = slowest.max(devs[w].now());
     }
     devs[central].wait_until(slowest);
-    let d_agg: usize = (0..n).filter(|&m| host[m].is_some()).map(|m| archs[m].dim).sum();
+    let d_agg: usize =
+        (0..n).filter(|&m| !hosts[m].is_empty()).map(|m| archs[m].dim).sum();
     let rows = archs[central].groups;
     let agg_t =
         devs[central].compute(CostModel::aggregation_flops(d_agg, d_i, rows) * batch as f64);
@@ -232,12 +292,28 @@ pub fn coformer_replicated(
             d.wait_until(total);
         }
     }
-    let mut out = finish(devs, "coformer-replicated", total, &mems, 1);
+    let name = if elide_standbys { "coformer-elastic-elided" } else { "coformer-elastic-full" };
+    let mut out = finish(devs, name, total, &mems, 1);
     for (w, t) in transmit.iter().enumerate() {
         out.devices[w].transmit_s = *t;
         out.devices[w].compute_s -= *t;
     }
-    Ok(DegradedOutcome { outcome: out, quorum, central })
+    let copies_run = hosts.iter().map(|h| h.len()).sum();
+    let standby_gflops_saved = if elide_standbys {
+        (0..n)
+            .map(|m| {
+                let ring_alive =
+                    (0..replicas).map(|h| (m + h) % n).filter(|&w| alive[w]).count();
+                CostModel::flops_per_sample(&archs[m])
+                    * batch as f64
+                    * ring_alive.saturating_sub(1) as f64
+                    / 1e9
+            })
+            .sum()
+    } else {
+        0.0
+    };
+    Ok(ElasticOutcome { outcome: out, quorum, central, copies_run, standby_gflops_saved })
 }
 
 /// One pipeline segment: compute + activation payload to the next stage.
@@ -591,6 +667,103 @@ mod tests {
             &[false, false, true],
             2,
             3,
+        )
+        .unwrap_err();
+        assert_eq!(err, SimError::QuorumNotMet { have: 2, need: 3 });
+    }
+
+    #[test]
+    fn elastic_elided_healthy_fleet_matches_coformer() {
+        // primaries-only on a healthy fleet is exactly the aggregate-edge
+        // timeline: elision costs nothing when nothing is being masked
+        let full = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        let el = coformer_elastic(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &[true, true, true],
+            2,
+            1,
+            true,
+        )
+        .unwrap();
+        assert_eq!(el.quorum, 3);
+        assert_eq!(el.copies_run, 3);
+        assert!((el.outcome.total_s - full.total_s).abs() < 1e-15);
+        assert!(el.standby_gflops_saved > 0.0, "the skipped standbys are accounted");
+    }
+
+    #[test]
+    fn always_replicate_pays_latency_and_energy_for_redundancy() {
+        // Full mode runs 2 copies of every member: more busy time on every
+        // host, a later slowest-device gate, more energy — the cost the
+        // elastic scheduler recovers under pressure
+        let alive = [true, true, true];
+        let el = coformer_elastic(
+            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, true,
+        )
+        .unwrap();
+        let rep = coformer_elastic(
+            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, false,
+        )
+        .unwrap();
+        assert_eq!(rep.copies_run, 6, "every live ring copy executes");
+        assert_eq!(rep.quorum, 3, "redundancy adds copies, not arity");
+        assert_eq!(rep.standby_gflops_saved, 0.0);
+        assert!(rep.outcome.total_s > el.outcome.total_s, "redundant compute gates later");
+        assert!(rep.outcome.total_energy_j() > el.outcome.total_energy_j());
+    }
+
+    #[test]
+    fn elastic_elided_death_promotes_ring_standby() {
+        // kill device 0 under primaries-only: member 0 runs on its ring
+        // standby (device 1) — availability survives elision
+        let alive = [false, true, true];
+        let el = coformer_elastic(
+            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, true,
+        )
+        .unwrap();
+        assert_eq!(el.quorum, 3, "the promoted standby keeps full arity");
+        assert_eq!(el.copies_run, 3);
+        assert_eq!(el.outcome.devices[0].compute_s, 0.0, "dead stays zeroed");
+        // ... while the no-replica baseline loses the member
+        let deg = coformer_degraded(&fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 1)
+            .unwrap();
+        assert_eq!(deg.quorum, 2);
+    }
+
+    #[test]
+    fn elastic_matches_replicated_scoring_path() {
+        // coformer_replicated is the elided elastic timeline by delegation;
+        // the two paths must agree exactly (they share one model)
+        let alive = [false, true, true];
+        let rep = coformer_replicated(
+            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1,
+        )
+        .unwrap();
+        let el = coformer_elastic(
+            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, true,
+        )
+        .unwrap();
+        assert_eq!(rep.quorum, el.quorum);
+        assert_eq!(rep.central, el.central);
+        assert!((rep.outcome.total_s - el.outcome.total_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn elastic_below_quorum_errors() {
+        let err = coformer_elastic(
+            &fleet(),
+            &topo(100.0),
+            &sub_archs(),
+            64,
+            1,
+            &[false, false, true],
+            2,
+            3,
+            false,
         )
         .unwrap_err();
         assert_eq!(err, SimError::QuorumNotMet { have: 2, need: 3 });

@@ -1,0 +1,378 @@
+//! Deterministic load-scenario tests for load-adaptive replica elision
+//! (ISSUE 3), driven by the same stub backend + `FaultScript` harness as
+//! `integration_faults.rs` / `integration_replication.rs`.
+//!
+//! Determinism: each "round" submits a known number of requests against a
+//! known admission limit and drains every reply before the next round, so
+//! the queue fill the batcher snapshots at batch close is exact — a round
+//! of `max_batch` requests closes its batch on the final arrival with all
+//! of its slots still admitted (fill = max_batch / capacity), and a round
+//! of one request closes at the wait deadline with fill = 1 / capacity.
+//! Pressure readings, mode transitions, elided standby compute and the
+//! scaled admission limit are therefore all exactly predictable.
+//!
+//! Acceptance criteria exercised here:
+//! * a saturating load ramp walks the fleet Full → Partial → Elided
+//!   (primaries only), and a drain walks it back — with hysteresis, and
+//!   with the saved standby GFLOPS accounted exactly;
+//! * primaries-only mode admits strictly more load (lower shed count) than
+//!   always-replicate at equal configured capacity;
+//! * a scripted primary crash during elision still aggregates at
+//!   `min_quorum` with zero dropped batches, and the member is re-covered
+//!   within one batch by warm-standby promotion;
+//! * a degraded (not dead) primary instantly re-enables its standby under
+//!   elision (the per-member fallback).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use coformer::config::{
+    DeviceSpec, ElisionPolicy, FaultPolicy, ReplicationPolicy, SystemConfig,
+};
+use coformer::coordinator::{
+    Coordinator, CoordinatorHandle, InferenceResponse, Overloaded, RequestPayload,
+};
+use coformer::device::FaultScript;
+use coformer::model::{Arch, CostModel, Mode};
+use coformer::runtime::manifest::DeploymentMeta;
+use coformer::runtime::{ExecServer, StubSpec};
+
+const FLEET: usize = 4;
+const CLASSES: usize = 4;
+
+fn arch() -> Arch {
+    Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, CLASSES)
+}
+
+fn x_stride() -> usize {
+    let a = arch();
+    a.tokens() * a.patch_dim() // 16 × 48
+}
+
+/// Start a 4-device coordinator (nano, tx2, orin-nano, rpi; central = tx2)
+/// over the stub backend with the given scripts and policies.
+fn start(
+    scripts: Vec<FaultScript>,
+    fault: FaultPolicy,
+    replication: ReplicationPolicy,
+    max_batch: usize,
+    max_wait_ms: u64,
+) -> (ExecServer, Coordinator) {
+    let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), arch())).collect(),
+        classes: CLASSES,
+    };
+    let server = ExecServer::start_stub(spec).unwrap();
+    let dep = DeploymentMeta {
+        task: "stub".into(),
+        members,
+        aggregators: HashMap::new(),
+    };
+    let mut config = SystemConfig::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device
+    config.deployment = "stub_4dev".into();
+    config.aggregator = "average".into();
+    config.max_batch = max_batch;
+    config.max_wait_ms = max_wait_ms;
+    config.fault = fault;
+    config.replication = replication;
+    let archs = vec![arch(); FLEET];
+    let coord = Coordinator::start_with_faults(
+        config,
+        server.handle(),
+        dep,
+        archs,
+        x_stride(),
+        scripts,
+    )
+    .unwrap();
+    (server, coord)
+}
+
+fn no_fault_scripts() -> Vec<FaultScript> {
+    (0..FLEET).map(|_| FaultScript::none()).collect()
+}
+
+/// The elastic policy under test: queue-only control (p95 gate off) so the
+/// pressure sequence is exactly the submitted load.
+fn elastic(high: f64, low: f64, hold: usize, shadow: usize) -> ElisionPolicy {
+    ElisionPolicy {
+        enabled: true,
+        high_watermark: high,
+        low_watermark: low,
+        p95_high_ms: 0.0,
+        hold_batches: hold,
+        shadow_promoted_batches: shadow,
+    }
+}
+
+/// Submit `n` labeled requests pipelined (all admitted before any reply),
+/// then drain every reply in order. One round == one deterministic
+/// pressure reading == one batch when `n <= max_batch`.
+fn round(handle: &CoordinatorHandle, n: usize) -> Vec<InferenceResponse> {
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let label = i % CLASSES;
+            let rx = handle
+                .submit(RequestPayload::F32(vec![label as f32; x_stride()]))
+                .expect("round submits stay within the admission limit");
+            (label, rx)
+        })
+        .collect();
+    rxs.into_iter()
+        .map(|(label, rx)| {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("reply must arrive")
+                .expect("round batches must serve");
+            assert_eq!(resp.prediction, label, "aggregation must stay correct");
+            resp
+        })
+        .collect()
+}
+
+#[test]
+fn load_ramp_elides_standbys_then_restores_them_after_drain() {
+    // queue 8, rounds of 4 → fill 0.5 ≥ high 0.5 (saturation reading);
+    // rounds of 1 → fill 0.125 ≤ low 0.3 (drain reading). hold = 1, so the
+    // mode steps once per reading: Partial, Elided, (hold), Partial, Full.
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let replication = ReplicationPolicy {
+        replicas: 2,
+        max_queue_depth: 8,
+        elision: elastic(0.5, 0.3, 1, 0),
+    };
+    let (server, coord) = start(no_fault_scripts(), fault, replication, 4, 100);
+    let handle = coord.handle();
+    assert_eq!(handle.admission_state().1, 8, "full fleet, Full mode: base limit");
+
+    for _ in 0..3 {
+        // saturation: r1 → Partial, r2 → Elided, r3 stays Elided
+        for r in round(&handle, 4) {
+            assert_eq!(r.quorum, FLEET, "healthy primaries keep full arity while elided");
+        }
+    }
+    // primaries-only banks the standby budget: limit = 8 × (2n/n) = 16
+    assert_eq!(
+        handle.admission_state().1,
+        16,
+        "Elided mode re-banks saved standby GFLOPS as admission budget"
+    );
+    for _ in 0..3 {
+        // drain: r4 → Partial, r5 → Full, r6 stays Full
+        round(&handle, 1);
+    }
+    assert_eq!(handle.admission_state().1, 8, "Full mode returns to the base limit");
+
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.batches, 6);
+    assert_eq!(stats.requests, 15);
+    assert_eq!(stats.fault.quorum_failures, 0);
+    assert_eq!(stats.fault.degraded_batches(FLEET), 0);
+    // exact mode ledger: Partial (r1), Elided (r2, r3), Partial (r4),
+    // Full (r5, r6) — hysteresis means exactly 4 transitions, no flapping
+    assert_eq!(stats.fault.batches_partial, 2);
+    assert_eq!(stats.fault.batches_elided, 2);
+    assert_eq!(stats.fault.batches_full, 2);
+    assert_eq!(stats.fault.mode_transitions, 4);
+    // saved standby compute is exact: 4 members × 1 live standby, skipped
+    // for the 4 non-Full batches (rows 4, 4, 4 and 1)
+    let expected_gflops =
+        CostModel::flops_per_sample(&arch()) * FLEET as f64 * (4 + 4 + 4 + 1) as f64 / 1e9;
+    assert!(
+        (stats.fault.standby_gflops_saved - expected_gflops).abs() < 1e-9,
+        "saved {} vs expected {expected_gflops}",
+        stats.fault.standby_gflops_saved
+    );
+    assert_eq!(stats.fault.standby_fallbacks, 0, "no unhealthy primary, no fallback");
+}
+
+#[test]
+fn hysteresis_holds_mode_through_alternating_load() {
+    // hold = 2 with strictly alternating saturation/drain readings: neither
+    // streak ever reaches the hold, so the mode must never leave Full —
+    // flapping load cannot flap the dispatch.
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let replication = ReplicationPolicy {
+        replicas: 2,
+        max_queue_depth: 8,
+        elision: elastic(0.5, 0.3, 2, 0),
+    };
+    let (server, coord) = start(no_fault_scripts(), fault, replication, 4, 100);
+    let handle = coord.handle();
+    for _ in 0..4 {
+        round(&handle, 4); // high reading
+        round(&handle, 1); // low reading
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.batches, 8);
+    assert_eq!(stats.fault.mode_transitions, 0, "alternating load must not flap");
+    assert_eq!(stats.fault.batches_full, 8);
+    assert_eq!(stats.fault.batches_elided, 0);
+    assert_eq!(stats.fault.standby_gflops_saved, 0.0, "Full mode elides nothing");
+}
+
+#[test]
+fn primary_crash_during_elision_meets_min_quorum_and_recovers_in_one_batch() {
+    // Drive the fleet into primaries-only mode, then kill member 2's
+    // primary (device 2) mid-stream. The crash batch runs at exactly
+    // k = min_quorum = 3 — no batch errors, nothing dropped — and the warm
+    // standby is promoted inside `mark_dead`, so the very next batch serves
+    // the member again at full 4-of-4 arity (fallback within one batch).
+    let mut scripts = no_fault_scripts();
+    scripts[2] = FaultScript::crash_at(2); // r3 is batch index 2
+    let fault = FaultPolicy { min_quorum: 3, ..FaultPolicy::default() };
+    let replication = ReplicationPolicy {
+        replicas: 2,
+        max_queue_depth: 8,
+        elision: elastic(0.5, 0.1, 1, 2),
+    };
+    let (server, coord) = start(scripts, fault, replication, 4, 100);
+    let handle = coord.handle();
+
+    round(&handle, 4); // r1: → Partial
+    round(&handle, 4); // r2: → Elided
+    let crash_batch = round(&handle, 4); // r3: Elided + primary crash
+    for r in &crash_batch {
+        assert_eq!(
+            r.quorum, 3,
+            "the elided member's slot is empty in the crash batch: exactly min_quorum"
+        );
+    }
+    let after = round(&handle, 4); // r4: promoted standby serves as primary
+    for r in &after {
+        assert_eq!(r.quorum, FLEET, "promotion re-covers the member within one batch");
+    }
+
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.batches, 4);
+    assert_eq!(stats.fault.crashes, 1);
+    assert_eq!(stats.fault.quorum_failures, 0, "zero dropped batches across the crash");
+    assert_eq!(stats.fault.promotions, 1, "warm standby promoted, not cold re-dispatched");
+    assert_eq!(stats.fault.redispatches, 0);
+    assert_eq!(stats.fault.batches_at_quorum(3), 1);
+    assert_eq!(stats.fault.batches_at_quorum(FLEET), 3);
+    assert_eq!(stats.fault.degraded_batches(FLEET), 1, "only the crash batch ran short");
+    assert!(stats.fault.batches_elided >= 2, "the crash really happened under elision");
+}
+
+#[test]
+fn degraded_primary_reenables_its_standby_instantly_under_elision() {
+    // A straggling (not dead) primary: device 3 stalls 5 virtual seconds in
+    // r3, missing its deadline and walking to Degraded. In r4 — still in
+    // Elided mode — the per-member fallback must dispatch member 3's
+    // standby again even though the fleet-wide mode says primaries-only.
+    let mut scripts = no_fault_scripts();
+    scripts[3] = FaultScript::stall_at(2, 5.0); // r3 is batch index 2
+    let fault = FaultPolicy {
+        min_quorum: 2,
+        degraded_after: 1,
+        dead_after: 10,
+        recover_after: 2,
+        ..FaultPolicy::default()
+    };
+    let replication = ReplicationPolicy {
+        replicas: 2,
+        max_queue_depth: 8,
+        elision: elastic(0.5, 0.1, 1, 0),
+    };
+    let (server, coord) = start(scripts, fault, replication, 4, 100);
+    let handle = coord.handle();
+
+    round(&handle, 4); // r1: → Partial
+    round(&handle, 4); // r2: → Elided
+    let stalled = round(&handle, 4); // r3: straggler excluded, k = 3
+    for r in &stalled {
+        assert_eq!(r.quorum, 3, "the stalled primary's member is missing this batch");
+    }
+    let covered = round(&handle, 4); // r4: fallback re-runs the standby
+    for r in &covered {
+        assert_eq!(r.quorum, FLEET, "degraded member covered again at full arity");
+    }
+
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.fault.timeouts, 1);
+    assert_eq!(stats.fault.harvested_late, 1);
+    assert_eq!(stats.fault.crashes, 0);
+    assert!(
+        stats.fault.standby_fallbacks >= 1,
+        "the unhealthy-primary fallback must override primaries-only mode"
+    );
+    assert_eq!(stats.fault.quorum_failures, 0);
+}
+
+#[test]
+fn elision_sheds_strictly_less_than_always_replicate_at_equal_capacity() {
+    // The ISSUE 3 acceptance criterion. Identical fleet, identical
+    // configured queue depth (8), identical workload: two saturation
+    // rounds, then a burst of 24 submitted before any batch can close
+    // (max_batch 64 ≫ burst, 300 ms coalesce window). Always-replicate
+    // holds the base limit of 8 → sheds 16 of 24; elastic is in
+    // primaries-only mode by the burst with the saved standby compute
+    // re-banked (limit 16) → sheds only 8. Strictly more admitted
+    // throughput, zero dropped batches in both runs.
+    let run = |elision: ElisionPolicy| -> (usize, usize, coformer::coordinator::ServeStats) {
+        let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+        let replication =
+            ReplicationPolicy { replicas: 2, max_queue_depth: 8, elision };
+        let (server, coord) = start(no_fault_scripts(), fault, replication, 64, 300);
+        let handle = coord.handle();
+        round(&handle, 4); // saturation reading 1 (fill 0.5)
+        round(&handle, 4); // saturation reading 2
+        let limit = handle.admission_state().1;
+
+        let mut admitted = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..24usize {
+            let label = i % CLASSES;
+            match handle.submit(RequestPayload::F32(vec![label as f32; x_stride()])) {
+                Ok(rx) => admitted.push((label, rx)),
+                Err(e) => {
+                    e.downcast_ref::<Overloaded>()
+                        .expect("shed must carry the typed Overloaded error");
+                    shed += 1;
+                }
+            }
+        }
+        for (label, rx) in admitted {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("admitted request must resolve")
+                .expect("admitted request must succeed");
+            assert_eq!(resp.prediction, label);
+        }
+        let stats = coord.shutdown().unwrap();
+        drop(server);
+        (limit, shed, stats)
+    };
+
+    let (limit_rep, shed_rep, stats_rep) = run(ElisionPolicy::default()); // disabled
+    let (limit_eli, shed_eli, stats_eli) = run(elastic(0.5, 0.1, 1, 0));
+
+    assert_eq!(limit_rep, 8, "always-replicate keeps the capacity-derived limit");
+    assert_eq!(limit_eli, 16, "primaries-only banks the standby budget");
+    assert_eq!(shed_rep, 16);
+    assert_eq!(shed_eli, 8);
+    assert!(
+        shed_eli < shed_rep,
+        "elision must shed strictly less at equal configured capacity"
+    );
+    assert_eq!(stats_rep.fault.shed, 16);
+    assert_eq!(stats_eli.fault.shed, 8);
+    assert!(
+        stats_eli.requests > stats_rep.requests,
+        "strictly higher admitted throughput: {} vs {}",
+        stats_eli.requests,
+        stats_rep.requests
+    );
+    assert_eq!(stats_rep.fault.quorum_failures, 0);
+    assert_eq!(stats_eli.fault.quorum_failures, 0);
+    assert!(stats_eli.fault.batches_elided >= 1);
+    assert_eq!(stats_rep.fault.batches_elided, 0);
+    assert!(stats_eli.fault.standby_gflops_saved > stats_rep.fault.standby_gflops_saved);
+}

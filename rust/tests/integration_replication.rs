@@ -175,7 +175,8 @@ fn oversubscribed_fleet_sheds_typed_overloaded_and_completes_in_flight() {
     // the rest with a typed, downcastable Overloaded error — while the 4
     // admitted requests still complete correctly.
     let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
-    let replication = ReplicationPolicy { replicas: 1, max_queue_depth: 4 };
+    let replication =
+        ReplicationPolicy { replicas: 1, max_queue_depth: 4, ..ReplicationPolicy::default() };
     let (server, coord) = start(no_fault_scripts(), fault, replication, 64, 400);
     let handle = coord.handle();
     let (_, limit) = handle.admission_state();
@@ -226,7 +227,8 @@ fn admission_limit_shrinks_with_surviving_capacity() {
     let mut scripts = no_fault_scripts();
     scripts[2] = FaultScript::crash_at(0);
     let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
-    let replication = ReplicationPolicy { replicas: 1, max_queue_depth: 100 };
+    let replication =
+        ReplicationPolicy { replicas: 1, max_queue_depth: 100, ..ReplicationPolicy::default() };
     let (server, coord) = start(scripts, fault, replication, 4, 2);
     let handle = coord.handle();
     assert_eq!(handle.admission_state().1, 100);

@@ -5,9 +5,12 @@
 //! cases; failures print the offending seed.
 
 use coformer::aggregation;
+use coformer::config::ElisionPolicy;
+use coformer::coordinator::{FleetPressure, HealthState, ReplicaMode, ReplicaScheduler};
 use coformer::debo::linalg::{cholesky, cholesky_solve, Matrix};
 use coformer::debo::{expected_improvement, Gp, Matern32};
 use coformer::device::{DeviceProfile, SimDevice};
+use coformer::metrics::LatencyStats;
 use coformer::model::{policy::DeviceCaps, Arch, CostModel, DecompositionPolicy, Mode, SubModelCfg};
 use coformer::net::{Link, Topology};
 use coformer::strategies;
@@ -451,6 +454,136 @@ fn prop_bandwidth_monotonicity_all_strategies() {
             .total_s
         };
         assert!(run_tp(bw_hi) <= run_tp(bw_lo) + 1e-12);
+    });
+}
+
+// -------------------------------------------------------------- scheduler
+
+fn random_elision(rng: &mut Rng) -> ElisionPolicy {
+    let low = rng.gen_f64() * 0.5;
+    ElisionPolicy {
+        enabled: rng.gen_f64() < 0.8,
+        high_watermark: low + 0.05 + rng.gen_f64() * 0.5,
+        low_watermark: low,
+        p95_high_ms: if rng.gen_f64() < 0.5 { 0.0 } else { rng.gen_f64() * 100.0 },
+        hold_batches: rng.gen_range(1, 5),
+        shadow_promoted_batches: rng.gen_range(0, 5),
+    }
+}
+
+fn random_pressure(rng: &mut Rng) -> FleetPressure {
+    FleetPressure {
+        queue_fill: rng.gen_f64() * 1.6,
+        p95_virtual_ms: rng.gen_f64() * 150.0,
+    }
+}
+
+#[test]
+fn prop_scheduler_never_elides_unhealthy_primary_and_bounds_copies() {
+    // ISSUE 3 invariants, over arbitrary pressure sequences:
+    // 1. a member whose primary is not Healthy always keeps its standbys
+    //    (the fallback overrides every mode);
+    // 2. the copies a member executes per batch stay within [1, replicas];
+    // 3. a disabled policy is pinned to Full and elides nothing.
+    forall(300, 5000, |rng| {
+        let policy = random_elision(rng);
+        policy.validate().expect("generated policies are well-formed");
+        let mut s = ReplicaScheduler::new(policy);
+        let replicas = rng.gen_range(1, 5);
+        for _ in 0..rng.gen_range(1, 50) {
+            s.observe(&random_pressure(rng));
+            assert!(s.standby_executes(HealthState::Degraded, false));
+            assert!(s.standby_executes(HealthState::Dead, rng.gen_f64() < 0.5));
+            for assigned in 1..=replicas {
+                let state = match rng.gen_range(0, 3) {
+                    0 => HealthState::Healthy,
+                    1 => HealthState::Degraded,
+                    _ => HealthState::Dead,
+                };
+                let promoted = rng.gen_f64() < 0.5;
+                let standbys = assigned - 1;
+                let copies =
+                    1 + if s.standby_executes(state, promoted) { standbys } else { 0 };
+                assert!(
+                    (1..=replicas).contains(&copies),
+                    "copies {copies} out of [1, {replicas}]"
+                );
+                if state != HealthState::Healthy {
+                    assert_eq!(
+                        copies,
+                        assigned,
+                        "an unhealthy primary must keep every assigned standby"
+                    );
+                }
+            }
+            if !policy.enabled {
+                assert_eq!(s.mode(), ReplicaMode::Full);
+                assert!(s.standby_executes(HealthState::Healthy, false));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_transitions_bounded_by_hold() {
+    // Hysteresis: each mode step consumes `hold_batches` consecutive
+    // same-direction readings and resets both streaks, so over T readings
+    // there can be at most T / hold_batches transitions — a flap-frequency
+    // ceiling that holds for every pressure sequence.
+    forall(300, 5200, |rng| {
+        let policy = random_elision(rng);
+        let mut s = ReplicaScheduler::new(policy);
+        let t = rng.gen_range(1, 80);
+        for _ in 0..t {
+            let mode = s.observe(&random_pressure(rng));
+            assert_eq!(mode, s.mode());
+        }
+        assert!(
+            s.transitions() <= t / policy.hold_batches,
+            "{} transitions in {t} readings with hold {}",
+            s.transitions(),
+            policy.hold_batches
+        );
+    });
+}
+
+// --------------------------------------------------------------- metrics
+
+#[test]
+fn prop_latency_percentile_total_and_sample_valued() {
+    // percentile_ms must be total on its whole domain: any sample count
+    // (including empty), any p in [0, 100] — never a panic, never NaN, and
+    // with data it always returns one of the recorded samples.
+    forall(400, 5400, |rng| {
+        let n = rng.gen_range(0, 12);
+        let mut s = LatencyStats::new();
+        let mut vals = Vec::new();
+        for _ in 0..n {
+            let v = rng.gen_f64() * 1e3;
+            s.record_ms(v);
+            vals.push(v);
+        }
+        let ps = [0.0, 100.0, rng.gen_f64() * 100.0, rng.gen_f64() * 100.0];
+        for p in ps {
+            let q = s.percentile_ms(p);
+            assert!(q.is_finite(), "percentile({p}) of {n} samples not finite: {q}");
+            if vals.is_empty() {
+                assert_eq!(q, 0.0, "empty stats report zero, not NaN");
+            } else {
+                assert!(
+                    vals.iter().any(|v| (*v - q).abs() < 1e-12),
+                    "percentile({p}) = {q} is not an observed sample"
+                );
+            }
+        }
+        if n == 1 {
+            assert_eq!(s.percentile_ms(0.0), vals[0]);
+            assert_eq!(s.percentile_ms(100.0), vals[0]);
+        }
+        if !vals.is_empty() {
+            // monotone in p
+            assert!(s.percentile_ms(100.0) >= s.percentile_ms(0.0));
+        }
     });
 }
 
