@@ -9,12 +9,13 @@
 //! ```
 
 use coformer::config::{ElisionPolicy, FaultPolicy, ReplicationPolicy, SystemConfig};
-use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
+use coformer::coordinator::{serve_all, RequestPayload, ServeBuilder};
 use coformer::data::Dataset;
 use coformer::device::DeviceProfile;
 use coformer::model::{Arch, CostModel};
 use coformer::runtime::ExecServer;
-use coformer::strategies;
+use coformer::strategies::registry::{CoFormer, SingleEdge};
+use coformer::strategies::{DispatchMode, Scenario, Strategy, Sweep};
 use coformer::Result;
 
 fn main() -> Result<()> {
@@ -40,10 +41,10 @@ fn main() -> Result<()> {
     for member in &dep.members {
         exec.warmup(member)?;
     }
-    let mut config = SystemConfig::paper_default();
+    // ServeBuilder (ISSUE 4): the positional start() pair replaced by
+    // fluent setters; validation runs through SystemConfig::validate().
     // Fault policy: tolerate one straggler/death (2-of-3 quorum), 3× virtual
     // deadlines, hot re-dispatch of a dead device's sub-model.
-    config.fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
     // Replication + admission control: one warm standby per member (a
     // primary death costs no aggregation arity while the replacement
     // warms), shedding past 1024 queued requests with a typed Overloaded
@@ -52,12 +53,20 @@ fn main() -> Result<()> {
     // fleet drops to primaries-only and re-banks the saved standby compute
     // as admission budget, restoring full replication when headroom
     // returns (unhealthy-primary members always keep their standbys).
-    config.replication = ReplicationPolicy {
+    let coord = ServeBuilder::new(
+        SystemConfig::paper_default(),
+        exec,
+        dep.clone(),
+        archs,
+        ds.x_stride(),
+    )
+    .fault(FaultPolicy { min_quorum: 2, ..FaultPolicy::default() })
+    .replication(ReplicationPolicy {
         replicas: 2,
         elision: ElisionPolicy { enabled: true, ..ElisionPolicy::default() },
         ..ReplicationPolicy::default()
-    };
-    let coord = Coordinator::start(config, exec, dep.clone(), archs, ds.x_stride())?;
+    })
+    .start()?;
     let handle = coord.handle();
 
     // --- serve the split --------------------------------------------------
@@ -125,7 +134,7 @@ fn main() -> Result<()> {
     let teacher = m.model(&task.teacher)?;
     let tx2 = DeviceProfile::jetson_tx2();
     let mean_batch = (stats.requests as f64 / stats.batches.max(1) as f64).round() as usize;
-    let t_out = strategies::single_edge(
+    let t_out = SingleEdge::standalone(
         &tx2,
         CostModel::flops_per_sample(&teacher.arch) * mean_batch as f64,
         CostModel::memory_bytes(&teacher.arch, mean_batch),
@@ -134,7 +143,7 @@ fn main() -> Result<()> {
     println!(
         "teacher: accuracy {:.4}, latency {:.2} ms/batch, energy {:.2} mJ",
         teacher.accuracy_solo,
-        t_out.total_s * 1e3,
+        t_out.total_s() * 1e3,
         t_out.total_energy_j() * 1e3
     );
     println!(
@@ -146,7 +155,7 @@ fn main() -> Result<()> {
          the paper-scale latency story (DeiT-B, 17.6 GFLOPs) is reproduced by\n\
          `cargo run --release --bin paper -- fig12`:"
     );
-    // paper-scale projection with the same fleet/topology
+    // paper-scale projection with the same fleet/topology, as a Scenario
     let mut deit = coformer::model::Arch::uniform(
         coformer::model::Mode::Patch, 12, 768, 64, 12, 3072, 1000);
     deit.img_size = 224;
@@ -159,30 +168,38 @@ fn main() -> Result<()> {
                 .to_arch(&deit)
         })
         .collect();
-    let devs = DeviceProfile::paper_fleet();
-    let topo = coformer::net::Topology::star(3, coformer::net::Link::mbps(100.0), 1);
-    let cof = strategies::coformer(&devs, &topo, &subs, 512, 1)?;
-    let single = strategies::single_edge(&tx2, CostModel::flops_per_sample(&deit), 3 << 30)?;
+    let paper_scale = Scenario::builder()
+        .fleet(DeviceProfile::paper_fleet())
+        .topology(coformer::net::Topology::star(3, coformer::net::Link::mbps(100.0), 1))
+        .archs(subs)
+        .d_i(512)
+        .replicas(2)
+        .min_quorum(2)
+        .build()?;
+    let cof = CoFormer.run(&paper_scale)?;
+    let single = SingleEdge::standalone(&tx2, CostModel::flops_per_sample(&deit), 3 << 30)?;
     println!(
         "paper-scale: DeiT-B on TX2 {:.1} ms vs CoFormer 3-dev {:.1} ms → {:.2}x speedup",
-        single.total_s * 1e3,
-        cof.total_s * 1e3,
-        single.total_s / cof.total_s
+        single.total_s() * 1e3,
+        cof.total_s() * 1e3,
+        single.total_s() / cof.total_s()
     );
     // the elastic availability/throughput trade at the same paper scale:
-    // what the coordinator's per-batch mode decision is choosing between
-    let alive = [true, true, true];
-    let rep = strategies::coformer_elastic(&devs, &topo, &subs, 512, 1, &alive, 2, 2, false)?;
-    let eli = strategies::coformer_elastic(&devs, &topo, &subs, 512, 1, &alive, 2, 2, true)?;
+    // what the coordinator's per-batch mode decision is choosing between —
+    // one sweep over the dispatch-mode axis (ISSUE 4)
+    let points = Sweep::new(paper_scale)
+        .dispatch_modes(&[DispatchMode::Full, DispatchMode::Elided])
+        .run_named(&["coformer_elastic"])?;
+    let (rep, eli) = (&points[0].outcome, &points[1].outcome);
     println!(
         "elastic trade (healthy fleet): always-replicate {:.1} ms / {:.1} mJ vs \
          primaries-only {:.1} ms / {:.1} mJ ({:.1} standby GFLOPs saved per inference; \
          run `cargo run --release --bin paper -- elastic` for the fault scenarios)",
-        rep.outcome.total_s * 1e3,
-        rep.outcome.total_energy_j() * 1e3,
-        eli.outcome.total_s * 1e3,
-        eli.outcome.total_energy_j() * 1e3,
-        eli.standby_gflops_saved
+        rep.total_s() * 1e3,
+        rep.total_energy_j() * 1e3,
+        eli.total_s() * 1e3,
+        eli.total_energy_j() * 1e3,
+        eli.replication.expect("coformer-family outcome").standby_gflops_saved
     );
     Ok(())
 }

@@ -4,7 +4,7 @@
 
 use coformer::aggregation;
 use coformer::config::SystemConfig;
-use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
+use coformer::coordinator::{serve_all, RequestPayload, ServeBuilder};
 use coformer::data::Dataset;
 use coformer::metrics::bench::{bench, black_box};
 use coformer::model::Arch;
@@ -46,7 +46,8 @@ fn main() {
         exec.warmup(member).unwrap();
     }
     let coord =
-        Coordinator::start(SystemConfig::paper_default(), exec, dep, archs, ds.x_stride())
+        ServeBuilder::new(SystemConfig::paper_default(), exec, dep, archs, ds.x_stride())
+            .start()
             .expect("coordinator");
     let handle = coord.handle();
 

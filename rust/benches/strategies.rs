@@ -1,12 +1,14 @@
 //! Strategy-simulation benches: one per paper table/figure family. These
 //! are the generators behind Figs 3/4/10/12 and Tables III/V — each bench
-//! measures regenerating one full figure's data points.
+//! measures regenerating one full figure's data points, through the
+//! Scenario/registry API the figures themselves use.
 
 use coformer::device::DeviceProfile;
 use coformer::metrics::bench::{bench, black_box};
 use coformer::model::{Arch, CostModel, Mode, SubModelCfg};
 use coformer::net::{Link, Topology};
-use coformer::strategies::{self, Segment};
+use coformer::strategies::registry::{CoFormer, Ensemble, PipeEdge, TensorParallel};
+use coformer::strategies::{Scenario, Segment, Strategy, Sweep};
 
 fn deit_b() -> Arch {
     let mut a = Arch::uniform(Mode::Patch, 12, 768, 64, 12, 3072, 1000);
@@ -28,11 +30,18 @@ fn main() {
     println!("== bench: strategies (figure generators) ==");
     let fleet = DeviceProfile::paper_fleet();
     let topo = Topology::star(3, Link::mbps(100.0), 1);
-    let s = subs();
     let t_flops = CostModel::flops_per_sample(&deit_b());
+    let sc = Scenario::builder()
+        .fleet(fleet)
+        .topology(topo)
+        .archs(subs())
+        .d_i(512)
+        .batch(1)
+        .build()
+        .expect("bench scenario is valid");
 
     bench("coformer_step (fig9/10/12 rows)", 10, 1000, || {
-        black_box(strategies::coformer(&fleet, &topo, &s, 512, 1).unwrap().total_s);
+        black_box(CoFormer.run(&sc).unwrap().total_s());
     });
 
     let seg = |l: f64| Segment {
@@ -40,71 +49,38 @@ fn main() {
         activation_bytes: 197 * 768 * 4,
         memory_bytes: 1 << 28,
     };
+    let pipe = PipeEdge::with_segments(vec![seg(3.0), seg(3.0), seg(6.0)]);
     bench("pipe_edge (fig3 row)", 10, 1000, || {
-        black_box(
-            strategies::pipe_edge(&fleet, &topo, &[seg(3.0), seg(3.0), seg(6.0)])
-                .unwrap()
-                .idle_fraction(),
-        );
+        black_box(pipe.run(&sc).unwrap().idle_fraction());
     });
 
+    let galaxy = TensorParallel {
+        label: "galaxy".into(),
+        syncs_per_layer: 2.0,
+        total_flops: Some(t_flops),
+        layers: Some(12),
+        shard_bytes: Some(197 * 768 * 4 / 3),
+        memory_per_device: Some(1 << 28),
+    };
     bench("tensor_parallel 12 layers (fig4/10)", 10, 500, || {
-        black_box(
-            strategies::tensor_parallel(
-                "galaxy",
-                &fleet,
-                &topo,
-                t_flops,
-                12,
-                197 * 768 * 4 / 3,
-                2.0,
-                1 << 28,
-            )
-            .unwrap()
-            .total_s,
-        );
+        black_box(galaxy.run(&sc).unwrap().total_s());
     });
 
+    let devit = Ensemble {
+        label: "devit".into(),
+        member_flops: Some(vec![t_flops / 3.0; 3]),
+        member_memory: Some(vec![1 << 28; 3]),
+        logit_bytes: Some(4000),
+    };
     bench("ensemble (fig6)", 10, 1000, || {
-        black_box(
-            strategies::ensemble(
-                "devit",
-                &fleet,
-                &topo,
-                &[t_flops / 3.0; 3],
-                &[1 << 28; 3],
-                4000,
-            )
-            .unwrap()
-            .total_s,
-        );
+        black_box(devit.run(&sc).unwrap().total_s());
     });
 
-    // full Fig-12 sweep (3 bandwidths × 4 methods)
+    // full Fig-12 sweep (3 bandwidths × 3 methods) through the sweep runner
+    let methods: [&dyn Strategy; 3] = [&CoFormer, &galaxy, &pipe];
+    let sweep = Sweep::new(sc.clone()).bandwidths_mbps(&[100.0, 500.0, 1000.0]);
     bench("fig12_full_sweep", 2, 100, || {
-        for mbps in [100.0, 500.0, 1000.0] {
-            let topo = Topology::star(3, Link::mbps(mbps), 1);
-            black_box(strategies::coformer(&fleet, &topo, &s, 512, 1).unwrap().total_s);
-            black_box(
-                strategies::tensor_parallel(
-                    "g",
-                    &fleet,
-                    &topo,
-                    t_flops,
-                    12,
-                    197 * 768 * 4 / 3,
-                    2.0,
-                    1 << 28,
-                )
-                .unwrap()
-                .total_s,
-            );
-            black_box(
-                strategies::pipe_edge(&fleet, &topo, &[seg(3.0), seg(3.0), seg(6.0)])
-                    .unwrap()
-                    .total_s,
-            );
-        }
+        black_box(sweep.run(&methods).unwrap().len());
     });
 
     // cost-model analytics (called inside every policy evaluation)

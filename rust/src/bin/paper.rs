@@ -27,7 +27,10 @@ use coformer::net::{Link, Topology};
 use coformer::predictor::{collect_dataset, LatencyPredictor};
 use coformer::runtime::engine::XBatch;
 use coformer::runtime::Engine;
-use coformer::strategies::{self, Segment};
+use coformer::strategies::registry::{
+    CoFormer, CoFormerDegraded, Ensemble, PipeEdge, SingleEdge, TensorParallel,
+};
+use coformer::strategies::{DispatchMode, Outcome, Scenario, Segment, Strategy, Sweep};
 use coformer::Result;
 
 // ---------------------------------------------------------------------------
@@ -69,8 +72,21 @@ fn gflops(a: &Arch) -> f64 {
 
 const D_I_PAPER: usize = 512;
 
-fn coformer_outcome(mbps: f64) -> strategies::StrategyOutcome {
-    strategies::coformer(&fleet(), &topo(mbps), &deit_subs(), D_I_PAPER, 1).unwrap()
+/// The paper's 3-Jetson DeiT-B scenario at `mbps` — the base every
+/// simulation figure runs strategies (or sweeps) against.
+fn paper_scenario(mbps: f64) -> Scenario {
+    Scenario::builder()
+        .fleet(fleet())
+        .topology(topo(mbps))
+        .archs(deit_subs())
+        .d_i(D_I_PAPER)
+        .batch(1)
+        .build()
+        .expect("the paper fleet scenario is valid")
+}
+
+fn coformer_outcome(mbps: f64) -> Outcome {
+    CoFormer.run(&paper_scenario(mbps)).unwrap()
 }
 
 fn ms(x: f64) -> String {
@@ -118,9 +134,9 @@ fn fig1() -> Result<()> {
         .filter(|m| ["Swin-L", "ViT-L/16", "DeiT-B"].contains(&m.name))
         .chain(catalog::efficient_models().iter())
     {
-        let out = strategies::single_edge(&tx2, m.gflops * 1e9, (m.memory_gb * 1e9) as usize);
+        let out = SingleEdge::standalone(&tx2, m.gflops * 1e9, (m.memory_gb * 1e9) as usize);
         let lat = match &out {
-            Ok(o) => ms(o.total_s),
+            Ok(o) => ms(o.total_s()),
             Err(_) => "OOM".into(),
         };
         rows.push(vec![m.name.to_string(), lat, format!("{:.2}% (paper-quoted)", m.accuracy)]);
@@ -130,13 +146,13 @@ fn fig1() -> Result<()> {
     let swin_t = tx2.compute_time_s(swin.gflops * 1e9);
     rows.push(vec![
         "CoFormer (3-dev, DeiT-decomposed)".into(),
-        ms(cof.total_s),
+        ms(cof.total_s()),
         "teacher − ~2% (measured shape, see EXPERIMENTS)".into(),
     ]);
     println!("{}", render_table(&["model", "latency", "top-1"], &rows));
     println!(
         "headline: CoFormer vs Swin-L speedup = {:.2}x (paper: 3.1x)\n",
-        swin_t / cof.total_s
+        swin_t / cof.total_s()
     );
     Ok(())
 }
@@ -152,9 +168,10 @@ fn fig3() -> Result<()> {
         activation_bytes: act_bytes,
         memory_bytes: 1 << 28,
     };
-    let out = strategies::pipe_edge(&fleet(), &topo(100.0), &[seg(3.0), seg(3.0), seg(6.0)])?;
+    let out = PipeEdge::with_segments(vec![seg(3.0), seg(3.0), seg(6.0)])
+        .run(&paper_scenario(100.0))?;
     let mut rows = Vec::new();
-    for (i, d) in out.devices.iter().enumerate() {
+    for (i, d) in out.core.devices.iter().enumerate() {
         rows.push(vec![
             fleet()[i].name.clone(),
             ms(d.compute_s),
@@ -165,7 +182,7 @@ fn fig3() -> Result<()> {
     println!("{}", render_table(&["device", "compute", "transmit", "idle"], &rows));
     println!(
         "total {}; idle fraction = {:.1}% (paper: >70%)\n",
-        ms(out.total_s),
+        ms(out.total_s()),
         out.idle_fraction() * 100.0
     );
     Ok(())
@@ -176,25 +193,25 @@ fn fig4() -> Result<()> {
     println!("== Fig 4: distri-edge (tensor-parallel) breakdown at 2 Mb/s ==");
     let t = deit_b();
     let shard = 197 * 768 * 4 / 3;
+    let sc = paper_scenario(2.0);
     let mut rows = Vec::new();
     for (name, syncs) in
         [("Galaxy-style (2 syncs/layer)", 2.0), ("DeepThings-style (1 sync/layer)", 1.0)]
     {
-        let out = strategies::tensor_parallel(
-            name,
-            &fleet(),
-            &topo(2.0),
-            CostModel::flops_per_sample(&t),
-            12,
-            shard,
-            syncs,
-            1 << 28,
-        )?;
+        let out = TensorParallel {
+            label: name.into(),
+            syncs_per_layer: syncs,
+            total_flops: Some(CostModel::flops_per_sample(&t)),
+            layers: Some(12),
+            shard_bytes: Some(shard),
+            memory_per_device: Some(1 << 28),
+        }
+        .run(&sc)?;
         rows.push(vec![
             name.to_string(),
-            ms(out.total_s),
+            ms(out.total_s()),
             format!("{:.1}%", out.transmit_fraction() * 100.0),
-            format!("{}", out.comm_rounds),
+            format!("{}", out.core.comm_rounds),
         ]);
     }
     println!(
@@ -307,11 +324,17 @@ fn fig6(engine: &Engine, _artifacts: &PathBuf) -> Result<()> {
         .collect::<Result<_>>()?;
     let flops: Vec<f64> = archs.iter().map(CostModel::flops_per_sample).collect();
     let mems: Vec<usize> = archs.iter().map(|a| CostModel::memory_bytes(a, 1)).collect();
-    let out = strategies::ensemble("ens", &fleet(), &topo(100.0), &flops, &mems, classes * 4)?;
+    let out = Ensemble {
+        label: "ens".into(),
+        member_flops: Some(flops),
+        member_memory: Some(mems),
+        logit_bytes: Some(classes * 4),
+    }
+    .run(&paper_scenario(100.0))?;
     rows.push(vec![
         "Ens (weighted average)".into(),
         format!("{:.2}%", ens_acc * 100.0),
-        format!("{:.3} ms (slowest member gates)", out.total_s * 1e3),
+        format!("{:.3} ms (slowest member gates)", out.total_s() * 1e3),
     ]);
     println!("{}", render_table(&["model", "accuracy (measured)", "latency"], &rows));
     println!("(paper: ensembles gain accuracy but inference is gated by the slowest model)\n");
@@ -333,11 +356,11 @@ fn fig9(engine: &Engine) -> Result<()> {
         let teacher = m.model(teacher_name)?;
         let t_flops = CostModel::flops_per_sample(&teacher.arch);
         let t_mem = CostModel::memory_bytes(&teacher.arch, 1);
-        let t_out = strategies::single_edge(&tx2, t_flops, t_mem)?;
+        let t_out = SingleEdge::standalone(&tx2, t_flops, t_mem)?;
         rows.push(vec![
             format!("{task}: teacher (TX2)"),
             format!("{:.2}%", teacher.accuracy_solo * 100.0),
-            ms(t_out.total_s),
+            ms(t_out.total_s()),
             mj(t_out.total_energy_j()),
             format!("{:.1} MB", t_mem as f64 / 1e6),
         ]);
@@ -347,12 +370,18 @@ fn fig9(engine: &Engine) -> Result<()> {
             .iter()
             .map(|n| m.model(n).map(|mm| mm.arch.clone()))
             .collect::<Result<_>>()?;
-        let out = strategies::coformer(&fleet(), &topo(100.0), &archs, m.d_i, 1)?;
+        let sc = Scenario::builder()
+            .fleet(fleet())
+            .topology(topo(100.0))
+            .archs(archs)
+            .d_i(m.d_i)
+            .build()?;
+        let out = CoFormer.run(&sc)?;
         let acc = dep.aggregators[agg].accuracy;
         rows.push(vec![
             format!("{task}: CoFormer 3-dev"),
             format!("{:.2}%", acc * 100.0),
-            ms(out.total_s),
+            ms(out.total_s()),
             mj(out.total_energy_j()),
             format!("{:.1} MB (peak/device)", out.peak_memory_bytes() as f64 / 1e6),
         ]);
@@ -360,7 +389,8 @@ fn fig9(engine: &Engine) -> Result<()> {
     // the paper's GPT2-XL OOM headline, at catalog scale
     let gpt = catalog::by_name("GPT2-XL").unwrap();
     let nano = DeviceProfile::jetson_nano();
-    let oom = strategies::single_edge(&nano, gpt.gflops * 1e9, (gpt.memory_gb * 1e9 * 1.074) as usize);
+    let oom =
+        SingleEdge::standalone(&nano, gpt.gflops * 1e9, (gpt.memory_gb * 1e9 * 1.074) as usize);
     rows.push(vec![
         "GPT2-XL on Jetson Nano (catalog)".into(),
         "-".into(),
@@ -407,35 +437,39 @@ fn fig10(engine: &Engine) -> Result<()> {
         .sum::<f64>()
         / 3.0;
 
+    let sc = paper_scenario(100.0);
     let cof = coformer_outcome(100.0);
-    let devit = strategies::ensemble(
-        "devit",
-        &fleet(),
-        &topo(100.0),
-        &[t_flops / 3.0; 3],
-        &[1 << 28; 3],
-        1000 * 4,
-    )?;
+    let devit = Ensemble {
+        label: "devit".into(),
+        member_flops: Some(vec![t_flops / 3.0; 3]),
+        member_memory: Some(vec![1 << 28; 3]),
+        logit_bytes: Some(1000 * 4),
+    }
+    .run(&sc)?;
     let shard = 197 * 768 * 4 / 3;
-    let galaxy =
-        strategies::tensor_parallel("galaxy", &fleet(), &topo(100.0), t_flops, 12, shard, 2.0, 1 << 28)?;
-    let detr = strategies::tensor_parallel(
-        "detransformer",
-        &fleet(),
-        &topo(100.0),
-        t_flops,
-        12,
-        shard,
-        0.5,
-        1 << 28,
-    )?;
+    let galaxy_spec = TensorParallel {
+        label: "galaxy".into(),
+        syncs_per_layer: 2.0,
+        total_flops: Some(t_flops),
+        layers: Some(12),
+        shard_bytes: Some(shard),
+        memory_per_device: Some(1 << 28),
+    };
+    let galaxy = galaxy_spec.run(&sc)?;
+    let detr = TensorParallel {
+        label: "detransformer".into(),
+        syncs_per_layer: 0.5,
+        ..galaxy_spec.clone()
+    }
+    .run(&sc)?;
     let per_layer = t_flops / 12.0;
     let seg = |l: f64| Segment {
         flops: per_layer * l,
         activation_bytes: 197 * 768 * 4,
         memory_bytes: 1 << 28,
     };
-    let edgeshard = strategies::pipe_edge(&fleet(), &topo(100.0), &[seg(3.0), seg(3.0), seg(6.0)])?;
+    let edgeshard =
+        PipeEdge::with_segments(vec![seg(3.0), seg(3.0), seg(6.0)]).run(&sc)?;
 
     let mut rows = Vec::new();
     for (name, out, acc) in [
@@ -448,7 +482,7 @@ fn fig10(engine: &Engine) -> Result<()> {
         rows.push(vec![
             name.to_string(),
             format!("{:.2}%", acc * 100.0),
-            ms(out.total_s),
+            ms(out.total_s()),
             mj(out.total_energy_j()),
             format!("{:.0} MB", out.peak_memory_bytes() as f64 / 1e6),
         ]);
@@ -530,52 +564,50 @@ fn fig11(engine: &Engine) -> Result<()> {
     Ok(())
 }
 
-/// Fig. 12: bandwidth sweep 100 Mb/s / 500 Mb/s / 1 Gb/s.
+/// Fig. 12: bandwidth sweep 100 Mb/s / 500 Mb/s / 1 Gb/s — driven by the
+/// data-driven sweep runner over the bandwidth axis (ISSUE 4).
 fn fig12() -> Result<()> {
     println!("== Fig 12: bandwidth sweep (DeiT-B scale sim) ==");
     let t = deit_b();
     let t_flops = CostModel::flops_per_sample(&t);
     let tx2 = DeviceProfile::jetson_tx2();
-    let deit_single = strategies::single_edge(&tx2, t_flops, 2 << 30)?.total_s;
+    let deit_single = SingleEdge::standalone(&tx2, t_flops, 2 << 30)?.total_s();
+    let shard = 197 * 768 * 4 / 3;
+    let galaxy = TensorParallel {
+        label: "galaxy".into(),
+        syncs_per_layer: 2.0,
+        total_flops: Some(t_flops),
+        layers: Some(12),
+        shard_bytes: Some(shard),
+        memory_per_device: Some(1 << 28),
+    };
+    let detr =
+        TensorParallel { label: "detr".into(), syncs_per_layer: 0.5, ..galaxy.clone() };
+    let per_layer = t_flops / 12.0;
+    let seg = |l: f64| Segment {
+        flops: per_layer * l,
+        activation_bytes: 197 * 768 * 4,
+        memory_bytes: 1 << 28,
+    };
+    let pipe = PipeEdge::with_segments(vec![seg(3.0), seg(3.0), seg(6.0)]);
+    let methods: [&dyn Strategy; 4] = [&CoFormer, &galaxy, &detr, &pipe];
+    let points = Sweep::new(paper_scenario(100.0))
+        .bandwidths_mbps(&[100.0, 500.0, 1000.0])
+        .run(&methods)?;
     let mut rows = Vec::new();
-    for mbps in [100.0, 500.0, 1000.0] {
-        let cof = coformer_outcome(mbps);
-        let shard = 197 * 768 * 4 / 3;
-        let galaxy = strategies::tensor_parallel(
-            "galaxy",
-            &fleet(),
-            &topo(mbps),
-            t_flops,
-            12,
-            shard,
-            2.0,
-            1 << 28,
-        )?;
-        let detr = strategies::tensor_parallel(
-            "detr",
-            &fleet(),
-            &topo(mbps),
-            t_flops,
-            12,
-            shard,
-            0.5,
-            1 << 28,
-        )?;
-        let per_layer = t_flops / 12.0;
-        let seg = |l: f64| Segment {
-            flops: per_layer * l,
-            activation_bytes: 197 * 768 * 4,
-            memory_bytes: 1 << 28,
-        };
-        let pipe = strategies::pipe_edge(&fleet(), &topo(mbps), &[seg(3.0), seg(3.0), seg(6.0)])?;
+    // the sweep emits points bandwidth-major with the strategy list
+    // innermost: one chunk per bandwidth, in method order
+    for chunk in points.chunks(methods.len()) {
+        let (cof, galaxy, detr, pipe) =
+            (&chunk[0].outcome, &chunk[1].outcome, &chunk[2].outcome, &chunk[3].outcome);
         rows.push(vec![
-            format!("{mbps:.0} Mb/s"),
-            ms(cof.total_s),
-            ms(galaxy.total_s),
-            ms(detr.total_s),
-            ms(pipe.total_s),
-            format!("{:.2}x", deit_single / cof.total_s),
-            format!("{:.2}x", galaxy.total_s / cof.total_s),
+            format!("{:.0} Mb/s", chunk[0].bandwidth_mbps),
+            ms(cof.total_s()),
+            ms(galaxy.total_s()),
+            ms(detr.total_s()),
+            ms(pipe.total_s()),
+            format!("{:.2}x", deit_single / cof.total_s()),
+            format!("{:.2}x", galaxy.total_s() / cof.total_s()),
         ]);
     }
     println!(
@@ -660,11 +692,17 @@ fn fig15(engine: &Engine) -> Result<()> {
         let devs: Vec<DeviceProfile> =
             DeviceProfile::extended_fleet().into_iter().take(n_dev).collect();
         let topology = Topology::star(n_dev, Link::mbps(100.0), 1.min(n_dev - 1));
-        let out = strategies::coformer(&devs, &topology, &archs, m.d_i, 1)?;
+        let sc = Scenario::builder()
+            .fleet(devs)
+            .topology(topology)
+            .archs(archs)
+            .d_i(m.d_i)
+            .build()?;
+        let out = CoFormer.run(&sc)?;
         rows.push(vec![
             dep_name.to_string(),
             format!("{:.2}%", dep.aggregators["mlp"].accuracy * 100.0),
-            ms(out.total_s),
+            ms(out.total_s()),
             mj(out.total_energy_j()),
         ]);
     }
@@ -735,55 +773,50 @@ fn fig16(engine: &Engine) -> Result<()> {
 
 /// Elastic replication: the availability/throughput trade (ISSUE 3) —
 /// always-replicate vs primaries-only elision vs the no-replica degraded
-/// baseline, healthy and with one device dead, at DeiT-B scale.
+/// baseline, healthy and with one device dead, at DeiT-B scale. Driven by
+/// the sweep runner over the dispatch-mode axis (ISSUE 4).
 fn elastic() -> Result<()> {
     println!("== Elastic replication: availability vs throughput (DeiT-B scale sim) ==");
-    let subs = deit_subs();
-    let devices = fleet();
-    let topology = topo(100.0);
     let mut rows = Vec::new();
-    for (scenario, alive) in
-        [("healthy fleet", [true, true, true]), ("device 0 dead", [false, true, true])]
-    {
-        let rep = strategies::coformer_elastic(
-            &devices, &topology, &subs, D_I_PAPER, 1, &alive, 2, 1, false,
-        )?;
-        let eli = strategies::coformer_elastic(
-            &devices, &topology, &subs, D_I_PAPER, 1, &alive, 2, 1, true,
-        )?;
-        let deg = strategies::coformer_degraded(
-            &devices, &topology, &subs, D_I_PAPER, 1, &alive, 1,
-        )?;
-        for (policy, total_s, energy_j, quorum, copies, saved) in [
+    for (scenario_label, alive) in [
+        ("healthy fleet", vec![true, true, true]),
+        ("device 0 dead", vec![false, true, true]),
+    ] {
+        let base = paper_scenario(100.0)
+            .to_builder()
+            .alive(alive)
+            .replicas(2)
+            .min_quorum(1)
+            .build()?;
+        // one sweep point per dispatch mode, replicas pinned at 2
+        let points = Sweep::new(base.clone())
+            .dispatch_modes(&[DispatchMode::Full, DispatchMode::Elided])
+            .run_named(&["coformer_elastic"])?;
+        let rep = &points[0].outcome;
+        let eli = &points[1].outcome;
+        let deg = CoFormerDegraded.run(&base)?;
+        let deg_rep = deg.replication.expect("coformer-family outcome");
+        for (policy, out, quorum, copies, saved) in [
             (
                 "always-replicate (Full)",
-                rep.outcome.total_s,
-                rep.outcome.total_energy_j(),
-                rep.quorum,
-                rep.copies_run,
-                rep.standby_gflops_saved,
+                rep,
+                rep.replication.expect("coformer-family outcome").quorum,
+                rep.replication.expect("coformer-family outcome").copies_run,
+                rep.replication.expect("coformer-family outcome").standby_gflops_saved,
             ),
             (
                 "elastic primaries-only (Elided)",
-                eli.outcome.total_s,
-                eli.outcome.total_energy_j(),
-                eli.quorum,
-                eli.copies_run,
-                eli.standby_gflops_saved,
+                eli,
+                eli.replication.expect("coformer-family outcome").quorum,
+                eli.replication.expect("coformer-family outcome").copies_run,
+                eli.replication.expect("coformer-family outcome").standby_gflops_saved,
             ),
-            (
-                "no replicas (degraded k-of-n)",
-                deg.outcome.total_s,
-                deg.outcome.total_energy_j(),
-                deg.quorum,
-                deg.quorum,
-                0.0,
-            ),
+            ("no replicas (degraded k-of-n)", &deg, deg_rep.quorum, deg_rep.quorum, 0.0),
         ] {
             rows.push(vec![
-                format!("{scenario}: {policy}"),
-                ms(total_s),
-                mj(energy_j),
+                format!("{scenario_label}: {policy}"),
+                ms(out.total_s()),
+                mj(out.total_energy_j()),
                 format!("{quorum}/3"),
                 format!("{copies}"),
                 format!("{saved:.2} G"),
@@ -844,16 +877,16 @@ fn table2() -> Result<()> {
     let mut rows = Vec::new();
     let baseline = catalog::by_name("PoolFormer-M48").unwrap();
     let base_out =
-        strategies::single_edge(&tx2, baseline.gflops * 1e9, (baseline.memory_gb * 1e9) as usize)?;
+        SingleEdge::standalone(&tx2, baseline.gflops * 1e9, (baseline.memory_gb * 1e9) as usize)?;
     for m in catalog::efficient_models() {
-        let out = strategies::single_edge(&tx2, m.gflops * 1e9, (m.memory_gb * 1e9) as usize)?;
+        let out = SingleEdge::standalone(&tx2, m.gflops * 1e9, (m.memory_gb * 1e9) as usize)?;
         rows.push(vec![
             m.name.to_string(),
             format!("{:.1} G", m.gflops),
             format!("{:.2} GB", m.memory_gb),
             format!("{:.2}%*", m.accuracy),
-            ms(out.total_s),
-            format!("{:.2}x", base_out.total_s / out.total_s),
+            ms(out.total_s()),
+            format!("{:.2}x", base_out.total_s() / out.total_s()),
             mj(out.total_energy_j()),
         ]);
     }
@@ -864,8 +897,8 @@ fn table2() -> Result<()> {
         format!("{total_g:.1} G"),
         format!("{:.2} GB peak/dev", cof.peak_memory_bytes() as f64 / 1e9),
         "82.26%* / measured in EXPERIMENTS".into(),
-        ms(cof.total_s),
-        format!("{:.2}x", base_out.total_s / cof.total_s),
+        ms(cof.total_s()),
+        format!("{:.2}x", base_out.total_s() / cof.total_s()),
         mj(cof.total_energy_j()),
     ]);
     println!(
@@ -908,7 +941,7 @@ fn table3(engine: &Engine) -> Result<()> {
     rows.push(vec![
         "decompose + aggregate (CoFormer)".into(),
         format!("{:.2}%", dep.aggregators["mlp"].accuracy * 100.0),
-        ms(cof.total_s),
+        ms(cof.total_s()),
     ]);
     println!("{}", render_table(&["configuration", "accuracy (measured)", "latency"], &rows));
     println!("(paper: 91.3% → 52–77% decomposed → 90.3% aggregated; 123.5 → 51.8 ms)\n");
@@ -940,7 +973,7 @@ fn table4(engine: &Engine, _artifacts: &PathBuf) -> Result<()> {
     let agg_ms = |mult: f64| {
         format!(
             "{:.2} ms",
-            (cof.total_s
+            (cof.total_s()
                 + tx2.compute_time_s(CostModel::aggregation_flops(d_agg, D_I_PAPER, 4))
                     * (mult - 1.0))
                 * 1e3
@@ -992,11 +1025,11 @@ fn table5(engine: &Engine) -> Result<()> {
     let tx2 = DeviceProfile::jetson_tx2();
     let teacher = m.model("teacher_edgenet")?;
     let t = deit_b();
-    let single = strategies::single_edge(&tx2, CostModel::flops_per_sample(&t), 2 << 30)?;
+    let single = SingleEdge::standalone(&tx2, CostModel::flops_per_sample(&t), 2 << 30)?;
     let mut rows = vec![vec![
         "1 (teacher on TX2)".into(),
         format!("{:.2}%", teacher.accuracy_solo * 100.0),
-        ms(single.total_s),
+        ms(single.total_s()),
         mj(single.total_energy_j()),
     ]];
     for (dep_name, n_dev) in [("edgenet_2dev", 2usize), ("edgenet_3dev", 3), ("edgenet_4dev", 4)] {
@@ -1014,11 +1047,17 @@ fn table5(engine: &Engine) -> Result<()> {
                 a
             })
             .collect();
-        let out = strategies::coformer(&devs, &topology, &subs, D_I_PAPER, 1)?;
+        let sc = Scenario::builder()
+            .fleet(devs)
+            .topology(topology)
+            .archs(subs)
+            .d_i(D_I_PAPER)
+            .build()?;
+        let out = CoFormer.run(&sc)?;
         rows.push(vec![
             format!("{n_dev}"),
             format!("{:.2}%", dep.aggregators["mlp"].accuracy * 100.0),
-            ms(out.total_s),
+            ms(out.total_s()),
             mj(out.total_energy_j()),
         ]);
     }

@@ -111,15 +111,22 @@ impl FaultPolicy {
             wall_timeout_ms: opt_usize("wall_timeout_ms", d.wall_timeout_ms as usize)?
                 as u64,
         };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Shared by JSON parsing and [`SystemConfig::validate`] (a hand-built
+    /// policy fed to the coordinator goes through the identical checks).
+    pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
-            p.min_quorum >= 1,
+            self.min_quorum >= 1,
             "min_quorum must be >= 1 (0 would let a batch with zero arrivals \
              aggregate all-zero features into garbage predictions)"
         );
-        anyhow::ensure!(p.deadline_factor >= 1.0, "deadline_factor must be >= 1");
-        anyhow::ensure!(p.degraded_slack >= 1.0, "degraded_slack must be >= 1");
-        anyhow::ensure!(p.dead_after >= 1, "dead_after must be >= 1");
-        Ok(p)
+        anyhow::ensure!(self.deadline_factor >= 1.0, "deadline_factor must be >= 1");
+        anyhow::ensure!(self.degraded_slack >= 1.0, "degraded_slack must be >= 1");
+        anyhow::ensure!(self.dead_after >= 1, "dead_after must be >= 1");
+        Ok(())
     }
 }
 
@@ -283,15 +290,28 @@ impl ReplicationPolicy {
                 .transpose()?
                 .unwrap_or(d.elision),
         };
-        anyhow::ensure!(p.replicas >= 1, "replicas must be >= 1 (1 = no replication)");
-        anyhow::ensure!(
-            p.max_queue_depth <= Self::MAX_QUEUE_DEPTH_CAP,
-            "max_queue_depth {} exceeds the intake-channel cap {}",
-            p.max_queue_depth,
-            Self::MAX_QUEUE_DEPTH_CAP
-        );
+        p.validate()?;
+        // a JSON-loaded config always starts with the stock queue/p95
+        // signal, so enabled elision must have one of the two to read
         p.validate_elision_signals()?;
         Ok(p)
+    }
+
+    /// Shared by JSON parsing and [`SystemConfig::validate`]: replication
+    /// bounds, the intake-channel cap, and the nested elision policy's
+    /// invariants. The at-least-one-stock-pressure-signal rule is layered
+    /// on top by the callers that know which signal will run
+    /// ([`ReplicationPolicy::validate_elision_signals`]).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.replicas >= 1, "replicas must be >= 1 (1 = no replication)");
+        anyhow::ensure!(
+            self.max_queue_depth <= Self::MAX_QUEUE_DEPTH_CAP,
+            "max_queue_depth {} exceeds the intake-channel cap {}",
+            self.max_queue_depth,
+            Self::MAX_QUEUE_DEPTH_CAP
+        );
+        self.elision.validate()?;
+        Ok(())
     }
 
     /// Enabled elision needs at least one live pressure signal: queue fill
@@ -384,21 +404,51 @@ impl SystemConfig {
                 .transpose()?
                 .unwrap_or_default(),
         };
-        anyhow::ensure!(c.central < c.devices.len(), "central index out of range");
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// The one validation gate every construction path shares (ISSUE 4).
+    /// [`SystemConfig::from_json`] calls it after parsing and
+    /// [`crate::coordinator::ServeBuilder::start`] calls it on whatever
+    /// config it is handed, so a hand-built config cannot reach the
+    /// coordinator with invariants a JSON-loaded one would have been
+    /// rejected for.
+    pub fn validate(&self) -> Result<()> {
+        self.validate_with_pressure_signal(false)
+    }
+
+    /// [`SystemConfig::validate`] for a coordinator wired to a custom
+    /// [`crate::coordinator::PressureSignal`] (`custom_signal = true`):
+    /// identical checks except the rule that enabled elision needs the
+    /// stock queue-fill or p95 signal — a custom signal supplies its own
+    /// reading, so neither knob is required.
+    pub fn validate_with_pressure_signal(&self, custom_signal: bool) -> Result<()> {
+        anyhow::ensure!(!self.devices.is_empty(), "config needs at least one device");
+        anyhow::ensure!(self.central < self.devices.len(), "central index out of range");
         anyhow::ensure!(
-            c.fault.min_quorum <= c.devices.len(),
-            "min_quorum {} is unsatisfiable with {} devices",
-            c.fault.min_quorum,
-            c.devices.len()
+            self.max_batch >= 1,
+            "max_batch must be >= 1 (the batcher cannot form empty batches)"
         );
+        self.fault.validate()?;
         anyhow::ensure!(
-            c.replication.replicas <= c.devices.len(),
+            self.fault.min_quorum <= self.devices.len(),
+            "min_quorum {} is unsatisfiable with {} devices",
+            self.fault.min_quorum,
+            self.devices.len()
+        );
+        self.replication.validate()?;
+        if !custom_signal {
+            self.replication.validate_elision_signals()?;
+        }
+        anyhow::ensure!(
+            self.replication.replicas <= self.devices.len(),
             "replicas {} is unsatisfiable with {} devices (each copy needs a \
              distinct device)",
-            c.replication.replicas,
-            c.devices.len()
+            self.replication.replicas,
+            self.devices.len()
         );
-        Ok(c)
+        Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Self> {
@@ -628,5 +678,31 @@ mod tests {
     fn central_out_of_range_rejected() {
         let json = r#"{"devices":["jetson-nano"],"central":3,"deployment":"x"}"#;
         assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_hand_built_invalid_configs() {
+        // ISSUE 4: a hand-built config goes through the same gate as a
+        // JSON-parsed one — `SystemConfig::validate` is that gate
+        assert!(SystemConfig::paper_default().validate().is_ok());
+        let mut c = SystemConfig::paper_default();
+        c.fault.min_quorum = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("min_quorum"));
+        let mut c = SystemConfig::paper_default();
+        c.fault.min_quorum = 99;
+        assert!(c.validate().unwrap_err().to_string().contains("unsatisfiable"));
+        let mut c = SystemConfig::paper_default();
+        c.replication.replicas = 99;
+        assert!(c.validate().unwrap_err().to_string().contains("replicas"));
+        let mut c = SystemConfig::paper_default();
+        c.central = 7;
+        assert!(c.validate().unwrap_err().to_string().contains("central"));
+        let mut c = SystemConfig::paper_default();
+        c.max_batch = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("max_batch"));
+        let mut c = SystemConfig::paper_default();
+        c.replication.elision.enabled = true;
+        c.replication.max_queue_depth = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("no pressure signal"));
     }
 }

@@ -31,8 +31,9 @@
 //! admitted requests always run to completion.
 //!
 //! Load-adaptive replica elision (ISSUE 3): every batch the [`Batcher`]
-//! ships carries an [`IntakePressure`] snapshot; the leader folds it with
-//! the rolling p95 virtual latency into a
+//! ships carries an [`IntakePressure`] snapshot; a pluggable
+//! [`PressureSignal`] (default [`QueueP95Signal`]: queue fill + rolling
+//! p95 virtual latency) folds it into a
 //! [`FleetPressure`] reading for the [`ReplicaScheduler`], which walks the
 //! dispatch mode Full → Partial → Elided (primaries only) under sustained
 //! pressure and back as headroom returns — with hysteresis so the mode
@@ -65,7 +66,10 @@ use crate::runtime::ExecHandle;
 use crate::Result;
 pub use batcher::{Batch, Batcher, BatcherConfig, IntakePressure};
 pub use health::{DeviceHealth, HealthState};
-pub use scheduler::{FleetPressure, ReplicaMode, ReplicaScheduler};
+pub use scheduler::{
+    EwmaLatencySignal, FleetPressure, PressureContext, PressureSignal, QueueP95Signal,
+    ReplicaMode, ReplicaScheduler,
+};
 
 /// One inference request: a single sample.
 pub struct InferenceRequest {
@@ -219,13 +223,26 @@ impl CoordinatorHandle {
         Ok(rx)
     }
 
-    /// Current admission state `(queued, live limit)`. A limit of
-    /// `usize::MAX` means shedding is disabled (`max_queue_depth = 0`).
-    pub fn admission_state(&self) -> (usize, usize) {
-        let queued = self.admission.queued.load(Ordering::SeqCst);
-        let limit = self.admission.limit.load(Ordering::SeqCst);
-        (queued, limit)
+    /// Point-in-time admission state. A limit of `usize::MAX` means
+    /// shedding is disabled (`max_queue_depth = 0`).
+    pub fn admission_state(&self) -> AdmissionSnapshot {
+        AdmissionSnapshot {
+            queued: self.admission.queued.load(Ordering::SeqCst),
+            limit: self.admission.limit.load(Ordering::SeqCst),
+        }
     }
+}
+
+/// Named snapshot of the admission gate as seen by a handle (ISSUE 4 —
+/// replaces the bare `(queued, limit)` tuple so call sites read
+/// `.queued` / `.limit` instead of positional fields).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionSnapshot {
+    /// Requests admitted and not yet released back to the gate.
+    pub queued: usize,
+    /// Live admission limit currently enforced on
+    /// [`CoordinatorHandle::submit`] (`usize::MAX` = shedding disabled).
+    pub limit: usize,
 }
 
 /// Per-member (sub-model) context. Member `i` natively lives on device `i`;
@@ -288,7 +305,7 @@ struct Pending {
     deadline_s: f64,
 }
 
-/// The leader. Construct with [`Coordinator::start`], submit via the handle,
+/// The leader. Construct with [`ServeBuilder`], submit via the handle,
 /// then [`Coordinator::shutdown`] to collect final stats.
 pub struct Coordinator {
     handle: CoordinatorHandle,
@@ -296,28 +313,115 @@ pub struct Coordinator {
     worker_joins: Vec<JoinHandle<()>>,
 }
 
-impl Coordinator {
-    /// Start the leader + per-device worker threads (no injected faults).
-    pub fn start(
+/// Fluent construction of a [`Coordinator`] (ISSUE 4) — replaces the
+/// positional `start` / `start_with_faults` pair. The required inputs
+/// (config, execution handle, deployment, member archs, payload stride)
+/// come in through [`ServeBuilder::new`]; fault scripts, policy overrides
+/// and the pressure signal are optional fluent setters. All validation
+/// funnels through the one shared [`SystemConfig::validate`] gate, so a
+/// hand-built config is held to exactly the JSON loader's invariants.
+///
+/// ```no_run
+/// use std::collections::HashMap;
+///
+/// use coformer::config::{FaultPolicy, SystemConfig};
+/// use coformer::coordinator::ServeBuilder;
+/// use coformer::model::{Arch, Mode};
+/// use coformer::runtime::manifest::DeploymentMeta;
+/// use coformer::runtime::{ExecServer, StubSpec};
+///
+/// # fn main() -> coformer::Result<()> {
+/// let arch = Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, 4);
+/// let members: Vec<String> = (0..3).map(|i| format!("m{i}")).collect();
+/// let server = ExecServer::start_stub(StubSpec {
+///     models: members.iter().map(|m| (m.clone(), arch.clone())).collect(),
+///     classes: 4,
+/// })?;
+/// let dep = DeploymentMeta { task: "stub".into(), members, aggregators: HashMap::new() };
+/// let stride = arch.tokens() * arch.patch_dim();
+/// let coord = ServeBuilder::new(
+///     SystemConfig::paper_default(),
+///     server.handle(),
+///     dep,
+///     vec![arch; 3],
+///     stride,
+/// )
+/// .fault(FaultPolicy { min_quorum: 2, ..FaultPolicy::default() })
+/// .start()?;
+/// let _stats = coord.shutdown()?;
+/// # Ok(()) }
+/// ```
+pub struct ServeBuilder {
+    config: SystemConfig,
+    exec: ExecHandle,
+    deployment: DeploymentMeta,
+    archs: Vec<Arch>,
+    x_stride: usize,
+    scripts: Vec<FaultScript>,
+    signal: Option<Box<dyn PressureSignal>>,
+}
+
+impl ServeBuilder {
+    /// The required serving inputs; everything else has defaults.
+    pub fn new(
         config: SystemConfig,
         exec: ExecHandle,
         deployment: DeploymentMeta,
         archs: Vec<Arch>,
         x_stride: usize,
-    ) -> Result<Self> {
-        Self::start_with_faults(config, exec, deployment, archs, x_stride, Vec::new())
+    ) -> Self {
+        ServeBuilder {
+            config,
+            exec,
+            deployment,
+            archs,
+            x_stride,
+            scripts: Vec::new(),
+            signal: None,
+        }
     }
 
-    /// Start with a per-device [`FaultScript`] (the deterministic
-    /// fault-injection harness; pass an empty vec for no faults).
-    pub fn start_with_faults(
-        config: SystemConfig,
-        exec: ExecHandle,
-        deployment: DeploymentMeta,
-        archs: Vec<Arch>,
-        x_stride: usize,
-        mut scripts: Vec<FaultScript>,
-    ) -> Result<Self> {
+    /// Override the config's fault-tolerance policy (deadlines, quorum,
+    /// health thresholds, re-dispatch).
+    pub fn fault(mut self, fault: crate::config::FaultPolicy) -> Self {
+        self.config.fault = fault;
+        self
+    }
+
+    /// Override the config's replication + admission policy.
+    pub fn replication(mut self, replication: crate::config::ReplicationPolicy) -> Self {
+        self.config.replication = replication;
+        self
+    }
+
+    /// Override just the elision policy inside the replication policy.
+    pub fn elision(mut self, elision: crate::config::ElisionPolicy) -> Self {
+        self.config.replication.elision = elision;
+        self
+    }
+
+    /// Per-device [`FaultScript`]s for the deterministic fault-injection
+    /// harness (empty = no faults; otherwise one per device).
+    pub fn fault_scripts(mut self, scripts: Vec<FaultScript>) -> Self {
+        self.scripts = scripts;
+        self
+    }
+
+    /// Replace the default [`QueueP95Signal`] pressure reading feeding the
+    /// [`ReplicaScheduler`].
+    pub fn pressure_signal(mut self, signal: Box<dyn PressureSignal>) -> Self {
+        self.signal = Some(signal);
+        self
+    }
+
+    /// Validate everything and start the leader + per-device workers.
+    pub fn start(self) -> Result<Coordinator> {
+        let ServeBuilder { config, exec, deployment, archs, x_stride, mut scripts, signal } =
+            self;
+        // the one shared validation gate (same checks as config::from_json);
+        // a custom pressure signal supplies its own reading, so the
+        // enabled-elision-needs-a-stock-signal rule is waived for it
+        config.validate_with_pressure_signal(signal.is_some())?;
         let devices = config.resolve_devices()?;
         anyhow::ensure!(
             devices.len() == deployment.members.len(),
@@ -340,37 +444,7 @@ impl Coordinator {
             archs.len(),
             deployment.members.len()
         );
-        anyhow::ensure!(
-            config.fault.min_quorum >= 1,
-            "min_quorum must be >= 1 (0 would let a batch with zero arrivals \
-             aggregate all-zero renormalized features into garbage predictions)"
-        );
-        anyhow::ensure!(
-            config.fault.min_quorum <= deployment.members.len(),
-            "min_quorum {} is unsatisfiable with {} members",
-            config.fault.min_quorum,
-            deployment.members.len()
-        );
-        anyhow::ensure!(
-            config.replication.replicas >= 1
-                && config.replication.replicas <= devices.len(),
-            "replicas {} is unsatisfiable with {} devices (each copy needs a \
-             distinct device)",
-            config.replication.replicas,
-            devices.len()
-        );
-        anyhow::ensure!(
-            config.replication.max_queue_depth
-                <= crate::config::ReplicationPolicy::MAX_QUEUE_DEPTH_CAP,
-            "max_queue_depth {} exceeds the intake-channel cap {}",
-            config.replication.max_queue_depth,
-            crate::config::ReplicationPolicy::MAX_QUEUE_DEPTH_CAP
-        );
-        // a hand-built ElisionPolicy must satisfy the same invariants as a
-        // JSON-parsed one (inverted watermarks would flap the mode; enabled
-        // elision with no pressure signal would silently never engage)
-        config.replication.elision.validate()?;
-        config.replication.validate_elision_signals()?;
+        let signal = signal.unwrap_or_else(|| Box::new(QueueP95Signal));
         let topo = config.topology();
         let members: Vec<MemberCtx> = deployment
             .members
@@ -517,11 +591,49 @@ impl Coordinator {
             promoted_at: vec![None; n_members],
             recent_virtual_ms: VecDeque::new(),
             intake_cap: chan_cap,
+            signal,
         };
         let join = std::thread::Builder::new()
             .name("coformer-leader".into())
             .spawn(move || leader.run(rx, batcher_cfg))?;
         Ok(Coordinator { handle: CoordinatorHandle { tx, admission }, join, worker_joins })
+    }
+}
+
+impl Coordinator {
+    /// Start the leader + per-device worker threads (no injected faults).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use coordinator::ServeBuilder::new(...).start() (README \"Public API\")"
+    )]
+    pub fn start(
+        config: SystemConfig,
+        exec: ExecHandle,
+        deployment: DeploymentMeta,
+        archs: Vec<Arch>,
+        x_stride: usize,
+    ) -> Result<Self> {
+        ServeBuilder::new(config, exec, deployment, archs, x_stride).start()
+    }
+
+    /// Start with a per-device [`FaultScript`] (the deterministic
+    /// fault-injection harness; pass an empty vec for no faults).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use coordinator::ServeBuilder::new(...).fault_scripts(...).start() \
+                (README \"Public API\")"
+    )]
+    pub fn start_with_faults(
+        config: SystemConfig,
+        exec: ExecHandle,
+        deployment: DeploymentMeta,
+        archs: Vec<Arch>,
+        x_stride: usize,
+        scripts: Vec<FaultScript>,
+    ) -> Result<Self> {
+        ServeBuilder::new(config, exec, deployment, archs, x_stride)
+            .fault_scripts(scripts)
+            .start()
     }
 
     pub fn handle(&self) -> CoordinatorHandle {
@@ -579,6 +691,8 @@ struct Leader {
     /// Intake-channel capacity: ceiling for any elision-scaled limit (the
     /// channel must never block a caller admission has already accepted).
     intake_cap: usize,
+    /// Pluggable fleet-pressure reading (default [`QueueP95Signal`]).
+    signal: Box<dyn PressureSignal>,
 }
 
 /// Batches of virtual latency kept for the p95 pressure signal.
@@ -629,15 +743,16 @@ impl Leader {
         stats
     }
 
-    /// Fold one batch's intake snapshot with the rolling latency window,
-    /// step the scheduler, and account the mode. (Device health acts per
-    /// member through the scheduler's fallback, not through this
-    /// fleet-wide signal.)
+    /// Feed one batch's intake snapshot + rolling latency window through
+    /// the pluggable [`PressureSignal`], step the scheduler on its
+    /// reading, and account the mode. (Device health acts per member
+    /// through the scheduler's fallback, not through this fleet-wide
+    /// signal.)
     fn observe_pressure(&mut self, intake: IntakePressure) {
-        let pressure = FleetPressure {
-            queue_fill: intake.fill(),
-            p95_virtual_ms: self.recent_p95_ms(),
-        };
+        let window: Vec<f64> = self.recent_virtual_ms.iter().copied().collect();
+        let pressure = self
+            .signal
+            .read(&scheduler::PressureContext { intake, recent_virtual_ms: &window });
         let mode = self.scheduler.observe(&pressure);
         self.fault.mode_transitions = self.scheduler.transitions();
         // re-derived every batch: the elision headroom depends on the mode
@@ -656,13 +771,6 @@ impl Leader {
             self.recent_virtual_ms.pop_front();
         }
         self.recent_virtual_ms.push_back(virtual_s * 1e3);
-    }
-
-    /// Nearest-rank p95 over the rolling latency window (0 until measured).
-    fn recent_p95_ms(&self) -> f64 {
-        let mut v: Vec<f64> = self.recent_virtual_ms.iter().copied().collect();
-        v.sort_by(|a, b| a.total_cmp(b));
-        crate::metrics::percentile_nearest_rank(&v, 95.0)
     }
 
     /// Serve one batch through the fault-tolerant 3-phase workflow.
@@ -982,7 +1090,8 @@ impl Leader {
 
     /// If the central device died, promote the strongest survivor: the
     /// aggregation step (and free local feature transfer) moves with it.
-    /// Shares the election rule with `strategies::coformer_degraded`.
+    /// Shares the election rule with the simulator's CoFormer strategies
+    /// (`strategies::registry`).
     fn ensure_central_alive(&mut self) {
         if self.worker_txs[self.central].is_some() {
             return;
@@ -1260,7 +1369,7 @@ pub fn serve_all(
     let mut out = Vec::with_capacity(xs.len());
     for x in xs {
         // re-read each iteration: the limit shrinks when devices die
-        let (_, limit) = handle.admission_state();
+        let limit = handle.admission_state().limit;
         while rxs.len() >= limit.max(1) {
             let rx: mpsc::Receiver<Result<InferenceResponse>> =
                 rxs.pop_front().expect("window is non-empty");

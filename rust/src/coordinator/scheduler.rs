@@ -8,8 +8,10 @@
 //! (arXiv 2309.05015) shows decomposed-model ensembles tolerate members
 //! being dropped; together they justify spending standby compute only when
 //! it buys availability. The [`ReplicaScheduler`] consumes one
-//! [`FleetPressure`] reading per batch (admission-queue fill from the
-//! batcher, recent p95 virtual latency) and walks a three-mode ladder:
+//! [`FleetPressure`] reading per batch — produced by a pluggable
+//! [`PressureSignal`] from the batcher's intake snapshot and the rolling
+//! latency window ([`QueueP95Signal`] is the default) — and walks a
+//! three-mode ladder:
 //!
 //! * **Full** — every standby runs every batch (ISSUE 2 dispatch).
 //! * **Partial** — standbys shadow only members that need cover: a primary
@@ -27,6 +29,7 @@
 
 use crate::config::ElisionPolicy;
 
+use super::batcher::IntakePressure;
 use super::health::HealthState;
 
 /// Per-batch replica dispatch mode (ordered by aggressiveness).
@@ -56,6 +59,114 @@ pub struct FleetPressure {
     pub queue_fill: f64,
     /// p95 of recent per-batch virtual latencies, ms (0 until measured).
     pub p95_virtual_ms: f64,
+}
+
+/// Everything a [`PressureSignal`] may look at for one batch: the intake
+/// snapshot the batcher shipped with the batch, and the leader's rolling
+/// window of recent per-batch virtual latencies (chronological,
+/// milliseconds, bounded by the leader's window size).
+#[derive(Clone, Copy, Debug)]
+pub struct PressureContext<'a> {
+    /// Intake-queue snapshot taken at batch-close time.
+    pub intake: IntakePressure,
+    /// Recent per-batch virtual latencies, oldest first (ms).
+    pub recent_virtual_ms: &'a [f64],
+}
+
+/// Pluggable fleet-pressure reading (ISSUE 4): how raw intake/latency
+/// observations become the [`FleetPressure`] the [`ReplicaScheduler`]
+/// walks its mode ladder on. The built-in [`QueueP95Signal`] reproduces
+/// the original queue-fill + rolling-p95 reading; the ROADMAP's predictive
+/// (latency-predictor MLP) and energy-keyed controllers are further impls
+/// of this trait, dropped in through
+/// [`super::ServeBuilder::pressure_signal`].
+///
+/// Implementations may keep state across batches (`read` takes `&mut
+/// self`); they run on the leader thread, once per batch, before the batch
+/// is dispatched.
+///
+/// ```
+/// use coformer::coordinator::{FleetPressure, PressureContext, PressureSignal};
+///
+/// /// Queue-only control: ignore latency entirely.
+/// struct QueueOnly;
+///
+/// impl PressureSignal for QueueOnly {
+///     fn name(&self) -> &'static str {
+///         "queue-only"
+///     }
+///
+///     fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure {
+///         FleetPressure { queue_fill: ctx.intake.fill(), p95_virtual_ms: 0.0 }
+///     }
+/// }
+/// ```
+pub trait PressureSignal: Send {
+    /// Diagnostic name.
+    fn name(&self) -> &'static str;
+
+    /// Fold one batch's observations into the scheduler's pressure reading.
+    fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure;
+}
+
+/// The default signal: admission-queue fill plus the nearest-rank p95 of
+/// the rolling latency window — exactly the pre-ISSUE-4 hardcoded reading,
+/// now one implementation behind the [`PressureSignal`] interface.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueP95Signal;
+
+impl PressureSignal for QueueP95Signal {
+    fn name(&self) -> &'static str {
+        "queue-p95"
+    }
+
+    fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure {
+        let mut v: Vec<f64> = ctx.recent_virtual_ms.to_vec();
+        v.sort_by(|a, b| a.total_cmp(b));
+        FleetPressure {
+            queue_fill: ctx.intake.fill(),
+            p95_virtual_ms: crate::metrics::percentile_nearest_rank(&v, 95.0),
+        }
+    }
+}
+
+/// Exponentially-weighted-moving-average latency signal: reports the EWMA
+/// of per-batch virtual latency instead of the windowed p95, so a
+/// sustained latency ramp crosses the scheduler's `p95_high_ms` gate a few
+/// batches earlier than the rank statistic (a lightweight step toward the
+/// ROADMAP's predictive controller). Queue fill passes through unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct EwmaLatencySignal {
+    alpha: f64,
+    ewma_ms: Option<f64>,
+}
+
+impl EwmaLatencySignal {
+    /// `alpha` is the new-sample weight, clamped into (0, 1]; 1 tracks the
+    /// latest batch exactly, smaller values smooth harder.
+    pub fn new(alpha: f64) -> Self {
+        let alpha = if alpha.is_finite() { alpha.clamp(1e-3, 1.0) } else { 1.0 };
+        EwmaLatencySignal { alpha, ewma_ms: None }
+    }
+}
+
+impl PressureSignal for EwmaLatencySignal {
+    fn name(&self) -> &'static str {
+        "ewma-latency"
+    }
+
+    fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure {
+        if let Some(&latest) = ctx.recent_virtual_ms.last() {
+            self.ewma_ms = Some(match self.ewma_ms {
+                Some(prev) => self.alpha * latest + (1.0 - self.alpha) * prev,
+                None => latest,
+            });
+        }
+        FleetPressure {
+            queue_fill: ctx.intake.fill(),
+            p95_virtual_ms: self.ewma_ms.unwrap_or(0.0),
+        }
+    }
 }
 
 /// Direction a pressure reading pushes the mode ladder.
@@ -301,5 +412,73 @@ mod tests {
         assert!(!s.standby_executes(HealthState::Healthy, false));
         assert!(s.standby_executes(HealthState::Healthy, true));
         assert!(s.standby_executes(HealthState::Degraded, false));
+    }
+
+    fn ctx(ctx_queued: usize, limit: usize, window: &[f64]) -> PressureContext<'_> {
+        PressureContext {
+            intake: IntakePressure {
+                queued: ctx_queued,
+                capacity_limit: limit,
+                live_limit: limit,
+            },
+            recent_virtual_ms: window,
+        }
+    }
+
+    #[test]
+    fn queue_p95_signal_reproduces_fill_and_nearest_rank_p95() {
+        let mut sig = QueueP95Signal;
+        // unsorted window: the signal must sort before taking the rank
+        let window = [30.0, 10.0, 20.0];
+        let p = sig.read(&ctx(4, 8, &window));
+        assert!((p.queue_fill - 0.5).abs() < 1e-12);
+        assert_eq!(p.p95_virtual_ms, 30.0, "nearest-rank p95 of 3 samples is the max");
+        // empty window reads zero latency pressure
+        let p = sig.read(&ctx(0, 8, &[]));
+        assert_eq!(p.p95_virtual_ms, 0.0);
+        assert_eq!(p.queue_fill, 0.0);
+    }
+
+    #[test]
+    fn ewma_signal_smooths_and_leads_a_ramp() {
+        let mut sig = EwmaLatencySignal::new(0.5);
+        assert_eq!(sig.read(&ctx(0, 8, &[])).p95_virtual_ms, 0.0, "no data yet");
+        // first sample seeds the average exactly
+        assert_eq!(sig.read(&ctx(0, 8, &[10.0])).p95_virtual_ms, 10.0);
+        // ramp: EWMA moves toward the latest sample by alpha per reading
+        let p = sig.read(&ctx(0, 8, &[10.0, 30.0]));
+        assert!((p.p95_virtual_ms - 20.0).abs() < 1e-12, "0.5·30 + 0.5·10");
+        // a sustained ramp crosses a threshold before the windowed median
+        // family would, but never overshoots the latest observation
+        let p = sig.read(&ctx(0, 8, &[10.0, 30.0, 50.0]));
+        assert!(p.p95_virtual_ms > 20.0 && p.p95_virtual_ms < 50.0);
+        // queue fill passes through unchanged
+        assert!((sig.read(&ctx(6, 8, &[50.0])).queue_fill - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_signal_clamps_degenerate_alpha() {
+        // non-finite or out-of-range alphas degrade to usable smoothing
+        for bad in [f64::NAN, f64::INFINITY, -1.0, 0.0, 2.0] {
+            let mut sig = EwmaLatencySignal::new(bad);
+            let p = sig.read(&ctx(0, 8, &[42.0]));
+            assert!(p.p95_virtual_ms.is_finite());
+            assert!(p.p95_virtual_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn scheduler_driven_through_the_trait_object() {
+        // the leader holds a Box<dyn PressureSignal>: drive the ladder
+        // through the trait to prove any impl can move the mode
+        let mut sig: Box<dyn PressureSignal> = Box::new(QueueP95Signal);
+        let mut s = ReplicaScheduler::new(policy(1));
+        let window: Vec<f64> = Vec::new();
+        let reading = sig.read(&ctx(8, 8, &window));
+        assert_eq!(s.observe(&reading), ReplicaMode::Partial);
+        let reading = sig.read(&ctx(8, 8, &window));
+        assert_eq!(s.observe(&reading), ReplicaMode::Elided);
+        let reading = sig.read(&ctx(0, 8, &window));
+        assert_eq!(s.observe(&reading), ReplicaMode::Partial);
     }
 }

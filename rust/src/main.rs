@@ -11,7 +11,7 @@ use std::path::PathBuf;
 
 use coformer::booster::{BoostConfig, Booster};
 use coformer::config::SystemConfig;
-use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
+use coformer::coordinator::{serve_all, RequestPayload, ServeBuilder};
 use coformer::data::Dataset;
 use coformer::debo::{DeBoConfig, DeBoSearch};
 use coformer::device::DeviceProfile;
@@ -297,7 +297,7 @@ fn eval(
     for member in &dep.members {
         exec.warmup(member)?;
     }
-    let coord = Coordinator::start(config, exec, dep.clone(), archs, stride)?;
+    let coord = ServeBuilder::new(config, exec, dep.clone(), archs, stride).start()?;
     let handle = coord.handle();
     let payloads: Vec<RequestPayload> = (0..n)
         .map(|i| {

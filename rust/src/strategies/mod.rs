@@ -1,24 +1,55 @@
 //! Collaborative-inference execution strategies — CoFormer's aggregate-edge
-//! scheme plus every baseline family the paper compares against (Fig. 2):
+//! scheme plus every baseline family the paper compares against (Fig. 2).
 //!
-//! * [`coformer`] — aggregate-edge: parallel backbones, one-shot feature
-//!   transfer, central aggregation (this paper).
-//! * [`pipe_edge`] — layer-wise sequential pipeline (EdgeShard [37] and the
-//!   Fig. 3 motivation study).
-//! * [`tensor_parallel`] — distri-edge with per-layer synchronization
-//!   (Galaxy [15]: 2 syncs/layer; DeTransformer [36]: block-parallel with
-//!   ~1 sync per block).
-//! * [`single_edge`] — one compressed model on one device (Table I/II).
-//! * [`ensemble`] — N full models in parallel, logits fused at the central
-//!   node (DeViT [35] / Fig. 6 ensembles).
+//! # Public API (ISSUE 4)
 //!
-//! Each strategy composes [`SimDevice`] timelines and returns a
-//! [`StrategyOutcome`] whose per-device busy/idle/transmit breakdown is
-//! exactly what the paper's latency-breakdown figures plot.
+//! Describe *what* to simulate once, as a validated [`Scenario`] (fleet,
+//! topology, sub-model architectures, batch, aliveness, replication,
+//! quorum, dispatch mode), then pick *how* as a [`Strategy`] impl from the
+//! [`registry`]:
+//!
+//! * [`registry::CoFormer`] — aggregate-edge: parallel backbones, one-shot
+//!   feature transfer, central aggregation (this paper).
+//! * [`registry::CoFormerDegraded`] — k-of-n partial failure (ISSUE 1).
+//! * [`registry::CoFormerReplicated`] — warm-standby replication (ISSUE 2).
+//! * [`registry::CoFormerElastic`] — elastic replica dispatch (ISSUE 3);
+//!   also reachable as [`Scenario::run`].
+//! * [`registry::PipeEdge`] — layer-wise sequential pipeline (EdgeShard
+//!   [37] and the Fig. 3 motivation study).
+//! * [`registry::TensorParallel`] — distri-edge with per-layer
+//!   synchronization (Galaxy [15]: 2 syncs/layer; DeTransformer [36]:
+//!   block-parallel with ~1 sync per block).
+//! * [`registry::SingleEdge`] — one compressed model on one device
+//!   (Table I/II).
+//! * [`registry::Ensemble`] — N full models in parallel, logits fused at
+//!   the central node (DeViT [35] / Fig. 6 ensembles).
+//!
+//! Every strategy returns one composed [`Outcome`]: the per-device
+//! busy/idle/transmit timeline ([`StrategyOutcome`]) the paper's
+//! latency-breakdown figures plot, plus quorum/copies accounting for the
+//! CoFormer family. The [`sweep`] runner drives any strategy set across
+//! scenario axes (bandwidth, batch, replicas, dispatch) for the `paper`
+//! binary's tables.
+//!
+//! The pre-ISSUE-4 free functions ([`coformer`], [`coformer_degraded`],
+//! [`coformer_replicated`], [`coformer_elastic`], [`pipe_edge`],
+//! [`tensor_parallel`], [`single_edge`], [`ensemble`]) remain as thin
+//! deprecated wrappers delegating to the same core simulations, so their
+//! numbers cannot drift from the new API's.
+
+pub mod registry;
+pub mod scenario;
+pub mod sweep;
 
 use crate::device::{DeviceProfile, SimDevice, SimError};
 use crate::model::{Arch, CostModel};
 use crate::net::Topology;
+
+pub use scenario::{
+    DispatchMode, Outcome, ReplicationOutcome, Scenario, ScenarioBuilder, ScenarioError,
+    Strategy,
+};
+pub use sweep::{Sweep, SweepError, SweepPoint};
 
 /// Per-device timeline of one collaborative inference.
 #[derive(Clone, Debug, Default)]
@@ -30,7 +61,8 @@ pub struct DeviceTimeline {
     pub memory_bytes: usize,
 }
 
-/// Result of simulating one strategy on one request.
+/// Core result of simulating one strategy on one request: the per-device
+/// timeline breakdown. Composed into [`Outcome`] by the [`Strategy`] API.
 #[derive(Clone, Debug)]
 pub struct StrategyOutcome {
     pub name: String,
@@ -101,23 +133,9 @@ fn finish(devs: Vec<SimDevice>, name: &str, total_s: f64, mems: &[usize], comm_r
     StrategyOutcome { name: name.into(), total_s, devices, comm_rounds }
 }
 
-/// CoFormer aggregate-edge (paper §III-A): all devices run their sub-model
-/// concurrently, transmit features once, central node aggregates.
-pub fn coformer(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    archs: &[Arch],
-    d_i: usize,
-    batch: usize,
-) -> Result<StrategyOutcome, SimError> {
-    // the healthy fleet is the degraded simulation with everyone alive
-    let alive = vec![true; profiles.len()];
-    let mut deg = coformer_degraded(profiles, topo, archs, d_i, batch, &alive, 1)?;
-    deg.outcome.name = "coformer".into();
-    Ok(deg.outcome)
-}
-
 /// Outcome of a degraded (n−f)-device CoFormer simulation (ISSUE 1).
+/// Legacy wrapper type returned by the deprecated free functions;
+/// superseded by [`Outcome`]'s composition with [`ReplicationOutcome`].
 #[derive(Clone, Debug)]
 pub struct DegradedOutcome {
     pub outcome: StrategyOutcome,
@@ -127,61 +145,9 @@ pub struct DegradedOutcome {
     pub central: usize,
 }
 
-/// CoFormer aggregate-edge under partial failure: only the `alive` devices
-/// run; the Eq. 2 combiner renormalizes over the k arrived feature sets
-/// (its input width shrinks to the surviving dims), and a dead central node
-/// hands aggregation to the fastest survivor. This is how the simulator
-/// scores the coordinator's k-of-n degraded serving mode.
-///
-/// Exactly [`coformer_replicated`] with a replication factor of 1 (no
-/// standby to adopt a dead member) — delegated so the two scoring paths
-/// share one timeline model and can never drift apart.
-pub fn coformer_degraded(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    archs: &[Arch],
-    d_i: usize,
-    batch: usize,
-    alive: &[bool],
-    min_quorum: usize,
-) -> Result<DegradedOutcome, SimError> {
-    let mut deg =
-        coformer_replicated(profiles, topo, archs, d_i, batch, alive, 1, min_quorum)?;
-    deg.outcome.name = "coformer-degraded".into();
-    Ok(deg)
-}
-
-/// CoFormer aggregate-edge with warm-standby replication (ISSUE 2): member
-/// `i`'s primary host is device `i`; when the primary is dead the member
-/// runs on its standby — the next alive device in ring order within
-/// `replicas − 1` hops — so a death costs no aggregation arity, at the
-/// price of extra compute and energy on the adopting survivor. This is how
-/// the simulator scores the coordinator's replicated serving mode against
-/// [`coformer_degraded`]'s accuracy-losing k-of-n fallback: same fleet,
-/// same faults, full-width Eq. 2 input instead of a renormalized subset.
-///
-/// Exactly [`coformer_elastic`] with standbys elided (one live copy per
-/// member) — delegated so every scoring path shares one timeline model.
-#[allow(clippy::too_many_arguments)]
-pub fn coformer_replicated(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    archs: &[Arch],
-    d_i: usize,
-    batch: usize,
-    alive: &[bool],
-    replicas: usize,
-    min_quorum: usize,
-) -> Result<DegradedOutcome, SimError> {
-    let el = coformer_elastic(
-        profiles, topo, archs, d_i, batch, alive, replicas, min_quorum, true,
-    )?;
-    let mut outcome = el.outcome;
-    outcome.name = "coformer-replicated".into();
-    Ok(DegradedOutcome { outcome, quorum: el.quorum, central: el.central })
-}
-
 /// Outcome of an elastic-replication CoFormer simulation (ISSUE 3).
+/// Legacy wrapper type returned by the deprecated free functions;
+/// superseded by [`Outcome`]'s composition with [`ReplicationOutcome`].
 #[derive(Clone, Debug)]
 pub struct ElasticOutcome {
     pub outcome: StrategyOutcome,
@@ -197,33 +163,23 @@ pub struct ElasticOutcome {
     pub standby_gflops_saved: f64,
 }
 
-/// CoFormer aggregate-edge under the elastic replication policy (ISSUE 3):
-/// member `i`'s hosts are the alive devices in its ring window of
-/// `replicas` hops. With `elide_standbys = false` (always-replicate, the
-/// coordinator's Full mode) **every** live copy runs — redundant compute
-/// and feature transfers on every host, latency gated by the slowest
-/// device's full task list, which is exactly how the real leader waits on
-/// worker replies. With `elide_standbys = true` (primaries-only, Elided
-/// mode) only the first live copy runs — the primary, or the promoted
-/// standby when the primary is dead — saving the standby GFLOPS reported
-/// in [`ElasticOutcome::standby_gflops_saved`]. Scoring the two against
-/// [`coformer_degraded`] (no replicas at all) quantifies the
-/// availability/throughput trade the serving coordinator makes per batch.
-#[allow(clippy::too_many_arguments)]
-pub fn coformer_elastic(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    archs: &[Arch],
-    d_i: usize,
-    batch: usize,
-    alive: &[bool],
-    replicas: usize,
-    min_quorum: usize,
-    elide_standbys: bool,
-) -> Result<ElasticOutcome, SimError> {
-    assert_eq!(profiles.len(), archs.len());
-    assert_eq!(profiles.len(), alive.len());
-    assert!(replicas >= 1, "replicas must be >= 1");
+/// The one CoFormer aggregate-edge timeline simulation (paper §III-A under
+/// the elastic replication policy): member `i`'s hosts are the alive
+/// devices in its ring window of `replicas` hops. Under
+/// [`DispatchMode::Full`] (always-replicate) **every** live copy runs —
+/// redundant compute and feature transfers on every host, latency gated by
+/// the slowest device's full task list, which is exactly how the real
+/// leader waits on worker replies. Under [`DispatchMode::Elided`]
+/// (primaries only) only the first live copy runs — the primary, or the
+/// promoted standby when the primary is dead — saving the standby GFLOPS
+/// reported in [`ElasticOutcome::standby_gflops_saved`]. Every public
+/// scoring path (the [`Strategy`] impls and the deprecated free functions)
+/// delegates here, so the paths can never drift apart.
+pub(crate) fn run_elastic_scenario(s: &Scenario) -> Result<ElasticOutcome, SimError> {
+    let (profiles, topo, archs) = (&s.fleet, &s.topo, &s.archs);
+    let (d_i, batch, alive) = (s.d_i, s.batch, &s.alive);
+    let (replicas, min_quorum) = (s.replicas, s.min_quorum);
+    let elide_standbys = s.dispatch == DispatchMode::Elided;
     let n = profiles.len();
     // member → live hosts in ring order (primary first); elided keeps only
     // the first — the same first-arrival slot the coordinator promotes into
@@ -316,6 +272,177 @@ pub fn coformer_elastic(
     Ok(ElasticOutcome { outcome: out, quorum, central, copies_run, standby_gflops_saved })
 }
 
+/// CoFormer aggregate-edge (paper §III-A): all devices run their sub-model
+/// concurrently, transmit features once, central node aggregates.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a strategies::Scenario and run registry::CoFormer (README \"Public API\")"
+)]
+pub fn coformer(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    archs: &[Arch],
+    d_i: usize,
+    batch: usize,
+) -> Result<StrategyOutcome, SimError> {
+    let scenario = Scenario::builder()
+        .fleet(profiles.to_vec())
+        .topology(topo.clone())
+        .archs(archs.to_vec())
+        .d_i(d_i)
+        .batch(batch)
+        .build()
+        .expect("coformer: invalid arguments");
+    registry::CoFormer.run(&scenario).map(|o| o.core)
+}
+
+/// Clamp a wrapper's raw `min_quorum` into the builder's valid range and
+/// re-apply the raw requirement afterwards, so the deprecated wrappers
+/// keep the pre-ISSUE-4 contract exactly: a `min_quorum` larger than the
+/// fleet comes back as `Err(SimError::QuorumNotMet)` with the *raw*
+/// demand, never a panic.
+fn legacy_quorum_check<T>(
+    result: Result<(T, usize), SimError>,
+    need: usize,
+) -> Result<(T, usize), SimError> {
+    match result {
+        Ok((out, quorum)) => {
+            if quorum < need {
+                Err(SimError::QuorumNotMet { have: quorum, need })
+            } else {
+                Ok((out, quorum))
+            }
+        }
+        Err(SimError::QuorumNotMet { have, .. }) => {
+            Err(SimError::QuorumNotMet { have, need })
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// CoFormer aggregate-edge under partial failure (ISSUE 1): only the
+/// `alive` devices run; the Eq. 2 combiner renormalizes over the k arrived
+/// feature sets, and a dead central node hands aggregation to the fastest
+/// survivor.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a strategies::Scenario (.alive/.min_quorum) and run \
+            registry::CoFormerDegraded (README \"Public API\")"
+)]
+pub fn coformer_degraded(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    archs: &[Arch],
+    d_i: usize,
+    batch: usize,
+    alive: &[bool],
+    min_quorum: usize,
+) -> Result<DegradedOutcome, SimError> {
+    let need = min_quorum.max(1);
+    let scenario = Scenario::builder()
+        .fleet(profiles.to_vec())
+        .topology(topo.clone())
+        .archs(archs.to_vec())
+        .d_i(d_i)
+        .batch(batch)
+        .alive(alive.to_vec())
+        .min_quorum(need.min(profiles.len()))
+        .build()
+        .expect("coformer_degraded: invalid arguments");
+    let run = registry::CoFormerDegraded.run(&scenario).map(|out| {
+        let rep = out.replication.expect("coformer-family outcome carries replication stats");
+        let quorum = rep.quorum;
+        let deg =
+            DegradedOutcome { outcome: out.core, quorum, central: rep.central };
+        (deg, quorum)
+    });
+    legacy_quorum_check(run, need).map(|(out, _)| out)
+}
+
+/// CoFormer aggregate-edge with warm-standby replication (ISSUE 2): member
+/// `i`'s primary host is device `i`; when the primary is dead the member
+/// runs on its ring standby, so a death costs no aggregation arity.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a strategies::Scenario (.replicas) and run \
+            registry::CoFormerReplicated (README \"Public API\")"
+)]
+#[allow(clippy::too_many_arguments)]
+pub fn coformer_replicated(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    archs: &[Arch],
+    d_i: usize,
+    batch: usize,
+    alive: &[bool],
+    replicas: usize,
+    min_quorum: usize,
+) -> Result<DegradedOutcome, SimError> {
+    assert!(replicas >= 1, "replicas must be >= 1");
+    let need = min_quorum.max(1);
+    let scenario = Scenario::builder()
+        .fleet(profiles.to_vec())
+        .topology(topo.clone())
+        .archs(archs.to_vec())
+        .d_i(d_i)
+        .batch(batch)
+        .alive(alive.to_vec())
+        .replicas(replicas.min(profiles.len()))
+        .min_quorum(need.min(profiles.len()))
+        .build()
+        .expect("coformer_replicated: invalid arguments");
+    let run = registry::CoFormerReplicated.run(&scenario).map(|out| {
+        let rep = out.replication.expect("coformer-family outcome carries replication stats");
+        let quorum = rep.quorum;
+        let deg =
+            DegradedOutcome { outcome: out.core, quorum, central: rep.central };
+        (deg, quorum)
+    });
+    legacy_quorum_check(run, need).map(|(out, _)| out)
+}
+
+/// CoFormer aggregate-edge under the elastic replication policy (ISSUE 3):
+/// always-replicate (`elide_standbys = false`) vs primaries-only
+/// (`elide_standbys = true`).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a strategies::Scenario (.replicas/.dispatch) and call \
+            Scenario::run (README \"Public API\")"
+)]
+#[allow(clippy::too_many_arguments)]
+pub fn coformer_elastic(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    archs: &[Arch],
+    d_i: usize,
+    batch: usize,
+    alive: &[bool],
+    replicas: usize,
+    min_quorum: usize,
+    elide_standbys: bool,
+) -> Result<ElasticOutcome, SimError> {
+    assert!(replicas >= 1, "replicas must be >= 1");
+    let need = min_quorum.max(1);
+    let dispatch = if elide_standbys { DispatchMode::Elided } else { DispatchMode::Full };
+    let scenario = Scenario::builder()
+        .fleet(profiles.to_vec())
+        .topology(topo.clone())
+        .archs(archs.to_vec())
+        .d_i(d_i)
+        .batch(batch)
+        .alive(alive.to_vec())
+        .replicas(replicas.min(profiles.len()))
+        .min_quorum(need.min(profiles.len()))
+        .dispatch(dispatch)
+        .build()
+        .expect("coformer_elastic: invalid arguments");
+    let run = run_elastic_scenario(&scenario).map(|el| {
+        let quorum = el.quorum;
+        (el, quorum)
+    });
+    legacy_quorum_check(run, need).map(|(el, _)| el)
+}
+
 /// One pipeline segment: compute + activation payload to the next stage.
 #[derive(Clone, Copy, Debug)]
 pub struct Segment {
@@ -324,9 +451,9 @@ pub struct Segment {
     pub memory_bytes: usize,
 }
 
-/// Pipe-edge (Fig. 2a / EdgeShard): segments execute sequentially, each
-/// device idle before its turn and after finishing.
-pub fn pipe_edge(
+/// Pipe-edge core (Fig. 2a / EdgeShard): segments execute sequentially,
+/// each device idle before its turn and after finishing.
+pub(crate) fn run_pipe_edge(
     profiles: &[DeviceProfile],
     topo: &Topology,
     segments: &[Segment],
@@ -362,11 +489,25 @@ pub fn pipe_edge(
     Ok(out)
 }
 
-/// Distri-edge tensor parallel (Fig. 2b): each layer's work is sharded
-/// across all devices; every layer ends with `syncs_per_layer` all-gather
-/// rounds of `shard_bytes` activations. Galaxy ⇒ 2 syncs/layer,
-/// DeTransformer ⇒ ~0.5 (one sync per 2-layer block).
-pub fn tensor_parallel(
+/// Pipe-edge (Fig. 2a / EdgeShard).
+#[deprecated(
+    since = "0.2.0",
+    note = "use strategies::registry::PipeEdge::with_segments on a Scenario \
+            (README \"Public API\")"
+)]
+pub fn pipe_edge(
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    segments: &[Segment],
+) -> Result<StrategyOutcome, SimError> {
+    run_pipe_edge(profiles, topo, segments)
+}
+
+/// Tensor-parallel core (Fig. 2b): each layer's work is sharded across all
+/// devices; every layer ends with `syncs_per_layer` all-gather rounds of
+/// `shard_bytes` activations.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_tensor_parallel(
     name: &str,
     profiles: &[DeviceProfile],
     topo: &Topology,
@@ -424,8 +565,38 @@ pub fn tensor_parallel(
     Ok(out)
 }
 
-/// Single-edge (Fig. 2c): the whole model on one device.
-pub fn single_edge(
+/// Distri-edge tensor parallel (Fig. 2b). Galaxy ⇒ 2 syncs/layer,
+/// DeTransformer ⇒ ~0.5 (one sync per 2-layer block).
+#[deprecated(
+    since = "0.2.0",
+    note = "use strategies::registry::TensorParallel on a Scenario \
+            (README \"Public API\")"
+)]
+#[allow(clippy::too_many_arguments)]
+pub fn tensor_parallel(
+    name: &str,
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    total_flops: f64,
+    layers: usize,
+    shard_bytes: usize,
+    syncs_per_layer: f64,
+    memory_per_device: usize,
+) -> Result<StrategyOutcome, SimError> {
+    run_tensor_parallel(
+        name,
+        profiles,
+        topo,
+        total_flops,
+        layers,
+        shard_bytes,
+        syncs_per_layer,
+        memory_per_device,
+    )
+}
+
+/// Single-edge core (Fig. 2c): the whole model on one device.
+pub(crate) fn run_single_edge(
     profile: &DeviceProfile,
     flops: f64,
     memory_bytes: usize,
@@ -437,10 +608,22 @@ pub fn single_edge(
     Ok(finish(vec![d], "single-edge", total, &[memory_bytes], 0))
 }
 
-/// Ensemble (DeViT / Fig. 6): N full models run concurrently; per-device
-/// logits (tiny) are sent to the central node and fused. Latency is gated
-/// by the slowest member — the paper's ">200% latency" ensemble downside.
-pub fn ensemble(
+/// Single-edge (Fig. 2c): the whole model on one device.
+#[deprecated(
+    since = "0.2.0",
+    note = "use strategies::registry::SingleEdge::standalone (README \"Public API\")"
+)]
+pub fn single_edge(
+    profile: &DeviceProfile,
+    flops: f64,
+    memory_bytes: usize,
+) -> Result<StrategyOutcome, SimError> {
+    run_single_edge(profile, flops, memory_bytes)
+}
+
+/// Ensemble core (DeViT / Fig. 6): N full models run concurrently;
+/// per-device logits (tiny) are sent to the central node and fused.
+pub(crate) fn run_ensemble(
     name: &str,
     profiles: &[DeviceProfile],
     topo: &Topology,
@@ -473,8 +656,29 @@ pub fn ensemble(
     Ok(out)
 }
 
+/// Ensemble (DeViT / Fig. 6): latency is gated by the slowest member — the
+/// paper's ">200% latency" ensemble downside.
+#[deprecated(
+    since = "0.2.0",
+    note = "use strategies::registry::Ensemble on a Scenario (README \"Public API\")"
+)]
+pub fn ensemble(
+    name: &str,
+    profiles: &[DeviceProfile],
+    topo: &Topology,
+    member_flops: &[f64],
+    member_memory: &[usize],
+    logit_bytes: usize,
+) -> Result<StrategyOutcome, SimError> {
+    run_ensemble(name, profiles, topo, member_flops, member_memory, logit_bytes)
+}
+
 #[cfg(test)]
 mod tests {
+    use super::registry::{
+        CoFormer, CoFormerDegraded, CoFormerElastic, CoFormerReplicated, Ensemble, PipeEdge,
+        SingleEdge, TensorParallel,
+    };
     use super::*;
     use crate::model::Mode;
     use crate::net::Link;
@@ -495,93 +699,93 @@ mod tests {
         ]
     }
 
+    /// Healthy 3-device base scenario at `mbps`.
+    fn base(mbps: f64) -> Scenario {
+        Scenario::builder()
+            .fleet(fleet())
+            .topology(topo(mbps))
+            .archs(sub_archs())
+            .d_i(64)
+            .batch(1)
+            .build()
+            .unwrap()
+    }
+
+    fn with_faults(
+        mbps: f64,
+        alive: [bool; 3],
+        replicas: usize,
+        min_quorum: usize,
+        dispatch: DispatchMode,
+    ) -> Scenario {
+        base(mbps)
+            .to_builder()
+            .alive(alive.to_vec())
+            .replicas(replicas)
+            .min_quorum(min_quorum)
+            .dispatch(dispatch)
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn coformer_single_comm_round() {
-        let out = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-        assert_eq!(out.comm_rounds, 1);
-        assert!(out.total_s > 0.0);
-        assert_eq!(out.devices.len(), 3);
+        let out = CoFormer.run(&base(100.0)).unwrap();
+        assert_eq!(out.core.comm_rounds, 1);
+        assert_eq!(out.name(), "coformer");
+        assert!(out.total_s() > 0.0);
+        assert_eq!(out.core.devices.len(), 3);
     }
 
     #[test]
     fn coformer_total_is_eq3() {
-        let out = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+        let out = CoFormer.run(&base(100.0)).unwrap();
         // total >= every device's compute+transmit
-        for d in &out.devices {
-            assert!(out.total_s >= d.compute_s + d.transmit_s - 1e-12);
+        for d in &out.core.devices {
+            assert!(out.total_s() >= d.compute_s + d.transmit_s - 1e-12);
         }
     }
 
     #[test]
     fn degraded_with_all_alive_matches_coformer() {
-        let full = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-        let deg = coformer_degraded(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &[true, true, true],
-            1,
-        )
-        .unwrap();
-        assert_eq!(deg.quorum, 3);
-        assert_eq!(deg.central, 1);
-        assert!((deg.outcome.total_s - full.total_s).abs() < 1e-15);
+        let full = CoFormer.run(&base(100.0)).unwrap();
+        let s = with_faults(100.0, [true, true, true], 1, 1, DispatchMode::Elided);
+        let deg = CoFormerDegraded.run(&s).unwrap();
+        let rep = deg.replication.unwrap();
+        assert_eq!(rep.quorum, 3);
+        assert_eq!(rep.central, 1);
+        assert_eq!(deg.name(), "coformer-degraded");
+        assert!((deg.total_s() - full.total_s()).abs() < 1e-15);
     }
 
     #[test]
     fn degraded_killing_slowest_member_never_hurts() {
         // device 0 (nano) is the latency gate; dropping it can only help
-        let full = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-        let deg = coformer_degraded(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &[false, true, true],
-            1,
-        )
-        .unwrap();
-        assert_eq!(deg.quorum, 2);
-        assert!(deg.outcome.total_s <= full.total_s + 1e-12);
+        let full = CoFormer.run(&base(100.0)).unwrap();
+        let s = with_faults(100.0, [false, true, true], 1, 1, DispatchMode::Elided);
+        let deg = CoFormerDegraded.run(&s).unwrap();
+        assert_eq!(deg.replication.unwrap().quorum, 2);
+        assert!(deg.total_s() <= full.total_s() + 1e-12);
         // the dead device's timeline stays zeroed
-        assert_eq!(deg.outcome.devices[0].compute_s, 0.0);
-        assert_eq!(deg.outcome.devices[0].energy_j, 0.0);
+        assert_eq!(deg.core.devices[0].compute_s, 0.0);
+        assert_eq!(deg.core.devices[0].energy_j, 0.0);
     }
 
     #[test]
     fn degraded_central_death_moves_aggregation() {
         // kill the TX2 central (idx 1): the Orin (idx 2) is the fastest
         // survivor and should host aggregation with free local transfer
-        let deg = coformer_degraded(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &[true, false, true],
-            2,
-        )
-        .unwrap();
-        assert_eq!(deg.central, 2);
-        assert_eq!(deg.outcome.devices[2].transmit_s, 0.0);
-        assert!(deg.outcome.devices[0].transmit_s > 0.0);
+        let s = with_faults(100.0, [true, false, true], 1, 2, DispatchMode::Elided);
+        let deg = CoFormerDegraded.run(&s).unwrap();
+        assert_eq!(deg.replication.unwrap().central, 2);
+        assert_eq!(deg.core.devices[2].transmit_s, 0.0);
+        assert!(deg.core.devices[0].transmit_s > 0.0);
     }
 
     #[test]
     fn degraded_below_quorum_errors() {
-        let err = coformer_degraded(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &[false, false, true],
-            2,
-        )
-        .unwrap_err();
+        let s = with_faults(100.0, [false, false, true], 1, 2, DispatchMode::Elided);
+        let err = CoFormerDegraded.run(&s).unwrap_err();
         assert_eq!(err, SimError::QuorumNotMet { have: 1, need: 2 });
     }
 
@@ -589,20 +793,12 @@ mod tests {
     fn replicated_all_alive_matches_coformer() {
         // with nobody dead every member runs on its primary: the replicated
         // timeline is exactly the healthy aggregate-edge timeline
-        let full = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-        let rep = coformer_replicated(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &[true, true, true],
-            2,
-            1,
-        )
-        .unwrap();
-        assert_eq!(rep.quorum, 3);
-        assert!((rep.outcome.total_s - full.total_s).abs() < 1e-15);
+        let full = CoFormer.run(&base(100.0)).unwrap();
+        let s = with_faults(100.0, [true, true, true], 2, 1, DispatchMode::Elided);
+        let rep = CoFormerReplicated.run(&s).unwrap();
+        assert_eq!(rep.replication.unwrap().quorum, 3);
+        assert_eq!(rep.name(), "coformer-replicated");
+        assert!((rep.total_s() - full.total_s()).abs() < 1e-15);
     }
 
     #[test]
@@ -611,46 +807,31 @@ mod tests {
         // replication factor of 2 the ring standby (device 1) adopts member
         // 0 and the Eq. 2 input stays full width (quorum 3)
         let alive = [false, true, true];
-        let deg = coformer_degraded(&fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 1)
-            .unwrap();
-        let rep = coformer_replicated(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &alive,
-            2,
-            1,
-        )
-        .unwrap();
-        assert_eq!(deg.quorum, 2);
-        assert_eq!(rep.quorum, 3, "replica keeps the dead member in the quorum");
+        let sd = with_faults(100.0, alive, 1, 1, DispatchMode::Elided);
+        let deg = CoFormerDegraded.run(&sd).unwrap();
+        let sr = with_faults(100.0, alive, 2, 1, DispatchMode::Elided);
+        let rep = CoFormerReplicated.run(&sr).unwrap();
+        assert_eq!(deg.replication.unwrap().quorum, 2);
+        assert_eq!(
+            rep.replication.unwrap().quorum,
+            3,
+            "replica keeps the dead member in the quorum"
+        );
         // availability is paid for in latency and energy on the survivor
-        assert!(rep.outcome.total_s >= deg.outcome.total_s - 1e-15);
-        assert!(rep.outcome.total_energy_j() > deg.outcome.total_energy_j());
+        assert!(rep.total_s() >= deg.total_s() - 1e-15);
+        assert!(rep.total_energy_j() > deg.total_energy_j());
         // the adopting device (1) runs two members' compute
-        assert!(rep.outcome.devices[1].compute_s > deg.outcome.devices[1].compute_s);
-        assert_eq!(rep.outcome.devices[0].compute_s, 0.0, "dead stays zeroed");
+        assert!(rep.core.devices[1].compute_s > deg.core.devices[1].compute_s);
+        assert_eq!(rep.core.devices[0].compute_s, 0.0, "dead stays zeroed");
     }
 
     #[test]
     fn replicated_factor_one_degrades_like_unreplicated() {
         // replicas = 1 means no standby: a death shrinks the quorum exactly
-        // as in coformer_degraded
-        let alive = [false, true, true];
-        let rep = coformer_replicated(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &alive,
-            1,
-            1,
-        )
-        .unwrap();
-        assert_eq!(rep.quorum, 2);
+        // as in the degraded strategy
+        let s = with_faults(100.0, [false, true, true], 1, 1, DispatchMode::Elided);
+        let rep = CoFormerReplicated.run(&s).unwrap();
+        assert_eq!(rep.replication.unwrap().quorum, 2);
     }
 
     #[test]
@@ -658,17 +839,8 @@ mod tests {
         // two deaths with factor 2: member 0's primary (0) and standby (1)
         // are both gone, so only members 1 and 2 are covered — and a
         // min_quorum of 3 must fail
-        let err = coformer_replicated(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &[false, false, true],
-            2,
-            3,
-        )
-        .unwrap_err();
+        let s = with_faults(100.0, [false, false, true], 2, 3, DispatchMode::Elided);
+        let err = CoFormerReplicated.run(&s).unwrap_err();
         assert_eq!(err, SimError::QuorumNotMet { have: 2, need: 3 });
     }
 
@@ -676,23 +848,14 @@ mod tests {
     fn elastic_elided_healthy_fleet_matches_coformer() {
         // primaries-only on a healthy fleet is exactly the aggregate-edge
         // timeline: elision costs nothing when nothing is being masked
-        let full = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-        let el = coformer_elastic(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &[true, true, true],
-            2,
-            1,
-            true,
-        )
-        .unwrap();
-        assert_eq!(el.quorum, 3);
-        assert_eq!(el.copies_run, 3);
-        assert!((el.outcome.total_s - full.total_s).abs() < 1e-15);
-        assert!(el.standby_gflops_saved > 0.0, "the skipped standbys are accounted");
+        let full = CoFormer.run(&base(100.0)).unwrap();
+        let s = with_faults(100.0, [true, true, true], 2, 1, DispatchMode::Elided);
+        let el = s.run().unwrap();
+        let r = el.replication.unwrap();
+        assert_eq!(r.quorum, 3);
+        assert_eq!(r.copies_run, 3);
+        assert!((el.total_s() - full.total_s()).abs() < 1e-15);
+        assert!(r.standby_gflops_saved > 0.0, "the skipped standbys are accounted");
     }
 
     #[test]
@@ -701,19 +864,14 @@ mod tests {
         // host, a later slowest-device gate, more energy — the cost the
         // elastic scheduler recovers under pressure
         let alive = [true, true, true];
-        let el = coformer_elastic(
-            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, true,
-        )
-        .unwrap();
-        let rep = coformer_elastic(
-            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, false,
-        )
-        .unwrap();
-        assert_eq!(rep.copies_run, 6, "every live ring copy executes");
-        assert_eq!(rep.quorum, 3, "redundancy adds copies, not arity");
-        assert_eq!(rep.standby_gflops_saved, 0.0);
-        assert!(rep.outcome.total_s > el.outcome.total_s, "redundant compute gates later");
-        assert!(rep.outcome.total_energy_j() > el.outcome.total_energy_j());
+        let el = with_faults(100.0, alive, 2, 1, DispatchMode::Elided).run().unwrap();
+        let rep = with_faults(100.0, alive, 2, 1, DispatchMode::Full).run().unwrap();
+        let rr = rep.replication.unwrap();
+        assert_eq!(rr.copies_run, 6, "every live ring copy executes");
+        assert_eq!(rr.quorum, 3, "redundancy adds copies, not arity");
+        assert_eq!(rr.standby_gflops_saved, 0.0);
+        assert!(rep.total_s() > el.total_s(), "redundant compute gates later");
+        assert!(rep.total_energy_j() > el.total_energy_j());
     }
 
     #[test]
@@ -721,88 +879,96 @@ mod tests {
         // kill device 0 under primaries-only: member 0 runs on its ring
         // standby (device 1) — availability survives elision
         let alive = [false, true, true];
-        let el = coformer_elastic(
-            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, true,
-        )
-        .unwrap();
-        assert_eq!(el.quorum, 3, "the promoted standby keeps full arity");
-        assert_eq!(el.copies_run, 3);
-        assert_eq!(el.outcome.devices[0].compute_s, 0.0, "dead stays zeroed");
+        let el = with_faults(100.0, alive, 2, 1, DispatchMode::Elided).run().unwrap();
+        let r = el.replication.unwrap();
+        assert_eq!(r.quorum, 3, "the promoted standby keeps full arity");
+        assert_eq!(r.copies_run, 3);
+        assert_eq!(el.core.devices[0].compute_s, 0.0, "dead stays zeroed");
         // ... while the no-replica baseline loses the member
-        let deg = coformer_degraded(&fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 1)
-            .unwrap();
-        assert_eq!(deg.quorum, 2);
+        let sd = with_faults(100.0, alive, 1, 1, DispatchMode::Elided);
+        let deg = CoFormerDegraded.run(&sd).unwrap();
+        assert_eq!(deg.replication.unwrap().quorum, 2);
     }
 
     #[test]
     fn elastic_matches_replicated_scoring_path() {
-        // coformer_replicated is the elided elastic timeline by delegation;
+        // CoFormerReplicated is the elided elastic timeline by delegation;
         // the two paths must agree exactly (they share one model)
         let alive = [false, true, true];
-        let rep = coformer_replicated(
-            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1,
-        )
-        .unwrap();
-        let el = coformer_elastic(
-            &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, true,
-        )
-        .unwrap();
-        assert_eq!(rep.quorum, el.quorum);
-        assert_eq!(rep.central, el.central);
-        assert!((rep.outcome.total_s - el.outcome.total_s).abs() < 1e-15);
+        let s = with_faults(100.0, alive, 2, 1, DispatchMode::Elided);
+        let rep = CoFormerReplicated.run(&s).unwrap();
+        let el = CoFormerElastic.run(&s).unwrap();
+        assert_eq!(rep.replication.unwrap().quorum, el.replication.unwrap().quorum);
+        assert_eq!(rep.replication.unwrap().central, el.replication.unwrap().central);
+        assert!((rep.total_s() - el.total_s()).abs() < 1e-15);
     }
 
     #[test]
     fn elastic_below_quorum_errors() {
-        let err = coformer_elastic(
-            &fleet(),
-            &topo(100.0),
-            &sub_archs(),
-            64,
-            1,
-            &[false, false, true],
-            2,
-            3,
-            false,
-        )
-        .unwrap_err();
+        let s = with_faults(100.0, [false, false, true], 2, 3, DispatchMode::Full);
+        let err = s.run().unwrap_err();
         assert_eq!(err, SimError::QuorumNotMet { have: 2, need: 3 });
+    }
+
+    fn deit_ish_segment(f: f64) -> Segment {
+        Segment { flops: f, activation_bytes: 64 << 10, memory_bytes: 1 << 20 }
     }
 
     #[test]
     fn pipe_edge_high_idle_fraction() {
         // Fig. 3: sequential pipeline idles devices >50% even in 3 stages
-        let seg = |f: f64| Segment { flops: f, activation_bytes: 64 << 10, memory_bytes: 1 << 20 };
-        let out = pipe_edge(&fleet(), &topo(100.0), &[seg(3e9), seg(3e9), seg(6e9)]).unwrap();
+        let pipe = PipeEdge::with_segments(vec![
+            deit_ish_segment(3e9),
+            deit_ish_segment(3e9),
+            deit_ish_segment(6e9),
+        ]);
+        let out = pipe.run(&base(100.0)).unwrap();
         assert!(
             out.idle_fraction() > 0.5,
             "pipe idle fraction {}",
             out.idle_fraction()
         );
+        assert!(out.replication.is_none(), "baselines carry no replication stats");
     }
 
     #[test]
     fn coformer_lower_idle_than_pipe() {
-        let cof = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-        let seg = |f: f64| Segment { flops: f, activation_bytes: 64 << 10, memory_bytes: 1 << 20 };
-        let pipe = pipe_edge(&fleet(), &topo(100.0), &[seg(3e9), seg(3e9), seg(6e9)]).unwrap();
+        let s = base(100.0);
+        let cof = CoFormer.run(&s).unwrap();
+        let pipe = PipeEdge::with_segments(vec![
+            deit_ish_segment(3e9),
+            deit_ish_segment(3e9),
+            deit_ish_segment(6e9),
+        ])
+        .run(&s)
+        .unwrap();
         assert!(cof.idle_fraction() < pipe.idle_fraction());
+    }
+
+    #[test]
+    fn pipe_edge_derives_segments_from_archs() {
+        // the registry default derives one segment per member arch
+        let out = PipeEdge::default().run(&base(100.0)).unwrap();
+        assert_eq!(out.core.devices.len(), 3);
+        assert_eq!(out.core.comm_rounds, 2);
+        assert!(out.total_s() > 0.0);
+    }
+
+    fn galaxy(syncs: f64, name: &str) -> TensorParallel {
+        TensorParallel {
+            label: name.into(),
+            syncs_per_layer: syncs,
+            total_flops: Some(17.6e9),
+            layers: Some(12),
+            shard_bytes: Some(17 * 768 * 4), // DeiT-B-ish activation shard
+            memory_per_device: Some(1 << 30),
+        }
     }
 
     #[test]
     fn tensor_parallel_transmission_dominates_at_2mbps() {
         // Fig. 4: distri-edge at 2 Mb/s spends >40% of latency transmitting
-        let out = tensor_parallel(
-            "galaxy",
-            &fleet(),
-            &topo(2.0),
-            17.6e9,
-            12,
-            17 * 768 * 4, // DeiT-B-ish activation shard
-            2.0,
-            1 << 30,
-        )
-        .unwrap();
+        let out = galaxy(2.0, "galaxy").run(&base(2.0)).unwrap();
         assert!(
             out.transmit_fraction() > 0.4,
             "transmit fraction {}",
@@ -812,69 +978,65 @@ mod tests {
 
     #[test]
     fn detransformer_fewer_syncs_than_galaxy() {
-        let mk = |syncs: f64, name: &str| {
-            tensor_parallel(name, &fleet(), &topo(100.0), 17.6e9, 12, 17 * 768 * 4, syncs, 1 << 30)
-                .unwrap()
-        };
-        let galaxy = mk(2.0, "galaxy");
-        let detr = mk(0.5, "detransformer");
-        assert!(detr.comm_rounds < galaxy.comm_rounds);
-        assert!(detr.total_s < galaxy.total_s);
+        let s = base(100.0);
+        let g = galaxy(2.0, "galaxy").run(&s).unwrap();
+        let detr = galaxy(0.5, "detransformer").run(&s).unwrap();
+        assert!(detr.core.comm_rounds < g.core.comm_rounds);
+        assert!(detr.total_s() < g.total_s());
     }
 
     #[test]
     fn coformer_faster_than_galaxy_at_low_bandwidth() {
         // Fig. 10/12's headline ordering
-        let cof = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-        let galaxy = tensor_parallel(
-            "galaxy",
-            &fleet(),
-            &topo(100.0),
-            9e9,
-            4,
-            17 * 96 * 4,
-            2.0,
-            1 << 30,
-        )
+        let s = base(100.0);
+        let cof = CoFormer.run(&s).unwrap();
+        let g = TensorParallel {
+            label: "galaxy".into(),
+            syncs_per_layer: 2.0,
+            total_flops: Some(9e9),
+            layers: Some(4),
+            shard_bytes: Some(17 * 96 * 4),
+            memory_per_device: Some(1 << 30),
+        }
+        .run(&s)
         .unwrap();
-        assert!(cof.total_s < galaxy.total_s);
+        assert!(cof.total_s() < g.total_s());
     }
 
     #[test]
     fn single_edge_oom_for_large_model() {
         // GPT2-XL (7.8 GB) on a 4 GB Nano → OOM (Fig. 9's "OOM" marks)
         let nano = DeviceProfile::jetson_nano();
-        let r = single_edge(&nano, 3340e9, (78 << 30) / 10);
+        let r = SingleEdge::standalone(&nano, 3340e9, (78 << 30) / 10);
         assert!(r.is_err());
     }
 
     #[test]
     fn single_edge_fits_small_model() {
         let tx2 = DeviceProfile::jetson_tx2();
-        let out = single_edge(&tx2, 17.6e9, 2 << 30).unwrap();
-        assert!((0.1..0.2).contains(&out.total_s), "DeiT-B on TX2: {}", out.total_s);
+        let out = SingleEdge::standalone(&tx2, 17.6e9, 2 << 30).unwrap();
+        assert!((0.1..0.2).contains(&out.total_s()), "DeiT-B on TX2: {}", out.total_s());
     }
 
     #[test]
     fn ensemble_gated_by_slowest() {
-        let out = ensemble(
-            "devit",
-            &fleet(),
-            &topo(100.0),
-            &[5e9, 5e9, 5e9],
-            &[1 << 28, 1 << 28, 1 << 28],
-            20 * 4,
-        )
+        let out = Ensemble {
+            label: "devit".into(),
+            member_flops: Some(vec![5e9, 5e9, 5e9]),
+            member_memory: Some(vec![1 << 28, 1 << 28, 1 << 28]),
+            logit_bytes: Some(20 * 4),
+        }
+        .run(&base(100.0))
         .unwrap();
         // nano (device 0) is slowest → total ≈ nano's time
-        let nano_busy = out.devices[0].compute_s + out.devices[0].transmit_s;
-        assert!((out.total_s - nano_busy).abs() / out.total_s < 0.05);
+        let nano_busy = out.core.devices[0].compute_s + out.core.devices[0].transmit_s;
+        assert!((out.total_s() - nano_busy).abs() / out.total_s() < 0.05);
     }
 
     #[test]
     fn energy_scales_with_busy_time() {
-        let out = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-        for d in &out.devices {
+        let out = CoFormer.run(&base(100.0)).unwrap();
+        for d in &out.core.devices {
             assert!(d.energy_j > 0.0);
         }
         // more flops → more energy
@@ -883,15 +1045,152 @@ mod tests {
             Arch::uniform(Mode::Patch, 4, 40, 24, 1, 80, 20),
             Arch::uniform(Mode::Patch, 4, 8, 24, 1, 16, 20),
         ];
-        let out2 = coformer(&fleet(), &topo(100.0), &big, 64, 1).unwrap();
-        assert!(out2.devices[0].energy_j > out.devices[0].energy_j);
+        let s2 = base(100.0).to_builder().archs(big).build().unwrap();
+        let out2 = CoFormer.run(&s2).unwrap();
+        assert!(out2.core.devices[0].energy_j > out.core.devices[0].energy_j);
     }
 
     #[test]
     fn bandwidth_sweep_coformer_improves() {
         // Fig. 12: coformer gains with bandwidth but is robust at 100 Mb/s
-        let t100 = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap().total_s;
-        let t1g = coformer(&fleet(), &topo(1000.0), &sub_archs(), 64, 1).unwrap().total_s;
+        let t100 = CoFormer.run(&base(100.0)).unwrap().total_s();
+        let t1g = CoFormer.run(&base(1000.0)).unwrap().total_s();
         assert!(t1g <= t100);
+    }
+
+    /// The deprecated free functions delegate to the same core simulations
+    /// as the Scenario/registry path: every number must agree exactly.
+    #[allow(deprecated)]
+    mod wrapper_equivalence {
+        use super::*;
+
+        #[test]
+        fn coformer_wrapper_matches_registry() {
+            let old = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
+            let new = CoFormer.run(&base(100.0)).unwrap();
+            assert_eq!(old.name, new.core.name);
+            assert_eq!(old.total_s, new.core.total_s);
+            assert_eq!(old.comm_rounds, new.core.comm_rounds);
+            for (a, b) in old.devices.iter().zip(&new.core.devices) {
+                assert_eq!(a.compute_s, b.compute_s);
+                assert_eq!(a.transmit_s, b.transmit_s);
+                assert_eq!(a.idle_s, b.idle_s);
+                assert_eq!(a.energy_j, b.energy_j);
+                assert_eq!(a.memory_bytes, b.memory_bytes);
+            }
+        }
+
+        #[test]
+        fn degraded_wrapper_matches_registry() {
+            let alive = [true, false, true];
+            let old = coformer_degraded(
+                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2,
+            )
+            .unwrap();
+            let s = with_faults(100.0, alive, 1, 2, DispatchMode::Elided);
+            let new = CoFormerDegraded.run(&s).unwrap();
+            let r = new.replication.unwrap();
+            assert_eq!(old.outcome.name, new.core.name);
+            assert_eq!(old.outcome.total_s, new.core.total_s);
+            assert_eq!(old.quorum, r.quorum);
+            assert_eq!(old.central, r.central);
+        }
+
+        #[test]
+        fn replicated_wrapper_matches_registry() {
+            let alive = [false, true, true];
+            let old = coformer_replicated(
+                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1,
+            )
+            .unwrap();
+            let s = with_faults(100.0, alive, 2, 1, DispatchMode::Elided);
+            let new = CoFormerReplicated.run(&s).unwrap();
+            let r = new.replication.unwrap();
+            assert_eq!(old.outcome.name, new.core.name);
+            assert_eq!(old.outcome.total_s, new.core.total_s);
+            assert_eq!(old.quorum, r.quorum);
+            assert_eq!(old.central, r.central);
+        }
+
+        #[test]
+        fn elastic_wrapper_matches_scenario_run() {
+            for (elide, mode) in
+                [(true, DispatchMode::Elided), (false, DispatchMode::Full)]
+            {
+                let alive = [false, true, true];
+                let old = coformer_elastic(
+                    &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, elide,
+                )
+                .unwrap();
+                let new = with_faults(100.0, alive, 2, 1, mode).run().unwrap();
+                let r = new.replication.unwrap();
+                assert_eq!(old.outcome.name, new.core.name);
+                assert_eq!(old.outcome.total_s, new.core.total_s);
+                assert_eq!(old.quorum, r.quorum);
+                assert_eq!(old.central, r.central);
+                assert_eq!(old.copies_run, r.copies_run);
+                assert_eq!(old.standby_gflops_saved, r.standby_gflops_saved);
+            }
+        }
+
+        #[test]
+        fn wrappers_keep_the_legacy_error_contract() {
+            // min_quorum beyond the fleet used to surface as a typed
+            // QuorumNotMet with the raw demand — it must not become a panic
+            let err = coformer_degraded(
+                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &[true, true, true], 4,
+            )
+            .unwrap_err();
+            assert_eq!(err, SimError::QuorumNotMet { have: 3, need: 4 });
+            let err = coformer_elastic(
+                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &[false, true, true], 1, 5, true,
+            )
+            .unwrap_err();
+            assert_eq!(err, SimError::QuorumNotMet { have: 2, need: 5 });
+            // a replication factor beyond the fleet size clamps to the ring
+            // (every device already hosts every member) instead of panicking
+            let rep = coformer_replicated(
+                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &[false, true, true], 9, 1,
+            )
+            .unwrap();
+            assert_eq!(rep.quorum, 3);
+        }
+
+        #[test]
+        fn baseline_wrappers_match_registry() {
+            let s = base(100.0);
+            let segs =
+                vec![deit_ish_segment(3e9), deit_ish_segment(3e9), deit_ish_segment(6e9)];
+            let old = pipe_edge(&fleet(), &topo(100.0), &segs).unwrap();
+            let new = PipeEdge::with_segments(segs).run(&s).unwrap();
+            assert_eq!(old.total_s, new.core.total_s);
+
+            let old = tensor_parallel(
+                "galaxy", &fleet(), &topo(100.0), 17.6e9, 12, 17 * 768 * 4, 2.0, 1 << 30,
+            )
+            .unwrap();
+            let new = galaxy(2.0, "galaxy").run(&s).unwrap();
+            assert_eq!(old.total_s, new.core.total_s);
+            assert_eq!(old.comm_rounds, new.core.comm_rounds);
+
+            let tx2 = DeviceProfile::jetson_tx2();
+            let old = single_edge(&tx2, 17.6e9, 2 << 30).unwrap();
+            let new = SingleEdge::standalone(&tx2, 17.6e9, 2 << 30).unwrap();
+            assert_eq!(old.total_s, new.core.total_s);
+
+            let old = ensemble(
+                "devit", &fleet(), &topo(100.0), &[5e9; 3], &[1 << 28; 3], 80,
+            )
+            .unwrap();
+            let new = Ensemble {
+                label: "devit".into(),
+                member_flops: Some(vec![5e9; 3]),
+                member_memory: Some(vec![1 << 28; 3]),
+                logit_bytes: Some(80),
+            }
+            .run(&s)
+            .unwrap();
+            assert_eq!(old.total_s, new.core.total_s);
+        }
     }
 }

@@ -1,0 +1,389 @@
+//! The strategy registry: every execution scheme the paper compares —
+//! CoFormer's aggregate-edge family and the baseline families of Fig. 2 —
+//! as [`Strategy`] impls over one shared [`Scenario`], resolvable by name
+//! through [`lookup`].
+//!
+//! The CoFormer impls read everything from the scenario (aliveness,
+//! replication, quorum, dispatch mode). The baseline impls carry their own
+//! shape parameters with scenario-derived defaults, so they run on any
+//! scenario out of the box and accept the exact paper parameters when a
+//! figure needs them. All impls delegate to the same core timeline
+//! simulations as the deprecated free functions, so the two paths can
+//! never drift apart.
+
+use crate::device::{DeviceProfile, SimError};
+use crate::model::CostModel;
+
+use super::scenario::{DispatchMode, Outcome, Scenario, Strategy};
+use super::Segment;
+
+/// Every name [`lookup`] resolves, in registry order.
+pub const NAMES: [&str; 8] = [
+    "coformer",
+    "coformer_degraded",
+    "coformer_replicated",
+    "coformer_elastic",
+    "pipe_edge",
+    "tensor_parallel",
+    "single_edge",
+    "ensemble",
+];
+
+/// Resolve a strategy by registry name (parameterized baselines resolve to
+/// their scenario-derived default shapes). Hyphens and underscores are
+/// interchangeable, so the keys in [`NAMES`] and the values
+/// [`Strategy::name`] reports both resolve.
+pub fn lookup(name: &str) -> Option<Box<dyn Strategy + Send + Sync>> {
+    match name.replace('-', "_").as_str() {
+        "coformer" => Some(Box::new(CoFormer)),
+        "coformer_degraded" => Some(Box::new(CoFormerDegraded)),
+        "coformer_replicated" => Some(Box::new(CoFormerReplicated)),
+        "coformer_elastic" => Some(Box::new(CoFormerElastic)),
+        "pipe_edge" => Some(Box::new(PipeEdge::default())),
+        "tensor_parallel" => Some(Box::new(TensorParallel::default())),
+        "single_edge" => Some(Box::new(SingleEdge::default())),
+        "ensemble" => Some(Box::new(Ensemble::default())),
+        _ => None,
+    }
+}
+
+/// Rebuild a scenario with some axes pinned. The input scenario is already
+/// valid and the pinned values satisfy the builder's invariants by
+/// construction (all-true aliveness, replicas 1, quorum 1), so this cannot
+/// fail.
+fn pinned(
+    s: &Scenario,
+    alive: Option<Vec<bool>>,
+    replicas: Option<usize>,
+    min_quorum: Option<usize>,
+    dispatch: Option<DispatchMode>,
+) -> Scenario {
+    let mut b = s.to_builder();
+    if let Some(a) = alive {
+        b = b.alive(a);
+    }
+    if let Some(r) = replicas {
+        b = b.replicas(r);
+    }
+    if let Some(q) = min_quorum {
+        b = b.min_quorum(q);
+    }
+    if let Some(d) = dispatch {
+        b = b.dispatch(d);
+    }
+    b.build().expect("pinning axes of a valid scenario preserves validity")
+}
+
+/// CoFormer aggregate-edge on the healthy fleet (paper §III-A): the
+/// scenario's aliveness/replication/quorum axes are pinned to the healthy
+/// single-copy case — use [`CoFormerDegraded`] / [`CoFormerReplicated`] /
+/// [`CoFormerElastic`] to honor them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoFormer;
+
+impl Strategy for CoFormer {
+    fn name(&self) -> &str {
+        "coformer"
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        let healthy = pinned(
+            scenario,
+            Some(vec![true; scenario.fleet().len()]),
+            Some(1),
+            Some(1),
+            Some(DispatchMode::Elided),
+        );
+        let mut out = healthy.run()?;
+        out.core.name = "coformer".into();
+        Ok(out)
+    }
+}
+
+/// CoFormer under partial failure (k-of-n): honors the scenario's
+/// aliveness mask and `min_quorum`, with no replicas to mask deaths.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoFormerDegraded;
+
+impl Strategy for CoFormerDegraded {
+    fn name(&self) -> &str {
+        "coformer_degraded"
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        let s = pinned(scenario, None, Some(1), None, Some(DispatchMode::Elided));
+        let mut out = s.run()?;
+        out.core.name = "coformer-degraded".into();
+        Ok(out)
+    }
+}
+
+/// CoFormer with warm-standby replication: honors aliveness, `replicas`
+/// and `min_quorum`; a dead primary's ring standby adopts its member so a
+/// death costs no aggregation arity.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoFormerReplicated;
+
+impl Strategy for CoFormerReplicated {
+    fn name(&self) -> &str {
+        "coformer_replicated"
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        let s = pinned(scenario, None, None, None, Some(DispatchMode::Elided));
+        let mut out = s.run()?;
+        out.core.name = "coformer-replicated".into();
+        Ok(out)
+    }
+}
+
+/// CoFormer under the elastic replication policy: the scenario verbatim,
+/// including its [`DispatchMode`] (always-replicate vs primaries-only).
+/// Equivalent to [`Scenario::run`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoFormerElastic;
+
+impl Strategy for CoFormerElastic {
+    fn name(&self) -> &str {
+        "coformer_elastic"
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        scenario.run()
+    }
+}
+
+/// Pipe-edge (Fig. 2a / EdgeShard): segments execute sequentially, each
+/// device idle before its turn and after finishing.
+///
+/// Default segments are derived per member from the scenario: segment `i`
+/// computes member `i`'s FLOPs and hands its feature payload to the next
+/// stage, at the member's resident memory — the "same decomposition,
+/// pipelined instead of parallel" baseline. Override with
+/// [`PipeEdge::with_segments`] for exact paper splits.
+#[derive(Clone, Debug, Default)]
+pub struct PipeEdge {
+    /// Explicit pipeline segments (must match the fleet size), or `None`
+    /// to derive them from the scenario's archs.
+    pub segments: Option<Vec<Segment>>,
+}
+
+impl PipeEdge {
+    pub fn with_segments(segments: Vec<Segment>) -> Self {
+        PipeEdge { segments: Some(segments) }
+    }
+}
+
+impl Strategy for PipeEdge {
+    fn name(&self) -> &str {
+        "pipe_edge"
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        let segments: Vec<Segment> = match &self.segments {
+            Some(v) => v.clone(),
+            None => scenario
+                .archs()
+                .iter()
+                .map(|a| Segment {
+                    flops: CostModel::flops_per_sample(a) * scenario.batch() as f64,
+                    activation_bytes: a.feature_bytes() * scenario.batch(),
+                    memory_bytes: CostModel::memory_bytes(a, scenario.batch()),
+                })
+                .collect(),
+        };
+        super::run_pipe_edge(scenario.fleet(), scenario.topology(), &segments)
+            .map(Outcome::core_only)
+    }
+}
+
+/// Distri-edge tensor parallel (Fig. 2b): each layer's work sharded across
+/// all devices with `syncs_per_layer` all-gather rounds per layer. Galaxy
+/// ⇒ 2 syncs/layer, DeTransformer ⇒ ~0.5 (one sync per 2-layer block).
+///
+/// Unset shape fields are derived from the scenario: total FLOPs and
+/// resident memory are the member sums (the same model, sharded instead of
+/// decomposed), layer count comes from the first arch, and the per-sync
+/// shard is the mean member feature payload.
+#[derive(Clone, Debug)]
+pub struct TensorParallel {
+    /// Display name for the outcome row (e.g. "galaxy", "detransformer").
+    pub label: String,
+    /// All-gather rounds per layer.
+    pub syncs_per_layer: f64,
+    pub total_flops: Option<f64>,
+    pub layers: Option<usize>,
+    pub shard_bytes: Option<usize>,
+    pub memory_per_device: Option<usize>,
+}
+
+impl Default for TensorParallel {
+    fn default() -> Self {
+        TensorParallel {
+            label: "tensor_parallel".into(),
+            syncs_per_layer: 2.0,
+            total_flops: None,
+            layers: None,
+            shard_bytes: None,
+            memory_per_device: None,
+        }
+    }
+}
+
+impl Strategy for TensorParallel {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        let n = scenario.fleet().len();
+        let batch = scenario.batch() as f64;
+        let total_flops = self.total_flops.unwrap_or_else(|| {
+            scenario.archs().iter().map(CostModel::flops_per_sample).sum::<f64>() * batch
+        });
+        let layers = self
+            .layers
+            .unwrap_or_else(|| scenario.archs()[0].layers)
+            .max(1);
+        let shard_bytes = self.shard_bytes.unwrap_or_else(|| {
+            scenario.archs().iter().map(|a| a.feature_bytes()).sum::<usize>() / n
+                * scenario.batch()
+        });
+        let memory_per_device = self.memory_per_device.unwrap_or_else(|| {
+            scenario
+                .archs()
+                .iter()
+                .map(|a| CostModel::memory_bytes(a, scenario.batch()))
+                .sum::<usize>()
+                / n
+        });
+        super::run_tensor_parallel(
+            &self.label,
+            scenario.fleet(),
+            scenario.topology(),
+            total_flops,
+            layers,
+            shard_bytes,
+            self.syncs_per_layer,
+            memory_per_device,
+        )
+        .map(Outcome::core_only)
+    }
+}
+
+/// Single-edge (Fig. 2c): the whole model on one device. By default the
+/// central device runs the sum of the scenario's member FLOPs/memory (the
+/// "no decomposition at matched FLOPs" baseline); the outcome has exactly
+/// one device timeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SingleEdge {
+    /// Fleet index of the hosting device (default: the topology's
+    /// central). Must be in range — `run` panics on a stale index rather
+    /// than silently scoring the wrong device.
+    pub device: Option<usize>,
+    pub flops: Option<f64>,
+    pub memory_bytes: Option<usize>,
+}
+
+impl SingleEdge {
+    /// Score one model on one device with no fleet scenario at all — the
+    /// catalog baselines of Table I/II and the OOM headlines of Fig. 9.
+    pub fn standalone(
+        profile: &DeviceProfile,
+        flops: f64,
+        memory_bytes: usize,
+    ) -> Result<Outcome, SimError> {
+        super::run_single_edge(profile, flops, memory_bytes).map(Outcome::core_only)
+    }
+}
+
+impl Strategy for SingleEdge {
+    fn name(&self) -> &str {
+        "single_edge"
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        let idx = self.device.unwrap_or(scenario.topology().central);
+        assert!(
+            idx < scenario.fleet().len(),
+            "SingleEdge.device {idx} is out of range for a fleet of {}",
+            scenario.fleet().len()
+        );
+        let batch = scenario.batch();
+        let flops = self.flops.unwrap_or_else(|| {
+            scenario.archs().iter().map(CostModel::flops_per_sample).sum::<f64>()
+                * batch as f64
+        });
+        let memory_bytes = self.memory_bytes.unwrap_or_else(|| {
+            scenario
+                .archs()
+                .iter()
+                .map(|a| CostModel::memory_bytes(a, batch))
+                .sum()
+        });
+        SingleEdge::standalone(&scenario.fleet()[idx], flops, memory_bytes)
+    }
+}
+
+/// Ensemble (DeViT / Fig. 6): every member model runs in full on its own
+/// device; per-device logits (tiny) are fused at the central node, so
+/// latency is gated by the slowest member. Default member shapes come from
+/// the scenario's archs; the logit payload defaults to
+/// `num_classes × 4 bytes` per sample.
+#[derive(Clone, Debug)]
+pub struct Ensemble {
+    /// Display name for the outcome row (e.g. "devit").
+    pub label: String,
+    pub member_flops: Option<Vec<f64>>,
+    pub member_memory: Option<Vec<usize>>,
+    pub logit_bytes: Option<usize>,
+}
+
+impl Default for Ensemble {
+    fn default() -> Self {
+        Ensemble {
+            label: "ensemble".into(),
+            member_flops: None,
+            member_memory: None,
+            logit_bytes: None,
+        }
+    }
+}
+
+impl Strategy for Ensemble {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        let batch = scenario.batch();
+        let member_flops: Vec<f64> = match &self.member_flops {
+            Some(v) => v.clone(),
+            None => scenario
+                .archs()
+                .iter()
+                .map(|a| CostModel::flops_per_sample(a) * batch as f64)
+                .collect(),
+        };
+        let member_memory: Vec<usize> = match &self.member_memory {
+            Some(v) => v.clone(),
+            None => scenario
+                .archs()
+                .iter()
+                .map(|a| CostModel::memory_bytes(a, batch))
+                .collect(),
+        };
+        let logit_bytes = self
+            .logit_bytes
+            .unwrap_or_else(|| scenario.archs()[0].num_classes * 4 * batch);
+        super::run_ensemble(
+            &self.label,
+            scenario.fleet(),
+            scenario.topology(),
+            &member_flops,
+            &member_memory,
+            logit_bytes,
+        )
+        .map(Outcome::core_only)
+    }
+}

@@ -1,0 +1,460 @@
+//! The unified scenario specification behind every execution strategy
+//! (ISSUE 4): one validated spec struct — fleet, topology, sub-model
+//! architectures, aggregator input width, batch size, aliveness mask,
+//! replication factor, quorum and dispatch mode — built through a fluent
+//! [`ScenarioBuilder`] that returns typed [`ScenarioError`]s instead of
+//! panicking, plus the [`Strategy`] trait every simulation scheme
+//! implements and the composed [`Outcome`] they all return.
+//!
+//! Three PRs of fault-tolerance features had grown the simulator into four
+//! `coformer*` free functions taking 8–9 positional arguments with a
+//! boolean mode flag; a new axis meant another positional argument on
+//! every call site. A [`Scenario`] names each axis once, validates the
+//! cross-field invariants in one place, and hands the same spec to every
+//! strategy — so a new scenario is a new [`Strategy`] impl, not another
+//! parameter.
+
+use std::fmt;
+
+use crate::device::{DeviceProfile, SimError};
+use crate::model::Arch;
+use crate::net::Topology;
+
+use super::StrategyOutcome;
+
+/// How the CoFormer family dispatches member copies when `replicas > 1`.
+///
+/// Mirrors the serving coordinator's extreme replica modes: `Full` runs
+/// every live ring copy of every member (redundant compute and feature
+/// transfers, the always-replicate dispatch), `Elided` runs only the first
+/// live copy per member — the primary, or the promoted ring standby when
+/// the primary is dead. With `replicas == 1` the two are identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Every live copy of every member executes.
+    Full,
+    /// Primaries only (first live copy per member); skipped standby
+    /// compute is reported in [`ReplicationOutcome::standby_gflops_saved`].
+    Elided,
+}
+
+/// Typed error from [`ScenarioBuilder::build`]. Every invariant violation
+/// is reported as data — the builder never panics.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScenarioError {
+    /// No devices were supplied.
+    EmptyFleet,
+    /// No topology was supplied (set one with [`ScenarioBuilder::topology`]).
+    MissingTopology,
+    /// A per-device list (`archs`, `alive`, topology links) does not match
+    /// the fleet size.
+    LengthMismatch {
+        what: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// The topology's central index does not name a fleet device.
+    CentralOutOfRange { central: usize, n: usize },
+    /// `batch` must be at least 1.
+    ZeroBatch,
+    /// A bandwidth override must be finite and positive.
+    InvalidBandwidth { mbps: f64 },
+    /// `replicas` must be in `[1, n]` (each copy needs a distinct device).
+    InvalidReplicas { replicas: usize, n: usize },
+    /// `min_quorum` must be in `[1, n]` (0 would aggregate nothing into
+    /// garbage; more than `n` can never be met).
+    InvalidMinQuorum { min_quorum: usize, n: usize },
+}
+
+impl fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScenarioError::EmptyFleet => {
+                write!(f, "scenario fleet is empty (at least one device is required)")
+            }
+            ScenarioError::MissingTopology => {
+                write!(f, "scenario has no topology (set one with ScenarioBuilder::topology)")
+            }
+            ScenarioError::LengthMismatch { what, expected, got } => write!(
+                f,
+                "scenario {what} length {got} does not match the fleet size {expected}"
+            ),
+            ScenarioError::CentralOutOfRange { central, n } => write!(
+                f,
+                "scenario central index {central} is out of range for {n} devices"
+            ),
+            ScenarioError::ZeroBatch => write!(f, "scenario batch must be >= 1"),
+            ScenarioError::InvalidBandwidth { mbps } => write!(
+                f,
+                "scenario bandwidth override {mbps} Mb/s must be finite and > 0"
+            ),
+            ScenarioError::InvalidReplicas { replicas, n } => write!(
+                f,
+                "scenario replicas {replicas} must be in [1, {n}] (each copy needs \
+                 a distinct device)"
+            ),
+            ScenarioError::InvalidMinQuorum { min_quorum, n } => write!(
+                f,
+                "scenario min_quorum {min_quorum} must be in [1, {n}]"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// A validated simulation scenario: the one spec every [`Strategy`] runs
+/// against. Construct with [`Scenario::builder`]; all cross-field
+/// invariants (matching lengths, quorum and replication bounds) hold by
+/// construction.
+///
+/// ```
+/// use coformer::device::DeviceProfile;
+/// use coformer::model::{Arch, Mode};
+/// use coformer::net::{Link, Topology};
+/// use coformer::strategies::Scenario;
+///
+/// let archs = vec![
+///     Arch::uniform(Mode::Patch, 2, 24, 24, 1, 48, 20),
+///     Arch::uniform(Mode::Patch, 3, 32, 24, 1, 64, 20),
+///     Arch::uniform(Mode::Patch, 3, 40, 24, 2, 80, 20),
+/// ];
+/// let scenario = Scenario::builder()
+///     .fleet(DeviceProfile::paper_fleet())
+///     .topology(Topology::star(3, Link::mbps(100.0), 1))
+///     .archs(archs)
+///     .d_i(64)
+///     .batch(1)
+///     .build()
+///     .unwrap();
+/// let out = scenario.run().unwrap();
+/// assert!(out.total_s() > 0.0);
+/// assert_eq!(out.replication.unwrap().quorum, 3);
+/// ```
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub(crate) fleet: Vec<DeviceProfile>,
+    pub(crate) topo: Topology,
+    pub(crate) archs: Vec<Arch>,
+    pub(crate) d_i: usize,
+    pub(crate) batch: usize,
+    pub(crate) alive: Vec<bool>,
+    pub(crate) replicas: usize,
+    pub(crate) min_quorum: usize,
+    pub(crate) dispatch: DispatchMode,
+}
+
+impl Scenario {
+    /// Start a fluent builder (defaults: `d_i` 64, `batch` 1, everyone
+    /// alive, `replicas` 1, `min_quorum` 1, [`DispatchMode::Full`]).
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder::default()
+    }
+
+    /// Re-open this scenario as a builder (clone, tweak axes, rebuild —
+    /// the [`super::sweep::Sweep`] runner's per-point mechanism).
+    pub fn to_builder(&self) -> ScenarioBuilder {
+        ScenarioBuilder {
+            fleet: self.fleet.clone(),
+            topology: Some(self.topo.clone()),
+            archs: self.archs.clone(),
+            alive: Some(self.alive.clone()),
+            d_i: self.d_i,
+            batch: self.batch,
+            replicas: self.replicas,
+            min_quorum: self.min_quorum,
+            dispatch: self.dispatch,
+            bandwidth_mbps: None,
+        }
+    }
+
+    /// Run the canonical CoFormer aggregate-edge simulation this scenario
+    /// describes (the elastic-replication timeline: aliveness, replication
+    /// factor, quorum and dispatch mode all honored). Named strategies —
+    /// including every baseline — run through
+    /// [`super::registry::lookup`] or the [`Strategy`] impls directly.
+    pub fn run(&self) -> Result<Outcome, SimError> {
+        super::run_elastic_scenario(self).map(Outcome::from_elastic)
+    }
+
+    pub fn fleet(&self) -> &[DeviceProfile] {
+        &self.fleet
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn archs(&self) -> &[Arch] {
+        &self.archs
+    }
+
+    /// Aggregator input width `d_i` (Eq. 2).
+    pub fn d_i(&self) -> usize {
+        self.d_i
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn min_quorum(&self) -> usize {
+        self.min_quorum
+    }
+
+    pub fn dispatch(&self) -> DispatchMode {
+        self.dispatch
+    }
+}
+
+/// Fluent builder for [`Scenario`]; every setter takes and returns `self`
+/// and [`ScenarioBuilder::build`] returns typed [`ScenarioError`]s.
+#[derive(Clone, Debug)]
+pub struct ScenarioBuilder {
+    fleet: Vec<DeviceProfile>,
+    topology: Option<Topology>,
+    archs: Vec<Arch>,
+    alive: Option<Vec<bool>>,
+    d_i: usize,
+    batch: usize,
+    replicas: usize,
+    min_quorum: usize,
+    dispatch: DispatchMode,
+    bandwidth_mbps: Option<f64>,
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        ScenarioBuilder {
+            fleet: Vec::new(),
+            topology: None,
+            archs: Vec::new(),
+            alive: None,
+            d_i: 64,
+            batch: 1,
+            replicas: 1,
+            min_quorum: 1,
+            dispatch: DispatchMode::Full,
+            bandwidth_mbps: None,
+        }
+    }
+}
+
+impl ScenarioBuilder {
+    /// The edge fleet; index order matches member order.
+    pub fn fleet(mut self, fleet: Vec<DeviceProfile>) -> Self {
+        self.fleet = fleet;
+        self
+    }
+
+    /// The network topology (must cover exactly the fleet).
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topology = Some(topo);
+        self
+    }
+
+    /// Reshape every topology link to this bandwidth at build time (the
+    /// `tc` knob; what the sweep runner's bandwidth axis turns).
+    pub fn bandwidth_mbps(mut self, mbps: f64) -> Self {
+        self.bandwidth_mbps = Some(mbps);
+        self
+    }
+
+    /// Per-member sub-model architectures (one per device).
+    pub fn archs(mut self, archs: Vec<Arch>) -> Self {
+        self.archs = archs;
+        self
+    }
+
+    /// Aliveness mask (defaults to everyone alive).
+    pub fn alive(mut self, alive: Vec<bool>) -> Self {
+        self.alive = Some(alive);
+        self
+    }
+
+    /// Aggregator input width `d_i` (Eq. 2; default 64).
+    pub fn d_i(mut self, d_i: usize) -> Self {
+        self.d_i = d_i;
+        self
+    }
+
+    /// Samples per inference (default 1).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Live copies per member in ring order (default 1 = no replication).
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    /// Minimum member feature sets required to aggregate (default 1).
+    pub fn min_quorum(mut self, min_quorum: usize) -> Self {
+        self.min_quorum = min_quorum;
+        self
+    }
+
+    /// Replica dispatch mode (default [`DispatchMode::Full`]).
+    pub fn dispatch(mut self, dispatch: DispatchMode) -> Self {
+        self.dispatch = dispatch;
+        self
+    }
+
+    /// Validate every cross-field invariant and produce the [`Scenario`].
+    pub fn build(self) -> Result<Scenario, ScenarioError> {
+        if self.fleet.is_empty() {
+            return Err(ScenarioError::EmptyFleet);
+        }
+        let n = self.fleet.len();
+        let mut topo = self.topology.ok_or(ScenarioError::MissingTopology)?;
+        if let Some(mbps) = self.bandwidth_mbps {
+            if !mbps.is_finite() || mbps <= 0.0 {
+                return Err(ScenarioError::InvalidBandwidth { mbps });
+            }
+            topo.set_bandwidth_mbps(mbps);
+        }
+        if topo.n_devices() != n {
+            return Err(ScenarioError::LengthMismatch {
+                what: "topology links",
+                expected: n,
+                got: topo.n_devices(),
+            });
+        }
+        if topo.central >= n {
+            return Err(ScenarioError::CentralOutOfRange { central: topo.central, n });
+        }
+        if self.archs.len() != n {
+            return Err(ScenarioError::LengthMismatch {
+                what: "archs",
+                expected: n,
+                got: self.archs.len(),
+            });
+        }
+        let alive = self.alive.unwrap_or_else(|| vec![true; n]);
+        if alive.len() != n {
+            return Err(ScenarioError::LengthMismatch {
+                what: "alive",
+                expected: n,
+                got: alive.len(),
+            });
+        }
+        if self.batch == 0 {
+            return Err(ScenarioError::ZeroBatch);
+        }
+        if self.replicas == 0 || self.replicas > n {
+            return Err(ScenarioError::InvalidReplicas { replicas: self.replicas, n });
+        }
+        if self.min_quorum == 0 || self.min_quorum > n {
+            return Err(ScenarioError::InvalidMinQuorum { min_quorum: self.min_quorum, n });
+        }
+        Ok(Scenario {
+            fleet: self.fleet,
+            topo,
+            archs: self.archs,
+            d_i: self.d_i,
+            batch: self.batch,
+            alive,
+            replicas: self.replicas,
+            min_quorum: self.min_quorum,
+            dispatch: self.dispatch,
+        })
+    }
+}
+
+/// Replication-aware extras of a CoFormer-family [`Outcome`] (absent for
+/// the baselines, which have no members/quorum semantics).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicationOutcome {
+    /// Distinct members that contributed features (k of n).
+    pub quorum: usize,
+    /// Device that hosted aggregation (falls back off a dead central node).
+    pub central: usize,
+    /// Member copies executed this inference.
+    pub copies_run: usize,
+    /// Standby compute skipped vs always-replicate, GFLOPs (0 when not
+    /// eliding).
+    pub standby_gflops_saved: f64,
+}
+
+/// Unified result of running any [`Strategy`] on a [`Scenario`]: the core
+/// per-device timeline every strategy produces, composed with the
+/// replication extras the CoFormer family adds. Supersedes the legacy
+/// `DegradedOutcome` / `ElasticOutcome` wrappers by composition.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    /// Per-device busy/idle/transmit/energy/memory timeline.
+    pub core: StrategyOutcome,
+    /// Quorum/central/copies accounting, present for the CoFormer family.
+    pub replication: Option<ReplicationOutcome>,
+}
+
+impl Outcome {
+    /// Wrap a baseline timeline (no replication semantics).
+    pub fn core_only(core: StrategyOutcome) -> Self {
+        Outcome { core, replication: None }
+    }
+
+    pub(crate) fn from_elastic(el: super::ElasticOutcome) -> Self {
+        Outcome {
+            core: el.outcome,
+            replication: Some(ReplicationOutcome {
+                quorum: el.quorum,
+                central: el.central,
+                copies_run: el.copies_run,
+                standby_gflops_saved: el.standby_gflops_saved,
+            }),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.core.name
+    }
+
+    /// End-to-end latency, seconds.
+    pub fn total_s(&self) -> f64 {
+        self.core.total_s
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.core.total_energy_j()
+    }
+
+    pub fn idle_fraction(&self) -> f64 {
+        self.core.idle_fraction()
+    }
+
+    pub fn transmit_fraction(&self) -> f64 {
+        self.core.transmit_fraction()
+    }
+
+    pub fn peak_memory_bytes(&self) -> usize {
+        self.core.peak_memory_bytes()
+    }
+}
+
+/// One execution strategy scored against a [`Scenario`]. Implementations
+/// live in [`super::registry`] (CoFormer family + every baseline the paper
+/// compares against); new scenarios are new impls, not new positional
+/// arguments.
+pub trait Strategy {
+    /// Stable registry-style key (used for [`super::sweep::SweepPoint`]
+    /// rows and error attribution). For the built-in impls this equals the
+    /// [`super::registry::lookup`] name, so a name queried through
+    /// `run_named` round-trips into the points it produced.
+    fn name(&self) -> &str;
+
+    /// Score the scenario. Build-time invariants are already guaranteed by
+    /// [`ScenarioBuilder::build`]; runtime failures (memory admission,
+    /// quorum not met) surface as [`SimError`].
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError>;
+}

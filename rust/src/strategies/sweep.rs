@@ -1,0 +1,211 @@
+//! Data-driven sweep runner: drive any set of [`Strategy`] impls across
+//! scenario axes (bandwidth, batch size, replication factor, dispatch
+//! mode) from one base [`Scenario`] — the engine behind the `paper`
+//! binary's comparison tables and the serving examples, replacing their
+//! hand-rolled nested loops.
+//!
+//! Axes left unset stay at the base scenario's value, so a sweep is
+//! exactly as wide as the axes it names. Points are emitted in a
+//! deterministic nested order: bandwidth → batch → replicas → dispatch →
+//! strategy (the strategy list innermost), so callers can chunk the flat
+//! result by strategy count to recover one table row per axis combination.
+//!
+//! ```
+//! use coformer::device::DeviceProfile;
+//! use coformer::model::{Arch, Mode};
+//! use coformer::net::{Link, Topology};
+//! use coformer::strategies::{Scenario, Sweep};
+//!
+//! let base = Scenario::builder()
+//!     .fleet(DeviceProfile::paper_fleet())
+//!     .topology(Topology::star(3, Link::mbps(100.0), 1))
+//!     .archs(vec![Arch::uniform(Mode::Patch, 2, 24, 24, 1, 48, 20); 3])
+//!     .build()
+//!     .unwrap();
+//! let points = Sweep::new(base)
+//!     .bandwidths_mbps(&[100.0, 1000.0])
+//!     .run_named(&["coformer", "pipe_edge"])
+//!     .unwrap();
+//! assert_eq!(points.len(), 4); // 2 bandwidths × 2 strategies
+//! assert!(points[2].outcome.total_s() <= points[0].outcome.total_s());
+//! ```
+
+use std::fmt;
+
+use crate::device::SimError;
+
+use super::registry;
+use super::scenario::{DispatchMode, Outcome, Scenario, ScenarioError, Strategy};
+
+/// One sweep point: the axis values it was run at plus the outcome.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// [`Strategy::name`] of the strategy that produced the outcome.
+    pub strategy: String,
+    pub bandwidth_mbps: f64,
+    pub batch: usize,
+    pub replicas: usize,
+    pub dispatch: DispatchMode,
+    pub outcome: Outcome,
+}
+
+/// Typed sweep failure: an axis combination that cannot form a valid
+/// scenario, a strategy name the registry does not know, or a simulation
+/// error (attributed to the strategy that raised it).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SweepError {
+    UnknownStrategy(String),
+    Scenario(ScenarioError),
+    Sim { strategy: String, error: SimError },
+}
+
+impl fmt::Display for SweepError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SweepError::UnknownStrategy(name) => {
+                write!(f, "unknown strategy {name:?} (see strategies::registry::NAMES)")
+            }
+            SweepError::Scenario(e) => write!(f, "sweep point is not a valid scenario: {e}"),
+            SweepError::Sim { strategy, error } => {
+                write!(f, "strategy {strategy} failed: {error}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+/// The sweep spec: a base scenario plus the axes to vary.
+#[derive(Clone, Debug)]
+pub struct Sweep {
+    base: Scenario,
+    bandwidths_mbps: Vec<f64>,
+    batches: Vec<usize>,
+    replicas: Vec<usize>,
+    dispatch: Vec<DispatchMode>,
+}
+
+impl Sweep {
+    /// A sweep with no axes set: one point per strategy, at the base
+    /// scenario's values.
+    pub fn new(base: Scenario) -> Self {
+        Sweep {
+            base,
+            bandwidths_mbps: Vec::new(),
+            batches: Vec::new(),
+            replicas: Vec::new(),
+            dispatch: Vec::new(),
+        }
+    }
+
+    /// Vary link bandwidth (every topology link reshaped per point).
+    pub fn bandwidths_mbps(mut self, v: &[f64]) -> Self {
+        self.bandwidths_mbps = v.to_vec();
+        self
+    }
+
+    /// Vary the per-inference batch size.
+    pub fn batches(mut self, v: &[usize]) -> Self {
+        self.batches = v.to_vec();
+        self
+    }
+
+    /// Vary the replication factor.
+    pub fn replicas(mut self, v: &[usize]) -> Self {
+        self.replicas = v.to_vec();
+        self
+    }
+
+    /// Vary the replica dispatch mode.
+    pub fn dispatch_modes(mut self, v: &[DispatchMode]) -> Self {
+        self.dispatch = v.to_vec();
+        self
+    }
+
+    /// Run registry strategies by name across the axis cross-product.
+    pub fn run_named(&self, names: &[&str]) -> Result<Vec<SweepPoint>, SweepError> {
+        let boxed: Vec<Box<dyn Strategy + Send + Sync>> = names
+            .iter()
+            .map(|n| {
+                registry::lookup(n).ok_or_else(|| SweepError::UnknownStrategy(n.to_string()))
+            })
+            .collect::<Result<_, _>>()?;
+        let refs: Vec<&dyn Strategy> = boxed
+            .iter()
+            .map(|b| {
+                let s: &dyn Strategy = b.as_ref();
+                s
+            })
+            .collect();
+        self.run(&refs)
+    }
+
+    /// Run the given strategies across the axis cross-product, in the
+    /// documented bandwidth → batch → replicas → dispatch → strategy order.
+    pub fn run(&self, strategies: &[&dyn Strategy]) -> Result<Vec<SweepPoint>, SweepError> {
+        // `None` = keep the base scenario's value for this axis
+        let bws: Vec<Option<f64>> = if self.bandwidths_mbps.is_empty() {
+            vec![None]
+        } else {
+            self.bandwidths_mbps.iter().map(|&b| Some(b)).collect()
+        };
+        let base_bw = self
+            .base
+            .topology()
+            .links
+            .first()
+            .map(|l| l.bandwidth_bps / 1e6)
+            .unwrap_or(0.0);
+        let batches =
+            if self.batches.is_empty() { vec![self.base.batch()] } else { self.batches.clone() };
+        let replicas = if self.replicas.is_empty() {
+            vec![self.base.replicas()]
+        } else {
+            self.replicas.clone()
+        };
+        let dispatch = if self.dispatch.is_empty() {
+            vec![self.base.dispatch()]
+        } else {
+            self.dispatch.clone()
+        };
+
+        let mut points = Vec::with_capacity(
+            bws.len() * batches.len() * replicas.len() * dispatch.len() * strategies.len(),
+        );
+        for &bw in &bws {
+            for &batch in &batches {
+                for &rep in &replicas {
+                    for &mode in &dispatch {
+                        let mut b = self
+                            .base
+                            .to_builder()
+                            .batch(batch)
+                            .replicas(rep)
+                            .dispatch(mode);
+                        if let Some(mbps) = bw {
+                            b = b.bandwidth_mbps(mbps);
+                        }
+                        let scenario = b.build().map_err(SweepError::Scenario)?;
+                        for strat in strategies {
+                            let outcome = strat.run(&scenario).map_err(|error| {
+                                SweepError::Sim {
+                                    strategy: strat.name().to_string(),
+                                    error,
+                                }
+                            })?;
+                            points.push(SweepPoint {
+                                strategy: strat.name().to_string(),
+                                bandwidth_mbps: bw.unwrap_or(base_bw),
+                                batch,
+                                replicas: rep,
+                                dispatch: mode,
+                                outcome,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(points)
+    }
+}

@@ -1,0 +1,407 @@
+//! ISSUE 4 acceptance suite for the unified public API:
+//!
+//! * the two coordinator start paths are reachable through `ServeBuilder`
+//!   and the deprecated `Coordinator::start_with_faults` wrapper delegates
+//!   to it — identical serving results on the deterministic stub harness;
+//! * `config::from_json` and `ServeBuilder::start` reject the same bad
+//!   configs (both funnel through `SystemConfig::validate`);
+//! * a custom `PressureSignal` impl drops in through the trait and drives
+//!   the elision ladder where the default signal would not;
+//! * the sweep runner exercises the replicas/dispatch axes end to end.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use coformer::config::{
+    DeviceSpec, ElisionPolicy, FaultPolicy, ReplicationPolicy, SystemConfig,
+};
+use coformer::coordinator::{
+    Coordinator, CoordinatorHandle, EwmaLatencySignal, FleetPressure, InferenceResponse,
+    PressureContext, PressureSignal, ServeBuilder, ServeStats,
+};
+use coformer::device::FaultScript;
+use coformer::model::{Arch, Mode};
+use coformer::runtime::manifest::DeploymentMeta;
+use coformer::runtime::{ExecServer, StubSpec};
+use coformer::strategies::registry::{CoFormer, CoFormerElastic};
+use coformer::strategies::{DispatchMode, Scenario, Strategy, Sweep};
+use coformer::util::Json;
+
+const FLEET: usize = 4;
+const CLASSES: usize = 4;
+
+fn arch() -> Arch {
+    Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, CLASSES)
+}
+
+fn x_stride() -> usize {
+    let a = arch();
+    a.tokens() * a.patch_dim()
+}
+
+fn stub_server() -> (ExecServer, DeploymentMeta) {
+    let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), arch())).collect(),
+        classes: CLASSES,
+    };
+    let server = ExecServer::start_stub(spec).unwrap();
+    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: HashMap::new() };
+    (server, dep)
+}
+
+fn base_config() -> SystemConfig {
+    let mut config = SystemConfig::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device
+    config.deployment = "stub_4dev".into();
+    config.aggregator = "average".into();
+    config.max_batch = 4;
+    config.max_wait_ms = 100;
+    config
+}
+
+fn round(handle: &CoordinatorHandle, n: usize) -> Vec<InferenceResponse> {
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let label = i % CLASSES;
+            let rx = handle
+                .submit(coformer::coordinator::RequestPayload::F32(vec![
+                    label as f32;
+                    x_stride()
+                ]))
+                .expect("round submits stay within the admission limit");
+            (label, rx)
+        })
+        .collect();
+    rxs.into_iter()
+        .map(|(label, rx)| {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("reply must arrive")
+                .expect("round batches must serve");
+            assert_eq!(resp.prediction, label);
+            resp
+        })
+        .collect()
+}
+
+/// Serve three deterministic rounds through a coordinator and return its
+/// final stats (quorums asserted inside `round`).
+fn serve_rounds(coord: Coordinator) -> ServeStats {
+    let handle = coord.handle();
+    for _ in 0..3 {
+        for r in round(&handle, 4) {
+            assert!(r.quorum >= 3);
+        }
+    }
+    coord.shutdown().unwrap()
+}
+
+#[test]
+fn deprecated_start_with_faults_delegates_to_serve_builder() {
+    // identical scripts + policies through both start paths: the wrapper
+    // must produce the identical deterministic serving ledger
+    let mut scripts: Vec<FaultScript> = (0..FLEET).map(|_| FaultScript::none()).collect();
+    scripts[2] = FaultScript::crash_at(1);
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let replication = ReplicationPolicy { replicas: 2, ..ReplicationPolicy::default() };
+
+    let (server_a, dep_a) = stub_server();
+    let via_builder = serve_rounds(
+        ServeBuilder::new(base_config(), server_a.handle(), dep_a, vec![arch(); FLEET], x_stride())
+            .fault(fault)
+            .replication(replication)
+            .fault_scripts(scripts.clone())
+            .start()
+            .unwrap(),
+    );
+    drop(server_a);
+
+    let (server_b, dep_b) = stub_server();
+    let mut config = base_config();
+    config.fault = fault;
+    config.replication = replication;
+    #[allow(deprecated)]
+    let coord = Coordinator::start_with_faults(
+        config,
+        server_b.handle(),
+        dep_b,
+        vec![arch(); FLEET],
+        x_stride(),
+        scripts,
+    )
+    .unwrap();
+    let via_wrapper = serve_rounds(coord);
+    drop(server_b);
+
+    assert_eq!(via_builder.requests, via_wrapper.requests);
+    assert_eq!(via_builder.batches, via_wrapper.batches);
+    assert_eq!(via_builder.fault.crashes, via_wrapper.fault.crashes);
+    assert_eq!(via_builder.fault.promotions, via_wrapper.fault.promotions);
+    assert_eq!(via_builder.fault.quorum_failures, via_wrapper.fault.quorum_failures);
+    assert_eq!(
+        via_builder.fault.quorum_histogram(),
+        via_wrapper.fault.quorum_histogram()
+    );
+}
+
+#[test]
+fn json_and_serve_builder_reject_the_same_bad_configs() {
+    // ISSUE 4 satellite: policy validation used to be duplicated between
+    // config::from_json and coordinator startup; both now funnel through
+    // SystemConfig::validate, so the same bad configs die on both paths
+    // with the same diagnostic.
+    let devices_json = r#"["jetson-nano","jetson-tx2","jetson-orin-nano","rpi-4b"]"#;
+    let cases: Vec<(&str, Box<dyn Fn(&mut SystemConfig)>, &str)> = vec![
+        (
+            r#""fault":{"min_quorum":0}"#,
+            Box::new(|c| c.fault.min_quorum = 0),
+            "min_quorum",
+        ),
+        (
+            r#""fault":{"min_quorum":9}"#,
+            Box::new(|c| c.fault.min_quorum = 9),
+            "unsatisfiable",
+        ),
+        (
+            r#""fault":{"deadline_factor":0.5}"#,
+            Box::new(|c| c.fault.deadline_factor = 0.5),
+            "deadline_factor",
+        ),
+        (
+            r#""replication":{"replicas":0}"#,
+            Box::new(|c| c.replication.replicas = 0),
+            "replicas",
+        ),
+        (
+            r#""replication":{"replicas":9}"#,
+            Box::new(|c| c.replication.replicas = 9),
+            "replicas",
+        ),
+        (
+            r#""replication":{"max_queue_depth":2000000}"#,
+            Box::new(|c| c.replication.max_queue_depth = 2_000_000),
+            "max_queue_depth",
+        ),
+        (
+            r#""replication":{"elision":{"low_watermark":0.9,"high_watermark":0.5}}"#,
+            Box::new(|c| {
+                c.replication.elision.low_watermark = 0.9;
+                c.replication.elision.high_watermark = 0.5;
+            }),
+            "low_watermark",
+        ),
+        (
+            r#""replication":{"elision":{"hold_batches":0}}"#,
+            Box::new(|c| c.replication.elision.hold_batches = 0),
+            "hold_batches",
+        ),
+        (
+            r#""replication":{"max_queue_depth":0,"elision":{"enabled":true}}"#,
+            Box::new(|c| {
+                c.replication.max_queue_depth = 0;
+                c.replication.elision.enabled = true;
+            }),
+            "no pressure signal",
+        ),
+        (r#""central":9"#, Box::new(|c| c.central = 9), "central"),
+    ];
+
+    let (server, dep) = stub_server();
+    for (json_fragment, mutate, expect) in cases {
+        // path 1: the JSON loader
+        let json = format!(
+            r#"{{"devices":{devices_json},"deployment":"stub_4dev",{json_fragment}}}"#
+        );
+        let json_err = SystemConfig::from_json(&Json::parse(&json).unwrap())
+            .err()
+            .unwrap_or_else(|| panic!("from_json must reject {json_fragment}"));
+        assert!(
+            json_err.to_string().contains(expect),
+            "from_json({json_fragment}): {json_err}"
+        );
+
+        // path 2: a hand-built config through ServeBuilder::start
+        let mut config = base_config();
+        mutate(&mut config);
+        let build_err = ServeBuilder::new(
+            config,
+            server.handle(),
+            dep.clone(),
+            vec![arch(); FLEET],
+            x_stride(),
+        )
+        .start()
+        .err()
+        .unwrap_or_else(|| panic!("ServeBuilder must reject {json_fragment}"));
+        assert!(
+            build_err.to_string().contains(expect),
+            "ServeBuilder({json_fragment}): {build_err}"
+        );
+    }
+    drop(server);
+}
+
+/// A custom pressure signal: reads saturation on every batch regardless of
+/// the real queue. Plugged in through the trait, it must walk the fleet to
+/// primaries-only where the default queue-fill signal — fed the identical
+/// featherweight load — keeps full replication.
+struct AlwaysHigh;
+
+impl PressureSignal for AlwaysHigh {
+    fn name(&self) -> &'static str {
+        "always-high"
+    }
+
+    fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure {
+        // deliberately ignore the real fill; keep the context used so the
+        // shape of a real signal is exercised too
+        let _ = ctx.intake.fill();
+        FleetPressure { queue_fill: 1.0, p95_virtual_ms: 0.0 }
+    }
+}
+
+#[test]
+fn custom_pressure_signal_drives_elision_through_the_trait() {
+    let elastic = ReplicationPolicy {
+        replicas: 2,
+        max_queue_depth: 8,
+        elision: ElisionPolicy {
+            enabled: true,
+            high_watermark: 0.5,
+            low_watermark: 0.3,
+            p95_high_ms: 0.0,
+            hold_batches: 1,
+            shadow_promoted_batches: 0,
+        },
+    };
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+
+    // featherweight load: rounds of 1 request → fill 0.125, below the low
+    // watermark, so the default signal never reads High
+    let run = |signal: Option<Box<dyn PressureSignal>>| {
+        let (server, dep) = stub_server();
+        let mut b = ServeBuilder::new(
+            base_config(),
+            server.handle(),
+            dep,
+            vec![arch(); FLEET],
+            x_stride(),
+        )
+        .fault(fault)
+        .replication(elastic);
+        if let Some(s) = signal {
+            b = b.pressure_signal(s);
+        }
+        let coord = b.start().unwrap();
+        let handle = coord.handle();
+        for _ in 0..3 {
+            round(&handle, 1);
+        }
+        let stats = coord.shutdown().unwrap();
+        drop(server);
+        stats
+    };
+
+    let default = run(None);
+    assert_eq!(default.fault.batches_full, 3, "light load keeps Full under queue-fill");
+    assert_eq!(default.fault.batches_elided, 0);
+    assert_eq!(default.fault.mode_transitions, 0);
+
+    let forced = run(Some(Box::new(AlwaysHigh)));
+    assert_eq!(forced.fault.batches_full, 0, "the custom signal reads High from batch 1");
+    assert_eq!(forced.fault.batches_partial, 1, "r1 steps Full → Partial");
+    assert_eq!(forced.fault.batches_elided, 2, "r2 steps to Elided, r3 holds");
+    assert_eq!(forced.fault.mode_transitions, 2);
+    assert!(forced.fault.standby_gflops_saved > 0.0);
+
+    // a second stock impl through the same seam: the EWMA signal starts
+    // and serves (its latency reading stays below any gate here)
+    let ewma = run(Some(Box::new(EwmaLatencySignal::new(0.3))));
+    assert_eq!(ewma.requests, 3);
+    assert_eq!(ewma.fault.quorum_failures, 0);
+}
+
+#[test]
+fn custom_signal_permits_elision_without_stock_signals() {
+    // shedding off + p95 gate off is rejected with the default signal
+    // (the stock reading could never engage), but a custom signal supplies
+    // its own reading — ServeBuilder must accept it and elision must run
+    let replication = ReplicationPolicy {
+        replicas: 2,
+        max_queue_depth: 0,
+        elision: ElisionPolicy {
+            enabled: true,
+            p95_high_ms: 0.0,
+            hold_batches: 1,
+            shadow_promoted_batches: 0,
+            ..ElisionPolicy::default()
+        },
+    };
+    let (server, dep) = stub_server();
+    let err = ServeBuilder::new(
+        base_config(),
+        server.handle(),
+        dep.clone(),
+        vec![arch(); FLEET],
+        x_stride(),
+    )
+    .replication(replication)
+    .start()
+    .err()
+    .expect("the default signal has nothing to read — must be rejected");
+    assert!(err.to_string().contains("no pressure signal"), "{err}");
+
+    let coord = ServeBuilder::new(
+        base_config(),
+        server.handle(),
+        dep,
+        vec![arch(); FLEET],
+        x_stride(),
+    )
+    .replication(replication)
+    .pressure_signal(Box::new(AlwaysHigh))
+    .start()
+    .unwrap();
+    let handle = coord.handle();
+    for _ in 0..3 {
+        round(&handle, 1);
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert!(stats.fault.batches_elided >= 1, "the custom signal engaged elision");
+    assert_eq!(stats.fault.quorum_failures, 0);
+}
+
+#[test]
+fn sweep_replicas_and_dispatch_axes_score_the_redundancy_trade() {
+    // replicas × dispatch through the sweep runner: Full dispatch with 2
+    // replicas must cost strictly more energy than 1 replica, and Elided
+    // must return to the single-copy timeline
+    let sc = Scenario::builder()
+        .fleet(coformer::device::DeviceProfile::paper_fleet())
+        .topology(coformer::net::Topology::star(3, coformer::net::Link::mbps(100.0), 1))
+        .archs(vec![arch(); 3])
+        .d_i(64)
+        .build()
+        .unwrap();
+    let points = Sweep::new(sc.clone())
+        .replicas(&[1, 2])
+        .dispatch_modes(&[DispatchMode::Full, DispatchMode::Elided])
+        .run(&[&CoFormerElastic])
+        .unwrap();
+    assert_eq!(points.len(), 4);
+    // order: (r1,Full), (r1,Elided), (r2,Full), (r2,Elided)
+    let energy = |i: usize| points[i].outcome.total_energy_j();
+    assert_eq!(energy(0), energy(1), "replicas=1: dispatch mode is irrelevant");
+    assert!(energy(2) > energy(0), "full replication pays redundant energy");
+    assert_eq!(
+        points[3].outcome.replication.unwrap().copies_run,
+        3,
+        "elided returns to one live copy per member"
+    );
+    assert_eq!(points[2].outcome.replication.unwrap().copies_run, 6);
+    // the healthy elided timeline is the plain aggregate-edge timeline
+    let plain = CoFormer.run(&sc).unwrap();
+    assert!((points[3].outcome.total_s() - plain.total_s()).abs() < 1e-15);
+}

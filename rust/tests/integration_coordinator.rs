@@ -9,7 +9,7 @@
 use std::path::PathBuf;
 
 use coformer::config::SystemConfig;
-use coformer::coordinator::{serve_all, Coordinator, RequestPayload};
+use coformer::coordinator::{serve_all, Coordinator, RequestPayload, ServeBuilder};
 use coformer::data::Dataset;
 use coformer::model::Arch;
 use coformer::runtime::{ExecHandle, ExecServer, Manifest};
@@ -36,7 +36,8 @@ impl Ctx {
         let dep = self.m.deployment("edgenet_3dev").unwrap().clone();
         let mut config = SystemConfig::paper_default();
         config.aggregator = aggregator.into();
-        Coordinator::start(config, self.exec.clone(), dep, self.archs.clone(), self.ds.x_stride())
+        ServeBuilder::new(config, self.exec.clone(), dep, self.archs.clone(), self.ds.x_stride())
+            .start()
             .unwrap()
     }
 }
@@ -171,15 +172,9 @@ fn shutdown_with_queued_requests_resolves_every_reply() {
     config.aggregator = "average".into();
     config.max_batch = 4;
     config.max_wait_ms = 1;
-    let coord = Coordinator::start_with_faults(
-        config,
-        server.handle(),
-        dep,
-        vec![arch; 4],
-        stride,
-        Vec::new(),
-    )
-    .unwrap();
+    let coord = ServeBuilder::new(config, server.handle(), dep, vec![arch; 4], stride)
+        .start()
+        .unwrap();
     let handle = coord.handle();
 
     // a producer thread keeps submitting while the main thread shuts down,

@@ -31,6 +31,7 @@ use coformer::config::{
 };
 use coformer::coordinator::{
     Coordinator, CoordinatorHandle, InferenceResponse, Overloaded, RequestPayload,
+    ServeBuilder,
 };
 use coformer::device::FaultScript;
 use coformer::model::{Arch, CostModel, Mode};
@@ -75,18 +76,13 @@ fn start(
     config.aggregator = "average".into();
     config.max_batch = max_batch;
     config.max_wait_ms = max_wait_ms;
-    config.fault = fault;
-    config.replication = replication;
     let archs = vec![arch(); FLEET];
-    let coord = Coordinator::start_with_faults(
-        config,
-        server.handle(),
-        dep,
-        archs,
-        x_stride(),
-        scripts,
-    )
-    .unwrap();
+    let coord = ServeBuilder::new(config, server.handle(), dep, archs, x_stride())
+        .fault(fault)
+        .replication(replication)
+        .fault_scripts(scripts)
+        .start()
+        .unwrap();
     (server, coord)
 }
 
@@ -145,7 +141,7 @@ fn load_ramp_elides_standbys_then_restores_them_after_drain() {
     };
     let (server, coord) = start(no_fault_scripts(), fault, replication, 4, 100);
     let handle = coord.handle();
-    assert_eq!(handle.admission_state().1, 8, "full fleet, Full mode: base limit");
+    assert_eq!(handle.admission_state().limit, 8, "full fleet, Full mode: base limit");
 
     for _ in 0..3 {
         // saturation: r1 → Partial, r2 → Elided, r3 stays Elided
@@ -155,7 +151,7 @@ fn load_ramp_elides_standbys_then_restores_them_after_drain() {
     }
     // primaries-only banks the standby budget: limit = 8 × (2n/n) = 16
     assert_eq!(
-        handle.admission_state().1,
+        handle.admission_state().limit,
         16,
         "Elided mode re-banks saved standby GFLOPS as admission budget"
     );
@@ -163,7 +159,7 @@ fn load_ramp_elides_standbys_then_restores_them_after_drain() {
         // drain: r4 → Partial, r5 → Full, r6 stays Full
         round(&handle, 1);
     }
-    assert_eq!(handle.admission_state().1, 8, "Full mode returns to the base limit");
+    assert_eq!(handle.admission_state().limit, 8, "Full mode returns to the base limit");
 
     let stats = coord.shutdown().unwrap();
     drop(server);
@@ -324,7 +320,7 @@ fn elision_sheds_strictly_less_than_always_replicate_at_equal_capacity() {
         let handle = coord.handle();
         round(&handle, 4); // saturation reading 1 (fill 0.5)
         round(&handle, 4); // saturation reading 2
-        let limit = handle.admission_state().1;
+        let limit = handle.admission_state().limit;
 
         let mut admitted = Vec::new();
         let mut shed = 0usize;

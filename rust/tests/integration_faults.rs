@@ -12,7 +12,7 @@ use std::collections::HashMap;
 
 use coformer::config::{DeviceSpec, FaultPolicy, SystemConfig};
 use coformer::coordinator::{
-    serve_all, Coordinator, CoordinatorHandle, InferenceResponse, RequestPayload,
+    serve_all, Coordinator, CoordinatorHandle, InferenceResponse, RequestPayload, ServeBuilder,
 };
 use coformer::device::{DeviceProfile, FaultScript};
 use coformer::model::{Arch, CostModel, Mode};
@@ -52,17 +52,12 @@ fn start(scripts: Vec<FaultScript>, fault: FaultPolicy) -> (ExecServer, Coordina
     config.aggregator = "average".into();
     config.max_batch = 4;
     config.max_wait_ms = 2;
-    config.fault = fault;
     let archs = vec![arch(); FLEET];
-    let coord = Coordinator::start_with_faults(
-        config,
-        server.handle(),
-        dep,
-        archs,
-        x_stride(),
-        scripts,
-    )
-    .unwrap();
+    let coord = ServeBuilder::new(config, server.handle(), dep, archs, x_stride())
+        .fault(fault)
+        .fault_scripts(scripts)
+        .start()
+        .unwrap();
     (server, coord)
 }
 

@@ -18,7 +18,7 @@ use std::time::Duration;
 use coformer::config::{DeviceSpec, FaultPolicy, ReplicationPolicy, SystemConfig};
 use coformer::coordinator::{
     serve_all, Coordinator, CoordinatorHandle, InferenceResponse, Overloaded,
-    RequestPayload,
+    RequestPayload, ServeBuilder,
 };
 use coformer::device::FaultScript;
 use coformer::model::{Arch, Mode};
@@ -63,18 +63,13 @@ fn start(
     config.aggregator = "average".into();
     config.max_batch = max_batch;
     config.max_wait_ms = max_wait_ms;
-    config.fault = fault;
-    config.replication = replication;
     let archs = vec![arch(); FLEET];
-    let coord = Coordinator::start_with_faults(
-        config,
-        server.handle(),
-        dep,
-        archs,
-        x_stride(),
-        scripts,
-    )
-    .unwrap();
+    let coord = ServeBuilder::new(config, server.handle(), dep, archs, x_stride())
+        .fault(fault)
+        .replication(replication)
+        .fault_scripts(scripts)
+        .start()
+        .unwrap();
     (server, coord)
 }
 
@@ -179,7 +174,7 @@ fn oversubscribed_fleet_sheds_typed_overloaded_and_completes_in_flight() {
         ReplicationPolicy { replicas: 1, max_queue_depth: 4, ..ReplicationPolicy::default() };
     let (server, coord) = start(no_fault_scripts(), fault, replication, 64, 400);
     let handle = coord.handle();
-    let (_, limit) = handle.admission_state();
+    let limit = handle.admission_state().limit;
     assert_eq!(limit, 4, "full fleet alive: limit = configured depth");
 
     let mut admitted = Vec::new();
@@ -215,8 +210,7 @@ fn oversubscribed_fleet_sheds_typed_overloaded_and_completes_in_flight() {
     assert_eq!(stats.fault.shed, 4, "sheds are visible in the serve stats");
 
     // every admitted slot was released back to the gate when its reply went out
-    let (queued, _) = handle.admission_state();
-    assert_eq!(queued, 0);
+    assert_eq!(handle.admission_state().queued, 0);
 }
 
 #[test]
@@ -231,9 +225,9 @@ fn admission_limit_shrinks_with_surviving_capacity() {
         ReplicationPolicy { replicas: 1, max_queue_depth: 100, ..ReplicationPolicy::default() };
     let (server, coord) = start(scripts, fault, replication, 4, 2);
     let handle = coord.handle();
-    assert_eq!(handle.admission_state().1, 100);
+    assert_eq!(handle.admission_state().limit, 100);
     round(&handle, &[0, 1, 2, 3]).unwrap(); // crash observed in this round
-    let (_, limit) = handle.admission_state();
+    let limit = handle.admission_state().limit;
     assert!(
         limit < 100 && limit >= 1,
         "limit must shrink with the dead device's capacity share, got {limit}"
@@ -258,18 +252,14 @@ fn zero_min_quorum_rejected_at_start() {
     let mut config = SystemConfig::paper_default();
     config.devices.push(DeviceSpec::Preset("rpi-4b".into()));
     config.deployment = "stub_4dev".into();
-    // bypass config-load validation: construct the policy directly
+    // bypass config-load validation: construct the policy directly — the
+    // ServeBuilder path must reject it through SystemConfig::validate()
     config.fault = FaultPolicy { min_quorum: 0, ..FaultPolicy::default() };
-    let err = Coordinator::start_with_faults(
-        config,
-        server.handle(),
-        dep,
-        vec![arch(); FLEET],
-        x_stride(),
-        Vec::new(),
-    )
-    .err()
-    .expect("min_quorum = 0 must be rejected");
+    let err =
+        ServeBuilder::new(config, server.handle(), dep, vec![arch(); FLEET], x_stride())
+            .start()
+            .err()
+            .expect("min_quorum = 0 must be rejected");
     assert!(err.to_string().contains("min_quorum"), "{err}");
     drop(server);
 }

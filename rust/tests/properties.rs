@@ -14,6 +14,10 @@ use coformer::metrics::LatencyStats;
 use coformer::model::{policy::DeviceCaps, Arch, CostModel, DecompositionPolicy, Mode, SubModelCfg};
 use coformer::net::{Link, Topology};
 use coformer::strategies;
+use coformer::strategies::registry::{CoFormer, PipeEdge, TensorParallel};
+use coformer::strategies::{
+    DispatchMode, Scenario, ScenarioError, Strategy, Sweep, SweepError,
+};
 use coformer::util::{Json, Rng};
 
 /// Run `f` over `n` seeded cases; panic with the seed on failure.
@@ -376,15 +380,23 @@ fn prop_coformer_total_bounds() {
                 .to_arch(&t)
             })
             .collect();
-        let out = strategies::coformer(&fleet, &topo, &archs, 64, 1).unwrap();
+        let sc = Scenario::builder()
+            .fleet(fleet.clone())
+            .topology(topo)
+            .archs(archs)
+            .d_i(64)
+            .build()
+            .unwrap();
+        let out = CoFormer.run(&sc).unwrap();
         let max_member = out
+            .core
             .devices
             .iter()
             .map(|d| d.compute_s + d.transmit_s)
             .fold(0.0, f64::max);
-        let sum_all: f64 = out.devices.iter().map(|d| d.compute_s + d.transmit_s).sum();
-        assert!(out.total_s >= max_member - 1e-12);
-        assert!(out.total_s <= sum_all + out.total_s); // total includes agg
+        let sum_all: f64 = out.core.devices.iter().map(|d| d.compute_s + d.transmit_s).sum();
+        assert!(out.total_s() >= max_member - 1e-12);
+        assert!(out.total_s() <= sum_all + out.total_s()); // total includes agg
         assert!(out.total_energy_j() > 0.0);
         assert!(out.idle_fraction() >= 0.0 && out.idle_fraction() < 1.0);
     });
@@ -393,6 +405,7 @@ fn prop_coformer_total_bounds() {
 #[test]
 fn prop_pipe_edge_total_is_sum_of_stage_times() {
     let fleet = DeviceProfile::paper_fleet();
+    let t = teacher();
     forall(200, 1000, |rng| {
         let topo = Topology::star(3, Link::mbps(1.0 + rng.gen_f64() * 99.0), 0);
         let segs: Vec<strategies::Segment> = (0..3)
@@ -402,7 +415,14 @@ fn prop_pipe_edge_total_is_sum_of_stage_times() {
                 memory_bytes: 1 << 20,
             })
             .collect();
-        let out = strategies::pipe_edge(&fleet, &topo, &segs).unwrap();
+        // archs are required by the spec but unused when segments override
+        let sc = Scenario::builder()
+            .fleet(fleet.clone())
+            .topology(topo.clone())
+            .archs(vec![t.clone(); 3])
+            .build()
+            .unwrap();
+        let out = PipeEdge::with_segments(segs.clone()).run(&sc).unwrap().core;
         let manual: f64 = segs
             .iter()
             .enumerate()
@@ -433,27 +453,161 @@ fn prop_bandwidth_monotonicity_all_strategies() {
                     .to_arch(&t)
             })
             .collect();
+        let sc = Scenario::builder()
+            .fleet(fleet.clone())
+            .topology(Topology::star(3, Link::mbps(bw_lo), 1))
+            .archs(archs)
+            .d_i(64)
+            .build()
+            .unwrap();
         let run_cof = |bw: f64| {
-            strategies::coformer(&fleet, &Topology::star(3, Link::mbps(bw), 1), &archs, 64, 1)
+            CoFormer
+                .run(&sc.to_builder().bandwidth_mbps(bw).build().unwrap())
                 .unwrap()
-                .total_s
+                .total_s()
         };
         assert!(run_cof(bw_hi) <= run_cof(bw_lo) + 1e-12);
+        let tp = TensorParallel {
+            label: "g".into(),
+            syncs_per_layer: 2.0,
+            total_flops: Some(1e10),
+            layers: Some(4),
+            shard_bytes: Some(4096),
+            memory_per_device: Some(1 << 20),
+        };
         let run_tp = |bw: f64| {
-            strategies::tensor_parallel(
-                "g",
-                &fleet,
-                &Topology::star(3, Link::mbps(bw), 1),
-                1e10,
-                4,
-                4096,
-                2.0,
-                1 << 20,
-            )
-            .unwrap()
-            .total_s
+            tp.run(&sc.to_builder().bandwidth_mbps(bw).build().unwrap())
+                .unwrap()
+                .total_s()
         };
         assert!(run_tp(bw_hi) <= run_tp(bw_lo) + 1e-12);
+    });
+}
+
+// ------------------------------------------------------- scenario builder
+
+fn valid_builder(n: usize, rng: &mut Rng) -> coformer::strategies::ScenarioBuilder {
+    let t = teacher();
+    let fleet: Vec<DeviceProfile> = (0..n)
+        .map(|i| DeviceProfile::paper_fleet()[i % 3].clone())
+        .collect();
+    Scenario::builder()
+        .fleet(fleet)
+        .topology(Topology::star(n, Link::mbps(1.0 + rng.gen_f64() * 999.0), 0))
+        .archs(vec![t; n])
+        .d_i(8 * rng.gen_range(1, 16))
+        .batch(rng.gen_range(1, 8))
+}
+
+#[test]
+fn prop_scenario_builder_rejects_malformed_specs_with_typed_errors() {
+    // ISSUE 4 satellite: replicas = 0, min_quorum > n, mismatched
+    // fleet/arch/alive lengths and empty fleets must all come back as
+    // typed ScenarioError values — never a panic (the pre-redesign
+    // coformer_elastic assert!ed on exactly these inputs).
+    forall(300, 7000, |rng| {
+        let n = rng.gen_range(1, 6);
+        // a valid spec builds
+        let sc = valid_builder(n, rng).build().expect("valid spec must build");
+        assert_eq!(sc.fleet().len(), n);
+        assert_eq!(sc.alive().len(), n, "alive defaults to everyone");
+
+        // empty fleet
+        let err = Scenario::builder().build().unwrap_err();
+        assert_eq!(err, ScenarioError::EmptyFleet);
+
+        // replicas = 0 and replicas > n
+        let err = valid_builder(n, rng).replicas(0).build().unwrap_err();
+        assert_eq!(err, ScenarioError::InvalidReplicas { replicas: 0, n });
+        let err = valid_builder(n, rng).replicas(n + rng.gen_range(1, 9)).build().unwrap_err();
+        assert!(matches!(err, ScenarioError::InvalidReplicas { .. }));
+
+        // min_quorum = 0 and min_quorum > n
+        let err = valid_builder(n, rng).min_quorum(0).build().unwrap_err();
+        assert_eq!(err, ScenarioError::InvalidMinQuorum { min_quorum: 0, n });
+        let q = n + rng.gen_range(1, 9);
+        let err = valid_builder(n, rng).min_quorum(q).build().unwrap_err();
+        assert_eq!(err, ScenarioError::InvalidMinQuorum { min_quorum: q, n });
+
+        // mismatched archs length
+        let bad = n + rng.gen_range(1, 4);
+        let err =
+            valid_builder(n, rng).archs(vec![teacher(); bad]).build().unwrap_err();
+        assert_eq!(
+            err,
+            ScenarioError::LengthMismatch { what: "archs", expected: n, got: bad }
+        );
+
+        // mismatched alive length
+        let err =
+            valid_builder(n, rng).alive(vec![true; n + 1]).build().unwrap_err();
+        assert_eq!(
+            err,
+            ScenarioError::LengthMismatch { what: "alive", expected: n, got: n + 1 }
+        );
+
+        // mismatched topology
+        let err = valid_builder(n, rng)
+            .topology(Topology::star(n + 1, Link::mbps(100.0), 0))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ScenarioError::LengthMismatch { what: "topology links", .. }));
+
+        // zero batch, missing topology, bad bandwidth override
+        let err = valid_builder(n, rng).batch(0).build().unwrap_err();
+        assert_eq!(err, ScenarioError::ZeroBatch);
+        let err = Scenario::builder()
+            .fleet(vec![DeviceProfile::jetson_tx2(); n])
+            .archs(vec![teacher(); n])
+            .build()
+            .unwrap_err();
+        assert_eq!(err, ScenarioError::MissingTopology);
+        for bad_bw in [0.0, -1.0, f64::NAN] {
+            let err = valid_builder(n, rng).bandwidth_mbps(bad_bw).build().unwrap_err();
+            assert!(matches!(err, ScenarioError::InvalidBandwidth { .. }));
+        }
+    });
+}
+
+#[test]
+fn prop_sweep_points_cover_the_axis_cross_product() {
+    // every sweep point carries the axis values it ran at, in the
+    // documented order, and the point count is the exact cross-product
+    forall(60, 7400, |rng| {
+        let sc = valid_builder(3, rng).replicas(2).build().unwrap();
+        let bws: Vec<f64> = (0..rng.gen_range(1, 3)).map(|i| 50.0 + 100.0 * i as f64).collect();
+        let batches: Vec<usize> = (1..=rng.gen_range(1, 3)).collect();
+        let modes = [DispatchMode::Full, DispatchMode::Elided];
+        let points = Sweep::new(sc)
+            .bandwidths_mbps(&bws)
+            .batches(&batches)
+            .dispatch_modes(&modes)
+            .run_named(&["coformer_elastic"])
+            .unwrap();
+        assert_eq!(points.len(), bws.len() * batches.len() * modes.len());
+        let mut i = 0;
+        for &bw in &bws {
+            for &b in &batches {
+                for &m in &modes {
+                    let p = &points[i];
+                    assert_eq!(
+                        p.strategy, "coformer_elastic",
+                        "the queried registry name round-trips into the point"
+                    );
+                    assert_eq!(p.bandwidth_mbps, bw);
+                    assert_eq!(p.batch, b);
+                    assert_eq!(p.dispatch, m);
+                    assert_eq!(p.replicas, 2, "unset axes keep the base value");
+                    assert!(p.outcome.total_s() > 0.0);
+                    i += 1;
+                }
+            }
+        }
+        // unknown names are typed errors, not panics
+        let err = Sweep::new(valid_builder(3, rng).build().unwrap())
+            .run_named(&["no_such_strategy"])
+            .unwrap_err();
+        assert!(matches!(err, SweepError::UnknownStrategy(_)));
     });
 }
 
