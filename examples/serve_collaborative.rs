@@ -120,14 +120,31 @@ fn main() -> Result<()> {
     );
     println!(
         "elastic replication: batches full/partial/elided {}/{}/{}  mode transitions {}  \
-         standby GFLOPs saved {:.2}  fallbacks {}",
+         standby GFLOPs saved {:.2}  energy saved {:.2} mJ  fallbacks {}",
         stats.fault.batches_full,
         stats.fault.batches_partial,
         stats.fault.batches_elided,
         stats.fault.mode_transitions,
         stats.fault.standby_gflops_saved,
+        stats.fault.standby_energy_saved_j * 1e3,
         stats.fault.standby_fallbacks
     );
+    // per-member control plane (ISSUE 5): each member's own hysteresis
+    // machine — a hot member sheds its standby while cold members keep
+    // theirs, and each banks its own GFLOPs/joules
+    for (m, led) in stats.fault.member_modes.iter().enumerate() {
+        println!(
+            "  member {m} ({}): full/partial/elided {}/{}/{}  transitions {}  \
+             saved {:.2} G / {:.2} mJ",
+            dep.members[m],
+            led.full,
+            led.partial,
+            led.elided,
+            led.transitions,
+            led.standby_gflops_saved,
+            led.standby_energy_saved_j * 1e3
+        );
+    }
 
     // --- baseline: the teacher on the strongest single device -------------
     // batch-matched comparison (the coordinator served ~16-sample batches)

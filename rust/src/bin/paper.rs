@@ -2,7 +2,7 @@
 //!
 //! Usage: `paper [--artifacts DIR] <target|all>` with targets
 //! `fig1 fig3 fig4 fig5 fig6 fig9 fig10 fig11 fig12 fig13 fig15 fig16
-//!  elastic table1 table2 table3 table4 table5`.
+//!  elastic energy table1 table2 table3 table4 table5`.
 //!
 //! Two data sources compose each figure:
 //! * **paper-scale simulation** — DeiT-B-class architectures (l=12, d=768,
@@ -840,6 +840,62 @@ fn elastic() -> Result<()> {
     Ok(())
 }
 
+/// Energy: the joules-vs-latency trade across elision policies (ISSUE 5) —
+/// always-replicate vs fleet-wide primaries-only vs eliding one member at
+/// a time, at DeiT-B scale, all driven by `strategies::Sweep` over the
+/// dispatch-mode and per-member-elision axes.
+fn energy() -> Result<()> {
+    println!("== Energy: joules vs latency across elision policies (DeiT-B scale sim) ==");
+    let base = paper_scenario(100.0)
+        .to_builder()
+        .replicas(2)
+        .min_quorum(1)
+        .build()?;
+    let extremes = Sweep::new(base.clone())
+        .dispatch_modes(&[DispatchMode::Full, DispatchMode::Elided])
+        .run_named(&["coformer_elastic"])?;
+    // one mask per member: elide exactly that member's standby
+    let n = base.fleet().len();
+    let masks: Vec<Vec<bool>> =
+        (0..n).map(|m| (0..n).map(|i| i == m).collect()).collect();
+    let per_member = Sweep::new(base)
+        .member_elision(&masks)
+        .run_named(&["coformer_elastic"])?;
+    let full_j = extremes[0].outcome.total_energy_j();
+    let mut rows = Vec::new();
+    let mut row = |label: String, out: &Outcome| {
+        let rep = out.replication.expect("coformer-family outcome");
+        rows.push(vec![
+            label,
+            ms(out.total_s()),
+            mj(out.total_energy_j()),
+            mj(full_j - out.total_energy_j()),
+            format!("{:.2} G", rep.standby_gflops_saved),
+            format!("{}", rep.copies_run),
+        ]);
+    };
+    row("always-replicate (Full)".into(), &extremes[0].outcome);
+    for (m, p) in per_member.iter().enumerate() {
+        row(format!("elide member {m} only"), &p.outcome);
+    }
+    row("fleet-wide primaries-only (Elided)".into(), &extremes[1].outcome);
+    println!(
+        "{}",
+        render_table(
+            &["policy", "latency", "energy", "saved vs Full", "saved GFLOPs", "copies"],
+            &rows
+        )
+    );
+    println!(
+        "headline: each elided member returns its own standby's joules without touching\n\
+         the others' redundancy — the per-member trade the serving coordinator makes\n\
+         batch by batch (see `FaultMetrics::member_modes` /\n\
+         `standby_energy_saved_j`; the `EnergyBudgetSignal` drives it from per-member\n\
+         joule budgets).\n"
+    );
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Tables
 // ---------------------------------------------------------------------------
@@ -1095,6 +1151,7 @@ fn main() -> Result<()> {
             "fig15" => fig15(&engine),
             "fig16" => fig16(&engine),
             "elastic" => elastic(),
+            "energy" => energy(),
             "table1" => table1(),
             "table2" => table2(),
             "table3" => table3(&engine),
@@ -1106,7 +1163,8 @@ fn main() -> Result<()> {
     if target == "all" {
         for t in [
             "fig1", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10", "fig11", "fig12", "fig13",
-            "fig15", "fig16", "elastic", "table1", "table2", "table3", "table4", "table5",
+            "fig15", "fig16", "elastic", "energy", "table1", "table2", "table3", "table4",
+            "table5",
         ] {
             run(t)?;
         }

@@ -130,38 +130,99 @@ impl FaultPolicy {
     }
 }
 
-/// Load-adaptive standby elision (ISSUE 3): per-batch, per-member control
-/// over whether warm standbys actually execute. Under fleet pressure
-/// (admission-queue fill and/or recent p95 virtual latency) the
-/// [`crate::coordinator::ReplicaScheduler`] walks the dispatch mode
-/// Full → Partial → Elided (primaries only) and back as headroom returns,
-/// with a consecutive-reading hold so the mode cannot flap. A member whose
-/// primary is Degraded or Dead always keeps its standbys running,
-/// whatever the mode — availability falls back instantly, throughput is
-/// only traded away for members that don't currently need masking.
+/// Per-member override of the elision thresholds (ISSUE 5): a member named
+/// by fleet index can run hotter or colder watermarks than the fleet
+/// default, and carry its own energy budget. Unset fields inherit the
+/// policy-level value; [`ElisionPolicy::member_thresholds`] resolves the
+/// merge.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemberOverride {
+    /// Fleet/member index this override applies to (validated against the
+    /// fleet size in [`SystemConfig::validate`]).
+    pub member: usize,
+    /// Override of [`ElisionPolicy::high_watermark`] for this member.
+    pub high_watermark: Option<f64>,
+    /// Override of [`ElisionPolicy::low_watermark`] for this member.
+    pub low_watermark: Option<f64>,
+    /// Override of [`ElisionPolicy::energy_budget_j`] for this member.
+    pub energy_budget_j: Option<f64>,
+}
+
+impl MemberOverride {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let opt_f64 =
+            |key: &str| -> Result<Option<f64>> { v.get(key).map(|x| x.as_f64()).transpose() };
+        Ok(MemberOverride {
+            member: v.req("member")?.as_usize()?,
+            high_watermark: opt_f64("high_watermark")?,
+            low_watermark: opt_f64("low_watermark")?,
+            energy_budget_j: opt_f64("energy_budget_j")?,
+        })
+    }
+}
+
+/// One member's fully-resolved elision thresholds (policy defaults merged
+/// with that member's [`MemberOverride`], if any).
 #[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemberThresholds {
+    pub high_watermark: f64,
+    pub low_watermark: f64,
+    /// Joules per batch this member may spend before an energy-keyed
+    /// signal reads it as hot. 0 = no energy budget for this member.
+    pub energy_budget_j: f64,
+}
+
+/// Load-adaptive standby elision (ISSUE 3, per-member since ISSUE 5):
+/// per-batch, per-member control over whether warm standbys actually
+/// execute. Each member's pressure reading (shared admission-queue fill,
+/// that member's own latency and energy views) walks that member's
+/// [`crate::coordinator::ReplicaScheduler`] state machine Full → Partial →
+/// Elided (primaries only) and back as headroom returns, with a
+/// consecutive-reading hold so no member's mode can flap — a hot member
+/// sheds its own standby while cold members keep theirs. A member whose
+/// primary is Degraded or Dead always keeps its standbys running,
+/// whatever its mode — availability falls back instantly, throughput is
+/// only traded away for members that don't currently need masking.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ElisionPolicy {
     /// Master switch. Off (default) reproduces the always-replicate
     /// dispatch of ISSUE 2 exactly.
     pub enabled: bool,
     /// Queue fill (queued / capacity-derived limit) at or above which a
-    /// batch reads as high pressure.
+    /// member's batch reading is high pressure.
     pub high_watermark: f64,
-    /// Queue fill at or below which a batch reads as low pressure. Must
-    /// not exceed `high_watermark`; the gap between the two is the
+    /// Queue fill at or below which a member's reading is low pressure.
+    /// Must not exceed `high_watermark`; the gap between the two is the
     /// hysteresis band where the mode holds.
     pub low_watermark: f64,
-    /// Recent p95 virtual latency (ms) at or above which a batch reads as
+    /// Per-member latency reading (ms) at or above which that member reads
     /// high pressure regardless of queue fill. 0 disables the latency
     /// signal (queue-only control, fully deterministic under test).
     pub p95_high_ms: f64,
-    /// Consecutive same-direction pressure readings required before the
-    /// mode moves one step. Higher values damp flapping harder.
+    /// Consecutive same-direction pressure readings required before a
+    /// member's mode moves one step. Higher values damp flapping harder.
     pub hold_batches: usize,
     /// Batches a freshly promoted member keeps its (re-placed) standby
     /// shadowing under Partial mode, so a member that just lost its
     /// primary re-warms cover before shadowing is withdrawn again.
     pub shadow_promoted_batches: usize,
+    /// Exponential blend factor in (0, 1] for admission-limit changes when
+    /// member modes move mid-burst: each batch the live limit moves
+    /// `limit_blend` of the way toward the target (capacity × elision
+    /// headroom). 1 (default) applies the full step immediately — the
+    /// pre-ISSUE-5 behavior; smaller values smooth the re-banked standby
+    /// budget over several batches so a mode change cannot step the limit
+    /// in one batch.
+    pub limit_blend: f64,
+    /// Default per-member energy budget, joules per batch, consumed by
+    /// [`crate::coordinator::EnergyBudgetSignal`]: a member whose recent
+    /// joules-per-batch reach `high_watermark ×` this budget reads hot.
+    /// 0 (default) disables the energy signal for members without an
+    /// explicit [`MemberOverride::energy_budget_j`].
+    pub energy_budget_j: f64,
+    /// Per-member threshold overrides (watermarks and/or energy budget),
+    /// keyed by fleet index. At most one entry per member.
+    pub member_overrides: Vec<MemberOverride>,
 }
 
 impl Default for ElisionPolicy {
@@ -173,6 +234,9 @@ impl Default for ElisionPolicy {
             p95_high_ms: 0.0,
             hold_batches: 2,
             shadow_promoted_batches: 4,
+            limit_blend: 1.0,
+            energy_budget_j: 0.0,
+            member_overrides: Vec::new(),
         }
     }
 }
@@ -200,13 +264,47 @@ impl ElisionPolicy {
                 "shadow_promoted_batches",
                 d.shadow_promoted_batches,
             )?,
+            limit_blend: opt_f64("limit_blend", d.limit_blend)?,
+            energy_budget_j: opt_f64("energy_budget_j", d.energy_budget_j)?,
+            member_overrides: match v.get("member_overrides") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(MemberOverride::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
         };
         p.validate()?;
         Ok(p)
     }
 
+    /// Resolve the effective thresholds for `member`: the policy-level
+    /// defaults with that member's [`MemberOverride`] (if any) applied.
+    pub fn member_thresholds(&self, member: usize) -> MemberThresholds {
+        let mut t = MemberThresholds {
+            high_watermark: self.high_watermark,
+            low_watermark: self.low_watermark,
+            energy_budget_j: self.energy_budget_j,
+        };
+        if let Some(o) = self.member_overrides.iter().find(|o| o.member == member) {
+            if let Some(h) = o.high_watermark {
+                t.high_watermark = h;
+            }
+            if let Some(l) = o.low_watermark {
+                t.low_watermark = l;
+            }
+            if let Some(e) = o.energy_budget_j {
+                t.energy_budget_j = e;
+            }
+        }
+        t
+    }
+
     /// Shared by JSON parsing and direct construction (the coordinator
     /// re-validates at start so a hand-built policy can't bypass this).
+    /// The override *indices* are validated against the fleet size in
+    /// [`SystemConfig::validate`] — the policy alone doesn't know it.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
             self.high_watermark.is_finite() && self.high_watermark > 0.0,
@@ -228,6 +326,50 @@ impl ElisionPolicy {
             "elision p95_high_ms must be finite and >= 0 (0 disables)"
         );
         anyhow::ensure!(self.hold_batches >= 1, "elision hold_batches must be >= 1");
+        anyhow::ensure!(
+            self.limit_blend.is_finite()
+                && self.limit_blend > 0.0
+                && self.limit_blend <= 1.0,
+            "elision limit_blend {} must be in (0, 1] (0 would freeze the \
+             admission limit; 1 applies mode changes as a full step)",
+            self.limit_blend
+        );
+        anyhow::ensure!(
+            self.energy_budget_j.is_finite() && self.energy_budget_j >= 0.0,
+            "elision energy_budget_j must be finite and >= 0 (0 disables)"
+        );
+        for (i, o) in self.member_overrides.iter().enumerate() {
+            anyhow::ensure!(
+                !self.member_overrides[..i].iter().any(|p| p.member == o.member),
+                "elision member_overrides has duplicate entries for member {}",
+                o.member
+            );
+            if let Some(e) = o.energy_budget_j {
+                anyhow::ensure!(
+                    e.is_finite() && e >= 0.0,
+                    "elision member_overrides[{i}] energy_budget_j must be finite \
+                     and >= 0"
+                );
+            }
+            // the *merged* band must be well-formed, exactly like the base band
+            let t = self.member_thresholds(o.member);
+            anyhow::ensure!(
+                t.high_watermark.is_finite() && t.high_watermark > 0.0,
+                "elision member_overrides[{i}] high_watermark must be finite and > 0"
+            );
+            anyhow::ensure!(
+                t.low_watermark.is_finite() && t.low_watermark >= 0.0,
+                "elision member_overrides[{i}] low_watermark must be finite and >= 0"
+            );
+            anyhow::ensure!(
+                t.low_watermark <= t.high_watermark,
+                "elision member_overrides[{i}]: effective low_watermark {} exceeds \
+                 high_watermark {} for member {}",
+                t.low_watermark,
+                t.high_watermark,
+                o.member
+            );
+        }
         Ok(())
     }
 }
@@ -238,7 +380,7 @@ impl ElisionPolicy {
 /// warms, and a bounded intake queue whose live depth tracks the surviving
 /// fleet's capacity — excess load is shed with the typed
 /// [`crate::coordinator::Overloaded`] error instead of blocking the caller.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ReplicationPolicy {
     /// Copies of each member kept warm on distinct devices (1 = primary
     /// only, no replication; 2 = primary + one warm standby). Standbys are
@@ -288,7 +430,7 @@ impl ReplicationPolicy {
                 .get("elision")
                 .map(ElisionPolicy::from_json)
                 .transpose()?
-                .unwrap_or(d.elision),
+                .unwrap_or(d.elision.clone()),
         };
         p.validate()?;
         // a JSON-loaded config always starts with the stock queue/p95
@@ -440,6 +582,15 @@ impl SystemConfig {
         self.replication.validate()?;
         if !custom_signal {
             self.replication.validate_elision_signals()?;
+        }
+        for o in &self.replication.elision.member_overrides {
+            anyhow::ensure!(
+                o.member < self.devices.len(),
+                "elision member_overrides names member {} but the fleet has only \
+                 {} devices",
+                o.member,
+                self.devices.len()
+            );
         }
         anyhow::ensure!(
             self.replication.replicas <= self.devices.len(),
@@ -647,6 +798,79 @@ mod tests {
         let json = r#"{"devices":["jetson-nano"],"deployment":"x",
                        "replication":{"elision":{"high_watermark":0.0,"low_watermark":0.0}}}"#;
         assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn elision_member_overrides_parse_merge_and_validate() {
+        let json = r#"{
+          "devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+          "replication":{"replicas":2,"elision":{
+            "enabled":true,"high_watermark":0.8,"low_watermark":0.2,
+            "limit_blend":0.5,"energy_budget_j":2.5,
+            "member_overrides":[
+              {"member":0,"high_watermark":0.3,"energy_budget_j":0.25},
+              {"member":1,"low_watermark":0.1}]}}
+        }"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        let e = &c.replication.elision;
+        assert!((e.limit_blend - 0.5).abs() < 1e-12);
+        assert!((e.energy_budget_j - 2.5).abs() < 1e-12);
+        // member 0: high + energy overridden, low inherited
+        let t0 = e.member_thresholds(0);
+        assert!((t0.high_watermark - 0.3).abs() < 1e-12);
+        assert!((t0.low_watermark - 0.2).abs() < 1e-12);
+        assert!((t0.energy_budget_j - 0.25).abs() < 1e-12);
+        // member 1: low overridden, rest inherited
+        let t1 = e.member_thresholds(1);
+        assert!((t1.high_watermark - 0.8).abs() < 1e-12);
+        assert!((t1.low_watermark - 0.1).abs() < 1e-12);
+        assert!((t1.energy_budget_j - 2.5).abs() < 1e-12);
+        // a member with no override resolves to the base thresholds
+        let t9 = e.member_thresholds(9);
+        assert_eq!(t9, MemberThresholds {
+            high_watermark: 0.8,
+            low_watermark: 0.2,
+            energy_budget_j: 2.5,
+        });
+    }
+
+    #[test]
+    fn elision_member_override_bounds_enforced() {
+        // an override index beyond the fleet is rejected at the config gate
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+            "replication":{"elision":{"member_overrides":[{"member":3}]}}}"#;
+        let err = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("member_overrides"), "{err}");
+        // duplicate overrides for one member are ambiguous
+        let json = r#"{"devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+            "replication":{"elision":{"member_overrides":[
+              {"member":0,"high_watermark":0.9},{"member":0,"high_watermark":0.4}]}}}"#;
+        let err = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // an override that inverts the merged band would oscillate
+        let json = r#"{"devices":["jetson-nano","jetson-tx2"],"deployment":"x",
+            "replication":{"elision":{"high_watermark":0.7,"low_watermark":0.3,
+              "member_overrides":[{"member":1,"high_watermark":0.1}]}}}"#;
+        let err = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("low_watermark"), "{err}");
+    }
+
+    #[test]
+    fn elision_blend_and_energy_bounds_enforced() {
+        // blend 0 would freeze the admission limit forever
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+            "replication":{"elision":{"limit_blend":0.0}}}"#;
+        let err = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("limit_blend"), "{err}");
+        // blend > 1 would overshoot the target
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+            "replication":{"elision":{"limit_blend":1.5}}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(json).unwrap()).is_err());
+        // negative energy budgets are meaningless
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x",
+            "replication":{"elision":{"energy_budget_j":-1.0}}}"#;
+        let err = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("energy_budget_j"), "{err}");
     }
 
     #[test]

@@ -4,9 +4,16 @@
 //!
 //! Since ISSUE 3 each shipped batch also carries an [`IntakePressure`]
 //! snapshot taken at batch-close time (admitted-but-unreleased requests vs
-//! the capacity-derived queue limit). That is the fleet-pressure signal the
-//! leader feeds the [`super::ReplicaScheduler`], measured exactly where
-//! load is visible first: the intake queue.
+//! the capacity-derived queue limit), measured exactly where load is
+//! visible first: the intake queue. Since ISSUE 5 this snapshot is the
+//! *shared* component of the per-member pressure readings: the leader
+//! combines it with each member's own latency/energy/health views into one
+//! [`super::PressureContext`], and the pluggable [`super::PressureSignal`]
+//! turns that into one [`super::MemberPressure`] per member for the
+//! per-member [`super::ReplicaScheduler`] machines. There is one intake
+//! queue (every member serves every batch), so the fill is fleet-shared by
+//! construction — asymmetry between members comes from the per-member
+//! views and per-member watermark overrides, not from the batcher.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -39,7 +46,8 @@ pub struct IntakePressure {
     /// depend on its own actuator. `usize::MAX` when shedding is disabled.
     pub capacity_limit: usize,
     /// Live admission limit actually enforced on `submit` (capacity limit
-    /// × elision headroom factor). `usize::MAX` when shedding is disabled.
+    /// × elision headroom factor, exponentially blended across batches
+    /// when `limit_blend < 1`). `usize::MAX` when shedding is disabled.
     pub live_limit: usize,
 }
 

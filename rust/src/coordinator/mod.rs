@@ -30,18 +30,26 @@
 //! sheds with the typed [`Overloaded`] error instead of blocking, while
 //! admitted requests always run to completion.
 //!
-//! Load-adaptive replica elision (ISSUE 3): every batch the [`Batcher`]
-//! ships carries an [`IntakePressure`] snapshot; a pluggable
-//! [`PressureSignal`] (default [`QueueP95Signal`]: queue fill + rolling
-//! p95 virtual latency) folds it into a
-//! [`FleetPressure`] reading for the [`ReplicaScheduler`], which walks the
-//! dispatch mode Full → Partial → Elided (primaries only) under sustained
-//! pressure and back as headroom returns — with hysteresis so the mode
-//! can't flap, and an instant per-member fallback that keeps standbys
-//! running for any member whose primary is Degraded or Dead. In Elided
-//! mode the standby compute not being spent is re-banked as admission
-//! budget (the live queue limit scales up by the saved GFLOPS share), so
-//! primaries-only serving admits strictly more load at equal capacity.
+//! Load-adaptive replica elision (ISSUE 3; per-member control plane since
+//! ISSUE 5): every batch the [`Batcher`] ships carries an
+//! [`IntakePressure`] snapshot; a pluggable [`PressureSignal`] (default
+//! [`QueueP95Signal`]: shared queue fill + each member's own rolling p95)
+//! folds it — together with per-member latency/energy/health views — into
+//! one [`MemberPressure`] reading per member. Each member's independent
+//! hysteresis machine in the [`ReplicaScheduler`] walks its own dispatch
+//! mode Full → Partial → Elided (primary only) under sustained pressure
+//! *on that member* and back as headroom returns: a hot member sheds its
+//! own standby while cold members keep theirs, no member's mode can flap,
+//! and an instant per-member fallback keeps standbys running for any
+//! member whose primary is Degraded or Dead. Standby compute not being
+//! spent is re-banked as admission budget per member (the live queue
+//! limit scales up by the saved GFLOPS share, exponentially blended so a
+//! mid-burst mode change cannot step the limit in one batch), so
+//! elided serving admits strictly more load at equal capacity. The stock
+//! [`PredictiveSignal`] (latency-predictor MLP forecasts) and
+//! [`EnergyBudgetSignal`] (joules-per-batch against per-member budgets)
+//! drive the same per-member ladder from forecasts and energy instead of
+//! the rolling p95.
 
 pub mod batcher;
 pub mod health;
@@ -67,8 +75,9 @@ use crate::Result;
 pub use batcher::{Batch, Batcher, BatcherConfig, IntakePressure};
 pub use health::{DeviceHealth, HealthState};
 pub use scheduler::{
-    EwmaLatencySignal, FleetPressure, PressureContext, PressureSignal, QueueP95Signal,
-    ReplicaMode, ReplicaScheduler,
+    EnergyBudgetSignal, EwmaLatencySignal, MemberPressure, MemberView, PredictiveSignal,
+    PressureContext, PressureSignal, QueueP95Signal, ReplicaMode, ReplicaScheduler,
+    SignalError,
 };
 
 /// One inference request: a single sample.
@@ -570,7 +579,9 @@ impl ServeBuilder {
         let n_devices = devices.len();
         let central = topo.central;
         let n_members = members.len();
-        let scheduler = ReplicaScheduler::new(config.replication.elision);
+        let scheduler = ReplicaScheduler::new(config.replication.elision.clone(), n_members);
+        let mut fault = FaultMetrics::default();
+        fault.init_members(n_members);
         let leader = Leader {
             exec,
             deployment,
@@ -585,11 +596,14 @@ impl ServeBuilder {
             assignments,
             central,
             batch_idx: 0,
-            fault: FaultMetrics::default(),
+            fault,
             admission: admission.clone(),
             scheduler,
             promoted_at: vec![None; n_members],
             recent_virtual_ms: VecDeque::new(),
+            member_recent_ms: vec![Vec::new(); n_members],
+            member_recent_energy_j: vec![Vec::new(); n_members],
+            smoothed_headroom: 1.0,
             intake_cap: chan_cap,
             signal,
         };
@@ -601,41 +615,6 @@ impl ServeBuilder {
 }
 
 impl Coordinator {
-    /// Start the leader + per-device worker threads (no injected faults).
-    #[deprecated(
-        since = "0.2.0",
-        note = "use coordinator::ServeBuilder::new(...).start() (README \"Public API\")"
-    )]
-    pub fn start(
-        config: SystemConfig,
-        exec: ExecHandle,
-        deployment: DeploymentMeta,
-        archs: Vec<Arch>,
-        x_stride: usize,
-    ) -> Result<Self> {
-        ServeBuilder::new(config, exec, deployment, archs, x_stride).start()
-    }
-
-    /// Start with a per-device [`FaultScript`] (the deterministic
-    /// fault-injection harness; pass an empty vec for no faults).
-    #[deprecated(
-        since = "0.2.0",
-        note = "use coordinator::ServeBuilder::new(...).fault_scripts(...).start() \
-                (README \"Public API\")"
-    )]
-    pub fn start_with_faults(
-        config: SystemConfig,
-        exec: ExecHandle,
-        deployment: DeploymentMeta,
-        archs: Vec<Arch>,
-        x_stride: usize,
-        scripts: Vec<FaultScript>,
-    ) -> Result<Self> {
-        ServeBuilder::new(config, exec, deployment, archs, x_stride)
-            .fault_scripts(scripts)
-            .start()
-    }
-
     pub fn handle(&self) -> CoordinatorHandle {
         self.handle.clone()
     }
@@ -679,19 +658,34 @@ struct Leader {
     /// Shared admission gate (limit refreshed on device death and on
     /// replica-mode transitions).
     admission: Arc<Admission>,
-    /// Load-adaptive standby gating (ISSUE 3).
+    /// Per-member load-adaptive standby gating (ISSUE 3 / ISSUE 5).
     scheduler: ReplicaScheduler,
     /// member → batch index of its last warm-standby promotion (Partial
     /// mode shadows recently promoted members while their re-placed
     /// standby warms).
     promoted_at: Vec<Option<usize>>,
-    /// Rolling window of per-batch virtual latencies (ms) feeding the
-    /// scheduler's p95 pressure signal.
+    /// Rolling window of fleet per-batch virtual latencies (ms), part of
+    /// every [`PressureContext`].
     recent_virtual_ms: VecDeque<f64>,
+    /// Per-member rolling windows of primary-host arrival latency (ms) —
+    /// a standby masking a slow primary does not hide the primary's
+    /// latency from the control plane. Bounded to
+    /// [`RECENT_LATENCY_WINDOW`]; kept as `Vec` so [`MemberView`] can
+    /// borrow them as slices.
+    member_recent_ms: Vec<Vec<f64>>,
+    /// Per-member rolling windows of joules spent per batch across every
+    /// host that ran a copy of the member (analytic: the same
+    /// excess-power × busy-time model the device simulator integrates).
+    member_recent_energy_j: Vec<Vec<f64>>,
+    /// Exponentially-blended elision headroom factor: each refresh moves
+    /// `limit_blend` of the way toward the target headroom, so a
+    /// mid-burst mode change cannot step the admission limit in one
+    /// batch. 1.0 at start (no savings banked yet).
+    smoothed_headroom: f64,
     /// Intake-channel capacity: ceiling for any elision-scaled limit (the
     /// channel must never block a caller admission has already accepted).
     intake_cap: usize,
-    /// Pluggable fleet-pressure reading (default [`QueueP95Signal`]).
+    /// Pluggable per-member pressure reading (default [`QueueP95Signal`]).
     signal: Box<dyn PressureSignal>,
 }
 
@@ -743,23 +737,55 @@ impl Leader {
         stats
     }
 
-    /// Feed one batch's intake snapshot + rolling latency window through
-    /// the pluggable [`PressureSignal`], step the scheduler on its
-    /// reading, and account the mode. (Device health acts per member
-    /// through the scheduler's fallback, not through this fleet-wide
-    /// signal.)
+    /// Feed one batch's intake snapshot + the per-member latency / energy
+    /// / health views through the pluggable [`PressureSignal`], step each
+    /// member's hysteresis machine on its own reading, and account the
+    /// per-member mode ledgers. (Device health additionally acts per
+    /// member through the scheduler's instant fallback, which is immune
+    /// to the hysteresis delay.)
     fn observe_pressure(&mut self, intake: IntakePressure) {
         let window: Vec<f64> = self.recent_virtual_ms.iter().copied().collect();
-        let pressure = self
-            .signal
-            .read(&scheduler::PressureContext { intake, recent_virtual_ms: &window });
-        let mode = self.scheduler.observe(&pressure);
+        // explicit field borrows so the views (which keep references into
+        // the member windows) provably don't overlap the signal's `&mut`
+        let assignments = &self.assignments;
+        let health = &self.health;
+        let member_recent_ms = &self.member_recent_ms;
+        let member_recent_energy_j = &self.member_recent_energy_j;
+        let views: Vec<scheduler::MemberView<'_>> = (0..assignments.len())
+            .map(|m| scheduler::MemberView {
+                health: assignments[m]
+                    .first()
+                    .map(|&w| health[w].state())
+                    .unwrap_or(HealthState::Dead),
+                recent_virtual_ms: &member_recent_ms[m],
+                recent_energy_j: &member_recent_energy_j[m],
+            })
+            .collect();
+        let readings = self.signal.read(&scheduler::PressureContext {
+            intake,
+            recent_virtual_ms: &window,
+            members: &views,
+        });
+        drop(views);
+        self.scheduler.observe(&readings);
         self.fault.mode_transitions = self.scheduler.transitions();
-        // re-derived every batch: the elision headroom depends on the mode
-        // AND on which primaries are currently unhealthy (their standbys
-        // keep running via the fallback, so their budget is not bankable)
+        for m in 0..self.members.len() {
+            let led = &mut self.fault.member_modes[m];
+            match self.scheduler.mode(m) {
+                ReplicaMode::Full => led.full += 1,
+                ReplicaMode::Partial => led.partial += 1,
+                ReplicaMode::Elided => led.elided += 1,
+            }
+            led.transitions = self.scheduler.member_transitions(m);
+        }
+        // re-derived every batch: the elision headroom depends on each
+        // member's mode AND on which primaries are currently unhealthy
+        // (their standbys keep running via the fallback, so their budget
+        // is not bankable)
         self.refresh_admission();
-        match mode {
+        // the fleet ledger keys on the most aggressive member mode: a
+        // batch counts as Elided when any member shed its standby
+        match self.scheduler.fleet_mode() {
             ReplicaMode::Full => self.fault.batches_full += 1,
             ReplicaMode::Partial => self.fault.batches_partial += 1,
             ReplicaMode::Elided => self.fault.batches_elided += 1,
@@ -773,6 +799,22 @@ impl Leader {
         self.recent_virtual_ms.push_back(virtual_s * 1e3);
     }
 
+    /// Record one member's per-batch observations into its rolling
+    /// windows (primary-host arrival latency and joules spent across its
+    /// hosts).
+    fn note_member_obs(&mut self, m: usize, arrive_ms: f64, energy_j: f64) {
+        let ms = &mut self.member_recent_ms[m];
+        if ms.len() == RECENT_LATENCY_WINDOW {
+            ms.remove(0);
+        }
+        ms.push(arrive_ms);
+        let ej = &mut self.member_recent_energy_j[m];
+        if ej.len() == RECENT_LATENCY_WINDOW {
+            ej.remove(0);
+        }
+        ej.push(energy_j);
+    }
+
     /// Serve one batch through the fault-tolerant 3-phase workflow.
     fn serve_batch(
         &mut self,
@@ -784,14 +826,49 @@ impl Leader {
         self.batch_idx += 1;
         self.ensure_central_alive();
 
-        // Per-member standby gating (ISSUE 3): this batch's replica mode
-        // was set by `observe_pressure`; under Partial/Elided a member's
-        // standbys execute only when the scheduler says so — and always
-        // when its primary is Degraded or Dead (instant fallback). Elided
-        // standby compute is accounted as saved GFLOPS.
+        // Per-member energy table for this batch, one analytic pass: the
+        // busy (compute + transfer) energy of every live copy — the
+        // excess-power × busy-time model the workers integrate. The full
+        // (all-copies) figure is the member's energy *view* for the next
+        // batch's pressure readings, deliberately NOT gated by this
+        // batch's elision: like the queue signal's capacity-limit
+        // denominator, the control signal must not read its own actuator
+        // (a view of dispatched-only copies would halve on elision, and
+        // an energy budget between the two levels would flap the mode).
+        // The standby share (full − primary) is what an elided member
+        // banks in the savings ledger.
+        let mut member_energy_j = vec![0.0f64; self.members.len()];
+        let mut member_standby_energy_j = vec![0.0f64; self.members.len()];
+        for (m, ctx) in self.members.iter().enumerate() {
+            for (hi, &w) in self.assignments[m].iter().enumerate() {
+                if self.worker_txs[w].is_none() {
+                    continue;
+                }
+                let (t1, t2) = member_task_times_s(
+                    &self.devices[w],
+                    &self.topo.links[w],
+                    w == self.central,
+                    ctx.flops_per_sample,
+                    ctx.feat_bytes_per_sample,
+                    n,
+                );
+                let e = (t1 + t2)
+                    * (self.devices[w].active_power_w - self.devices[w].idle_power_w);
+                member_energy_j[m] += e;
+                if hi > 0 {
+                    member_standby_energy_j[m] += e;
+                }
+            }
+        }
+
+        // Per-member standby gating (ISSUE 3 / ISSUE 5): each member's
+        // replica mode was set by `observe_pressure` from its own pressure
+        // reading; under Partial/Elided a member's standbys execute only
+        // when *its* machine says so — and always when its primary is
+        // Degraded or Dead (instant fallback). Elided standby compute is
+        // accounted per member as saved GFLOPS and saved joules.
         let shadow = self.config.replication.elision.shadow_promoted_batches;
         let mut standbys_run = vec![true; self.members.len()];
-        let mut saved_gflops = 0.0f64;
         let mut fallbacks = 0usize;
         for m in 0..self.members.len() {
             let hosts = &self.assignments[m];
@@ -801,25 +878,29 @@ impl Leader {
             let pstate = self.health[hosts[0]].state();
             let recently_promoted =
                 self.promoted_at[m].is_some_and(|b| bidx.saturating_sub(b) < shadow);
-            let run = self.scheduler.standby_executes(pstate, recently_promoted);
+            let run = self.scheduler.standby_executes(m, pstate, recently_promoted);
             standbys_run[m] = run;
             if !run {
                 let live_standbys =
                     hosts[1..].iter().filter(|&&w| self.worker_txs[w].is_some()).count();
-                saved_gflops += self.members[m].flops_per_sample * n as f64
+                let saved_gflops = self.members[m].flops_per_sample * n as f64
                     * live_standbys as f64
                     / 1e9;
-            } else if self.scheduler.is_fallback(pstate) {
+                let saved_j = member_standby_energy_j[m];
+                self.fault.standby_gflops_saved += saved_gflops;
+                self.fault.standby_energy_saved_j += saved_j;
+                self.fault.member_modes[m].standby_gflops_saved += saved_gflops;
+                self.fault.member_modes[m].standby_energy_saved_j += saved_j;
+            } else if self.scheduler.is_fallback(m, pstate) {
                 fallbacks += 1;
             }
         }
         self.fault.standby_fallbacks += fallbacks;
-        self.fault.standby_gflops_saved += saved_gflops;
 
         // Build per-device task lists from the current assignments: the
-        // primary always runs; standbys run when this batch's mode keeps
-        // them (Dead devices hold no assignments once promotion /
-        // re-dispatch has run).
+        // primary always runs; standbys run when this batch's per-member
+        // mode keeps them (Dead devices hold no assignments once
+        // promotion / re-dispatch has run).
         let mut task_lists: Vec<Vec<MemberTask>> =
             (0..self.devices.len()).map(|_| Vec::new()).collect();
         // primary snapshot for this batch: replica-hit accounting must not
@@ -883,12 +964,16 @@ impl Leader {
             (0..self.members.len()).map(|_| None).collect();
         // on-time member outputs, dedup-resolved after all arrivals are in
         let mut arrivals: Vec<(f64, usize, MemberOutput)> = Vec::new();
+        // per-worker observed arrival (on-time or harvested-late): feeds
+        // the per-member latency windows through each member's primary
+        let mut worker_arrive_s: Vec<Option<f64>> = vec![None; self.devices.len()];
         let mut gate_s = 0.0f64; // how long the central node waited
         let mut energy_j = 0.0f64;
         for p in pending {
             match p.rx.recv_timeout(wall_timeout) {
                 Ok(WorkerReply::Done(r)) => {
                     energy_j += r.energy_j;
+                    worker_arrive_s[p.worker] = Some(r.arrive_s);
                     self.fault.exec_failures += r.exec_errors.len();
                     for e in &r.exec_errors {
                         eprintln!(
@@ -970,6 +1055,22 @@ impl Leader {
             }
             member_feats[m] = Some((out.feats, out.feats_shape));
             member_logits[m] = Some(out.logits);
+        }
+
+        // Per-member control-plane observations for the NEXT batch's
+        // pressure readings, recorded before the quorum check so failed
+        // batches still feed the control plane (a stateful signal must
+        // not re-ingest a stale window exactly while the fleet is
+        // struggling): the member's primary-host arrival — the latency
+        // the member would cost primaries-only; a fast standby winning
+        // the race must not hide a slow primary from the controller —
+        // falling back to the central node's wait when the primary
+        // delivered nothing, plus the member's full-replication joules.
+        for m in 0..self.members.len() {
+            let arrive = primary[m]
+                .and_then(|w| worker_arrive_s[w])
+                .unwrap_or(gate_s);
+            self.note_member_obs(m, arrive * 1e3, member_energy_j[m]);
         }
 
         // Quorum check over arrived member feature sets (k of n).
@@ -1166,11 +1267,14 @@ impl Leader {
     /// configured full-fleet queue depth scaled by the alive share of
     /// total effective GFLOPS — a dead device takes its queue budget with
     /// it, so an oversubscribed survivor fleet sheds instead of queueing
-    /// unboundedly. The *live* limit multiplies that by the elision
-    /// headroom: in primaries-only mode the standby compute not being
-    /// spent is re-banked as queue budget (capped by the intake channel),
-    /// which is exactly the availability → throughput trade of ISSUE 3.
-    fn refresh_admission(&self) {
+    /// unboundedly; capacity changes (deaths) always apply immediately.
+    /// The *live* limit multiplies capacity by the per-member elision
+    /// headroom, exponentially blended: each refresh the banked headroom
+    /// moves [`ElisionPolicy::limit_blend`] of the way toward the target,
+    /// so a member's mode change mid-burst re-banks its standby GFLOPS
+    /// over several batches instead of one step (blend 1 = the
+    /// pre-ISSUE-5 full step). Capped by the intake channel.
+    fn refresh_admission(&mut self) {
         let base = self.config.replication.max_queue_depth;
         if base == 0 {
             return; // shedding disabled
@@ -1182,23 +1286,25 @@ impl Leader {
             .sum();
         let share = if total > 0.0 { alive / total } else { 0.0 };
         let capacity = (base as f64 * share).ceil() as usize;
-        let live =
-            ((capacity as f64 * self.elision_headroom()).round() as usize).min(self.intake_cap);
+        let blend = self.config.replication.elision.limit_blend;
+        let target = self.elision_headroom();
+        self.smoothed_headroom += blend * (target - self.smoothed_headroom);
+        let live = ((capacity as f64 * self.smoothed_headroom).round() as usize)
+            .min(self.intake_cap);
         self.admission.capacity.store(capacity, Ordering::SeqCst);
         self.admission.limit.store(live, Ordering::SeqCst);
     }
 
     /// Dispatch-compute headroom factor in [1, replicas]: full replicated
-    /// FLOPS over the FLOPS actually planned under elision. A member whose
-    /// primary is not Healthy contributes no savings — its standbys keep
-    /// running via the fallback — so a degrading fleet's admission credit
-    /// shrinks with the compute it is really still spending. 1 outside
-    /// Elided mode (Partial still shadows on demand, so its savings are
-    /// not bankable ahead of time).
+    /// FLOPS over the FLOPS actually planned under the current per-member
+    /// modes. Only a member whose own machine is in Elided mode banks its
+    /// standby budget; a member whose primary is not Healthy contributes
+    /// no savings — its standbys keep running via the fallback — and
+    /// Partial-mode members still shadow on demand, so their savings are
+    /// not bankable ahead of time. With every member in Full mode this is
+    /// exactly 1.
     fn elision_headroom(&self) -> f64 {
-        if !self.config.replication.elision.enabled
-            || self.scheduler.mode() != ReplicaMode::Elided
-        {
+        if !self.config.replication.elision.enabled {
             return 1.0;
         }
         let mut full = 0.0f64;
@@ -1209,9 +1315,10 @@ impl Leader {
                 continue;
             }
             let f = self.members[m].flops_per_sample;
-            let fallback = self.health[hosts[0]].state() != HealthState::Healthy;
+            let banked = self.scheduler.mode(m) == ReplicaMode::Elided
+                && self.health[hosts[0]].state() == HealthState::Healthy;
             full += f * live as f64;
-            planned += if fallback { f * live as f64 } else { f };
+            planned += if banked { f } else { f * live as f64 };
         }
         if planned > 0.0 {
             (full / planned).max(1.0)

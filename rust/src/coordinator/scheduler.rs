@@ -1,4 +1,5 @@
-//! Load-adaptive replica elision (ISSUE 3): per-batch, per-member decisions
+//! Per-member load-adaptive replica elision (ISSUE 3, refactored to a
+//! per-member control plane in ISSUE 5): per-batch, per-member decisions
 //! about whether warm standbys actually execute.
 //!
 //! PR 2's replication layer runs every standby on every batch — full
@@ -7,27 +8,34 @@
 //! come from workload-aware scheduling of the parallel units, and DeViT
 //! (arXiv 2309.05015) shows decomposed-model ensembles tolerate members
 //! being dropped; together they justify spending standby compute only when
-//! it buys availability. The [`ReplicaScheduler`] consumes one
-//! [`FleetPressure`] reading per batch — produced by a pluggable
-//! [`PressureSignal`] from the batcher's intake snapshot and the rolling
-//! latency window ([`QueueP95Signal`] is the default) — and walks a
-//! three-mode ladder:
+//! it buys availability — and spending it *per member*, because on a
+//! heterogeneous fleet one hot member must not force cold members to shed
+//! (or keep) their standbys.
 //!
-//! * **Full** — every standby runs every batch (ISSUE 2 dispatch).
-//! * **Partial** — standbys shadow only members that need cover: a primary
-//!   that is Degraded, or a member promoted so recently its re-placed
-//!   standby is still warming.
-//! * **Elided** — primaries only; the whole standby budget is banked as
+//! The [`ReplicaScheduler`] keeps one independent hysteresis state machine
+//! per fleet member. Each batch, a pluggable [`PressureSignal`] folds the
+//! batch's [`PressureContext`] — the shared intake snapshot plus per-member
+//! latency/energy/health views — into one [`MemberPressure`] reading per
+//! member ([`QueueP95Signal`] is the default), and each member's machine
+//! walks its own three-mode ladder:
+//!
+//! * **Full** — every standby of this member runs (ISSUE 2 dispatch).
+//! * **Partial** — this member's standbys shadow only when it needs cover:
+//!   a primary that is Degraded, or a recent promotion still re-warming.
+//! * **Elided** — primary only; this member's standby budget is banked as
 //!   throughput (the admission limit scales up by the saved compute).
 //!
 //! Transitions move one step at a time and only after
-//! [`ElisionPolicy::hold_batches`] consecutive same-direction pressure
-//! readings, so a fill level oscillating around a watermark cannot flap the
-//! mode. One rule overrides every mode: a member whose primary is Degraded
-//! or Dead keeps its standbys running — availability falls back instantly,
+//! [`ElisionPolicy::hold_batches`] consecutive same-direction readings *for
+//! that member*, so a reading oscillating around a watermark cannot flap
+//! any member's mode — and one member's streaks never touch another's.
+//! One rule overrides every mode: a member whose primary is Degraded or
+//! Dead keeps its standbys running — availability falls back instantly,
 //! elision never costs a masking opportunity that is already needed.
 
 use crate::config::ElisionPolicy;
+use crate::model::Arch;
+use crate::predictor::LatencyPredictor;
 
 use super::batcher::IntakePressure;
 use super::health::HealthState;
@@ -45,50 +53,90 @@ pub enum ReplicaMode {
     Elided,
 }
 
-/// One batch's fleet-pressure reading, assembled by the leader from the
-/// batcher's intake snapshot and the rolling latency window. Device health
-/// deliberately does NOT enter this fleet-wide signal: it acts per member,
-/// through [`ReplicaScheduler::standby_executes`]'s instant fallback —
-/// which is both more precise (only the affected member pays for cover)
-/// and immune to the mode's hysteresis delay.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct FleetPressure {
-    /// Admitted-but-unreleased requests over the capacity-derived queue
-    /// limit (the pre-elision-scaling denominator, so the control signal
-    /// is independent of its own actuator). 0 when shedding is disabled.
-    pub queue_fill: f64,
-    /// p95 of recent per-batch virtual latencies, ms (0 until measured).
-    pub p95_virtual_ms: f64,
+/// One member's pressure reading for one batch, produced by a
+/// [`PressureSignal`] and consumed by that member's hysteresis machine in
+/// the [`ReplicaScheduler`].
+///
+/// ```
+/// use coformer::coordinator::MemberPressure;
+///
+/// // a saturated reading: fill past any watermark, latency quiet
+/// let p = MemberPressure { fill: 1.0, latency_ms: 0.0 };
+/// assert!(p.fill >= 0.75);
+/// assert_eq!(MemberPressure::default().fill, 0.0, "default reads cold");
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemberPressure {
+    /// Normalized load fill in `[0, ∞)`, compared against the member's
+    /// high/low watermarks ([`ElisionPolicy::member_thresholds`]). The
+    /// stock [`QueueP95Signal`] reports the shared admission-queue fill;
+    /// [`EnergyBudgetSignal`] reports joules spent over the member's
+    /// energy budget. 0 (the default) always reads as a low (drain)
+    /// observation — a missing reading can only walk a member back toward
+    /// [`ReplicaMode::Full`], never shed its standbys.
+    pub fill: f64,
+    /// Latency reading in milliseconds, compared against
+    /// [`ElisionPolicy::p95_high_ms`] (0 there disables the gate). The
+    /// stock signals derive it from the member's own recent arrivals.
+    pub latency_ms: f64,
+}
+
+/// One member's slice of the observation state for one batch: what the
+/// leader knows about this member when the [`PressureSignal`] runs.
+#[derive(Clone, Copy, Debug)]
+pub struct MemberView<'a> {
+    /// Health of the member's current primary host at batch open.
+    pub health: HealthState,
+    /// The member's recent per-batch virtual arrival latencies at the
+    /// central node, oldest first (ms, primary-host arrivals — a standby
+    /// masking a slow primary does not hide the primary's latency from
+    /// the control plane). Bounded by the leader's window size.
+    pub recent_virtual_ms: &'a [f64],
+    /// The member's recent per-batch energy across every live host
+    /// assigned a copy of it, oldest first (joules, background-
+    /// subtracted) — the *fully-replicated* spend, deliberately not
+    /// reduced by elision: like the queue signal's capacity-limit
+    /// denominator, the energy reading must not track its own actuator
+    /// or a budget between the elided and replicated levels would flap
+    /// the mode. Actually-saved joules are ledgered in
+    /// `FaultMetrics::standby_energy_saved_j` instead.
+    pub recent_energy_j: &'a [f64],
 }
 
 /// Everything a [`PressureSignal`] may look at for one batch: the intake
-/// snapshot the batcher shipped with the batch, and the leader's rolling
-/// window of recent per-batch virtual latencies (chronological,
-/// milliseconds, bounded by the leader's window size).
+/// snapshot the batcher shipped with the batch, the leader's fleet-wide
+/// rolling latency window, and one [`MemberView`] per fleet member.
 #[derive(Clone, Copy, Debug)]
 pub struct PressureContext<'a> {
-    /// Intake-queue snapshot taken at batch-close time.
+    /// Intake-queue snapshot taken at batch-close time (shared across
+    /// members — the admission queue is one queue).
     pub intake: IntakePressure,
-    /// Recent per-batch virtual latencies, oldest first (ms).
+    /// Fleet-wide recent per-batch virtual latencies, oldest first (ms).
     pub recent_virtual_ms: &'a [f64],
+    /// Per-member observation views, indexed by member.
+    pub members: &'a [MemberView<'a>],
 }
 
-/// Pluggable fleet-pressure reading (ISSUE 4): how raw intake/latency
-/// observations become the [`FleetPressure`] the [`ReplicaScheduler`]
-/// walks its mode ladder on. The built-in [`QueueP95Signal`] reproduces
-/// the original queue-fill + rolling-p95 reading; the ROADMAP's predictive
-/// (latency-predictor MLP) and energy-keyed controllers are further impls
-/// of this trait, dropped in through
+/// Pluggable per-member pressure reading (ISSUE 4; per-member since
+/// ISSUE 5): how raw intake/latency/energy observations become the one
+/// [`MemberPressure`] per member that the [`ReplicaScheduler`] walks each
+/// member's mode ladder on. The built-in [`QueueP95Signal`] reproduces the
+/// queue-fill + per-member-p95 reading; [`PredictiveSignal`] forecasts
+/// from the latency-predictor MLP, and [`EnergyBudgetSignal`] keys the
+/// trade on joules — both dropped in through
 /// [`super::ServeBuilder::pressure_signal`].
 ///
 /// Implementations may keep state across batches (`read` takes `&mut
 /// self`); they run on the leader thread, once per batch, before the batch
-/// is dispatched.
+/// is dispatched. `read` must return one reading per entry of
+/// `ctx.members`, in member order; the scheduler treats a missing reading
+/// as [`MemberPressure::default`] (a drain observation) and ignores
+/// extras.
 ///
 /// ```
-/// use coformer::coordinator::{FleetPressure, PressureContext, PressureSignal};
+/// use coformer::coordinator::{MemberPressure, PressureContext, PressureSignal};
 ///
-/// /// Queue-only control: ignore latency entirely.
+/// /// Queue-only control: every member reads the shared intake fill.
 /// struct QueueOnly;
 ///
 /// impl PressureSignal for QueueOnly {
@@ -96,8 +144,12 @@ pub struct PressureContext<'a> {
 ///         "queue-only"
 ///     }
 ///
-///     fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure {
-///         FleetPressure { queue_fill: ctx.intake.fill(), p95_virtual_ms: 0.0 }
+///     fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+///         let fill = ctx.intake.fill();
+///         ctx.members
+///             .iter()
+///             .map(|_| MemberPressure { fill, latency_ms: 0.0 })
+///             .collect()
 ///     }
 /// }
 /// ```
@@ -105,13 +157,64 @@ pub trait PressureSignal: Send {
     /// Diagnostic name.
     fn name(&self) -> &'static str;
 
-    /// Fold one batch's observations into the scheduler's pressure reading.
-    fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure;
+    /// Fold one batch's observations into per-member pressure readings
+    /// (one per `ctx.members` entry, in member order).
+    fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure>;
 }
 
-/// The default signal: admission-queue fill plus the nearest-rank p95 of
-/// the rolling latency window — exactly the pre-ISSUE-4 hardcoded reading,
-/// now one implementation behind the [`PressureSignal`] interface.
+/// Typed construction error for the stock [`PressureSignal`] impls.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SignalError {
+    /// An EWMA/trend weight outside `(0, 1]` or non-finite.
+    InvalidAlpha { alpha: f64 },
+    /// A per-member parameter list was empty.
+    EmptyMembers,
+    /// A per-member parameter was non-finite or out of range.
+    InvalidMemberValue {
+        what: &'static str,
+        member: usize,
+        value: f64,
+    },
+    /// Two per-member parameter lists disagree on the member count.
+    LengthMismatch { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for SignalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SignalError::InvalidAlpha { alpha } => {
+                write!(f, "signal alpha {alpha} must be finite and in (0, 1]")
+            }
+            SignalError::EmptyMembers => {
+                write!(f, "signal needs at least one per-member parameter")
+            }
+            SignalError::InvalidMemberValue { what, member, value } => write!(
+                f,
+                "signal {what} for member {member} must be finite and valid, got {value}"
+            ),
+            SignalError::LengthMismatch { expected, got } => write!(
+                f,
+                "signal per-member parameter lists disagree: expected {expected}, got {got}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SignalError {}
+
+fn validate_alpha(alpha: f64) -> Result<f64, SignalError> {
+    if alpha.is_finite() && alpha > 0.0 && alpha <= 1.0 {
+        Ok(alpha)
+    } else {
+        Err(SignalError::InvalidAlpha { alpha })
+    }
+}
+
+/// The default signal: the shared admission-queue fill plus, per member,
+/// the nearest-rank p95 of that member's own rolling latency window —
+/// exactly the pre-ISSUE-5 reading, made per-member. Total on every
+/// input: an empty latency window reads 0 ms explicitly (a drain
+/// observation), never a NaN or a panic.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct QueueP95Signal;
 
@@ -120,33 +223,44 @@ impl PressureSignal for QueueP95Signal {
         "queue-p95"
     }
 
-    fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure {
-        let mut v: Vec<f64> = ctx.recent_virtual_ms.to_vec();
-        v.sort_by(|a, b| a.total_cmp(b));
-        FleetPressure {
-            queue_fill: ctx.intake.fill(),
-            p95_virtual_ms: crate::metrics::percentile_nearest_rank(&v, 95.0),
-        }
+    fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+        let fill = ctx.intake.fill();
+        ctx.members
+            .iter()
+            .map(|m| {
+                // explicit totality on the empty window: no latency
+                // evidence reads as zero latency pressure
+                let latency_ms = if m.recent_virtual_ms.is_empty() {
+                    0.0
+                } else {
+                    let mut v: Vec<f64> = m.recent_virtual_ms.to_vec();
+                    v.sort_by(|a, b| a.total_cmp(b));
+                    crate::metrics::percentile_nearest_rank(&v, 95.0)
+                };
+                MemberPressure { fill, latency_ms }
+            })
+            .collect()
     }
 }
 
-/// Exponentially-weighted-moving-average latency signal: reports the EWMA
-/// of per-batch virtual latency instead of the windowed p95, so a
-/// sustained latency ramp crosses the scheduler's `p95_high_ms` gate a few
-/// batches earlier than the rank statistic (a lightweight step toward the
-/// ROADMAP's predictive controller). Queue fill passes through unchanged.
-#[derive(Clone, Copy, Debug)]
+/// Exponentially-weighted-moving-average latency signal: reports, per
+/// member, the EWMA of that member's per-batch latency instead of the
+/// windowed p95, so a sustained latency ramp crosses the scheduler's
+/// `p95_high_ms` gate a few batches earlier than the rank statistic.
+/// Queue fill passes through unchanged.
+#[derive(Clone, Debug)]
 pub struct EwmaLatencySignal {
     alpha: f64,
-    ewma_ms: Option<f64>,
+    ewma_ms: Vec<Option<f64>>,
 }
 
 impl EwmaLatencySignal {
-    /// `alpha` is the new-sample weight, clamped into (0, 1]; 1 tracks the
-    /// latest batch exactly, smaller values smooth harder.
-    pub fn new(alpha: f64) -> Self {
-        let alpha = if alpha.is_finite() { alpha.clamp(1e-3, 1.0) } else { 1.0 };
-        EwmaLatencySignal { alpha, ewma_ms: None }
+    /// `alpha` is the new-sample weight and must be finite and in
+    /// `(0, 1]` — 1 tracks the latest batch exactly, smaller values
+    /// smooth harder. Anything else is rejected with
+    /// [`SignalError::InvalidAlpha`] instead of being silently clamped.
+    pub fn new(alpha: f64) -> Result<Self, SignalError> {
+        Ok(EwmaLatencySignal { alpha: validate_alpha(alpha)?, ewma_ms: Vec::new() })
     }
 }
 
@@ -155,21 +269,245 @@ impl PressureSignal for EwmaLatencySignal {
         "ewma-latency"
     }
 
-    fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure {
-        if let Some(&latest) = ctx.recent_virtual_ms.last() {
-            self.ewma_ms = Some(match self.ewma_ms {
-                Some(prev) => self.alpha * latest + (1.0 - self.alpha) * prev,
-                None => latest,
-            });
+    fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+        if self.ewma_ms.len() < ctx.members.len() {
+            self.ewma_ms.resize(ctx.members.len(), None);
         }
-        FleetPressure {
-            queue_fill: ctx.intake.fill(),
-            p95_virtual_ms: self.ewma_ms.unwrap_or(0.0),
-        }
+        let fill = ctx.intake.fill();
+        ctx.members
+            .iter()
+            .enumerate()
+            .map(|(m, view)| {
+                if let Some(&latest) = view.recent_virtual_ms.last() {
+                    self.ewma_ms[m] = Some(match self.ewma_ms[m] {
+                        Some(prev) => self.alpha * latest + (1.0 - self.alpha) * prev,
+                        None => latest,
+                    });
+                }
+                MemberPressure { fill, latency_ms: self.ewma_ms[m].unwrap_or(0.0) }
+            })
+            .collect()
     }
 }
 
-/// Direction a pressure reading pushes the mode ladder.
+/// Predictive controller (the ROADMAP's latency-predictor follow-on):
+/// drives elision from [`LatencyPredictor`] forecasts instead of the
+/// rolling p95. Each member carries a baseline latency from the MLP (its
+/// sub-model's predicted ms on its device); at read time the signal
+/// smooths the observed-over-baseline ratio and extrapolates it one step,
+/// so the latency reading *leads* a sustained ramp — the member sheds its
+/// standby before the windowed rank statistic would have noticed.
+///
+/// ```
+/// use coformer::coordinator::{
+///     HealthState, IntakePressure, MemberView, PredictiveSignal, PressureContext,
+///     PressureSignal,
+/// };
+///
+/// // baseline 10 ms from the latency-predictor MLP; alpha 1 = pure trend
+/// let mut sig = PredictiveSignal::from_baselines_ms(vec![10.0], 1.0).unwrap();
+/// let read = |sig: &mut PredictiveSignal, window: &[f64]| {
+///     let members = [MemberView {
+///         health: HealthState::Healthy,
+///         recent_virtual_ms: window,
+///         recent_energy_j: &[],
+///     }];
+///     let ctx = PressureContext {
+///         intake: IntakePressure::unbounded(),
+///         recent_virtual_ms: &[],
+///         members: &members,
+///     };
+///     sig.read(&ctx)[0]
+/// };
+/// assert_eq!(read(&mut sig, &[]).latency_ms, 0.0, "no evidence, no pressure");
+/// read(&mut sig, &[10.0]); // seed: on-baseline
+/// let p = read(&mut sig, &[10.0, 20.0]); // ramping 10 → 20
+/// assert!(p.latency_ms > 20.0, "the forecast leads the ramp: {}", p.latency_ms);
+/// ```
+#[derive(Clone, Debug)]
+pub struct PredictiveSignal {
+    /// Per-member baseline latency, ms (MLP prediction for the member's
+    /// sub-model on its device).
+    baseline_ms: Vec<f64>,
+    alpha: f64,
+    /// Smoothed observed/baseline ratio per member.
+    ratio_ewma: Vec<Option<f64>>,
+}
+
+impl PredictiveSignal {
+    /// Build from per-member baseline forecasts in milliseconds (what
+    /// [`LatencyPredictor::predict_arch_ms`] returns for each member).
+    /// `alpha` is the trend-smoothing weight in `(0, 1]`.
+    pub fn from_baselines_ms(baseline_ms: Vec<f64>, alpha: f64) -> Result<Self, SignalError> {
+        let alpha = validate_alpha(alpha)?;
+        if baseline_ms.is_empty() {
+            return Err(SignalError::EmptyMembers);
+        }
+        for (m, &b) in baseline_ms.iter().enumerate() {
+            if !b.is_finite() || b <= 0.0 {
+                return Err(SignalError::InvalidMemberValue {
+                    what: "baseline_ms",
+                    member: m,
+                    value: b,
+                });
+            }
+        }
+        let n = baseline_ms.len();
+        Ok(PredictiveSignal { baseline_ms, alpha, ratio_ewma: vec![None; n] })
+    }
+
+    /// Build from one trained [`LatencyPredictor`] per member and the
+    /// member sub-model architectures: the baseline is the MLP's forecast
+    /// for each member's arch on its device.
+    pub fn from_predictors(
+        predictors: &[LatencyPredictor],
+        archs: &[Arch],
+        alpha: f64,
+    ) -> Result<Self, SignalError> {
+        if predictors.len() != archs.len() {
+            return Err(SignalError::LengthMismatch {
+                expected: predictors.len(),
+                got: archs.len(),
+            });
+        }
+        let baseline_ms: Vec<f64> = predictors
+            .iter()
+            .zip(archs)
+            .map(|(p, a)| p.predict_arch_ms(a))
+            .collect();
+        Self::from_baselines_ms(baseline_ms, alpha)
+    }
+}
+
+impl PressureSignal for PredictiveSignal {
+    fn name(&self) -> &'static str {
+        "predictive-mlp"
+    }
+
+    fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+        if self.ratio_ewma.len() < ctx.members.len() {
+            self.ratio_ewma.resize(ctx.members.len(), None);
+        }
+        let fill = ctx.intake.fill();
+        ctx.members
+            .iter()
+            .enumerate()
+            .map(|(m, view)| {
+                // a member beyond the baseline list never drives elision
+                let Some(&base) = self.baseline_ms.get(m) else {
+                    return MemberPressure { fill, latency_ms: 0.0 };
+                };
+                let Some(&obs) = view.recent_virtual_ms.last() else {
+                    return MemberPressure { fill, latency_ms: 0.0 };
+                };
+                let ratio = obs / base;
+                let prev = self.ratio_ewma[m];
+                let ewma = match prev {
+                    Some(p) => self.alpha * ratio + (1.0 - self.alpha) * p,
+                    None => ratio,
+                };
+                self.ratio_ewma[m] = Some(ewma);
+                // one-step extrapolation of the smoothed trend: the slope
+                // of the EWMA is added back on, so a ramp is forecast past
+                // its latest observation
+                let slope = ewma - prev.unwrap_or(ewma);
+                let forecast_ms = (base * (ewma + slope)).max(0.0);
+                MemberPressure { fill, latency_ms: forecast_ms }
+            })
+            .collect()
+    }
+}
+
+/// Energy-budget controller (the ROADMAP's joules-keyed follow-on,
+/// motivated by DeViT's battery-powered fleets): drives elision from each
+/// member's per-batch joules — the [`crate::device::EnergyMeter`] model
+/// applied to the member's live copies at full replication (see
+/// [`MemberView::recent_energy_j`]) — against its configured budget
+/// ([`ElisionPolicy::energy_budget_j`] plus per-member overrides). The
+/// reading maps energy into the fill channel — `joules / budget` — so a
+/// member burning `high_watermark ×` its budget sheds its own standby
+/// while members within budget keep theirs; a member with budget 0 never
+/// reads hot.
+///
+/// ```
+/// use coformer::config::ElisionPolicy;
+/// use coformer::coordinator::{
+///     EnergyBudgetSignal, HealthState, IntakePressure, MemberView,
+///     PressureContext, PressureSignal,
+/// };
+///
+/// let policy = ElisionPolicy { energy_budget_j: 4.0, ..ElisionPolicy::default() };
+/// let mut sig = EnergyBudgetSignal::from_policy(&policy, 1).unwrap();
+/// let members = [MemberView {
+///     health: HealthState::Healthy,
+///     recent_virtual_ms: &[],
+///     recent_energy_j: &[3.0], // most recent batch burned 3 J
+/// }];
+/// let ctx = PressureContext {
+///     intake: IntakePressure::unbounded(),
+///     recent_virtual_ms: &[],
+///     members: &members,
+/// };
+/// let p = sig.read(&ctx)[0];
+/// assert!((p.fill - 0.75).abs() < 1e-12, "3 J of a 4 J budget");
+/// ```
+#[derive(Clone, Debug)]
+pub struct EnergyBudgetSignal {
+    /// Per-member energy budget, joules per batch (0 = no budget: that
+    /// member never reads hot through this signal).
+    budgets_j: Vec<f64>,
+}
+
+impl EnergyBudgetSignal {
+    /// Build from explicit per-member budgets in joules per batch.
+    pub fn new(budgets_j: Vec<f64>) -> Result<Self, SignalError> {
+        if budgets_j.is_empty() {
+            return Err(SignalError::EmptyMembers);
+        }
+        for (m, &b) in budgets_j.iter().enumerate() {
+            if !b.is_finite() || b < 0.0 {
+                return Err(SignalError::InvalidMemberValue {
+                    what: "energy_budget_j",
+                    member: m,
+                    value: b,
+                });
+            }
+        }
+        Ok(EnergyBudgetSignal { budgets_j })
+    }
+
+    /// Resolve budgets from an [`ElisionPolicy`] (base
+    /// `energy_budget_j` merged with per-member overrides) for an
+    /// `n_members`-member fleet.
+    pub fn from_policy(policy: &ElisionPolicy, n_members: usize) -> Result<Self, SignalError> {
+        Self::new(
+            (0..n_members)
+                .map(|m| policy.member_thresholds(m).energy_budget_j)
+                .collect(),
+        )
+    }
+}
+
+impl PressureSignal for EnergyBudgetSignal {
+    fn name(&self) -> &'static str {
+        "energy-budget"
+    }
+
+    fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+        ctx.members
+            .iter()
+            .enumerate()
+            .map(|(m, view)| {
+                let budget = self.budgets_j.get(m).copied().unwrap_or(0.0);
+                let spent = view.recent_energy_j.last().copied().unwrap_or(0.0);
+                let fill = if budget > 0.0 { spent / budget } else { 0.0 };
+                MemberPressure { fill, latency_ms: 0.0 }
+            })
+            .collect()
+    }
+}
+
+/// Direction a pressure reading pushes a member's mode ladder.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Reading {
     High,
@@ -177,22 +515,18 @@ enum Reading {
     Hold,
 }
 
-/// Hysteretic mode controller + per-member standby gate.
-#[derive(Clone, Debug)]
-pub struct ReplicaScheduler {
-    policy: ElisionPolicy,
+/// One member's independent hysteresis machine.
+#[derive(Clone, Copy, Debug)]
+struct MemberState {
     mode: ReplicaMode,
     high_streak: usize,
     low_streak: usize,
     transitions: usize,
 }
 
-impl ReplicaScheduler {
-    /// Starts in [`ReplicaMode::Full`] — the safe mode — and only sheds
-    /// standby work once pressure is actually observed.
-    pub fn new(policy: ElisionPolicy) -> Self {
-        ReplicaScheduler {
-            policy,
+impl MemberState {
+    fn new() -> Self {
+        MemberState {
             mode: ReplicaMode::Full,
             high_streak: 0,
             low_streak: 0,
@@ -200,44 +534,12 @@ impl ReplicaScheduler {
         }
     }
 
-    pub fn mode(&self) -> ReplicaMode {
-        self.mode
-    }
-
-    /// Mode changes since start (flap metric; surfaced in `FaultMetrics`).
-    pub fn transitions(&self) -> usize {
-        self.transitions
-    }
-
-    fn classify(&self, p: &FleetPressure) -> Reading {
-        let lat_gate = self.policy.p95_high_ms > 0.0;
-        let lat_high = lat_gate && p.p95_virtual_ms >= self.policy.p95_high_ms;
-        if p.queue_fill >= self.policy.high_watermark || lat_high {
-            Reading::High
-        } else if p.queue_fill <= self.policy.low_watermark
-            && (!lat_gate || p.p95_virtual_ms < self.policy.p95_high_ms)
-        {
-            Reading::Low
-        } else {
-            Reading::Hold
-        }
-    }
-
-    /// Consume one batch's pressure reading and return the mode the batch
-    /// should dispatch with. High readings step Full → Partial → Elided,
-    /// low readings step back; each step requires `hold_batches`
-    /// consecutive same-direction readings and resets both streaks, so the
-    /// mode moves at most once per `hold_batches` batches and a reading
-    /// sequence oscillating inside the watermark band never moves it.
-    pub fn observe(&mut self, p: &FleetPressure) -> ReplicaMode {
-        if !self.policy.enabled {
-            return self.mode; // Full forever; observe() is a no-op
-        }
-        match self.classify(p) {
+    fn step(&mut self, reading: Reading, hold: usize) {
+        match reading {
             Reading::High => {
                 self.high_streak += 1;
                 self.low_streak = 0;
-                if self.high_streak >= self.policy.hold_batches {
+                if self.high_streak >= hold {
                     let next = match self.mode {
                         ReplicaMode::Full => ReplicaMode::Partial,
                         ReplicaMode::Partial | ReplicaMode::Elided => ReplicaMode::Elided,
@@ -248,7 +550,7 @@ impl ReplicaScheduler {
             Reading::Low => {
                 self.low_streak += 1;
                 self.high_streak = 0;
-                if self.low_streak >= self.policy.hold_batches {
+                if self.low_streak >= hold {
                     let next = match self.mode {
                         ReplicaMode::Elided => ReplicaMode::Partial,
                         ReplicaMode::Partial | ReplicaMode::Full => ReplicaMode::Full,
@@ -261,7 +563,6 @@ impl ReplicaScheduler {
                 self.low_streak = 0;
             }
         }
-        self.mode
     }
 
     fn step_to(&mut self, next: ReplicaMode) {
@@ -272,15 +573,102 @@ impl ReplicaScheduler {
             self.transitions += 1;
         }
     }
+}
 
-    /// Whether a member's standbys execute this batch. The unhealthy-primary
-    /// fallback overrides every mode: elision never withholds a standby
-    /// that is currently needed for masking.
-    pub fn standby_executes(&self, primary: HealthState, recently_promoted: bool) -> bool {
+/// Per-member hysteretic mode controller + standby gate (ISSUE 5). One
+/// independent hysteresis machine per fleet member: a hot member walks
+/// its own ladder while cold members' streaks are untouched, and the
+/// per-member invariants (never elide an unhealthy primary, at most one
+/// transition per `hold_batches` readings) hold member by member.
+#[derive(Clone, Debug)]
+pub struct ReplicaScheduler {
+    policy: ElisionPolicy,
+    members: Vec<MemberState>,
+}
+
+impl ReplicaScheduler {
+    /// Every member starts in [`ReplicaMode::Full`] — the safe mode — and
+    /// only sheds its standby work once pressure is actually observed on
+    /// *it*.
+    pub fn new(policy: ElisionPolicy, n_members: usize) -> Self {
+        ReplicaScheduler { policy, members: vec![MemberState::new(); n_members] }
+    }
+
+    /// Members this scheduler tracks.
+    pub fn n_members(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Member `m`'s current mode (members beyond the fleet read as Full).
+    pub fn mode(&self, m: usize) -> ReplicaMode {
+        self.members.get(m).map(|s| s.mode).unwrap_or(ReplicaMode::Full)
+    }
+
+    /// The most aggressive mode any member currently holds (the fleet's
+    /// batch ledger entry: a batch counts as Elided when *any* member shed
+    /// its standby this batch).
+    pub fn fleet_mode(&self) -> ReplicaMode {
+        self.members.iter().map(|s| s.mode).max().unwrap_or(ReplicaMode::Full)
+    }
+
+    /// Mode changes since start, summed across members (flap metric;
+    /// surfaced in `FaultMetrics::mode_transitions`).
+    pub fn transitions(&self) -> usize {
+        self.members.iter().map(|s| s.transitions).sum()
+    }
+
+    /// Mode changes of member `m` alone.
+    pub fn member_transitions(&self, m: usize) -> usize {
+        self.members.get(m).map(|s| s.transitions).unwrap_or(0)
+    }
+
+    fn classify(&self, m: usize, p: &MemberPressure) -> Reading {
+        let th = self.policy.member_thresholds(m);
+        let lat_gate = self.policy.p95_high_ms > 0.0;
+        let lat_high = lat_gate && p.latency_ms >= self.policy.p95_high_ms;
+        if p.fill >= th.high_watermark || lat_high {
+            Reading::High
+        } else if p.fill <= th.low_watermark
+            && (!lat_gate || p.latency_ms < self.policy.p95_high_ms)
+        {
+            Reading::Low
+        } else {
+            Reading::Hold
+        }
+    }
+
+    /// Consume one batch's per-member pressure readings (one per member,
+    /// in member order; missing readings are treated as
+    /// [`MemberPressure::default`] — a drain observation — and extras are
+    /// ignored). Each member's machine steps independently: high readings
+    /// step Full → Partial → Elided, low readings step back, each step
+    /// requiring `hold_batches` consecutive same-direction readings *for
+    /// that member*, so one member's mode moves at most once per
+    /// `hold_batches` batches and never because of another member's load.
+    pub fn observe(&mut self, readings: &[MemberPressure]) {
+        if !self.policy.enabled {
+            return; // Full forever; observe() is a no-op
+        }
+        for m in 0..self.members.len() {
+            let p = readings.get(m).copied().unwrap_or_default();
+            let reading = self.classify(m, &p);
+            self.members[m].step(reading, self.policy.hold_batches);
+        }
+    }
+
+    /// Whether member `m`'s standbys execute this batch. The
+    /// unhealthy-primary fallback overrides every mode: elision never
+    /// withholds a standby that is currently needed for masking.
+    pub fn standby_executes(
+        &self,
+        m: usize,
+        primary: HealthState,
+        recently_promoted: bool,
+    ) -> bool {
         if !self.policy.enabled {
             return true;
         }
-        match self.mode {
+        match self.mode(m) {
             ReplicaMode::Full => true,
             _ if primary != HealthState::Healthy => true, // instant fallback
             ReplicaMode::Partial => recently_promoted,
@@ -291,9 +679,9 @@ impl ReplicaScheduler {
     /// True when `standby_executes` would return true *only* because of the
     /// unhealthy-primary fallback (metrics: these are the saves elision
     /// explicitly refused to trade away).
-    pub fn is_fallback(&self, primary: HealthState) -> bool {
+    pub fn is_fallback(&self, m: usize, primary: HealthState) -> bool {
         self.policy.enabled
-            && self.mode != ReplicaMode::Full
+            && self.mode(m) != ReplicaMode::Full
             && primary != HealthState::Healthy
     }
 }
@@ -301,6 +689,7 @@ impl ReplicaScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::MemberOverride;
 
     fn policy(hold: usize) -> ElisionPolicy {
         ElisionPolicy {
@@ -310,43 +699,49 @@ mod tests {
             p95_high_ms: 0.0,
             hold_batches: hold,
             shadow_promoted_batches: 2,
+            ..ElisionPolicy::default()
         }
     }
 
-    fn high() -> FleetPressure {
-        FleetPressure { queue_fill: 0.9, ..FleetPressure::default() }
+    fn high() -> MemberPressure {
+        MemberPressure { fill: 0.9, latency_ms: 0.0 }
     }
 
-    fn low() -> FleetPressure {
-        FleetPressure { queue_fill: 0.1, ..FleetPressure::default() }
+    fn low() -> MemberPressure {
+        MemberPressure { fill: 0.1, latency_ms: 0.0 }
     }
 
-    fn mid() -> FleetPressure {
-        FleetPressure { queue_fill: 0.5, ..FleetPressure::default() }
+    fn mid() -> MemberPressure {
+        MemberPressure { fill: 0.5, latency_ms: 0.0 }
     }
 
     #[test]
     fn disabled_policy_never_leaves_full_and_never_elides() {
-        let mut s = ReplicaScheduler::new(ElisionPolicy::default());
+        let mut s = ReplicaScheduler::new(ElisionPolicy::default(), 3);
         for _ in 0..10 {
-            assert_eq!(s.observe(&high()), ReplicaMode::Full);
+            s.observe(&[high(), high(), high()]);
+            assert_eq!(s.fleet_mode(), ReplicaMode::Full);
         }
         assert_eq!(s.transitions(), 0);
-        assert!(s.standby_executes(HealthState::Healthy, false));
+        assert!(s.standby_executes(0, HealthState::Healthy, false));
     }
 
     #[test]
     fn ladder_steps_one_mode_per_hold_window() {
-        let mut s = ReplicaScheduler::new(policy(2));
-        assert_eq!(s.observe(&high()), ReplicaMode::Full); // 1 of 2
-        assert_eq!(s.observe(&high()), ReplicaMode::Partial); // step
-        assert_eq!(s.observe(&high()), ReplicaMode::Partial); // 1 of 2
-        assert_eq!(s.observe(&high()), ReplicaMode::Elided); // step
-        assert_eq!(s.observe(&high()), ReplicaMode::Elided); // saturated
-        assert_eq!(s.observe(&low()), ReplicaMode::Elided); // 1 of 2
-        assert_eq!(s.observe(&low()), ReplicaMode::Partial);
-        assert_eq!(s.observe(&low()), ReplicaMode::Partial);
-        assert_eq!(s.observe(&low()), ReplicaMode::Full);
+        let mut s = ReplicaScheduler::new(policy(2), 1);
+        let step = |s: &mut ReplicaScheduler, p: MemberPressure| {
+            s.observe(&[p]);
+            s.mode(0)
+        };
+        assert_eq!(step(&mut s, high()), ReplicaMode::Full); // 1 of 2
+        assert_eq!(step(&mut s, high()), ReplicaMode::Partial); // step
+        assert_eq!(step(&mut s, high()), ReplicaMode::Partial); // 1 of 2
+        assert_eq!(step(&mut s, high()), ReplicaMode::Elided); // step
+        assert_eq!(step(&mut s, high()), ReplicaMode::Elided); // saturated
+        assert_eq!(step(&mut s, low()), ReplicaMode::Elided); // 1 of 2
+        assert_eq!(step(&mut s, low()), ReplicaMode::Partial);
+        assert_eq!(step(&mut s, low()), ReplicaMode::Partial);
+        assert_eq!(step(&mut s, low()), ReplicaMode::Full);
         assert_eq!(s.transitions(), 4);
     }
 
@@ -354,131 +749,282 @@ mod tests {
     fn alternating_readings_never_flap_the_mode() {
         // oscillation around the band with hold = 2: every direction switch
         // resets the opposing streak, so the mode never moves
-        let mut s = ReplicaScheduler::new(policy(2));
+        let mut s = ReplicaScheduler::new(policy(2), 1);
         for _ in 0..20 {
-            assert_eq!(s.observe(&high()), ReplicaMode::Full);
-            assert_eq!(s.observe(&low()), ReplicaMode::Full);
+            s.observe(&[high()]);
+            assert_eq!(s.mode(0), ReplicaMode::Full);
+            s.observe(&[low()]);
+            assert_eq!(s.mode(0), ReplicaMode::Full);
         }
         assert_eq!(s.transitions(), 0);
     }
 
     #[test]
     fn in_band_readings_hold_the_mode_and_reset_streaks() {
-        let mut s = ReplicaScheduler::new(policy(2));
-        s.observe(&high());
-        s.observe(&high()); // → Partial
-        assert_eq!(s.mode(), ReplicaMode::Partial);
+        let mut s = ReplicaScheduler::new(policy(2), 1);
+        s.observe(&[high()]);
+        s.observe(&[high()]); // → Partial
+        assert_eq!(s.mode(0), ReplicaMode::Partial);
         for _ in 0..10 {
-            assert_eq!(s.observe(&mid()), ReplicaMode::Partial);
+            s.observe(&[mid()]);
+            assert_eq!(s.mode(0), ReplicaMode::Partial);
         }
         // a single high after the quiet spell is not enough to step again
-        assert_eq!(s.observe(&high()), ReplicaMode::Partial);
-        assert_eq!(s.observe(&high()), ReplicaMode::Elided);
+        s.observe(&[high()]);
+        assert_eq!(s.mode(0), ReplicaMode::Partial);
+        s.observe(&[high()]);
+        assert_eq!(s.mode(0), ReplicaMode::Elided);
+    }
+
+    #[test]
+    fn one_hot_member_never_moves_a_cold_member() {
+        // the per-member tentpole invariant: member 0 saturates, members 1
+        // and 2 stay cold — only member 0's machine moves
+        let mut s = ReplicaScheduler::new(policy(1), 3);
+        for _ in 0..5 {
+            s.observe(&[high(), low(), low()]);
+        }
+        assert_eq!(s.mode(0), ReplicaMode::Elided);
+        assert_eq!(s.mode(1), ReplicaMode::Full);
+        assert_eq!(s.mode(2), ReplicaMode::Full);
+        assert_eq!(s.member_transitions(0), 2);
+        assert_eq!(s.member_transitions(1), 0);
+        assert_eq!(s.member_transitions(2), 0);
+        assert_eq!(s.transitions(), 2);
+        assert_eq!(s.fleet_mode(), ReplicaMode::Elided, "any elided member keys the fleet");
+        // the hot member sheds its own standby; cold members keep theirs
+        assert!(!s.standby_executes(0, HealthState::Healthy, false));
+        assert!(s.standby_executes(1, HealthState::Healthy, false));
+        assert!(s.standby_executes(2, HealthState::Healthy, false));
+    }
+
+    #[test]
+    fn per_member_watermark_overrides_split_one_shared_fill() {
+        // one shared fill of 0.5: member 0's overridden high watermark
+        // (0.3) reads it as saturation while the default members hold
+        let mut p = policy(1);
+        p.member_overrides = vec![MemberOverride {
+            member: 0,
+            high_watermark: Some(0.3),
+            low_watermark: Some(0.1),
+            energy_budget_j: None,
+        }];
+        let mut s = ReplicaScheduler::new(p, 2);
+        for _ in 0..4 {
+            s.observe(&[mid(), mid()]); // fill 0.5 for everyone
+        }
+        assert_eq!(s.mode(0), ReplicaMode::Elided, "override reads 0.5 as high");
+        assert_eq!(s.mode(1), ReplicaMode::Full, "base band holds at 0.5");
+    }
+
+    #[test]
+    fn missing_readings_drain_and_extras_are_ignored() {
+        let mut s = ReplicaScheduler::new(policy(1), 2);
+        s.observe(&[high(), high()]);
+        s.observe(&[high(), high()]);
+        assert_eq!(s.mode(0), ReplicaMode::Elided);
+        assert_eq!(s.mode(1), ReplicaMode::Elided);
+        // a short reading vector: member 1 defaults to a drain observation
+        s.observe(&[high()]);
+        assert_eq!(s.mode(0), ReplicaMode::Elided);
+        assert_eq!(s.mode(1), ReplicaMode::Partial, "missing reading walks back");
+        // extra readings beyond the fleet are ignored, not a panic
+        s.observe(&[high(), low(), high(), high()]);
+        assert_eq!(s.n_members(), 2);
     }
 
     #[test]
     fn latency_signal_alone_reads_high() {
         let mut p = policy(1);
         p.p95_high_ms = 50.0;
-        let mut s = ReplicaScheduler::new(p);
-        let slow = FleetPressure { queue_fill: 0.0, p95_virtual_ms: 60.0 };
-        assert_eq!(s.observe(&slow), ReplicaMode::Partial);
-        // low fill but still-slow p95 is NOT a low reading (no step back)
-        let drained = FleetPressure { queue_fill: 0.0, p95_virtual_ms: 55.0 };
-        s.observe(&slow); // → Elided
-        assert_eq!(s.observe(&drained), ReplicaMode::Elided);
-        let recovered = FleetPressure { queue_fill: 0.0, p95_virtual_ms: 10.0 };
-        assert_eq!(s.observe(&recovered), ReplicaMode::Partial);
+        let mut s = ReplicaScheduler::new(p, 1);
+        let slow = MemberPressure { fill: 0.0, latency_ms: 60.0 };
+        s.observe(&[slow]);
+        assert_eq!(s.mode(0), ReplicaMode::Partial);
+        // low fill but still-slow latency is NOT a low reading (no step back)
+        let drained = MemberPressure { fill: 0.0, latency_ms: 55.0 };
+        s.observe(&[slow]); // → Elided
+        s.observe(&[drained]);
+        assert_eq!(s.mode(0), ReplicaMode::Elided);
+        let recovered = MemberPressure { fill: 0.0, latency_ms: 10.0 };
+        s.observe(&[recovered]);
+        assert_eq!(s.mode(0), ReplicaMode::Partial);
     }
 
     #[test]
     fn unhealthy_primary_always_keeps_standbys() {
-        let mut s = ReplicaScheduler::new(policy(1));
-        s.observe(&high());
-        s.observe(&high());
-        assert_eq!(s.mode(), ReplicaMode::Elided);
-        assert!(!s.standby_executes(HealthState::Healthy, false));
-        assert!(s.standby_executes(HealthState::Degraded, false));
-        assert!(s.standby_executes(HealthState::Dead, false));
-        assert!(s.is_fallback(HealthState::Degraded));
-        assert!(!s.is_fallback(HealthState::Healthy));
+        let mut s = ReplicaScheduler::new(policy(1), 1);
+        s.observe(&[high()]);
+        s.observe(&[high()]);
+        assert_eq!(s.mode(0), ReplicaMode::Elided);
+        assert!(!s.standby_executes(0, HealthState::Healthy, false));
+        assert!(s.standby_executes(0, HealthState::Degraded, false));
+        assert!(s.standby_executes(0, HealthState::Dead, false));
+        assert!(s.is_fallback(0, HealthState::Degraded));
+        assert!(!s.is_fallback(0, HealthState::Healthy));
     }
 
     #[test]
     fn partial_mode_shadows_only_promoted_or_unhealthy_members() {
-        let mut s = ReplicaScheduler::new(policy(1));
-        s.observe(&high());
-        assert_eq!(s.mode(), ReplicaMode::Partial);
-        assert!(!s.standby_executes(HealthState::Healthy, false));
-        assert!(s.standby_executes(HealthState::Healthy, true));
-        assert!(s.standby_executes(HealthState::Degraded, false));
+        let mut s = ReplicaScheduler::new(policy(1), 1);
+        s.observe(&[high()]);
+        assert_eq!(s.mode(0), ReplicaMode::Partial);
+        assert!(!s.standby_executes(0, HealthState::Healthy, false));
+        assert!(s.standby_executes(0, HealthState::Healthy, true));
+        assert!(s.standby_executes(0, HealthState::Degraded, false));
     }
 
-    fn ctx(ctx_queued: usize, limit: usize, window: &[f64]) -> PressureContext<'_> {
+    fn member_view<'a>(ms: &'a [f64], ej: &'a [f64]) -> MemberView<'a> {
+        MemberView { health: HealthState::Healthy, recent_virtual_ms: ms, recent_energy_j: ej }
+    }
+
+    fn ctx<'a>(
+        queued: usize,
+        limit: usize,
+        members: &'a [MemberView<'a>],
+    ) -> PressureContext<'a> {
         PressureContext {
             intake: IntakePressure {
-                queued: ctx_queued,
+                queued,
                 capacity_limit: limit,
                 live_limit: limit,
             },
-            recent_virtual_ms: window,
+            recent_virtual_ms: &[],
+            members,
         }
     }
 
     #[test]
-    fn queue_p95_signal_reproduces_fill_and_nearest_rank_p95() {
+    fn queue_p95_signal_reads_per_member_windows() {
         let mut sig = QueueP95Signal;
-        // unsorted window: the signal must sort before taking the rank
-        let window = [30.0, 10.0, 20.0];
-        let p = sig.read(&ctx(4, 8, &window));
-        assert!((p.queue_fill - 0.5).abs() < 1e-12);
-        assert_eq!(p.p95_virtual_ms, 30.0, "nearest-rank p95 of 3 samples is the max");
-        // empty window reads zero latency pressure
-        let p = sig.read(&ctx(0, 8, &[]));
-        assert_eq!(p.p95_virtual_ms, 0.0);
-        assert_eq!(p.queue_fill, 0.0);
+        // member 0 unsorted window (the signal must sort before ranking);
+        // member 1's empty window is explicitly total: zero latency
+        let w0 = [30.0, 10.0, 20.0];
+        let members = [member_view(&w0, &[]), member_view(&[], &[])];
+        let ps = sig.read(&ctx(4, 8, &members));
+        assert_eq!(ps.len(), 2);
+        assert!((ps[0].fill - 0.5).abs() < 1e-12);
+        assert_eq!(ps[0].latency_ms, 30.0, "nearest-rank p95 of 3 samples is the max");
+        assert_eq!(ps[1].latency_ms, 0.0, "empty window reads zero latency pressure");
+        assert!((ps[1].fill - 0.5).abs() < 1e-12, "the intake fill is shared");
     }
 
     #[test]
-    fn ewma_signal_smooths_and_leads_a_ramp() {
-        let mut sig = EwmaLatencySignal::new(0.5);
-        assert_eq!(sig.read(&ctx(0, 8, &[])).p95_virtual_ms, 0.0, "no data yet");
-        // first sample seeds the average exactly
-        assert_eq!(sig.read(&ctx(0, 8, &[10.0])).p95_virtual_ms, 10.0);
-        // ramp: EWMA moves toward the latest sample by alpha per reading
-        let p = sig.read(&ctx(0, 8, &[10.0, 30.0]));
-        assert!((p.p95_virtual_ms - 20.0).abs() < 1e-12, "0.5·30 + 0.5·10");
-        // a sustained ramp crosses a threshold before the windowed median
-        // family would, but never overshoots the latest observation
-        let p = sig.read(&ctx(0, 8, &[10.0, 30.0, 50.0]));
-        assert!(p.p95_virtual_ms > 20.0 && p.p95_virtual_ms < 50.0);
-        // queue fill passes through unchanged
-        assert!((sig.read(&ctx(6, 8, &[50.0])).queue_fill - 0.75).abs() < 1e-12);
-    }
-
-    #[test]
-    fn ewma_signal_clamps_degenerate_alpha() {
-        // non-finite or out-of-range alphas degrade to usable smoothing
+    fn ewma_signal_smooths_per_member_and_rejects_bad_alpha() {
         for bad in [f64::NAN, f64::INFINITY, -1.0, 0.0, 2.0] {
-            let mut sig = EwmaLatencySignal::new(bad);
-            let p = sig.read(&ctx(0, 8, &[42.0]));
-            assert!(p.p95_virtual_ms.is_finite());
-            assert!(p.p95_virtual_ms > 0.0);
+            assert!(
+                matches!(
+                    EwmaLatencySignal::new(bad).unwrap_err(),
+                    SignalError::InvalidAlpha { .. }
+                ),
+                "alpha {bad} must be a typed rejection, not a silent clamp"
+            );
         }
+        let mut sig = EwmaLatencySignal::new(0.5).unwrap();
+        let members = [member_view(&[], &[])];
+        assert_eq!(sig.read(&ctx(0, 8, &members)).len(), 1);
+        assert_eq!(sig.read(&ctx(0, 8, &members))[0].latency_ms, 0.0, "no data yet");
+        // first sample seeds the average exactly; a second member's stream
+        // is smoothed independently
+        let w0 = [10.0];
+        let w1 = [100.0];
+        let members = [member_view(&w0, &[]), member_view(&w1, &[])];
+        let ps = sig.read(&ctx(0, 8, &members));
+        assert_eq!(ps[0].latency_ms, 10.0);
+        assert_eq!(ps[1].latency_ms, 100.0);
+        let w0 = [10.0, 30.0];
+        let w1 = [100.0, 100.0];
+        let members = [member_view(&w0, &[]), member_view(&w1, &[])];
+        let ps = sig.read(&ctx(6, 8, &members));
+        assert!((ps[0].latency_ms - 20.0).abs() < 1e-12, "0.5·30 + 0.5·10");
+        assert_eq!(ps[1].latency_ms, 100.0, "member 1's stream is untouched by member 0");
+        assert!((ps[0].fill - 0.75).abs() < 1e-12, "queue fill passes through");
+    }
+
+    #[test]
+    fn predictive_signal_forecast_leads_a_ramp_and_stays_total() {
+        // alpha 1: the forecast is pure one-step linear extrapolation
+        let mut sig = PredictiveSignal::from_baselines_ms(vec![10.0, 10.0], 1.0).unwrap();
+        let members = [member_view(&[], &[]), member_view(&[], &[])];
+        let ps = sig.read(&ctx(0, 8, &members));
+        assert_eq!(ps[0].latency_ms, 0.0, "no evidence, no pressure");
+        let w0 = [10.0];
+        let members = [member_view(&w0, &[]), member_view(&[], &[])];
+        let ps = sig.read(&ctx(0, 8, &members));
+        assert!((ps[0].latency_ms - 10.0).abs() < 1e-9, "on-baseline reads the baseline");
+        // member 0 ramps 10 → 20 while member 1 sits on baseline: the
+        // forecast extrapolates member 0 to 30 and leaves member 1 alone
+        let w0 = [10.0, 20.0];
+        let w1 = [10.0];
+        let members = [member_view(&w0, &[]), member_view(&w1, &[])];
+        let ps = sig.read(&ctx(0, 8, &members));
+        assert!((ps[0].latency_ms - 30.0).abs() < 1e-9, "forecast leads: {}", ps[0].latency_ms);
+        assert!((ps[1].latency_ms - 10.0).abs() < 1e-9);
+        // construction rejects degenerate inputs with typed errors
+        assert_eq!(
+            PredictiveSignal::from_baselines_ms(vec![], 0.5).unwrap_err(),
+            SignalError::EmptyMembers
+        );
+        assert!(matches!(
+            PredictiveSignal::from_baselines_ms(vec![10.0, 0.0], 0.5).unwrap_err(),
+            SignalError::InvalidMemberValue { what: "baseline_ms", member: 1, .. }
+        ));
+        assert!(matches!(
+            PredictiveSignal::from_baselines_ms(vec![10.0], f64::NAN).unwrap_err(),
+            SignalError::InvalidAlpha { .. }
+        ));
+    }
+
+    #[test]
+    fn energy_budget_signal_fills_against_each_members_budget() {
+        let mut policy = ElisionPolicy { energy_budget_j: 4.0, ..ElisionPolicy::default() };
+        policy.member_overrides = vec![MemberOverride {
+            member: 1,
+            energy_budget_j: Some(0.5),
+            ..MemberOverride::default()
+        }];
+        let mut sig = EnergyBudgetSignal::from_policy(&policy, 3).unwrap();
+        let e0 = [3.0];
+        let e1 = [1.0];
+        let members = [
+            member_view(&[], &e0),
+            member_view(&[], &e1),
+            member_view(&[], &[]),
+        ];
+        let ps = sig.read(&ctx(0, 8, &members));
+        assert!((ps[0].fill - 0.75).abs() < 1e-12, "3 J of the 4 J default budget");
+        assert!((ps[1].fill - 2.0).abs() < 1e-12, "1 J blows the 0.5 J override");
+        assert_eq!(ps[2].fill, 0.0, "no energy evidence reads cold");
+        assert_eq!(ps[0].latency_ms, 0.0, "the energy signal never fakes latency");
+        // a zero budget disables the member entirely
+        let mut off = EnergyBudgetSignal::new(vec![0.0]).unwrap();
+        let e = [99.0];
+        let members = [member_view(&[], &e)];
+        assert_eq!(off.read(&ctx(0, 8, &members))[0].fill, 0.0);
+        // typed construction errors
+        assert_eq!(EnergyBudgetSignal::new(vec![]).unwrap_err(), SignalError::EmptyMembers);
+        assert!(matches!(
+            EnergyBudgetSignal::new(vec![1.0, -2.0]).unwrap_err(),
+            SignalError::InvalidMemberValue { what: "energy_budget_j", member: 1, .. }
+        ));
     }
 
     #[test]
     fn scheduler_driven_through_the_trait_object() {
         // the leader holds a Box<dyn PressureSignal>: drive the ladder
-        // through the trait to prove any impl can move the mode
+        // through the trait to prove any impl can move per-member modes
         let mut sig: Box<dyn PressureSignal> = Box::new(QueueP95Signal);
-        let mut s = ReplicaScheduler::new(policy(1));
-        let window: Vec<f64> = Vec::new();
-        let reading = sig.read(&ctx(8, 8, &window));
-        assert_eq!(s.observe(&reading), ReplicaMode::Partial);
-        let reading = sig.read(&ctx(8, 8, &window));
-        assert_eq!(s.observe(&reading), ReplicaMode::Elided);
-        let reading = sig.read(&ctx(0, 8, &window));
-        assert_eq!(s.observe(&reading), ReplicaMode::Partial);
+        let mut s = ReplicaScheduler::new(policy(1), 2);
+        let members = [member_view(&[], &[]), member_view(&[], &[])];
+        let readings = sig.read(&ctx(8, 8, &members));
+        s.observe(&readings);
+        assert_eq!(s.mode(0), ReplicaMode::Partial);
+        assert_eq!(s.mode(1), ReplicaMode::Partial);
+        let readings = sig.read(&ctx(8, 8, &members));
+        s.observe(&readings);
+        assert_eq!(s.fleet_mode(), ReplicaMode::Elided);
+        let readings = sig.read(&ctx(0, 8, &members));
+        s.observe(&readings);
+        assert_eq!(s.fleet_mode(), ReplicaMode::Partial);
     }
 }

@@ -82,6 +82,27 @@ pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
     sorted[rank.min(sorted.len()) - 1]
 }
 
+/// One member's elision ledger (ISSUE 5): how many batches its own
+/// hysteresis machine dispatched in each mode, how often its mode moved,
+/// and the standby compute/energy its elisions banked. Indexed by member
+/// in [`FaultMetrics::member_modes`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MemberModeLedger {
+    /// Batches this member dispatched with every standby running.
+    pub full: usize,
+    /// Batches this member dispatched in Partial mode.
+    pub partial: usize,
+    /// Batches this member dispatched primary-only.
+    pub elided: usize,
+    /// Mode changes of this member's machine since start.
+    pub transitions: usize,
+    /// Standby compute this member's elisions skipped, GFLOPs.
+    pub standby_gflops_saved: f64,
+    /// Busy energy this member's elisions skipped, joules (compute +
+    /// feature transfer at each elided standby host's excess power).
+    pub standby_energy_saved_j: f64,
+}
+
 /// Fault-tolerance counters for the serving coordinator: deadline misses,
 /// crashes, sub-model re-dispatches and the k-of-n quorum-size histogram.
 #[derive(Clone, Debug, Default)]
@@ -115,22 +136,33 @@ pub struct FaultMetrics {
     /// Requests shed at admission with the typed `Overloaded` error
     /// (folded in from the admission gate at shutdown).
     pub shed: usize,
-    /// Replica-mode changes made by the elision scheduler (Full ↔ Partial
-    /// ↔ Elided). With hysteresis working this stays small; a large count
-    /// relative to batches means the watermark band is too narrow.
+    /// Replica-mode changes made by the elision scheduler, summed across
+    /// every member's machine (Full ↔ Partial ↔ Elided). With hysteresis
+    /// working this stays small; a large count relative to batches means
+    /// a watermark band is too narrow.
     pub mode_transitions: usize,
-    /// Batches dispatched with every standby running (Full mode — also
-    /// every batch when elision is disabled).
+    /// Batches whose most aggressive member mode was Full — i.e. every
+    /// member ran every standby (also every batch when elision is
+    /// disabled).
     pub batches_full: usize,
-    /// Batches dispatched in Partial mode (standbys shadow only degraded /
-    /// recently promoted members).
+    /// Batches whose most aggressive member mode was Partial (some member
+    /// shadowed only degraded / recently promoted cover; nobody elided).
     pub batches_partial: usize,
-    /// Batches dispatched primaries-only (Elided mode; per-member
-    /// unhealthy-primary fallbacks may still run individual standbys).
+    /// Batches where at least one member dispatched primary-only
+    /// (per-member unhealthy-primary fallbacks may still run individual
+    /// standbys).
     pub batches_elided: usize,
     /// Standby compute skipped by elision, in GFLOPs (flops-per-sample ×
     /// batch rows, summed over every standby copy not dispatched).
     pub standby_gflops_saved: f64,
+    /// Busy energy skipped by elision, joules: each elided standby host's
+    /// (compute + transfer) time × its excess power — the joules a
+    /// battery-powered fleet did not spend on redundancy.
+    pub standby_energy_saved_j: f64,
+    /// Per-member mode ledger (ISSUE 5), indexed by member; sized by the
+    /// coordinator at start via [`FaultMetrics::init_members`] and empty
+    /// on a default-constructed value.
+    pub member_modes: Vec<MemberModeLedger>,
     /// Members whose standbys ran under Partial/Elided *only* because the
     /// unhealthy-primary fallback overrode the mode (one count per member
     /// per batch) — the masking capacity elision refused to trade away.
@@ -140,6 +172,14 @@ pub struct FaultMetrics {
 }
 
 impl FaultMetrics {
+    /// Size the per-member ledger for an `n`-member fleet (idempotent;
+    /// called once by the coordinator before serving).
+    pub fn init_members(&mut self, n: usize) {
+        if self.member_modes.len() < n {
+            self.member_modes.resize(n, MemberModeLedger::default());
+        }
+    }
+
     /// Record that a batch aggregated `k` member feature sets.
     pub fn record_quorum(&mut self, k: usize) {
         if self.quorum_hist.len() <= k {
@@ -434,7 +474,27 @@ mod tests {
         assert_eq!(f.batches_partial, 0);
         assert_eq!(f.batches_elided, 0);
         assert_eq!(f.standby_gflops_saved, 0.0);
+        assert_eq!(f.standby_energy_saved_j, 0.0);
         assert_eq!(f.standby_fallbacks, 0);
+        assert!(f.member_modes.is_empty(), "no members until init_members");
+    }
+
+    #[test]
+    fn member_mode_ledger_init_is_idempotent_and_never_shrinks() {
+        let mut f = FaultMetrics::default();
+        f.init_members(3);
+        assert_eq!(f.member_modes.len(), 3);
+        assert_eq!(f.member_modes[0], MemberModeLedger::default());
+        f.member_modes[2].elided = 7;
+        f.member_modes[2].standby_gflops_saved = 1.5;
+        // re-initializing with fewer members must not drop recorded data
+        f.init_members(2);
+        assert_eq!(f.member_modes.len(), 3);
+        assert_eq!(f.member_modes[2].elided, 7);
+        f.init_members(5);
+        assert_eq!(f.member_modes.len(), 5);
+        assert_eq!(f.member_modes[4], MemberModeLedger::default());
+        assert_eq!(f.member_modes[2].standby_gflops_saved, 1.5);
     }
 
     #[test]

@@ -28,21 +28,20 @@
 //! busy/idle/transmit timeline ([`StrategyOutcome`]) the paper's
 //! latency-breakdown figures plot, plus quorum/copies accounting for the
 //! CoFormer family. The [`sweep`] runner drives any strategy set across
-//! scenario axes (bandwidth, batch, replicas, dispatch) for the `paper`
-//! binary's tables.
+//! scenario axes (bandwidth, batch, replicas, dispatch mode, and — since
+//! ISSUE 5 — per-member elision masks) for the `paper` binary's tables.
 //!
-//! The pre-ISSUE-4 free functions ([`coformer`], [`coformer_degraded`],
-//! [`coformer_replicated`], [`coformer_elastic`], [`pipe_edge`],
-//! [`tensor_parallel`], [`single_edge`], [`ensemble`]) remain as thin
-//! deprecated wrappers delegating to the same core simulations, so their
-//! numbers cannot drift from the new API's.
+//! The pre-ISSUE-4 positional free functions were removed in ISSUE 5
+//! (they had been `#[deprecated]` wrappers since ISSUE 4 with no internal
+//! callers left); the README's "Public API" migration table maps each old
+//! entry point to its [`Scenario`]/registry replacement.
 
 pub mod registry;
 pub mod scenario;
 pub mod sweep;
 
 use crate::device::{DeviceProfile, SimDevice, SimError};
-use crate::model::{Arch, CostModel};
+use crate::model::CostModel;
 use crate::net::Topology;
 
 pub use scenario::{
@@ -133,60 +132,51 @@ fn finish(devs: Vec<SimDevice>, name: &str, total_s: f64, mems: &[usize], comm_r
     StrategyOutcome { name: name.into(), total_s, devices, comm_rounds }
 }
 
-/// Outcome of a degraded (n−f)-device CoFormer simulation (ISSUE 1).
-/// Legacy wrapper type returned by the deprecated free functions;
-/// superseded by [`Outcome`]'s composition with [`ReplicationOutcome`].
+/// Outcome of an elastic-replication CoFormer simulation (ISSUE 3),
+/// composed into the public [`Outcome`] by [`Scenario::run`] and the
+/// registry strategies.
 #[derive(Clone, Debug)]
-pub struct DegradedOutcome {
-    pub outcome: StrategyOutcome,
-    /// Devices that contributed features (k of n).
-    pub quorum: usize,
-    /// Device that hosted aggregation (falls back off a dead central node).
-    pub central: usize,
-}
-
-/// Outcome of an elastic-replication CoFormer simulation (ISSUE 3).
-/// Legacy wrapper type returned by the deprecated free functions;
-/// superseded by [`Outcome`]'s composition with [`ReplicationOutcome`].
-#[derive(Clone, Debug)]
-pub struct ElasticOutcome {
-    pub outcome: StrategyOutcome,
+pub(crate) struct ElasticOutcome {
+    pub(crate) outcome: StrategyOutcome,
     /// Distinct members that contributed features (k of n).
-    pub quorum: usize,
+    pub(crate) quorum: usize,
     /// Device that hosted aggregation (falls back off a dead central node).
-    pub central: usize,
+    pub(crate) central: usize,
     /// Member copies executed this inference (n when elided on a healthy
     /// fleet; up to n × replicas when fully replicated).
-    pub copies_run: usize,
+    pub(crate) copies_run: usize,
     /// Standby compute skipped vs always-replicate, GFLOPs (0 when not
     /// eliding).
-    pub standby_gflops_saved: f64,
+    pub(crate) standby_gflops_saved: f64,
 }
 
 /// The one CoFormer aggregate-edge timeline simulation (paper §III-A under
 /// the elastic replication policy): member `i`'s hosts are the alive
-/// devices in its ring window of `replicas` hops. Under
-/// [`DispatchMode::Full`] (always-replicate) **every** live copy runs —
-/// redundant compute and feature transfers on every host, latency gated by
-/// the slowest device's full task list, which is exactly how the real
-/// leader waits on worker replies. Under [`DispatchMode::Elided`]
-/// (primaries only) only the first live copy runs — the primary, or the
-/// promoted standby when the primary is dead — saving the standby GFLOPS
-/// reported in [`ElasticOutcome::standby_gflops_saved`]. Every public
-/// scoring path (the [`Strategy`] impls and the deprecated free functions)
-/// delegates here, so the paths can never drift apart.
+/// devices in its ring window of `replicas` hops. For a member dispatched
+/// Full (always-replicate) **every** live copy runs — redundant compute
+/// and feature transfers on every host, latency gated by the slowest
+/// device's full task list, which is exactly how the real leader waits on
+/// worker replies. For a member dispatched Elided (primary only) only the
+/// first live copy runs — the primary, or the promoted standby when the
+/// primary is dead — saving the standby GFLOPS reported in
+/// [`ElasticOutcome::standby_gflops_saved`]. Whether a member elides
+/// comes from [`Scenario::member_elided`]: the fleet-wide
+/// [`DispatchMode`], overridden per member by the scenario's elide mask
+/// (ISSUE 5) — the simulator analog of the coordinator's per-member
+/// scheduler. Every public scoring path delegates here, so the paths can
+/// never drift apart.
 pub(crate) fn run_elastic_scenario(s: &Scenario) -> Result<ElasticOutcome, SimError> {
     let (profiles, topo, archs) = (&s.fleet, &s.topo, &s.archs);
     let (d_i, batch, alive) = (s.d_i, s.batch, &s.alive);
     let (replicas, min_quorum) = (s.replicas, s.min_quorum);
-    let elide_standbys = s.dispatch == DispatchMode::Elided;
     let n = profiles.len();
-    // member → live hosts in ring order (primary first); elided keeps only
-    // the first — the same first-arrival slot the coordinator promotes into
+    // member → live hosts in ring order (primary first); an elided member
+    // keeps only the first — the same first-arrival slot the coordinator
+    // promotes into
     let hosts: Vec<Vec<usize>> = (0..n)
         .map(|m| {
             let ring = (0..replicas).map(|h| (m + h) % n).filter(|&w| alive[w]);
-            if elide_standbys {
+            if s.member_elided(m) {
                 ring.take(1).collect()
             } else {
                 ring.collect()
@@ -248,199 +238,32 @@ pub(crate) fn run_elastic_scenario(s: &Scenario) -> Result<ElasticOutcome, SimEr
             d.wait_until(total);
         }
     }
-    let name = if elide_standbys { "coformer-elastic-elided" } else { "coformer-elastic-full" };
+    let name = if s.elide_mask.is_some() {
+        "coformer-elastic-permember"
+    } else if s.dispatch == DispatchMode::Elided {
+        "coformer-elastic-elided"
+    } else {
+        "coformer-elastic-full"
+    };
     let mut out = finish(devs, name, total, &mems, 1);
     for (w, t) in transmit.iter().enumerate() {
         out.devices[w].transmit_s = *t;
         out.devices[w].compute_s -= *t;
     }
     let copies_run = hosts.iter().map(|h| h.len()).sum();
-    let standby_gflops_saved = if elide_standbys {
-        (0..n)
-            .map(|m| {
-                let ring_alive =
-                    (0..replicas).map(|h| (m + h) % n).filter(|&w| alive[w]).count();
-                CostModel::flops_per_sample(&archs[m])
-                    * batch as f64
-                    * ring_alive.saturating_sub(1) as f64
-                    / 1e9
-            })
-            .sum()
-    } else {
-        0.0
-    };
+    // each elided member banks its own live ring standbys (ISSUE 5)
+    let standby_gflops_saved = (0..n)
+        .filter(|&m| s.member_elided(m))
+        .map(|m| {
+            let ring_alive =
+                (0..replicas).map(|h| (m + h) % n).filter(|&w| alive[w]).count();
+            CostModel::flops_per_sample(&archs[m])
+                * batch as f64
+                * ring_alive.saturating_sub(1) as f64
+                / 1e9
+        })
+        .sum();
     Ok(ElasticOutcome { outcome: out, quorum, central, copies_run, standby_gflops_saved })
-}
-
-/// CoFormer aggregate-edge (paper §III-A): all devices run their sub-model
-/// concurrently, transmit features once, central node aggregates.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a strategies::Scenario and run registry::CoFormer (README \"Public API\")"
-)]
-pub fn coformer(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    archs: &[Arch],
-    d_i: usize,
-    batch: usize,
-) -> Result<StrategyOutcome, SimError> {
-    let scenario = Scenario::builder()
-        .fleet(profiles.to_vec())
-        .topology(topo.clone())
-        .archs(archs.to_vec())
-        .d_i(d_i)
-        .batch(batch)
-        .build()
-        .expect("coformer: invalid arguments");
-    registry::CoFormer.run(&scenario).map(|o| o.core)
-}
-
-/// Clamp a wrapper's raw `min_quorum` into the builder's valid range and
-/// re-apply the raw requirement afterwards, so the deprecated wrappers
-/// keep the pre-ISSUE-4 contract exactly: a `min_quorum` larger than the
-/// fleet comes back as `Err(SimError::QuorumNotMet)` with the *raw*
-/// demand, never a panic.
-fn legacy_quorum_check<T>(
-    result: Result<(T, usize), SimError>,
-    need: usize,
-) -> Result<(T, usize), SimError> {
-    match result {
-        Ok((out, quorum)) => {
-            if quorum < need {
-                Err(SimError::QuorumNotMet { have: quorum, need })
-            } else {
-                Ok((out, quorum))
-            }
-        }
-        Err(SimError::QuorumNotMet { have, .. }) => {
-            Err(SimError::QuorumNotMet { have, need })
-        }
-        Err(e) => Err(e),
-    }
-}
-
-/// CoFormer aggregate-edge under partial failure (ISSUE 1): only the
-/// `alive` devices run; the Eq. 2 combiner renormalizes over the k arrived
-/// feature sets, and a dead central node hands aggregation to the fastest
-/// survivor.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a strategies::Scenario (.alive/.min_quorum) and run \
-            registry::CoFormerDegraded (README \"Public API\")"
-)]
-pub fn coformer_degraded(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    archs: &[Arch],
-    d_i: usize,
-    batch: usize,
-    alive: &[bool],
-    min_quorum: usize,
-) -> Result<DegradedOutcome, SimError> {
-    let need = min_quorum.max(1);
-    let scenario = Scenario::builder()
-        .fleet(profiles.to_vec())
-        .topology(topo.clone())
-        .archs(archs.to_vec())
-        .d_i(d_i)
-        .batch(batch)
-        .alive(alive.to_vec())
-        .min_quorum(need.min(profiles.len()))
-        .build()
-        .expect("coformer_degraded: invalid arguments");
-    let run = registry::CoFormerDegraded.run(&scenario).map(|out| {
-        let rep = out.replication.expect("coformer-family outcome carries replication stats");
-        let quorum = rep.quorum;
-        let deg =
-            DegradedOutcome { outcome: out.core, quorum, central: rep.central };
-        (deg, quorum)
-    });
-    legacy_quorum_check(run, need).map(|(out, _)| out)
-}
-
-/// CoFormer aggregate-edge with warm-standby replication (ISSUE 2): member
-/// `i`'s primary host is device `i`; when the primary is dead the member
-/// runs on its ring standby, so a death costs no aggregation arity.
-#[deprecated(
-    since = "0.2.0",
-    note = "build a strategies::Scenario (.replicas) and run \
-            registry::CoFormerReplicated (README \"Public API\")"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn coformer_replicated(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    archs: &[Arch],
-    d_i: usize,
-    batch: usize,
-    alive: &[bool],
-    replicas: usize,
-    min_quorum: usize,
-) -> Result<DegradedOutcome, SimError> {
-    assert!(replicas >= 1, "replicas must be >= 1");
-    let need = min_quorum.max(1);
-    let scenario = Scenario::builder()
-        .fleet(profiles.to_vec())
-        .topology(topo.clone())
-        .archs(archs.to_vec())
-        .d_i(d_i)
-        .batch(batch)
-        .alive(alive.to_vec())
-        .replicas(replicas.min(profiles.len()))
-        .min_quorum(need.min(profiles.len()))
-        .build()
-        .expect("coformer_replicated: invalid arguments");
-    let run = registry::CoFormerReplicated.run(&scenario).map(|out| {
-        let rep = out.replication.expect("coformer-family outcome carries replication stats");
-        let quorum = rep.quorum;
-        let deg =
-            DegradedOutcome { outcome: out.core, quorum, central: rep.central };
-        (deg, quorum)
-    });
-    legacy_quorum_check(run, need).map(|(out, _)| out)
-}
-
-/// CoFormer aggregate-edge under the elastic replication policy (ISSUE 3):
-/// always-replicate (`elide_standbys = false`) vs primaries-only
-/// (`elide_standbys = true`).
-#[deprecated(
-    since = "0.2.0",
-    note = "build a strategies::Scenario (.replicas/.dispatch) and call \
-            Scenario::run (README \"Public API\")"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn coformer_elastic(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    archs: &[Arch],
-    d_i: usize,
-    batch: usize,
-    alive: &[bool],
-    replicas: usize,
-    min_quorum: usize,
-    elide_standbys: bool,
-) -> Result<ElasticOutcome, SimError> {
-    assert!(replicas >= 1, "replicas must be >= 1");
-    let need = min_quorum.max(1);
-    let dispatch = if elide_standbys { DispatchMode::Elided } else { DispatchMode::Full };
-    let scenario = Scenario::builder()
-        .fleet(profiles.to_vec())
-        .topology(topo.clone())
-        .archs(archs.to_vec())
-        .d_i(d_i)
-        .batch(batch)
-        .alive(alive.to_vec())
-        .replicas(replicas.min(profiles.len()))
-        .min_quorum(need.min(profiles.len()))
-        .dispatch(dispatch)
-        .build()
-        .expect("coformer_elastic: invalid arguments");
-    let run = run_elastic_scenario(&scenario).map(|el| {
-        let quorum = el.quorum;
-        (el, quorum)
-    });
-    legacy_quorum_check(run, need).map(|(el, _)| el)
 }
 
 /// One pipeline segment: compute + activation payload to the next stage.
@@ -487,20 +310,6 @@ pub(crate) fn run_pipe_edge(
         out.devices[n].compute_s -= *tt;
     }
     Ok(out)
-}
-
-/// Pipe-edge (Fig. 2a / EdgeShard).
-#[deprecated(
-    since = "0.2.0",
-    note = "use strategies::registry::PipeEdge::with_segments on a Scenario \
-            (README \"Public API\")"
-)]
-pub fn pipe_edge(
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    segments: &[Segment],
-) -> Result<StrategyOutcome, SimError> {
-    run_pipe_edge(profiles, topo, segments)
 }
 
 /// Tensor-parallel core (Fig. 2b): each layer's work is sharded across all
@@ -565,36 +374,6 @@ pub(crate) fn run_tensor_parallel(
     Ok(out)
 }
 
-/// Distri-edge tensor parallel (Fig. 2b). Galaxy ⇒ 2 syncs/layer,
-/// DeTransformer ⇒ ~0.5 (one sync per 2-layer block).
-#[deprecated(
-    since = "0.2.0",
-    note = "use strategies::registry::TensorParallel on a Scenario \
-            (README \"Public API\")"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn tensor_parallel(
-    name: &str,
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    total_flops: f64,
-    layers: usize,
-    shard_bytes: usize,
-    syncs_per_layer: f64,
-    memory_per_device: usize,
-) -> Result<StrategyOutcome, SimError> {
-    run_tensor_parallel(
-        name,
-        profiles,
-        topo,
-        total_flops,
-        layers,
-        shard_bytes,
-        syncs_per_layer,
-        memory_per_device,
-    )
-}
-
 /// Single-edge core (Fig. 2c): the whole model on one device.
 pub(crate) fn run_single_edge(
     profile: &DeviceProfile,
@@ -606,19 +385,6 @@ pub(crate) fn run_single_edge(
     d.compute(flops);
     let total = d.now();
     Ok(finish(vec![d], "single-edge", total, &[memory_bytes], 0))
-}
-
-/// Single-edge (Fig. 2c): the whole model on one device.
-#[deprecated(
-    since = "0.2.0",
-    note = "use strategies::registry::SingleEdge::standalone (README \"Public API\")"
-)]
-pub fn single_edge(
-    profile: &DeviceProfile,
-    flops: f64,
-    memory_bytes: usize,
-) -> Result<StrategyOutcome, SimError> {
-    run_single_edge(profile, flops, memory_bytes)
 }
 
 /// Ensemble core (DeViT / Fig. 6): N full models run concurrently;
@@ -656,23 +422,6 @@ pub(crate) fn run_ensemble(
     Ok(out)
 }
 
-/// Ensemble (DeViT / Fig. 6): latency is gated by the slowest member — the
-/// paper's ">200% latency" ensemble downside.
-#[deprecated(
-    since = "0.2.0",
-    note = "use strategies::registry::Ensemble on a Scenario (README \"Public API\")"
-)]
-pub fn ensemble(
-    name: &str,
-    profiles: &[DeviceProfile],
-    topo: &Topology,
-    member_flops: &[f64],
-    member_memory: &[usize],
-    logit_bytes: usize,
-) -> Result<StrategyOutcome, SimError> {
-    run_ensemble(name, profiles, topo, member_flops, member_memory, logit_bytes)
-}
-
 #[cfg(test)]
 mod tests {
     use super::registry::{
@@ -680,8 +429,8 @@ mod tests {
         SingleEdge, TensorParallel,
     };
     use super::*;
-    use crate::model::Mode;
-    use crate::net::Link;
+    use crate::model::{Arch, Mode};
+    use crate::net::{Link, Topology};
 
     fn fleet() -> Vec<DeviceProfile> {
         DeviceProfile::paper_fleet()
@@ -1058,139 +807,123 @@ mod tests {
         assert!(t1g <= t100);
     }
 
-    /// The deprecated free functions delegate to the same core simulations
-    /// as the Scenario/registry path: every number must agree exactly.
-    #[allow(deprecated)]
-    mod wrapper_equivalence {
+    /// Per-member elision masks (ISSUE 5): the simulator analog of one hot
+    /// member shedding its own standby while cold members keep theirs.
+    mod per_member_elision {
         use super::*;
 
         #[test]
-        fn coformer_wrapper_matches_registry() {
-            let old = coformer(&fleet(), &topo(100.0), &sub_archs(), 64, 1).unwrap();
-            let new = CoFormer.run(&base(100.0)).unwrap();
-            assert_eq!(old.name, new.core.name);
-            assert_eq!(old.total_s, new.core.total_s);
-            assert_eq!(old.comm_rounds, new.core.comm_rounds);
-            for (a, b) in old.devices.iter().zip(&new.core.devices) {
-                assert_eq!(a.compute_s, b.compute_s);
-                assert_eq!(a.transmit_s, b.transmit_s);
-                assert_eq!(a.idle_s, b.idle_s);
-                assert_eq!(a.energy_j, b.energy_j);
-                assert_eq!(a.memory_bytes, b.memory_bytes);
-            }
-        }
-
-        #[test]
-        fn degraded_wrapper_matches_registry() {
-            let alive = [true, false, true];
-            let old = coformer_degraded(
-                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2,
-            )
-            .unwrap();
-            let s = with_faults(100.0, alive, 1, 2, DispatchMode::Elided);
-            let new = CoFormerDegraded.run(&s).unwrap();
-            let r = new.replication.unwrap();
-            assert_eq!(old.outcome.name, new.core.name);
-            assert_eq!(old.outcome.total_s, new.core.total_s);
-            assert_eq!(old.quorum, r.quorum);
-            assert_eq!(old.central, r.central);
-        }
-
-        #[test]
-        fn replicated_wrapper_matches_registry() {
-            let alive = [false, true, true];
-            let old = coformer_replicated(
-                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1,
-            )
-            .unwrap();
-            let s = with_faults(100.0, alive, 2, 1, DispatchMode::Elided);
-            let new = CoFormerReplicated.run(&s).unwrap();
-            let r = new.replication.unwrap();
-            assert_eq!(old.outcome.name, new.core.name);
-            assert_eq!(old.outcome.total_s, new.core.total_s);
-            assert_eq!(old.quorum, r.quorum);
-            assert_eq!(old.central, r.central);
-        }
-
-        #[test]
-        fn elastic_wrapper_matches_scenario_run() {
-            for (elide, mode) in
-                [(true, DispatchMode::Elided), (false, DispatchMode::Full)]
-            {
-                let alive = [false, true, true];
-                let old = coformer_elastic(
-                    &fleet(), &topo(100.0), &sub_archs(), 64, 1, &alive, 2, 1, elide,
-                )
+        fn one_elided_member_scores_between_full_and_fleet_elided() {
+            let alive = [true, true, true];
+            let full = with_faults(100.0, alive, 2, 1, DispatchMode::Full).run().unwrap();
+            let elided =
+                with_faults(100.0, alive, 2, 1, DispatchMode::Elided).run().unwrap();
+            let one = with_faults(100.0, alive, 2, 1, DispatchMode::Full)
+                .to_builder()
+                .elide_members(vec![true, false, false])
+                .build()
+                .unwrap()
+                .run()
                 .unwrap();
-                let new = with_faults(100.0, alive, 2, 1, mode).run().unwrap();
-                let r = new.replication.unwrap();
-                assert_eq!(old.outcome.name, new.core.name);
-                assert_eq!(old.outcome.total_s, new.core.total_s);
-                assert_eq!(old.quorum, r.quorum);
-                assert_eq!(old.central, r.central);
-                assert_eq!(old.copies_run, r.copies_run);
-                assert_eq!(old.standby_gflops_saved, r.standby_gflops_saved);
-            }
+            let r = one.replication.unwrap();
+            assert_eq!(one.name(), "coformer-elastic-permember");
+            assert_eq!(r.quorum, 3, "elision never costs arity on a healthy fleet");
+            assert_eq!(r.copies_run, 5, "member 0 sheds its standby; the others keep 2");
+            // savings are exactly member 0's live standby compute
+            let f0 = CostModel::flops_per_sample(&sub_archs()[0]) / 1e9;
+            assert!((r.standby_gflops_saved - f0).abs() < 1e-12);
+            // energy sits strictly between the two fleet-wide extremes
+            assert!(one.total_energy_j() < full.total_energy_j());
+            assert!(one.total_energy_j() > elided.total_energy_j());
         }
 
         #[test]
-        fn wrappers_keep_the_legacy_error_contract() {
-            // min_quorum beyond the fleet used to surface as a typed
-            // QuorumNotMet with the raw demand — it must not become a panic
-            let err = coformer_degraded(
-                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &[true, true, true], 4,
-            )
-            .unwrap_err();
-            assert_eq!(err, SimError::QuorumNotMet { have: 3, need: 4 });
-            let err = coformer_elastic(
-                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &[false, true, true], 1, 5, true,
-            )
-            .unwrap_err();
-            assert_eq!(err, SimError::QuorumNotMet { have: 2, need: 5 });
-            // a replication factor beyond the fleet size clamps to the ring
-            // (every device already hosts every member) instead of panicking
-            let rep = coformer_replicated(
-                &fleet(), &topo(100.0), &sub_archs(), 64, 1, &[false, true, true], 9, 1,
-            )
-            .unwrap();
-            assert_eq!(rep.quorum, 3);
+        fn all_true_mask_matches_fleet_wide_elided_numbers() {
+            let alive = [false, true, true];
+            let fleet_wide =
+                with_faults(100.0, alive, 2, 1, DispatchMode::Elided).run().unwrap();
+            let masked = with_faults(100.0, alive, 2, 1, DispatchMode::Full)
+                .to_builder()
+                .elide_members(vec![true; 3])
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            let a = fleet_wide.replication.unwrap();
+            let b = masked.replication.unwrap();
+            assert_eq!(masked.total_s(), fleet_wide.total_s());
+            assert_eq!(a.quorum, b.quorum);
+            assert_eq!(a.copies_run, b.copies_run);
+            assert_eq!(a.standby_gflops_saved, b.standby_gflops_saved);
         }
 
         #[test]
-        fn baseline_wrappers_match_registry() {
-            let s = base(100.0);
-            let segs =
-                vec![deit_ish_segment(3e9), deit_ish_segment(3e9), deit_ish_segment(6e9)];
-            let old = pipe_edge(&fleet(), &topo(100.0), &segs).unwrap();
-            let new = PipeEdge::with_segments(segs).run(&s).unwrap();
-            assert_eq!(old.total_s, new.core.total_s);
+        fn mask_overrides_dispatch_per_member_and_mask_elision_survives_death() {
+            // dispatch says Elided fleet-wide, but the mask keeps member 1
+            // fully replicated — the mask wins member by member
+            let s = with_faults(100.0, [true, true, true], 2, 1, DispatchMode::Elided)
+                .to_builder()
+                .elide_members(vec![true, false, true])
+                .build()
+                .unwrap();
+            assert_eq!(s.run().unwrap().replication.unwrap().copies_run, 4);
+            // an elided member whose primary died still runs its promoted
+            // ring standby: availability survives per-member elision
+            let s = with_faults(100.0, [false, true, true], 2, 1, DispatchMode::Full)
+                .to_builder()
+                .elide_members(vec![true, false, false])
+                .build()
+                .unwrap();
+            let out = s.run().unwrap();
+            let r = out.replication.unwrap();
+            assert_eq!(r.quorum, 3, "member 0's standby covers its dead primary");
+            assert_eq!(out.core.devices[0].compute_s, 0.0, "dead stays zeroed");
+        }
 
-            let old = tensor_parallel(
-                "galaxy", &fleet(), &topo(100.0), 17.6e9, 12, 17 * 768 * 4, 2.0, 1 << 30,
-            )
-            .unwrap();
-            let new = galaxy(2.0, "galaxy").run(&s).unwrap();
-            assert_eq!(old.total_s, new.core.total_s);
-            assert_eq!(old.comm_rounds, new.core.comm_rounds);
+        #[test]
+        fn mask_length_must_match_the_fleet() {
+            let err = base(100.0)
+                .to_builder()
+                .elide_members(vec![true, false])
+                .build()
+                .unwrap_err();
+            assert_eq!(
+                err,
+                ScenarioError::LengthMismatch { what: "elide_mask", expected: 3, got: 2 }
+            );
+            // fleet_elision() clears a stale mask so the dispatch mode
+            // applies again
+            let s = base(100.0)
+                .to_builder()
+                .elide_members(vec![true, true, true])
+                .fleet_elision()
+                .dispatch(DispatchMode::Full)
+                .build()
+                .unwrap();
+            assert!(s.elide_mask().is_none());
+            assert!(!s.member_elided(0));
+        }
 
-            let tx2 = DeviceProfile::jetson_tx2();
-            let old = single_edge(&tx2, 17.6e9, 2 << 30).unwrap();
-            let new = SingleEdge::standalone(&tx2, 17.6e9, 2 << 30).unwrap();
-            assert_eq!(old.total_s, new.core.total_s);
-
-            let old = ensemble(
-                "devit", &fleet(), &topo(100.0), &[5e9; 3], &[1 << 28; 3], 80,
-            )
-            .unwrap();
-            let new = Ensemble {
-                label: "devit".into(),
-                member_flops: Some(vec![5e9; 3]),
-                member_memory: Some(vec![1 << 28; 3]),
-                logit_bytes: Some(80),
-            }
-            .run(&s)
-            .unwrap();
-            assert_eq!(old.total_s, new.core.total_s);
+        #[test]
+        fn registry_strategies_pin_away_a_stale_mask() {
+            // CoFormer/Degraded/Replicated score their canonical dispatch
+            // regardless of a mask left on the scenario
+            let masked = base(100.0)
+                .to_builder()
+                .replicas(2)
+                .elide_members(vec![false, false, false])
+                .build()
+                .unwrap();
+            let plain = CoFormer.run(&base(100.0)).unwrap();
+            let cof = CoFormer.run(&masked).unwrap();
+            assert_eq!(cof.total_s(), plain.total_s());
+            assert_eq!(cof.name(), "coformer");
+            let rep = CoFormerReplicated.run(&masked).unwrap();
+            assert_eq!(rep.name(), "coformer-replicated");
+            assert_eq!(rep.replication.unwrap().copies_run, 3, "replicated pins Elided");
+            // CoFormerElastic honors the scenario verbatim, mask included
+            let el = CoFormerElastic.run(&masked).unwrap();
+            assert_eq!(el.replication.unwrap().copies_run, 6, "all-false mask = Full");
         }
     }
 }

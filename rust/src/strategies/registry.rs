@@ -47,10 +47,13 @@ pub fn lookup(name: &str) -> Option<Box<dyn Strategy + Send + Sync>> {
     }
 }
 
-/// Rebuild a scenario with some axes pinned. The input scenario is already
-/// valid and the pinned values satisfy the builder's invariants by
-/// construction (all-true aliveness, replicas 1, quorum 1), so this cannot
-/// fail.
+/// Rebuild a scenario with some axes pinned. Pinning a dispatch mode also
+/// clears any per-member elision mask — the canonical CoFormer-family
+/// strategies score their named dispatch, not a leftover mask from the
+/// sweep's per-member axis ([`CoFormerElastic`] alone honors the scenario
+/// verbatim). The input scenario is already valid and the pinned values
+/// satisfy the builder's invariants by construction (all-true aliveness,
+/// replicas 1, quorum 1), so this cannot fail.
 fn pinned(
     s: &Scenario,
     alive: Option<Vec<bool>>,
@@ -69,7 +72,7 @@ fn pinned(
         b = b.min_quorum(q);
     }
     if let Some(d) = dispatch {
-        b = b.dispatch(d);
+        b = b.dispatch(d).fleet_elision();
     }
     b.build().expect("pinning axes of a valid scenario preserves validity")
 }

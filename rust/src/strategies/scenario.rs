@@ -142,6 +142,11 @@ pub struct Scenario {
     pub(crate) replicas: usize,
     pub(crate) min_quorum: usize,
     pub(crate) dispatch: DispatchMode,
+    /// Per-member elision mask (ISSUE 5): `Some(mask)` overrides
+    /// `dispatch` member by member — `mask[m] == true` elides member `m`'s
+    /// standbys (primary only), `false` runs every live copy. `None`
+    /// applies `dispatch` fleet-wide.
+    pub(crate) elide_mask: Option<Vec<bool>>,
 }
 
 impl Scenario {
@@ -164,6 +169,7 @@ impl Scenario {
             replicas: self.replicas,
             min_quorum: self.min_quorum,
             dispatch: self.dispatch,
+            elide_mask: self.elide_mask.clone(),
             bandwidth_mbps: None,
         }
     }
@@ -213,6 +219,22 @@ impl Scenario {
     pub fn dispatch(&self) -> DispatchMode {
         self.dispatch
     }
+
+    /// Per-member elision mask, when one overrides the fleet-wide
+    /// [`Scenario::dispatch`] (see [`ScenarioBuilder::elide_members`]).
+    pub fn elide_mask(&self) -> Option<&[bool]> {
+        self.elide_mask.as_deref()
+    }
+
+    /// Whether member `m`'s standbys are elided under this scenario: the
+    /// per-member mask entry when one is set, else the fleet-wide
+    /// dispatch mode.
+    pub fn member_elided(&self, m: usize) -> bool {
+        match &self.elide_mask {
+            Some(mask) => mask.get(m).copied().unwrap_or(false),
+            None => self.dispatch == DispatchMode::Elided,
+        }
+    }
 }
 
 /// Fluent builder for [`Scenario`]; every setter takes and returns `self`
@@ -228,6 +250,7 @@ pub struct ScenarioBuilder {
     replicas: usize,
     min_quorum: usize,
     dispatch: DispatchMode,
+    elide_mask: Option<Vec<bool>>,
     bandwidth_mbps: Option<f64>,
 }
 
@@ -243,6 +266,7 @@ impl Default for ScenarioBuilder {
             replicas: 1,
             min_quorum: 1,
             dispatch: DispatchMode::Full,
+            elide_mask: None,
             bandwidth_mbps: None,
         }
     }
@@ -304,9 +328,29 @@ impl ScenarioBuilder {
         self
     }
 
-    /// Replica dispatch mode (default [`DispatchMode::Full`]).
+    /// Replica dispatch mode (default [`DispatchMode::Full`]), applied
+    /// fleet-wide unless a per-member mask ([`Self::elide_members`])
+    /// overrides it.
     pub fn dispatch(mut self, dispatch: DispatchMode) -> Self {
         self.dispatch = dispatch;
+        self
+    }
+
+    /// Per-member elision mask (ISSUE 5): `mask[m] == true` runs member
+    /// `m` primary-only, `false` runs every live copy — the simulator
+    /// analog of one hot member shedding its own standby while cold
+    /// members keep theirs. Must match the fleet size; overrides
+    /// [`Self::dispatch`] member by member.
+    pub fn elide_members(mut self, mask: Vec<bool>) -> Self {
+        self.elide_mask = Some(mask);
+        self
+    }
+
+    /// Remove any per-member elision mask, restoring the fleet-wide
+    /// [`Self::dispatch`] behavior (what the CoFormer-family registry
+    /// strategies pin before scoring).
+    pub fn fleet_elision(mut self) -> Self {
+        self.elide_mask = None;
         self
     }
 
@@ -357,6 +401,15 @@ impl ScenarioBuilder {
         if self.min_quorum == 0 || self.min_quorum > n {
             return Err(ScenarioError::InvalidMinQuorum { min_quorum: self.min_quorum, n });
         }
+        if let Some(mask) = &self.elide_mask {
+            if mask.len() != n {
+                return Err(ScenarioError::LengthMismatch {
+                    what: "elide_mask",
+                    expected: n,
+                    got: mask.len(),
+                });
+            }
+        }
         Ok(Scenario {
             fleet: self.fleet,
             topo,
@@ -367,6 +420,7 @@ impl ScenarioBuilder {
             replicas: self.replicas,
             min_quorum: self.min_quorum,
             dispatch: self.dispatch,
+            elide_mask: self.elide_mask,
         })
     }
 }
@@ -388,8 +442,7 @@ pub struct ReplicationOutcome {
 
 /// Unified result of running any [`Strategy`] on a [`Scenario`]: the core
 /// per-device timeline every strategy produces, composed with the
-/// replication extras the CoFormer family adds. Supersedes the legacy
-/// `DegradedOutcome` / `ElasticOutcome` wrappers by composition.
+/// replication extras the CoFormer family adds.
 #[derive(Clone, Debug)]
 pub struct Outcome {
     /// Per-device busy/idle/transmit/energy/memory timeline.

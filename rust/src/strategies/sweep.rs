@@ -1,14 +1,15 @@
 //! Data-driven sweep runner: drive any set of [`Strategy`] impls across
 //! scenario axes (bandwidth, batch size, replication factor, dispatch
-//! mode) from one base [`Scenario`] — the engine behind the `paper`
-//! binary's comparison tables and the serving examples, replacing their
-//! hand-rolled nested loops.
+//! mode, per-member elision mask) from one base [`Scenario`] — the engine
+//! behind the `paper` binary's comparison tables and the serving
+//! examples, replacing their hand-rolled nested loops.
 //!
 //! Axes left unset stay at the base scenario's value, so a sweep is
 //! exactly as wide as the axes it names. Points are emitted in a
 //! deterministic nested order: bandwidth → batch → replicas → dispatch →
-//! strategy (the strategy list innermost), so callers can chunk the flat
-//! result by strategy count to recover one table row per axis combination.
+//! member-elision mask → strategy (the strategy list innermost), so
+//! callers can chunk the flat result by strategy count to recover one
+//! table row per axis combination.
 //!
 //! ```
 //! use coformer::device::DeviceProfile;
@@ -46,6 +47,9 @@ pub struct SweepPoint {
     pub batch: usize,
     pub replicas: usize,
     pub dispatch: DispatchMode,
+    /// Per-member elision mask this point ran with (`None` = the
+    /// fleet-wide `dispatch` applied; see [`Sweep::member_elision`]).
+    pub elide_mask: Option<Vec<bool>>,
     pub outcome: Outcome,
 }
 
@@ -83,6 +87,7 @@ pub struct Sweep {
     batches: Vec<usize>,
     replicas: Vec<usize>,
     dispatch: Vec<DispatchMode>,
+    member_elision: Vec<Vec<bool>>,
 }
 
 impl Sweep {
@@ -95,6 +100,7 @@ impl Sweep {
             batches: Vec::new(),
             replicas: Vec::new(),
             dispatch: Vec::new(),
+            member_elision: Vec::new(),
         }
     }
 
@@ -122,6 +128,24 @@ impl Sweep {
         self
     }
 
+    /// Vary per-member elision masks (ISSUE 5): each value is one mask
+    /// (`mask[m] == true` elides member `m`'s standbys) applied through
+    /// [`super::ScenarioBuilder::elide_members`] — the per-member vs
+    /// fleet-wide elision axis. Masks must match the fleet size; a
+    /// mismatch surfaces as [`SweepError::Scenario`]. Unset, every point
+    /// keeps the base scenario's mask (usually none: the fleet-wide
+    /// dispatch axis applies).
+    ///
+    /// A mask is a *hard override* of the dispatch mode: a mask point
+    /// ignores [`Sweep::dispatch_modes`] entirely, so naming both axes in
+    /// one sweep re-runs each mask identically once per dispatch value.
+    /// Sweep the two axes in separate [`Sweep`]s (as `paper -- energy`
+    /// does) when both views are wanted.
+    pub fn member_elision(mut self, v: &[Vec<bool>]) -> Self {
+        self.member_elision = v.to_vec();
+        self
+    }
+
     /// Run registry strategies by name across the axis cross-product.
     pub fn run_named(&self, names: &[&str]) -> Result<Vec<SweepPoint>, SweepError> {
         let boxed: Vec<Box<dyn Strategy + Send + Sync>> = names
@@ -141,7 +165,8 @@ impl Sweep {
     }
 
     /// Run the given strategies across the axis cross-product, in the
-    /// documented bandwidth → batch → replicas → dispatch → strategy order.
+    /// documented bandwidth → batch → replicas → dispatch → member-elision
+    /// mask → strategy order.
     pub fn run(&self, strategies: &[&dyn Strategy]) -> Result<Vec<SweepPoint>, SweepError> {
         // `None` = keep the base scenario's value for this axis
         let bws: Vec<Option<f64>> = if self.bandwidths_mbps.is_empty() {
@@ -168,39 +193,56 @@ impl Sweep {
         } else {
             self.dispatch.clone()
         };
+        // `None` = keep the base scenario's mask for this axis
+        let masks: Vec<Option<&Vec<bool>>> = if self.member_elision.is_empty() {
+            vec![None]
+        } else {
+            self.member_elision.iter().map(Some).collect()
+        };
 
         let mut points = Vec::with_capacity(
-            bws.len() * batches.len() * replicas.len() * dispatch.len() * strategies.len(),
+            bws.len()
+                * batches.len()
+                * replicas.len()
+                * dispatch.len()
+                * masks.len()
+                * strategies.len(),
         );
         for &bw in &bws {
             for &batch in &batches {
                 for &rep in &replicas {
                     for &mode in &dispatch {
-                        let mut b = self
-                            .base
-                            .to_builder()
-                            .batch(batch)
-                            .replicas(rep)
-                            .dispatch(mode);
-                        if let Some(mbps) = bw {
-                            b = b.bandwidth_mbps(mbps);
-                        }
-                        let scenario = b.build().map_err(SweepError::Scenario)?;
-                        for strat in strategies {
-                            let outcome = strat.run(&scenario).map_err(|error| {
-                                SweepError::Sim {
+                        for &mask in &masks {
+                            let mut b = self
+                                .base
+                                .to_builder()
+                                .batch(batch)
+                                .replicas(rep)
+                                .dispatch(mode);
+                            if let Some(mbps) = bw {
+                                b = b.bandwidth_mbps(mbps);
+                            }
+                            if let Some(m) = mask {
+                                b = b.elide_members(m.clone());
+                            }
+                            let scenario = b.build().map_err(SweepError::Scenario)?;
+                            for strat in strategies {
+                                let outcome = strat.run(&scenario).map_err(|error| {
+                                    SweepError::Sim {
+                                        strategy: strat.name().to_string(),
+                                        error,
+                                    }
+                                })?;
+                                points.push(SweepPoint {
                                     strategy: strat.name().to_string(),
-                                    error,
-                                }
-                            })?;
-                            points.push(SweepPoint {
-                                strategy: strat.name().to_string(),
-                                bandwidth_mbps: bw.unwrap_or(base_bw),
-                                batch,
-                                replicas: rep,
-                                dispatch: mode,
-                                outcome,
-                            });
+                                    bandwidth_mbps: bw.unwrap_or(base_bw),
+                                    batch,
+                                    replicas: rep,
+                                    dispatch: mode,
+                                    elide_mask: scenario.elide_mask().map(|m| m.to_vec()),
+                                    outcome,
+                                });
+                            }
                         }
                     }
                 }

@@ -1,22 +1,24 @@
-//! ISSUE 4 acceptance suite for the unified public API:
+//! ISSUE 4/5 acceptance suite for the unified public API:
 //!
-//! * the two coordinator start paths are reachable through `ServeBuilder`
-//!   and the deprecated `Coordinator::start_with_faults` wrapper delegates
-//!   to it — identical serving results on the deterministic stub harness;
+//! * `ServeBuilder` serving is deterministic — identical builds produce
+//!   identical ledgers on the stub harness (the wrapper-delegation test
+//!   retired with the deprecated `Coordinator::start*` entry points);
 //! * `config::from_json` and `ServeBuilder::start` reject the same bad
-//!   configs (both funnel through `SystemConfig::validate`);
-//! * a custom `PressureSignal` impl drops in through the trait and drives
-//!   the elision ladder where the default signal would not;
-//! * the sweep runner exercises the replicas/dispatch axes end to end.
+//!   configs (both funnel through `SystemConfig::validate`), including
+//!   the ISSUE 5 per-member override / blend / energy-budget fields;
+//! * a custom per-member `PressureSignal` impl drops in through the trait
+//!   and drives the elision ladder where the default signal would not;
+//! * the sweep runner exercises the replicas/dispatch/member-elision axes
+//!   end to end.
 
 use std::collections::HashMap;
 use std::time::Duration;
 
 use coformer::config::{
-    DeviceSpec, ElisionPolicy, FaultPolicy, ReplicationPolicy, SystemConfig,
+    DeviceSpec, ElisionPolicy, FaultPolicy, MemberOverride, ReplicationPolicy, SystemConfig,
 };
 use coformer::coordinator::{
-    Coordinator, CoordinatorHandle, EwmaLatencySignal, FleetPressure, InferenceResponse,
+    Coordinator, CoordinatorHandle, EwmaLatencySignal, InferenceResponse, MemberPressure,
     PressureContext, PressureSignal, ServeBuilder, ServeStats,
 };
 use coformer::device::FaultScript;
@@ -98,51 +100,46 @@ fn serve_rounds(coord: Coordinator) -> ServeStats {
 }
 
 #[test]
-fn deprecated_start_with_faults_delegates_to_serve_builder() {
-    // identical scripts + policies through both start paths: the wrapper
-    // must produce the identical deterministic serving ledger
+fn serve_builder_runs_are_deterministic_across_identical_builds() {
+    // the positional Coordinator::start/start_with_faults wrappers are
+    // gone (ISSUE 5); ServeBuilder is the one start path, and two
+    // identical builds — same scripts, same policies — must produce the
+    // identical deterministic serving ledger
     let mut scripts: Vec<FaultScript> = (0..FLEET).map(|_| FaultScript::none()).collect();
     scripts[2] = FaultScript::crash_at(1);
     let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
     let replication = ReplicationPolicy { replicas: 2, ..ReplicationPolicy::default() };
 
-    let (server_a, dep_a) = stub_server();
-    let via_builder = serve_rounds(
-        ServeBuilder::new(base_config(), server_a.handle(), dep_a, vec![arch(); FLEET], x_stride())
+    let run = || {
+        let (server, dep) = stub_server();
+        let stats = serve_rounds(
+            ServeBuilder::new(
+                base_config(),
+                server.handle(),
+                dep,
+                vec![arch(); FLEET],
+                x_stride(),
+            )
             .fault(fault)
-            .replication(replication)
+            .replication(replication.clone())
             .fault_scripts(scripts.clone())
             .start()
             .unwrap(),
-    );
-    drop(server_a);
+        );
+        drop(server);
+        stats
+    };
+    let a = run();
+    let b = run();
 
-    let (server_b, dep_b) = stub_server();
-    let mut config = base_config();
-    config.fault = fault;
-    config.replication = replication;
-    #[allow(deprecated)]
-    let coord = Coordinator::start_with_faults(
-        config,
-        server_b.handle(),
-        dep_b,
-        vec![arch(); FLEET],
-        x_stride(),
-        scripts,
-    )
-    .unwrap();
-    let via_wrapper = serve_rounds(coord);
-    drop(server_b);
-
-    assert_eq!(via_builder.requests, via_wrapper.requests);
-    assert_eq!(via_builder.batches, via_wrapper.batches);
-    assert_eq!(via_builder.fault.crashes, via_wrapper.fault.crashes);
-    assert_eq!(via_builder.fault.promotions, via_wrapper.fault.promotions);
-    assert_eq!(via_builder.fault.quorum_failures, via_wrapper.fault.quorum_failures);
-    assert_eq!(
-        via_builder.fault.quorum_histogram(),
-        via_wrapper.fault.quorum_histogram()
-    );
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.fault.crashes, b.fault.crashes);
+    assert_eq!(a.fault.promotions, b.fault.promotions);
+    assert_eq!(a.fault.quorum_failures, b.fault.quorum_failures);
+    assert_eq!(a.fault.quorum_histogram(), b.fault.quorum_histogram());
+    assert_eq!(a.fault.crashes, 1, "the scripted crash really fired");
+    assert_eq!(a.fault.promotions, 1, "the warm standby was promoted");
 }
 
 #[test]
@@ -204,6 +201,24 @@ fn json_and_serve_builder_reject_the_same_bad_configs() {
             }),
             "no pressure signal",
         ),
+        (
+            r#""replication":{"elision":{"member_overrides":[{"member":9}]}}"#,
+            Box::new(|c| {
+                c.replication.elision.member_overrides =
+                    vec![MemberOverride { member: 9, ..MemberOverride::default() }];
+            }),
+            "member_overrides",
+        ),
+        (
+            r#""replication":{"elision":{"limit_blend":0.0}}"#,
+            Box::new(|c| c.replication.elision.limit_blend = 0.0),
+            "limit_blend",
+        ),
+        (
+            r#""replication":{"elision":{"energy_budget_j":-2.0}}"#,
+            Box::new(|c| c.replication.elision.energy_budget_j = -2.0),
+            "energy_budget_j",
+        ),
         (r#""central":9"#, Box::new(|c| c.central = 9), "central"),
     ];
 
@@ -242,10 +257,10 @@ fn json_and_serve_builder_reject_the_same_bad_configs() {
     drop(server);
 }
 
-/// A custom pressure signal: reads saturation on every batch regardless of
-/// the real queue. Plugged in through the trait, it must walk the fleet to
-/// primaries-only where the default queue-fill signal — fed the identical
-/// featherweight load — keeps full replication.
+/// A custom pressure signal: reads saturation for every member on every
+/// batch regardless of the real queue. Plugged in through the trait, it
+/// must walk every member to primaries-only where the default queue-fill
+/// signal — fed the identical featherweight load — keeps full replication.
 struct AlwaysHigh;
 
 impl PressureSignal for AlwaysHigh {
@@ -253,11 +268,14 @@ impl PressureSignal for AlwaysHigh {
         "always-high"
     }
 
-    fn read(&mut self, ctx: &PressureContext<'_>) -> FleetPressure {
+    fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
         // deliberately ignore the real fill; keep the context used so the
         // shape of a real signal is exercised too
         let _ = ctx.intake.fill();
-        FleetPressure { queue_fill: 1.0, p95_virtual_ms: 0.0 }
+        ctx.members
+            .iter()
+            .map(|_| MemberPressure { fill: 1.0, latency_ms: 0.0 })
+            .collect()
     }
 }
 
@@ -273,6 +291,7 @@ fn custom_pressure_signal_drives_elision_through_the_trait() {
             p95_high_ms: 0.0,
             hold_batches: 1,
             shadow_promoted_batches: 0,
+            ..ElisionPolicy::default()
         },
     };
     let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
@@ -289,7 +308,7 @@ fn custom_pressure_signal_drives_elision_through_the_trait() {
             x_stride(),
         )
         .fault(fault)
-        .replication(elastic);
+        .replication(elastic.clone());
         if let Some(s) = signal {
             b = b.pressure_signal(s);
         }
@@ -312,12 +331,21 @@ fn custom_pressure_signal_drives_elision_through_the_trait() {
     assert_eq!(forced.fault.batches_full, 0, "the custom signal reads High from batch 1");
     assert_eq!(forced.fault.batches_partial, 1, "r1 steps Full → Partial");
     assert_eq!(forced.fault.batches_elided, 2, "r2 steps to Elided, r3 holds");
-    assert_eq!(forced.fault.mode_transitions, 2);
+    assert_eq!(
+        forced.fault.mode_transitions,
+        2 * FLEET,
+        "every member's machine walked Full → Partial → Elided"
+    );
     assert!(forced.fault.standby_gflops_saved > 0.0);
+    for (m, led) in forced.fault.member_modes.iter().enumerate() {
+        assert_eq!((led.full, led.partial, led.elided), (0, 1, 2), "member {m} ledger");
+        assert_eq!(led.transitions, 2, "member {m} transitions");
+        assert!(led.standby_gflops_saved > 0.0, "member {m} banked its standby");
+    }
 
     // a second stock impl through the same seam: the EWMA signal starts
     // and serves (its latency reading stays below any gate here)
-    let ewma = run(Some(Box::new(EwmaLatencySignal::new(0.3))));
+    let ewma = run(Some(Box::new(EwmaLatencySignal::new(0.3).unwrap())));
     assert_eq!(ewma.requests, 3);
     assert_eq!(ewma.fault.quorum_failures, 0);
 }
@@ -346,7 +374,7 @@ fn custom_signal_permits_elision_without_stock_signals() {
         vec![arch(); FLEET],
         x_stride(),
     )
-    .replication(replication)
+    .replication(replication.clone())
     .start()
     .err()
     .expect("the default signal has nothing to read — must be rejected");
@@ -404,4 +432,39 @@ fn sweep_replicas_and_dispatch_axes_score_the_redundancy_trade() {
     // the healthy elided timeline is the plain aggregate-edge timeline
     let plain = CoFormer.run(&sc).unwrap();
     assert!((points[3].outcome.total_s() - plain.total_s()).abs() < 1e-15);
+}
+
+#[test]
+fn sweep_member_elision_axis_scores_per_member_vs_fleet_wide() {
+    // the ISSUE 5 axis: per-member masks against the fleet-wide extremes.
+    // Eliding one member at a time banks exactly that member's standby
+    // and lands strictly between always-replicate and fleet-wide elision.
+    let sc = Scenario::builder()
+        .fleet(coformer::device::DeviceProfile::paper_fleet())
+        .topology(coformer::net::Topology::star(3, coformer::net::Link::mbps(100.0), 1))
+        .archs(vec![arch(); 3])
+        .d_i(64)
+        .replicas(2)
+        .build()
+        .unwrap();
+    let masks: Vec<Vec<bool>> = (0..3).map(|m| (0..3).map(|i| i == m).collect()).collect();
+    let per_member = Sweep::new(sc.clone())
+        .member_elision(&masks)
+        .run(&[&CoFormerElastic])
+        .unwrap();
+    assert_eq!(per_member.len(), 3);
+    let extremes = Sweep::new(sc)
+        .dispatch_modes(&[DispatchMode::Full, DispatchMode::Elided])
+        .run(&[&CoFormerElastic])
+        .unwrap();
+    let (full, elided) = (&extremes[0].outcome, &extremes[1].outcome);
+    for (i, p) in per_member.iter().enumerate() {
+        assert_eq!(p.elide_mask.as_deref(), Some(&masks[i][..]), "point carries its mask");
+        let r = p.outcome.replication.unwrap();
+        assert_eq!(r.copies_run, 5, "one member elides its standby, two keep theirs");
+        assert_eq!(r.quorum, 3);
+        assert!(p.outcome.total_energy_j() < full.total_energy_j());
+        assert!(p.outcome.total_energy_j() > elided.total_energy_j());
+        assert!(r.standby_gflops_saved > 0.0);
+    }
 }

@@ -1,6 +1,7 @@
 //! Deterministic load-scenario tests for load-adaptive replica elision
-//! (ISSUE 3), driven by the same stub backend + `FaultScript` harness as
-//! `integration_faults.rs` / `integration_replication.rs`.
+//! (ISSUE 3; per-member control plane since ISSUE 5), driven by the same
+//! stub backend + `FaultScript` harness as `integration_faults.rs` /
+//! `integration_replication.rs`.
 //!
 //! Determinism: each "round" submits a known number of requests against a
 //! known admission limit and drains every reply before the next round, so
@@ -8,13 +9,26 @@
 //! of `max_batch` requests closes its batch on the final arrival with all
 //! of its slots still admitted (fill = max_batch / capacity), and a round
 //! of one request closes at the wait deadline with fill = 1 / capacity.
-//! Pressure readings, mode transitions, elided standby compute and the
-//! scaled admission limit are therefore all exactly predictable.
+//! Per-member latency views are primary-host arrivals on the virtual
+//! clock, so scripted stalls give exact per-member readings too. Pressure
+//! readings, per-member mode transitions, elided standby compute/energy
+//! and the (blended) admission limit are therefore all exactly
+//! predictable.
 //!
 //! Acceptance criteria exercised here:
-//! * a saturating load ramp walks the fleet Full → Partial → Elided
-//!   (primaries only), and a drain walks it back — with hysteresis, and
-//!   with the saved standby GFLOPS accounted exactly;
+//! * a saturating load ramp walks every member Full → Partial → Elided
+//!   (primaries only) in lockstep, and a drain walks them back — with
+//!   per-member hysteresis, exact per-member mode ledgers, and the saved
+//!   standby GFLOPS accounted exactly;
+//! * **asymmetric elision** (ISSUE 5): when exactly one member ramps hot
+//!   (a scripted within-deadline stall on its primary), that member — and
+//!   only that member — reaches `Elided` while every cold member stays
+//!   `Full`, under the stock queue/p95 signal, the `PredictiveSignal`
+//!   (latency-predictor forecasts) and the `EnergyBudgetSignal`
+//!   (joules-per-batch against per-member budgets) alike;
+//! * admission-limit changes are smoothed: with `limit_blend < 1` a mode
+//!   change mid-burst moves the limit exponentially toward the re-banked
+//!   target, never in one step;
 //! * primaries-only mode admits strictly more load (lower shed count) than
 //!   always-replicate at equal configured capacity;
 //! * a scripted primary crash during elision still aggregates at
@@ -27,11 +41,11 @@ use std::collections::HashMap;
 use std::time::Duration;
 
 use coformer::config::{
-    DeviceSpec, ElisionPolicy, FaultPolicy, ReplicationPolicy, SystemConfig,
+    DeviceSpec, ElisionPolicy, FaultPolicy, MemberOverride, ReplicationPolicy, SystemConfig,
 };
 use coformer::coordinator::{
-    Coordinator, CoordinatorHandle, InferenceResponse, Overloaded, RequestPayload,
-    ServeBuilder,
+    Coordinator, CoordinatorHandle, EnergyBudgetSignal, InferenceResponse, Overloaded,
+    PredictiveSignal, PressureSignal, RequestPayload, ServeBuilder,
 };
 use coformer::device::FaultScript;
 use coformer::model::{Arch, CostModel, Mode};
@@ -51,13 +65,15 @@ fn x_stride() -> usize {
 }
 
 /// Start a 4-device coordinator (nano, tx2, orin-nano, rpi; central = tx2)
-/// over the stub backend with the given scripts and policies.
-fn start(
+/// over the stub backend with the given scripts, policies and optional
+/// custom pressure signal.
+fn start_with_signal(
     scripts: Vec<FaultScript>,
     fault: FaultPolicy,
     replication: ReplicationPolicy,
     max_batch: usize,
     max_wait_ms: u64,
+    signal: Option<Box<dyn PressureSignal>>,
 ) -> (ExecServer, Coordinator) {
     let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
     let spec = StubSpec {
@@ -77,13 +93,25 @@ fn start(
     config.max_batch = max_batch;
     config.max_wait_ms = max_wait_ms;
     let archs = vec![arch(); FLEET];
-    let coord = ServeBuilder::new(config, server.handle(), dep, archs, x_stride())
+    let mut b = ServeBuilder::new(config, server.handle(), dep, archs, x_stride())
         .fault(fault)
         .replication(replication)
-        .fault_scripts(scripts)
-        .start()
-        .unwrap();
+        .fault_scripts(scripts);
+    if let Some(s) = signal {
+        b = b.pressure_signal(s);
+    }
+    let coord = b.start().unwrap();
     (server, coord)
+}
+
+fn start(
+    scripts: Vec<FaultScript>,
+    fault: FaultPolicy,
+    replication: ReplicationPolicy,
+    max_batch: usize,
+    max_wait_ms: u64,
+) -> (ExecServer, Coordinator) {
+    start_with_signal(scripts, fault, replication, max_batch, max_wait_ms, None)
 }
 
 fn no_fault_scripts() -> Vec<FaultScript> {
@@ -100,6 +128,7 @@ fn elastic(high: f64, low: f64, hold: usize, shadow: usize) -> ElisionPolicy {
         p95_high_ms: 0.0,
         hold_batches: hold,
         shadow_promoted_batches: shadow,
+        ..ElisionPolicy::default()
     }
 }
 
@@ -131,8 +160,10 @@ fn round(handle: &CoordinatorHandle, n: usize) -> Vec<InferenceResponse> {
 #[test]
 fn load_ramp_elides_standbys_then_restores_them_after_drain() {
     // queue 8, rounds of 4 → fill 0.5 ≥ high 0.5 (saturation reading);
-    // rounds of 1 → fill 0.125 ≤ low 0.3 (drain reading). hold = 1, so the
-    // mode steps once per reading: Partial, Elided, (hold), Partial, Full.
+    // rounds of 1 → fill 0.125 ≤ low 0.3 (drain reading). The fill is
+    // shared and every member runs the default thresholds, so all four
+    // member machines step in lockstep: hold = 1 means one step per
+    // reading — Partial, Elided, (hold), Partial, Full.
     let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
     let replication = ReplicationPolicy {
         replicas: 2,
@@ -150,6 +181,7 @@ fn load_ramp_elides_standbys_then_restores_them_after_drain() {
         }
     }
     // primaries-only banks the standby budget: limit = 8 × (2n/n) = 16
+    // (limit_blend defaults to 1: the full step applies immediately)
     assert_eq!(
         handle.admission_state().limit,
         16,
@@ -167,12 +199,22 @@ fn load_ramp_elides_standbys_then_restores_them_after_drain() {
     assert_eq!(stats.requests, 15);
     assert_eq!(stats.fault.quorum_failures, 0);
     assert_eq!(stats.fault.degraded_batches(FLEET), 0);
-    // exact mode ledger: Partial (r1), Elided (r2, r3), Partial (r4),
-    // Full (r5, r6) — hysteresis means exactly 4 transitions, no flapping
+    // exact fleet mode ledger: Partial (r1), Elided (r2, r3), Partial
+    // (r4), Full (r5, r6) — and each of the 4 member machines made its
+    // own 4 hysteresis-bounded transitions (the counter is the member sum)
     assert_eq!(stats.fault.batches_partial, 2);
     assert_eq!(stats.fault.batches_elided, 2);
     assert_eq!(stats.fault.batches_full, 2);
-    assert_eq!(stats.fault.mode_transitions, 4);
+    assert_eq!(stats.fault.mode_transitions, 4 * FLEET);
+    assert_eq!(stats.fault.member_modes.len(), FLEET);
+    for (m, led) in stats.fault.member_modes.iter().enumerate() {
+        assert_eq!(
+            (led.full, led.partial, led.elided),
+            (2, 2, 2),
+            "member {m} lockstep ledger"
+        );
+        assert_eq!(led.transitions, 4, "member {m} transitions");
+    }
     // saved standby compute is exact: 4 members × 1 live standby, skipped
     // for the 4 non-Full batches (rows 4, 4, 4 and 1)
     let expected_gflops =
@@ -182,14 +224,21 @@ fn load_ramp_elides_standbys_then_restores_them_after_drain() {
         "saved {} vs expected {expected_gflops}",
         stats.fault.standby_gflops_saved
     );
+    let member_sum: f64 =
+        stats.fault.member_modes.iter().map(|l| l.standby_gflops_saved).sum();
+    assert!(
+        (member_sum - stats.fault.standby_gflops_saved).abs() < 1e-9,
+        "the per-member savings ledger sums to the fleet total"
+    );
+    assert!(stats.fault.standby_energy_saved_j > 0.0, "elided busy energy is accounted");
     assert_eq!(stats.fault.standby_fallbacks, 0, "no unhealthy primary, no fallback");
 }
 
 #[test]
 fn hysteresis_holds_mode_through_alternating_load() {
-    // hold = 2 with strictly alternating saturation/drain readings: neither
-    // streak ever reaches the hold, so the mode must never leave Full —
-    // flapping load cannot flap the dispatch.
+    // hold = 2 with strictly alternating saturation/drain readings: no
+    // member's streak ever reaches the hold, so no member may leave Full —
+    // flapping load cannot flap any member's dispatch.
     let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
     let replication = ReplicationPolicy {
         replicas: 2,
@@ -208,7 +257,213 @@ fn hysteresis_holds_mode_through_alternating_load() {
     assert_eq!(stats.fault.mode_transitions, 0, "alternating load must not flap");
     assert_eq!(stats.fault.batches_full, 8);
     assert_eq!(stats.fault.batches_elided, 0);
+    for led in &stats.fault.member_modes {
+        assert_eq!((led.full, led.partial, led.elided, led.transitions), (8, 0, 0, 0));
+    }
     assert_eq!(stats.fault.standby_gflops_saved, 0.0, "Full mode elides nothing");
+}
+
+/// The one-hot-member harness (ISSUE 5 acceptance): device 0 — member 0's
+/// primary — stalls 5 virtual seconds on batches 1..=5, but a 30 s
+/// deadline floor keeps every arrival on time, so the device stays
+/// Healthy and the *only* asymmetry is member 0's own latency/energy
+/// view. Six rounds of one request keep the shared queue fill at 0.125,
+/// below every low watermark.
+fn one_hot_scripts() -> Vec<FaultScript> {
+    let mut scripts = no_fault_scripts();
+    let mut s = FaultScript::none();
+    for b in 1..=5 {
+        s = s.and_stall_at(b, 5.0);
+    }
+    scripts[0] = s;
+    scripts
+}
+
+fn one_hot_fault() -> FaultPolicy {
+    FaultPolicy { min_quorum: 2, deadline_floor_s: 30.0, ..FaultPolicy::default() }
+}
+
+/// Assert the exact asymmetric ledger the one-hot scenario must produce
+/// under any signal that keys on member 0's latency view: member 0 walks
+/// Full(2) → Partial(1) → Elided(3) while every cold member stays Full.
+fn assert_one_hot_ledger(stats: &coformer::coordinator::ServeStats) {
+    assert_eq!(stats.batches, 6);
+    assert_eq!(stats.fault.quorum_failures, 0, "the stalled primary is always on time");
+    assert_eq!(stats.fault.timeouts, 0);
+    assert_eq!(stats.fault.degraded_batches(FLEET), 0);
+    let m0 = &stats.fault.member_modes[0];
+    assert_eq!(
+        (m0.full, m0.partial, m0.elided),
+        (2, 1, 3),
+        "the hot member ramps Full → Partial → Elided"
+    );
+    assert_eq!(m0.transitions, 2);
+    for (m, led) in stats.fault.member_modes.iter().enumerate().skip(1) {
+        assert_eq!(
+            (led.full, led.partial, led.elided),
+            (6, 0, 0),
+            "cold member {m} must never leave Full"
+        );
+        assert_eq!(led.transitions, 0, "cold member {m} must not transition");
+        assert_eq!(led.standby_gflops_saved, 0.0);
+    }
+    assert_eq!(stats.fault.mode_transitions, 2, "only the hot member moved");
+    // fleet ledger keys on the most aggressive member mode
+    assert_eq!(stats.fault.batches_full, 2);
+    assert_eq!(stats.fault.batches_partial, 1);
+    assert_eq!(stats.fault.batches_elided, 3);
+    // exactly member 0's live standby was skipped, in batches 2..=5
+    // (Partial already withdraws the healthy, unpromoted shadow), 1 row each
+    let expected = CostModel::flops_per_sample(&arch()) * 4.0 / 1e9;
+    assert!(
+        (m0.standby_gflops_saved - expected).abs() < 1e-9,
+        "member 0 saved {} vs expected {expected}",
+        m0.standby_gflops_saved
+    );
+    assert!(
+        (stats.fault.standby_gflops_saved - expected).abs() < 1e-9,
+        "fleet savings are exactly the hot member's"
+    );
+    assert!(m0.standby_energy_saved_j > 0.0);
+    assert_eq!(stats.fault.standby_fallbacks, 0, "a Healthy stalling primary is no fallback");
+}
+
+#[test]
+fn one_hot_member_sheds_only_its_own_standby_under_the_default_signal() {
+    // stock QueueP95Signal, per-member windows: member 0's p95 jumps to
+    // ~5000 ms ≥ the 1000 ms gate after the first stalled batch lands in
+    // its window; the cold members' windows stay at LAN-floor
+    // milliseconds and the shared fill stays at 0.125.
+    let mut elision = elastic(0.9, 0.5, 1, 0);
+    elision.p95_high_ms = 1000.0;
+    let replication = ReplicationPolicy { replicas: 2, max_queue_depth: 8, elision };
+    let (server, coord) = start(one_hot_scripts(), one_hot_fault(), replication, 4, 100);
+    let handle = coord.handle();
+    for r in (0..6).flat_map(|_| round(&handle, 1)) {
+        assert_eq!(r.quorum, FLEET, "elision never costs arity on a healthy fleet");
+    }
+    // one member elided out of four: headroom = 8f/7f, limit = ⌈8 × 8/7⌋ = 9
+    assert_eq!(
+        handle.admission_state().limit,
+        9,
+        "only the hot member's standby budget is re-banked"
+    );
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_one_hot_ledger(&stats);
+}
+
+#[test]
+fn predictive_signal_drives_the_one_hot_member_through_mlp_forecasts() {
+    // same scenario, pressure read by PredictiveSignal: baselines of 2 ms
+    // (the healthy LAN-floor arrival), trend alpha 1. Member 0's stalled
+    // arrival makes its one-step forecast ≈ 2 × 5002 − 2 ms, far past the
+    // 1000 ms gate; the cold members' forecasts stay on baseline.
+    let mut elision = elastic(0.9, 0.5, 1, 0);
+    elision.p95_high_ms = 1000.0;
+    let replication = ReplicationPolicy { replicas: 2, max_queue_depth: 8, elision };
+    let signal = PredictiveSignal::from_baselines_ms(vec![2.0; FLEET], 1.0).unwrap();
+    let (server, coord) = start_with_signal(
+        one_hot_scripts(),
+        one_hot_fault(),
+        replication,
+        4,
+        100,
+        Some(Box::new(signal)),
+    );
+    let handle = coord.handle();
+    for _ in 0..6 {
+        round(&handle, 1);
+    }
+    assert_eq!(handle.admission_state().limit, 9);
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_one_hot_ledger(&stats);
+}
+
+#[test]
+fn energy_budget_signal_elides_the_member_over_its_budget() {
+    // no stalls: the asymmetry is purely configured energy budgets —
+    // member 0's per-member override is microscopic (any measured joules
+    // blow it), the fleet default is enormous (nobody else ever reads
+    // hot). EnergyBudgetSignal turns each member's joules-per-batch into
+    // fill against its own budget.
+    let mut elision = elastic(0.75, 0.35, 1, 0);
+    elision.energy_budget_j = 1e6;
+    elision.member_overrides = vec![MemberOverride {
+        member: 0,
+        energy_budget_j: Some(1e-12),
+        ..MemberOverride::default()
+    }];
+    let signal = EnergyBudgetSignal::from_policy(&elision, FLEET).unwrap();
+    let replication = ReplicationPolicy { replicas: 2, max_queue_depth: 8, elision };
+    let (server, coord) = start_with_signal(
+        no_fault_scripts(),
+        FaultPolicy { min_quorum: 2, ..FaultPolicy::default() },
+        replication,
+        4,
+        100,
+        Some(Box::new(signal)),
+    );
+    let handle = coord.handle();
+    for _ in 0..5 {
+        for r in round(&handle, 1) {
+            assert_eq!(r.quorum, FLEET);
+        }
+    }
+    assert_eq!(handle.admission_state().limit, 9, "the over-budget member banks its standby");
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.batches, 5);
+    let m0 = &stats.fault.member_modes[0];
+    // r1 reads empty energy windows (cold); r2 reads the first measured
+    // joules → Partial; r3 → Elided; r4, r5 hold
+    assert_eq!((m0.full, m0.partial, m0.elided), (1, 1, 3));
+    assert_eq!(m0.transitions, 2);
+    for led in stats.fault.member_modes.iter().skip(1) {
+        assert_eq!((led.full, led.partial, led.elided, led.transitions), (5, 0, 0, 0));
+    }
+    assert_eq!(stats.fault.mode_transitions, 2);
+    assert!(m0.standby_energy_saved_j > 0.0, "the skipped standby's joules are banked");
+    assert!(stats.fault.standby_energy_saved_j > 0.0);
+    assert_eq!(stats.fault.quorum_failures, 0);
+}
+
+#[test]
+fn admission_limit_blends_exponentially_toward_the_elided_target() {
+    // limit_blend 0.5 with a lockstep saturation ramp: once every member
+    // is Elided the target limit is 16 (2× the base 8), and the live
+    // limit must walk 8 → 12 → 14 → 15 → 16, halving the remaining gap
+    // each batch — never the pre-ISSUE-5 single step.
+    let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    let mut elision = elastic(0.5, 0.3, 1, 0);
+    elision.limit_blend = 0.5;
+    let replication = ReplicationPolicy { replicas: 2, max_queue_depth: 8, elision };
+    let (server, coord) = start(no_fault_scripts(), fault, replication, 4, 100);
+    let handle = coord.handle();
+    let mut limits = Vec::new();
+    for _ in 0..6 {
+        round(&handle, 4); // fill 0.5 ≥ high 0.5: saturation every round
+        limits.push(handle.admission_state().limit);
+    }
+    // r1 steps everyone to Partial (target headroom 1 → limit holds);
+    // r2 steps to Elided (target 16) and the blend takes over
+    assert_eq!(limits, vec![8, 12, 14, 15, 16, 16]);
+    // no single-batch step exceeds the configured blend of the gap
+    let mut prev = 8usize;
+    for &l in &limits {
+        let step = l.abs_diff(prev);
+        let gap = 16usize.abs_diff(prev);
+        assert!(
+            step * 2 <= gap + 1,
+            "step {step} from {prev} exceeds blend 0.5 of gap {gap}"
+        );
+        prev = l;
+    }
+    let stats = coord.shutdown().unwrap();
+    drop(server);
+    assert_eq!(stats.fault.mode_transitions, 2 * FLEET);
+    assert_eq!(stats.fault.quorum_failures, 0);
 }
 
 #[test]
@@ -259,9 +514,9 @@ fn primary_crash_during_elision_meets_min_quorum_and_recovers_in_one_batch() {
 #[test]
 fn degraded_primary_reenables_its_standby_instantly_under_elision() {
     // A straggling (not dead) primary: device 3 stalls 5 virtual seconds in
-    // r3, missing its deadline and walking to Degraded. In r4 — still in
-    // Elided mode — the per-member fallback must dispatch member 3's
-    // standby again even though the fleet-wide mode says primaries-only.
+    // r3, missing its deadline and walking to Degraded. In r4 — member 3
+    // still in Elided mode — the per-member fallback must dispatch member
+    // 3's standby again even though its machine says primaries-only.
     let mut scripts = no_fault_scripts();
     scripts[3] = FaultScript::stall_at(2, 5.0); // r3 is batch index 2
     let fault = FaultPolicy {
@@ -314,8 +569,7 @@ fn elision_sheds_strictly_less_than_always_replicate_at_equal_capacity() {
     // throughput, zero dropped batches in both runs.
     let run = |elision: ElisionPolicy| -> (usize, usize, coformer::coordinator::ServeStats) {
         let fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
-        let replication =
-            ReplicationPolicy { replicas: 2, max_queue_depth: 8, elision };
+        let replication = ReplicationPolicy { replicas: 2, max_queue_depth: 8, elision };
         let (server, coord) = start(no_fault_scripts(), fault, replication, 64, 300);
         let handle = coord.handle();
         round(&handle, 4); // saturation reading 1 (fill 0.5)

@@ -5,8 +5,8 @@
 //! cases; failures print the offending seed.
 
 use coformer::aggregation;
-use coformer::config::ElisionPolicy;
-use coformer::coordinator::{FleetPressure, HealthState, ReplicaMode, ReplicaScheduler};
+use coformer::config::{ElisionPolicy, MemberOverride};
+use coformer::coordinator::{HealthState, MemberPressure, ReplicaMode, ReplicaScheduler};
 use coformer::debo::linalg::{cholesky, cholesky_solve, Matrix};
 use coformer::debo::{expected_improvement, Gp, Matern32};
 use coformer::device::{DeviceProfile, SimDevice};
@@ -598,6 +598,7 @@ fn prop_sweep_points_cover_the_axis_cross_product() {
                     assert_eq!(p.batch, b);
                     assert_eq!(p.dispatch, m);
                     assert_eq!(p.replicas, 2, "unset axes keep the base value");
+                    assert!(p.elide_mask.is_none(), "unset mask axis keeps the base mask");
                     assert!(p.outcome.total_s() > 0.0);
                     i += 1;
                 }
@@ -613,91 +614,178 @@ fn prop_sweep_points_cover_the_axis_cross_product() {
 
 // -------------------------------------------------------------- scheduler
 
-fn random_elision(rng: &mut Rng) -> ElisionPolicy {
+/// A well-formed random policy for an `n`-member fleet; with probability
+/// ~1/2 it carries per-member watermark/energy overrides (always with a
+/// valid merged band).
+fn random_elision(rng: &mut Rng, n_members: usize) -> ElisionPolicy {
     let low = rng.gen_f64() * 0.5;
-    ElisionPolicy {
+    let mut p = ElisionPolicy {
         enabled: rng.gen_f64() < 0.8,
         high_watermark: low + 0.05 + rng.gen_f64() * 0.5,
         low_watermark: low,
-        p95_high_ms: if rng.gen_f64() < 0.5 { 0.0 } else { rng.gen_f64() * 100.0 },
+        p95_high_ms: if rng.gen_f64() < 0.5 { 0.0 } else { rng.gen_f64() * 150.0 },
         hold_batches: rng.gen_range(1, 5),
         shadow_promoted_batches: rng.gen_range(0, 5),
+        limit_blend: 0.05 + rng.gen_f64() * 0.95,
+        energy_budget_j: rng.gen_f64() * 4.0,
+        ..ElisionPolicy::default()
+    };
+    if rng.gen_f64() < 0.5 {
+        for m in 0..n_members {
+            if rng.gen_f64() < 0.5 {
+                continue;
+            }
+            let o_low = rng.gen_f64() * 0.5;
+            p.member_overrides.push(MemberOverride {
+                member: m,
+                high_watermark: Some(o_low + 0.05 + rng.gen_f64() * 0.5),
+                low_watermark: Some(o_low),
+                energy_budget_j: if rng.gen_f64() < 0.5 {
+                    Some(rng.gen_f64() * 4.0)
+                } else {
+                    None
+                },
+            });
+        }
+    }
+    p
+}
+
+fn random_pressure(rng: &mut Rng) -> MemberPressure {
+    MemberPressure {
+        fill: rng.gen_f64() * 1.6,
+        latency_ms: rng.gen_f64() * 200.0,
     }
 }
 
-fn random_pressure(rng: &mut Rng) -> FleetPressure {
-    FleetPressure {
-        queue_fill: rng.gen_f64() * 1.6,
-        p95_virtual_ms: rng.gen_f64() * 150.0,
-    }
+fn random_readings(rng: &mut Rng, n: usize) -> Vec<MemberPressure> {
+    (0..n).map(|_| random_pressure(rng)).collect()
 }
 
 #[test]
 fn prop_scheduler_never_elides_unhealthy_primary_and_bounds_copies() {
-    // ISSUE 3 invariants, over arbitrary pressure sequences:
+    // ISSUE 3 invariants, per member, over arbitrary per-member pressure
+    // sequences:
     // 1. a member whose primary is not Healthy always keeps its standbys
     //    (the fallback overrides every mode);
     // 2. the copies a member executes per batch stay within [1, replicas];
-    // 3. a disabled policy is pinned to Full and elides nothing.
+    // 3. a disabled policy pins every member to Full and elides nothing.
     forall(300, 5000, |rng| {
-        let policy = random_elision(rng);
+        let n = rng.gen_range(1, 6);
+        let policy = random_elision(rng, n);
         policy.validate().expect("generated policies are well-formed");
-        let mut s = ReplicaScheduler::new(policy);
+        let enabled = policy.enabled;
+        let mut s = ReplicaScheduler::new(policy, n);
         let replicas = rng.gen_range(1, 5);
-        for _ in 0..rng.gen_range(1, 50) {
-            s.observe(&random_pressure(rng));
-            assert!(s.standby_executes(HealthState::Degraded, false));
-            assert!(s.standby_executes(HealthState::Dead, rng.gen_f64() < 0.5));
-            for assigned in 1..=replicas {
-                let state = match rng.gen_range(0, 3) {
-                    0 => HealthState::Healthy,
-                    1 => HealthState::Degraded,
-                    _ => HealthState::Dead,
-                };
-                let promoted = rng.gen_f64() < 0.5;
-                let standbys = assigned - 1;
-                let copies =
-                    1 + if s.standby_executes(state, promoted) { standbys } else { 0 };
-                assert!(
-                    (1..=replicas).contains(&copies),
-                    "copies {copies} out of [1, {replicas}]"
-                );
-                if state != HealthState::Healthy {
-                    assert_eq!(
-                        copies,
-                        assigned,
-                        "an unhealthy primary must keep every assigned standby"
+        for _ in 0..rng.gen_range(1, 40) {
+            s.observe(&random_readings(rng, n));
+            for m in 0..n {
+                assert!(s.standby_executes(m, HealthState::Degraded, false));
+                assert!(s.standby_executes(m, HealthState::Dead, rng.gen_f64() < 0.5));
+                for assigned in 1..=replicas {
+                    let state = match rng.gen_range(0, 3) {
+                        0 => HealthState::Healthy,
+                        1 => HealthState::Degraded,
+                        _ => HealthState::Dead,
+                    };
+                    let promoted = rng.gen_f64() < 0.5;
+                    let standbys = assigned - 1;
+                    let copies = 1 + if s.standby_executes(m, state, promoted) {
+                        standbys
+                    } else {
+                        0
+                    };
+                    assert!(
+                        (1..=replicas).contains(&copies),
+                        "copies {copies} out of [1, {replicas}]"
                     );
+                    if state != HealthState::Healthy {
+                        assert_eq!(
+                            copies,
+                            assigned,
+                            "an unhealthy primary must keep every assigned standby"
+                        );
+                    }
                 }
-            }
-            if !policy.enabled {
-                assert_eq!(s.mode(), ReplicaMode::Full);
-                assert!(s.standby_executes(HealthState::Healthy, false));
+                if !enabled {
+                    assert_eq!(s.mode(m), ReplicaMode::Full);
+                    assert!(s.standby_executes(m, HealthState::Healthy, false));
+                }
             }
         }
     });
 }
 
 #[test]
-fn prop_scheduler_transitions_bounded_by_hold() {
-    // Hysteresis: each mode step consumes `hold_batches` consecutive
-    // same-direction readings and resets both streaks, so over T readings
-    // there can be at most T / hold_batches transitions — a flap-frequency
-    // ceiling that holds for every pressure sequence.
+fn prop_scheduler_transitions_bounded_by_hold_per_member() {
+    // Hysteresis, per member: each mode step of one member consumes
+    // `hold_batches` consecutive same-direction readings *of that member*
+    // and resets its streaks, so over T readings each member transitions
+    // at most T / hold_batches times (and the fleet total is bounded by
+    // n × T / hold_batches) — a flap-frequency ceiling that holds for
+    // every per-member pressure sequence.
     forall(300, 5200, |rng| {
-        let policy = random_elision(rng);
-        let mut s = ReplicaScheduler::new(policy);
+        let n = rng.gen_range(1, 6);
+        let policy = random_elision(rng, n);
+        let hold = policy.hold_batches;
+        let mut s = ReplicaScheduler::new(policy, n);
         let t = rng.gen_range(1, 80);
         for _ in 0..t {
-            let mode = s.observe(&random_pressure(rng));
-            assert_eq!(mode, s.mode());
+            s.observe(&random_readings(rng, n));
         }
-        assert!(
-            s.transitions() <= t / policy.hold_batches,
-            "{} transitions in {t} readings with hold {}",
+        for m in 0..n {
+            assert!(
+                s.member_transitions(m) <= t / hold,
+                "member {m}: {} transitions in {t} readings with hold {hold}",
+                s.member_transitions(m)
+            );
+        }
+        assert!(s.transitions() <= n * (t / hold));
+        assert_eq!(
             s.transitions(),
-            policy.hold_batches
+            (0..n).map(|m| s.member_transitions(m)).sum::<usize>(),
+            "the fleet transition count is exactly the member sum"
         );
+    });
+}
+
+#[test]
+fn prop_scheduler_members_are_independent() {
+    // The per-member tentpole invariant (ISSUE 5): one hot member's
+    // readings never change a cold member's mode. Feeding the n-member
+    // scheduler per-member reading streams must leave every member in
+    // exactly the state of a solo scheduler fed only that member's stream
+    // (with that member's merged thresholds as its base policy).
+    forall(200, 5600, |rng| {
+        let n = rng.gen_range(2, 6);
+        let policy = random_elision(rng, n);
+        let mut combined = ReplicaScheduler::new(policy.clone(), n);
+        let mut solos: Vec<ReplicaScheduler> = (0..n)
+            .map(|m| {
+                let th = policy.member_thresholds(m);
+                let solo = ElisionPolicy {
+                    high_watermark: th.high_watermark,
+                    low_watermark: th.low_watermark,
+                    energy_budget_j: th.energy_budget_j,
+                    member_overrides: Vec::new(),
+                    ..policy.clone()
+                };
+                ReplicaScheduler::new(solo, 1)
+            })
+            .collect();
+        for _ in 0..rng.gen_range(1, 60) {
+            let readings = random_readings(rng, n);
+            combined.observe(&readings);
+            for (m, solo) in solos.iter_mut().enumerate() {
+                solo.observe(&readings[m..m + 1]);
+                assert_eq!(
+                    combined.mode(m),
+                    solo.mode(0),
+                    "member {m} diverged from its solo machine"
+                );
+                assert_eq!(combined.member_transitions(m), solo.transitions());
+            }
+        }
     });
 }
 
