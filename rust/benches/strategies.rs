@@ -83,6 +83,21 @@ fn main() {
         black_box(sweep.run(&methods).unwrap().len());
     });
 
+    // overlap engine with link contention (ISSUE 6): a replicated fleet at
+    // 2 Mb/s puts multiple feature payloads on every uplink, so each
+    // LinkSchedule reservation walks a busy timeline — the engine's
+    // worst-case bookkeeping path, side by side with the serialized run
+    let contended = sc
+        .to_builder()
+        .bandwidth_mbps(2.0)
+        .replicas(2)
+        .build()
+        .expect("contended bench scenario is valid");
+    let both_modes = Sweep::new(contended).overlap_modes(&[false, true]);
+    bench("overlap_link_contention (paper -- overlap rows)", 5, 200, || {
+        black_box(both_modes.run_named(&["coformer_elastic"]).unwrap().len());
+    });
+
     // cost-model analytics (called inside every policy evaluation)
     let arch = subs()[2].clone();
     bench("flops_per_sample", 100, 10000, || {

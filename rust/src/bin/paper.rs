@@ -30,7 +30,7 @@ use coformer::runtime::Engine;
 use coformer::strategies::registry::{
     CoFormer, CoFormerDegraded, Ensemble, PipeEdge, SingleEdge, TensorParallel,
 };
-use coformer::strategies::{DispatchMode, Outcome, Scenario, Segment, Strategy, Sweep};
+use coformer::strategies::{DispatchMode, Outcome, Scenario, Segment, Strategy, Sweep, SweepPoint};
 use coformer::Result;
 
 // ---------------------------------------------------------------------------
@@ -1125,6 +1125,72 @@ fn table5(engine: &Engine) -> Result<()> {
     Ok(())
 }
 
+/// Overlap (ISSUE 6): the serialized Eq. 5/6 timeline vs the event-driven
+/// engine in which a device transmits a finished member's features while
+/// computing its next task and links are contended resources. Scores
+/// replicated CoFormer (two members per host, so the first transfer
+/// drains behind the second member's compute), galaxy-style tensor
+/// parallelism (per-layer all-gathers hide behind later layers), and the
+/// DeTransformer decoupled-block variant (2-layer blocks halve the sync
+/// payloads on top of the overlap), each at 2/100/1000 Mb/s via the
+/// sweep's overlap axis.
+fn overlap() -> Result<()> {
+    println!("== Overlap: serialized vs event-driven timeline (DeiT-B scale sim) ==");
+    let mut rows = Vec::new();
+    let mut row = |label: &str, mbps: f64, pts: &[SweepPoint]| {
+        let (ser, ovl) = (&pts[0], &pts[1]);
+        assert!(!ser.overlap && ovl.overlap, "sweep emits overlap=false first");
+        rows.push(vec![
+            label.to_string(),
+            format!("{mbps} Mb/s"),
+            ms(ser.outcome.total_s()),
+            ms(ovl.outcome.total_s()),
+            format!("{:.2}x", ser.outcome.total_s() / ovl.outcome.total_s()),
+        ]);
+    };
+    for mbps in [2.0, 100.0, 1000.0] {
+        let replicated = paper_scenario(mbps)
+            .to_builder()
+            .replicas(2)
+            .min_quorum(1)
+            .dispatch(DispatchMode::Full)
+            .build()?;
+        let pts = Sweep::new(replicated)
+            .overlap_modes(&[false, true])
+            .run_named(&["coformer_elastic"])?;
+        row("coformer replicated (Full, r=2)", mbps, &pts);
+
+        let pts = Sweep::new(paper_scenario(mbps))
+            .overlap_modes(&[false, true])
+            .run_named(&["tensor_parallel"])?;
+        row("galaxy tensor-parallel", mbps, &pts);
+
+        // DeTransformer-style decoupled blocks: same fleet, 2-layer blocks
+        let decoupled: Vec<Arch> =
+            deit_subs().into_iter().map(|a| a.with_block_layers(2)).collect();
+        let de = paper_scenario(mbps).to_builder().archs(decoupled).build()?;
+        let pts =
+            Sweep::new(de).overlap_modes(&[false, true]).run_named(&["tensor_parallel"])?;
+        row("detransformer (2-layer blocks)", mbps, &pts);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["strategy", "bandwidth", "serialized", "overlapped", "speedup"],
+            &rows
+        )
+    );
+    println!(
+        "headline: with overlap off the event-driven engine reproduces the serialized\n\
+         Eq. 5/6 numbers bitwise (the equivalence tests pin this); with overlap on,\n\
+         transfers hide behind compute wherever a device holds more work — largest at\n\
+         2 Mb/s where the link, not the silicon, is the bottleneck. Single-task\n\
+         timelines (plain coformer, pipe_edge, ensemble) have nothing to overlap and\n\
+         are unchanged by design.\n"
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let mut artifacts = PathBuf::from("artifacts");
@@ -1152,6 +1218,7 @@ fn main() -> Result<()> {
             "fig16" => fig16(&engine),
             "elastic" => elastic(),
             "energy" => energy(),
+            "overlap" => overlap(),
             "table1" => table1(),
             "table2" => table2(),
             "table3" => table3(&engine),
@@ -1163,8 +1230,8 @@ fn main() -> Result<()> {
     if target == "all" {
         for t in [
             "fig1", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10", "fig11", "fig12", "fig13",
-            "fig15", "fig16", "elastic", "energy", "table1", "table2", "table3", "table4",
-            "table5",
+            "fig15", "fig16", "elastic", "energy", "overlap", "table1", "table2", "table3",
+            "table4", "table5",
         ] {
             run(t)?;
         }

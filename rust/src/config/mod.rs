@@ -130,6 +130,84 @@ impl FaultPolicy {
     }
 }
 
+/// Runtime link re-planning policy (ISSUE 6): the serving leader tracks an
+/// EWMA of each device's observed-vs-predicted arrival slowdown and, when a
+/// member runs a single copy (its standbys elided), routes that copy to the
+/// host whose uplink is least slowed — the network-path twin of
+/// [`crate::coordinator::ReplicaScheduler`]'s routing around slow devices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkPlanPolicy {
+    /// Master switch. Disabled, the leader never reroutes and the planner
+    /// is observation-only.
+    pub enabled: bool,
+    /// EWMA smoothing factor in `(0, 1]` (1 = last observation wins).
+    pub alpha: f64,
+    /// A host's path counts as contended once its smoothed slowdown
+    /// (observed / predicted arrival) reaches this factor. Must be >= 1;
+    /// a healthy deterministic fleet sits at exactly 1.0.
+    pub slowdown_threshold: f64,
+    /// Observations of a host required before its slowdown is trusted
+    /// (until then it reads as 1.0 — neither contended nor preferred).
+    pub min_observations: usize,
+}
+
+impl Default for LinkPlanPolicy {
+    fn default() -> Self {
+        LinkPlanPolicy {
+            enabled: true,
+            alpha: 0.3,
+            slowdown_threshold: 2.0,
+            min_observations: 3,
+        }
+    }
+}
+
+impl LinkPlanPolicy {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let opt_f64 = |key: &str, dv: f64| -> Result<f64> {
+            v.get(key).map(|x| x.as_f64()).transpose().map(|o| o.unwrap_or(dv))
+        };
+        let p = LinkPlanPolicy {
+            enabled: v
+                .get("enabled")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(d.enabled),
+            alpha: opt_f64("alpha", d.alpha)?,
+            slowdown_threshold: opt_f64("slowdown_threshold", d.slowdown_threshold)?,
+            min_observations: v
+                .get("min_observations")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(d.min_observations),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Shared by JSON parsing and [`SystemConfig::validate`] (a hand-built
+    /// policy fed to the coordinator goes through the identical checks).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.alpha.is_finite() && self.alpha > 0.0 && self.alpha <= 1.0,
+            "linkplan alpha {} must be in (0, 1]",
+            self.alpha
+        );
+        anyhow::ensure!(
+            self.slowdown_threshold.is_finite() && self.slowdown_threshold >= 1.0,
+            "linkplan slowdown_threshold {} must be >= 1 (a healthy path sits \
+             at exactly 1.0)",
+            self.slowdown_threshold
+        );
+        anyhow::ensure!(
+            self.min_observations >= 1,
+            "linkplan min_observations must be >= 1"
+        );
+        Ok(())
+    }
+}
+
 /// Per-member override of the elision thresholds (ISSUE 5): a member named
 /// by fleet index can run hotter or colder watermarks than the fleet
 /// default, and carry its own energy budget. Unset fields inherit the
@@ -500,6 +578,8 @@ pub struct SystemConfig {
     pub fault: FaultPolicy,
     /// Replication + admission-control policy (standbys, load shedding).
     pub replication: ReplicationPolicy,
+    /// Runtime link re-planning policy (ISSUE 6).
+    pub linkplan: LinkPlanPolicy,
 }
 
 impl SystemConfig {
@@ -545,6 +625,11 @@ impl SystemConfig {
                 .map(ReplicationPolicy::from_json)
                 .transpose()?
                 .unwrap_or_default(),
+            linkplan: v
+                .get("linkplan")
+                .map(LinkPlanPolicy::from_json)
+                .transpose()?
+                .unwrap_or_default(),
         };
         c.validate()?;
         Ok(c)
@@ -580,6 +665,7 @@ impl SystemConfig {
             self.devices.len()
         );
         self.replication.validate()?;
+        self.linkplan.validate()?;
         if !custom_signal {
             self.replication.validate_elision_signals()?;
         }
@@ -626,6 +712,7 @@ impl SystemConfig {
             delta: 20.0,
             fault: FaultPolicy::default(),
             replication: ReplicationPolicy::default(),
+            linkplan: LinkPlanPolicy::default(),
         }
     }
 
@@ -696,6 +783,41 @@ mod tests {
         assert!(!c.fault.redispatch);
         // untouched knobs keep their defaults
         assert_eq!(c.fault.dead_after, FaultPolicy::default().dead_after);
+    }
+
+    #[test]
+    fn linkplan_parses_defaults_and_bounds() {
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x"}"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(c.linkplan, LinkPlanPolicy::default());
+        assert!(c.linkplan.enabled);
+
+        let json = r#"{
+          "devices":["jetson-nano"],"deployment":"x",
+          "linkplan":{"enabled":false,"alpha":0.5,"slowdown_threshold":3.0,
+                      "min_observations":5}
+        }"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert!(!c.linkplan.enabled);
+        assert!((c.linkplan.alpha - 0.5).abs() < 1e-12);
+        assert!((c.linkplan.slowdown_threshold - 3.0).abs() < 1e-12);
+        assert_eq!(c.linkplan.min_observations, 5);
+
+        for bad in [
+            r#"{"devices":["jetson-nano"],"deployment":"x","linkplan":{"alpha":0.0}}"#,
+            r#"{"devices":["jetson-nano"],"deployment":"x","linkplan":{"alpha":1.5}}"#,
+            r#"{"devices":["jetson-nano"],"deployment":"x",
+                "linkplan":{"slowdown_threshold":0.5}}"#,
+            r#"{"devices":["jetson-nano"],"deployment":"x",
+                "linkplan":{"min_observations":0}}"#,
+        ] {
+            assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+        }
+
+        // the shared validate gate catches hand-built invalid policies too
+        let mut c = SystemConfig::paper_default();
+        c.linkplan.slowdown_threshold = 0.9;
+        assert!(c.validate().is_err());
     }
 
     #[test]

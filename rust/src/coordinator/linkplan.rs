@@ -1,0 +1,194 @@
+//! Runtime link re-planning (ISSUE 6). The leader already routes around
+//! slow *devices* — health scores walk a straggler to Dead and the
+//! [`super::ReplicaScheduler`] keeps warm standbys for instant masking.
+//! This module is the network-path twin: a [`LinkPlanner`] tracks, per
+//! device, an EWMA of the observed-vs-predicted arrival slowdown (the
+//! leader's deadline predictor and the worker's simulated clock agree
+//! exactly on a healthy path, so any sustained ratio above 1.0 is real
+//! contention on that device's uplink or silicon). When a member runs a
+//! single copy — its standbys elided under load — the planner routes that
+//! copy to the member's least-slowed live host instead of blindly using
+//! the primary, so one contended uplink does not gate every batch while
+//! perfectly good standby paths sit idle.
+//!
+//! Replicated (non-elided) members need no routing: every copy is
+//! dispatched anyway and first-arrival-wins dedup already prefers the
+//! uncontended path.
+
+use crate::config::LinkPlanPolicy;
+use crate::Result;
+
+/// Per-device path-slowdown tracker + single-copy router. Constructed by
+/// the coordinator from [`LinkPlanPolicy`]; observation-only when the
+/// policy is disabled.
+#[derive(Clone, Debug)]
+pub struct LinkPlanner {
+    policy: LinkPlanPolicy,
+    /// Per-device EWMA of observed / predicted arrival (`None` until the
+    /// first observation).
+    slowdown: Vec<Option<f64>>,
+    /// Per-device observation count (ratios are not trusted before
+    /// `min_observations`).
+    observations: Vec<usize>,
+    /// Reroutes issued since start (mirrored into `FaultMetrics`).
+    reroutes: usize,
+}
+
+impl LinkPlanner {
+    /// A planner for an `n`-device fleet. The policy goes through the same
+    /// validation gate as JSON-loaded configs, so a hand-built policy
+    /// cannot smuggle in a degenerate alpha or threshold.
+    pub fn new(policy: LinkPlanPolicy, n_devices: usize) -> Result<Self> {
+        policy.validate()?;
+        Ok(LinkPlanner {
+            policy,
+            slowdown: vec![None; n_devices],
+            observations: vec![0; n_devices],
+            reroutes: 0,
+        })
+    }
+
+    /// Fold one batch's observed arrival for device `w` into its slowdown
+    /// EWMA. `predicted_s` is the leader's deadline-model arrival (before
+    /// the deadline factor); non-positive predictions are skipped — there
+    /// is no meaningful ratio to take.
+    pub fn observe(&mut self, w: usize, predicted_s: f64, observed_s: f64) {
+        if w >= self.slowdown.len() || predicted_s <= 0.0 || !observed_s.is_finite() {
+            return;
+        }
+        let ratio = (observed_s / predicted_s).max(0.0);
+        let a = self.policy.alpha;
+        self.slowdown[w] = Some(match self.slowdown[w] {
+            Some(prev) => a * ratio + (1.0 - a) * prev,
+            None => ratio,
+        });
+        self.observations[w] += 1;
+    }
+
+    /// Device `w`'s smoothed slowdown factor. Reads 1.0 — neither
+    /// contended nor preferred — until `min_observations` batches have
+    /// been seen, so a cold standby is never chosen on zero evidence over
+    /// a primary with history (and vice versa).
+    pub fn slowdown(&self, w: usize) -> f64 {
+        if self.observations.get(w).is_some_and(|&n| n >= self.policy.min_observations) {
+            self.slowdown[w].unwrap_or(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Whether device `w`'s path currently counts as contended.
+    pub fn contended(&self, w: usize) -> bool {
+        self.slowdown(w) >= self.policy.slowdown_threshold
+    }
+
+    /// Reroutes issued since start.
+    pub fn reroutes(&self) -> usize {
+        self.reroutes
+    }
+
+    /// Route one member's single dispatched copy: given the member's host
+    /// list (primary first), return the host that copy should run on, or
+    /// `None` to keep the primary. A reroute happens only when the
+    /// planner is enabled, the primary's path is contended, and a live
+    /// alternative host is strictly less slowed — ties keep the primary
+    /// (its copy is the one with uninterrupted latency history).
+    pub fn route(
+        &mut self,
+        hosts: &[usize],
+        alive: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        if !self.policy.enabled || hosts.len() < 2 {
+            return None;
+        }
+        let primary = hosts[0];
+        if !self.contended(primary) {
+            return None;
+        }
+        let best = hosts
+            .iter()
+            .copied()
+            .filter(|&w| alive(w))
+            .min_by(|&a, &b| self.slowdown(a).total_cmp(&self.slowdown(b)))?;
+        if best != primary && self.slowdown(best) < self.slowdown(primary) {
+            self.reroutes += 1;
+            Some(best)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> LinkPlanPolicy {
+        LinkPlanPolicy { min_observations: 2, ..LinkPlanPolicy::default() }
+    }
+
+    #[test]
+    fn rejects_invalid_policy() {
+        let bad = LinkPlanPolicy { alpha: 0.0, ..LinkPlanPolicy::default() };
+        assert!(LinkPlanner::new(bad, 3).is_err());
+        let bad = LinkPlanPolicy { slowdown_threshold: 0.5, ..LinkPlanPolicy::default() };
+        assert!(LinkPlanner::new(bad, 3).is_err());
+    }
+
+    #[test]
+    fn healthy_paths_never_reroute() {
+        let mut p = LinkPlanner::new(policy(), 3).unwrap();
+        for _ in 0..10 {
+            p.observe(0, 1.0, 1.0); // observed == predicted, the healthy case
+            p.observe(1, 2.0, 2.0);
+        }
+        assert!(!p.contended(0));
+        assert_eq!(p.route(&[0, 1], |_| true), None);
+        assert_eq!(p.reroutes(), 0);
+    }
+
+    #[test]
+    fn contended_primary_routes_to_least_slowed_live_host() {
+        let mut p = LinkPlanner::new(policy(), 3).unwrap();
+        for _ in 0..4 {
+            p.observe(0, 1.0, 3.0); // primary path 3x slower than predicted
+            p.observe(1, 1.0, 2.5); // standby 1: also bad
+            p.observe(2, 1.0, 1.0); // standby 2: clean
+        }
+        assert!(p.contended(0));
+        assert_eq!(p.route(&[0, 1, 2], |_| true), Some(2));
+        assert_eq!(p.reroutes(), 1);
+        // the clean host dead → the 2.5x host is still strictly better
+        assert_eq!(p.route(&[0, 1, 2], |w| w != 2), Some(1));
+        // every alternative as bad as the primary → keep the primary
+        let mut q = LinkPlanner::new(policy(), 2).unwrap();
+        for _ in 0..4 {
+            q.observe(0, 1.0, 3.0);
+            q.observe(1, 1.0, 3.0);
+        }
+        assert_eq!(q.route(&[0, 1], |_| true), None);
+    }
+
+    #[test]
+    fn cold_hosts_read_as_unit_slowdown() {
+        let mut p = LinkPlanner::new(policy(), 2).unwrap();
+        p.observe(0, 1.0, 5.0); // one observation < min_observations
+        assert!((p.slowdown(0) - 1.0).abs() < 1e-12);
+        assert!(!p.contended(0));
+        p.observe(0, 1.0, 5.0);
+        assert!(p.slowdown(0) > 1.0);
+        assert!(p.contended(0));
+    }
+
+    #[test]
+    fn disabled_planner_observes_but_never_routes() {
+        let pol = LinkPlanPolicy { enabled: false, min_observations: 1, ..policy() };
+        let mut p = LinkPlanner::new(pol, 2).unwrap();
+        for _ in 0..4 {
+            p.observe(0, 1.0, 10.0);
+            p.observe(1, 1.0, 1.0);
+        }
+        assert!(p.contended(0)); // the view is still live for callers
+        assert_eq!(p.route(&[0, 1], |_| true), None);
+    }
+}

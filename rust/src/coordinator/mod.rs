@@ -50,9 +50,18 @@
 //! [`EnergyBudgetSignal`] (joules-per-batch against per-member budgets)
 //! drive the same per-member ladder from forecasts and energy instead of
 //! the rolling p95.
+//!
+//! Runtime link re-planning (ISSUE 6): the leader also keeps a per-device
+//! EWMA of observed-vs-predicted arrival slowdown ([`LinkPlanner`]). When
+//! a member runs a single copy (standbys elided), that copy is dispatched
+//! to the member's least-slowed live host instead of blindly to the
+//! primary, routing its one feature transfer around a contended uplink —
+//! the network-path twin of the device routing above. Reroutes surface in
+//! [`FaultMetrics::link_reroutes`].
 
 pub mod batcher;
 pub mod health;
+pub mod linkplan;
 pub mod scheduler;
 
 use std::collections::VecDeque;
@@ -74,6 +83,7 @@ use crate::runtime::ExecHandle;
 use crate::Result;
 pub use batcher::{Batch, Batcher, BatcherConfig, IntakePressure};
 pub use health::{DeviceHealth, HealthState};
+pub use linkplan::LinkPlanner;
 pub use scheduler::{
     EnergyBudgetSignal, EwmaLatencySignal, MemberPressure, MemberView, PredictiveSignal,
     PressureContext, PressureSignal, QueueP95Signal, ReplicaMode, ReplicaScheduler,
@@ -312,6 +322,9 @@ struct Pending {
     rx: mpsc::Receiver<WorkerReply>,
     /// Virtual deadline for this worker's features (predicted × factor).
     deadline_s: f64,
+    /// Raw predicted arrival (no deadline factor) — the denominator of the
+    /// link planner's observed-vs-predicted slowdown ratio (ISSUE 6).
+    predicted_s: f64,
 }
 
 /// The leader. Construct with [`ServeBuilder`], submit via the handle,
@@ -580,6 +593,7 @@ impl ServeBuilder {
         let central = topo.central;
         let n_members = members.len();
         let scheduler = ReplicaScheduler::new(config.replication.elision.clone(), n_members);
+        let linkplan = LinkPlanner::new(config.linkplan, n_devices)?;
         let mut fault = FaultMetrics::default();
         fault.init_members(n_members);
         let leader = Leader {
@@ -606,6 +620,7 @@ impl ServeBuilder {
             smoothed_headroom: 1.0,
             intake_cap: chan_cap,
             signal,
+            linkplan,
         };
         let join = std::thread::Builder::new()
             .name("coformer-leader".into())
@@ -687,6 +702,9 @@ struct Leader {
     intake_cap: usize,
     /// Pluggable per-member pressure reading (default [`QueueP95Signal`]).
     signal: Box<dyn PressureSignal>,
+    /// Runtime link re-planner (ISSUE 6): per-device slowdown EWMAs that
+    /// route an elided member's single copy around a contended uplink.
+    linkplan: LinkPlanner,
 }
 
 /// Batches of virtual latency kept for the p95 pressure signal.
@@ -826,6 +844,53 @@ impl Leader {
         self.batch_idx += 1;
         self.ensure_central_alive();
 
+        // Per-member standby gating (ISSUE 3 / ISSUE 5): each member's
+        // replica mode was set by `observe_pressure` from its own pressure
+        // reading; under Partial/Elided a member's standbys execute only
+        // when *its* machine says so — and always when its primary is
+        // Degraded or Dead (instant fallback). Elided standby compute is
+        // accounted per member as saved GFLOPS and saved joules (below,
+        // once the energy ledger is in).
+        let shadow = self.config.replication.elision.shadow_promoted_batches;
+        let mut standbys_run = vec![true; self.members.len()];
+        let mut fallbacks = 0usize;
+        for m in 0..self.members.len() {
+            let hosts = &self.assignments[m];
+            if hosts.len() < 2 {
+                continue; // no standby to gate
+            }
+            let pstate = self.health[hosts[0]].state();
+            let recently_promoted =
+                self.promoted_at[m].is_some_and(|b| bidx.saturating_sub(b) < shadow);
+            let run = self.scheduler.standby_executes(m, pstate, recently_promoted);
+            standbys_run[m] = run;
+            if run && self.scheduler.is_fallback(m, pstate) {
+                fallbacks += 1;
+            }
+        }
+        self.fault.standby_fallbacks += fallbacks;
+
+        // Runtime link re-planning (ISSUE 6): each member's effective host
+        // order for this batch. When a member runs a single copy (standbys
+        // elided) and the planner's slowdown EWMA flags the primary's path
+        // contended, the member's least-slowed live host leads the order
+        // instead, so the one feature transfer routes around the contended
+        // uplink the way `ReplicaScheduler` routes around a slow device.
+        // Replicated members keep their order: every copy dispatches and
+        // first-arrival-wins dedup already prefers the uncontended path.
+        let mut order: Vec<Vec<usize>> = self.assignments.clone();
+        for (m, hosts) in order.iter_mut().enumerate() {
+            if standbys_run[m] {
+                continue;
+            }
+            let txs = &self.worker_txs;
+            if let Some(w) = self.linkplan.route(hosts, |w| txs[w].is_some()) {
+                hosts.retain(|&h| h != w);
+                hosts.insert(0, w);
+                self.fault.link_reroutes += 1;
+            }
+        }
+
         // Per-member energy table for this batch, one analytic pass: the
         // busy (compute + transfer) energy of every live copy — the
         // excess-power × busy-time model the workers integrate. The full
@@ -835,12 +900,12 @@ impl Leader {
         // denominator, the control signal must not read its own actuator
         // (a view of dispatched-only copies would halve on elision, and
         // an energy budget between the two levels would flap the mode).
-        // The standby share (full − primary) is what an elided member
+        // The standby share (full − leading copy) is what an elided member
         // banks in the savings ledger.
         let mut member_energy_j = vec![0.0f64; self.members.len()];
         let mut member_standby_energy_j = vec![0.0f64; self.members.len()];
         for (m, ctx) in self.members.iter().enumerate() {
-            for (hi, &w) in self.assignments[m].iter().enumerate() {
+            for (hi, &w) in order[m].iter().enumerate() {
                 if self.worker_txs[w].is_none() {
                     continue;
                 }
@@ -861,54 +926,37 @@ impl Leader {
             }
         }
 
-        // Per-member standby gating (ISSUE 3 / ISSUE 5): each member's
-        // replica mode was set by `observe_pressure` from its own pressure
-        // reading; under Partial/Elided a member's standbys execute only
-        // when *its* machine says so — and always when its primary is
-        // Degraded or Dead (instant fallback). Elided standby compute is
-        // accounted per member as saved GFLOPS and saved joules.
-        let shadow = self.config.replication.elision.shadow_promoted_batches;
-        let mut standbys_run = vec![true; self.members.len()];
-        let mut fallbacks = 0usize;
+        // Elision savings ledger: GFLOPS and joules the undispatched
+        // copies would have spent this batch.
         for m in 0..self.members.len() {
-            let hosts = &self.assignments[m];
-            if hosts.len() < 2 {
-                continue; // no standby to gate
+            if standbys_run[m] {
+                continue;
             }
-            let pstate = self.health[hosts[0]].state();
-            let recently_promoted =
-                self.promoted_at[m].is_some_and(|b| bidx.saturating_sub(b) < shadow);
-            let run = self.scheduler.standby_executes(m, pstate, recently_promoted);
-            standbys_run[m] = run;
-            if !run {
-                let live_standbys =
-                    hosts[1..].iter().filter(|&&w| self.worker_txs[w].is_some()).count();
-                let saved_gflops = self.members[m].flops_per_sample * n as f64
-                    * live_standbys as f64
-                    / 1e9;
-                let saved_j = member_standby_energy_j[m];
-                self.fault.standby_gflops_saved += saved_gflops;
-                self.fault.standby_energy_saved_j += saved_j;
-                self.fault.member_modes[m].standby_gflops_saved += saved_gflops;
-                self.fault.member_modes[m].standby_energy_saved_j += saved_j;
-            } else if self.scheduler.is_fallback(m, pstate) {
-                fallbacks += 1;
-            }
+            let live_standbys =
+                order[m][1..].iter().filter(|&&w| self.worker_txs[w].is_some()).count();
+            let saved_gflops =
+                self.members[m].flops_per_sample * n as f64 * live_standbys as f64 / 1e9;
+            let saved_j = member_standby_energy_j[m];
+            self.fault.standby_gflops_saved += saved_gflops;
+            self.fault.standby_energy_saved_j += saved_j;
+            self.fault.member_modes[m].standby_gflops_saved += saved_gflops;
+            self.fault.member_modes[m].standby_energy_saved_j += saved_j;
         }
-        self.fault.standby_fallbacks += fallbacks;
 
-        // Build per-device task lists from the current assignments: the
-        // primary always runs; standbys run when this batch's per-member
-        // mode keeps them (Dead devices hold no assignments once
-        // promotion / re-dispatch has run).
+        // Build per-device task lists from the effective host order: the
+        // leading copy always runs; the rest run when this batch's
+        // per-member mode keeps them (Dead devices hold no assignments
+        // once promotion / re-dispatch has run).
         let mut task_lists: Vec<Vec<MemberTask>> =
             (0..self.devices.len()).map(|_| Vec::new()).collect();
-        // primary snapshot for this batch: replica-hit accounting must not
-        // shift when a mid-batch death promotes a standby
+        // leading-copy snapshot for this batch: replica-hit accounting must
+        // not shift when a mid-batch death promotes a standby; a rerouted
+        // member's snapshot follows the routed host (it IS the one copy
+        // dispatched, so its arrival is the member's latency observation)
         let primary: Vec<Option<usize>> =
-            self.assignments.iter().map(|hosts| hosts.first().copied()).collect();
+            order.iter().map(|hosts| hosts.first().copied()).collect();
         for (m, ctx) in self.members.iter().enumerate() {
-            for (hi, &w) in self.assignments[m].iter().enumerate() {
+            for (hi, &w) in order[m].iter().enumerate() {
                 if hi > 0 && !standbys_run[m] {
                     continue; // elided this batch
                 }
@@ -930,7 +978,8 @@ impl Leader {
             if tasks.is_empty() {
                 continue;
             }
-            let deadline_s = self.deadline_s(w, &tasks, n);
+            let predicted_s = self.predicted_arrive_s(w, &tasks, n);
+            let deadline_s = self.deadline_s(w, predicted_s);
             let (rtx, rrx) = mpsc::sync_channel(1);
             let job = WorkerJob {
                 batch_idx: bidx,
@@ -944,7 +993,7 @@ impl Leader {
                 None => false,
             };
             if sent {
-                pending.push(Pending { worker: w, rx: rrx, deadline_s });
+                pending.push(Pending { worker: w, rx: rrx, deadline_s, predicted_s });
             } else {
                 send_failures.push(w);
             }
@@ -974,6 +1023,12 @@ impl Leader {
                 Ok(WorkerReply::Done(r)) => {
                     energy_j += r.energy_j;
                     worker_arrive_s[p.worker] = Some(r.arrive_s);
+                    // feed the link planner's slowdown EWMA (ISSUE 6); the
+                    // central node never transfers, so its arrival says
+                    // nothing about a network path
+                    if p.worker != self.central {
+                        self.linkplan.observe(p.worker, p.predicted_s, r.arrive_s);
+                    }
                     self.fault.exec_failures += r.exec_errors.len();
                     for e in &r.exec_errors {
                         eprintln!(
@@ -1177,16 +1232,16 @@ impl Leader {
         t
     }
 
-    /// Per-batch deadline for device `w` (Degraded devices get extra slack).
-    fn deadline_s(&self, w: usize, tasks: &[MemberTask], rows: usize) -> f64 {
+    /// Per-batch deadline for device `w` given its predicted arrival
+    /// (Degraded devices get extra slack).
+    fn deadline_s(&self, w: usize, predicted_s: f64) -> f64 {
         let f = &self.config.fault;
         let slack = if self.health[w].state() == HealthState::Degraded {
             f.degraded_slack
         } else {
             1.0
         };
-        self.predicted_arrive_s(w, tasks, rows) * f.deadline_factor * slack
-            + f.deadline_floor_s
+        predicted_s * f.deadline_factor * slack + f.deadline_floor_s
     }
 
     /// If the central device died, promote the strongest survivor: the

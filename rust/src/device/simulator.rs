@@ -17,6 +17,11 @@ pub enum SimError {
     OutOfMemory { device: String, need: usize, have: usize },
     /// Too few devices survived to aggregate (k-of-n serving, ISSUE 1).
     QuorumNotMet { have: usize, need: usize },
+    /// A per-device parameter list does not match the fleet (ISSUE 6: the
+    /// baseline strategies' shape checks are typed errors per the "never
+    /// assert" convention — a short list used to either panic or silently
+    /// truncate a zip).
+    ShapeMismatch { what: &'static str, expected: usize, got: usize },
 }
 
 impl std::fmt::Display for SimError {
@@ -31,6 +36,10 @@ impl std::fmt::Display for SimError {
             SimError::QuorumNotMet { have, need } => {
                 write!(f, "quorum not met: {have} devices alive, need {need}")
             }
+            SimError::ShapeMismatch { what, expected, got } => write!(
+                f,
+                "{what} length {got} does not match the {expected}-device fleet"
+            ),
         }
     }
 }

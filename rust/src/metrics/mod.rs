@@ -167,6 +167,10 @@ pub struct FaultMetrics {
     /// unhealthy-primary fallback overrode the mode (one count per member
     /// per batch) — the masking capacity elision refused to trade away.
     pub standby_fallbacks: usize,
+    /// Batches in which the link re-planner (ISSUE 6) routed a member's
+    /// single dispatched copy to a standby host because the primary's
+    /// uplink was contended (one count per member per rerouted batch).
+    pub link_reroutes: usize,
     /// `quorum_hist[k]` = batches aggregated from exactly `k` members.
     quorum_hist: Vec<usize>,
 }

@@ -43,6 +43,13 @@ pub struct Arch {
     pub chans: usize,
     pub vocab: usize,
     pub seq_len: usize,
+    /// Layers per decoupled block (DeTransformer-style, ISSUE 6): the
+    /// layer stack is grouped into `layers / block_layers` independent
+    /// blocks whose internals never synchronize — the tensor-parallel
+    /// family syncs once per *block* boundary with proportionally smaller
+    /// payloads. 1 (the default) is the standard fully-coupled
+    /// transformer; must divide `layers`.
+    pub block_layers: usize,
 }
 
 #[allow(dead_code)]
@@ -66,6 +73,9 @@ fn default_vocab() -> usize {
 }
 fn default_seq() -> usize {
     32
+}
+fn default_block_layers() -> usize {
+    1
 }
 
 impl Arch {
@@ -94,7 +104,22 @@ impl Arch {
             chans: default_chans(),
             vocab: default_vocab(),
             seq_len: default_seq(),
+            block_layers: default_block_layers(),
         }
+    }
+
+    /// Decoupled-block variant of this arch (DeTransformer): group the
+    /// layer stack into blocks of `block_layers` whose internals never
+    /// synchronize. Validity (`block_layers` divides `layers`) is checked
+    /// by [`Arch::validate`], which every JSON load runs.
+    pub fn with_block_layers(mut self, block_layers: usize) -> Self {
+        self.block_layers = block_layers;
+        self
+    }
+
+    /// Number of decoupled blocks in the stack.
+    pub fn blocks(&self) -> usize {
+        self.layers / self.block_layers.max(1)
     }
 
     /// Content tokens (excluding the CLS token).
@@ -151,6 +176,7 @@ impl Arch {
             chans: opt("chans", default_chans())?,
             vocab: opt("vocab", default_vocab())?,
             seq_len: opt("seq_len", default_seq())?,
+            block_layers: opt("block_layers", default_block_layers())?,
         };
         a.validate()?;
         Ok(a)
@@ -172,6 +198,7 @@ impl Arch {
             ("chans", Json::num(self.chans as f64)),
             ("vocab", Json::num(self.vocab as f64)),
             ("seq_len", Json::num(self.seq_len as f64)),
+            ("block_layers", Json::num(self.block_layers as f64)),
         ])
     }
 
@@ -186,6 +213,12 @@ impl Arch {
         anyhow::ensure!(self.heads.iter().all(|&h| h >= 1), "zero heads");
         anyhow::ensure!(self.mlp_dims.iter().all(|&d| d >= 1), "zero mlp dim");
         anyhow::ensure!(self.dim >= 1 && self.head_dim >= 1, "zero dims");
+        anyhow::ensure!(
+            self.block_layers >= 1 && self.layers % self.block_layers == 0,
+            "block_layers {} must be >= 1 and divide layers {}",
+            self.block_layers,
+            self.layers
+        );
         if self.task == TaskKind::Cls {
             anyhow::ensure!(
                 self.tokens() % self.groups == 0,
@@ -310,6 +343,21 @@ mod tests {
         assert_eq!(a.mode, Mode::Patch);
         let b = Arch::from_json(&a.to_json()).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn decoupled_blocks_validated_and_counted() {
+        let a = base().with_block_layers(2); // 4 layers → 2 blocks
+        a.validate().unwrap();
+        assert_eq!(a.blocks(), 2);
+        assert_eq!(base().blocks(), 4, "coupled default: one block per layer");
+        // block size must divide the stack; zero is rejected outright
+        assert!(base().with_block_layers(3).validate().is_err());
+        assert!(base().with_block_layers(0).validate().is_err());
+        // the decoupled form round-trips through the manifest JSON
+        let b = Arch::from_json(&a.to_json()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.block_layers, 2);
     }
 
     #[test]

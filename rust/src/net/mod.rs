@@ -4,6 +4,53 @@
 //! cap bandwidth (2 Mb/s for the motivation study, 100 Mb/s–1 Gb/s for the
 //! Figure-12 sweep).  The transfer-cost model is the paper's own Eq. 5:
 //! `t = |X| / r` plus a per-transfer latency floor.
+//!
+//! Since ISSUE 6 links are first-class simulated resources rather than
+//! stateless lookups: a link can be lossy (`loss` retransmission overhead),
+//! links can be reshaped per-link (asymmetric fleets) or degraded fleet-wide,
+//! every mutation is validated ([`NetError`] — never a silent `inf`), and a
+//! [`LinkSchedule`] tracks per-link busy timelines so the overlap-aware
+//! timeline engine can serialize concurrent transfers on a shared uplink
+//! while the device keeps computing.
+
+use std::fmt;
+
+/// Typed error from topology/link mutation — the net-layer analog of
+/// `ScenarioError`: invalid reshapes are reported as data, never written
+/// into the fabric (an unchecked `0.0` Mb/s silently yields `inf` transfer
+/// times downstream).
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetError {
+    /// A bandwidth must be finite and > 0 Mb/s.
+    InvalidBandwidth { mbps: f64 },
+    /// A degradation factor must be finite and in `(0, 1]`.
+    InvalidDegradation { factor: f64 },
+    /// A loss fraction must be finite and in `[0, 1)`.
+    InvalidLoss { loss: f64 },
+    /// A per-link operation named a link the topology does not have.
+    LinkOutOfRange { link: usize, n: usize },
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::InvalidBandwidth { mbps } => {
+                write!(f, "link bandwidth {mbps} Mb/s must be finite and > 0")
+            }
+            NetError::InvalidDegradation { factor } => {
+                write!(f, "bandwidth degradation factor {factor} must be finite and in (0, 1]")
+            }
+            NetError::InvalidLoss { loss } => {
+                write!(f, "link loss fraction {loss} must be finite and in [0, 1)")
+            }
+            NetError::LinkOutOfRange { link, n } => {
+                write!(f, "link index {link} is out of range for {n} links")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
 
 /// A point-to-point link (device → central node through the switch).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -12,13 +59,17 @@ pub struct Link {
     pub bandwidth_bps: f64,
     /// One-way latency floor, seconds (switch + stack).
     pub latency_s: f64,
+    /// Packet-loss fraction in `[0, 1)`: lost payload is retransmitted, so
+    /// the effective goodput is `bandwidth × (1 − loss)`. 0 (the default)
+    /// is the paper's clean switched fabric.
+    pub loss: f64,
 }
 
 impl Link {
     pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
         assert!(bandwidth_bps > 0.0);
         assert!(latency_s >= 0.0);
-        Link { bandwidth_bps, latency_s }
+        Link { bandwidth_bps, latency_s, loss: 0.0 }
     }
 
     /// Mb/s convenience constructor (the unit the paper quotes).
@@ -26,9 +77,25 @@ impl Link {
         Link::new(mb * 1e6, 1e-3)
     }
 
-    /// Paper Eq. 5: transfer time for `bytes`.
+    /// Lossy variant of this link; the loss fraction is validated, not
+    /// clamped.
+    pub fn with_loss(mut self, loss: f64) -> Result<Self, NetError> {
+        if !loss.is_finite() || !(0.0..1.0).contains(&loss) {
+            return Err(NetError::InvalidLoss { loss });
+        }
+        self.loss = loss;
+        Ok(self)
+    }
+
+    /// Paper Eq. 5: transfer time for `bytes` (plus retransmission overhead
+    /// on a lossy link). The `loss == 0` path is bit-identical to the
+    /// pre-ISSUE-6 formula.
     pub fn transfer_time_s(&self, bytes: usize) -> f64 {
-        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+        if self.loss > 0.0 {
+            self.latency_s + (bytes as f64 * 8.0) / (self.bandwidth_bps * (1.0 - self.loss))
+        } else {
+            self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+        }
     }
 }
 
@@ -68,15 +135,128 @@ impl Topology {
             .max(self.links[b].transfer_time_s(bytes))
     }
 
-    /// `tc`-style reshaping of every link (the Figure-12 sweep).
-    pub fn set_bandwidth_mbps(&mut self, mb: f64) {
+    /// `tc`-style reshaping of every link (the Figure-12 sweep). Rejects
+    /// non-finite / non-positive rates instead of silently writing an
+    /// `inf`-transfer fabric (callers outside `ScenarioBuilder::build` used
+    /// to bypass its validation entirely).
+    pub fn set_bandwidth_mbps(&mut self, mb: f64) -> Result<(), NetError> {
+        if !mb.is_finite() || mb <= 0.0 {
+            return Err(NetError::InvalidBandwidth { mbps: mb });
+        }
         for l in &mut self.links {
             l.bandwidth_bps = mb * 1e6;
         }
+        Ok(())
+    }
+
+    /// Reshape one link (asymmetric fleets: a cellular straggler on an
+    /// otherwise wired star).
+    pub fn set_link_bandwidth_mbps(&mut self, link: usize, mb: f64) -> Result<(), NetError> {
+        if link >= self.links.len() {
+            return Err(NetError::LinkOutOfRange { link, n: self.links.len() });
+        }
+        if !mb.is_finite() || mb <= 0.0 {
+            return Err(NetError::InvalidBandwidth { mbps: mb });
+        }
+        self.links[link].bandwidth_bps = mb * 1e6;
+        Ok(())
+    }
+
+    /// Degrade every link to `factor` of its current bandwidth (the
+    /// bandwidth-degradation sweep axis); `factor == 1` is a no-op.
+    pub fn degrade_bandwidth(&mut self, factor: f64) -> Result<(), NetError> {
+        if !factor.is_finite() || factor <= 0.0 || factor > 1.0 {
+            return Err(NetError::InvalidDegradation { factor });
+        }
+        for l in &mut self.links {
+            l.bandwidth_bps *= factor;
+        }
+        Ok(())
     }
 
     pub fn n_devices(&self) -> usize {
         self.links.len()
+    }
+}
+
+/// One reserved transfer window on a link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Transfer {
+    /// When the payload starts occupying the link, seconds.
+    pub start_s: f64,
+    /// When the last bit lands, seconds.
+    pub end_s: f64,
+}
+
+impl Transfer {
+    /// Link occupancy, seconds.
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Per-link busy timelines — the event-driven engine's view of the fabric.
+///
+/// Each link serializes its own transfers: a reservation starts at
+/// `max(ready, link free)` and holds the link until the payload lands, so
+/// two members hosted on one device contend for that device's uplink while
+/// the device's compute clock keeps running. This is what makes
+/// communication/computation overlap (Galaxy's tile overlap, DeTransformer's
+/// block pipelining) expressible at all: the pre-ISSUE-6 model charged
+/// transfers to the device's own clock, structurally serializing them.
+#[derive(Clone, Debug)]
+pub struct LinkSchedule {
+    free_at: Vec<f64>,
+}
+
+impl LinkSchedule {
+    /// All links idle at t = 0.
+    pub fn new(topo: &Topology) -> Self {
+        LinkSchedule { free_at: vec![0.0; topo.n_devices()] }
+    }
+
+    /// Earliest time link `link` is free.
+    pub fn free_at(&self, link: usize) -> f64 {
+        self.free_at.get(link).copied().unwrap_or(0.0)
+    }
+
+    /// Reserve the earliest slot for `bytes` on device `from`'s uplink at
+    /// or after `ready_s`. A transfer from the central device to itself
+    /// never touches the network: the window is `[ready, ready]`.
+    pub fn reserve(
+        &mut self,
+        topo: &Topology,
+        from: usize,
+        ready_s: f64,
+        bytes: usize,
+    ) -> Result<Transfer, NetError> {
+        if from >= self.free_at.len() {
+            return Err(NetError::LinkOutOfRange { link: from, n: self.free_at.len() });
+        }
+        if from == topo.central {
+            return Ok(Transfer { start_s: ready_s, end_s: ready_s });
+        }
+        let t = topo.links[from].transfer_time_s(bytes);
+        self.reserve_for(from, ready_s, t)
+    }
+
+    /// Reserve the earliest slot on `link` at or after `ready_s` for a
+    /// transfer of a known duration — for callers whose cost model is not
+    /// a plain uplink send (e.g. tensor-parallel all-gather rounds priced
+    /// at the slower of two hops).
+    pub fn reserve_for(
+        &mut self,
+        link: usize,
+        ready_s: f64,
+        duration_s: f64,
+    ) -> Result<Transfer, NetError> {
+        if link >= self.free_at.len() {
+            return Err(NetError::LinkOutOfRange { link, n: self.free_at.len() });
+        }
+        let start_s = ready_s.max(self.free_at[link]);
+        let end_s = start_s + duration_s;
+        self.free_at[link] = end_s;
+        Ok(Transfer { start_s, end_s })
     }
 }
 
@@ -115,11 +295,77 @@ mod tests {
         // Fig 12: higher bandwidth → lower transfer time
         let mut t = Topology::star(3, Link::mbps(100.0), 0);
         let t100 = t.to_central_s(1, 1 << 20);
-        t.set_bandwidth_mbps(500.0);
+        t.set_bandwidth_mbps(500.0).unwrap();
         let t500 = t.to_central_s(1, 1 << 20);
-        t.set_bandwidth_mbps(1000.0);
+        t.set_bandwidth_mbps(1000.0).unwrap();
         let t1g = t.to_central_s(1, 1 << 20);
         assert!(t100 > t500 && t500 > t1g);
+    }
+
+    #[test]
+    fn set_bandwidth_rejects_degenerate_rates() {
+        // regression (ISSUE 6): the setter used to write bandwidth_bps
+        // unvalidated — 0, negative or non-finite Mb/s became inf/negative
+        // transfer times for every caller outside ScenarioBuilder::build
+        let mut t = Topology::star(3, Link::mbps(100.0), 0);
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = t.set_bandwidth_mbps(bad).unwrap_err();
+            assert!(matches!(err, NetError::InvalidBandwidth { .. }), "{bad} accepted");
+        }
+        // the fabric is untouched after every rejection
+        assert_eq!(t.links[0].bandwidth_bps, 100.0 * 1e6);
+        assert!(t.to_central_s(1, 1 << 20).is_finite());
+    }
+
+    #[test]
+    fn per_link_reshape_is_asymmetric_and_validated() {
+        let mut t = Topology::star(3, Link::mbps(100.0), 0);
+        t.set_link_bandwidth_mbps(2, 2.0).unwrap();
+        assert!(t.to_central_s(2, 1 << 20) > t.to_central_s(1, 1 << 20));
+        assert_eq!(
+            t.set_link_bandwidth_mbps(3, 10.0),
+            Err(NetError::LinkOutOfRange { link: 3, n: 3 })
+        );
+        assert_eq!(
+            t.set_link_bandwidth_mbps(0, -1.0),
+            Err(NetError::InvalidBandwidth { mbps: -1.0 })
+        );
+    }
+
+    #[test]
+    fn degradation_scales_and_validates() {
+        let mut t = Topology::star(2, Link::mbps(100.0), 0);
+        let before = t.to_central_s(1, 1 << 20);
+        t.degrade_bandwidth(0.5).unwrap();
+        assert!((t.links[1].bandwidth_bps - 50e6).abs() < 1e-3);
+        assert!(t.to_central_s(1, 1 << 20) > before);
+        for bad in [0.0, -0.5, 1.5, f64::NAN] {
+            assert!(matches!(
+                t.degrade_bandwidth(bad),
+                Err(NetError::InvalidDegradation { .. })
+            ));
+        }
+    }
+
+    #[test]
+    fn lossy_link_slower_and_validated() {
+        let clean = Link::mbps(10.0);
+        let lossy = Link::mbps(10.0).with_loss(0.5).unwrap();
+        let b = 1 << 20;
+        assert!(lossy.transfer_time_s(b) > clean.transfer_time_s(b));
+        // 50% loss halves goodput: payload time doubles
+        let clean_payload = clean.transfer_time_s(b) - clean.latency_s;
+        let lossy_payload = lossy.transfer_time_s(b) - lossy.latency_s;
+        assert!((lossy_payload - 2.0 * clean_payload).abs() < 1e-9);
+        for bad in [1.0, -0.1, 2.0, f64::NAN] {
+            assert!(matches!(
+                Link::mbps(10.0).with_loss(bad),
+                Err(NetError::InvalidLoss { .. })
+            ));
+        }
+        // loss = 0 keeps the exact pre-ISSUE-6 arithmetic
+        let zero = Link::mbps(10.0).with_loss(0.0).unwrap();
+        assert_eq!(zero.transfer_time_s(b).to_bits(), clean.transfer_time_s(b).to_bits());
     }
 
     #[test]
@@ -135,6 +381,37 @@ mod tests {
         t.links[1] = Link::mbps(1.0);
         let slow = t.links[1].transfer_time_s(1 << 20);
         assert_eq!(t.between_s(0, 1, 1 << 20), slow);
+    }
+
+    #[test]
+    fn link_schedule_serializes_one_uplink() {
+        let topo = Topology::star(3, Link::mbps(10.0), 1);
+        let mut sched = LinkSchedule::new(&topo);
+        let a = sched.reserve(&topo, 0, 0.0, 1 << 20).unwrap();
+        // second payload is ready at t = 0 too, but the uplink is busy:
+        // it queues behind the first instead of teleporting in parallel
+        let b = sched.reserve(&topo, 0, 0.0, 1 << 20).unwrap();
+        assert_eq!(b.start_s, a.end_s);
+        assert!((b.duration_s() - a.duration_s()).abs() < 1e-15);
+        // a later-ready payload starts at its readiness, not at link-free
+        let c = sched.reserve(&topo, 0, b.end_s + 1.0, 64).unwrap();
+        assert_eq!(c.start_s, b.end_s + 1.0);
+        // a different device's uplink is independent
+        let d = sched.reserve(&topo, 2, 0.0, 1 << 20).unwrap();
+        assert_eq!(d.start_s, 0.0);
+    }
+
+    #[test]
+    fn link_schedule_central_window_is_free() {
+        let topo = Topology::star(3, Link::mbps(10.0), 1);
+        let mut sched = LinkSchedule::new(&topo);
+        let t = sched.reserve(&topo, 1, 2.5, 1 << 30).unwrap();
+        assert_eq!(t.start_s, 2.5);
+        assert_eq!(t.end_s, 2.5);
+        assert_eq!(
+            sched.reserve(&topo, 9, 0.0, 1),
+            Err(NetError::LinkOutOfRange { link: 9, n: 3 })
+        );
     }
 
     #[test]

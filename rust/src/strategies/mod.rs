@@ -42,7 +42,7 @@ pub mod sweep;
 
 use crate::device::{DeviceProfile, SimDevice, SimError};
 use crate::model::CostModel;
-use crate::net::Topology;
+use crate::net::{LinkSchedule, Topology, Transfer};
 
 pub use scenario::{
     DispatchMode, Outcome, ReplicationOutcome, Scenario, ScenarioBuilder, ScenarioError,
@@ -110,6 +110,18 @@ impl StrategyOutcome {
     pub fn peak_memory_bytes(&self) -> usize {
         self.devices.iter().map(|d| d.memory_bytes).max().unwrap_or(0)
     }
+}
+
+/// Uplink occupancy that extends past a device's pure-compute span. Under
+/// the overlap engine only this tail adds wall-clock busy time — the rest
+/// of the occupancy runs concurrently with compute. Windows on one uplink
+/// never overlap each other ([`LinkSchedule`] serializes them), so the sum
+/// is exact.
+fn transmit_overflow(compute_end_s: f64, windows: &[Transfer]) -> f64 {
+    windows
+        .iter()
+        .map(|t| (t.end_s - t.start_s.max(compute_end_s)).max(0.0))
+        .sum()
 }
 
 fn finish(devs: Vec<SimDevice>, name: &str, total_s: f64, mems: &[usize], comm_rounds: usize) -> StrategyOutcome {
@@ -196,14 +208,28 @@ pub(crate) fn run_elastic_scenario(s: &Scenario) -> Result<ElasticOutcome, SimEr
     };
     let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
     let mut mems = vec![0usize; n];
-    // memory admission: a host loads every copy it runs (replication's
-    // memory tax — an adopting device can OOM exactly like Fig. 9)
-    for (m, hs) in hosts.iter().enumerate() {
-        for &w in hs {
-            let bytes = CostModel::memory_bytes(&archs[m], batch);
+    // memory admission: every live ring copy stays resident whatever the
+    // dispatch mode — the coordinator keeps elided standbys warm (that is
+    // what makes one-batch promotion possible), so the sim charging only
+    // the copies that *run* under-reported peak memory exactly when
+    // elision was on (ISSUE 6). An adopting device can OOM like Fig. 9.
+    for m in 0..n {
+        let bytes = CostModel::memory_bytes(&archs[m], batch);
+        for w in (0..replicas).map(|h| (m + h) % n).filter(|&w| alive[w]) {
             devs[w].load_model(bytes)?;
             mems[w] += bytes;
         }
+    }
+    if s.overlap {
+        let outcome = run_elastic_overlapped(s, &hosts, central, devs, &mems)?;
+        let copies_run = hosts.iter().map(|h| h.len()).sum();
+        return Ok(ElasticOutcome {
+            outcome,
+            quorum,
+            central,
+            copies_run,
+            standby_gflops_saved: elided_standby_gflops(s),
+        });
     }
     let mut transmit = vec![0.0f64; n];
     let mut slowest = 0.0f64;
@@ -238,32 +264,134 @@ pub(crate) fn run_elastic_scenario(s: &Scenario) -> Result<ElasticOutcome, SimEr
             d.wait_until(total);
         }
     }
-    let name = if s.elide_mask.is_some() {
-        "coformer-elastic-permember"
-    } else if s.dispatch == DispatchMode::Elided {
-        "coformer-elastic-elided"
-    } else {
-        "coformer-elastic-full"
-    };
-    let mut out = finish(devs, name, total, &mems, 1);
+    let mut out = finish(devs, elastic_name(s), total, &mems, 1);
     for (w, t) in transmit.iter().enumerate() {
         out.devices[w].transmit_s = *t;
         out.devices[w].compute_s -= *t;
     }
     let copies_run = hosts.iter().map(|h| h.len()).sum();
-    // each elided member banks its own live ring standbys (ISSUE 5)
-    let standby_gflops_saved = (0..n)
+    Ok(ElasticOutcome {
+        outcome: out,
+        quorum,
+        central,
+        copies_run,
+        standby_gflops_saved: elided_standby_gflops(s),
+    })
+}
+
+fn elastic_name(s: &Scenario) -> &'static str {
+    if s.elide_mask.is_some() {
+        "coformer-elastic-permember"
+    } else if s.dispatch == DispatchMode::Elided {
+        "coformer-elastic-elided"
+    } else {
+        "coformer-elastic-full"
+    }
+}
+
+/// Each elided member banks its own live ring standbys (ISSUE 5), GFLOPs.
+fn elided_standby_gflops(s: &Scenario) -> f64 {
+    let n = s.fleet.len();
+    (0..n)
         .filter(|&m| s.member_elided(m))
         .map(|m| {
             let ring_alive =
-                (0..replicas).map(|h| (m + h) % n).filter(|&w| alive[w]).count();
-            CostModel::flops_per_sample(&archs[m])
-                * batch as f64
+                (0..s.replicas).map(|h| (m + h) % n).filter(|&w| s.alive[w]).count();
+            CostModel::flops_per_sample(&s.archs[m])
+                * s.batch as f64
                 * ring_alive.saturating_sub(1) as f64
                 / 1e9
         })
-        .sum();
-    Ok(ElasticOutcome { outcome: out, quorum, central, copies_run, standby_gflops_saved })
+        .sum()
+}
+
+/// The event-driven overlapped elastic timeline (ISSUE 6): each host runs
+/// its member task list back-to-back on its compute clock and hands every
+/// finished member's features to its uplink as soon as they exist —
+/// [`LinkSchedule`] serializes contending payloads per link while the
+/// device keeps computing, which is exactly the compute/transfer overlap
+/// the serialized Eq. 5/6 timeline structurally forbids. A member lands at
+/// the aggregation host when its transfer window closes; aggregation
+/// starts at the last arrival. Busy accounting charges compute plus only
+/// the uplink occupancy that runs *past* the host's compute span (the
+/// radio active concurrently with compute draws busy power once), so
+/// `compute_s + transmit_s` may exceed wall-clock — that is the overlap.
+fn run_elastic_overlapped(
+    s: &Scenario,
+    hosts: &[Vec<usize>],
+    central: usize,
+    mut devs: Vec<SimDevice>,
+    mems: &[usize],
+) -> Result<StrategyOutcome, SimError> {
+    let (topo, archs) = (&s.topo, &s.archs);
+    let (batch, alive) = (s.batch, &s.alive);
+    let n = s.fleet.len();
+    let mut sched = LinkSchedule::new(topo);
+    let mut transmit = vec![0.0f64; n];
+    let mut compute_end = vec![0.0f64; n];
+    let mut windows: Vec<Vec<Transfer>> = vec![Vec::new(); n];
+    let mut slowest_arrival = 0.0f64;
+    for w in 0..n {
+        if !alive[w] {
+            continue; // dead devices contribute nothing (zeroed timeline)
+        }
+        for m in 0..n {
+            if !hosts[m].contains(&w) {
+                continue;
+            }
+            devs[w].compute(CostModel::flops_per_sample(&archs[m]) * batch as f64);
+            let ready = devs[w].now();
+            let tr = if w == central {
+                // the aggregation host's own features never cross the net
+                Transfer { start_s: ready, end_s: ready }
+            } else {
+                let bytes = archs[m].feature_bytes() * batch;
+                sched
+                    .reserve(topo, w, ready, bytes)
+                    .expect("fleet indices are valid links by scenario validation")
+            };
+            transmit[w] += tr.duration_s();
+            slowest_arrival = slowest_arrival.max(tr.end_s);
+            windows[w].push(tr);
+        }
+        compute_end[w] = devs[w].now();
+    }
+    devs[central].wait_until(slowest_arrival);
+    let d_agg: usize =
+        (0..n).filter(|&m| !hosts[m].is_empty()).map(|m| archs[m].dim).sum();
+    let rows = archs[central].groups;
+    let agg_t =
+        devs[central].compute(CostModel::aggregation_flops(d_agg, s.d_i, rows) * batch as f64);
+    let total = slowest_arrival + agg_t;
+    for w in 0..n {
+        if !alive[w] {
+            continue;
+        }
+        if w != central {
+            devs[w].transmit(transmit_overflow(compute_end[w], &windows[w]));
+        }
+        devs[w].wait_until(total);
+    }
+    let devices = devs
+        .into_iter()
+        .enumerate()
+        .map(|(w, mut d)| {
+            let idle_s = d.idle_time();
+            let energy_j = d.end_inference();
+            DeviceTimeline {
+                compute_s: if w == central {
+                    compute_end[w] + agg_t
+                } else {
+                    compute_end[w]
+                },
+                transmit_s: transmit[w],
+                idle_s,
+                energy_j,
+                memory_bytes: mems.get(w).copied().unwrap_or(0),
+            }
+        })
+        .collect();
+    Ok(StrategyOutcome { name: elastic_name(s).into(), total_s: total, devices, comm_rounds: 1 })
 }
 
 /// One pipeline segment: compute + activation payload to the next stage.
@@ -276,18 +404,33 @@ pub struct Segment {
 
 /// Pipe-edge core (Fig. 2a / EdgeShard): segments execute sequentially,
 /// each device idle before its turn and after finishing.
+///
+/// With `overlap` the chain runs on the event-driven engine — each stage's
+/// activation transfer is a [`LinkSchedule`] reservation on its uplink. A
+/// single request flowing a pipeline has no transfer to hide behind later
+/// compute (stage `i+1` cannot start before stage `i`'s activations land),
+/// so both modes price the same chain; the overlapped path simply makes
+/// the links first-class (contention-aware against other traffic).
 pub(crate) fn run_pipe_edge(
     profiles: &[DeviceProfile],
     topo: &Topology,
     segments: &[Segment],
+    overlap: bool,
 ) -> Result<StrategyOutcome, SimError> {
-    assert_eq!(profiles.len(), segments.len());
+    if profiles.len() != segments.len() {
+        return Err(SimError::ShapeMismatch {
+            what: "pipeline segments",
+            expected: profiles.len(),
+            got: segments.len(),
+        });
+    }
     let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
     let mut mems = Vec::with_capacity(devs.len());
     for (d, s) in devs.iter_mut().zip(segments) {
         d.load_model(s.memory_bytes)?;
         mems.push(s.memory_bytes);
     }
+    let mut sched = overlap.then(|| LinkSchedule::new(topo));
     let mut t = 0.0f64;
     let mut transmit = vec![0.0f64; devs.len()];
     for (i, seg) in segments.iter().enumerate() {
@@ -295,8 +438,20 @@ pub(crate) fn run_pipe_edge(
         devs[i].compute(seg.flops);
         if i + 1 < segments.len() {
             let tt = topo.between_s(i, i + 1, seg.activation_bytes);
-            devs[i].transmit(tt);
-            transmit[i] = tt;
+            match sched.as_mut() {
+                Some(sched) => {
+                    let tr = sched
+                        .reserve_for(i, devs[i].now(), tt)
+                        .expect("stage indices are valid links");
+                    devs[i].wait_until(tr.start_s); // uplink busy with other traffic
+                    devs[i].transmit(tr.duration_s());
+                    transmit[i] = tr.duration_s();
+                }
+                None => {
+                    devs[i].transmit(tt);
+                    transmit[i] = tt;
+                }
+            }
         }
         t = devs[i].now();
     }
@@ -315,6 +470,15 @@ pub(crate) fn run_pipe_edge(
 /// Tensor-parallel core (Fig. 2b): each layer's work is sharded across all
 /// devices; every layer ends with `syncs_per_layer` all-gather rounds of
 /// `shard_bytes` activations.
+///
+/// With `overlap` the family runs on the event-driven engine at the
+/// Galaxy/DeTransformer decoupled bound: each device computes its layer
+/// shards back-to-back while every finished layer's all-gather payloads
+/// occupy its uplink from that layer's local compute end ([`LinkSchedule`]
+/// serializes them per link) — sync latency hides behind later-layer
+/// compute instead of gating a per-layer barrier, and the run finishes
+/// when the last shard lands or the last device finishes computing,
+/// whichever is later.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_tensor_parallel(
     name: &str,
@@ -325,6 +489,7 @@ pub(crate) fn run_tensor_parallel(
     shard_bytes: usize,
     syncs_per_layer: f64,
     memory_per_device: usize,
+    overlap: bool,
 ) -> Result<StrategyOutcome, SimError> {
     let n = profiles.len();
     let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
@@ -334,6 +499,58 @@ pub(crate) fn run_tensor_parallel(
     }
     let per_layer = total_flops / layers as f64;
     let total_syncs = (layers as f64 * syncs_per_layer).round() as usize;
+    if overlap {
+        let mut sched = LinkSchedule::new(topo);
+        let mut transmit = vec![0.0f64; n];
+        let mut windows: Vec<Vec<Transfer>> = vec![Vec::new(); n];
+        let mut total = 0.0f64;
+        for (i, d) in devs.iter_mut().enumerate() {
+            for layer in 0..layers {
+                d.compute(per_layer / n as f64);
+                let ready = d.now();
+                let n_sync = ((layer + 1) as f64 * syncs_per_layer).round() as usize
+                    - (layer as f64 * syncs_per_layer).round() as usize;
+                for _ in 0..n_sync {
+                    let tt = topo.to_central_s(i, shard_bytes).max(
+                        topo.between_s(i, (i + 1) % n, shard_bytes),
+                    );
+                    let tr = sched
+                        .reserve_for(i, ready, tt)
+                        .expect("fleet indices are valid links");
+                    transmit[i] += tr.duration_s();
+                    total = total.max(tr.end_s);
+                    windows[i].push(tr);
+                }
+            }
+            total = total.max(d.now());
+        }
+        let compute_end: Vec<f64> = devs.iter().map(|d| d.now()).collect();
+        for (i, d) in devs.iter_mut().enumerate() {
+            d.transmit(transmit_overflow(compute_end[i], &windows[i]));
+            d.wait_until(total);
+        }
+        let devices = devs
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut d)| {
+                let idle_s = d.idle_time();
+                let energy_j = d.end_inference();
+                DeviceTimeline {
+                    compute_s: compute_end[i],
+                    transmit_s: transmit[i],
+                    idle_s,
+                    energy_j,
+                    memory_bytes: mems[i],
+                }
+            })
+            .collect();
+        return Ok(StrategyOutcome {
+            name: name.into(),
+            total_s: total,
+            devices,
+            comm_rounds: total_syncs,
+        });
+    }
     let mut transmit = vec![0.0f64; n];
     let mut t = 0.0f64;
     for layer in 0..layers {
@@ -396,17 +613,48 @@ pub(crate) fn run_ensemble(
     member_flops: &[f64],
     member_memory: &[usize],
     logit_bytes: usize,
+    overlap: bool,
 ) -> Result<StrategyOutcome, SimError> {
-    assert_eq!(profiles.len(), member_flops.len());
+    if profiles.len() != member_flops.len() {
+        return Err(SimError::ShapeMismatch {
+            what: "ensemble member_flops",
+            expected: profiles.len(),
+            got: member_flops.len(),
+        });
+    }
+    // regression (ISSUE 6): member_memory used to be zipped unchecked — a
+    // short vec silently skipped load_model on the trailing devices,
+    // dodging the OOM gate and zero-filling reported memory
+    if profiles.len() != member_memory.len() {
+        return Err(SimError::ShapeMismatch {
+            what: "ensemble member_memory",
+            expected: profiles.len(),
+            got: member_memory.len(),
+        });
+    }
     let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
     let mut transmit = vec![0.0f64; devs.len()];
     for (d, &m) in devs.iter_mut().zip(member_memory) {
         d.load_model(m)?;
     }
+    // one compute + one logit send per device: the event-driven path has
+    // nothing to hide the transfer behind, so both modes price the same
+    // timeline — overlap routes it through per-link reservations
+    let mut sched = overlap.then(|| LinkSchedule::new(topo));
     let mut slowest = 0.0f64;
     for (i, (d, &f)) in devs.iter_mut().zip(member_flops).enumerate() {
         d.compute(f);
         let tt = topo.to_central_s(i, logit_bytes);
+        let tt = match sched.as_mut() {
+            Some(sched) => {
+                let tr = sched
+                    .reserve_for(i, d.now(), tt)
+                    .expect("fleet indices are valid links");
+                d.wait_until(tr.start_s);
+                tr.duration_s()
+            }
+            None => tt,
+        };
         d.transmit(tt);
         transmit[i] = tt;
         slowest = slowest.max(d.now());

@@ -195,7 +195,7 @@ impl Strategy for PipeEdge {
                 })
                 .collect(),
         };
-        super::run_pipe_edge(scenario.fleet(), scenario.topology(), &segments)
+        super::run_pipe_edge(scenario.fleet(), scenario.topology(), &segments, scenario.overlap())
             .map(Outcome::core_only)
     }
 }
@@ -260,15 +260,22 @@ impl Strategy for TensorParallel {
                 .sum::<usize>()
                 / n
         });
+        // DeTransformer decoupling (ISSUE 6): archs grouped into decoupled
+        // blocks of `block_layers` sync once per block instead of once per
+        // layer, with proportionally smaller boundary payloads.
+        // `block_layers == 1` (the default) reproduces the coupled numbers
+        // bitwise.
+        let block = scenario.archs()[0].block_layers.max(1);
         super::run_tensor_parallel(
             &self.label,
             scenario.fleet(),
             scenario.topology(),
             total_flops,
             layers,
-            shard_bytes,
-            self.syncs_per_layer,
+            shard_bytes / block,
+            self.syncs_per_layer / block as f64,
             memory_per_device,
+            scenario.overlap(),
         )
         .map(Outcome::core_only)
     }
@@ -386,6 +393,7 @@ impl Strategy for Ensemble {
             &member_flops,
             &member_memory,
             logit_bytes,
+            scenario.overlap(),
         )
         .map(Outcome::core_only)
     }

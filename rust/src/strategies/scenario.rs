@@ -59,6 +59,8 @@ pub enum ScenarioError {
     ZeroBatch,
     /// A bandwidth override must be finite and positive.
     InvalidBandwidth { mbps: f64 },
+    /// A bandwidth-degradation factor must be finite and in `(0, 1]`.
+    InvalidDegradation { factor: f64 },
     /// `replicas` must be in `[1, n]` (each copy needs a distinct device).
     InvalidReplicas { replicas: usize, n: usize },
     /// `min_quorum` must be in `[1, n]` (0 would aggregate nothing into
@@ -87,6 +89,10 @@ impl fmt::Display for ScenarioError {
             ScenarioError::InvalidBandwidth { mbps } => write!(
                 f,
                 "scenario bandwidth override {mbps} Mb/s must be finite and > 0"
+            ),
+            ScenarioError::InvalidDegradation { factor } => write!(
+                f,
+                "scenario bandwidth degradation {factor} must be finite and in (0, 1]"
             ),
             ScenarioError::InvalidReplicas { replicas, n } => write!(
                 f,
@@ -147,6 +153,12 @@ pub struct Scenario {
     /// standbys (primary only), `false` runs every live copy. `None`
     /// applies `dispatch` fleet-wide.
     pub(crate) elide_mask: Option<Vec<bool>>,
+    /// Communication/computation overlap (ISSUE 6): `true` runs the
+    /// event-driven engine where a device transmits a finished member's
+    /// features while computing its next task and transfers contend on
+    /// per-link busy timelines; `false` (the default) serializes transfer
+    /// after compute exactly as the paper's Eq. 5/6 timeline does.
+    pub(crate) overlap: bool,
 }
 
 impl Scenario {
@@ -170,7 +182,10 @@ impl Scenario {
             min_quorum: self.min_quorum,
             dispatch: self.dispatch,
             elide_mask: self.elide_mask.clone(),
+            overlap: self.overlap,
             bandwidth_mbps: None,
+            link_bandwidths_mbps: None,
+            degradation: None,
         }
     }
 
@@ -226,6 +241,12 @@ impl Scenario {
         self.elide_mask.as_deref()
     }
 
+    /// Whether the event-driven overlap engine scores this scenario (see
+    /// [`ScenarioBuilder::overlap`]).
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
     /// Whether member `m`'s standbys are elided under this scenario: the
     /// per-member mask entry when one is set, else the fleet-wide
     /// dispatch mode.
@@ -251,7 +272,10 @@ pub struct ScenarioBuilder {
     min_quorum: usize,
     dispatch: DispatchMode,
     elide_mask: Option<Vec<bool>>,
+    overlap: bool,
     bandwidth_mbps: Option<f64>,
+    link_bandwidths_mbps: Option<Vec<f64>>,
+    degradation: Option<f64>,
 }
 
 impl Default for ScenarioBuilder {
@@ -267,7 +291,10 @@ impl Default for ScenarioBuilder {
             min_quorum: 1,
             dispatch: DispatchMode::Full,
             elide_mask: None,
+            overlap: false,
             bandwidth_mbps: None,
+            link_bandwidths_mbps: None,
+            degradation: None,
         }
     }
 }
@@ -289,6 +316,33 @@ impl ScenarioBuilder {
     /// `tc` knob; what the sweep runner's bandwidth axis turns).
     pub fn bandwidth_mbps(mut self, mbps: f64) -> Self {
         self.bandwidth_mbps = Some(mbps);
+        self
+    }
+
+    /// Reshape each link individually at build time (asymmetric fleets —
+    /// a cellular straggler on an otherwise wired star). One Mb/s value
+    /// per device, applied after any fleet-wide
+    /// [`Self::bandwidth_mbps`] override.
+    pub fn link_bandwidths_mbps(mut self, mbps: Vec<f64>) -> Self {
+        self.link_bandwidths_mbps = Some(mbps);
+        self
+    }
+
+    /// Degrade every link to `factor` of its (post-override) bandwidth at
+    /// build time — the bandwidth-degradation sweep axis. Must be finite
+    /// and in `(0, 1]`.
+    pub fn degrade_bandwidth(mut self, factor: f64) -> Self {
+        self.degradation = Some(factor);
+        self
+    }
+
+    /// Enable the event-driven overlap engine (ISSUE 6): transfers start
+    /// as soon as a member's features are ready and its host's uplink is
+    /// free, overlapping the host's remaining compute; per-link busy
+    /// timelines serialize contending transfers. Off (the default), the
+    /// timeline reproduces the serialized pre-ISSUE-6 numbers bitwise.
+    pub fn overlap(mut self, overlap: bool) -> Self {
+        self.overlap = overlap;
         self
     }
 
@@ -362,10 +416,8 @@ impl ScenarioBuilder {
         let n = self.fleet.len();
         let mut topo = self.topology.ok_or(ScenarioError::MissingTopology)?;
         if let Some(mbps) = self.bandwidth_mbps {
-            if !mbps.is_finite() || mbps <= 0.0 {
-                return Err(ScenarioError::InvalidBandwidth { mbps });
-            }
-            topo.set_bandwidth_mbps(mbps);
+            topo.set_bandwidth_mbps(mbps)
+                .map_err(|_| ScenarioError::InvalidBandwidth { mbps })?;
         }
         if topo.n_devices() != n {
             return Err(ScenarioError::LengthMismatch {
@@ -373,6 +425,23 @@ impl ScenarioBuilder {
                 expected: n,
                 got: topo.n_devices(),
             });
+        }
+        if let Some(per_link) = &self.link_bandwidths_mbps {
+            if per_link.len() != n {
+                return Err(ScenarioError::LengthMismatch {
+                    what: "link_bandwidths_mbps",
+                    expected: n,
+                    got: per_link.len(),
+                });
+            }
+            for (i, &mbps) in per_link.iter().enumerate() {
+                topo.set_link_bandwidth_mbps(i, mbps)
+                    .map_err(|_| ScenarioError::InvalidBandwidth { mbps })?;
+            }
+        }
+        if let Some(factor) = self.degradation {
+            topo.degrade_bandwidth(factor)
+                .map_err(|_| ScenarioError::InvalidDegradation { factor })?;
         }
         if topo.central >= n {
             return Err(ScenarioError::CentralOutOfRange { central: topo.central, n });
@@ -421,6 +490,7 @@ impl ScenarioBuilder {
             min_quorum: self.min_quorum,
             dispatch: self.dispatch,
             elide_mask: self.elide_mask,
+            overlap: self.overlap,
         })
     }
 }

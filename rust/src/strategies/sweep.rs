@@ -6,10 +6,11 @@
 //!
 //! Axes left unset stay at the base scenario's value, so a sweep is
 //! exactly as wide as the axes it names. Points are emitted in a
-//! deterministic nested order: bandwidth → batch → replicas → dispatch →
-//! member-elision mask → strategy (the strategy list innermost), so
-//! callers can chunk the flat result by strategy count to recover one
-//! table row per axis combination.
+//! deterministic nested order: bandwidth → degradation → per-link
+//! bandwidths → batch → replicas → dispatch → member-elision mask →
+//! overlap → strategy (the strategy list innermost), so callers can chunk
+//! the flat result by strategy count to recover one table row per axis
+//! combination.
 //!
 //! ```
 //! use coformer::device::DeviceProfile;
@@ -44,12 +45,21 @@ pub struct SweepPoint {
     /// [`Strategy::name`] of the strategy that produced the outcome.
     pub strategy: String,
     pub bandwidth_mbps: f64,
+    /// Bandwidth-degradation factor this point ran with (1.0 = clean
+    /// fabric; see [`Sweep::degradations`]).
+    pub degradation: f64,
+    /// Per-link Mb/s overrides this point ran with (`None` = symmetric;
+    /// see [`Sweep::link_bandwidths_mbps`]).
+    pub link_bandwidths_mbps: Option<Vec<f64>>,
     pub batch: usize,
     pub replicas: usize,
     pub dispatch: DispatchMode,
     /// Per-member elision mask this point ran with (`None` = the
     /// fleet-wide `dispatch` applied; see [`Sweep::member_elision`]).
     pub elide_mask: Option<Vec<bool>>,
+    /// Whether the event-driven overlap engine scored this point (ISSUE 6;
+    /// see [`Sweep::overlap_modes`]).
+    pub overlap: bool,
     pub outcome: Outcome,
 }
 
@@ -84,10 +94,13 @@ impl std::error::Error for SweepError {}
 pub struct Sweep {
     base: Scenario,
     bandwidths_mbps: Vec<f64>,
+    degradations: Vec<f64>,
+    link_bandwidths_mbps: Vec<Vec<f64>>,
     batches: Vec<usize>,
     replicas: Vec<usize>,
     dispatch: Vec<DispatchMode>,
     member_elision: Vec<Vec<bool>>,
+    overlap: Vec<bool>,
 }
 
 impl Sweep {
@@ -97,16 +110,47 @@ impl Sweep {
         Sweep {
             base,
             bandwidths_mbps: Vec::new(),
+            degradations: Vec::new(),
+            link_bandwidths_mbps: Vec::new(),
             batches: Vec::new(),
             replicas: Vec::new(),
             dispatch: Vec::new(),
             member_elision: Vec::new(),
+            overlap: Vec::new(),
         }
     }
 
     /// Vary link bandwidth (every topology link reshaped per point).
     pub fn bandwidths_mbps(mut self, v: &[f64]) -> Self {
         self.bandwidths_mbps = v.to_vec();
+        self
+    }
+
+    /// Vary fleet-wide bandwidth degradation (ISSUE 6): each value is a
+    /// factor in `(0, 1]` every link's (post-override) bandwidth is scaled
+    /// by — the "the Wi-Fi got worse" axis. Invalid factors surface as
+    /// [`SweepError::Scenario`].
+    pub fn degradations(mut self, v: &[f64]) -> Self {
+        self.degradations = v.to_vec();
+        self
+    }
+
+    /// Vary asymmetric link configurations (ISSUE 6): each value is one
+    /// per-device Mb/s vector applied through
+    /// [`super::ScenarioBuilder::link_bandwidths_mbps`] — a cellular
+    /// straggler on an otherwise wired star. Vectors must match the fleet
+    /// size; mismatches surface as [`SweepError::Scenario`].
+    pub fn link_bandwidths_mbps(mut self, v: &[Vec<f64>]) -> Self {
+        self.link_bandwidths_mbps = v.to_vec();
+        self
+    }
+
+    /// Vary communication/computation overlap (ISSUE 6): `false` scores
+    /// the serialized Eq. 5/6 timeline, `true` the event-driven engine
+    /// with per-link contention — `[false, true]` puts the two tables side
+    /// by side (what `paper -- overlap` prints).
+    pub fn overlap_modes(mut self, v: &[bool]) -> Self {
+        self.overlap = v.to_vec();
         self
     }
 
@@ -165,8 +209,9 @@ impl Sweep {
     }
 
     /// Run the given strategies across the axis cross-product, in the
-    /// documented bandwidth → batch → replicas → dispatch → member-elision
-    /// mask → strategy order.
+    /// documented bandwidth → degradation → per-link bandwidths → batch →
+    /// replicas → dispatch → member-elision mask → overlap → strategy
+    /// order.
     pub fn run(&self, strategies: &[&dyn Strategy]) -> Result<Vec<SweepPoint>, SweepError> {
         // `None` = keep the base scenario's value for this axis
         let bws: Vec<Option<f64>> = if self.bandwidths_mbps.is_empty() {
@@ -181,6 +226,16 @@ impl Sweep {
             .first()
             .map(|l| l.bandwidth_bps / 1e6)
             .unwrap_or(0.0);
+        let degradations: Vec<Option<f64>> = if self.degradations.is_empty() {
+            vec![None]
+        } else {
+            self.degradations.iter().map(|&d| Some(d)).collect()
+        };
+        let per_links: Vec<Option<&Vec<f64>>> = if self.link_bandwidths_mbps.is_empty() {
+            vec![None]
+        } else {
+            self.link_bandwidths_mbps.iter().map(Some).collect()
+        };
         let batches =
             if self.batches.is_empty() { vec![self.base.batch()] } else { self.batches.clone() };
         let replicas = if self.replicas.is_empty() {
@@ -199,49 +254,77 @@ impl Sweep {
         } else {
             self.member_elision.iter().map(Some).collect()
         };
+        let overlaps = if self.overlap.is_empty() {
+            vec![self.base.overlap()]
+        } else {
+            self.overlap.clone()
+        };
 
         let mut points = Vec::with_capacity(
             bws.len()
+                * degradations.len()
+                * per_links.len()
                 * batches.len()
                 * replicas.len()
                 * dispatch.len()
                 * masks.len()
+                * overlaps.len()
                 * strategies.len(),
         );
         for &bw in &bws {
-            for &batch in &batches {
-                for &rep in &replicas {
-                    for &mode in &dispatch {
-                        for &mask in &masks {
-                            let mut b = self
-                                .base
-                                .to_builder()
-                                .batch(batch)
-                                .replicas(rep)
-                                .dispatch(mode);
-                            if let Some(mbps) = bw {
-                                b = b.bandwidth_mbps(mbps);
-                            }
-                            if let Some(m) = mask {
-                                b = b.elide_members(m.clone());
-                            }
-                            let scenario = b.build().map_err(SweepError::Scenario)?;
-                            for strat in strategies {
-                                let outcome = strat.run(&scenario).map_err(|error| {
-                                    SweepError::Sim {
-                                        strategy: strat.name().to_string(),
-                                        error,
+            for &degradation in &degradations {
+                for &per_link in &per_links {
+                    for &batch in &batches {
+                        for &rep in &replicas {
+                            for &mode in &dispatch {
+                                for &mask in &masks {
+                                    for &overlap in &overlaps {
+                                        let mut b = self
+                                            .base
+                                            .to_builder()
+                                            .batch(batch)
+                                            .replicas(rep)
+                                            .dispatch(mode)
+                                            .overlap(overlap);
+                                        if let Some(mbps) = bw {
+                                            b = b.bandwidth_mbps(mbps);
+                                        }
+                                        if let Some(factor) = degradation {
+                                            b = b.degrade_bandwidth(factor);
+                                        }
+                                        if let Some(v) = per_link {
+                                            b = b.link_bandwidths_mbps(v.clone());
+                                        }
+                                        if let Some(m) = mask {
+                                            b = b.elide_members(m.clone());
+                                        }
+                                        let scenario =
+                                            b.build().map_err(SweepError::Scenario)?;
+                                        for strat in strategies {
+                                            let outcome =
+                                                strat.run(&scenario).map_err(|error| {
+                                                    SweepError::Sim {
+                                                        strategy: strat.name().to_string(),
+                                                        error,
+                                                    }
+                                                })?;
+                                            points.push(SweepPoint {
+                                                strategy: strat.name().to_string(),
+                                                bandwidth_mbps: bw.unwrap_or(base_bw),
+                                                degradation: degradation.unwrap_or(1.0),
+                                                link_bandwidths_mbps: per_link.cloned(),
+                                                batch,
+                                                replicas: rep,
+                                                dispatch: mode,
+                                                elide_mask: scenario
+                                                    .elide_mask()
+                                                    .map(|m| m.to_vec()),
+                                                overlap,
+                                                outcome,
+                                            });
+                                        }
                                     }
-                                })?;
-                                points.push(SweepPoint {
-                                    strategy: strat.name().to_string(),
-                                    bandwidth_mbps: bw.unwrap_or(base_bw),
-                                    batch,
-                                    replicas: rep,
-                                    dispatch: mode,
-                                    elide_mask: scenario.elide_mask().map(|m| m.to_vec()),
-                                    outcome,
-                                });
+                                }
                             }
                         }
                     }

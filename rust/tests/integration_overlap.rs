@@ -1,0 +1,378 @@
+//! ISSUE 6 acceptance suite for the overlap-aware timeline engine and the
+//! hardened net layer:
+//!
+//! * the event-driven overlap engine strictly beats the serialized Eq. 5/6
+//!   timeline at 2 Mb/s for the CoFormer family and tensor-parallel (the
+//!   headline acceptance criterion), while single-task-per-device
+//!   strategies — nothing to hide a transfer behind — price the same
+//!   timeline in both modes;
+//! * DeTransformer-style decoupled blocks (`Arch::with_block_layers`) cut
+//!   tensor-parallel sync cost in both timeline modes;
+//! * the three satellite bugfix regressions: `Topology::set_bandwidth_mbps`
+//!   rejects non-finite/non-positive bandwidths with a typed error,
+//!   wrong-length strategy overrides surface as `SimError::ShapeMismatch`
+//!   instead of a silent zip truncation, and elastic peak memory charges
+//!   warm standbys identically across dispatch modes;
+//! * the serving leader's runtime link re-planner is wired end to end and
+//!   stays quiet on a healthy fleet (the leader's deadline predictor and
+//!   the worker clock agree exactly, so no reroute ever fires).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use coformer::config::{DeviceSpec, FaultPolicy, ReplicationPolicy, SystemConfig};
+use coformer::coordinator::{Coordinator, ServeBuilder, ServeStats};
+use coformer::device::{DeviceProfile, SimError};
+use coformer::model::{Arch, Mode};
+use coformer::net::{Link, NetError, Topology};
+use coformer::runtime::manifest::DeploymentMeta;
+use coformer::runtime::{ExecServer, StubSpec};
+use coformer::strategies::registry::{Ensemble, PipeEdge};
+use coformer::strategies::{DispatchMode, Scenario, ScenarioError, Segment, Strategy, Sweep};
+
+fn fleet() -> Vec<DeviceProfile> {
+    DeviceProfile::paper_fleet()
+}
+
+fn topo(mbps: f64) -> Topology {
+    Topology::star(3, Link::mbps(mbps), 1)
+}
+
+fn sub_archs() -> Vec<Arch> {
+    vec![
+        Arch::uniform(Mode::Patch, 2, 24, 24, 1, 48, 20),
+        Arch::uniform(Mode::Patch, 3, 32, 24, 1, 64, 20),
+        Arch::uniform(Mode::Patch, 3, 40, 24, 2, 80, 20),
+    ]
+}
+
+/// Healthy 3-device base scenario at `mbps`.
+fn base(mbps: f64) -> Scenario {
+    Scenario::builder()
+        .fleet(fleet())
+        .topology(topo(mbps))
+        .archs(sub_archs())
+        .d_i(64)
+        .batch(1)
+        .build()
+        .unwrap()
+}
+
+/// Run one strategy with and without overlap and return the
+/// (serialized, overlapped) point pair.
+fn overlap_pair(
+    sc: Scenario,
+    name: &str,
+) -> (coformer::strategies::SweepPoint, coformer::strategies::SweepPoint) {
+    let mut pts = Sweep::new(sc)
+        .overlap_modes(&[false, true])
+        .run_named(&[name])
+        .unwrap();
+    assert_eq!(pts.len(), 2);
+    let ovl = pts.pop().unwrap();
+    let ser = pts.pop().unwrap();
+    assert!(!ser.overlap && ovl.overlap, "sweep emits serialized before overlapped");
+    (ser, ovl)
+}
+
+#[test]
+fn overlap_strictly_beats_serialized_at_2mbps() {
+    // the acceptance criterion: at 2 Mb/s — where feature transfers
+    // dominate — the overlap engine must finish strictly earlier than the
+    // serialized timeline for a replicated CoFormer fleet (each host
+    // transmits its first member's features while computing its standby
+    // copy) and for tensor-parallel (all-gather payloads hide behind
+    // later-layer compute instead of gating a per-layer barrier)
+    let replicated = base(2.0)
+        .to_builder()
+        .replicas(2)
+        .min_quorum(1)
+        .dispatch(DispatchMode::Full)
+        .build()
+        .unwrap();
+    let (ser, ovl) = overlap_pair(replicated, "coformer_elastic");
+    assert!(
+        ovl.outcome.total_s() < ser.outcome.total_s(),
+        "coformer overlap {} must beat serialized {}",
+        ovl.outcome.total_s(),
+        ser.outcome.total_s()
+    );
+    // the overlap signature: some host's uplink occupancy ran concurrently
+    // with its compute, so busy + idle exceeds the wall clock
+    let total = ovl.outcome.total_s();
+    assert!(
+        ovl.outcome
+            .core
+            .devices
+            .iter()
+            .any(|d| d.compute_s + d.transmit_s + d.idle_s > total + 1e-12),
+        "at least one device overlapped transfer with compute"
+    );
+
+    let (ser, ovl) = overlap_pair(base(2.0), "tensor_parallel");
+    assert!(
+        ovl.outcome.total_s() < ser.outcome.total_s(),
+        "tensor-parallel overlap {} must beat serialized {}",
+        ovl.outcome.total_s(),
+        ser.outcome.total_s()
+    );
+}
+
+#[test]
+fn single_task_strategies_price_the_same_timeline_in_both_modes() {
+    // one member per device and nothing to hide the transfer behind:
+    // plain coformer (replicas=1), pipe-edge (a stage cannot start before
+    // its input lands) and ensemble (one logit send at the very end) must
+    // agree across modes to float-association noise — the overlapped path
+    // merely routes the same transfers through per-link reservations
+    for mbps in [2.0, 100.0] {
+        for name in ["coformer", "pipe_edge", "ensemble"] {
+            let (ser, ovl) = overlap_pair(base(mbps), name);
+            let (st, ot) = (ser.outcome.total_s(), ovl.outcome.total_s());
+            assert!(
+                (ot - st).abs() <= 1e-9 * st,
+                "{name}@{mbps}Mb/s: overlapped {ot} != serialized {st}"
+            );
+            let (se, oe) = (ser.outcome.total_energy_j(), ovl.outcome.total_energy_j());
+            assert!(
+                (oe - se).abs() <= 1e-9 * se,
+                "{name}@{mbps}Mb/s: overlapped energy {oe} != serialized {se}"
+            );
+        }
+    }
+}
+
+#[test]
+fn decoupled_blocks_cut_tensor_parallel_sync_cost() {
+    // DeTransformer co-design: grouping the layer stack into decoupled
+    // 2-layer blocks halves the sync points and shrinks the boundary
+    // payload, so the tensor-parallel timeline must get strictly cheaper
+    // where transfers dominate — in both timeline modes
+    let archs = |block: usize| -> Vec<Arch> {
+        vec![Arch::uniform(Mode::Patch, 4, 32, 24, 1, 64, 20).with_block_layers(block); 3]
+    };
+    let scenario = |block: usize, mbps: f64| {
+        Scenario::builder()
+            .fleet(fleet())
+            .topology(topo(mbps))
+            .archs(archs(block))
+            .d_i(64)
+            .build()
+            .unwrap()
+    };
+    for overlap in [false, true] {
+        let run = |block: usize, mbps: f64| {
+            Sweep::new(scenario(block, mbps))
+                .overlap_modes(&[overlap])
+                .run_named(&["tensor_parallel"])
+                .unwrap()
+                .remove(0)
+                .outcome
+        };
+        let (coupled, decoupled) = (run(1, 2.0), run(2, 2.0));
+        assert!(
+            decoupled.total_s() < coupled.total_s(),
+            "overlap={overlap}: decoupled {} must beat coupled {} at 2 Mb/s",
+            decoupled.total_s(),
+            coupled.total_s()
+        );
+        assert!(decoupled.core.comm_rounds < coupled.core.comm_rounds);
+        // fast fabric: the sync saving shrinks but never turns negative
+        let (coupled, decoupled) = (run(1, 1000.0), run(2, 1000.0));
+        assert!(decoupled.total_s() <= coupled.total_s());
+    }
+}
+
+#[test]
+fn invalid_bandwidth_is_a_typed_error() {
+    // satellite regression: set_bandwidth_mbps used to accept any f64 and
+    // bake NaN/zero into every subsequent transfer-time division
+    let mut t = topo(100.0);
+    for bad in [0.0, -3.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        assert!(
+            matches!(t.set_bandwidth_mbps(bad), Err(NetError::InvalidBandwidth { .. })),
+            "{bad} must be rejected"
+        );
+        assert!(
+            matches!(t.set_link_bandwidth_mbps(0, bad), Err(NetError::InvalidBandwidth { .. })),
+            "per-link {bad} must be rejected"
+        );
+    }
+    // a failed set leaves the topology untouched
+    assert_eq!(t.links[0].bandwidth_bps, 100.0 * 1e6);
+    t.set_bandwidth_mbps(250.0).unwrap();
+    assert_eq!(t.links[0].bandwidth_bps, 250.0 * 1e6);
+
+    // the scenario builder surfaces the same rejection as a typed
+    // ScenarioError instead of panicking mid-sweep
+    let err = base(100.0).to_builder().bandwidth_mbps(-1.0).build().unwrap_err();
+    assert!(matches!(err, ScenarioError::InvalidBandwidth { .. }), "{err}");
+}
+
+#[test]
+fn wrong_length_overrides_surface_as_shape_mismatch() {
+    // satellite regression: member overrides used to be zipped unchecked —
+    // a short vec silently skipped the trailing devices (dodging the OOM
+    // admission gate) instead of failing
+    let sc = base(100.0);
+
+    let short_memory = Ensemble {
+        member_memory: Some(vec![1 << 20; 2]),
+        ..Ensemble::default()
+    };
+    match short_memory.run(&sc) {
+        Err(SimError::ShapeMismatch { what: "ensemble member_memory", expected: 3, got: 2 }) => {}
+        other => panic!("short member_memory must be a ShapeMismatch, got {other:?}"),
+    }
+
+    let long_flops = Ensemble {
+        member_flops: Some(vec![1e9; 4]),
+        ..Ensemble::default()
+    };
+    match long_flops.run(&sc) {
+        Err(SimError::ShapeMismatch { what: "ensemble member_flops", expected: 3, got: 4 }) => {}
+        other => panic!("long member_flops must be a ShapeMismatch, got {other:?}"),
+    }
+
+    let seg = Segment { flops: 1e9, activation_bytes: 1024, memory_bytes: 1 << 20 };
+    let short_pipeline = PipeEdge::with_segments(vec![seg; 2]);
+    match short_pipeline.run(&sc) {
+        Err(SimError::ShapeMismatch { what: "pipeline segments", expected: 3, got: 2 }) => {}
+        other => panic!("short segments must be a ShapeMismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn elastic_peak_memory_charges_standbys_in_every_dispatch_mode() {
+    // satellite regression: the sim used to charge memory only for the
+    // copies that *run*, so eliding standbys under-reported peak memory —
+    // but the coordinator keeps elided standbys warm (that is what makes
+    // one-batch promotion possible), so residency must not depend on the
+    // dispatch mode or the timeline engine
+    let run = |dispatch, overlap| {
+        base(100.0)
+            .to_builder()
+            .replicas(2)
+            .dispatch(dispatch)
+            .overlap(overlap)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let full = run(DispatchMode::Full, false);
+    let elided = run(DispatchMode::Elided, false);
+    assert_eq!(full.peak_memory_bytes(), elided.peak_memory_bytes());
+    let mem = |o: &coformer::strategies::Outcome| -> Vec<usize> {
+        o.core.devices.iter().map(|d| d.memory_bytes).collect()
+    };
+    assert_eq!(mem(&full), mem(&elided), "per-device residency matches copy placement");
+    assert_eq!(
+        run(DispatchMode::Elided, true).peak_memory_bytes(),
+        full.peak_memory_bytes(),
+        "the overlap engine charges the same residency"
+    );
+    // the warm standby really costs memory: replicas=2 resident > replicas=1
+    let single = base(100.0).run().unwrap();
+    assert!(elided.peak_memory_bytes() > single.peak_memory_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// serving leader: runtime link re-planner
+// ---------------------------------------------------------------------------
+
+const FLEET: usize = 4;
+const CLASSES: usize = 4;
+
+fn serve_arch() -> Arch {
+    Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, CLASSES)
+}
+
+fn x_stride() -> usize {
+    let a = serve_arch();
+    a.tokens() * a.patch_dim()
+}
+
+fn stub_server() -> (ExecServer, DeploymentMeta) {
+    let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), serve_arch())).collect(),
+        classes: CLASSES,
+    };
+    let server = ExecServer::start_stub(spec).unwrap();
+    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: HashMap::new() };
+    (server, dep)
+}
+
+fn serve_config() -> SystemConfig {
+    let mut config = SystemConfig::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into()));
+    config.deployment = "stub_4dev".into();
+    config.aggregator = "average".into();
+    config.max_batch = 4;
+    config.max_wait_ms = 100;
+    config
+}
+
+/// Serve three deterministic 4-request rounds and return the final stats.
+fn serve_rounds(coord: Coordinator) -> ServeStats {
+    let handle = coord.handle();
+    for _ in 0..3 {
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                let label = i % CLASSES;
+                let rx = handle
+                    .submit(coformer::coordinator::RequestPayload::F32(vec![
+                        label as f32;
+                        x_stride()
+                    ]))
+                    .expect("round submits stay within the admission limit");
+                (label, rx)
+            })
+            .collect();
+        for (label, rx) in rxs {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("reply must arrive")
+                .expect("healthy batches must serve");
+            assert_eq!(resp.prediction, label);
+        }
+    }
+    coord.shutdown().unwrap()
+}
+
+#[test]
+fn link_planner_stays_quiet_on_a_healthy_fleet() {
+    // on a healthy deterministic fleet the leader's deadline predictor and
+    // the worker's simulated clock agree exactly, so every slowdown EWMA
+    // sits at 1.0 and the (default-enabled) re-planner must never fire —
+    // and a run with the planner disabled must produce the identical
+    // serving ledger, proving the routing pass is a pure pass-through when
+    // no link is contended
+    let run = |enabled: bool| {
+        let (server, dep) = stub_server();
+        let mut config = serve_config();
+        config.linkplan.enabled = enabled;
+        let stats = serve_rounds(
+            ServeBuilder::new(config, server.handle(), dep, vec![serve_arch(); FLEET], x_stride())
+                .fault(FaultPolicy { min_quorum: 2, ..FaultPolicy::default() })
+                .replication(ReplicationPolicy { replicas: 2, ..ReplicationPolicy::default() })
+                .start()
+                .unwrap(),
+        );
+        drop(server);
+        stats
+    };
+    let on = run(true);
+    assert_eq!(on.requests, 12);
+    assert_eq!(on.fault.link_reroutes, 0, "a healthy fleet never reroutes");
+    assert_eq!(on.fault.quorum_failures, 0);
+
+    let off = run(false);
+    assert_eq!(off.fault.link_reroutes, 0);
+    assert_eq!(on.requests, off.requests);
+    assert_eq!(on.batches, off.batches);
+    assert_eq!(on.virtual_latency.mean_ms(), off.virtual_latency.mean_ms());
+    assert_eq!(on.total_energy_j, off.total_energy_j);
+    assert_eq!(on.fault.quorum_histogram(), off.fault.quorum_histogram());
+}

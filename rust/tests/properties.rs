@@ -484,6 +484,128 @@ fn prop_bandwidth_monotonicity_all_strategies() {
     });
 }
 
+// ----------------------------------------------------------- overlap engine
+
+/// A random scenario the whole strategy registry can run: 3 devices, small
+/// random sub-models, random bandwidth/batch, optionally replicated.
+fn random_overlap_scenario(rng: &mut Rng) -> Scenario {
+    let t = teacher();
+    let archs: Vec<Arch> = (0..3)
+        .map(|_| {
+            SubModelCfg {
+                layers: rng.gen_range(1, 4),
+                dim: 8 * rng.gen_range(2, 6),
+                heads: 1,
+                mlp_dim: 16 * rng.gen_range(1, 6),
+            }
+            .to_arch(&t)
+        })
+        .collect();
+    let replicas = rng.gen_range(1, 3);
+    let dispatch =
+        if rng.gen_f64() < 0.5 { DispatchMode::Full } else { DispatchMode::Elided };
+    Scenario::builder()
+        .fleet(DeviceProfile::paper_fleet())
+        .topology(Topology::star(3, Link::mbps(1.0 + rng.gen_f64() * 999.0), 1))
+        .archs(archs)
+        .d_i(8 * rng.gen_range(1, 16))
+        .batch(rng.gen_range(1, 5))
+        .replicas(replicas)
+        .dispatch(dispatch)
+        .build()
+        .unwrap()
+}
+
+const OVERLAP_STRATEGIES: [&str; 5] =
+    ["coformer", "coformer_elastic", "pipe_edge", "tensor_parallel", "ensemble"];
+
+#[test]
+fn prop_overlap_never_slower_than_serialized() {
+    // ISSUE 6: the event-driven engine can only move transfers earlier —
+    // for every strategy, overlapped total_s <= the serialized timeline
+    forall(150, 8000, |rng| {
+        let sc = random_overlap_scenario(rng);
+        for name in OVERLAP_STRATEGIES {
+            let points = Sweep::new(sc.clone())
+                .overlap_modes(&[false, true])
+                .run_named(&[name])
+                .unwrap();
+            let (ser, ovl) = (&points[0], &points[1]);
+            assert!(
+                ovl.outcome.total_s() <= ser.outcome.total_s() + 1e-12,
+                "{name}: overlapped {} > serialized {}",
+                ovl.outcome.total_s(),
+                ser.outcome.total_s()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_overlap_device_timelines_stay_consistent() {
+    // Under the overlap engine, busy time is accounted as compute plus the
+    // transmit occupancy that outlives the compute span, so every
+    // per-device component must stay non-negative (the old `finish()`
+    // subtraction would have gone negative here).
+    forall(150, 8200, |rng| {
+        let sc = random_overlap_scenario(rng);
+        for name in OVERLAP_STRATEGIES {
+            let points =
+                Sweep::new(sc.clone()).overlap_modes(&[true]).run_named(&[name]).unwrap();
+            let out = &points[0].outcome;
+            assert!(out.total_s() > 0.0, "{name}");
+            for (i, d) in out.core.devices.iter().enumerate() {
+                assert!(d.compute_s >= 0.0, "{name} dev{i} compute {}", d.compute_s);
+                assert!(d.transmit_s >= 0.0, "{name} dev{i} transmit {}", d.transmit_s);
+                assert!(d.idle_s >= -1e-9, "{name} dev{i} idle {}", d.idle_s);
+                assert!(d.energy_j >= 0.0, "{name} dev{i} energy {}", d.energy_j);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_overlap_off_is_bitwise_identical_across_the_sweep() {
+    // Adding the overlap axis (pinned off) to a sweep must not perturb a
+    // single bit of any point relative to the same sweep without the axis:
+    // overlap-off IS the pre-ISSUE-6 serialized code path.
+    forall(60, 8400, |rng| {
+        let sc = random_overlap_scenario(rng);
+        let bws = [2.0, 100.0];
+        let batches = [1usize, 3];
+        let without = Sweep::new(sc.clone())
+            .bandwidths_mbps(&bws)
+            .batches(&batches)
+            .run_named(&OVERLAP_STRATEGIES)
+            .unwrap();
+        let with_axis = Sweep::new(sc)
+            .bandwidths_mbps(&bws)
+            .batches(&batches)
+            .overlap_modes(&[false])
+            .run_named(&OVERLAP_STRATEGIES)
+            .unwrap();
+        assert_eq!(without.len(), with_axis.len());
+        for (a, b) in without.iter().zip(&with_axis) {
+            assert_eq!(a.strategy, b.strategy);
+            assert!(!b.overlap);
+            assert_eq!(
+                a.outcome.total_s().to_bits(),
+                b.outcome.total_s().to_bits(),
+                "{}: {} vs {}",
+                a.strategy,
+                a.outcome.total_s(),
+                b.outcome.total_s()
+            );
+            assert_eq!(
+                a.outcome.total_energy_j().to_bits(),
+                b.outcome.total_energy_j().to_bits(),
+                "{}: energy drifted",
+                a.strategy
+            );
+        }
+    });
+}
+
 // ------------------------------------------------------- scenario builder
 
 fn valid_builder(n: usize, rng: &mut Rng) -> coformer::strategies::ScenarioBuilder {
