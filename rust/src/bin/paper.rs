@@ -251,7 +251,7 @@ fn fig5(engine: &Engine, _artifacts: &PathBuf) -> Result<()> {
             flat.push((l, h, v));
         }
     }
-    flat.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    flat.sort_by(|a, b| a.2.total_cmp(&b.2));
     let total_heads = flat.len();
     let mut rows = Vec::new();
     for ratio in [0.0, 0.1, 0.2, 0.3, 0.4, 0.5] {

@@ -191,7 +191,8 @@ impl<'e> Booster<'e> {
             let tuple = result[0][0].to_literal_sync()?;
             let mut parts = tuple.to_tuple()?;
             anyhow::ensure!(parts.len() == 3 * n_params + 1, "train step arity mismatch");
-            let loss_lit = parts.pop().unwrap();
+            let loss_lit =
+                parts.pop().ok_or_else(|| anyhow::anyhow!("train step returned an empty tuple"))?;
             let (loss_v, _) = literal_to_f32(&loss_lit)?;
             let loss = loss_v[0] as f64;
             if step == 1 {

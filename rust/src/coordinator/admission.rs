@@ -1,0 +1,162 @@
+//! The admission gate, extracted behind the loom-swappable
+//! [`crate::util::sync`] atomics shim (ISSUE 7) so the serving plane's one
+//! lock-free hot path can be exhaustively model-checked
+//! (`rust/tests/loom_admission.rs`) instead of merely unit-tested.
+//!
+//! Concurrency contract (what the loom suite proves over every `SeqCst`
+//! interleaving):
+//!
+//! * **Permit conservation** — every `try_admit` either returns `Ok` (one
+//!   slot held until `release`) or sheds with [`Overloaded`] after undoing
+//!   its reservation; slots are never lost or double-counted, and `queued`
+//!   never underflows.
+//! * **Bounded admission** — successful admits never exceed the live limit
+//!   in effect when they were admitted, including while the leader
+//!   re-derives limits after a device death ([`Admission::set_limits`]).
+//! * **Snapshot consistency** — [`Admission::snapshot`] taken concurrently
+//!   with admits/releases always reads a state some interleaving could
+//!   produce (in particular `queued` is bounded by admits in flight).
+
+use crate::util::sync::{AtomicUsize, Ordering};
+use crate::Result;
+
+use super::batcher::IntakePressure;
+
+/// Typed admission-control error: the request was shed because the queue
+/// bound derived from surviving-fleet capacity is full. In-flight requests
+/// are unaffected — shedding rejects new work, it never cancels admitted
+/// work. Callers detect it via `err.downcast_ref::<Overloaded>()` and
+/// should back off / retry elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Requests queued at the moment of the rejection.
+    pub queued: usize,
+    /// The live admission limit (shrinks as devices die).
+    pub limit: usize,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "overloaded: {} queued at admission limit {}", self.queued, self.limit)
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+/// Shared admission gate between handle clones (producers) and the leader
+/// (consumer): a queued-request counter against a live limit the leader
+/// re-derives from surviving-fleet capacity whenever a device dies.
+///
+/// All atomics are `SeqCst` (enforced by the `atomics-ordering` lint), so
+/// the sequentially consistent interleavings the loom suite explores are
+/// exactly the behaviours production builds can exhibit.
+pub struct Admission {
+    queued: AtomicUsize,
+    /// Live queue bound enforced on `try_admit` (capacity × elision
+    /// headroom); `usize::MAX` = shedding disabled.
+    limit: AtomicUsize,
+    /// Capacity-derived bound (base depth × surviving-capacity share),
+    /// *before* elision scaling — the pressure signal's denominator, kept
+    /// separate so the control loop doesn't read its own actuator.
+    capacity: AtomicUsize,
+    /// Requests rejected with [`Overloaded`] (folded into stats at shutdown).
+    shed: AtomicUsize,
+}
+
+impl Admission {
+    pub fn new(limit: usize) -> Self {
+        Admission {
+            queued: AtomicUsize::new(0),
+            limit: AtomicUsize::new(limit),
+            capacity: AtomicUsize::new(limit),
+            shed: AtomicUsize::new(0),
+        }
+    }
+
+    /// Point-in-time intake pressure (read by the batcher at batch close).
+    pub fn snapshot(&self) -> IntakePressure {
+        IntakePressure {
+            queued: self.queued.load(Ordering::SeqCst),
+            capacity_limit: self.capacity.load(Ordering::SeqCst),
+            live_limit: self.limit.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Reserve one queue slot, or shed with the typed [`Overloaded`] error.
+    ///
+    /// Reserve-then-check: the slot is taken optimistically and returned on
+    /// the shed path, so a transient `queued == limit + k` overshoot (k
+    /// concurrent shedders) is visible to snapshots, but an admitted
+    /// request is never lost and `queued` never underflows.
+    pub fn try_admit(&self) -> Result<()> {
+        let limit = self.limit.load(Ordering::SeqCst);
+        let prev = self.queued.fetch_add(1, Ordering::SeqCst);
+        if prev >= limit {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            self.shed.fetch_add(1, Ordering::SeqCst);
+            return Err(anyhow::Error::new(Overloaded { queued: prev, limit }));
+        }
+        Ok(())
+    }
+
+    /// Return `n` completed requests' slots to the gate.
+    pub fn release(&self, n: usize) {
+        self.queued.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Leader-side limit re-derivation (device death, elision headroom):
+    /// publish the capacity-derived bound and the live enforced bound.
+    pub fn set_limits(&self, capacity: usize, live: usize) {
+        self.capacity.store(capacity, Ordering::SeqCst);
+        self.limit.store(live, Ordering::SeqCst);
+    }
+
+    /// Requests shed so far (folded into [`super::ServeStats`] at shutdown).
+    pub fn shed_count(&self) -> usize {
+        self.shed.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_sheds_above_limit_with_typed_error() {
+        let a = Admission::new(2);
+        assert!(a.try_admit().is_ok());
+        assert!(a.try_admit().is_ok());
+        let err = a.try_admit().unwrap_err();
+        let o = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
+        assert_eq!(*o, Overloaded { queued: 2, limit: 2 });
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        // releasing a slot re-opens admission; the shed was counted
+        a.release(1);
+        assert!(a.try_admit().is_ok());
+        assert_eq!(a.shed_count(), 1);
+        assert_eq!(a.snapshot().queued, 2);
+    }
+
+    #[test]
+    fn admission_snapshot_tracks_capacity_and_live_limit() {
+        let a = Admission::new(8);
+        let s0 = a.snapshot();
+        assert_eq!((s0.queued, s0.capacity_limit, s0.live_limit), (0, 8, 8));
+        a.try_admit().unwrap();
+        // elision scales only the live limit; the fill denominator stays
+        // the capacity limit so the control signal ignores its actuator
+        a.set_limits(8, 16);
+        let s = a.snapshot();
+        assert_eq!((s.queued, s.capacity_limit, s.live_limit), (1, 8, 16));
+        assert!((s.fill() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn admission_unbounded_when_disabled() {
+        let a = Admission::new(usize::MAX);
+        for _ in 0..10_000 {
+            assert!(a.try_admit().is_ok());
+        }
+        assert_eq!(a.shed_count(), 0);
+    }
+}

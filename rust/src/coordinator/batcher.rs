@@ -97,8 +97,7 @@ impl Batcher {
         Batcher { rx, config, closed: false, gate: None }
     }
 
-    /// Batcher wired to the coordinator's admission gate (leader-internal;
-    /// the gate type is private to the coordinator).
+    /// Batcher wired to the coordinator's admission gate (leader-internal).
     pub(crate) fn with_gate(
         rx: mpsc::Receiver<LeaderMsg>,
         config: BatcherConfig,
@@ -132,8 +131,11 @@ impl Batcher {
             }
         };
         let mut batch = vec![first];
+        // lint:allow(determinism): the batch-close wait window is wall time
+        // by design — queueing latency is real time, not virtual time
         let deadline = Instant::now() + self.config.max_wait;
         while batch.len() < self.config.max_batch {
+            // lint:allow(determinism): same wall-clock wait window as above
             let now = Instant::now();
             if now >= deadline {
                 break;

@@ -59,13 +59,13 @@
 //! the network-path twin of the device routing above. Reroutes surface in
 //! [`FaultMetrics::link_reroutes`].
 
+pub mod admission;
 pub mod batcher;
 pub mod health;
 pub mod linkplan;
 pub mod scheduler;
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -81,6 +81,7 @@ use crate::runtime::engine::XBatch;
 use crate::runtime::manifest::DeploymentMeta;
 use crate::runtime::ExecHandle;
 use crate::Result;
+pub use admission::{Admission, Overloaded};
 pub use batcher::{Batch, Batcher, BatcherConfig, IntakePressure};
 pub use health::{DeviceHealth, HealthState};
 pub use linkplan::LinkPlanner;
@@ -138,79 +139,6 @@ pub struct ServeStats {
     pub fault: FaultMetrics,
 }
 
-/// Typed admission-control error: the request was shed because the queue
-/// bound derived from surviving-fleet capacity is full. In-flight requests
-/// are unaffected — shedding rejects new work, it never cancels admitted
-/// work. Callers detect it via `err.downcast_ref::<Overloaded>()` and
-/// should back off / retry elsewhere.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Overloaded {
-    /// Requests queued at the moment of the rejection.
-    pub queued: usize,
-    /// The live admission limit (shrinks as devices die).
-    pub limit: usize,
-}
-
-impl std::fmt::Display for Overloaded {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "overloaded: {} queued at admission limit {}", self.queued, self.limit)
-    }
-}
-
-impl std::error::Error for Overloaded {}
-
-/// Shared admission gate between handle clones (producers) and the leader
-/// (consumer): a queued-request counter against a live limit the leader
-/// re-derives from surviving-fleet capacity whenever a device dies.
-pub(crate) struct Admission {
-    queued: AtomicUsize,
-    /// Live queue bound enforced on `try_admit` (capacity × elision
-    /// headroom); `usize::MAX` = shedding disabled.
-    limit: AtomicUsize,
-    /// Capacity-derived bound (base depth × surviving-capacity share),
-    /// *before* elision scaling — the pressure signal's denominator, kept
-    /// separate so the control loop doesn't read its own actuator.
-    capacity: AtomicUsize,
-    /// Requests rejected with [`Overloaded`] (folded into stats at shutdown).
-    shed: AtomicUsize,
-}
-
-impl Admission {
-    fn new(limit: usize) -> Self {
-        Admission {
-            queued: AtomicUsize::new(0),
-            limit: AtomicUsize::new(limit),
-            capacity: AtomicUsize::new(limit),
-            shed: AtomicUsize::new(0),
-        }
-    }
-
-    /// Point-in-time intake pressure (read by the batcher at batch close).
-    fn snapshot(&self) -> IntakePressure {
-        IntakePressure {
-            queued: self.queued.load(Ordering::SeqCst),
-            capacity_limit: self.capacity.load(Ordering::SeqCst),
-            live_limit: self.limit.load(Ordering::SeqCst),
-        }
-    }
-
-    /// Reserve one queue slot, or shed with the typed [`Overloaded`] error.
-    fn try_admit(&self) -> Result<()> {
-        let limit = self.limit.load(Ordering::SeqCst);
-        let prev = self.queued.fetch_add(1, Ordering::SeqCst);
-        if prev >= limit {
-            self.queued.fetch_sub(1, Ordering::SeqCst);
-            self.shed.fetch_add(1, Ordering::SeqCst);
-            return Err(anyhow::Error::new(Overloaded { queued: prev, limit }));
-        }
-        Ok(())
-    }
-
-    fn release(&self, n: usize) {
-        self.queued.fetch_sub(n, Ordering::SeqCst);
-    }
-}
-
 /// Coordinator handle: submit requests, receive responses.
 #[derive(Clone)]
 pub struct CoordinatorHandle {
@@ -245,10 +173,8 @@ impl CoordinatorHandle {
     /// Point-in-time admission state. A limit of `usize::MAX` means
     /// shedding is disabled (`max_queue_depth = 0`).
     pub fn admission_state(&self) -> AdmissionSnapshot {
-        AdmissionSnapshot {
-            queued: self.admission.queued.load(Ordering::SeqCst),
-            limit: self.admission.limit.load(Ordering::SeqCst),
-        }
+        let s = self.admission.snapshot();
+        AdmissionSnapshot { queued: s.queued, limit: s.live_limit }
     }
 }
 
@@ -344,7 +270,7 @@ pub struct Coordinator {
 /// hand-built config is held to exactly the JSON loader's invariants.
 ///
 /// ```no_run
-/// use std::collections::HashMap;
+/// use std::collections::BTreeMap;
 ///
 /// use coformer::config::{FaultPolicy, SystemConfig};
 /// use coformer::coordinator::ServeBuilder;
@@ -359,7 +285,7 @@ pub struct Coordinator {
 ///     models: members.iter().map(|m| (m.clone(), arch.clone())).collect(),
 ///     classes: 4,
 /// })?;
-/// let dep = DeploymentMeta { task: "stub".into(), members, aggregators: HashMap::new() };
+/// let dep = DeploymentMeta { task: "stub".into(), members, aggregators: BTreeMap::new() };
 /// let stride = arch.tokens() * arch.patch_dim();
 /// let coord = ServeBuilder::new(
 ///     SystemConfig::paper_default(),
@@ -507,8 +433,12 @@ impl ServeBuilder {
                         let mut exec_errors = Vec::new();
                         for (ti, t) in job.tasks.iter().enumerate() {
                             let xb = if ti + 1 == n_tasks {
+                                // lint:allow(no-panic-in-lib): holder is consumed exactly once,
+                                // on the last task of this loop
                                 x_holder.take().expect("batch tensor consumed once")
                             } else {
+                                // lint:allow(no-panic-in-lib): not the last task, so the
+                                // holder has not been consumed yet
                                 x_holder.as_ref().expect("batch tensor present").clone()
                             };
                             match exec.run_model(&t.model, xb) {
@@ -715,6 +645,8 @@ impl Leader {
         let mut stats = ServeStats::default();
         let mut batcher = Batcher::with_gate(rx, batcher_cfg, self.admission.clone());
         while let Some(Batch { requests: batch, pressure }) = batcher.next_batch() {
+            // lint:allow(determinism): leader-loop wall-clock telemetry only —
+            // never feeds scheduling decisions (those run on the virtual clock)
             let wall_start = std::time::Instant::now();
             let n = batch.len();
             // the pressure observed at batch close picks this batch's
@@ -750,7 +682,7 @@ impl Leader {
                 }
             }
         }
-        self.fault.shed = self.admission.shed.load(Ordering::SeqCst);
+        self.fault.shed = self.admission.shed_count();
         stats.fault = self.fault.clone();
         stats
     }
@@ -1346,8 +1278,7 @@ impl Leader {
         self.smoothed_headroom += blend * (target - self.smoothed_headroom);
         let live = ((capacity as f64 * self.smoothed_headroom).round() as usize)
             .min(self.intake_cap);
-        self.admission.capacity.store(capacity, Ordering::SeqCst);
-        self.admission.limit.store(live, Ordering::SeqCst);
+        self.admission.set_limits(capacity, live);
     }
 
     /// Dispatch-compute headroom factor in [1, replicas]: full replicated
@@ -1533,8 +1464,7 @@ pub fn serve_all(
         // re-read each iteration: the limit shrinks when devices die
         let limit = handle.admission_state().limit;
         while rxs.len() >= limit.max(1) {
-            let rx: mpsc::Receiver<Result<InferenceResponse>> =
-                rxs.pop_front().expect("window is non-empty");
+            let Some(rx) = rxs.pop_front() else { break };
             out.push(rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))??);
         }
         rxs.push_back(handle.submit(x)?);
@@ -1578,45 +1508,6 @@ mod tests {
         assert_eq!(feat_shape(&a, 3), vec![3, a.groups, 24]);
         a.task = TaskKind::Det;
         assert_eq!(feat_shape(&a, 2), vec![2, a.tokens(), 24]);
-    }
-
-    #[test]
-    fn admission_sheds_above_limit_with_typed_error() {
-        let a = Admission::new(2);
-        assert!(a.try_admit().is_ok());
-        assert!(a.try_admit().is_ok());
-        let err = a.try_admit().unwrap_err();
-        let o = err.downcast_ref::<Overloaded>().expect("typed Overloaded");
-        assert_eq!(*o, Overloaded { queued: 2, limit: 2 });
-        assert!(err.to_string().contains("overloaded"), "{err}");
-        // releasing a slot re-opens admission; the shed was counted
-        a.release(1);
-        assert!(a.try_admit().is_ok());
-        assert_eq!(a.shed.load(Ordering::SeqCst), 1);
-        assert_eq!(a.queued.load(Ordering::SeqCst), 2);
-    }
-
-    #[test]
-    fn admission_snapshot_tracks_capacity_and_live_limit() {
-        let a = Admission::new(8);
-        let s0 = a.snapshot();
-        assert_eq!((s0.queued, s0.capacity_limit, s0.live_limit), (0, 8, 8));
-        a.try_admit().unwrap();
-        // elision scales only the live limit; the fill denominator stays
-        // the capacity limit so the control signal ignores its actuator
-        a.limit.store(16, Ordering::SeqCst);
-        let s = a.snapshot();
-        assert_eq!((s.queued, s.capacity_limit, s.live_limit), (1, 8, 16));
-        assert!((s.fill() - 0.125).abs() < 1e-12);
-    }
-
-    #[test]
-    fn admission_unbounded_when_disabled() {
-        let a = Admission::new(usize::MAX);
-        for _ in 0..10_000 {
-            assert!(a.try_admit().is_ok());
-        }
-        assert_eq!(a.shed.load(Ordering::SeqCst), 0);
     }
 
     #[test]

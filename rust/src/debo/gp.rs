@@ -91,6 +91,9 @@ impl Gp {
                 base
             }
         });
+        // lint:allow(no-panic-in-lib): K + σ²I is SPD for noise_var > 0; a
+        // failure here is FP pathology in the offline search path, where a
+        // loud stop beats silently fitting a broken posterior
         let chol = cholesky(&k).expect("K + σ²I must be SPD");
         let resid: Vec<f64> = self.ys.iter().map(|y| y - self.y_mean).collect();
         self.alpha = cholesky_solve(&chol, &resid);
@@ -109,7 +112,11 @@ impl Gp {
                 .zip(&self.alpha)
                 .map(|(k, a)| k * a)
                 .sum::<f64>();
-        let chol = self.chol.as_ref().unwrap();
+        let Some(chol) = self.chol.as_ref() else {
+            // unreachable when xs is non-empty (refit sets it); fall back to
+            // the prior rather than panicking on an inconsistent state
+            return (self.y_mean, self.kernel.variance);
+        };
         let v = solve_lower(chol, &k_star);
         let var = self.kernel.eval(x, x) - v.iter().map(|x| x * x).sum::<f64>();
         (mean, var.max(1e-12))
@@ -120,7 +127,7 @@ impl Gp {
         self.ys
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, &y)| (i, y))
     }
 }

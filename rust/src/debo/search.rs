@@ -133,10 +133,13 @@ impl DeBoSearch {
             if best.as_ref().map(|(_, b)| psi < *b).unwrap_or(true) {
                 *best = Some((policy.clone(), psi));
             }
+            // `best` is Some here (set above if it was None), so the
+            // fallback to the incumbent psi is never wrong
+            let best_psi = best.as_ref().map(|(_, b)| *b).unwrap_or(psi);
             trace.push(SearchTracePoint {
                 iteration: iter,
                 psi,
-                best_psi: best.as_ref().unwrap().1,
+                best_psi,
                 latency_s: lat,
                 pred_loss: loss,
             });
@@ -146,9 +149,9 @@ impl DeBoSearch {
         for i in 0..self.config.init_policies {
             let policy = Self::sample_policy(&mut rng, obj, n_devices)
                 .ok_or_else(|| anyhow::anyhow!("cannot sample a feasible policy: constraints too tight"))?;
-            let psi = obj
-                .evaluate(&policy)
-                .expect("sampled policy must be feasible");
+            let psi = obj.evaluate(&policy).ok_or_else(|| {
+                anyhow::anyhow!("sampled policy became infeasible under the objective")
+            })?;
             evaluated += 1;
             gp.observe(policy.encode(teacher), psi);
             record(&policy, psi, i, &mut best, &mut trace, obj);
@@ -156,7 +159,9 @@ impl DeBoSearch {
 
         // lines 5–9: BO iterations
         for it in 0..self.config.iterations {
-            let best_psi = gp.best_observed().map(|(_, y)| y).unwrap();
+            // no observations (init_policies = 0) leaves EI undefined; the
+            // search degrades to "no policy found" instead of panicking
+            let Some(best_psi) = gp.best_observed().map(|(_, y)| y) else { break };
             let mut cand_best: Option<(DecompositionPolicy, f64)> = None;
             for _ in 0..self.config.candidates {
                 let Some(policy) = Self::sample_policy(&mut rng, obj, n_devices) else {
@@ -170,7 +175,9 @@ impl DeBoSearch {
                 }
             }
             let Some((next, _)) = cand_best else { continue };
-            let psi = obj.evaluate(&next).expect("candidates are feasible");
+            let psi = obj
+                .evaluate(&next)
+                .ok_or_else(|| anyhow::anyhow!("candidate became infeasible under the objective"))?;
             evaluated += 1;
             gp.observe(next.encode(teacher), psi);
             record(
@@ -202,14 +209,15 @@ pub fn random_search(
         let Some(policy) = DeBoSearch::sample_policy(&mut rng, obj, n_devices) else {
             continue;
         };
-        let psi = obj.evaluate(&policy).unwrap();
+        let Some(psi) = obj.evaluate(&policy) else { continue };
         if best.as_ref().map(|(_, b)| psi < *b).unwrap_or(true) {
             best = Some((policy.clone(), psi));
         }
+        let best_psi = best.as_ref().map(|(_, b)| *b).unwrap_or(psi);
         trace.push(SearchTracePoint {
             iteration: i,
             psi,
-            best_psi: best.as_ref().unwrap().1,
+            best_psi,
             latency_s: obj.latency.breakdown(&policy, obj.teacher).total_s,
             pred_loss: obj.accuracy.policy_loss(&policy),
         });

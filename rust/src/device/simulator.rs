@@ -22,6 +22,16 @@ pub enum SimError {
     /// assert" convention — a short list used to either panic or silently
     /// truncate a zip).
     ShapeMismatch { what: &'static str, expected: usize, got: usize },
+    /// A per-link reservation on the overlap timeline failed (carried up
+    /// from [`crate::net::NetError`] so strategies propagate with `?`
+    /// instead of panicking on a bad link index).
+    Link { detail: String },
+}
+
+impl From<crate::net::NetError> for SimError {
+    fn from(e: crate::net::NetError) -> Self {
+        SimError::Link { detail: e.to_string() }
+    }
 }
 
 impl std::fmt::Display for SimError {
@@ -40,6 +50,7 @@ impl std::fmt::Display for SimError {
                 f,
                 "{what} length {got} does not match the {expected}-device fleet"
             ),
+            SimError::Link { detail } => write!(f, "link schedule error: {detail}"),
         }
     }
 }

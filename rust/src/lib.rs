@@ -18,6 +18,15 @@
 //! Entry points: the `coformer` CLI (`rust/src/main.rs`), the `paper` binary
 //! that regenerates every table/figure of the paper's evaluation, and the
 //! `examples/` drivers.
+//!
+//! Conventions are machine-enforced (ISSUE 7): `cargo xtask lint` checks
+//! no-panic library code, determinism (rng only through [`util::rng`], no
+//! wall clocks outside the leader loop, no order-leaking map iteration),
+//! the `SystemConfig::validate` gate, and `SeqCst`-only admission atomics;
+//! `rust/tests/loom_admission.rs` model-checks the admission gate under
+//! `--cfg loom`.
+
+#![forbid(unsafe_code)]
 
 pub mod aggregation;
 pub mod booster;

@@ -308,6 +308,8 @@ fn eval(
             }
         })
         .collect();
+    // lint:allow(determinism): end-to-end CLI wall timing is operator
+    // telemetry only; scheduling decisions run on the virtual clock
     let t0 = std::time::Instant::now();
     let responses = serve_all(&handle, payloads)?;
     let wall = t0.elapsed().as_secs_f64();

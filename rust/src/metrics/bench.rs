@@ -46,11 +46,13 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
+        // lint:allow(determinism): the bench harness measures real wall time
+        // by definition; samples are reported, never fed back into scheduling
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let p = |q: f64| samples[((q * samples.len() as f64) as usize).min(samples.len() - 1)];
     let r = BenchResult {

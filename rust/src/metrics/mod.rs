@@ -48,7 +48,7 @@ impl LatencyStats {
     /// Percentile by nearest-rank (p in [0, 100]).
     pub fn percentile_ms(&self, p: f64) -> f64 {
         let mut v = self.samples_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         percentile_nearest_rank(&v, p)
     }
 
@@ -255,7 +255,7 @@ pub fn mean_average_precision(
         if positives == 0 {
             continue;
         }
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
         let mut tp = 0usize;
         let mut pr: Vec<(f64, f64)> = Vec::with_capacity(n); // (recall, precision)
         for (k, (_, is_pos)) in scored.iter().enumerate() {

@@ -6,7 +6,7 @@
 //! coordinator, while offline paths (booster, evaluation) use it directly.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -228,7 +228,7 @@ impl Engine {
     /// Pick the smallest exported batch tag that fits `rows`.
     pub fn pick_tag<'a>(
         &self,
-        hlo: &'a HashMap<String, String>,
+        hlo: &'a BTreeMap<String, String>,
         rows: usize,
     ) -> Result<(&'a str, usize)> {
         let mut tags: Vec<(&str, usize)> = hlo
@@ -442,7 +442,7 @@ mod tests {
     #[test]
     fn pick_tag_prefers_smallest_fitting() {
         // needs no engine state beyond the static helper semantics
-        let mut hlo = HashMap::new();
+        let mut hlo = BTreeMap::new();
         hlo.insert("b1".to_string(), "a".to_string());
         hlo.insert("b16".to_string(), "b".to_string());
         // emulate pick via sorted logic (engine method needs &self; test the

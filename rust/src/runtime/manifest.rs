@@ -2,7 +2,7 @@
 //!
 //! Parsed with the in-crate JSON module (no serde in the vendored crate set).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::model::Arch;
@@ -13,13 +13,13 @@ use crate::Result;
 pub struct Manifest {
     pub version: u32,
     pub fast_build: bool,
-    pub tasks: HashMap<String, TaskMeta>,
-    pub models: HashMap<String, ModelMeta>,
-    pub masked_models: HashMap<String, MaskedMeta>,
-    pub deployments: HashMap<String, DeploymentMeta>,
-    pub train_steps: HashMap<String, TrainStepMeta>,
+    pub tasks: BTreeMap<String, TaskMeta>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub masked_models: BTreeMap<String, MaskedMeta>,
+    pub deployments: BTreeMap<String, DeploymentMeta>,
+    pub train_steps: BTreeMap<String, TrainStepMeta>,
     /// teacher name → (layers × heads) importance matrix (Fig. 5 data).
-    pub head_importance: HashMap<String, Vec<Vec<f64>>>,
+    pub head_importance: BTreeMap<String, Vec<Vec<f64>>>,
     pub proxy_points: Vec<ProxyPoint>,
     pub eval_batch: usize,
     pub train_batch: usize,
@@ -32,7 +32,7 @@ pub struct TaskMeta {
     pub mode: String,
     pub task_kind: String,
     pub teacher: String,
-    pub splits: HashMap<String, SplitMeta>,
+    pub splits: BTreeMap<String, SplitMeta>,
 }
 
 #[derive(Clone, Debug)]
@@ -52,7 +52,7 @@ pub struct ModelMeta {
     pub param_count: usize,
     pub params: String,
     /// batch tag ("b1", "b16") → HLO path.
-    pub hlo: HashMap<String, String>,
+    pub hlo: BTreeMap<String, String>,
     pub task: String,
     /// Build-time measured standalone accuracy (cross-checked by rust tests).
     pub accuracy_solo: f64,
@@ -62,7 +62,7 @@ pub struct ModelMeta {
 #[derive(Clone, Debug)]
 pub struct MaskedMeta {
     pub base: String,
-    pub hlo: HashMap<String, String>,
+    pub hlo: BTreeMap<String, String>,
     pub mask_shape: Vec<usize>,
 }
 
@@ -70,12 +70,12 @@ pub struct MaskedMeta {
 pub struct DeploymentMeta {
     pub task: String,
     pub members: Vec<String>,
-    pub aggregators: HashMap<String, AggregatorMeta>,
+    pub aggregators: BTreeMap<String, AggregatorMeta>,
 }
 
 #[derive(Clone, Debug)]
 pub struct AggregatorMeta {
-    pub hlo: HashMap<String, String>,
+    pub hlo: BTreeMap<String, String>,
     pub params: String,
     pub param_specs: Vec<(String, Vec<usize>)>,
     pub d_i: usize,
@@ -101,8 +101,8 @@ pub struct ProxyPoint {
     pub trained_acc: f64,
 }
 
-fn str_map(v: &Json) -> Result<HashMap<String, String>> {
-    let mut out = HashMap::new();
+fn str_map(v: &Json) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
     for (k, val) in v.as_obj()? {
         out.insert(k.clone(), val.as_str()?.to_string());
     }
@@ -137,9 +137,9 @@ impl Manifest {
         let version = v.req("version")?.as_usize()? as u32;
         anyhow::ensure!(version == 1, "unsupported manifest version {version}");
 
-        let mut tasks = HashMap::new();
+        let mut tasks = BTreeMap::new();
         for (name, t) in v.req("tasks")?.as_obj()? {
-            let mut splits = HashMap::new();
+            let mut splits = BTreeMap::new();
             for (split, s) in t.req("splits")?.as_obj()? {
                 splits.insert(split.clone(), SplitMeta::from_json(s)?);
             }
@@ -155,7 +155,7 @@ impl Manifest {
             );
         }
 
-        let mut models = HashMap::new();
+        let mut models = BTreeMap::new();
         for (name, m) in v.req("models")?.as_obj()? {
             models.insert(
                 name.clone(),
@@ -172,7 +172,7 @@ impl Manifest {
             );
         }
 
-        let mut masked_models = HashMap::new();
+        let mut masked_models = BTreeMap::new();
         if let Some(mm) = v.get("masked_models") {
             for (name, m) in mm.as_obj()? {
                 masked_models.insert(
@@ -186,9 +186,9 @@ impl Manifest {
             }
         }
 
-        let mut deployments = HashMap::new();
+        let mut deployments = BTreeMap::new();
         for (name, d) in v.req("deployments")?.as_obj()? {
-            let mut aggregators = HashMap::new();
+            let mut aggregators = BTreeMap::new();
             for (kind, a) in d.req("aggregators")?.as_obj()? {
                 aggregators.insert(
                     kind.clone(),
@@ -216,7 +216,7 @@ impl Manifest {
             );
         }
 
-        let mut train_steps = HashMap::new();
+        let mut train_steps = BTreeMap::new();
         if let Some(ts) = v.get("train_steps") {
             for (name, t) in ts.as_obj()? {
                 train_steps.insert(
@@ -231,7 +231,7 @@ impl Manifest {
             }
         }
 
-        let mut head_importance = HashMap::new();
+        let mut head_importance = BTreeMap::new();
         if let Some(hi) = v.get("head_importance") {
             for (name, mat) in hi.as_obj()? {
                 let rows: Vec<Vec<f64>> = mat
@@ -360,6 +360,35 @@ mod tests {
         let json = r#"{"version":2,"tasks":{},"models":{},"deployments":{},
                        "eval_batch":16,"train_batch":32,"d_i":64}"#;
         assert!(Manifest::from_json(&Json::parse(json).unwrap()).is_err());
+    }
+
+    #[test]
+    fn map_iteration_is_sorted_regardless_of_json_order() {
+        // the manifest's maps are BTreeMaps precisely so report/serving
+        // paths that iterate them (warmup, member listings, aggregator
+        // fallback) are insertion-order independent — feed keys in reverse
+        // and scrambled order and require sorted iteration
+        let model = r#"{
+            "arch": {"mode":"patch","layers":1,"dim":16,"head_dim":8,
+                     "heads":[1],"mlp_dims":[32],"num_classes":4},
+            "param_specs": [], "param_count": 0, "params": "p.bin",
+            "hlo": {"b16": "x_b16.hlo", "b1": "x_b1.hlo", "b4": "x_b4.hlo"},
+            "task": "edgenet", "accuracy_solo": 0.5, "val_loss": 1.0
+        }"#;
+        let json = format!(
+            r#"{{
+              "version": 1, "tasks": {{}},
+              "models": {{"zeta": {m}, "alpha": {m}, "mid": {m}}},
+              "deployments": {{}},
+              "eval_batch": 16, "train_batch": 32, "d_i": 64
+            }}"#,
+            m = model
+        );
+        let m = Manifest::from_json(&Json::parse(&json).unwrap()).unwrap();
+        let names: Vec<&str> = m.models.keys().map(|s| s.as_str()).collect();
+        assert_eq!(names, ["alpha", "mid", "zeta"]);
+        let tags: Vec<&str> = m.models["alpha"].hlo.keys().map(|s| s.as_str()).collect();
+        assert_eq!(tags, ["b1", "b16", "b4"], "lexicographic, stable across runs");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! That makes end-to-end quorum/degraded-mode behavior observable without
 //! artifacts or a PJRT toolchain.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::engine::{ModelOutput, XBatch};
 use crate::model::{Arch, TaskKind};
@@ -27,7 +27,7 @@ pub struct StubSpec {
 }
 
 pub(crate) struct StubEngine {
-    models: HashMap<String, Arch>,
+    models: BTreeMap<String, Arch>,
     classes: usize,
 }
 

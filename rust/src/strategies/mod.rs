@@ -204,7 +204,7 @@ pub(crate) fn run_elastic_scenario(s: &Scenario) -> Result<ElasticOutcome, SimEr
         topo.central
     } else {
         crate::device::fastest_device(profiles, |i| alive[i])
-            .expect("quorum >= 1 device alive")
+            .ok_or(SimError::QuorumNotMet { have: 0, need })?
     };
     let mut devs: Vec<SimDevice> = profiles.iter().cloned().map(SimDevice::new).collect();
     let mut mems = vec![0usize; n];
@@ -346,9 +346,7 @@ fn run_elastic_overlapped(
                 Transfer { start_s: ready, end_s: ready }
             } else {
                 let bytes = archs[m].feature_bytes() * batch;
-                sched
-                    .reserve(topo, w, ready, bytes)
-                    .expect("fleet indices are valid links by scenario validation")
+                sched.reserve(topo, w, ready, bytes)?
             };
             transmit[w] += tr.duration_s();
             slowest_arrival = slowest_arrival.max(tr.end_s);
@@ -440,9 +438,7 @@ pub(crate) fn run_pipe_edge(
             let tt = topo.between_s(i, i + 1, seg.activation_bytes);
             match sched.as_mut() {
                 Some(sched) => {
-                    let tr = sched
-                        .reserve_for(i, devs[i].now(), tt)
-                        .expect("stage indices are valid links");
+                    let tr = sched.reserve_for(i, devs[i].now(), tt)?;
                     devs[i].wait_until(tr.start_s); // uplink busy with other traffic
                     devs[i].transmit(tr.duration_s());
                     transmit[i] = tr.duration_s();
@@ -514,9 +510,7 @@ pub(crate) fn run_tensor_parallel(
                     let tt = topo.to_central_s(i, shard_bytes).max(
                         topo.between_s(i, (i + 1) % n, shard_bytes),
                     );
-                    let tr = sched
-                        .reserve_for(i, ready, tt)
-                        .expect("fleet indices are valid links");
+                    let tr = sched.reserve_for(i, ready, tt)?;
                     transmit[i] += tr.duration_s();
                     total = total.max(tr.end_s);
                     windows[i].push(tr);
@@ -647,9 +641,7 @@ pub(crate) fn run_ensemble(
         let tt = topo.to_central_s(i, logit_bytes);
         let tt = match sched.as_mut() {
             Some(sched) => {
-                let tr = sched
-                    .reserve_for(i, d.now(), tt)
-                    .expect("fleet indices are valid links");
+                let tr = sched.reserve_for(i, d.now(), tt)?;
                 d.wait_until(tr.start_s);
                 tr.duration_s()
             }

@@ -74,6 +74,9 @@ fn pinned(
     if let Some(d) = dispatch {
         b = b.dispatch(d).fleet_elision();
     }
+    // lint:allow(no-panic-in-lib): the builder re-opens an already-validated
+    // scenario and pins axes that preserve validity; a failure here means
+    // the builder's invariants drifted and must be loud, not mis-scored
     b.build().expect("pinning axes of a valid scenario preserves validity")
 }
 

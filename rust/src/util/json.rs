@@ -189,13 +189,14 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))
     }
 
-    fn expect(&mut self, b: u8) -> Result<()> {
+    fn expect_byte(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
         anyhow::ensure!(
-            self.peek()? == b,
+            got == b,
             "expected {:?} at byte {}, got {:?}",
             b as char,
             self.pos,
-            self.peek().unwrap() as char
+            got as char
         );
         self.pos += 1;
         Ok(())
@@ -225,7 +226,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut pairs = Vec::new();
         self.skip_ws();
         if self.peek()? == b'}' {
@@ -236,7 +237,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let val = self.value()?;
             pairs.push((key, val));
@@ -255,7 +256,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek()? == b']' {
@@ -280,7 +281,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             let b = self.peek()?;
@@ -308,7 +309,7 @@ impl<'a> Parser<'a> {
                                     "lone high surrogate"
                                 );
                                 self.pos += 1;
-                                self.expect(b'u')?;
+                                self.expect_byte(b'u')?;
                                 let lo = self.hex4()?;
                                 anyhow::ensure!(
                                     (0xDC00..0xE000).contains(&lo),

@@ -1,9 +1,11 @@
 //! Dependency-free substrates: JSON (this environment vendors only the
 //! `xla` crate's closure, so serde is unavailable — we implement the
-//! manifest/config interchange ourselves) and a seeded PRNG.
+//! manifest/config interchange ourselves), a seeded PRNG, and the
+//! loom-swappable atomics shim.
 
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 pub use json::Json;
 pub use rng::Rng;

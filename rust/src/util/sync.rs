@@ -1,0 +1,18 @@
+//! Atomics shim for model checking (ISSUE 7).
+//!
+//! Everything in the crate that shares atomics across threads — today,
+//! the coordinator's [`crate::coordinator::Admission`] gate — imports
+//! `AtomicUsize`/`Ordering` from here instead of `std::sync::atomic`
+//! (the `atomics-ordering` lint enforces this for `coordinator/`).
+//!
+//! In a normal build these are the `std` types with zero overhead. Under
+//! `RUSTFLAGS="--cfg loom"` they swap to the vendored `loom` model
+//! checker's types, whose every operation is a schedule point, so
+//! `rust/tests/loom_admission.rs` can exhaustively explore admission-gate
+//! interleavings.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicUsize, Ordering};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicUsize, Ordering};

@@ -11,7 +11,7 @@
 //! * the sweep runner exercises the replicas/dispatch/member-elision axes
 //!   end to end.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use coformer::config::{
@@ -48,7 +48,7 @@ fn stub_server() -> (ExecServer, DeploymentMeta) {
         classes: CLASSES,
     };
     let server = ExecServer::start_stub(spec).unwrap();
-    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: HashMap::new() };
+    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: BTreeMap::new() };
     (server, dep)
 }
 

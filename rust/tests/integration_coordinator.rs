@@ -164,7 +164,7 @@ fn shutdown_with_queued_requests_resolves_every_reply() {
     let dep = coformer::runtime::manifest::DeploymentMeta {
         task: "stub".into(),
         members,
-        aggregators: std::collections::HashMap::new(),
+        aggregators: std::collections::BTreeMap::new(),
     };
     let mut config = SC::paper_default();
     config.devices.push(DeviceSpec::Preset("rpi-4b".into()));

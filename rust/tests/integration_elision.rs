@@ -37,7 +37,7 @@
 //! * a degraded (not dead) primary instantly re-enables its standby under
 //!   elision (the per-member fallback).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use coformer::config::{
@@ -84,7 +84,7 @@ fn start_with_signal(
     let dep = DeploymentMeta {
         task: "stub".into(),
         members,
-        aggregators: HashMap::new(),
+        aggregators: BTreeMap::new(),
     };
     let mut config = SystemConfig::paper_default();
     config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device

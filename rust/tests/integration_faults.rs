@@ -8,7 +8,7 @@
 //! its label as the row mean, so end-to-end correctness under degraded
 //! quorums is directly checkable.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use coformer::config::{DeviceSpec, FaultPolicy, SystemConfig};
 use coformer::coordinator::{
@@ -44,7 +44,7 @@ fn start(scripts: Vec<FaultScript>, fault: FaultPolicy) -> (ExecServer, Coordina
     let dep = DeploymentMeta {
         task: "stub".into(),
         members,
-        aggregators: HashMap::new(),
+        aggregators: BTreeMap::new(),
     };
     let mut config = SystemConfig::paper_default();
     config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device

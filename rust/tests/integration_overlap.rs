@@ -17,7 +17,7 @@
 //!   stays quiet on a healthy fleet (the leader's deadline predictor and
 //!   the worker clock agree exactly, so no reroute ever fires).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use coformer::config::{DeviceSpec, FaultPolicy, ReplicationPolicy, SystemConfig};
@@ -300,7 +300,7 @@ fn stub_server() -> (ExecServer, DeploymentMeta) {
         classes: CLASSES,
     };
     let server = ExecServer::start_stub(spec).unwrap();
-    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: HashMap::new() };
+    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: BTreeMap::new() };
     (server, dep)
 }
 

@@ -12,7 +12,7 @@
 //!   [`Overloaded`] error while every admitted in-flight request still
 //!   completes.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use coformer::config::{DeviceSpec, FaultPolicy, ReplicationPolicy, SystemConfig};
@@ -55,7 +55,7 @@ fn start(
     let dep = DeploymentMeta {
         task: "stub".into(),
         members,
-        aggregators: HashMap::new(),
+        aggregators: BTreeMap::new(),
     };
     let mut config = SystemConfig::paper_default();
     config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device
@@ -248,7 +248,7 @@ fn zero_min_quorum_rejected_at_start() {
         classes: CLASSES,
     };
     let server = ExecServer::start_stub(spec).unwrap();
-    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: HashMap::new() };
+    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: BTreeMap::new() };
     let mut config = SystemConfig::paper_default();
     config.devices.push(DeviceSpec::Preset("rpi-4b".into()));
     config.deployment = "stub_4dev".into();

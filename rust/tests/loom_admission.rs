@@ -1,0 +1,131 @@
+#![cfg(loom)]
+//! Exhaustive model checking of the coordinator's admission gate (ISSUE 7).
+//!
+//! Run with:
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test -p coformer --test loom_admission --release
+//! ```
+//!
+//! Under `cfg(loom)` the gate's atomics (via `coformer::util::sync`) swap to
+//! the vendored `loom` model checker, and every test body below is replayed
+//! under *every* sequentially consistent interleaving of its threads. Since
+//! the `atomics-ordering` lint pins the gate to `Ordering::SeqCst`, those
+//! interleavings are exactly the behaviours production builds can exhibit —
+//! an assertion that survives here is a proof over the modeled schedules,
+//! not a stress test.
+
+use loom::sync::Arc;
+use loom::thread;
+
+use coformer::coordinator::Admission;
+
+/// Permit conservation: with two submitters racing one slot, every attempt
+/// either admits (and its release returns the slot) or sheds after undoing
+/// its reservation — no interleaving loses a permit or underflows `queued`
+/// (the loom atomics panic on `fetch_sub` underflow).
+#[test]
+fn permits_conserved_under_concurrent_admit_and_release() {
+    loom::model(|| {
+        let gate = Arc::new(Admission::new(1));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let g = Arc::clone(&gate);
+                thread::spawn(move || {
+                    if g.try_admit().is_ok() {
+                        g.release(1);
+                        1usize
+                    } else {
+                        0
+                    }
+                })
+            })
+            .collect();
+        let oks: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let s = gate.snapshot();
+        assert_eq!(s.queued, 0, "all admitted slots must be released");
+        assert!(oks >= 1, "an empty gate must admit at least one of the racers");
+        assert_eq!(oks + gate.shed_count(), 2, "every attempt admits or sheds");
+    });
+}
+
+/// Oversubscription: three submitters, limit 1, no releases. Exactly one
+/// can ever see `queued == 0`, so exactly one admits and exactly two shed,
+/// under every interleaving — including the double-shed schedules where a
+/// loser's undo races the other attempts.
+#[test]
+fn oversubscribed_gate_sheds_exactly_the_losers() {
+    loom::model(|| {
+        let gate = Arc::new(Admission::new(1));
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let g = Arc::clone(&gate);
+                thread::spawn(move || usize::from(g.try_admit().is_ok()))
+            })
+            .collect();
+        let oks: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(oks, 1, "exactly one winner at limit 1 with no releases");
+        assert_eq!(gate.shed_count(), 2, "both losers must be counted shed");
+        assert_eq!(gate.snapshot().queued, 1, "the winner's slot is still held");
+    });
+}
+
+/// Death-triggered limit re-derivation racing admits: the leader shrinks
+/// the gate from (capacity 2, live 2) to (1, 1) while two submitters race
+/// in. Admits never exceed the largest limit that was ever live, `queued`
+/// exactly equals un-released admits, and once the shrink lands a full
+/// gate must shed.
+#[test]
+fn limit_rederivation_racing_admits_stays_bounded() {
+    loom::model(|| {
+        let gate = Arc::new(Admission::new(2));
+        let leader = {
+            let g = Arc::clone(&gate);
+            thread::spawn(move || g.set_limits(1, 1))
+        };
+        let submitters: Vec<_> = (0..2)
+            .map(|_| {
+                let g = Arc::clone(&gate);
+                thread::spawn(move || usize::from(g.try_admit().is_ok()))
+            })
+            .collect();
+        leader.join().unwrap();
+        let oks: usize = submitters.into_iter().map(|h| h.join().unwrap()).sum();
+        let s = gate.snapshot();
+        assert_eq!(s.queued, oks, "queued must equal un-released admits");
+        assert!(oks <= 2, "admits can never exceed the largest live limit");
+        assert_eq!((s.capacity_limit, s.live_limit), (1, 1), "shrink must be visible");
+        if oks >= 1 {
+            assert!(gate.try_admit().is_err(), "a full post-shrink gate must shed");
+        }
+    });
+}
+
+/// Snapshot consistency: an observer racing one admit/release cycle only
+/// ever reads states some serial history could produce — `queued` bounded
+/// by the one in-flight admit, limits untouched.
+#[test]
+fn snapshot_is_internally_consistent_during_admits() {
+    loom::model(|| {
+        let gate = Arc::new(Admission::new(2));
+        let admitter = {
+            let g = Arc::clone(&gate);
+            thread::spawn(move || {
+                assert!(g.try_admit().is_ok(), "sole admitter under limit 2 cannot shed");
+                g.release(1);
+            })
+        };
+        let observer = {
+            let g = Arc::clone(&gate);
+            thread::spawn(move || {
+                let s = g.snapshot();
+                assert!(s.queued <= 1, "one in-flight admit holds at most one slot");
+                assert_eq!(s.capacity_limit, 2, "nobody touches the capacity limit");
+                assert_eq!(s.live_limit, 2, "nobody touches the live limit");
+            })
+        };
+        admitter.join().unwrap();
+        observer.join().unwrap();
+        assert_eq!(gate.snapshot().queued, 0, "the cycle must return its slot");
+    });
+}

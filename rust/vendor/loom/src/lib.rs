@@ -1,0 +1,114 @@
+//! A minimal, dependency-free stand-in for the `loom` model checker.
+//!
+//! The real `loom` crate explores every weak-memory interleaving of a test
+//! body. This vendored substitute explores every **sequentially consistent**
+//! interleaving instead: execution is serialized onto one runnable thread at
+//! a time, a schedule decision is taken before every atomic operation, and a
+//! depth-first search over the decision tape replays the body until the
+//! schedule space is exhausted (or a property panics, which is surfaced as a
+//! counterexample).
+//!
+//! Soundness for this repository: the `atomics-ordering` lint (`cargo xtask
+//! lint`) pins every `Admission` atomic to `Ordering::SeqCst`, and under
+//! `SeqCst` the set of observable behaviours *is* the set of sequentially
+//! consistent interleavings — so exhausting them is a complete model check
+//! for the admission plane, not an approximation.
+//!
+//! Supported surface (what `rust/tests/loom_admission.rs` needs):
+//!
+//! * [`model`] — run a closure under exhaustive schedule exploration
+//! * [`thread::spawn`] / [`thread::JoinHandle`] / [`thread::yield_now`]
+//! * [`sync::Arc`] (re-export of `std::sync::Arc`)
+//! * [`sync::atomic::AtomicUsize`] / [`sync::atomic::Ordering`]
+//!
+//! Blocking primitives (channels, mutex parking) are intentionally absent:
+//! the admission gate is lock-free, which is exactly why it needs a model
+//! checker rather than a mutex argument.
+
+mod rt;
+pub mod sync;
+pub mod thread;
+
+/// Run `f` once per distinct thread interleaving until the schedule space is
+/// exhausted. Panics (with the original payload) as soon as any interleaving
+/// makes the body panic, i.e. when a property assertion finds a
+/// counterexample.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    rt::model(f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::Arc;
+    use super::thread;
+
+    /// Atomic RMW ops are atomic under every schedule: two `fetch_add`s
+    /// always sum — and the driver must actually explore more than one
+    /// schedule to say so.
+    #[test]
+    fn explores_schedules_and_conserves_fetch_add() {
+        let iterations = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let seen = std::sync::Arc::clone(&iterations);
+        super::model(move || {
+            seen.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let a = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let a = Arc::clone(&a);
+                    thread::spawn(move || {
+                        a.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(a.load(Ordering::SeqCst), 2);
+        });
+        assert!(
+            iterations.load(std::sync::atomic::Ordering::SeqCst) >= 2,
+            "driver must explore more than one interleaving"
+        );
+    }
+
+    /// A deliberately racy load-then-store increment: some interleaving
+    /// loses an update, and the checker must find it and fail the model.
+    #[test]
+    #[should_panic]
+    fn finds_lost_update_counterexample() {
+        super::model(|| {
+            let a = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let a = Arc::clone(&a);
+                    thread::spawn(move || {
+                        let v = a.load(Ordering::SeqCst);
+                        a.store(v + 1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(a.load(Ordering::SeqCst), 2, "racy RMW loses an update");
+        });
+    }
+
+    /// Threads spawned outside `model()` just run: schedule points are
+    /// no-ops without a scheduler, so library code compiled against these
+    /// types stays usable from plain tests.
+    #[test]
+    fn atomics_work_outside_a_model() {
+        let a = AtomicUsize::new(40);
+        assert_eq!(a.fetch_add(2, Ordering::SeqCst), 40);
+        assert_eq!(a.load(Ordering::SeqCst), 42);
+        assert_eq!(a.fetch_sub(2, Ordering::SeqCst), 42);
+        assert_eq!(a.swap(7, Ordering::SeqCst), 40);
+        assert_eq!(a.compare_exchange(7, 9, Ordering::SeqCst, Ordering::SeqCst), Ok(7));
+        assert_eq!(a.into_inner(), 9);
+    }
+}

@@ -1,0 +1,353 @@
+//! Cooperative exhaustive scheduler.
+//!
+//! One OS thread is runnable at a time; everyone else parks on a condvar.
+//! Each atomic operation (and `thread::yield_now` / `thread::spawn`) is a
+//! *schedule point*: the running thread picks who runs next. When more than
+//! one thread is runnable the decision is recorded on a tape
+//! (`Choice { chosen, alternatives }`); the driver replays a tape prefix and
+//! advances the rightmost incrementable choice, which is a depth-first walk
+//! of the full schedule tree. A run with no incrementable choice left means
+//! the space is exhausted.
+//!
+//! Failure handling: the first panic in any thread flips `failed`, which
+//! wakes every parked thread so the whole iteration unwinds; the driver then
+//! resumes the original payload on the test thread. If no thread is runnable
+//! but some are unfinished, the detecting thread reports a deadlock.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::thread::JoinHandle;
+
+const DEFAULT_MAX_ITERATIONS: u64 = 2_000_000;
+
+/// Where a thread's closure output (or panic payload) is parked for `join`.
+pub(crate) type Slot<T> = Arc<Mutex<Option<std::thread::Result<T>>>>;
+
+#[derive(Clone, Copy, Debug)]
+struct Choice {
+    chosen: usize,
+    alternatives: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Run {
+    Runnable,
+    BlockedOnJoin(usize),
+    Finished,
+}
+
+struct State {
+    threads: Vec<Run>,
+    /// Index of the one thread allowed to execute (`usize::MAX` = iteration
+    /// over, nobody scheduled).
+    current: usize,
+    tape: Vec<Choice>,
+    /// Next tape index to consume (replay) or append (explore).
+    depth: usize,
+    /// Set on the first panic or deadlock; tears the iteration down.
+    failed: bool,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+pub(crate) struct Scheduler {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn current() -> Option<(Arc<Scheduler>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Pick the next thread to run among the runnable ones, recording or
+/// replaying a tape decision when there is a real choice.
+fn pick_next(st: &mut State) -> Option<usize> {
+    let candidates: Vec<usize> = st
+        .threads
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| **r == Run::Runnable)
+        .map(|(i, _)| i)
+        .collect();
+    match candidates.len() {
+        0 => None,
+        1 => Some(candidates[0]),
+        n => {
+            let idx = if st.depth < st.tape.len() {
+                let c = st.tape[st.depth];
+                assert!(
+                    c.alternatives == n && c.chosen < n,
+                    "loom: execution diverged from the recorded schedule \
+                     (is the model body deterministic?)"
+                );
+                c.chosen
+            } else {
+                st.tape.push(Choice { chosen: 0, alternatives: n });
+                0
+            };
+            st.depth += 1;
+            Some(candidates[idx])
+        }
+    }
+}
+
+impl Scheduler {
+    fn new(tape: Vec<Choice>) -> Scheduler {
+        Scheduler {
+            state: Mutex::new(State {
+                threads: vec![Run::Runnable],
+                current: 0,
+                tape,
+                depth: 0,
+                failed: false,
+                handles: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Schedule point: let the tape decide who executes the next step
+    /// (possibly the caller itself, i.e. no preemption).
+    fn switch(&self, me: usize) {
+        let mut st = lock(&self.state);
+        if st.failed {
+            drop(st);
+            panic!("loom: model failed on another thread");
+        }
+        let next = match pick_next(&mut st) {
+            Some(next) => next,
+            None => {
+                st.failed = true;
+                self.cv.notify_all();
+                drop(st);
+                panic!("loom: deadlock — no runnable thread at a schedule point");
+            }
+        };
+        if next == me {
+            return;
+        }
+        st.current = next;
+        self.cv.notify_all();
+        while st.current != me && !st.failed {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.failed {
+            drop(st);
+            panic!("loom: model failed on another thread");
+        }
+    }
+
+    /// Park a freshly spawned thread until it is first scheduled. Returns
+    /// `false` when the iteration failed before the thread ever ran.
+    fn wait_for_turn(&self, me: usize) -> bool {
+        let mut st = lock(&self.state);
+        while st.current != me && !st.failed {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        !st.failed
+    }
+
+    /// Thread retirement: unblock joiners and hand the token onward (or,
+    /// on panic, tear the whole iteration down).
+    fn finish(&self, me: usize, panicked: bool) {
+        let mut st = lock(&self.state);
+        st.threads[me] = Run::Finished;
+        for r in st.threads.iter_mut() {
+            if *r == Run::BlockedOnJoin(me) {
+                *r = Run::Runnable;
+            }
+        }
+        if panicked {
+            st.failed = true;
+        }
+        if st.failed {
+            self.cv.notify_all();
+            return;
+        }
+        match pick_next(&mut st) {
+            Some(next) => {
+                st.current = next;
+                self.cv.notify_all();
+            }
+            None => {
+                if st.threads.iter().all(|r| *r == Run::Finished) {
+                    st.current = usize::MAX;
+                    self.cv.notify_all();
+                } else {
+                    st.failed = true;
+                    self.cv.notify_all();
+                    drop(st);
+                    panic!("loom: deadlock — every unfinished thread is blocked");
+                }
+            }
+        }
+    }
+
+    /// Block the calling model thread until `target` finishes.
+    fn join_thread(&self, me: usize, target: usize) {
+        loop {
+            let mut st = lock(&self.state);
+            if st.failed {
+                drop(st);
+                panic!("loom: model failed on another thread");
+            }
+            if st.threads[target] == Run::Finished {
+                return;
+            }
+            st.threads[me] = Run::BlockedOnJoin(target);
+            match pick_next(&mut st) {
+                Some(next) => {
+                    st.current = next;
+                    self.cv.notify_all();
+                }
+                None => {
+                    st.failed = true;
+                    self.cv.notify_all();
+                    drop(st);
+                    panic!("loom: deadlock — join cycle with no runnable thread");
+                }
+            }
+            while st.current != me && !st.failed {
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            if st.failed {
+                drop(st);
+                panic!("loom: model failed on another thread");
+            }
+            // Woken as a runnable thread again: re-check why (the target
+            // finishing is the only unblocker, so the next pass returns).
+        }
+    }
+}
+
+/// Schedule point for the calling thread, if it is a model thread. Atomic
+/// ops outside `model()` (e.g. library code compiled under `cfg(loom)` but
+/// driven by a plain test) just execute without interleaving exploration.
+pub(crate) fn yield_point() {
+    if let Some((sched, me)) = current() {
+        sched.switch(me);
+    }
+}
+
+/// `loom::thread::spawn` backend: register the thread, park it until first
+/// scheduled, and treat the spawn itself as a schedule point.
+pub(crate) fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (sched, me) = current().expect("loom: thread::spawn outside of loom::model");
+    let slot: Slot<T> = Arc::new(Mutex::new(None));
+    let id = {
+        let mut st = lock(&sched.state);
+        st.threads.push(Run::Runnable);
+        st.threads.len() - 1
+    };
+    let thread_slot = Arc::clone(&slot);
+    let thread_sched = Arc::clone(&sched);
+    let os_handle = std::thread::spawn(move || {
+        CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&thread_sched), id)));
+        if thread_sched.wait_for_turn(id) {
+            let out = catch_unwind(AssertUnwindSafe(f));
+            let panicked = out.is_err();
+            *lock_slot(&thread_slot) = Some(out);
+            thread_sched.finish(id, panicked);
+        } else {
+            // Iteration already failed; retire without running the body.
+            thread_sched.finish(id, false);
+        }
+    });
+    lock(&sched.state).handles.push(os_handle);
+    sched.switch(me);
+    JoinHandle::new(sched, id, slot)
+}
+
+fn lock_slot<T>(
+    slot: &Mutex<Option<std::thread::Result<T>>>,
+) -> MutexGuard<'_, Option<std::thread::Result<T>>> {
+    slot.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `JoinHandle::join` backend.
+pub(crate) fn join_thread(sched: &Scheduler, target: usize) {
+    let (_, me) = current().expect("loom: JoinHandle::join outside of loom::model");
+    sched.join_thread(me, target);
+}
+
+/// Driver: depth-first search over the schedule tree.
+pub(crate) fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let max_iterations = std::env::var("LOOM_MAX_ITERATIONS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(DEFAULT_MAX_ITERATIONS);
+    let mut prefix: Vec<Choice> = Vec::new();
+    let mut iterations: u64 = 0;
+    loop {
+        iterations += 1;
+        assert!(
+            iterations <= max_iterations,
+            "loom: schedule space not exhausted after {max_iterations} iterations \
+             (set LOOM_MAX_ITERATIONS to raise the bound)"
+        );
+        let sched = Arc::new(Scheduler::new(prefix.clone()));
+        let body = Arc::clone(&f);
+        let root_sched = Arc::clone(&sched);
+        let root = std::thread::spawn(move || {
+            CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&root_sched), 0)));
+            let out = catch_unwind(AssertUnwindSafe(|| (*body)()));
+            let panicked = out.is_err();
+            root_sched.finish(0, panicked);
+            out
+        });
+        let mut failure = match root.join() {
+            Ok(Ok(())) => None,
+            Ok(Err(payload)) => Some(payload),
+            Err(payload) => Some(payload),
+        };
+        // Drain every OS thread this iteration spawned (they all exit once
+        // the iteration completes or `failed` is set).
+        loop {
+            let handles = std::mem::take(&mut lock(&sched.state).handles);
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                if let Err(payload) = h.join() {
+                    failure.get_or_insert(payload);
+                }
+            }
+        }
+        if let Some(payload) = failure {
+            eprintln!("loom: counterexample found on iteration {iterations}");
+            resume_unwind(payload);
+        }
+        // Depth-first advance: bump the rightmost incrementable decision,
+        // truncating everything after it.
+        let mut tape = lock(&sched.state).tape.clone();
+        let mut advanced = false;
+        while let Some(c) = tape.pop() {
+            if c.chosen + 1 < c.alternatives {
+                tape.push(Choice { chosen: c.chosen + 1, alternatives: c.alternatives });
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+        prefix = tape;
+    }
+}

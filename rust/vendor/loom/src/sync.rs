@@ -1,0 +1,84 @@
+//! `loom::sync` — model-checked shared-memory primitives.
+
+pub use std::sync::Arc;
+
+pub mod atomic {
+    //! Atomics whose every operation is a schedule point.
+    //!
+    //! Operations always execute with `SeqCst` semantics regardless of the
+    //! ordering argument (see the crate docs for why that is sound here:
+    //! the `atomics-ordering` lint pins call sites to `SeqCst` anyway).
+    //! `fetch_sub` additionally panics on underflow even in release builds,
+    //! so a lost-permit bug shows up as a deterministic counterexample
+    //! rather than a silent wrap to `usize::MAX`.
+
+    use std::sync::atomic::Ordering as StdOrdering;
+
+    use crate::rt;
+
+    pub use std::sync::atomic::Ordering;
+
+    /// Model-checked `AtomicUsize`. Because the scheduler runs exactly one
+    /// model thread at a time, a load/store pair between two schedule
+    /// points is atomic with respect to the model.
+    #[derive(Debug, Default)]
+    pub struct AtomicUsize {
+        inner: std::sync::atomic::AtomicUsize,
+    }
+
+    impl AtomicUsize {
+        pub fn new(v: usize) -> AtomicUsize {
+            AtomicUsize { inner: std::sync::atomic::AtomicUsize::new(v) }
+        }
+
+        pub fn load(&self, _order: Ordering) -> usize {
+            rt::yield_point();
+            self.inner.load(StdOrdering::SeqCst)
+        }
+
+        pub fn store(&self, v: usize, _order: Ordering) {
+            rt::yield_point();
+            self.inner.store(v, StdOrdering::SeqCst);
+        }
+
+        pub fn swap(&self, v: usize, _order: Ordering) -> usize {
+            rt::yield_point();
+            self.inner.swap(v, StdOrdering::SeqCst)
+        }
+
+        pub fn fetch_add(&self, v: usize, _order: Ordering) -> usize {
+            rt::yield_point();
+            self.inner.fetch_add(v, StdOrdering::SeqCst)
+        }
+
+        pub fn fetch_sub(&self, v: usize, _order: Ordering) -> usize {
+            rt::yield_point();
+            let prev = self.inner.load(StdOrdering::SeqCst);
+            let next = prev
+                .checked_sub(v)
+                .expect("loom: AtomicUsize::fetch_sub underflow (lost permit)");
+            self.inner.store(next, StdOrdering::SeqCst);
+            prev
+        }
+
+        pub fn fetch_max(&self, v: usize, _order: Ordering) -> usize {
+            rt::yield_point();
+            self.inner.fetch_max(v, StdOrdering::SeqCst)
+        }
+
+        pub fn compare_exchange(
+            &self,
+            current: usize,
+            new: usize,
+            _success: Ordering,
+            _failure: Ordering,
+        ) -> Result<usize, usize> {
+            rt::yield_point();
+            self.inner.compare_exchange(current, new, StdOrdering::SeqCst, StdOrdering::SeqCst)
+        }
+
+        pub fn into_inner(self) -> usize {
+            self.inner.into_inner()
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! `loom::thread` — model-checked threads.
+
+use crate::rt;
+use crate::rt::Slot;
+
+/// Handle to a model thread, mirroring `std::thread::JoinHandle`.
+pub struct JoinHandle<T> {
+    sched: std::sync::Arc<rt::Scheduler>,
+    id: usize,
+    slot: Slot<T>,
+}
+
+impl<T> JoinHandle<T> {
+    pub(crate) fn new(sched: std::sync::Arc<rt::Scheduler>, id: usize, slot: Slot<T>) -> Self {
+        JoinHandle { sched, id, slot }
+    }
+
+    /// Block (in model time) until the thread finishes; returns its output
+    /// or the panic payload, like `std::thread::JoinHandle::join`.
+    pub fn join(self) -> std::thread::Result<T> {
+        rt::join_thread(&self.sched, self.id);
+        self.slot
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .expect("loom: thread retired without a result (model failure)")
+    }
+}
+
+/// Spawn a model thread. Must be called inside [`crate::model`].
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    rt::spawn(f)
+}
+
+/// Explicit schedule point (no-op outside a model).
+pub fn yield_now() {
+    rt::yield_point();
+}

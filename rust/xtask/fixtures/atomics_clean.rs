@@ -1,0 +1,10 @@
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(c: &AtomicUsize) -> usize {
+    c.fetch_add(1, Ordering::SeqCst)
+}
+
+pub fn relaxed_counter(c: &AtomicUsize) -> usize {
+    // lint:allow(atomics-ordering): fixture stat counter, no ordering needed
+    c.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,41 @@
+pub struct SystemConfig {
+    pub fault: FaultPolicy,
+    pub nested: NestedConfig,
+}
+
+pub struct NestedConfig {
+    pub energy: EnergyPolicy,
+}
+
+pub struct FaultPolicy {
+    pub min_quorum: usize,
+}
+
+pub struct EnergyPolicy {
+    pub budget_j: f64,
+}
+
+impl SystemConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        self.fault.validate()?;
+        self.nested.validate()
+    }
+}
+
+impl NestedConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        self.energy.validate()
+    }
+}
+
+impl FaultPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+impl EnergyPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        Ok(())
+    }
+}

@@ -1,0 +1,30 @@
+pub struct SystemConfig {
+    pub fault: FaultPolicy,
+    pub orphan: OrphanPolicy,
+}
+
+pub struct FaultPolicy {
+    pub min_quorum: usize,
+}
+
+pub struct OrphanPolicy {
+    pub knob: usize,
+}
+
+impl SystemConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        self.fault.validate()
+    }
+}
+
+impl FaultPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+impl OrphanPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        Ok(())
+    }
+}

@@ -1,0 +1,4 @@
+pub fn telemetry_only() -> std::time::Instant {
+    // lint:allow(determinism): fixture telemetry site, never scheduling
+    std::time::Instant::now()
+}

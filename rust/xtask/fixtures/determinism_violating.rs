@@ -1,0 +1,7 @@
+use std::time::SystemTime;
+
+pub fn stamp() -> f64 {
+    let t0 = std::time::Instant::now();
+    let _ = SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}

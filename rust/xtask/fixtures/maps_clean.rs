@@ -1,0 +1,6 @@
+use std::collections::BTreeMap;
+
+pub fn stable_order() -> Vec<String> {
+    let m: BTreeMap<String, u32> = BTreeMap::new();
+    m.into_keys().collect()
+}

@@ -1,0 +1,6 @@
+use std::collections::HashMap;
+
+pub fn leaky_order() -> Vec<String> {
+    let m: HashMap<String, u32> = HashMap::new();
+    m.into_keys().collect()
+}

@@ -1,0 +1,11 @@
+pub fn careful(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "missing".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(super::careful(Some(3)).unwrap(), 3);
+    }
+}

@@ -1,0 +1,5 @@
+pub fn justified(v: Option<u32>) -> u32 {
+    // lint:allow(no-panic-in-lib): fixture-documented invariant makes None
+    // impossible here
+    v.unwrap()
+}

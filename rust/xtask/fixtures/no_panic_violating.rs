@@ -1,0 +1,7 @@
+pub fn risky(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn also_risky(v: Option<u32>) -> u32 {
+    v.expect("present")
+}

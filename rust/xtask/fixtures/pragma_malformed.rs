@@ -1,0 +1,5 @@
+// lint:allow(no-such-rule): bogus rule name
+pub fn fine() {}
+
+// lint:allow(no-panic-in-lib)
+pub fn missing_reason() {}

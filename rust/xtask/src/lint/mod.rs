@@ -1,0 +1,295 @@
+//! The in-repo invariant linter behind `cargo xtask lint`.
+//!
+//! Four rules (see the README's "Static analysis & model checking"):
+//!
+//! - `no-panic-in-lib` — no `.unwrap()` / `.expect(...)` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` in non-test library code;
+//!   binaries (`main.rs`, `bin/`) are exempt.
+//! - `determinism` — no wall-clock (`SystemTime::now`, `Instant::now`) or
+//!   OS-randomness tokens anywhere, and no `HashMap`/`HashSet` in
+//!   `strategies/` or `metrics/`, whose iteration order can leak into
+//!   reports.
+//! - `config-gate` — every `pub struct *Policy` in `config/mod.rs` must be
+//!   reachable from `SystemConfig::validate`.
+//! - `atomics-ordering` — atomics use `Ordering::SeqCst` unless a pragma
+//!   justifies otherwise, and `coordinator/` goes through
+//!   `crate::util::sync` so loom can swap the types under `cfg(loom)`.
+//!
+//! Intentional violations carry `// lint:allow(<rule>): <reason>` on (or
+//! directly above) the offending line. Malformed and unused pragmas are
+//! themselves violations, reported under the synthetic rule `pragma`.
+
+pub mod rules;
+pub mod scan;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// One line-anchored lint finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the lint root, `/`-separated (rules scope by dir).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Lint one source file. `rel` is the path relative to the lint root with
+/// `/` separators — several rules are directory-scoped.
+pub fn lint_source(rel: &str, text: &str) -> Vec<Diagnostic> {
+    let s = scan::scan(text);
+    let mut diags = rules::line_rules(rel, &s.lines);
+    if rel == "config/mod.rs" {
+        diags.extend(rules::config_gate(rel, &s.lines));
+    }
+    let mut used = vec![false; s.pragmas.len()];
+    let mut out = Vec::new();
+    for d in diags {
+        match s.pragmas.iter().position(|p| p.rule == d.rule && p.target == d.line) {
+            Some(pi) => used[pi] = true,
+            None => out.push(d),
+        }
+    }
+    for (ln, msg) in s.malformed {
+        out.push(Diagnostic { file: rel.to_string(), line: ln, rule: "pragma", message: msg });
+    }
+    for (pi, p) in s.pragmas.iter().enumerate() {
+        if !used[pi] {
+            out.push(Diagnostic {
+                file: rel.to_string(),
+                line: p.line,
+                rule: "pragma",
+                message: format!(
+                    "unused lint:allow({}) — nothing to suppress on line {}",
+                    p.rule, p.target
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Walk `root`, lint every `.rs` file, print diagnostics as
+/// `<root>/<file>:<line>: [<rule>] <message>`, and exit nonzero on any.
+pub fn run(root: &Path) -> ExitCode {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files);
+    files.sort();
+    let mut diags = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        match std::fs::read_to_string(path) {
+            Ok(text) => diags.extend(lint_source(&rel, &text)),
+            Err(e) => {
+                eprintln!("xtask lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    diags.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    for d in &diags {
+        println!("{}/{}:{}: [{}] {}", root.display(), d.file, d.line, d.rule, d.message);
+    }
+    println!("{} violation(s)", diags.len());
+    if diags.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()))
+    }
+
+    fn rules_of(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn no_panic_flags_unwrap_and_expect_with_lines() {
+        let diags = lint_source("util/fx.rs", &fixture("no_panic_violating.rs"));
+        assert_eq!(rules_of(&diags), ["no-panic-in-lib", "no-panic-in-lib"]);
+        assert!(diags[0].message.contains("`.unwrap()`"), "{diags:?}");
+        assert!(diags[1].message.contains("`.expect`"), "{diags:?}");
+        assert!(diags[0].line < diags[1].line);
+    }
+
+    #[test]
+    fn no_panic_exempts_binaries() {
+        let text = fixture("no_panic_violating.rs");
+        assert!(lint_source("main.rs", &text).is_empty());
+        assert!(lint_source("bin/paper.rs", &text).is_empty());
+    }
+
+    #[test]
+    fn no_panic_clean_file_passes_and_tests_are_exempt() {
+        assert!(lint_source("util/fx.rs", &fixture("no_panic_clean.rs")).is_empty());
+    }
+
+    #[test]
+    fn no_panic_pragma_suppresses_and_counts_as_used() {
+        assert!(lint_source("util/fx.rs", &fixture("no_panic_pragma.rs")).is_empty());
+    }
+
+    #[test]
+    fn determinism_flags_wall_clock() {
+        let diags = lint_source("util/fx.rs", &fixture("determinism_violating.rs"));
+        assert_eq!(rules_of(&diags), ["determinism", "determinism"]);
+        assert!(diags[0].message.contains("Instant::now"), "{diags:?}");
+        assert!(diags[1].message.contains("SystemTime::now"), "{diags:?}");
+    }
+
+    #[test]
+    fn determinism_pragma_suppresses() {
+        assert!(lint_source("util/fx.rs", &fixture("determinism_pragma.rs")).is_empty());
+    }
+
+    #[test]
+    fn hash_maps_banned_only_in_ordered_output_dirs() {
+        let text = fixture("maps_violating.rs");
+        let diags = lint_source("strategies/fx.rs", &text);
+        assert!(!diags.is_empty());
+        assert!(diags.iter().all(|d| d.rule == "determinism"), "{diags:?}");
+        assert!(diags[0].message.contains("strategies/"), "{diags:?}");
+        let diags = lint_source("metrics/fx.rs", &text);
+        assert!(diags.iter().any(|d| d.message.contains("metrics/")), "{diags:?}");
+        // outside the scoped dirs a HashMap is fine
+        assert!(lint_source("runtime/fx.rs", &text).is_empty());
+        assert!(lint_source("strategies/fx.rs", &fixture("maps_clean.rs")).is_empty());
+    }
+
+    #[test]
+    fn non_seqcst_orderings_flagged_everywhere() {
+        let diags = lint_source("runtime/fx.rs", &fixture("atomics_violating.rs"));
+        assert_eq!(rules_of(&diags), ["atomics-ordering"]);
+        assert!(diags[0].message.contains("Ordering::Relaxed"), "{diags:?}");
+    }
+
+    #[test]
+    fn coordinator_must_use_the_sync_shim() {
+        let diags = lint_source("coordinator/fx.rs", &fixture("atomics_violating.rs"));
+        assert_eq!(rules_of(&diags), ["atomics-ordering", "atomics-ordering"]);
+        assert!(diags[0].message.contains("util::sync"), "{diags:?}");
+    }
+
+    #[test]
+    fn seqcst_and_pragmad_atomics_pass() {
+        assert!(lint_source("runtime/fx.rs", &fixture("atomics_clean.rs")).is_empty());
+    }
+
+    #[test]
+    fn config_gate_reports_unvalidated_policy() {
+        let diags = lint_source("config/mod.rs", &fixture("config_gate_violating.rs"));
+        assert_eq!(rules_of(&diags), ["config-gate"]);
+        assert!(diags[0].message.contains("OrphanPolicy"), "{diags:?}");
+        // the rule is scoped to config/mod.rs
+        assert!(lint_source("config/other.rs", &fixture("config_gate_violating.rs")).is_empty());
+    }
+
+    #[test]
+    fn config_gate_accepts_transitively_validated_policies() {
+        assert!(lint_source("config/mod.rs", &fixture("config_gate_clean.rs")).is_empty());
+    }
+
+    #[test]
+    fn malformed_pragmas_are_violations() {
+        let diags = lint_source("util/fx.rs", &fixture("pragma_malformed.rs"));
+        assert_eq!(rules_of(&diags), ["pragma", "pragma"]);
+        assert!(diags[0].message.contains("unknown lint rule"), "{diags:?}");
+        assert!(diags[1].message.contains("must carry a reason"), "{diags:?}");
+    }
+
+    #[test]
+    fn unused_pragmas_are_violations() {
+        let diags = lint_source("util/fx.rs", &fixture("pragma_unused.rs"));
+        assert_eq!(rules_of(&diags), ["pragma"]);
+        assert!(diags[0].message.contains("unused lint:allow"), "{diags:?}");
+    }
+
+    #[test]
+    fn tokens_in_strings_and_comments_do_not_trip() {
+        let text = concat!(
+            "pub fn doc() -> &'static str {\n",
+            "    // Instant::now() would break things\n",
+            "    \"call .unwrap() and Instant::now\"\n",
+            "}\n",
+        );
+        assert!(lint_source("util/fx.rs", text).is_empty());
+        let raw = concat!(
+            "pub fn raw() -> &'static str {\n",
+            "    r#\"panic!(\"nope\") .expect(\"#\n",
+            "}\n",
+        );
+        assert!(lint_source("util/fx.rs", raw).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_modules_are_exempt() {
+        let text = concat!(
+            "pub fn ok() {}\n\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() {\n",
+            "        Some(1).unwrap();\n",
+            "    }\n",
+            "}\n",
+        );
+        assert!(lint_source("util/fx.rs", text).is_empty());
+    }
+
+    #[test]
+    fn real_source_tree_is_lint_clean() {
+        // the acceptance bar: HEAD lints clean; run against rust/src when
+        // present (always, in-repo) so regressions fail tier-1 too
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|p| p.join("src"))
+            .filter(|p| p.is_dir());
+        let Some(root) = root else { return };
+        let mut files = Vec::new();
+        collect_rs_files(&root, &mut files);
+        assert!(!files.is_empty(), "no sources under {}", root.display());
+        let mut all = Vec::new();
+        for path in &files {
+            let rel = path
+                .strip_prefix(&root)
+                .unwrap_or(path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            let text = std::fs::read_to_string(path).expect("source readable");
+            all.extend(lint_source(&rel, &text));
+        }
+        assert!(all.is_empty(), "lint violations on HEAD: {all:#?}");
+    }
+}

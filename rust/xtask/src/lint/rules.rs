@@ -1,0 +1,330 @@
+//! The rule set: per-line token rules and the `config-gate` reachability
+//! rule. Every rule matches against stripped code (see [`super::scan`]), so
+//! strings, comments and test regions are already out of the picture.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::scan::Line;
+use super::Diagnostic;
+
+/// `no-panic-in-lib`: panicking constructs banned from library code
+/// (binaries — `main.rs` and `bin/` — are exempt).
+const NO_PANIC: [&str; 7] = [
+    ".unwrap()",
+    ".unwrap_err()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// `determinism`: wall-clock and OS-randomness tokens banned everywhere
+/// (pragma intentional telemetry sites).
+const DETERMINISM: [&str; 7] = [
+    "SystemTime::now",
+    "Instant::now",
+    "thread_rng",
+    "from_entropy",
+    "rand::random",
+    "getrandom",
+    "RandomState",
+];
+
+/// Directories whose output paths must not iterate hash maps.
+const ORDERED_MAP_DIRS: [&str; 2] = ["strategies/", "metrics/"];
+
+/// `atomics-ordering`: every non-SeqCst ordering needs a pragma.
+const NON_SEQCST: [&str; 4] =
+    ["Ordering::Relaxed", "Ordering::Acquire", "Ordering::Release", "Ordering::AcqRel"];
+
+fn identish(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn is_token(code: &str, pat: &str, pos: usize) -> bool {
+    let before = code[..pos].chars().next_back();
+    let after = code[pos + pat.len()..].chars().next();
+    !before.is_some_and(identish) && !after.is_some_and(identish)
+}
+
+/// Find `pat` in `code`; identifier-leading patterns are matched on word
+/// boundaries so e.g. `Instant::now` never matches inside a longer ident.
+fn find_token(code: &str, pat: &str) -> Option<usize> {
+    let first = pat.chars().next()?;
+    let mut start = 0usize;
+    while let Some(off) = code[start..].find(pat) {
+        let pos = start + off;
+        if !(first.is_alphanumeric() || first == '_') || is_token(code, pat, pos) {
+            return Some(pos);
+        }
+        start = pos + pat.len();
+    }
+    None
+}
+
+/// All per-line token rules over one file.
+pub fn line_rules(rel: &str, lines: &[Line]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let is_binary = rel == "main.rs" || rel.starts_with("bin/");
+    let in_map_scope = ORDERED_MAP_DIRS.iter().any(|d| rel.starts_with(d));
+    let in_coordinator = rel.starts_with("coordinator/");
+    let top_dir = rel.split('/').next().unwrap_or(rel);
+    for (idx, l) in lines.iter().enumerate() {
+        if l.in_test || l.code.trim().is_empty() {
+            continue;
+        }
+        let code = &l.code;
+        let line = idx + 1;
+        if !is_binary {
+            for pat in NO_PANIC {
+                if find_token(code, pat).is_some() {
+                    diags.push(Diagnostic {
+                        file: rel.to_string(),
+                        line,
+                        rule: "no-panic-in-lib",
+                        message: format!(
+                            "`{}` in library code — return a typed error instead",
+                            pat.trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+        for pat in DETERMINISM {
+            if find_token(code, pat).is_some() {
+                diags.push(Diagnostic {
+                    file: rel.to_string(),
+                    line,
+                    rule: "determinism",
+                    message: format!("`{pat}` breaks run-to-run determinism"),
+                });
+            }
+        }
+        if in_map_scope {
+            for pat in ["HashMap", "HashSet"] {
+                if find_token(code, pat).is_some() {
+                    diags.push(Diagnostic {
+                        file: rel.to_string(),
+                        line,
+                        rule: "determinism",
+                        message: format!(
+                            "`{pat}` in {top_dir}/ — iteration order can leak into \
+                             output; use BTreeMap/BTreeSet or sort explicitly"
+                        ),
+                    });
+                }
+            }
+        }
+        for pat in NON_SEQCST {
+            if find_token(code, pat).is_some() {
+                diags.push(Diagnostic {
+                    file: rel.to_string(),
+                    line,
+                    rule: "atomics-ordering",
+                    message: format!(
+                        "`{pat}` — admission-plane atomics must use Ordering::SeqCst \
+                         (or carry a pragma)"
+                    ),
+                });
+            }
+        }
+        if in_coordinator && find_token(code, "std::sync::atomic").is_some() {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line,
+                rule: "atomics-ordering",
+                message: "direct std::sync::atomic use in coordinator/ — go through \
+                          crate::util::sync so loom can swap it"
+                    .to_string(),
+            });
+        }
+    }
+    diags
+}
+
+fn is_identifier(s: &str) -> bool {
+    let mut cs = s.chars();
+    match cs.next() {
+        Some(c) if c.is_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    cs.all(identish)
+}
+
+fn struct_name(stripped: &str) -> String {
+    let after = stripped.split_once("struct ").map_or("", |x| x.1);
+    after.split('{').next().unwrap_or("").split('(').next().unwrap_or("").trim().to_string()
+}
+
+fn base_type(ftype: &str) -> String {
+    let head = ftype.split('<').next().unwrap_or("");
+    head.rsplit("::").next().unwrap_or("").trim().to_string()
+}
+
+/// `config-gate`: every `pub struct *Policy` in `config/mod.rs` must be
+/// reachable from `SystemConfig::validate` through `self.<field>.validate()`
+/// edges — otherwise a policy can be constructed that no validation path
+/// ever checks.
+pub fn config_gate(rel: &str, lines: &[Line]) -> Vec<Diagnostic> {
+    // struct name -> {field -> base type}; struct name -> definition line
+    let mut fields: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+    let mut def_line: BTreeMap<String, usize> = BTreeMap::new();
+    let mut policies: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < lines.len() {
+        if lines[i].in_test {
+            i += 1;
+            continue;
+        }
+        let stripped = lines[i].code.trim().to_string();
+        if stripped.starts_with("pub struct ") || stripped.starts_with("struct ") {
+            let name = struct_name(&stripped);
+            def_line.insert(name.clone(), i + 1);
+            if stripped.starts_with("pub struct ") && name.ends_with("Policy") {
+                policies.push(name.clone());
+            }
+            let mut fmap: BTreeMap<String, String> = BTreeMap::new();
+            let mut j = i;
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            while j < lines.len() {
+                let c2 = &lines[j].code;
+                for ch in c2.chars() {
+                    if ch == '{' {
+                        depth += 1;
+                        opened = true;
+                    } else if ch == '}' {
+                        depth -= 1;
+                    }
+                }
+                if (opened && j > i) || (opened && c2.contains('{')) {
+                    let s2 = c2.trim();
+                    if s2.contains(':') {
+                        let fname = s2.split(':').next().unwrap_or("").replace("pub ", "");
+                        let fname = fname.trim();
+                        let ftype = s2.split_once(':').map_or("", |x| x.1);
+                        let ftype = ftype.trim().trim_end_matches(',');
+                        if is_identifier(fname) {
+                            fmap.insert(fname.to_string(), base_type(ftype));
+                        }
+                    }
+                }
+                if opened && depth == 0 {
+                    break;
+                }
+                j += 1;
+            }
+            fields.insert(name, fmap);
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+
+    // inherent impl blocks -> `fn validate` bodies -> field-type edges
+    let mut edges: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut i = 0usize;
+    while i < lines.len() {
+        let stripped = lines[i].code.trim().to_string();
+        let inherent = stripped
+            .strip_prefix("impl ")
+            .filter(|_| !stripped.contains(" for "))
+            .map(|rest| rest.split('{').next().unwrap_or("").trim().to_string());
+        if let Some(name) = inherent {
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut j = i;
+            let mut end = lines.len().saturating_sub(1);
+            while j < lines.len() {
+                for ch in lines[j].code.chars() {
+                    if ch == '{' {
+                        depth += 1;
+                        opened = true;
+                    } else if ch == '}' {
+                        depth -= 1;
+                    }
+                }
+                if opened && depth == 0 {
+                    end = j;
+                    break;
+                }
+                j += 1;
+            }
+            let mut k = i;
+            while k <= end {
+                let has_validate = lines[k].code.trim().contains("fn validate");
+                if has_validate && !lines[k].in_test {
+                    let mut fd: i64 = 0;
+                    let mut fopened = false;
+                    let mut m = k;
+                    while m <= end {
+                        let c3 = &lines[m].code;
+                        let mut pos = 0usize;
+                        while let Some(off) = c3[pos..].find("self.") {
+                            let p = pos + off;
+                            let restc = &c3[p + 5..];
+                            let flen: usize = restc
+                                .chars()
+                                .take_while(|c| identish(*c))
+                                .map(char::len_utf8)
+                                .sum();
+                            let fname = &restc[..flen];
+                            if restc[flen..].starts_with(".validate") {
+                                if let Some(base) = fields.get(&name).and_then(|f| f.get(fname)) {
+                                    edges.entry(name.clone()).or_default().insert(base.clone());
+                                }
+                            }
+                            pos = p + 5;
+                        }
+                        for ch in c3.chars() {
+                            if ch == '{' {
+                                fd += 1;
+                                fopened = true;
+                            } else if ch == '}' {
+                                fd -= 1;
+                            }
+                        }
+                        if fopened && fd == 0 {
+                            break;
+                        }
+                        m += 1;
+                    }
+                    k = m;
+                }
+                k += 1;
+            }
+            i = end + 1;
+            continue;
+        }
+        i += 1;
+    }
+
+    let mut reached: BTreeSet<String> = BTreeSet::new();
+    let mut stack = vec!["SystemConfig".to_string()];
+    while let Some(cur) = stack.pop() {
+        if !reached.insert(cur.clone()) {
+            continue;
+        }
+        if let Some(nexts) = edges.get(&cur) {
+            for nxt in nexts {
+                stack.push(nxt.clone());
+            }
+        }
+    }
+
+    let mut diags = Vec::new();
+    for p in &policies {
+        if !reached.contains(p) {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line: def_line.get(p).copied().unwrap_or(1),
+                rule: "config-gate",
+                message: format!(
+                    "pub policy struct `{p}` is not validated from SystemConfig::validate"
+                ),
+            });
+        }
+    }
+    diags
+}

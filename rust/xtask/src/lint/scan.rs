@@ -1,0 +1,301 @@
+//! Lexical pass: strip comments and string/char literals, mark
+//! `#[cfg(test)]` / `#[test]` regions, and parse
+//! `// lint:allow(<rule>): <reason>` pragmas.
+//!
+//! The stripped per-line code is what the rules in [`super::rules`] match
+//! against, so a banned token inside a string, a comment or test-only code
+//! never trips a rule.
+
+/// The rule names a pragma may name.
+pub const RULES: [&str; 4] = ["no-panic-in-lib", "determinism", "config-gate", "atomics-ordering"];
+
+/// One source line after stripping: code with comments and literal bodies
+/// removed, the comment text (for pragma parsing), and whether the line
+/// sits inside a `#[cfg(test)]` / `#[test]` item.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+    pub in_test: bool,
+}
+
+/// A parsed `// lint:allow(rule): reason` pragma. `target` is the 1-based
+/// line the suppression applies to: the pragma's own line when it carries
+/// code, otherwise the next line that does.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    pub rule: String,
+    pub target: usize,
+    pub line: usize,
+}
+
+/// Scanner output: stripped lines, valid pragmas, and malformed-pragma
+/// notes as `(1-based line, message)`.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub lines: Vec<Line>,
+    pub pragmas: Vec<Pragma>,
+    pub malformed: Vec<(usize, String)>,
+}
+
+enum State {
+    Code,
+    LineComment,
+    Block,
+    Str,
+    RawStr,
+}
+
+pub fn scan(text: &str) -> Scan {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut comment_lines: Vec<String> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut depth = 0usize; // block-comment nesting
+    let mut raw_hashes = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let nxt = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && nxt == '/' {
+                    state = State::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && nxt == '*' {
+                    state = State::Block;
+                    depth = 1;
+                    i += 2;
+                    continue;
+                }
+                // raw strings: r"..." / r#"..."# / br#"..."#
+                if c == 'r' || c == 'b' {
+                    let mut j = i;
+                    if c == 'b' && chars.get(j + 1) == Some(&'r') {
+                        j += 1;
+                    }
+                    if chars[j] == 'r' {
+                        let mut k = j + 1;
+                        let mut h = 0usize;
+                        while k < n && chars[k] == '#' {
+                            h += 1;
+                            k += 1;
+                        }
+                        if k < n && chars[k] == '"' {
+                            code.push('"');
+                            raw_hashes = h;
+                            state = State::RawStr;
+                            i = k + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    // char literal vs lifetime: a literal iff the quote is
+                    // followed by an escape, or closes two chars later
+                    let n1 = chars.get(i + 1).copied().unwrap_or('\0');
+                    let n2 = chars.get(i + 2).copied().unwrap_or('\0');
+                    if n1 == '\\' || (n1 != '\'' && n2 == '\'') {
+                        code.push_str("''");
+                        i += 1;
+                        if chars.get(i) == Some(&'\\') {
+                            i += 1; // escape head
+                            while i < n && chars[i] != '\'' {
+                                i += 1; // escape body
+                            }
+                        } else {
+                            i += 1; // the char itself
+                        }
+                        i += 1; // closing quote
+                        continue;
+                    }
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::Block => {
+                let nxt = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && nxt == '*' {
+                    depth += 1;
+                    i += 2;
+                    comment.push_str("/*");
+                    continue;
+                }
+                if c == '*' && nxt == '/' {
+                    depth -= 1;
+                    i += 2;
+                    if depth == 0 {
+                        state = State::Code;
+                    } else {
+                        comment.push_str("*/");
+                    }
+                    continue;
+                }
+                comment.push(c);
+                i += 1;
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                }
+                i += 1;
+            }
+            State::RawStr => {
+                if c == '"' {
+                    let mut k = i + 1;
+                    let mut h = 0usize;
+                    while k < n && h < raw_hashes && chars[k] == '#' {
+                        h += 1;
+                        k += 1;
+                    }
+                    if h == raw_hashes {
+                        code.push('"');
+                        state = State::Code;
+                        i = k;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    code_lines.push(code);
+    comment_lines.push(comment);
+
+    let mut lines: Vec<Line> = code_lines
+        .into_iter()
+        .zip(comment_lines)
+        .map(|(code, comment)| Line { code, comment, in_test: false })
+        .collect();
+
+    // test regions: the item following a test attribute is exempt
+    let mut ln = 0usize;
+    while ln < lines.len() {
+        let t = lines[ln].code.trim();
+        if t.starts_with("#[cfg(test") || t.starts_with("#[test]") {
+            mark_region(&mut lines, ln);
+        }
+        ln += 1;
+    }
+
+    let (pragmas, malformed) = parse_pragmas(&lines);
+    Scan { lines, pragmas, malformed }
+}
+
+/// Mark the item following an attribute at `start` as test code: brace-match
+/// to the item's closing `}`, or to a `;` at depth 0 before any brace opens.
+fn mark_region(lines: &mut [Line], start: usize) {
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    let mut j = start;
+    while j < lines.len() {
+        let code = lines[j].code.clone();
+        for ch in code.chars() {
+            if !opened && ch == ';' && depth == 0 {
+                for l in &mut lines[start..=j] {
+                    l.in_test = true;
+                }
+                return;
+            }
+            if ch == '{' {
+                depth += 1;
+                opened = true;
+            } else if ch == '}' {
+                depth -= 1;
+                if opened && depth == 0 {
+                    for l in &mut lines[start..=j] {
+                        l.in_test = true;
+                    }
+                    return;
+                }
+            }
+        }
+        j += 1;
+    }
+    for l in &mut lines[start..] {
+        l.in_test = true;
+    }
+}
+
+fn parse_pragmas(lines: &[Line]) -> (Vec<Pragma>, Vec<(usize, String)>) {
+    let mut pragmas = Vec::new();
+    let mut malformed = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        let com = &l.comment;
+        let Some(pos) = com.find("lint:allow(") else { continue };
+        let rest = &com[pos + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            malformed.push((idx + 1, "malformed lint:allow pragma: missing ')'".to_string()));
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        let after = &rest[close + 1..];
+        if !RULES.contains(&rule.as_str()) && rule != "pragma" {
+            malformed.push((idx + 1, format!("unknown lint rule '{rule}' in lint:allow")));
+            continue;
+        }
+        let Some(reason) = after.trim_start().strip_prefix(':') else {
+            malformed.push((
+                idx + 1,
+                "lint:allow pragma must carry a reason: `// lint:allow(rule): reason`".to_string(),
+            ));
+            continue;
+        };
+        let reason = reason.trim();
+        if reason.is_empty() {
+            malformed
+                .push((idx + 1, "lint:allow pragma must carry a non-empty reason".to_string()));
+            continue;
+        }
+        // attach: the pragma's own line if it carries code, else the next
+        // line that does
+        let target = if !l.code.trim().is_empty() {
+            Some(idx + 1)
+        } else {
+            lines
+                .iter()
+                .enumerate()
+                .skip(idx + 1)
+                .find(|(_, l2)| !l2.code.trim().is_empty())
+                .map(|(j, _)| j + 1)
+        };
+        match target {
+            Some(t) => pragmas.push(Pragma { rule, target: t, line: idx + 1 }),
+            None => malformed.push((idx + 1, "lint:allow pragma targets no code".to_string())),
+        }
+    }
+    (pragmas, malformed)
+}

@@ -1,0 +1,44 @@
+//! Repo-local task runner, invoked as `cargo xtask <command>` via the
+//! `[alias]` in `.cargo/config.toml`.
+//!
+//! Commands:
+//! - `lint [src-root]` — run the in-repo invariant linter over the library
+//!   sources (defaults to `rust/src`, located relative to this crate so it
+//!   works from any working directory). Exits nonzero on any violation.
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {
+            let root = args.next().map(PathBuf::from).unwrap_or_else(default_src_root);
+            if !root.is_dir() {
+                eprintln!("xtask lint: source root {} is not a directory", root.display());
+                return ExitCode::from(2);
+            }
+            lint::run(&root)
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown command `{other}` (available: lint)");
+            ExitCode::from(2)
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint [src-root]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// The library sources live at `rust/src`, one level up from this crate's
+/// manifest (`rust/xtask`) — resolved at compile time so the tool is
+/// independent of the invocation directory.
+fn default_src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("src"))
+        .unwrap_or_else(|| PathBuf::from("rust/src"))
+}
