@@ -208,6 +208,96 @@ impl LinkPlanPolicy {
     }
 }
 
+/// Runtime fleet-churn policy (ISSUE 8): how the serving leader reacts to
+/// devices joining, draining and rejoining at runtime. Joiners shadow their
+/// assigned members for [`ChurnPolicy::warmup_batches`] batches before
+/// counting toward quorum; when the live fleet's effective-GFLOPS
+/// composition drifts past [`ChurnPolicy::staleness_threshold`] relative to
+/// the composition the current decomposition was planned for, the leader
+/// triggers an incremental DeBo re-search warm-started from its persistent
+/// GP posterior ([`crate::debo::DeBoSearch::run_warm`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnPolicy {
+    /// Master switch for the re-planner. Disabled, churn events still move
+    /// membership through its lifecycle but the decomposition stays as
+    /// planned at start (stale-policy serving).
+    pub enabled: bool,
+    /// Fractional shift of live effective GFLOPS vs the planned-for
+    /// composition (|live − planned| / planned) at or above which a
+    /// re-plan fires. Must be finite and > 0.
+    pub staleness_threshold: f64,
+    /// Batches a joining (or rejoining) device shadow-executes its assigned
+    /// members before its arrivals count toward quorum.
+    pub warmup_batches: usize,
+    /// BO iterations per incremental re-search (the warm-started posterior
+    /// already carries the earlier runs' observations, so this stays small).
+    pub replan_iterations: usize,
+    /// EI candidate pool per re-search iteration.
+    pub replan_candidates: usize,
+}
+
+impl Default for ChurnPolicy {
+    fn default() -> Self {
+        ChurnPolicy {
+            enabled: false,
+            staleness_threshold: 0.25,
+            warmup_batches: 2,
+            replan_iterations: 8,
+            replan_candidates: 64,
+        }
+    }
+}
+
+impl ChurnPolicy {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let opt_f64 = |key: &str, dv: f64| -> Result<f64> {
+            v.get(key).map(|x| x.as_f64()).transpose().map(|o| o.unwrap_or(dv))
+        };
+        let opt_usize = |key: &str, dv: usize| -> Result<usize> {
+            v.get(key).map(|x| x.as_usize()).transpose().map(|o| o.unwrap_or(dv))
+        };
+        let p = ChurnPolicy {
+            enabled: v
+                .get("enabled")
+                .map(|b| b.as_bool())
+                .transpose()?
+                .unwrap_or(d.enabled),
+            staleness_threshold: opt_f64("staleness_threshold", d.staleness_threshold)?,
+            warmup_batches: opt_usize("warmup_batches", d.warmup_batches)?,
+            replan_iterations: opt_usize("replan_iterations", d.replan_iterations)?,
+            replan_candidates: opt_usize("replan_candidates", d.replan_candidates)?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Shared by JSON parsing and [`SystemConfig::validate`] (a hand-built
+    /// policy fed to the coordinator goes through the identical checks).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.staleness_threshold.is_finite() && self.staleness_threshold > 0.0,
+            "churn staleness_threshold {} must be finite and > 0 (0 would \
+             re-plan on every batch of a churning fleet)",
+            self.staleness_threshold
+        );
+        anyhow::ensure!(
+            self.warmup_batches >= 1,
+            "churn warmup_batches must be >= 1 (a joiner must shadow at \
+             least one batch before counting toward quorum)"
+        );
+        anyhow::ensure!(
+            self.replan_iterations >= 1,
+            "churn replan_iterations must be >= 1"
+        );
+        anyhow::ensure!(
+            self.replan_candidates >= 1,
+            "churn replan_candidates must be >= 1"
+        );
+        Ok(())
+    }
+}
+
 /// Per-member override of the elision thresholds (ISSUE 5): a member named
 /// by fleet index can run hotter or colder watermarks than the fleet
 /// default, and carry its own energy budget. Unset fields inherit the
@@ -580,6 +670,9 @@ pub struct SystemConfig {
     pub replication: ReplicationPolicy,
     /// Runtime link re-planning policy (ISSUE 6).
     pub linkplan: LinkPlanPolicy,
+    /// Runtime fleet-churn policy (ISSUE 8): join/drain warm-up and the
+    /// staleness-triggered online DeBo re-plan.
+    pub churn: ChurnPolicy,
 }
 
 impl SystemConfig {
@@ -630,6 +723,11 @@ impl SystemConfig {
                 .map(LinkPlanPolicy::from_json)
                 .transpose()?
                 .unwrap_or_default(),
+            churn: v
+                .get("churn")
+                .map(ChurnPolicy::from_json)
+                .transpose()?
+                .unwrap_or_default(),
         };
         c.validate()?;
         Ok(c)
@@ -666,6 +764,7 @@ impl SystemConfig {
         );
         self.replication.validate()?;
         self.linkplan.validate()?;
+        self.churn.validate()?;
         if !custom_signal {
             self.replication.validate_elision_signals()?;
         }
@@ -713,6 +812,7 @@ impl SystemConfig {
             fault: FaultPolicy::default(),
             replication: ReplicationPolicy::default(),
             linkplan: LinkPlanPolicy::default(),
+            churn: ChurnPolicy::default(),
         }
     }
 
@@ -818,6 +918,46 @@ mod tests {
         let mut c = SystemConfig::paper_default();
         c.linkplan.slowdown_threshold = 0.9;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn churn_parses_defaults_and_bounds() {
+        let json = r#"{"devices":["jetson-nano"],"deployment":"x"}"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(c.churn, ChurnPolicy::default());
+        assert!(!c.churn.enabled, "re-planning is opt-in");
+
+        let json = r#"{
+          "devices":["jetson-nano"],"deployment":"x",
+          "churn":{"enabled":true,"staleness_threshold":0.4,"warmup_batches":3,
+                   "replan_iterations":12,"replan_candidates":32}
+        }"#;
+        let c = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert!(c.churn.enabled);
+        assert!((c.churn.staleness_threshold - 0.4).abs() < 1e-12);
+        assert_eq!(c.churn.warmup_batches, 3);
+        assert_eq!(c.churn.replan_iterations, 12);
+        assert_eq!(c.churn.replan_candidates, 32);
+
+        for bad in [
+            r#"{"devices":["jetson-nano"],"deployment":"x",
+                "churn":{"staleness_threshold":0.0}}"#,
+            r#"{"devices":["jetson-nano"],"deployment":"x",
+                "churn":{"staleness_threshold":-0.5}}"#,
+            r#"{"devices":["jetson-nano"],"deployment":"x",
+                "churn":{"warmup_batches":0}}"#,
+            r#"{"devices":["jetson-nano"],"deployment":"x",
+                "churn":{"replan_iterations":0}}"#,
+            r#"{"devices":["jetson-nano"],"deployment":"x",
+                "churn":{"replan_candidates":0}}"#,
+        ] {
+            assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+        }
+
+        // the shared validate gate catches hand-built invalid policies too
+        let mut c = SystemConfig::paper_default();
+        c.churn.warmup_batches = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("warmup_batches"));
     }
 
     #[test]

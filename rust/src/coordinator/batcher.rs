@@ -19,6 +19,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::membership::ChurnOp;
 use super::{Admission, InferenceRequest, LeaderMsg};
 
 #[derive(Clone, Copy, Debug)]
@@ -76,10 +77,14 @@ impl Default for IntakePressure {
 }
 
 /// One shipped batch: the coalesced requests plus the intake pressure
-/// observed the moment the batch closed.
+/// observed the moment the batch closed, and any runtime churn operations
+/// (ISSUE 8) that arrived since the previous batch — membership changes
+/// apply at batch boundaries only, so churn rides the batch that follows
+/// it. Pending ops still queued at shutdown are dropped with the channel.
 pub struct Batch {
     pub requests: Vec<InferenceRequest>,
     pub pressure: IntakePressure,
+    pub churn: Vec<ChurnOp>,
 }
 
 /// Pulls from the request channel and forms batches.
@@ -89,12 +94,14 @@ pub struct Batcher {
     closed: bool,
     /// Admission gate to snapshot pressure from; `None` reports unbounded.
     gate: Option<Arc<Admission>>,
+    /// Runtime churn ops buffered for the next shipped batch (ISSUE 8).
+    pending_churn: Vec<ChurnOp>,
 }
 
 impl Batcher {
     pub fn new(rx: mpsc::Receiver<LeaderMsg>, config: BatcherConfig) -> Self {
         assert!(config.max_batch >= 1);
-        Batcher { rx, config, closed: false, gate: None }
+        Batcher { rx, config, closed: false, gate: None, pending_churn: Vec::new() }
     }
 
     /// Batcher wired to the coordinator's admission gate (leader-internal).
@@ -104,7 +111,7 @@ impl Batcher {
         gate: Arc<Admission>,
     ) -> Self {
         assert!(config.max_batch >= 1);
-        Batcher { rx, config, closed: false, gate: Some(gate) }
+        Batcher { rx, config, closed: false, gate: Some(gate), pending_churn: Vec::new() }
     }
 
     fn pressure(&self) -> IntakePressure {
@@ -120,10 +127,11 @@ impl Batcher {
         if self.closed {
             return None;
         }
-        // block for the first request
+        // block for the first request (churn ops buffer until a batch ships)
         let first = loop {
             match self.rx.recv().ok()? {
                 LeaderMsg::Request(r) => break r,
+                LeaderMsg::Churn(op) => self.pending_churn.push(op),
                 LeaderMsg::Shutdown => {
                     self.closed = true;
                     return None;
@@ -142,6 +150,7 @@ impl Batcher {
             }
             match self.rx.recv_timeout(deadline - now) {
                 Ok(LeaderMsg::Request(req)) => batch.push(req),
+                Ok(LeaderMsg::Churn(op)) => self.pending_churn.push(op),
                 Ok(LeaderMsg::Shutdown) => {
                     self.closed = true; // flush this batch, then stop
                     break;
@@ -150,7 +159,11 @@ impl Batcher {
                 Err(mpsc::RecvTimeoutError::Disconnected) => break, // flush
             }
         }
-        Some(Batch { requests: batch, pressure: self.pressure() })
+        Some(Batch {
+            requests: batch,
+            pressure: self.pressure(),
+            churn: std::mem::take(&mut self.pending_churn),
+        })
     }
 }
 
@@ -370,6 +383,32 @@ mod tests {
             RequestPayload::F32(v) => assert_eq!(v[0], 1.0),
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn churn_ops_ride_the_next_shipped_batch() {
+        let (tx, rx) = mpsc::sync_channel(16);
+        let mut b = Batcher::new(
+            rx,
+            BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(50) },
+        );
+        // an op sent before any request buffers until a batch ships
+        tx.send(LeaderMsg::Churn(ChurnOp::Drain(1))).unwrap();
+        let mut keeps = Vec::new();
+        for _ in 0..2 {
+            let (r, keep) = req();
+            keeps.push(keep);
+            tx.send(r).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.churn.len(), 1);
+        assert!(matches!(batch.churn[0], ChurnOp::Drain(1)));
+        // drained: the next batch carries no stale ops
+        let (r, _keep) = req();
+        tx.send(r).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert!(batch.churn.is_empty());
     }
 
     #[test]

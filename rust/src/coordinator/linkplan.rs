@@ -48,6 +48,17 @@ impl LinkPlanner {
         })
     }
 
+    /// Resize for a fleet that grew at runtime (ISSUE 8): new slots start
+    /// with no history, so they read as unit slowdown until they earn
+    /// `min_observations`. Never shrinks — a departed slot keeps its
+    /// history for a potential rejoin.
+    pub fn grow(&mut self, n_devices: usize) {
+        if n_devices > self.slowdown.len() {
+            self.slowdown.resize(n_devices, None);
+            self.observations.resize(n_devices, 0);
+        }
+    }
+
     /// Fold one batch's observed arrival for device `w` into its slowdown
     /// EWMA. `predicted_s` is the leader's deadline-model arrival (before
     /// the deadline factor); non-positive predictions are skipped — there
@@ -178,6 +189,22 @@ mod tests {
         p.observe(0, 1.0, 5.0);
         assert!(p.slowdown(0) > 1.0);
         assert!(p.contended(0));
+    }
+
+    #[test]
+    fn grow_adds_cold_slots_and_never_shrinks() {
+        let mut p = LinkPlanner::new(policy(), 2).unwrap();
+        for _ in 0..4 {
+            p.observe(1, 1.0, 3.0);
+        }
+        p.grow(4);
+        assert!((p.slowdown(3) - 1.0).abs() < 1e-12, "new slot is cold");
+        assert!(p.contended(1), "existing history survives the resize");
+        p.grow(1); // a smaller fleet must not drop history
+        assert!(p.contended(1));
+        p.observe(3, 1.0, 1.0);
+        p.observe(3, 1.0, 1.0);
+        assert!(!p.contended(3));
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! Runtime fleet membership (ISSUE 8). The serving fleet is no longer
+//! frozen at [`super::ServeBuilder::start`]: devices join, drain, crash and
+//! rejoin while the leader keeps serving. This module owns the typed
+//! lifecycle each device slot walks —
+//!
+//! ```text
+//!            join                     drain            re-covered
+//!   (new) ─────────▶ Joining ──▶ Active ──▶ Draining ──────────▶ Departed
+//!                      ▲  warm-up             │                      │
+//!                      │  complete            ▼                      │ rejoin
+//!                      └───────────────── Rejoining ◀────────────────┘
+//!                                        (after a crash too)
+//! ```
+//!
+//! — plus the batch-indexed [`ChurnScript`] (the churn twin of
+//! [`crate::device::FaultScript`]): scripts are keyed by *batch index*,
+//! never wall time, so every membership change fires at exactly the same
+//! point in every run and the churn suite (`tests/integration_churn.rs`)
+//! can assert exact ledgers. Runtime churn — [`super::CoordinatorHandle::join`]
+//! / [`super::CoordinatorHandle::drain`] — travels as [`ChurnOp`] messages
+//! and applies at the next batch boundary, the one place membership may
+//! change.
+//!
+//! Semantics the leader enforces through [`FleetMembership`]:
+//!
+//! * a **joining** (or rejoining) device *shadow-executes* its assigned
+//!   members for [`crate::config::ChurnPolicy::warmup_batches`] batches —
+//!   its arrivals are excluded from aggregation and quorum (counted in
+//!   `FaultMetrics::warming_excluded`) until the warm-up completes;
+//! * a **draining** device keeps serving every batch until each member it
+//!   hosts has another live host, and only then departs — a drain never
+//!   drops a queued batch;
+//! * **staleness**: the gap between the live fleet's aggregate effective
+//!   GFLOPS and the figure the current decomposition was planned for.
+//!   Past [`crate::config::ChurnPolicy::staleness_threshold`] the leader
+//!   triggers an incremental DeBo re-search warm-started from its
+//!   persistent `debo::gp` posterior.
+
+use std::collections::BTreeMap;
+
+use crate::device::DeviceProfile;
+
+/// Lifecycle state of one device slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberLifecycle {
+    /// Newly admitted; shadow-executing until its warm-up completes.
+    Joining,
+    /// Serving normally.
+    Active,
+    /// Still serving, departing as soon as its members are re-covered.
+    Draining,
+    /// Gone (graceful drain completed, or crashed). The slot is retained
+    /// so a later rejoin re-enters *here*, never as a fresh slot.
+    Departed,
+    /// A previously departed slot re-entering; shadow-executes like a
+    /// joiner until its warm-up completes.
+    Rejoining,
+}
+
+/// One scripted membership change.
+#[derive(Clone, Debug)]
+pub enum ChurnEvent {
+    /// A new device joins the fleet with this profile.
+    Join(DeviceProfile),
+    /// Device slot starts draining (serves until re-covered, then departs).
+    Drain(usize),
+    /// A departed/dead slot re-enters via `Rejoining` (same slot index).
+    Rejoin(usize),
+}
+
+/// A runtime churn operation submitted through the coordinator handle.
+/// Rejoin is script-only: a handle caller cannot know a slot died.
+#[derive(Clone, Debug)]
+pub enum ChurnOp {
+    Join(DeviceProfile),
+    Drain(usize),
+}
+
+/// Batch-indexed churn schedule — the membership twin of
+/// [`crate::device::FaultScript`]. Deterministic by construction: events
+/// fire right before the named batch is served.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnScript {
+    events: BTreeMap<usize, Vec<ChurnEvent>>,
+}
+
+impl ChurnScript {
+    /// A fleet that never churns.
+    pub fn none() -> Self {
+        ChurnScript::default()
+    }
+
+    /// Join a new device right before batch `batch_idx`.
+    pub fn join_at(batch_idx: usize, profile: DeviceProfile) -> Self {
+        ChurnScript::none().and_join_at(batch_idx, profile)
+    }
+
+    /// Start draining device slot `device` right before batch `batch_idx`.
+    pub fn drain_at(batch_idx: usize, device: usize) -> Self {
+        ChurnScript::none().and_drain_at(batch_idx, device)
+    }
+
+    pub fn and_join_at(mut self, batch_idx: usize, profile: DeviceProfile) -> Self {
+        self.events.entry(batch_idx).or_default().push(ChurnEvent::Join(profile));
+        self
+    }
+
+    pub fn and_drain_at(mut self, batch_idx: usize, device: usize) -> Self {
+        self.events.entry(batch_idx).or_default().push(ChurnEvent::Drain(device));
+        self
+    }
+
+    pub fn and_rejoin_at(mut self, batch_idx: usize, device: usize) -> Self {
+        self.events.entry(batch_idx).or_default().push(ChurnEvent::Rejoin(device));
+        self
+    }
+
+    /// Events scheduled right before batch `batch_idx`, in insertion order.
+    pub fn events_at(&self, batch_idx: usize) -> &[ChurnEvent] {
+        self.events.get(&batch_idx).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// The leader's membership ledger: one lifecycle state + warm-up counter
+/// per device slot, and the aggregate effective GFLOPS the current
+/// decomposition was planned for (the staleness denominator).
+#[derive(Clone, Debug)]
+pub struct FleetMembership {
+    states: Vec<MemberLifecycle>,
+    /// Shadow batches left before a Joining/Rejoining slot turns Active.
+    warmup_left: Vec<usize>,
+    /// Aggregate effective GFLOPS of the fleet the current decomposition
+    /// was planned against (0 until [`FleetMembership::mark_planned`]).
+    planned_gflops: f64,
+}
+
+impl FleetMembership {
+    /// A fleet of `n` devices, all immediately Active (the start-time
+    /// fleet never warms up — it is what the decomposition was planned
+    /// for).
+    pub fn new(n: usize) -> Self {
+        FleetMembership {
+            states: vec![MemberLifecycle::Active; n],
+            warmup_left: vec![0; n],
+            planned_gflops: 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn state(&self, w: usize) -> MemberLifecycle {
+        self.states[w]
+    }
+
+    /// Admit a brand-new device slot in `Joining`; returns its index.
+    pub fn begin_join(&mut self, warmup_batches: usize) -> usize {
+        self.states.push(MemberLifecycle::Joining);
+        self.warmup_left.push(warmup_batches);
+        self.states.len() - 1
+    }
+
+    /// Re-enter a departed (or crashed) slot via `Rejoining` — the same
+    /// slot index, never a fresh one.
+    pub fn begin_rejoin(&mut self, w: usize, warmup_batches: usize) {
+        self.states[w] = MemberLifecycle::Rejoining;
+        self.warmup_left[w] = warmup_batches;
+    }
+
+    /// Start draining slot `w`. Idempotent; a warming slot drains too
+    /// (its shadow work simply stops counting down).
+    pub fn begin_drain(&mut self, w: usize) {
+        if self.states[w] != MemberLifecycle::Departed {
+            self.states[w] = MemberLifecycle::Draining;
+        }
+    }
+
+    /// Slot `w` has left the fleet (drain completed, or crash observed).
+    pub fn depart(&mut self, w: usize) {
+        self.states[w] = MemberLifecycle::Departed;
+        self.warmup_left[w] = 0;
+    }
+
+    /// Whether slot `w` is shadow-executing (Joining or Rejoining with
+    /// warm-up remaining): its arrivals must not count toward quorum.
+    pub fn is_warming(&self, w: usize) -> bool {
+        w < self.states.len()
+            && matches!(
+                self.states[w],
+                MemberLifecycle::Joining | MemberLifecycle::Rejoining
+            )
+            && self.warmup_left[w] > 0
+    }
+
+    /// One batch of shadow execution completed for every warming slot;
+    /// slots whose warm-up hits zero turn Active.
+    pub fn tick_warmup(&mut self) {
+        for w in 0..self.states.len() {
+            if !matches!(
+                self.states[w],
+                MemberLifecycle::Joining | MemberLifecycle::Rejoining
+            ) {
+                continue;
+            }
+            if self.warmup_left[w] > 0 {
+                self.warmup_left[w] -= 1;
+            }
+            if self.warmup_left[w] == 0 {
+                self.states[w] = MemberLifecycle::Active;
+            }
+        }
+    }
+
+    /// Relative gap between the live fleet's aggregate effective GFLOPS
+    /// and the planned figure: `|live − planned| / planned`. 0 until a
+    /// plan has been marked (nothing to be stale against).
+    pub fn staleness(&self, live_gflops: f64) -> f64 {
+        if self.planned_gflops <= 0.0 {
+            return 0.0;
+        }
+        (live_gflops - self.planned_gflops).abs() / self.planned_gflops
+    }
+
+    /// Record that the current decomposition was planned against a fleet
+    /// of this aggregate capacity (resets staleness to 0).
+    pub fn mark_planned(&mut self, live_gflops: f64) {
+        self.planned_gflops = live_gflops;
+    }
+
+    pub fn planned_gflops(&self) -> f64 {
+        self.planned_gflops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> DeviceProfile {
+        DeviceProfile::paper_fleet().remove(0)
+    }
+
+    #[test]
+    fn lifecycle_join_warmup_to_active() {
+        let mut m = FleetMembership::new(2);
+        assert_eq!(m.state(0), MemberLifecycle::Active);
+        let w = m.begin_join(2);
+        assert_eq!(w, 2);
+        assert_eq!(m.state(w), MemberLifecycle::Joining);
+        assert!(m.is_warming(w));
+        m.tick_warmup();
+        assert!(m.is_warming(w), "one shadow batch left");
+        m.tick_warmup();
+        assert!(!m.is_warming(w));
+        assert_eq!(m.state(w), MemberLifecycle::Active, "warm-up complete");
+        // ticking an all-Active fleet is a no-op
+        m.tick_warmup();
+        assert_eq!(m.state(w), MemberLifecycle::Active);
+    }
+
+    #[test]
+    fn drain_then_depart_then_rejoin_same_slot() {
+        let mut m = FleetMembership::new(3);
+        m.begin_drain(1);
+        assert_eq!(m.state(1), MemberLifecycle::Draining);
+        m.begin_drain(1); // idempotent
+        assert_eq!(m.state(1), MemberLifecycle::Draining);
+        m.depart(1);
+        assert_eq!(m.state(1), MemberLifecycle::Departed);
+        m.begin_drain(1); // draining a departed slot is a no-op
+        assert_eq!(m.state(1), MemberLifecycle::Departed);
+        m.begin_rejoin(1, 1);
+        assert_eq!(m.state(1), MemberLifecycle::Rejoining);
+        assert_eq!(m.len(), 3, "rejoin reuses the slot, no growth");
+        assert!(m.is_warming(1));
+        m.tick_warmup();
+        assert_eq!(m.state(1), MemberLifecycle::Active);
+    }
+
+    #[test]
+    fn zero_warmup_joiner_is_active_after_first_tick() {
+        let mut m = FleetMembership::new(1);
+        let w = m.begin_join(0);
+        // warmup_batches >= 1 is enforced by ChurnPolicy::validate; even a
+        // hand-built 0 never warms (immediately eligible at the first tick)
+        assert!(!m.is_warming(w));
+        m.tick_warmup();
+        assert_eq!(m.state(w), MemberLifecycle::Active);
+    }
+
+    #[test]
+    fn staleness_relative_to_planned_capacity() {
+        let mut m = FleetMembership::new(2);
+        assert_eq!(m.staleness(123.0), 0.0, "no plan marked yet");
+        m.mark_planned(100.0);
+        assert!((m.staleness(100.0)).abs() < 1e-12);
+        assert!((m.staleness(125.0) - 0.25).abs() < 1e-12);
+        assert!((m.staleness(75.0) - 0.25).abs() < 1e-12, "loss and gain are symmetric");
+        m.mark_planned(125.0);
+        assert!((m.staleness(125.0)).abs() < 1e-12, "re-plan resets staleness");
+    }
+
+    #[test]
+    fn churn_script_orders_events_by_batch() {
+        let s = ChurnScript::join_at(3, profile())
+            .and_drain_at(3, 0)
+            .and_rejoin_at(7, 1);
+        assert!(!s.is_empty());
+        assert!(ChurnScript::none().is_empty());
+        assert_eq!(s.events_at(0).len(), 0);
+        let at3 = s.events_at(3);
+        assert_eq!(at3.len(), 2);
+        assert!(matches!(at3[0], ChurnEvent::Join(_)));
+        assert!(matches!(at3[1], ChurnEvent::Drain(0)));
+        assert!(matches!(s.events_at(7)[0], ChurnEvent::Rejoin(1)));
+    }
+}

@@ -58,11 +58,30 @@
 //! primary, routing its one feature transfer around a contended uplink —
 //! the network-path twin of the device routing above. Reroutes surface in
 //! [`FaultMetrics::link_reroutes`].
+//!
+//! Runtime fleet churn (ISSUE 8): membership is no longer frozen at
+//! [`ServeBuilder::start`]. Devices join ([`CoordinatorHandle::join`]),
+//! drain ([`CoordinatorHandle::drain`]) and rejoin at runtime, driven
+//! either through the handle or by a deterministic batch-indexed
+//! [`ChurnScript`] (the churn twin of [`FaultScript`]). The [`membership`]
+//! module owns the typed lifecycle (`Joining → Active → Draining →
+//! Departed`, plus `Rejoining` after a crash): a joiner shadow-executes
+//! its members for [`crate::config::ChurnPolicy::warmup_batches`] batches
+//! before counting toward quorum, and a draining device keeps serving
+//! until every member it hosts is re-covered. When the live fleet's
+//! capacity drifts past [`crate::config::ChurnPolicy::staleness_threshold`]
+//! of the figure the decomposition was planned for, the leader triggers an
+//! incremental DeBo re-search warm-started from its persistent
+//! [`crate::debo::Gp`] posterior and applies the result through the
+//! promotion/re-dispatch machinery above. All churn machinery is inert
+//! until the first join/drain/rejoin, so a churn-free run is bitwise
+//! identical to a fixed-fleet one.
 
 pub mod admission;
 pub mod batcher;
 pub mod health;
 pub mod linkplan;
+pub mod membership;
 pub mod scheduler;
 
 use std::collections::VecDeque;
@@ -73,8 +92,11 @@ use std::time::Duration;
 
 use crate::aggregation;
 use crate::config::SystemConfig;
+use crate::debo::{DeBoConfig, DeBoSearch, Gp, Matern32};
 use crate::device::{DeviceProfile, FaultScript, FaultyDevice};
+use crate::evaluator::{AccuracyProxy, LatencyModel, Objective};
 use crate::metrics::{FaultMetrics, LatencyStats};
+use crate::model::policy::DeviceCaps;
 use crate::model::{Arch, CostModel, TaskKind};
 use crate::net::{Link, Topology};
 use crate::runtime::engine::XBatch;
@@ -85,6 +107,9 @@ pub use admission::{Admission, Overloaded};
 pub use batcher::{Batch, Batcher, BatcherConfig, IntakePressure};
 pub use health::{DeviceHealth, HealthState};
 pub use linkplan::LinkPlanner;
+pub use membership::{
+    ChurnEvent, ChurnOp, ChurnScript, FleetMembership, MemberLifecycle,
+};
 pub use scheduler::{
     EnergyBudgetSignal, EwmaLatencySignal, MemberPressure, MemberView, PredictiveSignal,
     PressureContext, PressureSignal, QueueP95Signal, ReplicaMode, ReplicaScheduler,
@@ -97,10 +122,14 @@ pub struct InferenceRequest {
     pub reply: mpsc::SyncSender<Result<InferenceResponse>>,
 }
 
-/// Message to the leader: a request, or an explicit shutdown (handles may
-/// outlive the coordinator, so channel closure alone cannot signal stop).
+/// Message to the leader: a request, a fleet-membership operation, or an
+/// explicit shutdown (handles may outlive the coordinator, so channel
+/// closure alone cannot signal stop).
 pub enum LeaderMsg {
     Request(InferenceRequest),
+    /// Runtime join/drain (ISSUE 8). Batched by the [`Batcher`] alongside
+    /// requests and applied by the leader at the next batch boundary.
+    Churn(ChurnOp),
     Shutdown,
 }
 
@@ -175,6 +204,48 @@ impl CoordinatorHandle {
     pub fn admission_state(&self) -> AdmissionSnapshot {
         let s = self.admission.snapshot();
         AdmissionSnapshot { queued: s.queued, limit: s.live_limit }
+    }
+
+    /// Admit a new device into the running fleet (ISSUE 8). The joiner is
+    /// spawned as a worker at the next batch boundary, enters the
+    /// [`MemberLifecycle::Joining`] state, and shadow-executes its members
+    /// for [`crate::config::ChurnPolicy::warmup_batches`] batches before
+    /// its feature sets count toward quorum. Returns an error only if the
+    /// coordinator has already stopped.
+    ///
+    /// ```no_run
+    /// # fn main() -> coformer::Result<()> {
+    /// # let handle: coformer::coordinator::CoordinatorHandle = unimplemented!();
+    /// use coformer::device::DeviceProfile;
+    /// let spare = DeviceProfile::paper_fleet().remove(0);
+    /// handle.join(spare)?; // warms up, then serves as a standby
+    /// # Ok(()) }
+    /// ```
+    pub fn join(&self, profile: DeviceProfile) -> Result<()> {
+        if self.tx.send(LeaderMsg::Churn(ChurnOp::Join(profile))).is_err() {
+            anyhow::bail!("coordinator stopped");
+        }
+        Ok(())
+    }
+
+    /// Gracefully drain device `device` (its index in the fleet: config
+    /// order, then runtime joiners in join order). The device enters
+    /// [`MemberLifecycle::Draining`] and keeps serving every batch until
+    /// all members it hosts are covered by another live, warmed-up
+    /// device; only then does it depart. No queued batch is dropped.
+    /// Returns an error only if the coordinator has already stopped.
+    ///
+    /// ```no_run
+    /// # fn main() -> coformer::Result<()> {
+    /// # let handle: coformer::coordinator::CoordinatorHandle = unimplemented!();
+    /// handle.drain(2)?; // device 2 serves until its members are re-covered
+    /// # Ok(()) }
+    /// ```
+    pub fn drain(&self, device: usize) -> Result<()> {
+        if self.tx.send(LeaderMsg::Churn(ChurnOp::Drain(device))).is_err() {
+            anyhow::bail!("coordinator stopped");
+        }
+        Ok(())
     }
 }
 
@@ -306,8 +377,42 @@ pub struct ServeBuilder {
     archs: Vec<Arch>,
     x_stride: usize,
     scripts: Vec<FaultScript>,
+    churn_script: ChurnScript,
     signal: Option<Box<dyn PressureSignal>>,
 }
+
+/// Typed shape mismatch between the fleet, the deployment, and the serving
+/// inputs, raised by [`ServeBuilder::start`] (ISSUE 8 — replaces untyped
+/// `ensure!` strings). Both construction paths — JSON-loaded configs and
+/// hand-built builders — surface exactly this error; match on the variant
+/// or `downcast_ref::<ShapeError>()` through `anyhow`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShapeError {
+    /// Resolved fleet size differs from the deployment's member count.
+    DevicesVsMembers { devices: usize, members: usize },
+    /// Fault-script count differs from the fleet size.
+    ScriptsVsDevices { scripts: usize, devices: usize },
+    /// Member-arch count differs from the deployment's member count.
+    ArchsVsMembers { archs: usize, members: usize },
+}
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            ShapeError::DevicesVsMembers { devices, members } => {
+                write!(f, "fleet size {devices} != deployment members {members}")
+            }
+            ShapeError::ScriptsVsDevices { scripts, devices } => {
+                write!(f, "fault scripts {scripts} != fleet size {devices}")
+            }
+            ShapeError::ArchsVsMembers { archs, members } => {
+                write!(f, "arch count {archs} != deployment members {members}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShapeError {}
 
 impl ServeBuilder {
     /// The required serving inputs; everything else has defaults.
@@ -325,6 +430,7 @@ impl ServeBuilder {
             archs,
             x_stride,
             scripts: Vec::new(),
+            churn_script: ChurnScript::none(),
             signal: None,
         }
     }
@@ -355,6 +461,27 @@ impl ServeBuilder {
         self
     }
 
+    /// Batch-indexed [`ChurnScript`] for the deterministic churn harness
+    /// (ISSUE 8): scripted joins, drains and rejoins the leader applies at
+    /// exact batch boundaries, the membership twin of
+    /// [`ServeBuilder::fault_scripts`]. An empty script leaves the run
+    /// bitwise identical to a fixed-fleet one.
+    ///
+    /// ```
+    /// use coformer::coordinator::ChurnScript;
+    /// use coformer::device::DeviceProfile;
+    ///
+    /// let spare = DeviceProfile::paper_fleet().remove(0);
+    /// let script = ChurnScript::join_at(3, spare) // joins before batch 3
+    ///     .and_drain_at(6, 0) // device 0 drains once re-covered
+    ///     .and_rejoin_at(9, 2); // crashed device 2 re-enters, warms up
+    /// assert!(!script.is_empty());
+    /// ```
+    pub fn churn_script(mut self, script: ChurnScript) -> Self {
+        self.churn_script = script;
+        self
+    }
+
     /// Replace the default [`QueueP95Signal`] pressure reading feeding the
     /// [`ReplicaScheduler`].
     pub fn pressure_signal(mut self, signal: Box<dyn PressureSignal>) -> Self {
@@ -364,34 +491,45 @@ impl ServeBuilder {
 
     /// Validate everything and start the leader + per-device workers.
     pub fn start(self) -> Result<Coordinator> {
-        let ServeBuilder { config, exec, deployment, archs, x_stride, mut scripts, signal } =
-            self;
+        let ServeBuilder {
+            config,
+            exec,
+            deployment,
+            archs,
+            x_stride,
+            mut scripts,
+            churn_script,
+            signal,
+        } = self;
         // the one shared validation gate (same checks as config::from_json);
         // a custom pressure signal supplies its own reading, so the
         // enabled-elision-needs-a-stock-signal rule is waived for it
         config.validate_with_pressure_signal(signal.is_some())?;
         let devices = config.resolve_devices()?;
-        anyhow::ensure!(
-            devices.len() == deployment.members.len(),
-            "fleet size {} != deployment members {}",
-            devices.len(),
-            deployment.members.len()
-        );
+        if devices.len() != deployment.members.len() {
+            return Err(ShapeError::DevicesVsMembers {
+                devices: devices.len(),
+                members: deployment.members.len(),
+            }
+            .into());
+        }
         if scripts.is_empty() {
             scripts = vec![FaultScript::none(); devices.len()];
         }
-        anyhow::ensure!(
-            scripts.len() == devices.len(),
-            "fault scripts {} != fleet size {}",
-            scripts.len(),
-            devices.len()
-        );
-        anyhow::ensure!(
-            archs.len() == deployment.members.len(),
-            "arch count {} != deployment members {}",
-            archs.len(),
-            deployment.members.len()
-        );
+        if scripts.len() != devices.len() {
+            return Err(ShapeError::ScriptsVsDevices {
+                scripts: scripts.len(),
+                devices: devices.len(),
+            }
+            .into());
+        }
+        if archs.len() != deployment.members.len() {
+            return Err(ShapeError::ArchsVsMembers {
+                archs: archs.len(),
+                members: deployment.members.len(),
+            }
+            .into());
+        }
         let signal = signal.unwrap_or_else(|| Box::new(QueueP95Signal));
         let topo = config.topology();
         let members: Vec<MemberCtx> = deployment
@@ -411,72 +549,8 @@ impl ServeBuilder {
         let mut worker_txs = Vec::with_capacity(devices.len());
         let mut worker_joins = Vec::with_capacity(devices.len());
         for (i, (profile, script)) in devices.iter().zip(scripts).enumerate() {
-            let (jtx, jrx) = mpsc::channel::<WorkerJob>();
-            let exec = exec.clone();
-            let link = topo.links[i];
-            let profile = profile.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("coformer-dev{i}"))
-                .spawn(move || {
-                    let mut device = FaultyDevice::new(profile, script);
-                    while let Ok(job) = jrx.recv() {
-                        if device.should_crash(job.batch_idx) {
-                            let _ = job.reply.send(WorkerReply::Crashed);
-                            break;
-                        }
-                        let n = job.x.rows();
-                        let n_tasks = job.tasks.len();
-                        // the batch tensor is cloned per extra task only; the
-                        // last (usually only) task consumes it for free
-                        let mut x_holder = Some(job.x);
-                        let mut outputs = Vec::with_capacity(n_tasks);
-                        let mut exec_errors = Vec::new();
-                        for (ti, t) in job.tasks.iter().enumerate() {
-                            let xb = if ti + 1 == n_tasks {
-                                // lint:allow(no-panic-in-lib): holder is consumed exactly once,
-                                // on the last task of this loop
-                                x_holder.take().expect("batch tensor consumed once")
-                            } else {
-                                // lint:allow(no-panic-in-lib): not the last task, so the
-                                // holder has not been consumed yet
-                                x_holder.as_ref().expect("batch tensor present").clone()
-                            };
-                            match exec.run_model(&t.model, xb) {
-                                Ok(out) => {
-                                    let (t1, t2) = member_task_times_s(
-                                        device.profile(),
-                                        &link,
-                                        job.is_central,
-                                        t.flops_per_sample,
-                                        t.feat_bytes_per_sample,
-                                        n,
-                                    );
-                                    device.busy(t1);
-                                    device.busy(t2);
-                                    outputs.push(MemberOutput {
-                                        member: t.member,
-                                        feats: out.feats,
-                                        feats_shape: out.feats_shape,
-                                        logits: out.logits,
-                                    });
-                                }
-                                // a failed member costs only itself: completed
-                                // members on this worker still count
-                                Err(e) => {
-                                    exec_errors.push(format!("{}: {e:#}", t.model))
-                                }
-                            }
-                        }
-                        device.apply_stall(job.batch_idx);
-                        let timing = device.end_batch();
-                        let _ = job.reply.send(WorkerReply::Done(WorkerResult {
-                            outputs,
-                            arrive_s: timing.arrive_s,
-                            energy_j: timing.energy_j,
-                            exec_errors,
-                        }));
-                    }
-                })?;
+            let (jtx, join) =
+                spawn_worker(i, profile.clone(), script, exec.clone(), topo.links[i])?;
             worker_txs.push(Some(jtx));
             worker_joins.push(join);
         }
@@ -526,6 +600,10 @@ impl ServeBuilder {
         let linkplan = LinkPlanner::new(config.linkplan, n_devices)?;
         let mut fault = FaultMetrics::default();
         fault.init_members(n_members);
+        let mut membership = FleetMembership::new(n_devices);
+        // the capacity figure the decomposition was planned against —
+        // churn-driven drift from it is what triggers a re-plan
+        membership.mark_planned(devices.iter().map(|d| d.effective_gflops()).sum());
         let leader = Leader {
             exec,
             deployment,
@@ -551,6 +629,11 @@ impl ServeBuilder {
             intake_cap: chan_cap,
             signal,
             linkplan,
+            membership,
+            churn_script,
+            churn_touched: false,
+            late_joins: Vec::new(),
+            replan_gp: Gp::new(Matern32::default(), 1e-4),
         };
         let join = std::thread::Builder::new()
             .name("coformer-leader".into())
@@ -635,6 +718,22 @@ struct Leader {
     /// Runtime link re-planner (ISSUE 6): per-device slowdown EWMAs that
     /// route an elided member's single copy around a contended uplink.
     linkplan: LinkPlanner,
+    /// Per-device lifecycle + warm-up + planned-capacity tracking (ISSUE 8).
+    membership: FleetMembership,
+    /// Scripted churn, applied at exact batch boundaries alongside
+    /// handle-driven [`ChurnOp`]s.
+    churn_script: ChurnScript,
+    /// False until the first join/drain/rejoin: every churn code path is
+    /// gated on it, which is what keeps a churn-free run bitwise identical
+    /// to a fixed-fleet one.
+    churn_touched: bool,
+    /// Join handles of workers spawned after start (runtime joins and
+    /// rejoins); reaped when the leader exits.
+    late_joins: Vec<JoinHandle<()>>,
+    /// Persistent DeBo posterior: every re-plan warm-starts from the
+    /// observations of all previous re-plans instead of refitting from
+    /// scratch (ISSUE 8).
+    replan_gp: Gp,
 }
 
 /// Batches of virtual latency kept for the p95 pressure signal.
@@ -644,11 +743,14 @@ impl Leader {
     fn run(mut self, rx: mpsc::Receiver<LeaderMsg>, batcher_cfg: BatcherConfig) -> ServeStats {
         let mut stats = ServeStats::default();
         let mut batcher = Batcher::with_gate(rx, batcher_cfg, self.admission.clone());
-        while let Some(Batch { requests: batch, pressure }) = batcher.next_batch() {
+        while let Some(Batch { requests: batch, pressure, churn }) = batcher.next_batch() {
             // lint:allow(determinism): leader-loop wall-clock telemetry only —
             // never feeds scheduling decisions (those run on the virtual clock)
             let wall_start = std::time::Instant::now();
             let n = batch.len();
+            // fleet churn is applied at the batch boundary, before this
+            // batch's pressure reading or dispatch sees the fleet
+            self.apply_churn(churn);
             // the pressure observed at batch close picks this batch's
             // replica mode (and re-derives the admission limit on a mode
             // transition) before any work is dispatched
@@ -684,6 +786,13 @@ impl Leader {
         }
         self.fault.shed = self.admission.shed_count();
         stats.fault = self.fault.clone();
+        // runtime-joined workers are owned by the leader (the Coordinator
+        // only holds the founding fleet's join handles): drop every job
+        // sender so their loops exit, then reap them
+        self.worker_txs.clear();
+        for j in self.late_joins.drain(..) {
+            let _ = j.join();
+        }
         stats
     }
 
@@ -951,6 +1060,11 @@ impl Leader {
         let mut gate_s = 0.0f64; // how long the central node waited
         let mut energy_j = 0.0f64;
         for p in pending {
+            // Warming joiners/rejoiners (ISSUE 8) shadow-execute: their
+            // runs earn health and link history (and cost real energy),
+            // but their features never count toward quorum and their
+            // arrivals never gate the batch. Always false without churn.
+            let warming = self.membership.is_warming(p.worker);
             match p.rx.recv_timeout(wall_timeout) {
                 Ok(WorkerReply::Done(r)) => {
                     energy_j += r.energy_j;
@@ -976,10 +1090,19 @@ impl Leader {
                             // partial failure (some members fine) stays a
                             // metrics-only event and can never cascade a
                             // broken model across the fleet.
-                            gate_s = gate_s.max(r.arrive_s);
+                            if !warming {
+                                gate_s = gate_s.max(r.arrive_s);
+                            }
                             self.health[p.worker].miss(&self.config.fault);
                             if !self.health[p.worker].is_alive() {
                                 self.mark_dead(p.worker);
+                            }
+                        } else if warming {
+                            // shadow execution: on time, but excluded
+                            self.health[p.worker]
+                                .on_time(&self.config.fault, r.arrive_s);
+                            if !r.outputs.is_empty() {
+                                self.fault.warming_excluded += 1;
                             }
                         } else {
                             // on time: features count for this batch
@@ -994,8 +1117,12 @@ impl Leader {
                         // straggler: the central node stopped waiting at the
                         // deadline; the late features are excluded from this
                         // batch but harvested into the device's health record
-                        gate_s = gate_s.max(p.deadline_s);
-                        self.fault.timeouts += 1;
+                        // (a warming straggler was never waited on, so it
+                        // costs neither gate time nor a timeout count)
+                        if !warming {
+                            gate_s = gate_s.max(p.deadline_s);
+                            self.fault.timeouts += 1;
+                        }
                         if !r.outputs.is_empty() {
                             self.fault.harvested_late += 1;
                             self.health[p.worker].harvest_late(r.arrive_s);
@@ -1007,7 +1134,9 @@ impl Leader {
                     }
                 }
                 Ok(WorkerReply::Crashed) | Err(_) => {
-                    gate_s = gate_s.max(p.deadline_s);
+                    if !warming {
+                        gate_s = gate_s.max(p.deadline_s);
+                    }
                     self.fault.crashes += 1;
                     self.mark_dead(p.worker);
                 }
@@ -1089,7 +1218,14 @@ impl Leader {
             .filter(|(m, _)| member_feats[*m].is_some())
             .map(|(_, c)| c.arch.dim)
             .sum();
-        let groups = self.members[self.central].arch.groups;
+        // a runtime joiner can hold the central role at an index past the
+        // member list (members are deployment-sized, devices can grow)
+        let groups = self
+            .members
+            .get(self.central)
+            .unwrap_or(&self.members[0])
+            .arch
+            .groups;
         let agg_flops = CostModel::aggregation_flops(d_agg, self.d_i(), groups) * n as f64;
         let agg_s = central_dev.compute_time_s(agg_flops);
         energy_j += (central_dev.active_power_w - central_dev.idle_power_w) * agg_s;
@@ -1181,11 +1317,17 @@ impl Leader {
     /// Shares the election rule with the simulator's CoFormer strategies
     /// (`strategies::registry`).
     fn ensure_central_alive(&mut self) {
-        if self.worker_txs[self.central].is_some() {
+        // a warming rejoiner cannot hold the central role: its clock is
+        // fresh and its outputs are excluded from quorum (ISSUE 8); with
+        // no churn `is_warming` is always false and this is the old check
+        if self.worker_txs[self.central].is_some()
+            && !self.membership.is_warming(self.central)
+        {
             return;
         }
-        let best =
-            crate::device::fastest_device(&self.devices, |w| self.worker_txs[w].is_some());
+        let best = crate::device::fastest_device(&self.devices, |w| {
+            self.worker_txs[w].is_some() && !self.membership.is_warming(w)
+        });
         if let Some(w) = best {
             self.central = w;
         }
@@ -1202,6 +1344,10 @@ impl Leader {
             return; // already retired
         }
         self.health[w].set_dead();
+        // lifecycle coherence (ISSUE 8): a crashed or retired slot reads
+        // Departed, so a scripted rejoin re-enters it via Rejoining. Pure
+        // bookkeeping — observably inert until churn is in play.
+        self.membership.depart(w);
         let member_flops: Vec<f64> = self.members.iter().map(|c| c.flops_per_sample).collect();
         for m in 0..self.members.len() {
             if !self.assignments[m].contains(&w) {
@@ -1345,6 +1491,319 @@ impl Leader {
             .unwrap_or(64)
     }
 
+    // ---- runtime fleet churn (ISSUE 8) ---------------------------------
+
+    /// Apply this batch boundary's membership changes: handle-driven ops
+    /// and scripted events, in that order. The early return is what keeps
+    /// a churn-free run bitwise identical to a fixed-fleet one — until the
+    /// first real event, no churn state is read or written anywhere.
+    fn apply_churn(&mut self, ops: Vec<ChurnOp>) {
+        let scripted = self.churn_script.events_at(self.batch_idx).to_vec();
+        if !self.churn_touched && ops.is_empty() && scripted.is_empty() {
+            return;
+        }
+        self.churn_touched = true;
+        // warm-ups completed by the previous batch's shadow execution
+        self.membership.tick_warmup();
+        // draining slots whose members are all re-covered depart now
+        self.retire_drained();
+        for op in ops {
+            match op {
+                ChurnOp::Join(profile) => self.admit_device(profile),
+                ChurnOp::Drain(w) => self.begin_drain_device(w),
+            }
+        }
+        for ev in scripted {
+            match ev {
+                ChurnEvent::Join(profile) => self.admit_device(profile),
+                ChurnEvent::Drain(w) => self.begin_drain_device(w),
+                ChurnEvent::Rejoin(w) => self.rejoin_device(w),
+            }
+        }
+        self.maybe_replan();
+    }
+
+    /// Spawn a worker for a brand-new device and admit it as a Joining
+    /// slot: it immediately shadow-executes the least-covered member as a
+    /// standby, counting toward quorum only after its warm-up.
+    fn admit_device(&mut self, profile: DeviceProfile) {
+        let w = self.devices.len();
+        let link = Link::new(
+            self.config.bandwidth_mbps * 1e6,
+            self.config.link_latency_ms / 1e3,
+        );
+        match spawn_worker(w, profile.clone(), FaultScript::none(), self.exec.clone(), link)
+        {
+            Ok((jtx, join)) => {
+                self.devices.push(profile);
+                self.topo.links.push(link);
+                self.worker_txs.push(Some(jtx));
+                self.health.push(DeviceHealth::new());
+                self.late_joins.push(join);
+                self.linkplan.grow(self.devices.len());
+                self.membership.begin_join(self.config.churn.warmup_batches);
+                self.adopt_least_covered_member(w);
+                self.fault.joins += 1;
+                self.refresh_admission();
+            }
+            Err(e) => {
+                eprintln!("[coordinator] join failed to spawn worker {w}: {e:#}")
+            }
+        }
+    }
+
+    /// Start draining device `w`: it keeps serving, and every member whose
+    /// only live host it is gets a standby placed on a live non-draining
+    /// device so the drain can complete without dropping a batch.
+    fn begin_drain_device(&mut self, w: usize) {
+        if w >= self.devices.len()
+            || self.worker_txs[w].is_none()
+            || self.membership.state(w) == MemberLifecycle::Draining
+        {
+            return;
+        }
+        self.membership.begin_drain(w);
+        self.fault.drains += 1;
+        let member_flops: Vec<f64> =
+            self.members.iter().map(|c| c.flops_per_sample).collect();
+        for m in 0..self.members.len() {
+            if !self.assignments[m].contains(&w) {
+                continue;
+            }
+            let covered = self.assignments[m].iter().any(|&h| {
+                h != w
+                    && self.worker_txs[h].is_some()
+                    && self.membership.state(h) != MemberLifecycle::Draining
+            });
+            if covered {
+                continue;
+            }
+            let worker_txs = &self.worker_txs;
+            let membership = &self.membership;
+            if let Some(t) = place_standby(
+                m,
+                &self.assignments,
+                &self.member_mem,
+                &member_flops,
+                &self.devices,
+                |d| {
+                    worker_txs[d].is_some()
+                        && membership.state(d) != MemberLifecycle::Draining
+                },
+            ) {
+                self.assignments[m].push(t);
+                self.fault.replicas_placed += 1;
+            }
+        }
+    }
+
+    /// Depart every draining slot whose members all have another live,
+    /// warmed-up, non-draining host. Retiring goes through [`mark_dead`]'s
+    /// promotion/re-dispatch machinery (without counting a crash), so the
+    /// handover is the same battle-tested path a fault takes.
+    fn retire_drained(&mut self) {
+        for w in 0..self.devices.len() {
+            if self.membership.state(w) != MemberLifecycle::Draining
+                || self.worker_txs[w].is_none()
+            {
+                continue;
+            }
+            let covered = (0..self.members.len()).all(|m| {
+                let hosts = &self.assignments[m];
+                if !hosts.contains(&w) {
+                    return true;
+                }
+                hosts.iter().any(|&h| {
+                    h != w
+                        && self.worker_txs[h].is_some()
+                        && !self.membership.is_warming(h)
+                        && self.membership.state(h) != MemberLifecycle::Draining
+                })
+            });
+            if covered {
+                self.mark_dead(w); // departs the slot in the membership too
+                self.fault.departs += 1;
+            }
+        }
+    }
+
+    /// Re-enter a departed (or crashed) slot via Rejoining: the same slot
+    /// index, same profile and link, a fresh worker and health record, and
+    /// a full warm-up before its features count again.
+    fn rejoin_device(&mut self, w: usize) {
+        if w >= self.devices.len() || self.worker_txs[w].is_some() {
+            return;
+        }
+        let profile = self.devices[w].clone();
+        let link = self.topo.links[w];
+        match spawn_worker(w, profile, FaultScript::none(), self.exec.clone(), link) {
+            Ok((jtx, join)) => {
+                self.worker_txs[w] = Some(jtx);
+                self.health[w] = DeviceHealth::new();
+                self.late_joins.push(join);
+                self.membership.begin_rejoin(w, self.config.churn.warmup_batches);
+                self.adopt_least_covered_member(w);
+                self.fault.rejoins += 1;
+                self.refresh_admission();
+            }
+            Err(e) => {
+                eprintln!("[coordinator] rejoin failed to spawn worker {w}: {e:#}")
+            }
+        }
+    }
+
+    /// Attach device `w` as a standby of the member with the fewest live
+    /// hosts (ties to the lowest member index), so new capacity lands
+    /// where coverage is thinnest.
+    fn adopt_least_covered_member(&mut self, w: usize) {
+        let target = (0..self.members.len()).min_by_key(|&m| {
+            self.assignments[m]
+                .iter()
+                .filter(|&&h| self.worker_txs[h].is_some())
+                .count()
+        });
+        if let Some(m) = target {
+            if !self.assignments[m].contains(&w) {
+                self.assignments[m].push(w);
+            }
+        }
+    }
+
+    /// Re-plan when the live fleet's capacity has drifted at least
+    /// [`crate::config::ChurnPolicy::staleness_threshold`] away from the
+    /// planned figure (the threshold itself triggers). A failed re-search
+    /// degrades gracefully: the fleet keeps serving the stale
+    /// decomposition, and the plan marker still advances so one bad
+    /// search cannot retrigger every batch.
+    fn maybe_replan(&mut self) {
+        if !self.config.churn.enabled {
+            return;
+        }
+        let live: f64 = (0..self.devices.len())
+            .filter(|&w| self.worker_txs[w].is_some())
+            .map(|w| self.devices[w].effective_gflops())
+            .sum();
+        if self.membership.staleness(live) < self.config.churn.staleness_threshold {
+            return;
+        }
+        self.fault.replans += 1;
+        if let Err(e) = self.replan() {
+            eprintln!(
+                "[coordinator] churn re-plan failed (serving the stale \
+                 decomposition): {e:#}"
+            );
+        }
+        self.membership.mark_planned(live);
+    }
+
+    /// Incremental DeBo re-search over the live fleet, warm-started from
+    /// the persistent GP posterior (`run_warm` skips the init design once
+    /// the posterior has observations — see `debo::search`). The deployed
+    /// sub-model weights are fixed at runtime, so the searched
+    /// decomposition applies through the existing promotion/re-dispatch
+    /// machinery as a *placement* permutation: the heaviest members lead
+    /// on the fastest live warmed-up devices, exactly the alignment the
+    /// best-psi policy's latency model rewards. Returns the best ψ found.
+    fn replan(&mut self) -> Result<f64> {
+        // member-indexed serving fleet: each member's leading live host
+        let mut fleet: Vec<DeviceProfile> = Vec::with_capacity(self.members.len());
+        let mut links: Vec<Link> = Vec::with_capacity(self.members.len());
+        let mut caps: Vec<DeviceCaps> = Vec::with_capacity(self.members.len());
+        let mut central_m = 0usize;
+        for (m, hosts) in self.assignments.iter().enumerate() {
+            let Some(&w) = hosts.iter().find(|&&h| self.worker_txs[h].is_some()) else {
+                anyhow::bail!("member {m} has no live host to re-plan against");
+            };
+            if w == self.central {
+                central_m = m;
+            }
+            fleet.push(self.devices[w].clone());
+            links.push(self.topo.links[w]);
+            caps.push(DeviceCaps {
+                max_flops: f64::MAX,
+                max_memory: self.devices[w].memory_bytes,
+            });
+        }
+        let n = self.members.len();
+        let mut topo = Topology::star(n, Link::mbps(100.0), central_m);
+        topo.links = links;
+        // the teacher envelope the deployed members decompose: the same
+        // budget DeBo originally split (sum of widths, max depth)
+        let a0 = &self.members[0].arch;
+        let teacher = Arch::uniform(
+            a0.mode,
+            self.members.iter().map(|c| c.arch.layers).max().unwrap_or(a0.layers),
+            self.members.iter().map(|c| c.arch.dim).sum(),
+            a0.head_dim,
+            self.members.iter().map(|c| c.arch.heads[0]).sum(),
+            self.members.iter().map(|c| c.arch.mlp_dims[0]).sum(),
+            a0.num_classes,
+        );
+        let best_psi = {
+            let obj = Objective {
+                latency: LatencyModel {
+                    devices: &fleet,
+                    topology: &topo,
+                    predictors: None,
+                    d_i: self.d_i(),
+                    agg_rows: a0.groups,
+                },
+                accuracy: AccuracyProxy::default_uncalibrated(),
+                teacher: &teacher,
+                caps: &caps,
+                delta: 20.0,
+                batch: self.config.max_batch.max(1),
+            };
+            let search = DeBoSearch::new(DeBoConfig {
+                init_policies: 4,
+                iterations: self.config.churn.replan_iterations,
+                candidates: self.config.churn.replan_candidates,
+                noise_var: 1e-4,
+                seed: 0,
+            });
+            search.run_warm(&obj, n, &mut self.replan_gp)?.best_psi
+        };
+        // apply: rank members by compute weight, live warmed-up devices by
+        // speed, and lead each member on its rank-matched device
+        let mut member_rank: Vec<usize> = (0..n).collect();
+        member_rank.sort_by(|&a, &b| {
+            self.members[b]
+                .flops_per_sample
+                .total_cmp(&self.members[a].flops_per_sample)
+                .then(a.cmp(&b))
+        });
+        let mut dev_rank: Vec<usize> = (0..self.devices.len())
+            .filter(|&w| {
+                self.worker_txs[w].is_some()
+                    && !self.membership.is_warming(w)
+                    && self.membership.state(w) != MemberLifecycle::Draining
+            })
+            .collect();
+        dev_rank.sort_by(|&a, &b| {
+            self.devices[b]
+                .effective_gflops()
+                .total_cmp(&self.devices[a].effective_gflops())
+                .then(a.cmp(&b))
+        });
+        if dev_rank.is_empty() {
+            anyhow::bail!("no live warmed-up device to re-plan onto");
+        }
+        for (k, &m) in member_rank.iter().enumerate() {
+            let w = dev_rank[k % dev_rank.len()];
+            let hosts = &mut self.assignments[m];
+            if hosts.first() == Some(&w) {
+                continue;
+            }
+            hosts.retain(|&h| h != w);
+            hosts.insert(0, w);
+            // the re-led member shadows like a promotion while any
+            // re-placed standby warms (Partial mode semantics)
+            self.promoted_at[m] = Some(self.batch_idx);
+        }
+        self.refresh_admission();
+        Ok(best_psi)
+    }
+
     /// Stack single-sample payloads into one [`XBatch`].
     fn stack(&self, batch: &[InferenceRequest]) -> Result<XBatch> {
         let n = batch.len();
@@ -1375,6 +1834,82 @@ impl Leader {
             }
         }
     }
+}
+
+/// Spawn one device-worker thread: a [`FaultyDevice`] simulator draining a
+/// job channel until its sender drops or its script crashes it. Shared by
+/// [`ServeBuilder::start`] (the initial fleet) and the leader's runtime
+/// join/rejoin paths (ISSUE 8), so a late joiner runs exactly the same
+/// worker loop as a founding member.
+fn spawn_worker(
+    i: usize,
+    profile: DeviceProfile,
+    script: FaultScript,
+    exec: ExecHandle,
+    link: Link,
+) -> Result<(mpsc::Sender<WorkerJob>, JoinHandle<()>)> {
+    let (jtx, jrx) = mpsc::channel::<WorkerJob>();
+    let join = std::thread::Builder::new()
+        .name(format!("coformer-dev{i}"))
+        .spawn(move || {
+            let mut device = FaultyDevice::new(profile, script);
+            while let Ok(job) = jrx.recv() {
+                if device.should_crash(job.batch_idx) {
+                    let _ = job.reply.send(WorkerReply::Crashed);
+                    break;
+                }
+                let n = job.x.rows();
+                let n_tasks = job.tasks.len();
+                // the batch tensor is cloned per extra task only; the
+                // last (usually only) task consumes it for free
+                let mut x_holder = Some(job.x);
+                let mut outputs = Vec::with_capacity(n_tasks);
+                let mut exec_errors = Vec::new();
+                for (ti, t) in job.tasks.iter().enumerate() {
+                    let xb = if ti + 1 == n_tasks {
+                        // lint:allow(no-panic-in-lib): holder is consumed exactly once,
+                        // on the last task of this loop
+                        x_holder.take().expect("batch tensor consumed once")
+                    } else {
+                        // lint:allow(no-panic-in-lib): not the last task, so the
+                        // holder has not been consumed yet
+                        x_holder.as_ref().expect("batch tensor present").clone()
+                    };
+                    match exec.run_model(&t.model, xb) {
+                        Ok(out) => {
+                            let (t1, t2) = member_task_times_s(
+                                device.profile(),
+                                &link,
+                                job.is_central,
+                                t.flops_per_sample,
+                                t.feat_bytes_per_sample,
+                                n,
+                            );
+                            device.busy(t1);
+                            device.busy(t2);
+                            outputs.push(MemberOutput {
+                                member: t.member,
+                                feats: out.feats,
+                                feats_shape: out.feats_shape,
+                                logits: out.logits,
+                            });
+                        }
+                        // a failed member costs only itself: completed
+                        // members on this worker still count
+                        Err(e) => exec_errors.push(format!("{}: {e:#}", t.model)),
+                    }
+                }
+                device.apply_stall(job.batch_idx);
+                let timing = device.end_batch();
+                let _ = job.reply.send(WorkerReply::Done(WorkerResult {
+                    outputs,
+                    arrive_s: timing.arrive_s,
+                    energy_j: timing.energy_j,
+                    exec_errors,
+                }));
+            }
+        })?;
+    Ok((jtx, join))
 }
 
 /// One member task's (compute, transfer) virtual durations — the single

@@ -12,7 +12,7 @@
 //! pdf/cdf swap and argmin is a well-known typo in this family of papers.
 //! We implement the standard form and select `argmax EI`.
 
-use super::linalg::{cholesky, cholesky_solve, euclidean, solve_lower, Matrix};
+use super::linalg::{cholesky, cholesky_extend, cholesky_solve, euclidean, solve_lower, Matrix};
 
 /// Matérn ν=3/2 kernel.
 #[derive(Clone, Copy, Debug)]
@@ -38,6 +38,7 @@ impl Matern32 {
 }
 
 /// GP posterior over noisy observations (Eq. 10–11).
+#[derive(Clone)]
 pub struct Gp {
     kernel: Matern32,
     noise_var: f64,
@@ -71,12 +72,47 @@ impl Gp {
         self.xs.is_empty()
     }
 
-    /// Add an observation and refresh the posterior (O(n³) refit; the BO
-    /// history is small so this is the offline-stage cost the paper accepts).
+    /// Add an observation and refresh the posterior incrementally: the
+    /// existing Cholesky factor of `K + σ²I` is bordered with the new
+    /// observation's kernel column in O(n²)
+    /// ([`cholesky_extend`]) instead of refactorized in O(n³). The
+    /// centered targets shift with every observation, so `α` is re-solved
+    /// against the extended factor each time (also O(n²)). A non-SPD
+    /// border (FP pathology on near-duplicate inputs) falls back to the
+    /// from-scratch refit. [`Gp::refit_from_scratch`] plus the
+    /// `prop_gp_incremental_observe_matches_refit` property pin the two
+    /// paths to the same posterior.
     pub fn observe(&mut self, x: Vec<f64>, y: f64) {
+        let extended = match &self.chol {
+            Some(l) => {
+                let k_vec: Vec<f64> =
+                    self.xs.iter().map(|xi| self.kernel.eval(&x, xi)).collect();
+                let diag = self.kernel.eval(&x, &x) + self.noise_var;
+                cholesky_extend(l, &k_vec, diag)
+            }
+            None => None,
+        };
         self.xs.push(x);
         self.ys.push(y);
-        self.refit();
+        match extended {
+            Some(l) => {
+                self.y_mean = self.ys.iter().sum::<f64>() / self.ys.len() as f64;
+                let resid: Vec<f64> = self.ys.iter().map(|y| y - self.y_mean).collect();
+                self.alpha = cholesky_solve(&l, &resid);
+                self.chol = Some(l);
+            }
+            None => self.refit(),
+        }
+    }
+
+    /// Recompute the posterior with a full O(n³) factorization over the
+    /// current observation set. Public so the incremental
+    /// [`Gp::observe`] path can be checked against the from-scratch fit
+    /// (the warm-started churn re-planner relies on their equivalence).
+    pub fn refit_from_scratch(&mut self) {
+        if !self.xs.is_empty() {
+            self.refit();
+        }
     }
 
     fn refit(&mut self) {
@@ -272,5 +308,26 @@ mod tests {
         }
         let (m, _) = gp.predict(&[0.95]);
         assert!((m - (3.0f64 * 0.95).sin()).abs() < 0.1, "mean {m}");
+    }
+
+    #[test]
+    fn incremental_observe_matches_from_scratch_refit() {
+        // the incremental bordered-Cholesky path and a full refit over the
+        // same observations must agree on the posterior (the churn
+        // re-planner's warm start rests on this)
+        let mut inc = Gp::new(Matern32::default(), 1e-4);
+        for i in 0..12 {
+            let x = i as f64 / 5.0;
+            inc.observe(vec![x, (x * 1.7).cos()], (2.0 * x).sin());
+        }
+        let mut scratch = inc.clone();
+        scratch.refit_from_scratch();
+        for i in 0..20 {
+            let x = vec![i as f64 / 9.5, 0.3];
+            let (m_i, v_i) = inc.predict(&x);
+            let (m_s, v_s) = scratch.predict(&x);
+            assert!((m_i - m_s).abs() < 1e-9, "mean at {x:?}: {m_i} vs {m_s}");
+            assert!((v_i - v_s).abs() < 1e-9, "var at {x:?}: {v_i} vs {v_s}");
+        }
     }
 }

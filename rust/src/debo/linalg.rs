@@ -72,6 +72,35 @@ pub fn cholesky(a: &Matrix) -> Option<Matrix> {
     Some(l)
 }
 
+/// Extend a Cholesky factor by one row/column (rank-1 bordering): given
+/// the lower-triangular `L` of an n×n SPD matrix `A`, the new
+/// cross-covariance column `k_vec` (length n) and the new diagonal entry
+/// `diag`, return the factor of the bordered (n+1)×(n+1) matrix
+/// `[[A, k], [kᵀ, diag]]` in O(n²) instead of refactorizing in O(n³).
+/// Returns `None` when the bordered matrix is not SPD (non-positive
+/// pivot) — callers fall back to a from-scratch factorization.
+pub fn cholesky_extend(l: &Matrix, k_vec: &[f64], diag: f64) -> Option<Matrix> {
+    assert_eq!(l.rows, l.cols);
+    let n = l.rows;
+    assert_eq!(k_vec.len(), n);
+    let l12 = solve_lower(l, k_vec);
+    let pivot = diag - l12.iter().map(|v| v * v).sum::<f64>();
+    if pivot <= 0.0 {
+        return None;
+    }
+    let mut out = Matrix::zeros(n + 1, n + 1);
+    for i in 0..n {
+        for j in 0..=i {
+            out[(i, j)] = l[(i, j)];
+        }
+    }
+    for (j, v) in l12.iter().enumerate() {
+        out[(n, j)] = *v;
+    }
+    out[(n, n)] = pivot.sqrt();
+    Some(out)
+}
+
 /// Solve `L·x = b` (forward substitution, `L` lower-triangular).
 pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
     let n = l.rows;
@@ -192,5 +221,35 @@ mod tests {
     #[test]
     fn euclidean_basic() {
         assert!((euclidean(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_extend_matches_from_scratch() {
+        // border spd3 with a column that keeps the 4×4 matrix SPD, then
+        // compare the O(n²) extension against a full refactorization
+        let a3 = spd3();
+        let k_vec = [0.2, -0.1, 0.3];
+        let diag = 2.5;
+        let a4 = Matrix::from_fn(4, 4, |i, j| match (i, j) {
+            (3, 3) => diag,
+            (3, j) => k_vec[j],
+            (i, 3) => k_vec[i],
+            (i, j) => a3[(i, j)],
+        });
+        let full = cholesky(&a4).unwrap();
+        let ext = cholesky_extend(&cholesky(&a3).unwrap(), &k_vec, diag).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((full[(i, j)] - ext[(i, j)]).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_extend_rejects_non_spd_border() {
+        // a zero diagonal with a nonzero cross-covariance column cannot be
+        // PSD: the pivot is strictly negative
+        let l = cholesky(&spd3()).unwrap();
+        assert!(cholesky_extend(&l, &[0.5, 0.0, 0.0], 0.0).is_none());
     }
 }

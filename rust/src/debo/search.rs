@@ -115,9 +115,24 @@ impl DeBoSearch {
 
     /// Run Algorithm 1 lines 1–11.
     pub fn run(&self, obj: &Objective<'_>, n_devices: usize) -> crate::Result<DeBoResult> {
+        let mut gp = Gp::new(Matern32::default(), self.config.noise_var);
+        self.run_warm(obj, n_devices, &mut gp)
+    }
+
+    /// Run the search against a caller-owned GP posterior. An empty GP gets
+    /// the full initial design (identical to [`DeBoSearch::run`]); a
+    /// non-empty one skips straight to the BO iterations, warm-started from
+    /// whatever it already observed — the incremental re-search the serving
+    /// leader triggers when fleet churn makes the decomposition stale. The
+    /// GP keeps every new observation, so successive re-plans compound.
+    pub fn run_warm(
+        &self,
+        obj: &Objective<'_>,
+        n_devices: usize,
+        gp: &mut Gp,
+    ) -> crate::Result<DeBoResult> {
         let mut rng = Rng::seed_from_u64(self.config.seed);
         let teacher: &Arch = obj.teacher;
-        let mut gp = Gp::new(Matern32::default(), self.config.noise_var);
         let mut best: Option<(DecompositionPolicy, f64)> = None;
         let mut trace = Vec::new();
         let mut evaluated = 0usize;
@@ -145,16 +160,19 @@ impl DeBoSearch {
             });
         };
 
-        // lines 1–4: initial design
-        for i in 0..self.config.init_policies {
-            let policy = Self::sample_policy(&mut rng, obj, n_devices)
-                .ok_or_else(|| anyhow::anyhow!("cannot sample a feasible policy: constraints too tight"))?;
-            let psi = obj.evaluate(&policy).ok_or_else(|| {
-                anyhow::anyhow!("sampled policy became infeasible under the objective")
-            })?;
-            evaluated += 1;
-            gp.observe(policy.encode(teacher), psi);
-            record(&policy, psi, i, &mut best, &mut trace, obj);
+        // lines 1–4: initial design (skipped on a warm-started GP — its
+        // posterior already carries an earlier run's observations)
+        if gp.is_empty() {
+            for i in 0..self.config.init_policies {
+                let policy = Self::sample_policy(&mut rng, obj, n_devices)
+                    .ok_or_else(|| anyhow::anyhow!("cannot sample a feasible policy: constraints too tight"))?;
+                let psi = obj.evaluate(&policy).ok_or_else(|| {
+                    anyhow::anyhow!("sampled policy became infeasible under the objective")
+                })?;
+                evaluated += 1;
+                gp.observe(policy.encode(teacher), psi);
+                record(&policy, psi, i, &mut best, &mut trace, obj);
+            }
         }
 
         // lines 5–9: BO iterations
@@ -360,6 +378,36 @@ mod tests {
         let b = mk();
         assert_eq!(a.best, b.best);
         assert_eq!(a.best_psi, b.best_psi);
+    }
+
+    #[test]
+    fn warm_start_skips_init_design_and_never_regresses() {
+        let c = ctx();
+        let obj = objective(&c);
+        let cfg = DeBoConfig { init_policies: 6, iterations: 10, candidates: 128, ..Default::default() };
+        let search = DeBoSearch::new(cfg.clone());
+        // cold run seeds the posterior
+        let mut gp = Gp::new(Matern32::default(), cfg.noise_var);
+        let cold = search.run_warm(&obj, 3, &mut gp).unwrap();
+        assert_eq!(cold.evaluated, 16, "init design + iterations");
+        let n_after_cold = gp.len();
+        // warm run on the same GP: no init design, only BO iterations
+        let warm = search.run_warm(&obj, 3, &mut gp).unwrap();
+        assert_eq!(warm.evaluated, 10, "warm start skips the initial design");
+        assert!(gp.len() > n_after_cold, "the posterior keeps compounding");
+        // the shared posterior's incumbent never regresses across re-plans
+        // (warm.best_psi alone covers only this run's fresh evaluations)
+        let incumbent = gp.best_observed().unwrap().1;
+        assert!(
+            incumbent <= cold.best_psi + 1e-12,
+            "posterior incumbent {incumbent} regressed past cold best {}",
+            cold.best_psi
+        );
+        // run() delegates to run_warm with a fresh GP: identical to cold
+        let plain = search.run(&obj, 3).unwrap();
+        assert_eq!(plain.best, cold.best);
+        assert_eq!(plain.best_psi, cold.best_psi);
+        assert_eq!(plain.evaluated, cold.evaluated);
     }
 
     #[test]

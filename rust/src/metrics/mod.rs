@@ -171,6 +171,26 @@ pub struct FaultMetrics {
     /// single dispatched copy to a standby host because the primary's
     /// uplink was contended (one count per member per rerouted batch).
     pub link_reroutes: usize,
+    /// Devices admitted to the fleet at runtime (ISSUE 8) — scripted or
+    /// via `CoordinatorHandle::join`. Crash-rejoins are NOT joins: they
+    /// re-enter their original slot and count in `rejoins`.
+    pub joins: usize,
+    /// Drains begun (the device keeps serving until its members are
+    /// re-covered, then departs).
+    pub drains: usize,
+    /// Graceful departures completed: a draining device whose members all
+    /// had other live hosts left the fleet. Disjoint from `crashes`.
+    pub departs: usize,
+    /// Departed or crashed slots that re-entered the fleet via the
+    /// `Rejoining` lifecycle state (same slot, fresh warm-up).
+    pub rejoins: usize,
+    /// Incremental DeBo re-searches triggered by decomposition staleness
+    /// crossing `ChurnPolicy::staleness_threshold`.
+    pub replans: usize,
+    /// Shadow executions excluded from aggregation while their device
+    /// warmed up (one count per warming device per batch it delivered) —
+    /// a joiner must never double-count toward quorum.
+    pub warming_excluded: usize,
     /// `quorum_hist[k]` = batches aggregated from exactly `k` members.
     quorum_hist: Vec<usize>,
 }
@@ -480,6 +500,12 @@ mod tests {
         assert_eq!(f.standby_gflops_saved, 0.0);
         assert_eq!(f.standby_energy_saved_j, 0.0);
         assert_eq!(f.standby_fallbacks, 0);
+        assert_eq!(f.joins, 0);
+        assert_eq!(f.drains, 0);
+        assert_eq!(f.departs, 0);
+        assert_eq!(f.rejoins, 0);
+        assert_eq!(f.replans, 0);
+        assert_eq!(f.warming_excluded, 0);
         assert!(f.member_modes.is_empty(), "no members until init_members");
     }
 

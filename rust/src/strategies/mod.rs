@@ -178,7 +178,9 @@ pub(crate) struct ElasticOutcome {
 /// scheduler. Every public scoring path delegates here, so the paths can
 /// never drift apart.
 pub(crate) fn run_elastic_scenario(s: &Scenario) -> Result<ElasticOutcome, SimError> {
-    let (profiles, topo, archs) = (&s.fleet, &s.topo, &s.archs);
+    // serving_fleet: the churned fleet when one is set (ISSUE 8) — members
+    // keep their planned sub-models but execute on the fleet as it stands
+    let (profiles, topo, archs) = (s.serving_fleet(), &s.topo, &s.archs);
     let (d_i, batch, alive) = (s.d_i, s.batch, &s.alive);
     let (replicas, min_quorum) = (s.replicas, s.min_quorum);
     let n = profiles.len();

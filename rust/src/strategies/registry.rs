@@ -18,11 +18,12 @@ use super::scenario::{DispatchMode, Outcome, Scenario, Strategy};
 use super::Segment;
 
 /// Every name [`lookup`] resolves, in registry order.
-pub const NAMES: [&str; 8] = [
+pub const NAMES: [&str; 9] = [
     "coformer",
     "coformer_degraded",
     "coformer_replicated",
     "coformer_elastic",
+    "coformer_churn",
     "pipe_edge",
     "tensor_parallel",
     "single_edge",
@@ -39,6 +40,7 @@ pub fn lookup(name: &str) -> Option<Box<dyn Strategy + Send + Sync>> {
         "coformer_degraded" => Some(Box::new(CoFormerDegraded)),
         "coformer_replicated" => Some(Box::new(CoFormerReplicated)),
         "coformer_elastic" => Some(Box::new(CoFormerElastic)),
+        "coformer_churn" => Some(Box::new(CoFormerChurn)),
         "pipe_edge" => Some(Box::new(PipeEdge::default())),
         "tensor_parallel" => Some(Box::new(TensorParallel::default())),
         "single_edge" => Some(Box::new(SingleEdge::default())),
@@ -156,6 +158,59 @@ impl Strategy for CoFormerElastic {
 
     fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
         scenario.run()
+    }
+}
+
+/// CoFormer after fleet churn with the decomposition re-planned (ISSUE 8):
+/// the scenario's members were sized for its planned fleet, but they serve
+/// on [`Scenario::serving_fleet`] — the fleet as it stands after runtime
+/// joins/drains. [`CoFormerElastic`] scores that stale member→device
+/// mapping verbatim; this strategy applies the re-plan the serving
+/// coordinator's warm-started DeBo re-search converges to — the heaviest
+/// sub-model leads on the fastest serving device — and scores the
+/// re-planned mapping, so `coformer_churn` vs `coformer_elastic` on the
+/// same churned scenario measures exactly what online re-planning buys.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoFormerChurn;
+
+impl Strategy for CoFormerChurn {
+    fn name(&self) -> &str {
+        "coformer_churn"
+    }
+
+    fn run(&self, scenario: &Scenario) -> Result<Outcome, SimError> {
+        let serving = scenario.serving_fleet();
+        let n = serving.len();
+        // rank members by compute weight, serving slots by device speed
+        let mut member_rank: Vec<usize> = (0..n).collect();
+        member_rank.sort_by(|&a, &b| {
+            CostModel::flops_per_sample(&scenario.archs()[b])
+                .total_cmp(&CostModel::flops_per_sample(&scenario.archs()[a]))
+                .then(a.cmp(&b))
+        });
+        let mut slot_rank: Vec<usize> = (0..n).collect();
+        slot_rank.sort_by(|&a, &b| {
+            serving[b]
+                .effective_gflops()
+                .total_cmp(&serving[a].effective_gflops())
+                .then(a.cmp(&b))
+        });
+        // re-planned placement: the rank-r member serves on the rank-r slot
+        let mut archs = scenario.archs().to_vec();
+        for (r, &m) in member_rank.iter().enumerate() {
+            archs[slot_rank[r]] = scenario.archs()[m].clone();
+        }
+        let replanned = scenario
+            .to_builder()
+            .archs(archs)
+            .build()
+            // lint:allow(no-panic-in-lib): permuting the archs of an
+            // already-validated scenario preserves every length invariant; a
+            // failure here means the builder drifted and must be loud
+            .expect("permuting archs of a valid scenario preserves validity");
+        let mut out = replanned.run()?;
+        out.core.name = "coformer-churn".into();
+        Ok(out)
     }
 }
 

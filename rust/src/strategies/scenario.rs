@@ -159,6 +159,13 @@ pub struct Scenario {
     /// per-link busy timelines; `false` (the default) serializes transfer
     /// after compute exactly as the paper's Eq. 5/6 timeline does.
     pub(crate) overlap: bool,
+    /// Post-churn fleet (ISSUE 8): `Some(fleet)` scores the scenario on
+    /// these device profiles — the fleet as it stands after runtime
+    /// joins/drains — while `fleet` remains the one the decomposition was
+    /// planned for (member `m`'s sub-model was sized for `fleet[m]`).
+    /// Same length as `fleet`: slot `m` is member `m`'s serving device.
+    /// `None` serves on the planned fleet (no churn).
+    pub(crate) churned_fleet: Option<Vec<DeviceProfile>>,
 }
 
 impl Scenario {
@@ -183,6 +190,7 @@ impl Scenario {
             dispatch: self.dispatch,
             elide_mask: self.elide_mask.clone(),
             overlap: self.overlap,
+            churned_fleet: self.churned_fleet.clone(),
             bandwidth_mbps: None,
             link_bandwidths_mbps: None,
             degradation: None,
@@ -247,6 +255,20 @@ impl Scenario {
         self.overlap
     }
 
+    /// Post-churn fleet override, when one is set (see
+    /// [`ScenarioBuilder::churned_fleet`]).
+    pub fn churned_fleet(&self) -> Option<&[DeviceProfile]> {
+        self.churned_fleet.as_deref()
+    }
+
+    /// The fleet the members actually serve on: the churned fleet when one
+    /// is set, else the planned fleet. Every execution timeline runs on
+    /// this; the planned `fleet` stays what the decomposition was sized
+    /// for.
+    pub fn serving_fleet(&self) -> &[DeviceProfile] {
+        self.churned_fleet.as_deref().unwrap_or(&self.fleet)
+    }
+
     /// Whether member `m`'s standbys are elided under this scenario: the
     /// per-member mask entry when one is set, else the fleet-wide
     /// dispatch mode.
@@ -273,6 +295,7 @@ pub struct ScenarioBuilder {
     dispatch: DispatchMode,
     elide_mask: Option<Vec<bool>>,
     overlap: bool,
+    churned_fleet: Option<Vec<DeviceProfile>>,
     bandwidth_mbps: Option<f64>,
     link_bandwidths_mbps: Option<Vec<f64>>,
     degradation: Option<f64>,
@@ -292,6 +315,7 @@ impl Default for ScenarioBuilder {
             dispatch: DispatchMode::Full,
             elide_mask: None,
             overlap: false,
+            churned_fleet: None,
             bandwidth_mbps: None,
             link_bandwidths_mbps: None,
             degradation: None,
@@ -408,6 +432,16 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Score on a churned fleet (ISSUE 8): member `m`'s sub-model —
+    /// planned for `fleet[m]` — serves on `churned[m]` instead. One
+    /// profile per member; models runtime joins/drains having reshuffled
+    /// which device each member lands on. The staleness this creates is
+    /// what the `coformer_churn` registry strategy re-plans away.
+    pub fn churned_fleet(mut self, churned: Vec<DeviceProfile>) -> Self {
+        self.churned_fleet = Some(churned);
+        self
+    }
+
     /// Validate every cross-field invariant and produce the [`Scenario`].
     pub fn build(self) -> Result<Scenario, ScenarioError> {
         if self.fleet.is_empty() {
@@ -479,6 +513,15 @@ impl ScenarioBuilder {
                 });
             }
         }
+        if let Some(churned) = &self.churned_fleet {
+            if churned.len() != n {
+                return Err(ScenarioError::LengthMismatch {
+                    what: "churned_fleet",
+                    expected: n,
+                    got: churned.len(),
+                });
+            }
+        }
         Ok(Scenario {
             fleet: self.fleet,
             topo,
@@ -491,6 +534,7 @@ impl ScenarioBuilder {
             dispatch: self.dispatch,
             elide_mask: self.elide_mask,
             overlap: self.overlap,
+            churned_fleet: self.churned_fleet,
         })
     }
 }

@@ -8,9 +8,9 @@
 //! exactly as wide as the axes it names. Points are emitted in a
 //! deterministic nested order: bandwidth → degradation → per-link
 //! bandwidths → batch → replicas → dispatch → member-elision mask →
-//! overlap → strategy (the strategy list innermost), so callers can chunk
-//! the flat result by strategy count to recover one table row per axis
-//! combination.
+//! overlap → churned fleet → strategy (the strategy list innermost), so
+//! callers can chunk the flat result by strategy count to recover one
+//! table row per axis combination.
 //!
 //! ```
 //! use coformer::device::DeviceProfile;
@@ -34,7 +34,7 @@
 
 use std::fmt;
 
-use crate::device::SimError;
+use crate::device::{DeviceProfile, SimError};
 
 use super::registry;
 use super::scenario::{DispatchMode, Outcome, Scenario, ScenarioError, Strategy};
@@ -60,6 +60,9 @@ pub struct SweepPoint {
     /// Whether the event-driven overlap engine scored this point (ISSUE 6;
     /// see [`Sweep::overlap_modes`]).
     pub overlap: bool,
+    /// Post-churn serving fleet this point ran with (`None` = the planned
+    /// fleet served; see [`Sweep::churned_fleets`]).
+    pub churned_fleet: Option<Vec<DeviceProfile>>,
     pub outcome: Outcome,
 }
 
@@ -101,6 +104,7 @@ pub struct Sweep {
     dispatch: Vec<DispatchMode>,
     member_elision: Vec<Vec<bool>>,
     overlap: Vec<bool>,
+    churned_fleets: Vec<Vec<DeviceProfile>>,
 }
 
 impl Sweep {
@@ -117,6 +121,7 @@ impl Sweep {
             dispatch: Vec::new(),
             member_elision: Vec::new(),
             overlap: Vec::new(),
+            churned_fleets: Vec::new(),
         }
     }
 
@@ -190,6 +195,20 @@ impl Sweep {
         self
     }
 
+    /// Vary the post-churn serving fleet (ISSUE 8): each value is one
+    /// device vector applied through
+    /// [`super::ScenarioBuilder::churned_fleet`] — slot `m` is the device
+    /// member `m`'s sub-model ended up on after joins, drains, and
+    /// rejoins, while the decomposition stays the one planned for the base
+    /// fleet. Pairing `coformer_churn` against `coformer_elastic` on such
+    /// a point scores what online re-planning buys over serving a stale
+    /// decomposition. Vectors must match the fleet size; mismatches
+    /// surface as [`SweepError::Scenario`].
+    pub fn churned_fleets(mut self, v: &[Vec<DeviceProfile>]) -> Self {
+        self.churned_fleets = v.to_vec();
+        self
+    }
+
     /// Run registry strategies by name across the axis cross-product.
     pub fn run_named(&self, names: &[&str]) -> Result<Vec<SweepPoint>, SweepError> {
         let boxed: Vec<Box<dyn Strategy + Send + Sync>> = names
@@ -210,8 +229,8 @@ impl Sweep {
 
     /// Run the given strategies across the axis cross-product, in the
     /// documented bandwidth → degradation → per-link bandwidths → batch →
-    /// replicas → dispatch → member-elision mask → overlap → strategy
-    /// order.
+    /// replicas → dispatch → member-elision mask → overlap → churned
+    /// fleet → strategy order.
     pub fn run(&self, strategies: &[&dyn Strategy]) -> Result<Vec<SweepPoint>, SweepError> {
         // `None` = keep the base scenario's value for this axis
         let bws: Vec<Option<f64>> = if self.bandwidths_mbps.is_empty() {
@@ -259,6 +278,12 @@ impl Sweep {
         } else {
             self.overlap.clone()
         };
+        // `None` = the base scenario's serving fleet (usually the planned one)
+        let churns: Vec<Option<&Vec<DeviceProfile>>> = if self.churned_fleets.is_empty() {
+            vec![None]
+        } else {
+            self.churned_fleets.iter().map(Some).collect()
+        };
 
         let mut points = Vec::with_capacity(
             bws.len()
@@ -269,6 +294,7 @@ impl Sweep {
                 * dispatch.len()
                 * masks.len()
                 * overlaps.len()
+                * churns.len()
                 * strategies.len(),
         );
         for &bw in &bws {
@@ -279,49 +305,55 @@ impl Sweep {
                             for &mode in &dispatch {
                                 for &mask in &masks {
                                     for &overlap in &overlaps {
-                                        let mut b = self
-                                            .base
-                                            .to_builder()
-                                            .batch(batch)
-                                            .replicas(rep)
-                                            .dispatch(mode)
-                                            .overlap(overlap);
-                                        if let Some(mbps) = bw {
-                                            b = b.bandwidth_mbps(mbps);
-                                        }
-                                        if let Some(factor) = degradation {
-                                            b = b.degrade_bandwidth(factor);
-                                        }
-                                        if let Some(v) = per_link {
-                                            b = b.link_bandwidths_mbps(v.clone());
-                                        }
-                                        if let Some(m) = mask {
-                                            b = b.elide_members(m.clone());
-                                        }
-                                        let scenario =
-                                            b.build().map_err(SweepError::Scenario)?;
-                                        for strat in strategies {
-                                            let outcome =
-                                                strat.run(&scenario).map_err(|error| {
-                                                    SweepError::Sim {
-                                                        strategy: strat.name().to_string(),
-                                                        error,
-                                                    }
-                                                })?;
-                                            points.push(SweepPoint {
-                                                strategy: strat.name().to_string(),
-                                                bandwidth_mbps: bw.unwrap_or(base_bw),
-                                                degradation: degradation.unwrap_or(1.0),
-                                                link_bandwidths_mbps: per_link.cloned(),
-                                                batch,
-                                                replicas: rep,
-                                                dispatch: mode,
-                                                elide_mask: scenario
-                                                    .elide_mask()
-                                                    .map(|m| m.to_vec()),
-                                                overlap,
-                                                outcome,
-                                            });
+                                        for &churn in &churns {
+                                            let mut b = self
+                                                .base
+                                                .to_builder()
+                                                .batch(batch)
+                                                .replicas(rep)
+                                                .dispatch(mode)
+                                                .overlap(overlap);
+                                            if let Some(mbps) = bw {
+                                                b = b.bandwidth_mbps(mbps);
+                                            }
+                                            if let Some(factor) = degradation {
+                                                b = b.degrade_bandwidth(factor);
+                                            }
+                                            if let Some(v) = per_link {
+                                                b = b.link_bandwidths_mbps(v.clone());
+                                            }
+                                            if let Some(m) = mask {
+                                                b = b.elide_members(m.clone());
+                                            }
+                                            if let Some(c) = churn {
+                                                b = b.churned_fleet(c.clone());
+                                            }
+                                            let scenario =
+                                                b.build().map_err(SweepError::Scenario)?;
+                                            for strat in strategies {
+                                                let outcome =
+                                                    strat.run(&scenario).map_err(|error| {
+                                                        SweepError::Sim {
+                                                            strategy: strat.name().to_string(),
+                                                            error,
+                                                        }
+                                                    })?;
+                                                points.push(SweepPoint {
+                                                    strategy: strat.name().to_string(),
+                                                    bandwidth_mbps: bw.unwrap_or(base_bw),
+                                                    degradation: degradation.unwrap_or(1.0),
+                                                    link_bandwidths_mbps: per_link.cloned(),
+                                                    batch,
+                                                    replicas: rep,
+                                                    dispatch: mode,
+                                                    elide_mask: scenario
+                                                        .elide_mask()
+                                                        .map(|m| m.to_vec()),
+                                                    overlap,
+                                                    churned_fleet: churn.cloned(),
+                                                    outcome,
+                                                });
+                                            }
                                         }
                                     }
                                 }

@@ -257,6 +257,84 @@ fn json_and_serve_builder_reject_the_same_bad_configs() {
     drop(server);
 }
 
+#[test]
+fn shape_mismatches_are_typed_errors_on_both_config_paths() {
+    // ISSUE 8 satellite: the untyped `ensure!` length checks in
+    // `ServeBuilder::start` became the typed `ShapeError` — the variant is
+    // matchable through anyhow's downcast, the legacy diagnostic strings
+    // are preserved verbatim, and a JSON-loaded config surfaces exactly
+    // the same value as a hand-built one.
+    use coformer::coordinator::ShapeError;
+
+    let (server, dep) = stub_server();
+
+    // fleet size vs deployment members — via a hand-built config
+    let mut short = base_config();
+    short.devices.pop(); // 3 devices against 4 members
+    let err = ServeBuilder::new(short, server.handle(), dep.clone(), vec![arch(); FLEET], x_stride())
+        .start()
+        .err()
+        .expect("3 devices against 4 members must be rejected");
+    assert_eq!(
+        err.downcast_ref::<ShapeError>(),
+        Some(&ShapeError::DevicesVsMembers { devices: 3, members: FLEET })
+    );
+    assert_eq!(err.to_string(), "fleet size 3 != deployment members 4");
+
+    // the same mismatch through the JSON loader: from_json accepts the
+    // config (it cannot see the deployment), start raises the same value
+    let json = r#"{"devices":["jetson-nano","jetson-tx2","jetson-orin-nano"],
+                   "deployment":"stub_4dev","aggregator":"average"}"#;
+    let from_json = SystemConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+    let json_err =
+        ServeBuilder::new(from_json, server.handle(), dep.clone(), vec![arch(); FLEET], x_stride())
+            .start()
+            .err()
+            .expect("the JSON-built config carries the same shape mismatch");
+    assert_eq!(
+        json_err.downcast_ref::<ShapeError>(),
+        err.downcast_ref::<ShapeError>(),
+        "JSON and builder paths surface the identical typed value"
+    );
+    assert_eq!(json_err.to_string(), err.to_string());
+
+    // fault-script count vs fleet size
+    let err = ServeBuilder::new(
+        base_config(),
+        server.handle(),
+        dep.clone(),
+        vec![arch(); FLEET],
+        x_stride(),
+    )
+    .fault_scripts(vec![FaultScript::none(); 2])
+    .start()
+    .err()
+    .expect("2 scripts against 4 devices must be rejected");
+    assert_eq!(
+        err.downcast_ref::<ShapeError>(),
+        Some(&ShapeError::ScriptsVsDevices { scripts: 2, devices: FLEET })
+    );
+    assert_eq!(err.to_string(), "fault scripts 2 != fleet size 4");
+
+    // arch count vs deployment members
+    let err = ServeBuilder::new(
+        base_config(),
+        server.handle(),
+        dep,
+        vec![arch(); FLEET + 1],
+        x_stride(),
+    )
+    .start()
+    .err()
+    .expect("5 archs against 4 members must be rejected");
+    assert_eq!(
+        err.downcast_ref::<ShapeError>(),
+        Some(&ShapeError::ArchsVsMembers { archs: FLEET + 1, members: FLEET })
+    );
+    assert_eq!(err.to_string(), "arch count 5 != deployment members 4");
+    drop(server);
+}
+
 /// A custom pressure signal: reads saturation for every member on every
 /// batch regardless of the real queue. Plugged in through the trait, it
 /// must walk every member to primaries-only where the default queue-fill

@@ -1,0 +1,400 @@
+//! ISSUE 8 acceptance suite: runtime fleet churn with online DeBo
+//! re-planning, locked down deterministically on the stub harness (no
+//! artifacts, no PJRT client — every virtual quantity is model-derived,
+//! so counters and energy ledgers are exactly reproducible):
+//!
+//! * an empty [`ChurnScript`] run is bitwise-identical to a fixed-fleet
+//!   run — the churn plumbing must not perturb a single bit until the
+//!   first real event;
+//! * a scripted join warms up (shadow-executes) for exactly
+//!   `ChurnPolicy::warmup_batches` batches without ever double-counting
+//!   toward quorum;
+//! * a scripted drain keeps serving until its members are re-covered,
+//!   departs gracefully, and loses zero queued batches;
+//! * a crashed slot re-enters via the `Rejoining` lifecycle (same slot,
+//!   `rejoins` not `joins`);
+//! * the staleness-triggered incremental re-plan fires exactly at
+//!   `ChurnPolicy::staleness_threshold` — at the threshold it fires, one
+//!   ulp above it stays quiet;
+//! * the full churn story (join mid-ramp + drain + crash-rejoin) completes
+//!   with zero dropped batches and ledgers sized to the live fleet;
+//! * the sweep's churned-fleet axis scores what re-planning buys:
+//!   `coformer_churn` beats `coformer_elastic` on the same churned
+//!   scenario.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use coformer::config::{DeviceSpec, FaultPolicy, SystemConfig};
+use coformer::coordinator::{
+    ChurnScript, Coordinator, CoordinatorHandle, RequestPayload, ServeBuilder, ServeStats,
+};
+use coformer::device::{DeviceProfile, FaultScript};
+use coformer::model::{Arch, CostModel, Mode};
+use coformer::runtime::manifest::DeploymentMeta;
+use coformer::runtime::{ExecServer, StubSpec};
+use coformer::strategies::Sweep;
+
+const FLEET: usize = 4;
+const CLASSES: usize = 4;
+
+fn arch() -> Arch {
+    Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, CLASSES)
+}
+
+fn x_stride() -> usize {
+    let a = arch();
+    a.tokens() * a.patch_dim()
+}
+
+fn stub_server() -> (ExecServer, DeploymentMeta) {
+    let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), arch())).collect(),
+        classes: CLASSES,
+    };
+    let server = ExecServer::start_stub(spec).unwrap();
+    let dep = DeploymentMeta { task: "stub".into(), members, aggregators: BTreeMap::new() };
+    (server, dep)
+}
+
+/// 4-device config mirroring the stub deployment; min_quorum 2 so a
+/// mid-churn crash degrades instead of failing the batch.
+fn base_config() -> SystemConfig {
+    let mut config = SystemConfig::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device
+    config.deployment = "stub_4dev".into();
+    config.aggregator = "average".into();
+    config.max_batch = 4;
+    config.max_wait_ms = 100;
+    config.fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+    config
+}
+
+/// One coalesced batch of `max_batch` requests; returns each reply's
+/// quorum (asserting the prediction round-tripped and the reply arrived).
+fn round(handle: &CoordinatorHandle, n: usize) -> Vec<usize> {
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let label = i % CLASSES;
+            let rx = handle
+                .submit(RequestPayload::F32(vec![label as f32; x_stride()]))
+                .expect("round submits stay within the admission limit");
+            (label, rx)
+        })
+        .collect();
+    rxs.into_iter()
+        .map(|(label, rx)| {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("reply must arrive")
+                .expect("churned batches must keep serving");
+            assert_eq!(resp.prediction, label);
+            resp.quorum
+        })
+        .collect()
+}
+
+/// Serve `batches` rounds of 4 and return the final stats plus every
+/// reply's quorum in arrival order.
+fn serve(coord: Coordinator, batches: usize) -> (ServeStats, Vec<usize>) {
+    let handle = coord.handle();
+    let mut quorums = Vec::new();
+    for _ in 0..batches {
+        quorums.extend(round(&handle, 4));
+    }
+    (coord.shutdown().unwrap(), quorums)
+}
+
+fn build(config: SystemConfig, script: Option<ChurnScript>, faults: Vec<FaultScript>) -> (ExecServer, Coordinator) {
+    let (server, dep) = stub_server();
+    let mut b = ServeBuilder::new(config, server.handle(), dep, vec![arch(); FLEET], x_stride());
+    if let Some(s) = script {
+        b = b.churn_script(s);
+    }
+    if !faults.is_empty() {
+        b = b.fault_scripts(faults);
+    }
+    (server, b.start().unwrap())
+}
+
+/// Field-by-field bitwise comparison of the deterministic parts of two
+/// serving ledgers (wall-clock latency is the one non-virtual field and
+/// is deliberately excluded).
+fn assert_bitwise_identical(a: &ServeStats, b: &ServeStats) {
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits(), "energy drifted");
+    for p in [0.0, 50.0, 95.0, 100.0] {
+        assert_eq!(
+            a.virtual_latency.percentile_ms(p).to_bits(),
+            b.virtual_latency.percentile_ms(p).to_bits(),
+            "virtual latency p{p} drifted"
+        );
+    }
+    let (fa, fb) = (&a.fault, &b.fault);
+    assert_eq!(
+        (fa.timeouts, fa.crashes, fa.exec_failures, fa.redispatches, fa.harvested_late),
+        (fb.timeouts, fb.crashes, fb.exec_failures, fb.redispatches, fb.harvested_late)
+    );
+    assert_eq!(
+        (fa.quorum_failures, fa.replica_hits, fa.promotions, fa.replicas_placed, fa.shed),
+        (fb.quorum_failures, fb.replica_hits, fb.promotions, fb.replicas_placed, fb.shed)
+    );
+    assert_eq!(
+        (fa.mode_transitions, fa.batches_full, fa.batches_partial, fa.batches_elided),
+        (fb.mode_transitions, fb.batches_full, fb.batches_partial, fb.batches_elided)
+    );
+    assert_eq!(fa.standby_gflops_saved.to_bits(), fb.standby_gflops_saved.to_bits());
+    assert_eq!(fa.standby_energy_saved_j.to_bits(), fb.standby_energy_saved_j.to_bits());
+    assert_eq!(
+        (fa.joins, fa.drains, fa.departs, fa.rejoins, fa.replans, fa.warming_excluded),
+        (fb.joins, fb.drains, fb.departs, fb.rejoins, fb.replans, fb.warming_excluded)
+    );
+    assert_eq!(fa.quorum_histogram(), fb.quorum_histogram());
+    assert_eq!(fa.member_modes.len(), fb.member_modes.len());
+    for (la, lb) in fa.member_modes.iter().zip(&fb.member_modes) {
+        assert_eq!((la.full, la.partial, la.elided, la.transitions), (lb.full, lb.partial, lb.elided, lb.transitions));
+    }
+}
+
+/// An empty churn script must reproduce the fixed-fleet ledger bit for
+/// bit, including through a scripted crash (whose `mark_dead` now also
+/// writes the membership lifecycle — pure bookkeeping, observably inert).
+#[test]
+fn empty_churn_script_is_bitwise_identical_to_fixed_fleet() {
+    let mut faults: Vec<FaultScript> = (0..FLEET).map(|_| FaultScript::none()).collect();
+    faults[2] = FaultScript::crash_at(1);
+
+    let run = |script: Option<ChurnScript>| {
+        let (server, coord) = build(base_config(), script, faults.clone());
+        let (stats, _) = serve(coord, 3);
+        drop(server);
+        stats
+    };
+    let fixed = run(None);
+    let churn_plumbed = run(Some(ChurnScript::none()));
+
+    assert_eq!(fixed.fault.crashes, 1, "the scripted crash really fired");
+    assert_eq!(fixed.fault.joins + fixed.fault.drains + fixed.fault.rejoins, 0);
+    assert_bitwise_identical(&fixed, &churn_plumbed);
+}
+
+/// A scripted join shadow-executes for exactly `warmup_batches` batches
+/// (each delivery counted in `warming_excluded`) and never double-counts
+/// toward quorum: every batch aggregates exactly the 4 deployment members.
+#[test]
+fn join_warms_up_without_double_counting_quorum() {
+    let config = base_config();
+    let warmup = config.churn.warmup_batches;
+    let (server, coord) = build(
+        config,
+        Some(ChurnScript::join_at(1, DeviceProfile::rpi4())),
+        Vec::new(),
+    );
+    let (stats, quorums) = serve(coord, 5);
+    drop(server);
+
+    assert_eq!(stats.requests, 20);
+    assert_eq!(stats.batches, 5);
+    assert_eq!(stats.fault.joins, 1, "the scripted join admitted one device");
+    assert_eq!(stats.fault.rejoins, 0);
+    assert_eq!(stats.fault.crashes, 0);
+    assert_eq!(stats.fault.quorum_failures, 0);
+    assert_eq!(
+        stats.fault.warming_excluded, warmup,
+        "the joiner shadow-delivered once per warm-up batch, and was excluded each time"
+    );
+    // quorum is member-arity: the joiner serves as a 5th device but can
+    // only ever fill one of the 4 member slots, warmed up or not
+    assert!(quorums.iter().all(|&q| q == FLEET), "quorums: {quorums:?}");
+    for (k, &count) in stats.fault.quorum_histogram().iter().enumerate() {
+        assert!(count == 0 || k == FLEET, "histogram leaked a non-{FLEET} quorum at {k}");
+    }
+}
+
+/// A scripted drain places cover for its solo-hosted members, keeps the
+/// draining device serving until the cover is live, then departs it
+/// through the promotion machinery — zero queued batches lost, no crash
+/// recorded.
+#[test]
+fn drain_serves_until_covered_and_loses_no_batches() {
+    let (server, coord) =
+        build(base_config(), Some(ChurnScript::drain_at(1, 0)), Vec::new());
+    let (stats, quorums) = serve(coord, 5);
+    drop(server);
+
+    assert_eq!(stats.requests, 20, "every queued request was served");
+    assert_eq!(stats.fault.drains, 1);
+    assert_eq!(stats.fault.departs, 1, "the drain completed as a graceful departure");
+    assert_eq!(stats.fault.crashes, 0, "a drain is not a crash");
+    assert_eq!(stats.fault.timeouts, 0);
+    assert_eq!(stats.fault.quorum_failures, 0);
+    assert_eq!(
+        stats.fault.replicas_placed, 1,
+        "the drained device's member got exactly one cover standby"
+    );
+    assert_eq!(
+        stats.fault.promotions, 1,
+        "departure promoted the warm cover, the same path a fault takes"
+    );
+    assert!(quorums.iter().all(|&q| q == FLEET), "no member slot went dark: {quorums:?}");
+}
+
+/// A crashed slot re-enters via `Rejoining`: same slot index, a fresh
+/// warm-up, counted in `rejoins` — never as a fresh `joins` slot.
+#[test]
+fn crash_rejoin_reenters_the_same_slot_with_a_fresh_warmup() {
+    let config = base_config();
+    let warmup = config.churn.warmup_batches;
+    let mut faults: Vec<FaultScript> = (0..FLEET).map(|_| FaultScript::none()).collect();
+    faults[2] = FaultScript::crash_at(1);
+    let (server, coord) = build(
+        config,
+        Some(ChurnScript::none().and_rejoin_at(3, 2)),
+        faults,
+    );
+    let (stats, quorums) = serve(coord, 6);
+    drop(server);
+
+    assert_eq!(stats.fault.crashes, 1, "the scripted crash fired");
+    assert_eq!(stats.fault.redispatches, 1, "the crashed member cold-redispatched");
+    assert_eq!(stats.fault.rejoins, 1, "the slot re-entered via Rejoining");
+    assert_eq!(stats.fault.joins, 0, "a rejoin is not a fresh join slot");
+    assert_eq!(
+        stats.fault.warming_excluded, warmup,
+        "the rejoiner re-ran the full warm-up before counting again"
+    );
+    assert_eq!(stats.fault.quorum_failures, 0);
+    // the crash batch itself degrades to 3 of 4; everything else is full
+    assert_eq!(quorums.iter().filter(|&&q| q == FLEET - 1).count(), 4);
+    assert_eq!(quorums.iter().filter(|&&q| q == FLEET).count(), 20);
+}
+
+/// The incremental re-plan fires exactly at the staleness threshold: with
+/// the threshold set to the drained device's precise capacity share it
+/// fires once (at the batch the capacity actually drops — departure, not
+/// drain start), and one part in 10^9 above that share it never fires.
+#[test]
+fn replan_triggers_exactly_at_the_staleness_threshold() {
+    // the same prefix-sum order the leader uses, so the bits match
+    let profiles = [
+        DeviceProfile::jetson_nano(),
+        DeviceProfile::jetson_tx2(),
+        DeviceProfile::jetson_orin_nano(),
+        DeviceProfile::rpi4(),
+    ];
+    let planned: f64 = profiles.iter().map(|d| d.effective_gflops()).sum();
+    let live: f64 = profiles[..3].iter().map(|d| d.effective_gflops()).sum();
+    let staleness = (live - planned).abs() / planned;
+
+    let run = |threshold: f64| {
+        let mut config = base_config();
+        config.churn.enabled = true;
+        config.churn.staleness_threshold = threshold;
+        let (server, coord) =
+            build(config, Some(ChurnScript::drain_at(1, 3)), Vec::new());
+        let (stats, quorums) = serve(coord, 5);
+        drop(server);
+        assert!(quorums.iter().all(|&q| q == FLEET), "re-planning must not drop members");
+        assert_eq!(stats.fault.drains, 1);
+        assert_eq!(stats.fault.departs, 1);
+        stats
+    };
+
+    let at = run(staleness);
+    assert_eq!(
+        at.fault.replans, 1,
+        "staleness == threshold fires the re-plan, exactly once (the marker advances)"
+    );
+    let above = run(staleness * (1.0 + 1e-9));
+    assert_eq!(above.fault.replans, 0, "one part in 10^9 above the drift stays quiet");
+}
+
+/// The full churn story from the issue: a join mid-ramp, a drain, and a
+/// crash-rejoin, in one scripted run — zero dropped batches, every
+/// lifecycle counter accounted, ledgers still sized to the deployment.
+#[test]
+fn scripted_join_drain_and_crash_rejoin_complete_with_zero_dropped_batches() {
+    let config = base_config();
+    let warmup = config.churn.warmup_batches;
+    let mut faults: Vec<FaultScript> = (0..FLEET).map(|_| FaultScript::none()).collect();
+    faults[2] = FaultScript::crash_at(2);
+    let script = ChurnScript::join_at(1, DeviceProfile::rpi4())
+        .and_drain_at(3, 0)
+        .and_rejoin_at(6, 0);
+    let (server, coord) = build(config, Some(script), faults);
+    let (stats, quorums) = serve(coord, 8);
+    drop(server);
+
+    assert_eq!(stats.requests, 32, "zero dropped batches across the whole churn story");
+    assert_eq!(stats.batches, 8);
+    assert_eq!(stats.fault.joins, 1);
+    assert_eq!(stats.fault.drains, 1);
+    assert_eq!(stats.fault.departs, 1);
+    assert_eq!(stats.fault.crashes, 1);
+    assert_eq!(stats.fault.rejoins, 1);
+    assert_eq!(stats.fault.quorum_failures, 0);
+    // joiner + rejoiner each shadow-execute a full warm-up
+    assert_eq!(stats.fault.warming_excluded, 2 * warmup);
+    // only the crash batch degrades; drains and rejoins never cost a member
+    assert_eq!(quorums.iter().filter(|&&q| q == FLEET - 1).count(), 4);
+    assert_eq!(quorums.iter().filter(|&&q| q == FLEET).count(), 28);
+    // ledgers stay member-indexed (the fleet grew to 5 slots, members are 4)
+    assert_eq!(stats.fault.member_modes.len(), FLEET);
+}
+
+/// The sweep's churned-fleet axis (ISSUE 8): `coformer_churn` re-ranks the
+/// decomposition onto the serving fleet, `coformer_elastic` serves the
+/// stale mapping — on a fleet whose fastest device churned away from the
+/// heaviest member, the re-plan measurably wins the Sweep-scored latency.
+#[test]
+fn sweep_churned_fleet_axis_scores_what_replanning_buys() {
+    let heavy = Arch::uniform(Mode::Patch, 2, 32, 8, 2, 64, CLASSES);
+    let light = Arch::uniform(Mode::Patch, 2, 8, 8, 1, 16, CLASSES);
+    assert!(
+        CostModel::flops_per_sample(&heavy) > CostModel::flops_per_sample(&light),
+        "the heavy member must dominate the timeline"
+    );
+    // planned: the heavy member 0 on the fastest device (TX2)
+    let planned = vec![
+        DeviceProfile::jetson_tx2(),
+        DeviceProfile::jetson_orin_nano(),
+        DeviceProfile::jetson_nano(),
+    ];
+    // churned: the TX2 left and a Nano took slot 0 — the heavy member now
+    // serves on the slowest device unless someone re-plans
+    let churned = vec![
+        DeviceProfile::jetson_nano(),
+        DeviceProfile::jetson_orin_nano(),
+        DeviceProfile::jetson_tx2(),
+    ];
+    let base = coformer::strategies::Scenario::builder()
+        .fleet(planned)
+        .topology(coformer::net::Topology::star(3, coformer::net::Link::mbps(100.0), 1))
+        .archs(vec![heavy, light.clone(), light])
+        .d_i(64)
+        .build()
+        .unwrap();
+
+    let points = Sweep::new(base.clone())
+        .churned_fleets(&[churned.clone()])
+        .run_named(&["coformer_elastic", "coformer_churn"])
+        .unwrap();
+    assert_eq!(points.len(), 2);
+    let (stale, replanned) = (&points[0], &points[1]);
+    assert_eq!(stale.strategy, "coformer_elastic");
+    assert_eq!(replanned.strategy, "coformer_churn");
+    assert_eq!(stale.churned_fleet.as_deref(), Some(&churned[..]), "the point carries its axis");
+    assert!(
+        replanned.outcome.total_s() < stale.outcome.total_s(),
+        "re-planning must beat the stale decomposition: {} vs {}",
+        replanned.outcome.total_s(),
+        stale.outcome.total_s()
+    );
+
+    // and the stale churned serve really is a regression vs the plan the
+    // members were sized for — the gap the re-planner closes
+    let on_plan = Sweep::new(base).run_named(&["coformer_elastic"]).unwrap();
+    assert!(stale.outcome.total_s() > on_plan[0].outcome.total_s());
+}

@@ -211,3 +211,94 @@ fn shutdown_with_queued_requests_resolves_every_reply() {
         "every served request's reply arrived; the rest resolved as errors"
     );
 }
+
+/// ISSUE 8: shutdown racing live churn — a drain and a join are in flight
+/// (riding the batcher's churn side-channel) while the producer is still
+/// queueing and the main thread pulls the plug. Whatever interleaving the
+/// race lands on, every reply channel must still resolve: churn ops ride
+/// batches, so an op stranded behind the Shutdown message is dropped with
+/// the queue, never wedged in front of it.
+#[test]
+fn shutdown_during_churn_resolves_every_reply() {
+    use std::sync::mpsc::RecvTimeoutError;
+    use std::time::Duration;
+
+    use coformer::config::{DeviceSpec, SystemConfig as SC};
+    use coformer::device::DeviceProfile;
+    use coformer::model::Mode;
+    use coformer::runtime::StubSpec;
+
+    let classes = 4usize;
+    let arch = Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, classes);
+    let stride = {
+        let a = &arch;
+        a.tokens() * a.patch_dim()
+    };
+    let members: Vec<String> = (0..4).map(|i| format!("m{i}")).collect();
+    let spec = StubSpec {
+        models: members.iter().map(|m| (m.clone(), arch.clone())).collect(),
+        classes,
+    };
+    let server = coformer::runtime::ExecServer::start_stub(spec).unwrap();
+    let dep = coformer::runtime::manifest::DeploymentMeta {
+        task: "stub".into(),
+        members,
+        aggregators: std::collections::BTreeMap::new(),
+    };
+    let mut config = SC::paper_default();
+    config.devices.push(DeviceSpec::Preset("rpi-4b".into()));
+    config.deployment = "stub_4dev".into();
+    config.aggregator = "average".into();
+    config.max_batch = 4;
+    config.max_wait_ms = 1;
+    let coord = ServeBuilder::new(config, server.handle(), dep, vec![arch; 4], stride)
+        .start()
+        .unwrap();
+    let handle = coord.handle();
+    let churn_handle = coord.handle();
+
+    let producer = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for i in 0..200usize {
+            match handle.submit(RequestPayload::F32(vec![(i % 4) as f32; stride])) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => break, // leader gone: submit refused, nothing queued
+            }
+        }
+        rxs
+    });
+    // churn lands mid-stream: some batches serve the churned fleet, some
+    // race the shutdown — both ops are fire-and-forget sends, so they must
+    // either apply at a batch boundary or vanish with the queue
+    let _ = churn_handle.drain(0);
+    let _ = churn_handle.join(DeviceProfile::rpi4());
+    std::thread::sleep(Duration::from_millis(5));
+    let stats = coord.shutdown().unwrap();
+    // post-shutdown churn ops are refused, not wedged
+    assert!(churn_handle.drain(1).is_err(), "drain after shutdown must error");
+    assert!(churn_handle.join(DeviceProfile::rpi4()).is_err(), "join after shutdown must error");
+    let rxs = producer.join().unwrap();
+    drop(server);
+
+    assert!(!rxs.is_empty(), "producer must have queued at least one request");
+    let mut ok = 0usize;
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(_)) | Err(RecvTimeoutError::Disconnected) => {} // resolved as error
+            Err(RecvTimeoutError::Timeout) => {
+                panic!("a reply channel hung across shutdown-during-churn")
+            }
+        }
+    }
+    assert_eq!(
+        ok, stats.requests,
+        "every served request's reply arrived; the rest resolved as errors"
+    );
+    // whatever the race decided, the ledger is coherent: a drain either
+    // began (and possibly departed) or was dropped with the queue — it can
+    // never be double-counted or counted as a crash
+    assert!(stats.fault.drains <= 1);
+    assert!(stats.fault.joins <= 1);
+    assert!(stats.fault.departs <= stats.fault.drains);
+}

@@ -255,6 +255,38 @@ fn prop_gp_posterior_variance_nonnegative_and_shrinks_at_data() {
 }
 
 #[test]
+fn prop_gp_incremental_observe_matches_refit() {
+    // ISSUE 8: `observe` extends the Cholesky factor one bordered row at a
+    // time (the warm-started re-plan path); the posterior it yields must be
+    // numerically indistinguishable — mean and variance to 1e-9 — from
+    // refactorizing the full kernel matrix from scratch, for any
+    // observation history.
+    forall(200, 8600, |rng| {
+        let mut inc = Gp::new(Matern32::default(), 1e-4);
+        for _ in 0..rng.gen_range(1, 15) {
+            let x: Vec<f64> = (0..3).map(|_| rng.gen_f64() * 2.0).collect();
+            let y = rng.gen_f64() * 4.0 - 2.0;
+            inc.observe(x, y);
+        }
+        let mut refit = inc.clone();
+        refit.refit_from_scratch();
+        for _ in 0..10 {
+            let q: Vec<f64> = (0..3).map(|_| rng.gen_f64() * 4.0 - 1.0).collect();
+            let (m_inc, v_inc) = inc.predict(&q);
+            let (m_ref, v_ref) = refit.predict(&q);
+            assert!(
+                (m_inc - m_ref).abs() < 1e-9,
+                "mean drifted: incremental {m_inc} vs refit {m_ref}"
+            );
+            assert!(
+                (v_inc - v_ref).abs() < 1e-9,
+                "variance drifted: incremental {v_inc} vs refit {v_ref}"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_ei_nonnegative_and_zero_when_hopeless() {
     forall(1000, 600, |rng| {
         let mean = rng.gen_f64() * 10.0 - 5.0;
