@@ -31,6 +31,7 @@ use coformer::strategies::registry::{
     CoFormer, CoFormerDegraded, Ensemble, PipeEdge, SingleEdge, TensorParallel,
 };
 use coformer::strategies::{DispatchMode, Outcome, Scenario, Segment, Strategy, Sweep, SweepPoint};
+use coformer::util::units::{Bytes, Flops, GFlops, GigaBytes, Joules, Secs};
 use coformer::Result;
 
 // ---------------------------------------------------------------------------
@@ -67,7 +68,7 @@ fn topo(mbps: f64) -> Topology {
 }
 
 fn gflops(a: &Arch) -> f64 {
-    CostModel::flops_per_sample(a) / 1e9
+    Flops(CostModel::flops_per_sample(a)).to_gflops().0
 }
 
 const D_I_PAPER: usize = 512;
@@ -90,11 +91,11 @@ fn coformer_outcome(mbps: f64) -> Outcome {
 }
 
 fn ms(x: f64) -> String {
-    format!("{:.2} ms", x * 1e3)
+    format!("{:.2} ms", Secs(x).to_millis().0)
 }
 
 fn mj(x: f64) -> String {
-    format!("{:.1} mJ", x * 1e3)
+    format!("{:.1} mJ", Joules(x).to_millijoules().0)
 }
 
 /// Batched member-logits extraction over a dataset prefix.
@@ -134,7 +135,11 @@ fn fig1() -> Result<()> {
         .filter(|m| ["Swin-L", "ViT-L/16", "DeiT-B"].contains(&m.name))
         .chain(catalog::efficient_models().iter())
     {
-        let out = SingleEdge::standalone(&tx2, m.gflops * 1e9, (m.memory_gb * 1e9) as usize);
+        let out = SingleEdge::standalone(
+            &tx2,
+            GFlops(m.gflops).to_flops().0,
+            GigaBytes(m.memory_gb).to_bytes().0 as usize,
+        );
         let lat = match &out {
             Ok(o) => ms(o.total_s()),
             Err(_) => "OOM".into(),
@@ -143,7 +148,7 @@ fn fig1() -> Result<()> {
     }
     let cof = coformer_outcome(100.0);
     let swin = catalog::by_name("Swin-L").unwrap();
-    let swin_t = tx2.compute_time_s(swin.gflops * 1e9);
+    let swin_t = tx2.compute_time_s(GFlops(swin.gflops).to_flops().0);
     rows.push(vec![
         "CoFormer (3-dev, DeiT-decomposed)".into(),
         ms(cof.total_s()),
@@ -312,7 +317,7 @@ fn fig6(engine: &Engine, _artifacts: &PathBuf) -> Result<()> {
             format!("{:.2}%", acc * 100.0),
             format!(
                 "{:.3} ms",
-                tx2.compute_time_s(CostModel::flops_per_sample(&meta.arch)) * 1e3
+                Secs(tx2.compute_time_s(CostModel::flops_per_sample(&meta.arch))).to_millis().0
             ),
         ]);
     }
@@ -334,7 +339,7 @@ fn fig6(engine: &Engine, _artifacts: &PathBuf) -> Result<()> {
     rows.push(vec![
         "Ens (weighted average)".into(),
         format!("{:.2}%", ens_acc * 100.0),
-        format!("{:.3} ms (slowest member gates)", out.total_s() * 1e3),
+        format!("{:.3} ms (slowest member gates)", Secs(out.total_s()).to_millis().0),
     ]);
     println!("{}", render_table(&["model", "accuracy (measured)", "latency"], &rows));
     println!("(paper: ensembles gain accuracy but inference is gated by the slowest model)\n");
@@ -362,7 +367,7 @@ fn fig9(engine: &Engine) -> Result<()> {
             format!("{:.2}%", teacher.accuracy_solo * 100.0),
             ms(t_out.total_s()),
             mj(t_out.total_energy_j()),
-            format!("{:.1} MB", t_mem as f64 / 1e6),
+            format!("{:.1} MB", Bytes(t_mem as f64).to_megabytes().0),
         ]);
         let dep = m.deployment(dep_name)?.clone();
         let archs: Vec<Arch> = dep
@@ -383,14 +388,21 @@ fn fig9(engine: &Engine) -> Result<()> {
             format!("{:.2}%", acc * 100.0),
             ms(out.total_s()),
             mj(out.total_energy_j()),
-            format!("{:.1} MB (peak/device)", out.peak_memory_bytes() as f64 / 1e6),
+            format!(
+                "{:.1} MB (peak/device)",
+                Bytes::from_usize(out.peak_memory_bytes()).to_megabytes().0
+            ),
         ]);
     }
     // the paper's GPT2-XL OOM headline, at catalog scale
     let gpt = catalog::by_name("GPT2-XL").unwrap();
     let nano = DeviceProfile::jetson_nano();
-    let oom =
-        SingleEdge::standalone(&nano, gpt.gflops * 1e9, (gpt.memory_gb * 1e9 * 1.074) as usize);
+    let oom = SingleEdge::standalone(
+        &nano,
+        GFlops(gpt.gflops).to_flops().0,
+        // GiB-vs-GB slack: the catalog quotes decimal GB, devices are binary
+        (GigaBytes(gpt.memory_gb).to_bytes().0 * 1.074) as usize,
+    );
     rows.push(vec![
         "GPT2-XL on Jetson Nano (catalog)".into(),
         "-".into(),
@@ -484,7 +496,7 @@ fn fig10(engine: &Engine) -> Result<()> {
             format!("{:.2}%", acc * 100.0),
             ms(out.total_s()),
             mj(out.total_energy_j()),
-            format!("{:.0} MB", out.peak_memory_bytes() as f64 / 1e6),
+            format!("{:.0} MB", Bytes::from_usize(out.peak_memory_bytes()).to_megabytes().0),
         ]);
     }
     println!(
@@ -912,7 +924,7 @@ fn table1() -> Result<()> {
             // the catalog memory figures are desktop-measured; on Jetson
             // unified memory these models fit (the paper ran them), so
             // latency is reported from the compute model directly
-            let lat = dev.compute_time_s(m.gflops * 1e9);
+            let lat = dev.compute_time_s(GFlops(m.gflops).to_flops().0);
             rows.push(vec![
                 m.name.to_string(),
                 dev.name.clone(),
@@ -932,10 +944,17 @@ fn table2() -> Result<()> {
     let tx2 = DeviceProfile::jetson_tx2();
     let mut rows = Vec::new();
     let baseline = catalog::by_name("PoolFormer-M48").unwrap();
-    let base_out =
-        SingleEdge::standalone(&tx2, baseline.gflops * 1e9, (baseline.memory_gb * 1e9) as usize)?;
+    let base_out = SingleEdge::standalone(
+        &tx2,
+        GFlops(baseline.gflops).to_flops().0,
+        GigaBytes(baseline.memory_gb).to_bytes().0 as usize,
+    )?;
     for m in catalog::efficient_models() {
-        let out = SingleEdge::standalone(&tx2, m.gflops * 1e9, (m.memory_gb * 1e9) as usize)?;
+        let out = SingleEdge::standalone(
+            &tx2,
+            GFlops(m.gflops).to_flops().0,
+            GigaBytes(m.memory_gb).to_bytes().0 as usize,
+        )?;
         rows.push(vec![
             m.name.to_string(),
             format!("{:.1} G", m.gflops),
@@ -951,7 +970,7 @@ fn table2() -> Result<()> {
     rows.push(vec![
         "CoFormer+DeiT (3-dev)".into(),
         format!("{total_g:.1} G"),
-        format!("{:.2} GB peak/dev", cof.peak_memory_bytes() as f64 / 1e9),
+        format!("{:.2} GB peak/dev", Bytes::from_usize(cof.peak_memory_bytes()).to_gigabytes().0),
         "82.26%* / measured in EXPERIMENTS".into(),
         ms(cof.total_s()),
         format!("{:.2}x", base_out.total_s() / cof.total_s()),
@@ -1029,10 +1048,13 @@ fn table4(engine: &Engine, _artifacts: &PathBuf) -> Result<()> {
     let agg_ms = |mult: f64| {
         format!(
             "{:.2} ms",
-            (cof.total_s()
-                + tx2.compute_time_s(CostModel::aggregation_flops(d_agg, D_I_PAPER, 4))
-                    * (mult - 1.0))
-                * 1e3
+            Secs(
+                cof.total_s()
+                    + tx2.compute_time_s(CostModel::aggregation_flops(d_agg, D_I_PAPER, 4))
+                        * (mult - 1.0)
+            )
+            .to_millis()
+            .0
         )
     };
     let rows = vec![
@@ -1041,7 +1063,7 @@ fn table4(engine: &Engine, _artifacts: &PathBuf) -> Result<()> {
             format!("{:.2}%", m.model("teacher_edgenet")?.accuracy_solo * 100.0),
             format!(
                 "{:.2} ms",
-                tx2.compute_time_s(CostModel::flops_per_sample(&deit_b())) * 1e3
+                Secs(tx2.compute_time_s(CostModel::flops_per_sample(&deit_b()))).to_millis().0
             ),
         ],
         vec![

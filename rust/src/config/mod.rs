@@ -5,6 +5,7 @@ use std::path::Path;
 
 use crate::device::DeviceProfile;
 use crate::net::{Link, Topology};
+use crate::util::units::{Mbps, Millis};
 use crate::util::Json;
 use crate::Result;
 
@@ -755,6 +756,18 @@ impl SystemConfig {
             self.max_batch >= 1,
             "max_batch must be >= 1 (the batcher cannot form empty batches)"
         );
+        // the network knobs feed Link::new's asserts: reject them here as
+        // data, through the same gate the net layer's setters use
+        anyhow::ensure!(
+            crate::net::validate_mbps(self.bandwidth_mbps).is_ok(),
+            "bandwidth_mbps {} must be finite and > 0",
+            self.bandwidth_mbps
+        );
+        anyhow::ensure!(
+            self.link_latency_ms.is_finite() && self.link_latency_ms >= 0.0,
+            "link_latency_ms {} must be finite and >= 0",
+            self.link_latency_ms
+        );
         self.fault.validate()?;
         anyhow::ensure!(
             self.fault.min_quorum <= self.devices.len(),
@@ -820,12 +833,19 @@ impl SystemConfig {
         self.devices.iter().map(|d| d.resolve()).collect()
     }
 
-    pub fn topology(&self) -> Topology {
-        Topology::star(
-            self.devices.len(),
-            Link::new(self.bandwidth_mbps * 1e6, self.link_latency_ms / 1e3),
-            self.central,
+    /// The configured link, converted from the config's human units
+    /// (Mb/s, ms) to the simulator's (b/s, s) — the one place the
+    /// conversion happens, shared by [`Self::topology`] and the
+    /// coordinator's device-admission path.
+    pub fn link(&self) -> Link {
+        Link::new(
+            Mbps(self.bandwidth_mbps).to_bps().0,
+            Millis(self.link_latency_ms).to_secs().0,
         )
+    }
+
+    pub fn topology(&self) -> Topology {
+        Topology::star(self.devices.len(), self.link(), self.central)
     }
 }
 
@@ -1190,5 +1210,36 @@ mod tests {
         c.replication.elision.enabled = true;
         c.replication.max_queue_depth = 0;
         assert!(c.validate().unwrap_err().to_string().contains("no pressure signal"));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_network_knobs() {
+        // ISSUE 9: the network knobs used to flow straight into Link::new's
+        // asserts — validate now rejects them as data first
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let mut c = SystemConfig::paper_default();
+            c.bandwidth_mbps = bad;
+            assert!(
+                c.validate().unwrap_err().to_string().contains("bandwidth_mbps"),
+                "bandwidth_mbps {bad} accepted"
+            );
+        }
+        for bad in [-1.0, f64::NAN, f64::INFINITY] {
+            let mut c = SystemConfig::paper_default();
+            c.link_latency_ms = bad;
+            assert!(
+                c.validate().unwrap_err().to_string().contains("link_latency_ms"),
+                "link_latency_ms {bad} accepted"
+            );
+        }
+        // zero latency is legal (an ideal fabric), and the shared link()
+        // helper carries the config's Mb/s + ms into the simulator's b/s + s
+        let mut c = SystemConfig::paper_default();
+        c.link_latency_ms = 0.0;
+        assert!(c.validate().is_ok());
+        let l = SystemConfig::paper_default().link();
+        assert_eq!(l.bandwidth_bps, 100.0 * 1e6);
+        assert_eq!(l.latency_s, 1.0 / 1e3);
+        assert_eq!(SystemConfig::paper_default().topology().links[0], l);
     }
 }

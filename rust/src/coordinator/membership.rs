@@ -38,6 +38,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::units::{Frac, GFlops};
+
 use crate::device::DeviceProfile;
 
 /// Lifecycle state of one device slot.
@@ -224,10 +226,16 @@ impl FleetMembership {
     /// and the planned figure: `|live − planned| / planned`. 0 until a
     /// plan has been marked (nothing to be stale against).
     pub fn staleness(&self, live_gflops: f64) -> f64 {
+        self.staleness_of(GFlops(live_gflops)).0
+    }
+
+    /// Typed [`Self::staleness`]: a GFLOPS-over-GFLOPS ratio is a
+    /// dimensionless [`Frac`], and the type says so.
+    pub fn staleness_of(&self, live: GFlops) -> Frac {
         if self.planned_gflops <= 0.0 {
-            return 0.0;
+            return Frac(0.0);
         }
-        (live_gflops - self.planned_gflops).abs() / self.planned_gflops
+        (live - GFlops(self.planned_gflops)).abs() / GFlops(self.planned_gflops)
     }
 
     /// Record that the current decomposition was planned against a fleet

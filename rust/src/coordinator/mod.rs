@@ -102,6 +102,7 @@ use crate::net::{Link, Topology};
 use crate::runtime::engine::XBatch;
 use crate::runtime::manifest::DeploymentMeta;
 use crate::runtime::ExecHandle;
+use crate::util::units::{Flops, Secs};
 use crate::Result;
 pub use admission::{Admission, Overloaded};
 pub use batcher::{Batch, Batcher, BatcherConfig, IntakePressure};
@@ -855,7 +856,7 @@ impl Leader {
         if self.recent_virtual_ms.len() == RECENT_LATENCY_WINDOW {
             self.recent_virtual_ms.pop_front();
         }
-        self.recent_virtual_ms.push_back(virtual_s * 1e3);
+        self.recent_virtual_ms.push_back(Secs(virtual_s).to_millis().0);
     }
 
     /// Record one member's per-batch observations into its rolling
@@ -976,7 +977,9 @@ impl Leader {
             let live_standbys =
                 order[m][1..].iter().filter(|&&w| self.worker_txs[w].is_some()).count();
             let saved_gflops =
-                self.members[m].flops_per_sample * n as f64 * live_standbys as f64 / 1e9;
+                Flops(self.members[m].flops_per_sample * n as f64 * live_standbys as f64)
+                    .to_gflops()
+                    .0;
             let saved_j = member_standby_energy_j[m];
             self.fault.standby_gflops_saved += saved_gflops;
             self.fault.standby_energy_saved_j += saved_j;
@@ -1186,7 +1189,7 @@ impl Leader {
             let arrive = primary[m]
                 .and_then(|w| worker_arrive_s[w])
                 .unwrap_or(gate_s);
-            self.note_member_obs(m, arrive * 1e3, member_energy_j[m]);
+            self.note_member_obs(m, Secs(arrive).to_millis().0, member_energy_j[m]);
         }
 
         // Quorum check over arrived member feature sets (k of n).
@@ -1528,10 +1531,7 @@ impl Leader {
     /// standby, counting toward quorum only after its warm-up.
     fn admit_device(&mut self, profile: DeviceProfile) {
         let w = self.devices.len();
-        let link = Link::new(
-            self.config.bandwidth_mbps * 1e6,
-            self.config.link_latency_ms / 1e3,
-        );
+        let link = self.config.link();
         match spawn_worker(w, profile.clone(), FaultScript::none(), self.exec.clone(), link)
         {
             Ok((jtx, join)) => {

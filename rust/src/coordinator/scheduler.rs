@@ -81,6 +81,14 @@ pub struct MemberPressure {
     pub latency_ms: f64,
 }
 
+impl MemberPressure {
+    /// The latency reading as a typed quantity (the raw field stays `f64`
+    /// so custom [`PressureSignal`]s construct readings with literals).
+    pub fn latency(&self) -> crate::util::units::Millis {
+        crate::util::units::Millis(self.latency_ms)
+    }
+}
+
 /// One member's slice of the observation state for one batch: what the
 /// leader knows about this member when the [`PressureSignal`] runs.
 #[derive(Clone, Copy, Debug)]

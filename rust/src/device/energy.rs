@@ -6,6 +6,7 @@
 //! over runs.
 
 use super::profile::DeviceProfile;
+use crate::util::units::{Joules, Secs, Watts};
 
 /// Integrates energy over busy/idle intervals of one device's timeline.
 #[derive(Clone, Debug, Default)]
@@ -39,7 +40,7 @@ impl EnergyMeter {
     /// so pure idling contributes zero, exactly as the Monsoon protocol
     /// reports it.
     pub fn end_inference(&mut self, profile: &DeviceProfile) -> f64 {
-        let excess = (profile.active_power_w - profile.idle_power_w) * self.busy_s;
+        let excess = self.excess(profile).0;
         self.samples.push(excess);
         self.busy_s = 0.0;
         self.idle_s = 0.0;
@@ -50,10 +51,17 @@ impl EnergyMeter {
     /// sample — for long-lived serving loops that aggregate energy
     /// themselves (an unbounded sample log would grow forever there).
     pub fn end_inference_unsampled(&mut self, profile: &DeviceProfile) -> f64 {
-        let excess = (profile.active_power_w - profile.idle_power_w) * self.busy_s;
+        let excess = self.excess(profile).0;
         self.busy_s = 0.0;
         self.idle_s = 0.0;
         excess
+    }
+
+    /// Background-subtracted energy of the open region: excess draw
+    /// (active − idle, W) over the busy time — a dimensional W × s = J,
+    /// shared by both `end_inference` flavors.
+    fn excess(&self, profile: &DeviceProfile) -> Joules {
+        Watts(profile.active_power_w - profile.idle_power_w).for_duration(Secs(self.busy_s))
     }
 
     /// Mean per-inference energy, joules.

@@ -8,6 +8,7 @@
 //! relative device ratios (what the paper's comparisons rest on) are
 //! preserved exactly.
 
+use crate::util::units::{Flops, GFlops, Secs};
 use crate::util::Json;
 
 /// Static description of an edge device.
@@ -56,12 +57,23 @@ impl DeviceProfile {
 
     /// Effective sustained GFLOPS for transformer workloads.
     pub fn effective_gflops(&self) -> f64 {
-        self.peak_gflops * self.efficiency
+        self.effective().0
+    }
+
+    /// Effective sustained throughput as a typed quantity.
+    pub fn effective(&self) -> GFlops {
+        GFlops(self.peak_gflops * self.efficiency)
     }
 
     /// Seconds to execute `flops` of model compute.
     pub fn compute_time_s(&self, flops: f64) -> f64 {
-        flops / (self.effective_gflops() * 1e9)
+        self.compute_time(Flops(flops)).0
+    }
+
+    /// Typed Eq. 4 fallback: FLOP volume over sustained FLOP/s — a
+    /// dimensional division, no raw `× 1e9`.
+    pub fn compute_time(&self, flops: Flops) -> Secs {
+        flops.at(self.effective().to_flops())
     }
 
     /// NVIDIA Jetson Nano: 4 GB, 235.8 GFLOPS, 10 W (Table VII).

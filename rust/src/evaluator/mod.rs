@@ -7,6 +7,7 @@ use crate::model::{policy::DeviceCaps, Arch, CostModel, DecompositionPolicy};
 use crate::net::Topology;
 use crate::predictor::{arch_features, LatencyPredictor};
 use crate::runtime::manifest::ProxyPoint;
+use crate::util::units::Millis;
 
 /// Per-phase latency breakdown of one collaborative inference (Eq. 3).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -37,7 +38,10 @@ impl<'a> LatencyModel<'a> {
     /// trained, analytic FLOPs/throughput otherwise.
     pub fn phase1_s(&self, n: usize, arch: &Arch) -> f64 {
         match self.predictors {
-            Some(ps) => ps[n].predict_ms(&arch_features(arch)) / 1e3,
+            // the predictor speaks ms (its training unit); this seam is
+            // where the model's ms world meets the simulator's s world —
+            // say so with the type instead of a naked / 1e3
+            Some(ps) => Millis(ps[n].predict_ms(&arch_features(arch))).to_secs().0,
             None => self.devices[n].compute_time_s(CostModel::flops_per_sample(arch)),
         }
     }
@@ -49,8 +53,8 @@ impl<'a> LatencyModel<'a> {
 
     /// Phase-3 latency (Eq. 6): `2·M·d_i·d_agg / g` at the central node.
     pub fn phase3_s(&self, d_agg: usize) -> f64 {
-        let g = self.devices[self.topology.central].effective_gflops() * 1e9;
-        CostModel::aggregation_flops(d_agg, self.d_i, self.agg_rows) / g
+        let g = self.devices[self.topology.central].effective().to_flops();
+        CostModel::aggregation_flops(d_agg, self.d_i, self.agg_rows) / g.0
     }
 
     /// Full Eq. 3 for a policy.

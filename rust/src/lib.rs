@@ -24,7 +24,11 @@
 //! wall clocks outside the leader loop, no order-leaking map iteration),
 //! the `SystemConfig::validate` gate, and `SeqCst`-only admission atomics;
 //! `rust/tests/loom_admission.rs` model-checks the admission gate under
-//! `--cfg loom`.
+//! `--cfg loom`. Physical quantities are dimension-checked (ISSUE 9): the
+//! typed newtypes in [`util::units`] hold every cross-unit scale constant
+//! in the crate, and the lint's `units` rule bans conversion literals
+//! (`* 1e3`, `* 8.0`, …) and unsuffixed raw-`f64` quantity names
+//! everywhere else — including the binaries.
 
 #![forbid(unsafe_code)]
 

@@ -20,6 +20,7 @@ use coformer::metrics::render_table;
 use coformer::model::{policy::DeviceCaps, CostModel};
 use coformer::predictor::{collect_dataset, LatencyPredictor};
 use coformer::runtime::{Engine, ExecServer};
+use coformer::util::units::{Flops, Joules, Secs};
 use coformer::Result;
 
 const USAGE: &str = "\
@@ -140,7 +141,7 @@ fn info(artifacts: &PathBuf) -> Result<()> {
             name.clone(),
             meta.task.clone(),
             format!("{}", meta.param_count),
-            format!("{:.2}M", CostModel::flops_per_sample(&meta.arch) / 1e6),
+            format!("{:.2}M", Flops(CostModel::flops_per_sample(&meta.arch)).to_mflops().0),
             format!("{:.4}", meta.accuracy_solo),
         ]);
     }
@@ -229,7 +230,7 @@ fn search(
     }
     println!("{}", render_table(&["device", "l", "d", "h", "D"], &rows));
     let b = obj.latency.breakdown(&res.best, &teacher);
-    println!("predicted latency: {:.2} ms", b.total_s * 1e3);
+    println!("predicted latency: {:.2} ms", Secs(b.total_s).to_millis().0);
     Ok(())
 }
 
@@ -342,7 +343,7 @@ fn eval(
         correct as f64 / n as f64,
         stats.virtual_latency.p50_ms(),
         stats.virtual_latency.p95_ms(),
-        stats.total_energy_j / n as f64 * 1e3,
+        Joules(stats.total_energy_j / n as f64).to_millijoules().0,
     );
     println!(
         "host throughput={:.1} req/s (wall {:.2}s, {} batches, mean batch {:.1})",

@@ -4,6 +4,8 @@
 
 use std::time::Instant;
 
+use crate::util::units::Nanos;
+
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -16,23 +18,12 @@ pub struct BenchResult {
 
 impl BenchResult {
     pub fn report(&self) {
-        let fmt = |ns: f64| -> String {
-            if ns < 1e3 {
-                format!("{ns:.0} ns")
-            } else if ns < 1e6 {
-                format!("{:.2} µs", ns / 1e3)
-            } else if ns < 1e9 {
-                format!("{:.2} ms", ns / 1e6)
-            } else {
-                format!("{:.2} s", ns / 1e9)
-            }
-        };
         println!(
             "{:<44} time: [{} {} {}]  ({} iters)",
             self.name,
-            fmt(self.p50_ns),
-            fmt(self.mean_ns),
-            fmt(self.p95_ns),
+            Nanos(self.p50_ns).human(),
+            Nanos(self.mean_ns).human(),
+            Nanos(self.p95_ns).human(),
             self.iters
         );
     }

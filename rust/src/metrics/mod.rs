@@ -4,6 +4,8 @@
 
 pub mod bench;
 
+use crate::util::units::{Millis, Secs};
+
 /// Latency sample collector (the PyTorch-Profiler analog).
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
@@ -21,7 +23,17 @@ impl LatencyStats {
     }
 
     pub fn record_s(&mut self, s: f64) {
-        self.record_ms(s * 1e3);
+        self.record_ms(Secs(s).to_millis().0);
+    }
+
+    /// Typed recording; the collector's native unit stays ms.
+    pub fn record(&mut self, sample: Millis) {
+        self.record_ms(sample.0);
+    }
+
+    /// Mean as a typed quantity (`mean_ms` delegates here).
+    pub fn mean(&self) -> Millis {
+        Millis(self.mean_ms())
     }
 
     pub fn count(&self) -> usize {
@@ -62,7 +74,7 @@ impl LatencyStats {
     /// Throughput in requests/s given the recorded per-request latencies
     /// were produced back-to-back.
     pub fn throughput_rps(&self) -> f64 {
-        let total_s = self.samples_ms.iter().sum::<f64>() / 1e3;
+        let total_s = Millis(self.samples_ms.iter().sum::<f64>()).to_secs().0;
         if total_s == 0.0 {
             return 0.0;
         }

@@ -15,6 +15,8 @@
 
 use std::fmt;
 
+use crate::util::units::{Bps, Bytes, Mbps, Millis, Secs};
+
 /// Typed error from topology/link mutation — the net-layer analog of
 /// `ScenarioError`: invalid reshapes are reported as data, never written
 /// into the fabric (an unchecked `0.0` Mb/s silently yields `inf` transfer
@@ -52,6 +54,18 @@ impl fmt::Display for NetError {
 
 impl std::error::Error for NetError {}
 
+/// The single source of truth for "is this a usable link rate". All three
+/// bandwidth mutation paths — [`Link::mbps`], [`Topology::set_bandwidth_mbps`]
+/// and [`Topology::set_link_bandwidth_mbps`] — route through here, so the
+/// finite-and-positive check cannot drift between them (ISSUE 9 satellite:
+/// each used to repeat it inline).
+pub fn validate_mbps(mb: f64) -> Result<Mbps, NetError> {
+    if !mb.is_finite() || mb <= 0.0 {
+        return Err(NetError::InvalidBandwidth { mbps: mb });
+    }
+    Ok(Mbps(mb))
+}
+
 /// A point-to-point link (device → central node through the switch).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Link {
@@ -72,9 +86,22 @@ impl Link {
         Link { bandwidth_bps, latency_s, loss: 0.0 }
     }
 
-    /// Mb/s convenience constructor (the unit the paper quotes).
+    /// Mb/s convenience constructor (the unit the paper quotes), with the
+    /// testbed's 1 ms switch-latency floor. Routes through [`validate_mbps`]
+    /// like the reshape setters, so a degenerate rate fails loudly here too.
     pub fn mbps(mb: f64) -> Self {
-        Link::new(mb * 1e6, 1e-3)
+        assert!(validate_mbps(mb).is_ok(), "link bandwidth {mb} Mb/s must be finite and > 0");
+        Link::new(Mbps(mb).to_bps().0, Millis(1.0).to_secs().0)
+    }
+
+    /// This link's rate as a typed quantity.
+    pub fn bandwidth(&self) -> Bps {
+        Bps(self.bandwidth_bps)
+    }
+
+    /// This link's one-way latency floor as a typed quantity.
+    pub fn latency(&self) -> Secs {
+        Secs(self.latency_s)
     }
 
     /// Lossy variant of this link; the loss fraction is validated, not
@@ -91,11 +118,19 @@ impl Link {
     /// on a lossy link). The `loss == 0` path is bit-identical to the
     /// pre-ISSUE-6 formula.
     pub fn transfer_time_s(&self, bytes: usize) -> f64 {
-        if self.loss > 0.0 {
-            self.latency_s + (bytes as f64 * 8.0) / (self.bandwidth_bps * (1.0 - self.loss))
+        self.transfer_time(Bytes::from_usize(bytes)).0
+    }
+
+    /// Typed Eq. 5: `t = latency + |X| / r`, with goodput scaled by
+    /// `1 − loss` on a lossy link. The bits-at-rate division is
+    /// dimensional ([`crate::util::units::Bits::at`]) — no raw `× 8`.
+    pub fn transfer_time(&self, payload: Bytes) -> Secs {
+        let goodput = if self.loss > 0.0 {
+            Bps(self.bandwidth_bps * (1.0 - self.loss))
         } else {
-            self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
-        }
+            self.bandwidth()
+        };
+        self.latency() + payload.to_bits().at(goodput)
     }
 }
 
@@ -140,11 +175,9 @@ impl Topology {
     /// `inf`-transfer fabric (callers outside `ScenarioBuilder::build` used
     /// to bypass its validation entirely).
     pub fn set_bandwidth_mbps(&mut self, mb: f64) -> Result<(), NetError> {
-        if !mb.is_finite() || mb <= 0.0 {
-            return Err(NetError::InvalidBandwidth { mbps: mb });
-        }
+        let rate = validate_mbps(mb)?;
         for l in &mut self.links {
-            l.bandwidth_bps = mb * 1e6;
+            l.bandwidth_bps = rate.to_bps().0;
         }
         Ok(())
     }
@@ -155,10 +188,8 @@ impl Topology {
         if link >= self.links.len() {
             return Err(NetError::LinkOutOfRange { link, n: self.links.len() });
         }
-        if !mb.is_finite() || mb <= 0.0 {
-            return Err(NetError::InvalidBandwidth { mbps: mb });
-        }
-        self.links[link].bandwidth_bps = mb * 1e6;
+        let rate = validate_mbps(mb)?;
+        self.links[link].bandwidth_bps = rate.to_bps().0;
         Ok(())
     }
 
@@ -191,7 +222,12 @@ pub struct Transfer {
 impl Transfer {
     /// Link occupancy, seconds.
     pub fn duration_s(&self) -> f64 {
-        self.end_s - self.start_s
+        self.duration().0
+    }
+
+    /// Link occupancy as a typed quantity.
+    pub fn duration(&self) -> Secs {
+        Secs(self.end_s) - Secs(self.start_s)
     }
 }
 
@@ -418,5 +454,62 @@ mod tests {
     #[should_panic]
     fn zero_bandwidth_rejected() {
         Link::new(0.0, 0.0);
+    }
+
+    #[test]
+    fn validate_mbps_gates_all_three_mutation_paths() {
+        // regression (ISSUE 9 satellite): the finite-and-positive check used
+        // to be copy-pasted into Link::mbps and both reshape setters; all
+        // three now share validate_mbps, so one rejection list covers them
+        let mut t = Topology::star(2, Link::mbps(100.0), 0);
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert!(
+                matches!(validate_mbps(bad), Err(NetError::InvalidBandwidth { .. })),
+                "validate_mbps accepted {bad}"
+            );
+            assert!(
+                matches!(t.set_bandwidth_mbps(bad), Err(NetError::InvalidBandwidth { .. })),
+                "set_bandwidth_mbps accepted {bad}"
+            );
+            assert!(
+                matches!(
+                    t.set_link_bandwidth_mbps(1, bad),
+                    Err(NetError::InvalidBandwidth { .. })
+                ),
+                "set_link_bandwidth_mbps accepted {bad}"
+            );
+        }
+        // the fabric is untouched after every rejection
+        assert_eq!(t.links[0].bandwidth_bps, 100.0 * 1e6);
+        assert_eq!(t.links[1].bandwidth_bps, 100.0 * 1e6);
+        // a good rate passes through as a typed quantity
+        assert_eq!(validate_mbps(250.0), Ok(crate::util::units::Mbps(250.0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "must be finite and > 0")]
+    fn link_mbps_constructor_shares_the_gate() {
+        // NaN * 1e6 slipped past the old inline check only because
+        // Link::new's `> 0` assert happened to catch it with a generic
+        // message; the shared gate now rejects it by name
+        Link::mbps(f64::NAN);
+    }
+
+    #[test]
+    fn typed_accessors_mirror_raw_fields() {
+        let l = Link::mbps(100.0);
+        assert_eq!(l.bandwidth().0, l.bandwidth_bps);
+        assert_eq!(l.latency().0, l.latency_s);
+        assert_eq!(l.bandwidth().to_mbps(), crate::util::units::Mbps(100.0));
+        // typed and raw Eq. 5 are the same arithmetic, bit for bit
+        let payload = crate::util::units::Bytes::from_usize(1 << 20);
+        assert_eq!(l.transfer_time(payload).0.to_bits(), l.transfer_time_s(1 << 20).to_bits());
+        let lossy = Link::mbps(10.0).with_loss(0.25).unwrap();
+        assert_eq!(
+            lossy.transfer_time(payload).0.to_bits(),
+            lossy.transfer_time_s(1 << 20).to_bits()
+        );
+        let t = Transfer { start_s: 1.25, end_s: 3.5 };
+        assert_eq!(t.duration().0.to_bits(), t.duration_s().to_bits());
     }
 }

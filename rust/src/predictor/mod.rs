@@ -12,6 +12,7 @@ pub mod mlp;
 
 use crate::device::DeviceProfile;
 use crate::model::{Arch, CostModel};
+use crate::util::units::Secs;
 use crate::util::Rng;
 pub use mlp::Mlp;
 
@@ -75,7 +76,7 @@ pub fn collect_dataset(
         arch.task = teacher.task;
         arch.img_size = teacher.img_size;
         arch.seq_len = teacher.seq_len;
-        let true_ms = device.compute_time_s(CostModel::flops_per_sample(&arch)) * 1e3;
+        let true_ms = Secs(device.compute_time_s(CostModel::flops_per_sample(&arch))).to_millis().0;
         let noise = 1.0 + noise_frac * (rng.gen_f64() * 2.0 - 1.0);
         out.push(LatencySample {
             features: arch_features(&arch),
@@ -128,7 +129,7 @@ impl LatencyPredictor {
 /// Analytic fallback predictor (used before a campaign has run): pure
 /// FLOPs/throughput model, zero noise.
 pub fn analytic_latency_ms(device: &DeviceProfile, arch: &Arch) -> f64 {
-    device.compute_time_s(CostModel::flops_per_sample(arch)) * 1e3
+    Secs(device.compute_time_s(CostModel::flops_per_sample(arch))).to_millis().0
 }
 
 #[cfg(test)]

@@ -299,10 +299,13 @@ fn elided_standby_gflops(s: &Scenario) -> f64 {
         .map(|m| {
             let ring_alive =
                 (0..s.replicas).map(|h| (m + h) % n).filter(|&w| s.alive[w]).count();
-            CostModel::flops_per_sample(&s.archs[m])
-                * s.batch as f64
-                * ring_alive.saturating_sub(1) as f64
-                / 1e9
+            crate::util::units::Flops(
+                CostModel::flops_per_sample(&s.archs[m])
+                    * s.batch as f64
+                    * ring_alive.saturating_sub(1) as f64,
+            )
+            .to_gflops()
+            .0
         })
         .sum()
 }

@@ -243,7 +243,7 @@ impl Sweep {
             .topology()
             .links
             .first()
-            .map(|l| l.bandwidth_bps / 1e6)
+            .map(|l| l.bandwidth().to_mbps().0)
             .unwrap_or(0.0);
         let degradations: Vec<Option<f64>> = if self.degradations.is_empty() {
             vec![None]

@@ -1,11 +1,12 @@
 //! Dependency-free substrates: JSON (this environment vendors only the
 //! `xla` crate's closure, so serde is unavailable — we implement the
-//! manifest/config interchange ourselves), a seeded PRNG, and the
-//! loom-swappable atomics shim.
+//! manifest/config interchange ourselves), a seeded PRNG, typed physical
+//! units, and the loom-swappable atomics shim.
 
 pub mod json;
 pub mod rng;
 pub mod sync;
+pub mod units;
 
 pub use json::Json;
 pub use rng::Rng;

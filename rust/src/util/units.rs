@@ -1,0 +1,535 @@
+//! Typed physical quantities — the dimensional-analysis layer (ISSUE 9).
+//!
+//! CoFormer's whole control plane is cross-unit arithmetic: DeBo trades
+//! latency (ms) against bandwidth (Mb/s), memory (MB), compute (GFLOPS)
+//! and energy (J), and a single silent ms/s or bits/bytes mix-up corrupts
+//! every decomposition decision without failing a test. Every unit the
+//! repo computes with gets a `#[repr(transparent)]` newtype here, and
+//! **every cross-unit conversion constant in the crate lives in this
+//! module** — the `units` rule of `cargo xtask lint` bans conversion
+//! literals (`* 1e3`, `/ 1e6`, `* 8.0`, …) everywhere else, so a
+//! conversion can only be written by naming both units:
+//!
+//! ```
+//! use coformer::util::units::{Bytes, Millis, Secs};
+//!
+//! let window = Millis(125.0).to_secs();
+//! assert_eq!(window, Secs(0.125));
+//! assert_eq!(Bytes(1024.0).to_bits().0, 8192.0);
+//! assert_eq!(format!("{}", window.to_millis()), "125 ms");
+//! ```
+//!
+//! | newtype        | magnitude               | | newtype      | magnitude            |
+//! |----------------|-------------------------|-|--------------|----------------------|
+//! | [`Secs`]       | seconds                 | | [`Bps`]      | bits per second      |
+//! | [`Millis`]     | milliseconds            | | [`Mbps`]     | megabits per second  |
+//! | [`Micros`]     | microseconds            | | [`Flops`]    | FLOPs (or FLOP/s)    |
+//! | [`Nanos`]      | nanoseconds             | | [`MFlops`]   | 10⁶ FLOPs            |
+//! | [`Bits`]       | bits                    | | [`GFlops`]   | 10⁹ FLOPs (GFLOPS)   |
+//! | [`Bytes`]      | bytes                   | | [`Joules`]   | joules               |
+//! | [`MegaBytes`]  | 10⁶ bytes               | | [`MilliJoules`] | millijoules       |
+//! | [`GigaBytes`]  | 10⁹ bytes               | | [`Watts`]    | watts                |
+//! | [`Frac`]       | dimensionless fraction  | |              |                      |
+//!
+//! Following the paper (and the repo's field naming), [`Flops`]/[`GFlops`]
+//! carry both FLOP *counts* and FLOP/s *rates* — "GFLOPS" in Table VII is a
+//! rate, `flops_per_sample` is a count; [`Flops::at`] divides one by the
+//! other into [`Secs`].
+//!
+//! Zero-cost and bitwise-neutral: every type is a transparent `f64`, every
+//! op is `#[inline]`, and each conversion performs exactly the arithmetic
+//! the call sites used to inline (`x * 1e3` became `Secs(x).to_millis().0`
+//! with the identical multiply) — property-tested in `tests/properties.rs`
+//! to be bit-identical to the raw `f64` it replaced.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+// ------------------------------------------------------------------ scale
+// The crate's only unit-conversion constants. Private on purpose: call
+// sites must convert by naming both units (`Secs::to_millis`), never by
+// reaching for a scale factor.
+
+const MILLIS_PER_SEC: f64 = 1e3;
+const MICROS_PER_MILLI: f64 = 1e3;
+const NANOS_PER_MICRO: f64 = 1e3;
+const NANOS_PER_MILLI: f64 = 1e6;
+const NANOS_PER_SEC: f64 = 1e9;
+const BITS_PER_BYTE: f64 = 8.0;
+const BPS_PER_MBPS: f64 = 1e6;
+const BYTES_PER_MEGABYTE: f64 = 1e6;
+const BYTES_PER_GIGABYTE: f64 = 1e9;
+const FLOPS_PER_MFLOP: f64 = 1e6;
+const FLOPS_PER_GFLOP: f64 = 1e9;
+const MILLIJOULES_PER_JOULE: f64 = 1e3;
+
+// --------------------------------------------------------------- newtypes
+
+macro_rules! unit {
+    ($(#[$doc:meta])* $name:ident, $suffix:expr) => {
+        $(#[$doc])*
+        #[repr(transparent)]
+        #[derive(Clone, Copy, Debug, Default, PartialEq, PartialOrd)]
+        pub struct $name(pub f64);
+
+        impl $name {
+            /// The raw magnitude in this type's unit.
+            #[inline]
+            pub const fn get(self) -> f64 {
+                self.0
+            }
+
+            /// Absolute magnitude, same unit.
+            #[inline]
+            pub fn abs(self) -> Self {
+                $name(self.0.abs())
+            }
+
+            /// Same-unit minimum (propagates like `f64::min`).
+            #[inline]
+            pub fn min(self, other: Self) -> Self {
+                $name(self.0.min(other.0))
+            }
+
+            /// Same-unit maximum (propagates like `f64::max`).
+            #[inline]
+            pub fn max(self, other: Self) -> Self {
+                $name(self.0.max(other.0))
+            }
+
+            #[inline]
+            pub fn is_finite(self) -> bool {
+                self.0.is_finite()
+            }
+        }
+
+        impl Add for $name {
+            type Output = Self;
+            #[inline]
+            fn add(self, rhs: Self) -> Self {
+                $name(self.0 + rhs.0)
+            }
+        }
+
+        impl Sub for $name {
+            type Output = Self;
+            #[inline]
+            fn sub(self, rhs: Self) -> Self {
+                $name(self.0 - rhs.0)
+            }
+        }
+
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, rhs: Self) {
+                self.0 += rhs.0;
+            }
+        }
+
+        impl SubAssign for $name {
+            #[inline]
+            fn sub_assign(&mut self, rhs: Self) {
+                self.0 -= rhs.0;
+            }
+        }
+
+        impl Neg for $name {
+            type Output = Self;
+            #[inline]
+            fn neg(self) -> Self {
+                $name(-self.0)
+            }
+        }
+
+        /// Scaling by a dimensionless factor keeps the unit.
+        impl Mul<f64> for $name {
+            type Output = Self;
+            #[inline]
+            fn mul(self, rhs: f64) -> Self {
+                $name(self.0 * rhs)
+            }
+        }
+
+        /// Scaling by a dimensionless divisor keeps the unit.
+        impl Div<f64> for $name {
+            type Output = Self;
+            #[inline]
+            fn div(self, rhs: f64) -> Self {
+                $name(self.0 / rhs)
+            }
+        }
+
+        /// A same-unit ratio is dimensionless.
+        impl Div for $name {
+            type Output = Frac;
+            #[inline]
+            fn div(self, rhs: Self) -> Frac {
+                Frac(self.0 / rhs.0)
+            }
+        }
+
+        impl Sum for $name {
+            #[inline]
+            fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+                $name(iter.map(|x| x.0).sum())
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                if $suffix.is_empty() {
+                    fmt::Display::fmt(&self.0, f)
+                } else {
+                    fmt::Display::fmt(&self.0, f)?;
+                    write!(f, " {}", $suffix)
+                }
+            }
+        }
+    };
+}
+
+unit!(
+    /// Seconds — the simulator's native clock unit.
+    Secs,
+    "s"
+);
+unit!(
+    /// Milliseconds — the unit the paper (and every report table) quotes
+    /// latency in.
+    Millis,
+    "ms"
+);
+unit!(
+    /// Microseconds (bench-harness reporting).
+    Micros,
+    "µs"
+);
+unit!(
+    /// Nanoseconds — what `Instant::elapsed` hands the bench harness.
+    Nanos,
+    "ns"
+);
+unit!(
+    /// Bits on the wire (paper Eq. 5 prices transfers in bits).
+    Bits,
+    "b"
+);
+unit!(
+    /// Bytes — payload and memory sizes.
+    Bytes,
+    "B"
+);
+unit!(
+    /// 10⁶ bytes (decimal MB, as the report tables quote memory).
+    MegaBytes,
+    "MB"
+);
+unit!(
+    /// 10⁹ bytes (decimal GB, the catalog's model-memory unit).
+    GigaBytes,
+    "GB"
+);
+unit!(
+    /// Bits per second — the raw link rate.
+    Bps,
+    "b/s"
+);
+unit!(
+    /// Megabits per second — the `tc` knob unit the paper quotes.
+    Mbps,
+    "Mb/s"
+);
+unit!(
+    /// FLOPs: a compute volume, or a FLOP/s rate (see the module docs).
+    Flops,
+    "FLOPs"
+);
+unit!(
+    /// 10⁶ FLOPs.
+    MFlops,
+    "MFLOPs"
+);
+unit!(
+    /// 10⁹ FLOPs — also the Table VII device-throughput unit (GFLOPS).
+    GFlops,
+    "GFLOPs"
+);
+unit!(
+    /// Joules (background-subtracted, per the Monsoon protocol).
+    Joules,
+    "J"
+);
+unit!(
+    /// Millijoules — the per-request energy unit the tables quote.
+    MilliJoules,
+    "mJ"
+);
+unit!(
+    /// Watts — device draw (Table VII's TDP and idle figures).
+    Watts,
+    "W"
+);
+unit!(
+    /// A dimensionless fraction: fills, efficiencies, staleness ratios.
+    Frac,
+    ""
+);
+
+// ------------------------------------------------------------ conversions
+
+impl Secs {
+    #[inline]
+    pub fn to_millis(self) -> Millis {
+        Millis(self.0 * MILLIS_PER_SEC)
+    }
+}
+
+impl Millis {
+    #[inline]
+    pub fn to_secs(self) -> Secs {
+        Secs(self.0 / MILLIS_PER_SEC)
+    }
+
+    #[inline]
+    pub fn to_micros(self) -> Micros {
+        Micros(self.0 * MICROS_PER_MILLI)
+    }
+}
+
+impl Micros {
+    #[inline]
+    pub fn to_millis(self) -> Millis {
+        Millis(self.0 / MICROS_PER_MILLI)
+    }
+}
+
+impl Nanos {
+    #[inline]
+    pub fn to_micros(self) -> Micros {
+        Micros(self.0 / NANOS_PER_MICRO)
+    }
+
+    #[inline]
+    pub fn to_millis(self) -> Millis {
+        Millis(self.0 / NANOS_PER_MILLI)
+    }
+
+    #[inline]
+    pub fn to_secs(self) -> Secs {
+        Secs(self.0 / NANOS_PER_SEC)
+    }
+
+    /// Criterion-style human rendering at the natural scale
+    /// (`837 ns` / `4.10 µs` / `12.34 ms` / `1.20 s`) — the bench
+    /// harness's report format, kept here with the scale constants.
+    pub fn human(self) -> String {
+        if self.0 < NANOS_PER_MICRO {
+            format!("{:.0} ns", self.0)
+        } else if self.0 < NANOS_PER_MILLI {
+            format!("{:.2} µs", self.to_micros().0)
+        } else if self.0 < NANOS_PER_SEC {
+            format!("{:.2} ms", self.to_millis().0)
+        } else {
+            format!("{:.2} s", self.to_secs().0)
+        }
+    }
+}
+
+impl Bytes {
+    /// Payload sizes arrive as `usize` from the cost model.
+    #[inline]
+    pub fn from_usize(n: usize) -> Bytes {
+        Bytes(n as f64)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> Bits {
+        Bits(self.0 * BITS_PER_BYTE)
+    }
+
+    #[inline]
+    pub fn to_megabytes(self) -> MegaBytes {
+        MegaBytes(self.0 / BYTES_PER_MEGABYTE)
+    }
+
+    #[inline]
+    pub fn to_gigabytes(self) -> GigaBytes {
+        GigaBytes(self.0 / BYTES_PER_GIGABYTE)
+    }
+}
+
+impl Bits {
+    #[inline]
+    pub fn to_bytes(self) -> Bytes {
+        Bytes(self.0 / BITS_PER_BYTE)
+    }
+
+    /// Serialization time of this payload at `rate` — the `|X| / r` term
+    /// of the paper's Eq. 5. Dimensional division, no constant involved.
+    #[inline]
+    pub fn at(self, rate: Bps) -> Secs {
+        Secs(self.0 / rate.0)
+    }
+}
+
+impl MegaBytes {
+    #[inline]
+    pub fn to_bytes(self) -> Bytes {
+        Bytes(self.0 * BYTES_PER_MEGABYTE)
+    }
+}
+
+impl GigaBytes {
+    #[inline]
+    pub fn to_bytes(self) -> Bytes {
+        Bytes(self.0 * BYTES_PER_GIGABYTE)
+    }
+}
+
+impl Mbps {
+    #[inline]
+    pub fn to_bps(self) -> Bps {
+        Bps(self.0 * BPS_PER_MBPS)
+    }
+}
+
+impl Bps {
+    #[inline]
+    pub fn to_mbps(self) -> Mbps {
+        Mbps(self.0 / BPS_PER_MBPS)
+    }
+}
+
+impl Flops {
+    #[inline]
+    pub fn to_gflops(self) -> GFlops {
+        GFlops(self.0 / FLOPS_PER_GFLOP)
+    }
+
+    #[inline]
+    pub fn to_mflops(self) -> MFlops {
+        MFlops(self.0 / FLOPS_PER_MFLOP)
+    }
+
+    /// Execution time of this FLOP volume at `rate` FLOP/s (Eq. 4's
+    /// analytic fallback). Dimensional division, no constant involved.
+    #[inline]
+    pub fn at(self, rate: Flops) -> Secs {
+        Secs(self.0 / rate.0)
+    }
+}
+
+impl GFlops {
+    #[inline]
+    pub fn to_flops(self) -> Flops {
+        Flops(self.0 * FLOPS_PER_GFLOP)
+    }
+}
+
+impl Joules {
+    #[inline]
+    pub fn to_millijoules(self) -> MilliJoules {
+        MilliJoules(self.0 * MILLIJOULES_PER_JOULE)
+    }
+}
+
+impl MilliJoules {
+    #[inline]
+    pub fn to_joules(self) -> Joules {
+        Joules(self.0 / MILLIJOULES_PER_JOULE)
+    }
+}
+
+impl Watts {
+    /// Energy drawn at this power over `t`: W × s = J. Dimensional
+    /// multiplication, no constant involved.
+    #[inline]
+    pub fn for_duration(self, t: Secs) -> Joules {
+        Joules(self.0 * t.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_match_the_raw_arithmetic() {
+        assert_eq!(Secs(0.125).to_millis(), Millis(125.0));
+        assert_eq!(Millis(125.0).to_secs(), Secs(0.125));
+        let x = 0.127_345_678_9_f64;
+        assert_eq!(Secs(x).to_millis().0.to_bits(), (x * 1e3).to_bits());
+        assert_eq!(Millis(x).to_secs().0.to_bits(), (x / 1e3).to_bits());
+    }
+
+    #[test]
+    fn data_conversions_match_the_raw_arithmetic() {
+        assert_eq!(Bytes(1024.0).to_bits(), Bits(8192.0));
+        assert_eq!(Bits(8192.0).to_bytes(), Bytes(1024.0));
+        assert_eq!(Mbps(100.0).to_bps(), Bps(1e8));
+        assert_eq!(Bps(1e8).to_mbps(), Mbps(100.0));
+        assert_eq!(MegaBytes(1.5).to_bytes(), Bytes(1.5e6));
+        assert_eq!(GigaBytes(2.0).to_bytes(), Bytes(2e9));
+        assert_eq!(Bytes::from_usize(1 << 20).to_megabytes().0, (1u64 << 20) as f64 / 1e6);
+    }
+
+    #[test]
+    fn compute_and_energy_conversions() {
+        assert_eq!(GFlops(17.6).to_flops(), Flops(17.6e9));
+        assert_eq!(Flops(17.6e9).to_gflops(), GFlops(17.6));
+        assert_eq!(Flops(5e6).to_mflops(), MFlops(5.0));
+        assert_eq!(Joules(0.5).to_millijoules(), MilliJoules(500.0));
+        assert_eq!(MilliJoules(500.0).to_joules(), Joules(0.5));
+        // W × s = J and bits / (b/s) = s: dimensional ops, not scaled
+        assert_eq!(Watts(8.0).for_duration(Secs(0.5)), Joules(4.0));
+        assert_eq!(Bits(2e6).at(Bps(2e6)), Secs(1.0));
+        assert_eq!(Flops(1e9).at(GFlops(2.0).to_flops()), Secs(0.5));
+    }
+
+    #[test]
+    fn same_unit_arithmetic_is_the_raw_arithmetic() {
+        let (a, b) = (12.75, 0.003);
+        assert_eq!((Millis(a) + Millis(b)).0.to_bits(), (a + b).to_bits());
+        assert_eq!((Millis(a) - Millis(b)).0.to_bits(), (a - b).to_bits());
+        assert_eq!((Millis(a) * 3.0).0.to_bits(), (a * 3.0).to_bits());
+        assert_eq!((Millis(a) / 3.0).0.to_bits(), (a / 3.0).to_bits());
+        assert_eq!((Millis(a) / Millis(b)).0.to_bits(), (a / b).to_bits());
+        let mut acc = Secs(a);
+        acc += Secs(b);
+        acc -= Secs(b);
+        assert_eq!(acc.0.to_bits(), ((a + b) - b).to_bits());
+        assert_eq!((-Joules(a)).0.to_bits(), (-a).to_bits());
+        let summed: Bytes = [Bytes(1.0), Bytes(2.5), Bytes(4.0)].into_iter().sum();
+        assert_eq!(summed, Bytes(7.5));
+    }
+
+    #[test]
+    fn ordering_and_min_max_follow_f64() {
+        assert!(Millis(1.0) < Millis(2.0));
+        assert!(Secs(-1.0) < Secs(0.0));
+        assert_eq!(Millis(1.0).max(Millis(2.0)), Millis(2.0));
+        assert_eq!(Millis(1.0).min(Millis(2.0)), Millis(1.0));
+        assert_eq!(Millis(f64::NAN).max(Millis(2.0)), Millis(2.0), "NaN propagation = f64::max");
+        assert!(Millis(-3.0).abs() == Millis(3.0));
+        assert!(!Millis(f64::INFINITY).is_finite());
+        assert!(Millis(1.0).is_finite());
+    }
+
+    #[test]
+    fn display_quotes_the_unit() {
+        assert_eq!(format!("{}", Millis(12.5)), "12.5 ms");
+        assert_eq!(format!("{:.2}", Secs(0.1)), "0.10 s");
+        assert_eq!(format!("{}", Mbps(100.0)), "100 Mb/s");
+        assert_eq!(format!("{}", Frac(0.25)), "0.25", "fractions carry no suffix");
+        assert_eq!(format!("{}", GFlops(17.6)), "17.6 GFLOPs");
+    }
+
+    #[test]
+    fn nanos_human_scales_like_the_bench_report() {
+        assert_eq!(Nanos(837.0).human(), "837 ns");
+        assert_eq!(Nanos(4100.0).human(), "4.10 µs");
+        assert_eq!(Nanos(12_340_000.0).human(), "12.34 ms");
+        assert_eq!(Nanos(1.2e9).human(), "1.20 s");
+    }
+}

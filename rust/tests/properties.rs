@@ -18,6 +18,10 @@ use coformer::strategies::registry::{CoFormer, PipeEdge, TensorParallel};
 use coformer::strategies::{
     DispatchMode, Scenario, ScenarioError, Strategy, Sweep, SweepError,
 };
+use coformer::util::units::{
+    Bits, Bps, Bytes, Flops, Frac, GFlops, GigaBytes, Joules, Mbps, MegaBytes, Micros, MilliJoules,
+    Millis, Nanos, Secs, Watts,
+};
 use coformer::util::{Json, Rng};
 
 /// Run `f` over `n` seeded cases; panic with the seed on failure.
@@ -980,6 +984,114 @@ fn prop_latency_percentile_total_and_sample_valued() {
             // monotone in p
             assert!(s.percentile_ms(100.0) >= s.percentile_ms(0.0));
         }
+    });
+}
+
+// ----------------------------------------------------------------- units
+
+/// A random positive magnitude spanning ~12 orders (10⁻⁶ .. 10⁶) so the
+/// unit properties are exercised far from 1.0 on both sides.
+fn random_magnitude(rng: &mut Rng) -> f64 {
+    let exp = rng.gen_f64() * 12.0 - 6.0;
+    (0.1 + rng.gen_f64()) * 10f64.powf(exp)
+}
+
+#[test]
+fn prop_unit_conversions_round_trip_to_1e12() {
+    // ISSUE 9: every paired conversion must round-trip to within 1e-12
+    // relative error at any magnitude (the constants are exact powers of
+    // ten and 8.0, so a lossy pair would mean a wrong constant).
+    fn close(a: f64, b: f64) -> bool {
+        ((a - b) / b).abs() <= 1e-12
+    }
+    forall(500, 9000, |rng| {
+        let x = random_magnitude(rng);
+        assert!(close(Secs(x).to_millis().to_secs().0, x));
+        assert!(close(Millis(x).to_secs().to_millis().0, x));
+        assert!(close(Millis(x).to_micros().to_millis().0, x));
+        assert!(close(Micros(x).to_millis().to_micros().0, x));
+        assert!(close(Bytes(x).to_bits().to_bytes().0, x));
+        assert!(close(Bits(x).to_bytes().to_bits().0, x));
+        assert!(close(Mbps(x).to_bps().to_mbps().0, x));
+        assert!(close(Bps(x).to_mbps().to_bps().0, x));
+        assert!(close(MegaBytes(x).to_bytes().to_megabytes().0, x));
+        assert!(close(GigaBytes(x).to_bytes().to_gigabytes().0, x));
+        assert!(close(Bytes(x).to_megabytes().to_bytes().0, x));
+        assert!(close(Bytes(x).to_gigabytes().to_bytes().0, x));
+        assert!(close(Flops(x).to_gflops().to_flops().0, x));
+        assert!(close(GFlops(x).to_flops().to_gflops().0, x));
+        assert!(close(Joules(x).to_millijoules().to_joules().0, x));
+        assert!(close(MilliJoules(x).to_joules().to_millijoules().0, x));
+        // one-way conversions agree with composing through a third unit
+        assert!(close(Nanos(x).to_secs().0, Nanos(x).to_micros().to_millis().to_secs().0));
+        assert!(close(Flops(x).to_mflops().0 * 1e6, x));
+    });
+}
+
+#[test]
+fn prop_unit_conversions_bit_identical_to_raw_f64() {
+    // Bitwise neutrality (the refactor's contract): each conversion
+    // performs exactly the arithmetic its call sites used to inline, so
+    // the typed path and the raw literal produce the same f64 bits.
+    forall(500, 9200, |rng| {
+        let x = random_magnitude(rng) * if rng.gen_f64() < 0.2 { -1.0 } else { 1.0 };
+        let r = random_magnitude(rng);
+        assert_eq!(Secs(x).to_millis().0.to_bits(), (x * 1e3).to_bits());
+        assert_eq!(Millis(x).to_secs().0.to_bits(), (x / 1e3).to_bits());
+        assert_eq!(Millis(x).to_micros().0.to_bits(), (x * 1e3).to_bits());
+        assert_eq!(Nanos(x).to_millis().0.to_bits(), (x / 1e6).to_bits());
+        assert_eq!(Nanos(x).to_secs().0.to_bits(), (x / 1e9).to_bits());
+        assert_eq!(Bytes(x).to_bits().0.to_bits(), (x * 8.0).to_bits());
+        assert_eq!(Bits(x).to_bytes().0.to_bits(), (x / 8.0).to_bits());
+        assert_eq!(Mbps(x).to_bps().0.to_bits(), (x * 1e6).to_bits());
+        assert_eq!(Bps(x).to_mbps().0.to_bits(), (x / 1e6).to_bits());
+        assert_eq!(MegaBytes(x).to_bytes().0.to_bits(), (x * 1e6).to_bits());
+        assert_eq!(GigaBytes(x).to_bytes().0.to_bits(), (x * 1e9).to_bits());
+        assert_eq!(Bytes(x).to_megabytes().0.to_bits(), (x / 1e6).to_bits());
+        assert_eq!(Bytes(x).to_gigabytes().0.to_bits(), (x / 1e9).to_bits());
+        assert_eq!(GFlops(x).to_flops().0.to_bits(), (x * 1e9).to_bits());
+        assert_eq!(Flops(x).to_gflops().0.to_bits(), (x / 1e9).to_bits());
+        assert_eq!(Flops(x).to_mflops().0.to_bits(), (x / 1e6).to_bits());
+        assert_eq!(Joules(x).to_millijoules().0.to_bits(), (x * 1e3).to_bits());
+        assert_eq!(MilliJoules(x).to_joules().0.to_bits(), (x / 1e3).to_bits());
+        // dimensional ops are plain division/multiplication, no constants
+        assert_eq!(Bits(x).at(Bps(r)).0.to_bits(), (x / r).to_bits());
+        assert_eq!(Flops(x).at(Flops(r)).0.to_bits(), (x / r).to_bits());
+        assert_eq!(Watts(x).for_duration(Secs(r)).0.to_bits(), (x * r).to_bits());
+    });
+}
+
+#[test]
+fn prop_unit_arithmetic_and_ordering_match_raw_f64() {
+    // Same-unit arithmetic and comparisons must be transparently the f64
+    // ops — same bits, same ordering, same NaN/min/max semantics.
+    forall(500, 9400, |rng| {
+        let a = rng.gen_f64() * 2e3 - 1e3;
+        let b = rng.gen_f64() * 2e3 - 1e3;
+        assert_eq!((Millis(a) + Millis(b)).0.to_bits(), (a + b).to_bits());
+        assert_eq!((Millis(a) - Millis(b)).0.to_bits(), (a - b).to_bits());
+        assert_eq!((Millis(a) * b).0.to_bits(), (a * b).to_bits());
+        assert_eq!((Millis(a) / b).0.to_bits(), (a / b).to_bits());
+        assert_eq!((Joules(a) / Joules(b)).0.to_bits(), (a / b).to_bits());
+        assert_eq!((-Secs(a)).0.to_bits(), (-a).to_bits());
+        assert_eq!(Secs(a).abs().0.to_bits(), a.abs().to_bits());
+        assert_eq!(Secs(a).min(Secs(b)).0.to_bits(), a.min(b).to_bits());
+        assert_eq!(Secs(a).max(Secs(b)).0.to_bits(), a.max(b).to_bits());
+        assert_eq!(Millis(a) < Millis(b), a < b);
+        assert_eq!(Millis(a) <= Millis(b), a <= b);
+        assert_eq!(Millis(a) == Millis(b), a == b);
+        assert_eq!(Frac(a).partial_cmp(&Frac(b)), a.partial_cmp(&b));
+        let mut acc = Bytes(a);
+        acc += Bytes(b);
+        acc -= Bytes(b);
+        let mut raw = a;
+        raw += b;
+        raw -= b;
+        assert_eq!(acc.0.to_bits(), raw.to_bits());
+        let n = rng.gen_range(0, 6);
+        let vals: Vec<f64> = (0..n).map(|_| rng.gen_f64() * 10.0 - 5.0).collect();
+        let typed: Flops = vals.iter().map(|&v| Flops(v)).sum();
+        assert_eq!(typed.0.to_bits(), vals.iter().sum::<f64>().to_bits());
     });
 }
 

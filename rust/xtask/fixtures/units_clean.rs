@@ -1,0 +1,20 @@
+//! Fixture: quantity bindings with unit suffixes and no conversion
+//! literals — fully `units`-clean.
+
+pub struct Window {
+    pub deadline_ms: f64,
+    pub latency_s: f64,
+    pub bandwidth_mbps: f64,
+    pub energy_budget_j: f64,
+    /// Dimensionless multiplier on a quantity: `factor` is an accepted
+    /// marker, as are `frac` and `slack`.
+    pub deadline_factor: f64,
+}
+
+pub fn slowest(latency_samples_ms: &[f64]) -> f64 {
+    latency_samples_ms.iter().cloned().fold(0.0, f64::max)
+}
+
+pub fn scaled_deadline_ms(deadline_ms: f64, factor: f64) -> f64 {
+    deadline_ms * factor
+}

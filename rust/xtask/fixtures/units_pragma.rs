@@ -1,0 +1,11 @@
+//! Fixture: `units` violations suppressed by pragmas — one on a bare
+//! quantity field, one inline on a conversion literal.
+
+pub struct WireRecord {
+    // lint:allow(units): legacy wire-format field; unit fixed by the peer protocol
+    pub latency: f64,
+}
+
+pub fn to_micros(x: f64) -> f64 {
+    x * 1e6 // lint:allow(units): fixture exercises an inline pragma'd conversion
+}

@@ -1,0 +1,24 @@
+//! Fixture: four `units` violations — two unsuffixed quantity bindings,
+//! then two conversion literals (rustfmt-normalized spacing).
+
+pub struct Window {
+    pub deadline: f64,
+    pub latency: f64,
+}
+
+pub fn to_ms(x: f64) -> f64 {
+    x * 1e3
+}
+
+pub fn payload_bits(n: f64) -> f64 {
+    n * 8.0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let energy = 2.0; // untyped f64 in tests never trips the rule
+        assert_eq!(super::to_ms(energy), 2e3);
+    }
+}

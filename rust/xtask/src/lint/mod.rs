@@ -1,6 +1,6 @@
 //! The in-repo invariant linter behind `cargo xtask lint`.
 //!
-//! Four rules (see the README's "Static analysis & model checking"):
+//! Five rules (see the README's "Static analysis & model checking"):
 //!
 //! - `no-panic-in-lib` — no `.unwrap()` / `.expect(...)` / `panic!` /
 //!   `unreachable!` / `todo!` / `unimplemented!` in non-test library code;
@@ -14,6 +14,11 @@
 //! - `atomics-ordering` — atomics use `Ordering::SeqCst` unless a pragma
 //!   justifies otherwise, and `coordinator/` goes through
 //!   `crate::util::sync` so loom can swap the types under `cfg(loom)`.
+//! - `units` (ISSUE 9) — unit-conversion literals (`* 1e3`, `/ 1e6`,
+//!   `* 8.0`, …) are confined to `util/units.rs`, and any `f64` binding
+//!   naming a physical quantity (latency, bandwidth, energy, …) must carry
+//!   a unit suffix (`_ms`, `_mbps`, `_j`, …) or a pragma. Binaries are NOT
+//!   exempt — their report tables quote the same quantities.
 //!
 //! Intentional violations carry `// lint:allow(<rule>): <reason>` on (or
 //! directly above) the offending line. Malformed and unused pragmas are
@@ -34,6 +39,40 @@ pub struct Diagnostic {
     pub line: usize,
     pub rule: &'static str,
     pub message: String,
+}
+
+impl Diagnostic {
+    /// One machine-readable JSON object (the `--json` line format the CI
+    /// static-analysis job archives as an artifact).
+    pub fn to_json(&self) -> String {
+        format!(
+            r#"{{"file":"{}","line":{},"rule":"{}","message":"{}"}}"#,
+            json_escape(&self.file),
+            self.line,
+            json_escape(self.rule),
+            json_escape(&self.message)
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// messages quote source tokens, so `"` and `\` do occur.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Lint one source file. `rel` is the path relative to the lint root with
@@ -71,9 +110,11 @@ pub fn lint_source(rel: &str, text: &str) -> Vec<Diagnostic> {
     out
 }
 
-/// Walk `root`, lint every `.rs` file, print diagnostics as
-/// `<root>/<file>:<line>: [<rule>] <message>`, and exit nonzero on any.
-pub fn run(root: &Path) -> ExitCode {
+/// Walk `root`, lint every `.rs` file, print diagnostics — one
+/// `<root>/<file>:<line>: [<rule>] <message>` line each, or one JSON
+/// object per line under `json` — and exit nonzero on any. The JSON mode
+/// keeps the violation count on stderr so stdout stays pure JSONL.
+pub fn run(root: &Path, json: bool) -> ExitCode {
     let mut files = Vec::new();
     collect_rs_files(root, &mut files);
     files.sort();
@@ -96,9 +137,17 @@ pub fn run(root: &Path) -> ExitCode {
     }
     diags.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
     for d in &diags {
-        println!("{}/{}:{}: [{}] {}", root.display(), d.file, d.line, d.rule, d.message);
+        if json {
+            println!("{}", d.to_json());
+        } else {
+            println!("{}/{}:{}: [{}] {}", root.display(), d.file, d.line, d.rule, d.message);
+        }
     }
-    println!("{} violation(s)", diags.len());
+    if json {
+        eprintln!("{} violation(s)", diags.len());
+    } else {
+        println!("{} violation(s)", diags.len());
+    }
     if diags.is_empty() {
         ExitCode::SUCCESS
     } else {
@@ -217,6 +266,83 @@ mod tests {
     #[test]
     fn config_gate_accepts_transitively_validated_policies() {
         assert!(lint_source("config/mod.rs", &fixture("config_gate_clean.rs")).is_empty());
+    }
+
+    #[test]
+    fn units_flags_bare_quantities_and_conversion_literals_with_lines() {
+        let diags = lint_source("util/fx.rs", &fixture("units_violating.rs"));
+        assert_eq!(rules_of(&diags), ["units", "units", "units", "units"]);
+        assert!(diags[0].message.contains("`deadline`"), "{diags:?}");
+        assert!(diags[1].message.contains("`latency`"), "{diags:?}");
+        assert!(diags[2].message.contains("`* 1e3`"), "{diags:?}");
+        assert!(diags[3].message.contains("`* 8.0`"), "{diags:?}");
+        assert!(diags[0].line < diags[2].line && diags[2].line < diags[3].line);
+    }
+
+    #[test]
+    fn units_applies_to_binaries_too() {
+        // unlike no-panic-in-lib: the binaries' report tables quote the
+        // same physical quantities the library computes
+        let text = fixture("units_violating.rs");
+        assert_eq!(lint_source("main.rs", &text).len(), 4);
+        assert_eq!(lint_source("bin/paper.rs", &text).len(), 4);
+    }
+
+    #[test]
+    fn units_conversion_constants_allowed_only_in_units_rs() {
+        let text = "pub fn f(x: f64) -> f64 {\n    x * 1e3\n}\n";
+        assert!(lint_source("util/units.rs", text).is_empty());
+        assert_eq!(rules_of(&lint_source("util/other.rs", text)), ["units"]);
+        assert_eq!(rules_of(&lint_source("net/mod.rs", text)), ["units"]);
+    }
+
+    #[test]
+    fn units_clean_and_pragmad_fixtures_pass() {
+        assert!(lint_source("util/fx.rs", &fixture("units_clean.rs")).is_empty());
+        assert!(lint_source("util/fx.rs", &fixture("units_pragma.rs")).is_empty());
+    }
+
+    #[test]
+    fn units_literal_matcher_respects_number_boundaries() {
+        // `* 1e30` contains the `* 1e3` byte pattern but is a magnitude,
+        // not a conversion — the matcher must not fire inside it
+        let text = "pub fn f(x: f64) -> f64 {\n    x * 1e30\n}\n";
+        assert!(lint_source("util/fx.rs", text).is_empty());
+        // `* 8.05` must not trip the `* 8.0` pattern either
+        let text = "pub fn g(x: f64) -> f64 {\n    x * 8.05\n}\n";
+        assert!(lint_source("util/fx.rs", text).is_empty());
+    }
+
+    #[test]
+    fn units_suffix_rule_ignores_paths_types_and_dimensionless_names() {
+        // `::` path separators, generic bounds, non-f64 types and names
+        // with no quantity keyword never trip the suffix rule
+        let text = concat!(
+            "pub fn f<T: Copy>(v: std::vec::Vec<u64>, fill: f64) -> f64 {\n",
+            "    let deadline_ms: f64 = fill;\n",
+            "    deadline_ms\n",
+            "}\n",
+        );
+        assert!(lint_source("util/fx.rs", text).is_empty());
+        // a `let` binding with a bare quantity name IS flagged
+        let text = "pub fn g() {\n    let deadline: f64 = 0.0;\n    let _ = deadline;\n}\n";
+        assert_eq!(rules_of(&lint_source("util/fx.rs", text)), ["units"]);
+    }
+
+    #[test]
+    fn diagnostics_render_as_one_json_object_each() {
+        let d = Diagnostic {
+            file: "net/mod.rs".to_string(),
+            line: 9,
+            rule: "units",
+            message: "bad `\"x\\y\"`".to_string(),
+        };
+        assert_eq!(
+            d.to_json(),
+            r#"{"file":"net/mod.rs","line":9,"rule":"units","message":"bad `\"x\\y\"`"}"#
+        );
+        assert_eq!(json_escape("a\nb\tc"), "a\\nb\\tc");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
     }
 
     #[test]

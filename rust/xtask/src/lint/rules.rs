@@ -38,6 +38,41 @@ const ORDERED_MAP_DIRS: [&str; 2] = ["strategies/", "metrics/"];
 const NON_SEQCST: [&str; 4] =
     ["Ordering::Relaxed", "Ordering::Acquire", "Ordering::Release", "Ordering::AcqRel"];
 
+/// `units` (ISSUE 9): unit-conversion literals, banned everywhere except
+/// `util/units.rs` — a conversion must name both units
+/// (`Secs::to_millis`, `Bytes::to_bits`), never reach for a scale factor.
+/// Matched on rustfmt-normalized spacing (`x * 1e3`), with a trailing
+/// number-boundary check so `* 1e30` never trips the `* 1e3` pattern.
+const CONVERSION_LITERALS: [&str; 13] = [
+    "* 1e3",
+    "/ 1e3",
+    "* 1e6",
+    "/ 1e6",
+    "* 1e9",
+    "/ 1e9",
+    "* 8.0",
+    "/ 8.0",
+    "* 1000.0",
+    "/ 1000.0",
+    "* 1e-3",
+    "* 1e-6",
+    "* 1e-9",
+];
+
+/// `units`: an `f64` binding whose name contains one of these words is
+/// carrying a physical quantity and must say which unit.
+const QUANTITY_KEYWORDS: [&str; 8] =
+    ["latency", "bandwidth", "deadline", "energy", "power", "duration", "elapsed", "timeout"];
+
+/// Accepted unit suffixes (the binding's last `_`-segment) — physical
+/// units plus the dimensionless markers a quantity-adjacent multiplier
+/// legitimately carries (`deadline_factor`, `degraded_slack`).
+const UNIT_SUFFIXES: [&str; 30] = [
+    "s", "ms", "us", "ns", "secs", "millis", "micros", "nanos", "bps", "mbps", "gbps", "bits",
+    "bytes", "kb", "mb", "gb", "flops", "mflops", "gflops", "j", "mj", "joules", "w", "mw",
+    "watts", "hz", "rps", "frac", "factor", "slack",
+];
+
 fn identish(c: char) -> bool {
     c.is_alphanumeric() || c == '_'
 }
@@ -63,12 +98,91 @@ fn find_token(code: &str, pat: &str) -> Option<usize> {
     None
 }
 
+/// Find a conversion-literal pattern, rejecting matches that continue into
+/// a longer number or identifier (`* 1e3` must not match inside `* 1e30`).
+/// [`find_token`] can't do this: its boundary checks only engage for
+/// identifier-leading patterns, and these start with `*` / `/`.
+fn find_conversion_literal(code: &str, pat: &str) -> Option<usize> {
+    let mut start = 0usize;
+    while let Some(off) = code[start..].find(pat) {
+        let pos = start + off;
+        let after = code[pos + pat.len()..].chars().next();
+        if !after.is_some_and(identish) {
+            return Some(pos);
+        }
+        start = pos + pat.len();
+    }
+    None
+}
+
+/// Normalized base of a declared type: references, lifetimes and `mut`
+/// stripped, so `&'a [f64]` and `&mut Vec<f64>` both resolve.
+fn is_f64_quantity_type(ty: &str) -> bool {
+    let mut t = ty.trim();
+    loop {
+        if let Some(rest) = t.strip_prefix('&') {
+            t = rest.trim_start();
+            continue;
+        }
+        if t.starts_with('\'') {
+            let skip: usize = t.chars().take_while(|&c| c == '\'' || identish(c)).map(char::len_utf8).sum();
+            t = t[skip..].trim_start();
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("mut ") {
+            t = rest.trim_start();
+            continue;
+        }
+        break;
+    }
+    matches!(t, "f64" | "[f64]" | "Vec<f64>" | "VecDeque<f64>" | "Option<f64>")
+}
+
+/// Find an `ident: f64`-shaped field/param whose name says it carries a
+/// physical quantity ([`QUANTITY_KEYWORDS`]) without saying in which unit
+/// ([`UNIT_SUFFIXES`]). Returns the offending identifier.
+fn unsuffixed_quantity(code: &str) -> Option<String> {
+    for (pos, _) in code.match_indices(':') {
+        // path separators (`std::f64`) are not declarations
+        if code[..pos].ends_with(':') || code[pos + 1..].starts_with(':') {
+            continue;
+        }
+        let before = code[..pos].trim_end();
+        let name_len: usize =
+            before.chars().rev().take_while(|&c| identish(c)).map(char::len_utf8).sum();
+        let name = &before[before.len() - name_len..];
+        // fields and params are snake_case; a leading capital is a generic
+        // bound (`T: Copy`) or enum path, not a binding
+        match name.chars().next() {
+            Some(c) if c.is_lowercase() || c == '_' => {}
+            _ => continue,
+        }
+        let after = &code[pos + 1..];
+        let end = after
+            .find(|c: char| matches!(c, ',' | ')' | '{' | '}' | ';' | '='))
+            .unwrap_or(after.len());
+        if !is_f64_quantity_type(&after[..end]) {
+            continue;
+        }
+        if !QUANTITY_KEYWORDS.iter().any(|k| name.contains(k)) {
+            continue;
+        }
+        let last_segment = name.rsplit('_').next().unwrap_or(name);
+        if UNIT_SUFFIXES.contains(&last_segment) {
+            continue;
+        }
+        return Some(name.to_string());
+    }
+    None
+}
+
 /// All per-line token rules over one file.
 pub fn line_rules(rel: &str, lines: &[Line]) -> Vec<Diagnostic> {
     let mut diags = Vec::new();
     let is_binary = rel == "main.rs" || rel.starts_with("bin/");
     let in_map_scope = ORDERED_MAP_DIRS.iter().any(|d| rel.starts_with(d));
     let in_coordinator = rel.starts_with("coordinator/");
+    let is_units_home = rel == "util/units.rs";
     let top_dir = rel.split('/').next().unwrap_or(rel);
     for (idx, l) in lines.iter().enumerate() {
         if l.in_test || l.code.trim().is_empty() {
@@ -137,6 +251,34 @@ pub fn line_rules(rel: &str, lines: &[Line]) -> Vec<Diagnostic> {
                 message: "direct std::sync::atomic use in coordinator/ — go through \
                           crate::util::sync so loom can swap it"
                     .to_string(),
+            });
+        }
+        if !is_units_home {
+            for pat in CONVERSION_LITERALS {
+                if find_conversion_literal(code, pat).is_some() {
+                    diags.push(Diagnostic {
+                        file: rel.to_string(),
+                        line,
+                        rule: "units",
+                        message: format!(
+                            "unit-conversion literal `{pat}` outside util/units.rs — \
+                             convert by naming both units (e.g. Secs::to_millis, \
+                             Bytes::to_bits)"
+                        ),
+                    });
+                }
+            }
+        }
+        if let Some(name) = unsuffixed_quantity(code) {
+            diags.push(Diagnostic {
+                file: rel.to_string(),
+                line,
+                rule: "units",
+                message: format!(
+                    "`{name}` is a raw f64 physical quantity with no unit suffix \
+                     (_ms, _s, _mbps, _gflops, _mb, _j, …) — suffix it, carry a \
+                     util::units newtype, or add a lint:allow(units) pragma"
+                ),
             });
         }
     }

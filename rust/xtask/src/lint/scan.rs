@@ -7,7 +7,8 @@
 //! never trips a rule.
 
 /// The rule names a pragma may name.
-pub const RULES: [&str; 4] = ["no-panic-in-lib", "determinism", "config-gate", "atomics-ordering"];
+pub const RULES: [&str; 5] =
+    ["no-panic-in-lib", "determinism", "config-gate", "atomics-ordering", "units"];
 
 /// One source line after stripping: code with comments and literal bodies
 /// removed, the comment text (for pragma parsing), and whether the line

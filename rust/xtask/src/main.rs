@@ -2,9 +2,12 @@
 //! `[alias]` in `.cargo/config.toml`.
 //!
 //! Commands:
-//! - `lint [src-root]` — run the in-repo invariant linter over the library
-//!   sources (defaults to `rust/src`, located relative to this crate so it
-//!   works from any working directory). Exits nonzero on any violation.
+//! - `lint [--json] [src-root]` — run the in-repo invariant linter over the
+//!   library sources (defaults to `rust/src`, located relative to this
+//!   crate so it works from any working directory). Exits nonzero on any
+//!   violation. With `--json`, stdout carries one JSON object per
+//!   diagnostic (JSONL) and the summary count moves to stderr — the format
+//!   the CI static-analysis job archives as an artifact.
 
 mod lint;
 
@@ -15,19 +18,28 @@ fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
     match args.next().as_deref() {
         Some("lint") => {
-            let root = args.next().map(PathBuf::from).unwrap_or_else(default_src_root);
+            let mut json = false;
+            let mut root = None;
+            for a in args {
+                if a == "--json" {
+                    json = true;
+                } else {
+                    root = Some(PathBuf::from(a));
+                }
+            }
+            let root = root.unwrap_or_else(default_src_root);
             if !root.is_dir() {
                 eprintln!("xtask lint: source root {} is not a directory", root.display());
                 return ExitCode::from(2);
             }
-            lint::run(&root)
+            lint::run(&root, json)
         }
         Some(other) => {
             eprintln!("xtask: unknown command `{other}` (available: lint)");
             ExitCode::from(2)
         }
         None => {
-            eprintln!("usage: cargo xtask lint [src-root]");
+            eprintln!("usage: cargo xtask lint [--json] [src-root]");
             ExitCode::from(2)
         }
     }
