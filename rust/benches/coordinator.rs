@@ -28,6 +28,8 @@ fn main() {
     let artifacts = std::path::PathBuf::from("artifacts");
     if !artifacts.join("manifest.json").exists() {
         println!("bench coordinator: serving part SKIPPED (run `make artifacts`)");
+        // gated sections appear in BENCH_*.json as skipped, never silently absent
+        coformer::metrics::bench::skip_marker("serving", "artifacts not built");
         return;
     }
     println!("== bench: end-to-end collaborative serving ==");

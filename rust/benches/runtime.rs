@@ -12,6 +12,8 @@ fn main() {
     let artifacts = std::path::Path::new("artifacts");
     if !artifacts.join("manifest.json").exists() {
         println!("bench runtime: SKIPPED (run `make artifacts` first)");
+        // gated suites appear in BENCH_*.json as skipped, never silently absent
+        coformer::metrics::bench::skip_marker("runtime_suite", "artifacts not built");
         return;
     }
     println!("== bench: PJRT runtime ==");

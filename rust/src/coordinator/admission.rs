@@ -7,9 +7,9 @@
 //! interleaving):
 //!
 //! * **Permit conservation** — every `try_admit` either returns `Ok` (one
-//!   slot held until `release`) or sheds with [`Overloaded`] after undoing
-//!   its reservation; slots are never lost or double-counted, and `queued`
-//!   never underflows.
+//!   slot held until `release`) or sheds with [`Overloaded`] without ever
+//!   having taken a slot; slots are never lost or double-counted, and
+//!   `queued` never underflows.
 //! * **Bounded admission** — successful admits never exceed the live limit
 //!   in effect when they were admitted, including while the leader
 //!   re-derives limits after a device death ([`Admission::set_limits`]).
@@ -84,19 +84,28 @@ impl Admission {
 
     /// Reserve one queue slot, or shed with the typed [`Overloaded`] error.
     ///
-    /// Reserve-then-check: the slot is taken optimistically and returned on
-    /// the shed path, so a transient `queued == limit + k` overshoot (k
-    /// concurrent shedders) is visible to snapshots, but an admitted
-    /// request is never lost and `queued` never underflows.
+    /// One `fetch_update` CAS loop per admit (ISSUE 10): the slot is taken
+    /// only when `queued < limit` held at the instant of the update, so a
+    /// shed storm performs a single read-modify-write per caller instead
+    /// of the previous reserve-then-undo pair — and the transient
+    /// `queued == limit + k` overshoot that pair made visible to
+    /// snapshots is gone entirely.
     pub fn try_admit(&self) -> Result<()> {
         let limit = self.limit.load(Ordering::SeqCst);
-        let prev = self.queued.fetch_add(1, Ordering::SeqCst);
-        if prev >= limit {
-            self.queued.fetch_sub(1, Ordering::SeqCst);
-            self.shed.fetch_add(1, Ordering::SeqCst);
-            return Err(anyhow::Error::new(Overloaded { queued: prev, limit }));
+        let admit = self.queued.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |q| {
+            if q < limit {
+                Some(q + 1)
+            } else {
+                None
+            }
+        });
+        match admit {
+            Ok(_) => Ok(()),
+            Err(queued) => {
+                self.shed.fetch_add(1, Ordering::SeqCst);
+                Err(anyhow::Error::new(Overloaded { queued, limit }))
+            }
         }
-        Ok(())
     }
 
     /// Return `n` completed requests' slots to the gate.

@@ -84,7 +84,6 @@ pub mod linkplan;
 pub mod membership;
 pub mod scheduler;
 
-use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -103,6 +102,7 @@ use crate::runtime::engine::XBatch;
 use crate::runtime::manifest::DeploymentMeta;
 use crate::runtime::ExecHandle;
 use crate::util::units::{Flops, Secs};
+use crate::util::window::RingWindow;
 use crate::Result;
 pub use admission::{Admission, Overloaded};
 pub use batcher::{Batch, Batcher, BatcherConfig, IntakePressure};
@@ -141,10 +141,51 @@ pub enum RequestPayload {
     I32(Vec<i32>),
 }
 
+/// One response's view of its batch's fused output (ISSUE 10): every row
+/// of a batch shares one reference-counted buffer, so handing a row to
+/// its response is a pointer + range instead of a per-row `to_vec`. It
+/// dereferences to `[f32]`, so callers read it exactly like the owned
+/// `Vec<f32>` it replaces (`len()`, indexing, slicing, iteration,
+/// `extend_from_slice(&resp.logits)`).
+#[derive(Clone, Debug)]
+pub struct LogitsRow {
+    buf: Arc<[f32]>,
+    start: usize,
+    len: usize,
+}
+
+impl LogitsRow {
+    /// A standalone row owning its whole buffer (single-row callers).
+    pub fn from_vec(row: Vec<f32>) -> LogitsRow {
+        let len = row.len();
+        LogitsRow { buf: row.into(), start: 0, len }
+    }
+
+    /// Row `r` of a shared `(rows × classes)` fused buffer.
+    fn slice_of(buf: &Arc<[f32]>, r: usize, classes: usize) -> LogitsRow {
+        LogitsRow { buf: Arc::clone(buf), start: r * classes, len: classes }
+    }
+}
+
+impl std::ops::Deref for LogitsRow {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf[self.start..self.start + self.len]
+    }
+}
+
+impl PartialEq for LogitsRow {
+    fn eq(&self, other: &LogitsRow) -> bool {
+        self[..] == other[..]
+    }
+}
+
 /// Response to one request.
 #[derive(Clone, Debug)]
 pub struct InferenceResponse {
-    pub logits: Vec<f32>,
+    /// This request's fused logits row (derefs to `[f32]`; one buffer is
+    /// shared by the whole batch's responses).
+    pub logits: LogitsRow,
     /// Predicted class (argmax; for det tasks argmax per token is in logits).
     pub prediction: usize,
     /// Virtual end-to-end latency on the simulated edge fleet (Eq. 3).
@@ -623,9 +664,14 @@ impl ServeBuilder {
             admission: admission.clone(),
             scheduler,
             promoted_at: vec![None; n_members],
-            recent_virtual_ms: VecDeque::new(),
-            member_recent_ms: vec![Vec::new(); n_members],
-            member_recent_energy_j: vec![Vec::new(); n_members],
+            recent_virtual_ms: RingWindow::new(RECENT_LATENCY_WINDOW),
+            member_views: (0..n_members)
+                .map(|_| scheduler::MemberView::new(RECENT_LATENCY_WINDOW))
+                .collect(),
+            readings_buf: Vec::with_capacity(n_members),
+            order: vec![Vec::new(); n_members],
+            order_stale: true,
+            rerouted: Vec::new(),
             smoothed_headroom: 1.0,
             intake_cap: chan_cap,
             signal,
@@ -694,18 +740,31 @@ struct Leader {
     /// standby warms).
     promoted_at: Vec<Option<usize>>,
     /// Rolling window of fleet per-batch virtual latencies (ms), part of
-    /// every [`PressureContext`].
-    recent_virtual_ms: VecDeque<f64>,
-    /// Per-member rolling windows of primary-host arrival latency (ms) —
-    /// a standby masking a slow primary does not hide the primary's
-    /// latency from the control plane. Bounded to
-    /// [`RECENT_LATENCY_WINDOW`]; kept as `Vec` so [`MemberView`] can
-    /// borrow them as slices.
-    member_recent_ms: Vec<Vec<f64>>,
-    /// Per-member rolling windows of joules spent per batch across every
-    /// host that ran a copy of the member (analytic: the same
-    /// excess-power × busy-time model the device simulator integrates).
-    member_recent_energy_j: Vec<Vec<f64>>,
+    /// every [`PressureContext`]. Fixed-capacity: pushing and percentile
+    /// reads are allocation-free (ISSUE 10).
+    recent_virtual_ms: RingWindow,
+    /// Per-member control-plane views handed to the pressure signal:
+    /// primary health plus rolling windows of primary-host arrival
+    /// latency (ms) and joules per batch — a standby masking a slow
+    /// primary does not hide the primary's latency from the control
+    /// plane. Owned here and updated in place, so `observe_pressure`
+    /// builds nothing per batch.
+    member_views: Vec<scheduler::MemberView>,
+    /// Reusable buffer for per-batch pressure readings (filled through
+    /// [`PressureSignal::read_into`]; allocated once, cleared per batch).
+    readings_buf: Vec<MemberPressure>,
+    /// Persistent routed dispatch order, member → hosts primary-first:
+    /// the per-batch copy of [`Leader::assignments`] that link
+    /// re-planning mutates. Rebuilt only when `order_stale` (churn,
+    /// re-plan, death); between those events each batch restores just the
+    /// members in `rerouted` and re-runs routing in place.
+    order: Vec<Vec<usize>>,
+    /// When true, `assignments` changed and `order` must be rebuilt
+    /// wholesale before the next dispatch.
+    order_stale: bool,
+    /// Members whose `order` entry was rotated by link re-routing last
+    /// batch (restored from `assignments` before the next routing pass).
+    rerouted: Vec<usize>,
     /// Exponentially-blended elision headroom factor: each refresh moves
     /// `limit_blend` of the way toward the target headroom, so a
     /// mid-burst mode change cannot step the admission limit in one
@@ -804,30 +863,24 @@ impl Leader {
     /// member through the scheduler's instant fallback, which is immune
     /// to the hysteresis delay.)
     fn observe_pressure(&mut self, intake: IntakePressure) {
-        let window: Vec<f64> = self.recent_virtual_ms.iter().copied().collect();
-        // explicit field borrows so the views (which keep references into
-        // the member windows) provably don't overlap the signal's `&mut`
-        let assignments = &self.assignments;
-        let health = &self.health;
-        let member_recent_ms = &self.member_recent_ms;
-        let member_recent_energy_j = &self.member_recent_energy_j;
-        let views: Vec<scheduler::MemberView<'_>> = (0..assignments.len())
-            .map(|m| scheduler::MemberView {
-                health: assignments[m]
-                    .first()
-                    .map(|&w| health[w].state())
-                    .unwrap_or(HealthState::Dead),
-                recent_virtual_ms: &member_recent_ms[m],
-                recent_energy_j: &member_recent_energy_j[m],
-            })
-            .collect();
-        let readings = self.signal.read(&scheduler::PressureContext {
+        // the views' windows are already current (`note_member_obs` pushes
+        // into them directly); only the primary health byte needs a
+        // per-batch refresh — no per-batch view construction (ISSUE 10)
+        for m in 0..self.member_views.len() {
+            self.member_views[m].health = self.assignments[m]
+                .first()
+                .map(|&w| self.health[w].state())
+                .unwrap_or(HealthState::Dead);
+        }
+        // explicit field borrows so the context (which borrows the owned
+        // views) provably doesn't overlap the signal's `&mut`
+        let ctx = scheduler::PressureContext {
             intake,
-            recent_virtual_ms: &window,
-            members: &views,
-        });
-        drop(views);
-        self.scheduler.observe(&readings);
+            recent_virtual_ms: self.recent_virtual_ms.as_slice(),
+            members: &self.member_views,
+        };
+        self.signal.read_into(&mut self.readings_buf, &ctx);
+        self.scheduler.observe(&self.readings_buf);
         self.fault.mode_transitions = self.scheduler.transitions();
         for m in 0..self.members.len() {
             let led = &mut self.fault.member_modes[m];
@@ -853,26 +906,16 @@ impl Leader {
     }
 
     fn note_virtual_latency(&mut self, virtual_s: f64) {
-        if self.recent_virtual_ms.len() == RECENT_LATENCY_WINDOW {
-            self.recent_virtual_ms.pop_front();
-        }
-        self.recent_virtual_ms.push_back(Secs(virtual_s).to_millis().0);
+        self.recent_virtual_ms.push(Secs(virtual_s).to_millis().0);
     }
 
     /// Record one member's per-batch observations into its rolling
     /// windows (primary-host arrival latency and joules spent across its
-    /// hosts).
+    /// hosts). The windows evict their oldest sample themselves.
     fn note_member_obs(&mut self, m: usize, arrive_ms: f64, energy_j: f64) {
-        let ms = &mut self.member_recent_ms[m];
-        if ms.len() == RECENT_LATENCY_WINDOW {
-            ms.remove(0);
-        }
-        ms.push(arrive_ms);
-        let ej = &mut self.member_recent_energy_j[m];
-        if ej.len() == RECENT_LATENCY_WINDOW {
-            ej.remove(0);
-        }
-        ej.push(energy_j);
+        let view = &mut self.member_views[m];
+        view.recent_virtual_ms.push(arrive_ms);
+        view.recent_energy_j.push(energy_j);
     }
 
     /// Serve one batch through the fault-tolerant 3-phase workflow.
@@ -920,16 +963,40 @@ impl Leader {
         // uplink the way `ReplicaScheduler` routes around a slow device.
         // Replicated members keep their order: every copy dispatches and
         // first-arrival-wins dedup already prefers the uncontended path.
-        let mut order: Vec<Vec<usize>> = self.assignments.clone();
-        for (m, hosts) in order.iter_mut().enumerate() {
+        // The routed order lives in a persistent scratch (`self.order`)
+        // instead of a per-batch `assignments.clone()` (ISSUE 10): a full
+        // rebuild happens only when `order_stale` flags an assignment
+        // change (churn / re-plan / death); otherwise only the members
+        // re-routing rotated last batch are restored before routing runs
+        // again. Either way the pre-routing contents equal `assignments`
+        // member-for-member, so routing decisions are unchanged.
+        if self.order_stale {
+            if self.order.len() != self.assignments.len() {
+                self.order.resize_with(self.assignments.len(), Vec::new);
+            }
+            for (dst, src) in self.order.iter_mut().zip(&self.assignments) {
+                dst.clear();
+                dst.extend_from_slice(src);
+            }
+            self.rerouted.clear();
+            self.order_stale = false;
+        } else {
+            while let Some(m) = self.rerouted.pop() {
+                self.order[m].clear();
+                self.order[m].extend_from_slice(&self.assignments[m]);
+            }
+        }
+        for m in 0..self.order.len() {
             if standbys_run[m] {
                 continue;
             }
             let txs = &self.worker_txs;
-            if let Some(w) = self.linkplan.route(hosts, |w| txs[w].is_some()) {
+            if let Some(w) = self.linkplan.route(&self.order[m], |w| txs[w].is_some()) {
+                let hosts = &mut self.order[m];
                 hosts.retain(|&h| h != w);
                 hosts.insert(0, w);
                 self.fault.link_reroutes += 1;
+                self.rerouted.push(m);
             }
         }
 
@@ -947,7 +1014,7 @@ impl Leader {
         let mut member_energy_j = vec![0.0f64; self.members.len()];
         let mut member_standby_energy_j = vec![0.0f64; self.members.len()];
         for (m, ctx) in self.members.iter().enumerate() {
-            for (hi, &w) in order[m].iter().enumerate() {
+            for (hi, &w) in self.order[m].iter().enumerate() {
                 if self.worker_txs[w].is_none() {
                     continue;
                 }
@@ -975,7 +1042,7 @@ impl Leader {
                 continue;
             }
             let live_standbys =
-                order[m][1..].iter().filter(|&&w| self.worker_txs[w].is_some()).count();
+                self.order[m][1..].iter().filter(|&&w| self.worker_txs[w].is_some()).count();
             let saved_gflops =
                 Flops(self.members[m].flops_per_sample * n as f64 * live_standbys as f64)
                     .to_gflops()
@@ -998,9 +1065,9 @@ impl Leader {
         // member's snapshot follows the routed host (it IS the one copy
         // dispatched, so its arrival is the member's latency observation)
         let primary: Vec<Option<usize>> =
-            order.iter().map(|hosts| hosts.first().copied()).collect();
+            self.order.iter().map(|hosts| hosts.first().copied()).collect();
         for (m, ctx) in self.members.iter().enumerate() {
-            for (hi, &w) in order[m].iter().enumerate() {
+            for (hi, &w) in self.order[m].iter().enumerate() {
                 if hi > 0 && !standbys_run[m] {
                     continue; // elided this batch
                 }
@@ -1262,12 +1329,17 @@ impl Leader {
 
         let per_req_energy = energy_j / n as f64;
         let out_classes = fused.len() / n;
+        // zero-copy row hand-off (ISSUE 10): the fused buffer moves into
+        // one shared allocation and every response borrows its row as a
+        // range of it — argmax reads the same bytes the old per-row
+        // `to_vec` copied
+        let fused: Arc<[f32]> = fused.into();
         let responses = (0..n)
             .map(|r| {
-                let row = fused[r * out_classes..(r + 1) * out_classes].to_vec();
-                let prediction = crate::metrics::argmax(&row);
+                let logits = LogitsRow::slice_of(&fused, r, out_classes);
+                let prediction = crate::metrics::argmax(&logits);
                 InferenceResponse {
-                    logits: row,
+                    logits,
                     prediction,
                     virtual_latency_s: virtual_s,
                     energy_j: per_req_energy,
@@ -1396,6 +1468,7 @@ impl Leader {
         // after the assignment shuffle: the dead capacity shrinks the queue
         // budget, and the post-promotion assignments refresh the elision
         // headroom factor
+        self.order_stale = true;
         self.refresh_admission();
     }
 
@@ -1593,6 +1666,7 @@ impl Leader {
             ) {
                 self.assignments[m].push(t);
                 self.fault.replicas_placed += 1;
+                self.order_stale = true;
             }
         }
     }
@@ -1665,6 +1739,7 @@ impl Leader {
         if let Some(m) = target {
             if !self.assignments[m].contains(&w) {
                 self.assignments[m].push(w);
+                self.order_stale = true;
             }
         }
     }
@@ -1800,6 +1875,7 @@ impl Leader {
             // re-placed standby warms (Partial mode semantics)
             self.promoted_at[m] = Some(self.batch_idx);
         }
+        self.order_stale = true;
         self.refresh_admission();
         Ok(best_psi)
     }

@@ -36,6 +36,7 @@
 use crate::config::ElisionPolicy;
 use crate::model::Arch;
 use crate::predictor::LatencyPredictor;
+use crate::util::window::RingWindow;
 
 use super::batcher::IntakePressure;
 use super::health::HealthState;
@@ -89,17 +90,22 @@ impl MemberPressure {
     }
 }
 
-/// One member's slice of the observation state for one batch: what the
-/// leader knows about this member when the [`PressureSignal`] runs.
-#[derive(Clone, Copy, Debug)]
-pub struct MemberView<'a> {
+/// One member's slice of the observation state: what the leader knows
+/// about this member when the [`PressureSignal`] runs. Since ISSUE 10 the
+/// view *owns* its rolling windows ([`RingWindow`], fixed capacity) — the
+/// leader allocates one view per member at start, feeds the windows as
+/// batches close, refreshes `health` at batch open, and hands the same
+/// views to the signal every batch, so the per-batch window copies and
+/// view rebuilds of the old borrowed design are gone.
+#[derive(Clone, Debug)]
+pub struct MemberView {
     /// Health of the member's current primary host at batch open.
     pub health: HealthState,
     /// The member's recent per-batch virtual arrival latencies at the
     /// central node, oldest first (ms, primary-host arrivals — a standby
     /// masking a slow primary does not hide the primary's latency from
-    /// the control plane). Bounded by the leader's window size.
-    pub recent_virtual_ms: &'a [f64],
+    /// the control plane). Bounded by the window capacity.
+    pub recent_virtual_ms: RingWindow,
     /// The member's recent per-batch energy across every live host
     /// assigned a copy of it, oldest first (joules, background-
     /// subtracted) — the *fully-replicated* spend, deliberately not
@@ -108,7 +114,19 @@ pub struct MemberView<'a> {
     /// or a budget between the elided and replicated levels would flap
     /// the mode. Actually-saved joules are ledgered in
     /// `FaultMetrics::standby_energy_saved_j` instead.
-    pub recent_energy_j: &'a [f64],
+    pub recent_energy_j: RingWindow,
+}
+
+impl MemberView {
+    /// A fresh healthy view with empty rolling windows of `window`
+    /// samples capacity.
+    pub fn new(window: usize) -> MemberView {
+        MemberView {
+            health: HealthState::Healthy,
+            recent_virtual_ms: RingWindow::new(window),
+            recent_energy_j: RingWindow::new(window),
+        }
+    }
 }
 
 /// Everything a [`PressureSignal`] may look at for one batch: the intake
@@ -122,7 +140,7 @@ pub struct PressureContext<'a> {
     /// Fleet-wide recent per-batch virtual latencies, oldest first (ms).
     pub recent_virtual_ms: &'a [f64],
     /// Per-member observation views, indexed by member.
-    pub members: &'a [MemberView<'a>],
+    pub members: &'a [MemberView],
 }
 
 /// Pluggable per-member pressure reading (ISSUE 4; per-member since
@@ -168,6 +186,17 @@ pub trait PressureSignal: Send {
     /// Fold one batch's observations into per-member pressure readings
     /// (one per `ctx.members` entry, in member order).
     fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure>;
+
+    /// Allocation-free dispatch seam (ISSUE 10): fold the same readings
+    /// into a caller-owned buffer instead of returning a fresh `Vec`. The
+    /// leader calls this once per batch with one persistent buffer; the
+    /// stock signals override it to write in place, and this default shim
+    /// keeps every pre-existing custom impl working unchanged (it simply
+    /// pays the `read` allocation it delegates to).
+    fn read_into(&mut self, out: &mut Vec<MemberPressure>, ctx: &PressureContext<'_>) {
+        out.clear();
+        out.extend(self.read(ctx));
+    }
 }
 
 /// Typed construction error for the stock [`PressureSignal`] impls.
@@ -232,22 +261,25 @@ impl PressureSignal for QueueP95Signal {
     }
 
     fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+        let mut out = Vec::with_capacity(ctx.members.len());
+        self.read_into(&mut out, ctx);
+        out
+    }
+
+    fn read_into(&mut self, out: &mut Vec<MemberPressure>, ctx: &PressureContext<'_>) {
+        out.clear();
         let fill = ctx.intake.fill();
-        ctx.members
-            .iter()
-            .map(|m| {
-                // explicit totality on the empty window: no latency
-                // evidence reads as zero latency pressure
-                let latency_ms = if m.recent_virtual_ms.is_empty() {
-                    0.0
-                } else {
-                    let mut v: Vec<f64> = m.recent_virtual_ms.to_vec();
-                    v.sort_by(|a, b| a.total_cmp(b));
-                    crate::metrics::percentile_nearest_rank(&v, 95.0)
-                };
-                MemberPressure { fill, latency_ms }
-            })
-            .collect()
+        for m in ctx.members {
+            // explicit totality on the empty window: no latency evidence
+            // reads as zero latency pressure. The window's maintained
+            // sorted view makes the rank read copy- and sort-free.
+            let latency_ms = if m.recent_virtual_ms.is_empty() {
+                0.0
+            } else {
+                m.recent_virtual_ms.percentile(95.0)
+            };
+            out.push(MemberPressure { fill, latency_ms });
+        }
     }
 }
 
@@ -278,23 +310,26 @@ impl PressureSignal for EwmaLatencySignal {
     }
 
     fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+        let mut out = Vec::with_capacity(ctx.members.len());
+        self.read_into(&mut out, ctx);
+        out
+    }
+
+    fn read_into(&mut self, out: &mut Vec<MemberPressure>, ctx: &PressureContext<'_>) {
+        out.clear();
         if self.ewma_ms.len() < ctx.members.len() {
             self.ewma_ms.resize(ctx.members.len(), None);
         }
         let fill = ctx.intake.fill();
-        ctx.members
-            .iter()
-            .enumerate()
-            .map(|(m, view)| {
-                if let Some(&latest) = view.recent_virtual_ms.last() {
-                    self.ewma_ms[m] = Some(match self.ewma_ms[m] {
-                        Some(prev) => self.alpha * latest + (1.0 - self.alpha) * prev,
-                        None => latest,
-                    });
-                }
-                MemberPressure { fill, latency_ms: self.ewma_ms[m].unwrap_or(0.0) }
-            })
-            .collect()
+        for (m, view) in ctx.members.iter().enumerate() {
+            if let Some(latest) = view.recent_virtual_ms.last() {
+                self.ewma_ms[m] = Some(match self.ewma_ms[m] {
+                    Some(prev) => self.alpha * latest + (1.0 - self.alpha) * prev,
+                    None => latest,
+                });
+            }
+            out.push(MemberPressure { fill, latency_ms: self.ewma_ms[m].unwrap_or(0.0) });
+        }
     }
 }
 
@@ -308,18 +343,17 @@ impl PressureSignal for EwmaLatencySignal {
 ///
 /// ```
 /// use coformer::coordinator::{
-///     HealthState, IntakePressure, MemberView, PredictiveSignal, PressureContext,
-///     PressureSignal,
+///     IntakePressure, MemberView, PredictiveSignal, PressureContext, PressureSignal,
 /// };
 ///
 /// // baseline 10 ms from the latency-predictor MLP; alpha 1 = pure trend
 /// let mut sig = PredictiveSignal::from_baselines_ms(vec![10.0], 1.0).unwrap();
 /// let read = |sig: &mut PredictiveSignal, window: &[f64]| {
-///     let members = [MemberView {
-///         health: HealthState::Healthy,
-///         recent_virtual_ms: window,
-///         recent_energy_j: &[],
-///     }];
+///     let mut view = MemberView::new(8);
+///     for &ms in window {
+///         view.recent_virtual_ms.push(ms);
+///     }
+///     let members = [view];
 ///     let ctx = PressureContext {
 ///         intake: IntakePressure::unbounded(),
 ///         recent_virtual_ms: &[],
@@ -393,36 +427,41 @@ impl PressureSignal for PredictiveSignal {
     }
 
     fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+        let mut out = Vec::with_capacity(ctx.members.len());
+        self.read_into(&mut out, ctx);
+        out
+    }
+
+    fn read_into(&mut self, out: &mut Vec<MemberPressure>, ctx: &PressureContext<'_>) {
+        out.clear();
         if self.ratio_ewma.len() < ctx.members.len() {
             self.ratio_ewma.resize(ctx.members.len(), None);
         }
         let fill = ctx.intake.fill();
-        ctx.members
-            .iter()
-            .enumerate()
-            .map(|(m, view)| {
-                // a member beyond the baseline list never drives elision
-                let Some(&base) = self.baseline_ms.get(m) else {
-                    return MemberPressure { fill, latency_ms: 0.0 };
-                };
-                let Some(&obs) = view.recent_virtual_ms.last() else {
-                    return MemberPressure { fill, latency_ms: 0.0 };
-                };
-                let ratio = obs / base;
-                let prev = self.ratio_ewma[m];
-                let ewma = match prev {
-                    Some(p) => self.alpha * ratio + (1.0 - self.alpha) * p,
-                    None => ratio,
-                };
-                self.ratio_ewma[m] = Some(ewma);
-                // one-step extrapolation of the smoothed trend: the slope
-                // of the EWMA is added back on, so a ramp is forecast past
-                // its latest observation
-                let slope = ewma - prev.unwrap_or(ewma);
-                let forecast_ms = (base * (ewma + slope)).max(0.0);
-                MemberPressure { fill, latency_ms: forecast_ms }
-            })
-            .collect()
+        for (m, view) in ctx.members.iter().enumerate() {
+            // a member beyond the baseline list never drives elision
+            let Some(&base) = self.baseline_ms.get(m) else {
+                out.push(MemberPressure { fill, latency_ms: 0.0 });
+                continue;
+            };
+            let Some(obs) = view.recent_virtual_ms.last() else {
+                out.push(MemberPressure { fill, latency_ms: 0.0 });
+                continue;
+            };
+            let ratio = obs / base;
+            let prev = self.ratio_ewma[m];
+            let ewma = match prev {
+                Some(p) => self.alpha * ratio + (1.0 - self.alpha) * p,
+                None => ratio,
+            };
+            self.ratio_ewma[m] = Some(ewma);
+            // one-step extrapolation of the smoothed trend: the slope
+            // of the EWMA is added back on, so a ramp is forecast past
+            // its latest observation
+            let slope = ewma - prev.unwrap_or(ewma);
+            let forecast_ms = (base * (ewma + slope)).max(0.0);
+            out.push(MemberPressure { fill, latency_ms: forecast_ms });
+        }
     }
 }
 
@@ -440,17 +479,14 @@ impl PressureSignal for PredictiveSignal {
 /// ```
 /// use coformer::config::ElisionPolicy;
 /// use coformer::coordinator::{
-///     EnergyBudgetSignal, HealthState, IntakePressure, MemberView,
-///     PressureContext, PressureSignal,
+///     EnergyBudgetSignal, IntakePressure, MemberView, PressureContext, PressureSignal,
 /// };
 ///
 /// let policy = ElisionPolicy { energy_budget_j: 4.0, ..ElisionPolicy::default() };
 /// let mut sig = EnergyBudgetSignal::from_policy(&policy, 1).unwrap();
-/// let members = [MemberView {
-///     health: HealthState::Healthy,
-///     recent_virtual_ms: &[],
-///     recent_energy_j: &[3.0], // most recent batch burned 3 J
-/// }];
+/// let mut view = MemberView::new(8);
+/// view.recent_energy_j.push(3.0); // most recent batch burned 3 J
+/// let members = [view];
 /// let ctx = PressureContext {
 ///     intake: IntakePressure::unbounded(),
 ///     recent_virtual_ms: &[],
@@ -502,16 +538,19 @@ impl PressureSignal for EnergyBudgetSignal {
     }
 
     fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
-        ctx.members
-            .iter()
-            .enumerate()
-            .map(|(m, view)| {
-                let budget = self.budgets_j.get(m).copied().unwrap_or(0.0);
-                let spent = view.recent_energy_j.last().copied().unwrap_or(0.0);
-                let fill = if budget > 0.0 { spent / budget } else { 0.0 };
-                MemberPressure { fill, latency_ms: 0.0 }
-            })
-            .collect()
+        let mut out = Vec::with_capacity(ctx.members.len());
+        self.read_into(&mut out, ctx);
+        out
+    }
+
+    fn read_into(&mut self, out: &mut Vec<MemberPressure>, ctx: &PressureContext<'_>) {
+        out.clear();
+        for (m, view) in ctx.members.iter().enumerate() {
+            let budget = self.budgets_j.get(m).copied().unwrap_or(0.0);
+            let spent = view.recent_energy_j.last().unwrap_or(0.0);
+            let fill = if budget > 0.0 { spent / budget } else { 0.0 };
+            out.push(MemberPressure { fill, latency_ms: 0.0 });
+        }
     }
 }
 
@@ -882,15 +921,15 @@ mod tests {
         assert!(s.standby_executes(0, HealthState::Degraded, false));
     }
 
-    fn member_view<'a>(ms: &'a [f64], ej: &'a [f64]) -> MemberView<'a> {
-        MemberView { health: HealthState::Healthy, recent_virtual_ms: ms, recent_energy_j: ej }
+    fn member_view(ms: &[f64], ej: &[f64]) -> MemberView {
+        MemberView {
+            health: HealthState::Healthy,
+            recent_virtual_ms: RingWindow::from_slice(32, ms),
+            recent_energy_j: RingWindow::from_slice(32, ej),
+        }
     }
 
-    fn ctx<'a>(
-        queued: usize,
-        limit: usize,
-        members: &'a [MemberView<'a>],
-    ) -> PressureContext<'a> {
+    fn ctx(queued: usize, limit: usize, members: &[MemberView]) -> PressureContext<'_> {
         PressureContext {
             intake: IntakePressure {
                 queued,
@@ -900,6 +939,34 @@ mod tests {
             recent_virtual_ms: &[],
             members,
         }
+    }
+
+    #[test]
+    fn read_into_reuses_the_buffer_and_matches_read() {
+        let w0 = [30.0, 10.0, 20.0];
+        let members = [member_view(&w0, &[]), member_view(&[], &[])];
+        let mut sig = QueueP95Signal;
+        // stale junk longer than the fleet: read_into must fully replace it
+        let mut buf = vec![MemberPressure { fill: 9.0, latency_ms: 9.0 }; 5];
+        sig.read_into(&mut buf, &ctx(4, 8, &members));
+        assert_eq!(buf, sig.read(&ctx(4, 8, &members)));
+        assert_eq!(buf.len(), 2);
+
+        // the default-method shim gives read-only custom impls the same
+        // contract without them implementing read_into
+        struct QueueOnly;
+        impl PressureSignal for QueueOnly {
+            fn name(&self) -> &'static str {
+                "queue-only"
+            }
+            fn read(&mut self, ctx: &PressureContext<'_>) -> Vec<MemberPressure> {
+                let fill = ctx.intake.fill();
+                ctx.members.iter().map(|_| MemberPressure { fill, latency_ms: 0.0 }).collect()
+            }
+        }
+        let mut q = QueueOnly;
+        q.read_into(&mut buf, &ctx(2, 8, &members));
+        assert_eq!(buf, q.read(&ctx(2, 8, &members)));
     }
 
     #[test]

@@ -1,10 +1,21 @@
 //! Self-timed micro-benchmark harness (criterion is not in the vendored
 //! crate set).  Warmup + timed iterations, reports mean / p50 / p95 in a
 //! criterion-like line so `cargo bench` output stays scannable.
+//!
+//! Two env knobs wire the harness into the tracked trajectory (ISSUE 10):
+//!
+//! * `COFORMER_BENCH_QUICK=1` clamps warmup/iters so CI can afford a full
+//!   sweep — the numbers get noisier, the harness paths stay identical;
+//! * `COFORMER_BENCH_JSON=1` makes every result also print a
+//!   `BENCH_JSON {...}` machine line (suite label from
+//!   `COFORMER_BENCH_SUITE`), which `cargo xtask bench` collects verbatim
+//!   into `BENCH_*.json` — the numbers land in the trajectory from the
+//!   same code that computed them, so there is no reparse drift.
 
 use std::time::Instant;
 
 use crate::util::units::Nanos;
+use crate::util::Json;
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -27,11 +38,25 @@ impl BenchResult {
             self.iters
         );
     }
+
+    /// One `BENCH_*.json` trajectory entry, labelled with its suite.
+    pub fn to_json(&self, bench: &str) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(bench)),
+            ("name", Json::str(self.name.as_str())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+        ])
+    }
 }
 
-/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations
+/// (`COFORMER_BENCH_QUICK=1` clamps both; see the module docs).
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
     assert!(iters >= 1);
+    let (warmup, iters) = effective(warmup, iters, quick_mode());
     for _ in 0..warmup {
         f();
     }
@@ -43,18 +68,79 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.total_cmp(b));
-    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    let p = |q: f64| samples[((q * samples.len() as f64) as usize).min(samples.len() - 1)];
-    let r = BenchResult {
-        name: name.to_string(),
-        iters,
-        mean_ns: mean,
-        p50_ns: p(0.50),
-        p95_ns: p(0.95),
-    };
+    let r = summarize(name, samples);
     r.report();
+    emit_marker(&r);
     r
+}
+
+/// Fold raw samples into a result: sort by `total_cmp`, then take the
+/// mean and the nearest-rank p50/p95 via the one shared rank formula
+/// ([`crate::metrics::percentile_nearest_rank`]) — the previous
+/// truncating index (`(q * len) as usize`) disagreed with it on small
+/// sample counts.
+fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let mean_ns = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns,
+        p50_ns: super::percentile_nearest_rank(&samples, 50.0),
+        p95_ns: super::percentile_nearest_rank(&samples, 95.0),
+    }
+}
+
+/// Quick (CI) mode: `COFORMER_BENCH_QUICK=1`.
+pub fn quick_mode() -> bool {
+    std::env::var("COFORMER_BENCH_QUICK").as_deref() == Ok("1")
+}
+
+/// Clamp warmup/iters when quick mode is on; pass-through otherwise.
+fn effective(warmup: usize, iters: usize, quick: bool) -> (usize, usize) {
+    if quick {
+        (warmup.min(1), iters.min(10))
+    } else {
+        (warmup, iters)
+    }
+}
+
+fn json_marker_enabled() -> bool {
+    std::env::var("COFORMER_BENCH_JSON").as_deref() == Ok("1")
+}
+
+/// Suite label the harness runner stamps on each entry (empty when a
+/// driver is run by hand outside `cargo xtask bench`).
+fn suite_label() -> String {
+    std::env::var("COFORMER_BENCH_SUITE").unwrap_or_default()
+}
+
+/// Under `COFORMER_BENCH_JSON=1`, print the machine record that
+/// `cargo xtask bench` collects into `BENCH_*.json`.
+fn emit_marker(r: &BenchResult) {
+    if !json_marker_enabled() {
+        return;
+    }
+    let line = r.to_json(&suite_label()).to_string();
+    println!("BENCH_JSON {line}");
+}
+
+/// Record an artifact-gated bench section as *skipped* in the trajectory.
+/// The human "SKIPPED" line each gated driver already prints is
+/// unchanged; this adds the machine record so a gated section shows up in
+/// `BENCH_*.json` as skipped rather than silently absent.
+pub fn skip_marker(name: &str, reason: &str) {
+    if !json_marker_enabled() {
+        return;
+    }
+    let j = Json::obj(vec![
+        ("bench", Json::str(suite_label())),
+        ("name", Json::str(name)),
+        ("skipped", Json::Bool(true)),
+        ("reason", Json::str(reason)),
+    ]);
+    let line = j.to_string();
+    println!("BENCH_JSON {line}");
 }
 
 /// Prevent the optimizer from discarding a computed value.
@@ -74,7 +160,7 @@ mod tests {
         });
         assert!(r.p50_ns <= r.p95_ns);
         assert!(r.mean_ns > 0.0);
-        assert_eq!(r.iters, 50);
+        assert!(r.iters >= 1);
     }
 
     #[test]
@@ -83,5 +169,46 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(2));
         });
         assert!(r.mean_ns >= 2e6);
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank_on_a_hand_computed_10_sample_case() {
+        let samples: Vec<f64> = (1..=10).map(|i| (i * 10) as f64).collect();
+        let r = summarize("hand", samples);
+        // nearest rank over 10 samples: p50 → rank ceil(0.50·10) = 5 →
+        // 50.0 (the old truncating index picked samples[5] = 60.0);
+        // p95 → rank ceil(0.95·10) = 10 → 100.0
+        assert_eq!(r.p50_ns, 50.0);
+        assert_eq!(r.p95_ns, 100.0);
+        assert_eq!(r.mean_ns, 55.0);
+        assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn summarize_sorts_before_ranking() {
+        let r = summarize("unsorted", vec![30.0, 10.0, 20.0]);
+        assert_eq!(r.p50_ns, 20.0);
+        assert_eq!(r.p95_ns, 30.0);
+        assert_eq!(r.mean_ns, 20.0);
+    }
+
+    #[test]
+    fn quick_mode_clamps_warmup_and_iters() {
+        assert_eq!(effective(100, 5000, true), (1, 10));
+        assert_eq!(effective(100, 5000, false), (100, 5000));
+        // already-small drivers are untouched even in quick mode
+        assert_eq!(effective(0, 3, true), (0, 3));
+    }
+
+    #[test]
+    fn to_json_round_trips_through_util_json() {
+        let r = summarize("rt", vec![10.0, 20.0]);
+        let j = Json::parse(&r.to_json("debo").to_string()).unwrap();
+        assert_eq!(j.req("bench").unwrap().as_str().unwrap(), "debo");
+        assert_eq!(j.req("name").unwrap().as_str().unwrap(), "rt");
+        assert_eq!(j.req("iters").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("mean_ns").unwrap().as_f64().unwrap(), 15.0);
+        assert_eq!(j.req("p50_ns").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(j.req("p95_ns").unwrap().as_f64().unwrap(), 20.0);
     }
 }

@@ -117,7 +117,9 @@ pub struct MemberModeLedger {
 
 /// Fault-tolerance counters for the serving coordinator: deadline misses,
 /// crashes, sub-model re-dispatches and the k-of-n quorum-size histogram.
-#[derive(Clone, Debug, Default)]
+/// `PartialEq` lets the determinism regression suite compare two runs'
+/// ledgers wholesale.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct FaultMetrics {
     /// Virtual-deadline misses, counted per straggling device per batch
     /// (two devices stalling in one batch record two timeouts).

@@ -1,12 +1,15 @@
 //! Dependency-free substrates: JSON (this environment vendors only the
 //! `xla` crate's closure, so serde is unavailable — we implement the
 //! manifest/config interchange ourselves), a seeded PRNG, typed physical
-//! units, and the loom-swappable atomics shim.
+//! units, the loom-swappable atomics shim, and the allocation-free
+//! rolling sample window behind the leader's pressure signals.
 
 pub mod json;
 pub mod rng;
 pub mod sync;
 pub mod units;
+pub mod window;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use window::RingWindow;

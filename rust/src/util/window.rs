@@ -1,0 +1,188 @@
+//! Fixed-capacity rolling sample window with an incrementally maintained
+//! sorted view. Built for the serving leader's per-batch hot path (ISSUE
+//! 10): pushing a sample, reading the window oldest-first and taking a
+//! nearest-rank percentile are all allocation-free after construction,
+//! replacing the previous `VecDeque` + per-batch `collect()` + sort.
+//!
+//! Bit-compatibility contract: [`RingWindow::percentile`] returns exactly
+//! what [`crate::metrics::percentile_nearest_rank`] returns over a freshly
+//! `total_cmp`-sorted copy of the window, and [`RingWindow::mean`] sums
+//! oldest-first — so swapping a `VecDeque<f64>` for a `RingWindow` is
+//! bitwise-neutral. The property suite (`prop_ring_window_matches_naive_
+//! reference` in `tests/properties.rs`) pins this against the naive
+//! implementation across seeded histories, including partial windows.
+
+/// Fixed-capacity rolling window over `f64` samples.
+///
+/// Two parallel views share one pair of buffers allocated once at
+/// construction:
+///
+/// * **arrival order** ([`RingWindow::as_slice`], oldest first) — what
+///   EWMA/forecast consumers read;
+/// * **sorted order** (maintained incrementally by `total_cmp` binary
+///   search on every push) — what percentile reads index into.
+///
+/// Pushing into a full window evicts the oldest sample. After
+/// construction every operation is allocation-free: eviction and
+/// sorted-view maintenance are in-place shifts within the reserved
+/// capacity.
+///
+/// ```
+/// use coformer::util::window::RingWindow;
+///
+/// let mut w = RingWindow::new(3);
+/// for x in [4.0, 1.0, 3.0, 2.0] {
+///     w.push(x); // the fourth push evicts 4.0
+/// }
+/// assert_eq!(w.as_slice(), &[1.0, 3.0, 2.0]);
+/// assert_eq!(w.percentile(50.0), 2.0);
+/// assert_eq!(w.last(), Some(2.0));
+/// ```
+#[derive(Clone, Debug)]
+pub struct RingWindow {
+    /// Samples in arrival order, oldest first.
+    items: Vec<f64>,
+    /// The same samples in `total_cmp`-ascending order.
+    sorted: Vec<f64>,
+    capacity: usize,
+}
+
+impl RingWindow {
+    /// An empty window holding at most `capacity` samples.
+    pub fn new(capacity: usize) -> RingWindow {
+        assert!(capacity >= 1, "RingWindow needs room for at least one sample");
+        RingWindow {
+            items: Vec::with_capacity(capacity),
+            sorted: Vec::with_capacity(capacity),
+            capacity,
+        }
+    }
+
+    /// A window seeded by pushing `samples` in order (evicting normally
+    /// if there are more than `capacity` of them). Test/doc convenience.
+    pub fn from_slice(capacity: usize, samples: &[f64]) -> RingWindow {
+        let mut w = RingWindow::new(capacity);
+        for &x in samples {
+            w.push(x);
+        }
+        w
+    }
+
+    /// Append a sample, evicting the oldest if the window is full.
+    pub fn push(&mut self, x: f64) {
+        if self.items.len() == self.capacity {
+            let evicted = self.items.remove(0);
+            // the evicted sample is always present in the sorted view, and
+            // total_cmp-equality means bit-equality, so removing whichever
+            // equal slot the search lands on removes an identical value
+            let at = match self.sorted.binary_search_by(|s| s.total_cmp(&evicted)) {
+                Ok(i) => i,
+                Err(i) => i.min(self.sorted.len() - 1),
+            };
+            self.sorted.remove(at);
+        }
+        self.items.push(x);
+        let at = match self.sorted.binary_search_by(|s| s.total_cmp(&x)) {
+            Ok(i) | Err(i) => i,
+        };
+        self.sorted.insert(at, x);
+    }
+
+    /// Samples in arrival order, oldest first.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.items
+    }
+
+    /// The most recently pushed sample.
+    pub fn last(&self) -> Option<f64> {
+        self.items.last().copied()
+    }
+
+    /// Nearest-rank percentile over the current window (`p` in [0, 100];
+    /// an empty window reports 0.0). Same rank arithmetic as
+    /// [`crate::metrics::percentile_nearest_rank`], read straight off the
+    /// maintained sorted view — no copy, no re-sort.
+    pub fn percentile(&self, p: f64) -> f64 {
+        crate::metrics::percentile_nearest_rank(&self.sorted, p)
+    }
+
+    /// Arithmetic mean, summed oldest-first (an empty window reports 0.0).
+    pub fn mean(&self) -> f64 {
+        if self.items.is_empty() {
+            return 0.0;
+        }
+        self.items.iter().sum::<f64>() / self.items.len() as f64
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The fixed capacity this window was constructed with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_window_reads_back_in_arrival_order() {
+        let mut w = RingWindow::new(8);
+        assert!(w.is_empty());
+        assert_eq!(w.percentile(95.0), 0.0);
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.last(), None);
+        w.push(3.0);
+        w.push(1.0);
+        assert_eq!(w.as_slice(), &[3.0, 1.0]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.last(), Some(1.0));
+        assert_eq!(w.mean(), 2.0);
+    }
+
+    #[test]
+    fn full_window_evicts_oldest_and_keeps_sorted_view_consistent() {
+        let mut w = RingWindow::new(3);
+        for x in [5.0, 1.0, 4.0, 2.0, 2.0] {
+            w.push(x);
+        }
+        // 5.0 and 1.0 evicted; arrival order is [4.0, 2.0, 2.0]
+        assert_eq!(w.as_slice(), &[4.0, 2.0, 2.0]);
+        assert_eq!(w.percentile(0.0), 2.0);
+        assert_eq!(w.percentile(50.0), 2.0);
+        assert_eq!(w.percentile(100.0), 4.0);
+        assert_eq!(w.capacity(), 3);
+    }
+
+    #[test]
+    fn percentile_matches_shared_nearest_rank_formula() {
+        let w = RingWindow::from_slice(16, &[10.0, 20.0, 30.0, 40.0]);
+        let mut sorted = w.as_slice().to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for p in [0.0, 25.0, 50.0, 75.0, 95.0, 100.0] {
+            assert_eq!(
+                w.percentile(p).to_bits(),
+                crate::metrics::percentile_nearest_rank(&sorted, p).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_eviction_never_desyncs_the_views() {
+        let mut w = RingWindow::new(4);
+        for x in [1.0, 1.0, 1.0, 1.0, 1.0, 2.0, 1.0] {
+            w.push(x);
+        }
+        assert_eq!(w.as_slice(), &[1.0, 1.0, 2.0, 1.0]);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.percentile(100.0), 2.0);
+        assert_eq!(w.percentile(50.0), 1.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! ISSUE 10: the tracked bench trajectory file committed at the repo root
+//! must stay well-formed — parseable by the same `util::json` codec the
+//! harness emits it with, carrying its header fields and at least one
+//! entry from every suite, with gated sections recorded as skipped rather
+//! than silently absent. This guards the file `cargo xtask bench`
+//! refreshes (and the hand-authored baseline between refreshes) against
+//! drifting away from the `coformer-bench-v1` schema consumers parse.
+
+use std::path::PathBuf;
+
+use coformer::util::Json;
+
+const SUITES: [&str; 4] = ["coordinator", "debo", "runtime", "strategies"];
+
+/// The repo root is one level up from this crate (`rust/`).
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level below the repo root")
+        .to_path_buf()
+}
+
+/// Every `BENCH_<n>.json` at the repo root (there is at least one: the
+/// file this PR's run of `cargo xtask bench` maintains).
+fn trajectory_files() -> Vec<PathBuf> {
+    let mut found: Vec<(u32, PathBuf)> = std::fs::read_dir(repo_root())
+        .expect("repo root is readable")
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name();
+            let idx = name
+                .to_string_lossy()
+                .strip_prefix("BENCH_")
+                .and_then(|r| r.strip_suffix(".json"))
+                .and_then(|n| n.parse::<u32>().ok())?;
+            Some((idx, e.path()))
+        })
+        .collect();
+    found.sort_by_key(|(idx, _)| *idx);
+    found.into_iter().map(|(_, p)| p).collect()
+}
+
+#[test]
+fn tracked_bench_trajectory_files_are_well_formed() {
+    let files = trajectory_files();
+    assert!(
+        !files.is_empty(),
+        "no BENCH_<n>.json at the repo root — the tracked trajectory is gone"
+    );
+    for path in files {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("{} does not parse: {e:#}", path.display()));
+
+        // header
+        assert_eq!(
+            doc.req("schema").unwrap().as_str().unwrap(),
+            "coformer-bench-v1",
+            "{}",
+            path.display()
+        );
+        assert!(!doc.req("git_sha").unwrap().as_str().unwrap().is_empty());
+        doc.req("quick").unwrap().as_bool().unwrap();
+        let provenance = doc.req("provenance").unwrap().as_str().unwrap();
+        assert!(
+            provenance == "measured" || provenance == "estimate",
+            "{}: unknown provenance {provenance:?}",
+            path.display()
+        );
+        let suites: Vec<&str> = doc
+            .req("suites")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.as_str().unwrap())
+            .collect();
+        assert_eq!(suites, SUITES, "{}", path.display());
+
+        // entries: all four suites present; numbers sane; gated sections
+        // recorded as skipped, never silently absent
+        let entries = doc.req("entries").unwrap().as_arr().unwrap();
+        assert!(!entries.is_empty());
+        let mut skipped = 0usize;
+        for e in entries {
+            let bench = e.req("bench").unwrap().as_str().unwrap();
+            assert!(SUITES.contains(&bench), "{}: unknown suite {bench:?}", path.display());
+            let name = e.req("name").unwrap().as_str().unwrap();
+            assert!(!name.is_empty());
+            if e.get("skipped").is_some_and(|s| s.as_bool() == Some(true)) {
+                skipped += 1;
+                assert!(
+                    !e.req("reason").unwrap().as_str().unwrap().is_empty(),
+                    "{}: skip record {name:?} has no reason",
+                    path.display()
+                );
+                continue;
+            }
+            let iters = e.req("iters").unwrap().as_usize().unwrap();
+            assert!(iters >= 1, "{}: {name:?} has zero iters", path.display());
+            let mean = e.req("mean_ns").unwrap().as_f64().unwrap();
+            let p50 = e.req("p50_ns").unwrap().as_f64().unwrap();
+            let p95 = e.req("p95_ns").unwrap().as_f64().unwrap();
+            assert!(mean > 0.0, "{}: {name:?} mean {mean}", path.display());
+            assert!(
+                p50 > 0.0 && p50 <= p95,
+                "{}: {name:?} percentiles disordered: p50 {p50}, p95 {p95}",
+                path.display()
+            );
+        }
+        for suite in SUITES {
+            assert!(
+                entries.iter().any(|e| e.req("bench").unwrap().as_str() == Some(suite)),
+                "{}: suite {suite:?} has no entries (not even a skip record)",
+                path.display()
+            );
+        }
+        assert!(
+            skipped >= 1,
+            "{}: artifact-gated sections must appear as skip records when not run",
+            path.display()
+        );
+    }
+}

@@ -302,3 +302,139 @@ fn shutdown_during_churn_resolves_every_reply() {
     assert!(stats.fault.joins <= 1);
     assert!(stats.fault.departs <= stats.fault.drains);
 }
+
+/// ISSUE 10 determinism regression: the hot-path refactor (RingWindow
+/// pressure windows, `read_into` dispatch, persistent routed-order
+/// scratch, shared-buffer row hand-off, `fetch_update` admission) is
+/// contractually bitwise-neutral. Two identical scripted stub-backed runs
+/// — with a fault, churn and replica elision all engaged — must produce
+/// equal [`coformer::metrics::FaultMetrics`] ledgers wholesale and
+/// bit-identical per-response outputs (logits, virtual latency, energy).
+#[test]
+fn scripted_serve_run_is_bitwise_reproducible_with_faults_churn_and_elision() {
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    use coformer::config::{
+        DeviceSpec, ElisionPolicy, FaultPolicy, ReplicationPolicy, SystemConfig as SC,
+    };
+    use coformer::coordinator::{ChurnScript, InferenceResponse};
+    use coformer::device::{DeviceProfile, FaultScript};
+    use coformer::metrics::FaultMetrics;
+    use coformer::model::Mode;
+    use coformer::runtime::StubSpec;
+
+    const FLEET: usize = 4;
+    const CLASSES: usize = 4;
+    let arch = Arch::uniform(Mode::Patch, 2, 16, 8, 1, 32, CLASSES);
+    let stride = arch.tokens() * arch.patch_dim();
+
+    let run = || -> (FaultMetrics, Vec<InferenceResponse>) {
+        let members: Vec<String> = (0..FLEET).map(|i| format!("m{i}")).collect();
+        let spec = StubSpec {
+            models: members.iter().map(|m| (m.clone(), arch.clone())).collect(),
+            classes: CLASSES,
+        };
+        let server = coformer::runtime::ExecServer::start_stub(spec).unwrap();
+        let dep = coformer::runtime::manifest::DeploymentMeta {
+            task: "stub".into(),
+            members,
+            aggregators: BTreeMap::new(),
+        };
+        let mut config = SC::paper_default();
+        config.devices.push(DeviceSpec::Preset("rpi-4b".into())); // 4th device
+        config.deployment = "stub_4dev".into();
+        config.aggregator = "average".into();
+        config.max_batch = 4;
+        config.max_wait_ms = 100;
+        config.fault = FaultPolicy { min_quorum: 2, ..FaultPolicy::default() };
+        // rounds of 4 against queue 8 read fill 0.5 ≥ high: with hold 1
+        // every member walks Full → Partial → Elided over the run
+        let replication = ReplicationPolicy {
+            replicas: 2,
+            max_queue_depth: 8,
+            elision: ElisionPolicy {
+                enabled: true,
+                high_watermark: 0.5,
+                low_watermark: 0.3,
+                p95_high_ms: 0.0,
+                hold_batches: 1,
+                shadow_promoted_batches: 0,
+                ..ElisionPolicy::default()
+            },
+        };
+        let mut faults: Vec<FaultScript> = (0..FLEET).map(|_| FaultScript::none()).collect();
+        faults[2] = FaultScript::crash_at(2);
+        let coord = ServeBuilder::new(
+            config,
+            server.handle(),
+            dep,
+            vec![arch.clone(); FLEET],
+            stride,
+        )
+        .replication(replication)
+        .fault_scripts(faults)
+        .churn_script(ChurnScript::join_at(4, DeviceProfile::rpi4()))
+        .start()
+        .unwrap();
+        let handle = coord.handle();
+
+        let mut responses = Vec::new();
+        for _ in 0..8 {
+            // pipelined round of max_batch: one coalesced batch, one
+            // deterministic pressure reading
+            let rxs: Vec<_> = (0..4)
+                .map(|i| {
+                    let label = i % CLASSES;
+                    let rx = handle
+                        .submit(RequestPayload::F32(vec![label as f32; stride]))
+                        .expect("round submits stay within the admission limit");
+                    (label, rx)
+                })
+                .collect();
+            for (label, rx) in rxs {
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .expect("reply must arrive")
+                    .expect("scripted batches must keep serving");
+                assert_eq!(resp.prediction, label);
+                responses.push(resp);
+            }
+        }
+        let stats = coord.shutdown().unwrap();
+        drop(server);
+        (stats.fault, responses)
+    };
+
+    let (fault_a, resp_a) = run();
+    let (fault_b, resp_b) = run();
+
+    // the scripted machinery really engaged — this test must not pass
+    // vacuously on a quiet run
+    assert_eq!(fault_a.crashes, 1, "the scripted crash fired");
+    assert_eq!(fault_a.promotions, 1, "the warm standby promoted");
+    assert_eq!(fault_a.joins, 1, "the scripted join admitted a device");
+    assert!(fault_a.batches_elided > 0, "elision engaged: {fault_a:?}");
+    assert!(fault_a.mode_transitions > 0);
+
+    // ledger-for-ledger: every counter, histogram and savings figure
+    assert_eq!(fault_a, fault_b, "FaultMetrics ledgers diverged between identical runs");
+
+    // output-for-output, bit-for-bit
+    assert_eq!(resp_a.len(), resp_b.len());
+    for (a, b) in resp_a.iter().zip(&resp_b) {
+        assert_eq!(a.prediction, b.prediction);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.quorum, b.quorum);
+        assert_eq!(
+            a.virtual_latency_s.to_bits(),
+            b.virtual_latency_s.to_bits(),
+            "virtual latency drifted"
+        );
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "energy drifted");
+        assert_eq!(a.logits.len(), b.logits.len());
+        for (la, lb) in a.logits.iter().zip(b.logits.iter()) {
+            assert_eq!(la.to_bits(), lb.to_bits(), "logits drifted");
+        }
+    }
+}

@@ -1095,6 +1095,58 @@ fn prop_unit_arithmetic_and_ordering_match_raw_f64() {
     });
 }
 
+// ---------------------------------------------------------------- window
+
+#[test]
+fn prop_ring_window_matches_naive_reference() {
+    // ISSUE 10: RingWindow's incrementally maintained views must be
+    // bit-for-bit the naive implementation it replaced — a VecDeque for
+    // arrival order, sort-then-rank for percentiles, oldest-first
+    // summation for the mean — across random capacities and histories,
+    // including the not-yet-full window.
+    use coformer::metrics::percentile_nearest_rank;
+    use coformer::util::RingWindow;
+    use std::collections::VecDeque;
+
+    forall(500, 10_000, |rng| {
+        let capacity = rng.gen_range(1, 48);
+        let mut w = RingWindow::new(capacity);
+        let mut naive: VecDeque<f64> = VecDeque::new();
+        assert_eq!(w.capacity(), capacity);
+        for _ in 0..rng.gen_range(1, 120) {
+            // magnitude spread plus duplicates so eviction has to pick
+            // among total_cmp-equal slots
+            let x = if rng.gen_f64() < 0.2 {
+                (rng.gen_f64() * 4.0).floor()
+            } else {
+                rng.gen_f64() * 10f64.powf(rng.gen_f64() * 8.0 - 4.0)
+            };
+            if naive.len() == capacity {
+                naive.pop_front();
+            }
+            naive.push_back(x);
+            w.push(x);
+
+            let arrival: Vec<f64> = naive.iter().copied().collect();
+            assert_eq!(w.as_slice(), &arrival[..], "arrival order diverged");
+            assert_eq!(w.len(), naive.len());
+            assert_eq!(w.last(), naive.back().copied());
+
+            let mut sorted = arrival.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            for p in [0.0, 10.0, 50.0, 95.0, 99.0, 100.0] {
+                assert_eq!(
+                    w.percentile(p).to_bits(),
+                    percentile_nearest_rank(&sorted, p).to_bits(),
+                    "percentile({p}) diverged"
+                );
+            }
+            let naive_mean = arrival.iter().sum::<f64>() / arrival.len() as f64;
+            assert_eq!(w.mean().to_bits(), naive_mean.to_bits(), "mean diverged");
+        }
+    });
+}
+
 // --------------------------------------------------------------- devices
 
 #[test]

@@ -66,6 +66,30 @@ pub mod atomic {
             self.inner.fetch_max(v, StdOrdering::SeqCst)
         }
 
+        /// One atomic read-modify-write with one schedule point, matching
+        /// the model's granularity for every other single operation: the
+        /// closure sees the value at this schedule point and no other
+        /// thread runs between the read and the conditional store.
+        pub fn fetch_update<F>(
+            &self,
+            _set_order: Ordering,
+            _fetch_order: Ordering,
+            mut f: F,
+        ) -> Result<usize, usize>
+        where
+            F: FnMut(usize) -> Option<usize>,
+        {
+            rt::yield_point();
+            let prev = self.inner.load(StdOrdering::SeqCst);
+            match f(prev) {
+                Some(next) => {
+                    self.inner.store(next, StdOrdering::SeqCst);
+                    Ok(prev)
+                }
+                None => Err(prev),
+            }
+        }
+
         pub fn compare_exchange(
             &self,
             current: usize,

@@ -1,0 +1,201 @@
+//! `cargo xtask bench` — run the four bench drivers and collect their
+//! `BENCH_JSON` machine lines into one tracked trajectory file
+//! (`BENCH_<n>.json` at the repo root).
+//!
+//! Protocol: each driver is run through `cargo bench -p coformer --bench
+//! <suite>` with `COFORMER_BENCH_JSON=1` and `COFORMER_BENCH_SUITE=<suite>`
+//! set, so every `metrics::bench::bench` call (and every artifact-gated
+//! section's `skip_marker`) prints a one-line JSON record prefixed
+//! `BENCH_JSON ` alongside its human-readable line. This runner passes
+//! those records through **verbatim** — the numbers land in the file from
+//! the exact code that computed them, and this crate stays
+//! dependency-free (no JSON parser; the records are already JSON).
+//!
+//! `COFORMER_BENCH_QUICK=1` is honoured by the harness itself (clamped
+//! warmup/iters); the runner just inherits it and records which mode the
+//! file was produced in.
+//!
+//! Failure model: a driver exiting nonzero, or producing zero `BENCH_JSON`
+//! records, is a harness error and fails the run. Slow or noisy numbers
+//! never do — the trajectory tracks them, it does not judge them.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, ExitCode};
+
+/// The four bench drivers, in the order they appear in `rust/benches/`
+/// docs and CI. Artifact-gated sections inside them self-skip (and emit
+/// skip records) — the suite list here never changes with artifact state.
+const SUITES: [&str; 4] = ["coordinator", "debo", "runtime", "strategies"];
+
+pub fn run(out_override: Option<PathBuf>) -> ExitCode {
+    let repo_root = repo_root();
+    let mut entries: Vec<String> = Vec::new();
+    for suite in SUITES {
+        eprintln!("xtask bench: running suite `{suite}`");
+        let output = Command::new(cargo())
+            .args(["bench", "-p", "coformer", "--bench", suite])
+            .env("COFORMER_BENCH_JSON", "1")
+            .env("COFORMER_BENCH_SUITE", suite)
+            .current_dir(&repo_root)
+            .output();
+        let output = match output {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("xtask bench: failed to spawn cargo for `{suite}`: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let stdout = String::from_utf8_lossy(&output.stdout);
+        // echo the human-readable lines so the run stays scannable
+        print!("{stdout}");
+        eprint!("{}", String::from_utf8_lossy(&output.stderr));
+        if !output.status.success() {
+            eprintln!("xtask bench: suite `{suite}` exited with {}", output.status);
+            return ExitCode::from(2);
+        }
+        let before = entries.len();
+        for line in stdout.lines() {
+            if let Some(json) = line.strip_prefix("BENCH_JSON ") {
+                entries.push(json.trim().to_string());
+            }
+        }
+        if entries.len() == before {
+            eprintln!(
+                "xtask bench: suite `{suite}` produced no BENCH_JSON records \
+                 (harness wiring broken?)"
+            );
+            return ExitCode::from(2);
+        }
+    }
+
+    let out_path = out_override.unwrap_or_else(|| trajectory_path(&repo_root));
+    let doc = assemble(&repo_root, &entries);
+    if let Err(e) = std::fs::write(&out_path, doc) {
+        eprintln!("xtask bench: failed to write {}: {e}", out_path.display());
+        return ExitCode::from(2);
+    }
+    eprintln!(
+        "xtask bench: wrote {} ({} entries from {} suites)",
+        out_path.display(),
+        entries.len(),
+        SUITES.len()
+    );
+    ExitCode::SUCCESS
+}
+
+/// Assemble the trajectory document by string concatenation: the entries
+/// are verbatim JSON lines from the harness, so the only JSON this runner
+/// authors is the constant header scaffolding.
+fn assemble(repo_root: &Path, entries: &[String]) -> String {
+    let quick = std::env::var("COFORMER_BENCH_QUICK").as_deref() == Ok("1");
+    let sha = git_sha(repo_root);
+    let suites = SUITES
+        .iter()
+        .map(|s| format!("\"{s}\""))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let mut doc = String::new();
+    doc.push_str("{\n");
+    doc.push_str("  \"schema\": \"coformer-bench-v1\",\n");
+    doc.push_str(&format!("  \"git_sha\": \"{sha}\",\n"));
+    doc.push_str(&format!("  \"quick\": {quick},\n"));
+    doc.push_str("  \"provenance\": \"measured\",\n");
+    doc.push_str(&format!("  \"suites\": [{suites}],\n"));
+    doc.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        let sep = if i + 1 == entries.len() { "" } else { "," };
+        doc.push_str(&format!("    {e}{sep}\n"));
+    }
+    doc.push_str("  ]\n");
+    doc.push_str("}\n");
+    doc
+}
+
+/// The tracked file for *this* PR refreshes the highest-indexed
+/// `BENCH_<n>.json` already at the repo root (the trajectory keeps one
+/// file per PR; a re-run within a PR overwrites, never appends), starting
+/// at `BENCH_10.json` when none exists yet.
+fn trajectory_path(repo_root: &Path) -> PathBuf {
+    let mut best: Option<(u32, PathBuf)> = None;
+    if let Ok(rd) = std::fs::read_dir(repo_root) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(idx) = name
+                .strip_prefix("BENCH_")
+                .and_then(|r| r.strip_suffix(".json"))
+                .and_then(|n| n.parse::<u32>().ok())
+            {
+                if best.as_ref().map_or(true, |(b, _)| idx > *b) {
+                    best = Some((idx, entry.path()));
+                }
+            }
+        }
+    }
+    match best {
+        Some((_, p)) => p,
+        None => repo_root.join("BENCH_10.json"),
+    }
+}
+
+fn git_sha(repo_root: &Path) -> String {
+    Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .current_dir(repo_root)
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn cargo() -> String {
+    std::env::var("CARGO").unwrap_or_else(|_| "cargo".to_string())
+}
+
+/// The repo root is two levels up from this crate's manifest
+/// (`rust/xtask`) — resolved at compile time so the tool is independent
+/// of the invocation directory.
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(Path::parent)
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_wraps_verbatim_entries_in_the_header() {
+        let entries = vec![
+            r#"{"bench": "debo", "name": "a", "iters": 3, "mean_ns": 1, "p50_ns": 1, "p95_ns": 2}"#
+                .to_string(),
+            r#"{"bench": "runtime", "name": "runtime_suite", "skipped": true, "reason": "x"}"#
+                .to_string(),
+        ];
+        let doc = assemble(Path::new("/nonexistent-repo-root"), &entries);
+        assert!(doc.contains("\"schema\": \"coformer-bench-v1\""));
+        assert!(doc.contains("\"provenance\": \"measured\""));
+        assert!(doc.contains("\"git_sha\": \"unknown\""));
+        assert!(doc.contains(&entries[0]));
+        assert!(doc.contains(&entries[1]));
+        // entries are comma-separated, last entry bare
+        assert!(doc.contains("p95_ns\": 2},\n"));
+        assert!(doc.contains("\"reason\": \"x\"}\n"));
+    }
+
+    #[test]
+    fn trajectory_path_picks_highest_index_or_defaults() {
+        let dir = std::env::temp_dir().join(format!("bench-xtask-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(trajectory_path(&dir), dir.join("BENCH_10.json"));
+        std::fs::write(dir.join("BENCH_10.json"), "{}").unwrap();
+        std::fs::write(dir.join("BENCH_12.json"), "{}").unwrap();
+        assert_eq!(trajectory_path(&dir), dir.join("BENCH_12.json"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

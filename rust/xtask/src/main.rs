@@ -8,7 +8,14 @@
 //!   violation. With `--json`, stdout carries one JSON object per
 //!   diagnostic (JSONL) and the summary count moves to stderr — the format
 //!   the CI static-analysis job archives as an artifact.
+//! - `bench [--out PATH]` — run the four bench drivers with the harness's
+//!   JSON markers enabled and collect their records verbatim into the
+//!   tracked trajectory file (`BENCH_<n>.json` at the repo root, or
+//!   `PATH`). Honours `COFORMER_BENCH_QUICK=1`. Fails only on harness
+//!   errors (a driver exiting nonzero or emitting no records), never on
+//!   slow numbers.
 
+mod bench;
 mod lint;
 
 use std::path::PathBuf;
@@ -34,12 +41,32 @@ fn main() -> ExitCode {
             }
             lint::run(&root, json)
         }
+        Some("bench") => {
+            let mut out = None;
+            while let Some(a) = args.next() {
+                if a == "--out" {
+                    match args.next() {
+                        Some(p) => out = Some(PathBuf::from(p)),
+                        None => {
+                            eprintln!("xtask bench: --out requires a path");
+                            return ExitCode::from(2);
+                        }
+                    }
+                } else {
+                    eprintln!("xtask bench: unknown argument `{a}`");
+                    return ExitCode::from(2);
+                }
+            }
+            bench::run(out)
+        }
         Some(other) => {
-            eprintln!("xtask: unknown command `{other}` (available: lint)");
+            eprintln!("xtask: unknown command `{other}` (available: lint, bench)");
             ExitCode::from(2)
         }
         None => {
-            eprintln!("usage: cargo xtask lint [--json] [src-root]");
+            eprintln!(
+                "usage: cargo xtask lint [--json] [src-root] | cargo xtask bench [--out PATH]"
+            );
             ExitCode::from(2)
         }
     }
